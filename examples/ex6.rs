@@ -1,0 +1,126 @@
+//! `ex6` — the paper's benchmark driver (§VIII.A): "a generic benchmark
+//! that reads a PETSc matrix and vector from a file and solves a linear
+//! system", configured through PETSc-style options.
+//!
+//! ```sh
+//! # write a test system, then solve it
+//! cargo run --release --example ex6 -- -write_case saltfinger-pressure -scale 0.01 -f /tmp/sf
+//! cargo run --release --example ex6 -- -f /tmp/sf -ksp_type cg -pc_type jacobi -ksp_rtol 1e-8 -threads 4
+//! ```
+
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::logging::EventLog;
+use mmpetsc::coordinator::options::Options;
+use mmpetsc::coordinator::runner::solve_by_name;
+use mmpetsc::io::petsc_binary::{read_mat, read_vec, write_mat, write_vec};
+use mmpetsc::matgen::cases::{generate, TestCase};
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::pc;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
+use mmpetsc::vec::seq::VecSeq;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = Options::parse(&argv).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+
+    let base = opts.get_or("f", "/tmp/mmpetsc-ex6");
+    let mat_path = format!("{base}.mat");
+    let vec_path = format!("{base}.vec");
+
+    // --- writer mode: generate a case and store it in PETSc binary ---------
+    if let Some(case_name) = opts.get("write_case") {
+        let case = TestCase::from_name(case_name).unwrap_or_else(|| {
+            eprintln!("unknown case `{case_name}`");
+            std::process::exit(2);
+        });
+        let scale = opts.f64_or("scale", 0.01).unwrap();
+        let ctx = ThreadCtx::serial();
+        let a = generate(case, scale, None, ctx.clone()).expect("generate");
+        // RHS = A · smooth
+        let xs: Vec<f64> = (0..a.rows()).map(|i| 1.0 + (i as f64 * 0.001).sin()).collect();
+        let x = VecSeq::from_slice(&xs, ctx.clone());
+        let mut b = VecSeq::new(a.rows(), ctx);
+        a.mult(&x, &mut b).expect("rhs");
+        write_mat(&mat_path, &a).expect("write mat");
+        write_vec(&vec_path, &b).expect("write vec");
+        println!(
+            "wrote {} ({}x{}, nnz {}) and {}",
+            mat_path,
+            a.rows(),
+            a.cols(),
+            a.nnz(),
+            vec_path
+        );
+        return;
+    }
+
+    // --- solver mode (the actual ex6) ---------------------------------------
+    let threads = opts.usize_or("threads", 1).unwrap();
+    let ranks = opts.usize_or("ranks", 1).unwrap();
+    let ksp_type = opts.get_or("ksp_type", "gmres");
+    let pc_type = opts.get_or("pc_type", "jacobi");
+    let (ksp_for_run, pc_for_run) = (ksp_type.clone(), pc_type.clone());
+    let cfg = opts.ksp_config().unwrap();
+
+    let outputs = World::run(ranks, move |mut comm| {
+        let ctx = ThreadCtx::new(threads);
+        // Every rank reads the file and keeps its row slice (simplest
+        // parallel-IO stand-in; PETSc does a scattered read).
+        let a_seq = read_mat(&mat_path, ctx.clone()).expect("read mat");
+        let b_seq = read_vec(&vec_path, ctx.clone()).expect("read vec");
+        let n = a_seq.rows();
+        let layout = Layout::split(n, comm.size());
+        let (lo, hi) = layout.range(comm.rank());
+        let mut entries = Vec::new();
+        for i in lo..hi {
+            let (cols, vals) = a_seq.row(i);
+            for (k, &j) in cols.iter().enumerate() {
+                entries.push((i, j, vals[k]));
+            }
+        }
+        let mut a = MatMPIAIJ::assemble(
+            layout.clone(),
+            layout.clone(),
+            entries,
+            &mut comm,
+            ctx.clone(),
+        )
+        .expect("assemble");
+        let b = VecMPI::from_local_slice(
+            layout.clone(),
+            comm.rank(),
+            &b_seq.as_slice()[lo..hi],
+            ctx.clone(),
+        )
+        .expect("b");
+        let pcond = pc::from_name(&pc_for_run, &a, &mut comm).expect("pc");
+        let log = EventLog::new();
+        let mut x = VecMPI::new(layout, comm.rank(), ctx);
+        let stats = solve_by_name(
+            &ksp_for_run,
+            &mut a,
+            pcond.as_ref(),
+            &b,
+            &mut x,
+            &cfg,
+            &mut comm,
+            &log,
+        )
+        .expect("solve");
+        (stats, log.summary())
+    });
+
+    let (stats, summary) = &outputs[0];
+    println!(
+        "ex6: {ksp_type}+{pc_type}, {ranks} ranks x {threads} threads: {:?} in {} its (final residual {:.3e})",
+        stats.reason, stats.iterations, stats.final_residual
+    );
+    println!("{summary}");
+    if !stats.converged() {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,135 @@
+//! **The end-to-end driver**: exercises the full system on a real workload
+//! and proves all layers compose.
+//!
+//! For each requested (ranks × threads) configuration it runs a complete
+//! mixed-mode CG solve of a Table-6 matrix in real mode (simulated-MPI
+//! ranks × OpenMP-style threads, threaded Vec/Mat kernels, VecScatter
+//! ghost exchange, Jacobi PC), reports the PETSc-log timings and message
+//! counters, and — when `artifacts/` is present — cross-checks the local
+//! SpMV against the AOT-compiled JAX/Pallas kernel through PJRT, then
+//! prices the same experiment at paper scale with the performance model.
+//!
+//! ```sh
+//! cargo run --release --example hybrid_solve -- \
+//!     --case saltfinger-pressure --scale 0.05 --ranks 4 --threads 2
+//! ```
+
+use mmpetsc::bench::Table;
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::sim::exec::{simulate, SimConfig};
+use mmpetsc::thread::overhead::Compiler;
+use mmpetsc::topology::presets::hector_xe6;
+use mmpetsc::util::cli::Cli;
+use mmpetsc::util::human;
+
+fn main() {
+    let cli = Cli::new(
+        "hybrid_solve",
+        "end-to-end mixed-mode CG solve: real ranks × threads + model-mode projection",
+    )
+    .opt("case", Some("saltfinger-pressure"), "Table-6 case name")
+    .opt("scale", Some("0.05"), "matrix scale (1.0 = paper size)")
+    .opt("ranks", Some("4"), "simulated MPI ranks")
+    .opt("threads", Some("2"), "threads per rank")
+    .opt("rtol", Some("1e-8"), "relative tolerance")
+    .flag("pjrt", "also run the AOT Pallas SpMV cross-check (needs artifacts/)");
+    let args = cli.parse_env();
+
+    let case = TestCase::from_name(&args.get_or("case", "saltfinger-pressure"))
+        .expect("unknown case");
+    let scale = args.get_f64("scale").unwrap();
+    let ranks = args.get_usize("ranks").unwrap();
+    let threads = args.get_usize("threads").unwrap();
+
+    println!("# mmpetsc hybrid_solve — end-to-end driver");
+    println!("case={} scale={scale} (paper size {} rows)\n", case.name(), case.paper_size().0);
+
+    // ---- real-mode runs: pure "MPI" vs hybrid on the same core budget ----
+    let cores = ranks * threads;
+    let mut table = Table::new(
+        &format!("real mode: CG+Jacobi, {cores} cores"),
+        &["config", "rows", "iters", "KSPSolve", "MatMult", "msgs", "ghosts"],
+    );
+    for (r, t) in [(cores, 1), (ranks, threads)] {
+        let mut cfg = HybridConfig::default_for(case, scale, r, t);
+        cfg.ksp.rtol = args.get_f64("rtol").unwrap();
+        let rep = run_case(&cfg).expect("run");
+        assert!(rep.converged, "{r}x{t} did not converge");
+        table.row(&[
+            format!("{r} x {t}"),
+            rep.rows.to_string(),
+            rep.iterations.to_string(),
+            human::secs(rep.ksp_time),
+            human::secs(rep.matmult_time),
+            rep.messages.to_string(),
+            rep.ghosts.iter().sum::<usize>().to_string(),
+        ]);
+    }
+    table.print();
+
+    // ---- PJRT cross-check: the three layers compose -----------------------
+    if args.is_set("pjrt") || mmpetsc::runtime::default_artifact_dir().join("spmv_ell.hlo.txt").exists() {
+        use mmpetsc::mat::csr::MatBuilder;
+        use mmpetsc::runtime::{EllSpmv, PjrtContext};
+        use mmpetsc::vec::ctx::ThreadCtx;
+        let (n, k) = (1024usize, 16usize);
+        let ctxp = PjrtContext::cpu().expect("pjrt client");
+        // Small banded SPD block (fits the artifact's static shape).
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 2.5).unwrap();
+            if i > 0 {
+                b.add(i, i - 1, -1.0).unwrap();
+            }
+            if i + 1 < n {
+                b.add(i, i + 1, -1.0).unwrap();
+            }
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        let art = mmpetsc::runtime::default_artifact_dir().join("spmv_ell.hlo.txt");
+        let ell = EllSpmv::from_csr(&ctxp, &art, &a, n, k).expect("artifact load");
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).cos()).collect();
+        let mut y_native = vec![0.0; n];
+        a.mult_slices(&xs, &mut y_native).unwrap();
+        let mut y_pjrt = vec![0.0; n];
+        ell.mult(&xs, &mut y_pjrt).expect("pjrt exec");
+        let max_dev = y_native
+            .iter()
+            .zip(&y_pjrt)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()));
+        println!("PJRT cross-check: native CSR vs AOT Pallas ELL — max |Δ| = {max_dev:.3e}");
+        assert!(max_dev < 1e-12);
+    } else {
+        println!("PJRT cross-check skipped (run `make artifacts`)");
+    }
+
+    // ---- model-mode projection to paper scale ------------------------------
+    let cluster = hector_xe6();
+    let mut proj = Table::new(
+        "model mode: same experiment at paper scale on HECToR (mode=model)",
+        &["cores", "config", "MatMult/solve", "KSPSolve/solve"],
+    );
+    for (r, t) in [(512, 1), (128, 4), (2048, 1), (512, 4)] {
+        let rep = simulate(
+            &cluster,
+            &SimConfig {
+                case,
+                scale: 1.0,
+                ranks: r,
+                threads: t,
+                iterations: 100,
+                ksp_type: "cg",
+                compiler: Compiler::Cray803,
+            },
+        );
+        proj.row(&[
+            (r * t).to_string(),
+            format!("{r} x {t}"),
+            human::secs(rep.matmult_time),
+            human::secs(rep.ksp_time),
+        ]);
+    }
+    proj.print();
+    println!("OK — all layers composed (L3 coordinator, threaded kernels, scatter, PJRT).");
+}

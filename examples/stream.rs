@@ -1,0 +1,86 @@
+//! STREAM Triad (§IV.A): run the real benchmark on the host, and the
+//! model-mode reproduction of the paper's Tables 2 and 3.
+//!
+//! ```sh
+//! cargo run --release --example stream -- --n 30000000 --threads 8
+//! cargo run --release --example stream -- --quick
+//! ```
+
+use mmpetsc::bench::Table;
+use mmpetsc::numa::stream::{triad_host, triad_model};
+use mmpetsc::topology::affinity::{parse_cc_list, AffinityPolicy, Placement};
+use mmpetsc::topology::presets::hector_xe6_node;
+use mmpetsc::util::cli::Cli;
+use mmpetsc::util::human;
+
+fn main() {
+    let cli = Cli::new("stream", "STREAM Triad: host measurement + HECToR model")
+        .opt("n", Some("20000000"), "elements per array")
+        .opt("threads", Some("4"), "max host threads")
+        .flag("quick", "small arrays, fewer reps");
+    let args = cli.parse_env();
+    let quick = args.is_set("quick");
+    let n = if quick { 1 << 21 } else { args.get_usize("n").unwrap() };
+    let tmax = args.get_usize("threads").unwrap();
+    let reps = if quick { 2 } else { 5 };
+
+    let mut host = Table::new(
+        &format!("host STREAM Triad (N={n}, best of {reps})"),
+        &["threads", "init", "bandwidth", "time"],
+    );
+    let mut t = 1;
+    while t <= tmax {
+        for parallel_init in [false, true] {
+            let r = triad_host(n, t, parallel_init, reps);
+            host.row(&[
+                t.to_string(),
+                if parallel_init { "parallel" } else { "serial" }.to_string(),
+                human::gbs(r.bandwidth),
+                human::secs(r.seconds),
+            ]);
+        }
+        t *= 2;
+    }
+    host.print();
+
+    // Model mode: the paper's Tables 2 and 3 on the modelled XE6 node.
+    let node = hector_xe6_node();
+    let nm = 1_000_000_000; // the paper's N = 1e9
+    let mut t2 = Table::new(
+        "model (mode=model): paper Table 2 — 32 threads on a HECToR node",
+        &["init", "bandwidth", "time", "paper"],
+    );
+    let p32 = Placement::compute(&node, 1, 32, &AffinityPolicy::Packed).unwrap();
+    for (parallel_init, paper) in [(false, "21.80 GB/s / 1.10s"), (true, "43.49 GB/s / 0.55s")] {
+        let r = triad_model(&node, &p32, nm, parallel_init);
+        t2.row(&[
+            if parallel_init { "parallel" } else { "serial" }.to_string(),
+            human::gbs(r.bandwidth),
+            human::secs(r.seconds),
+            paper.to_string(),
+        ]);
+    }
+    t2.print();
+
+    let mut t3 = Table::new(
+        "model (mode=model): paper Table 3 — 4 threads, explicit pinning",
+        &["aprun -cc", "bandwidth", "time", "paper GB/s"],
+    );
+    for (cc, paper) in [
+        ("0-3", 6.64),
+        ("0,2,4,6", 6.34),
+        ("0,4,8,12", 12.16),
+        ("0,8,16,24", 30.42),
+    ] {
+        let cores = parse_cc_list(cc).unwrap();
+        let p = Placement::compute(&node, 1, 4, &AffinityPolicy::Explicit(cores)).unwrap();
+        let r = triad_model(&node, &p, nm, true);
+        t3.row(&[
+            cc.to_string(),
+            human::gbs(r.bandwidth),
+            human::secs(r.seconds),
+            format!("{paper:.2}"),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,76 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernel) → HLO **text**
+artifacts the rust runtime loads.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+Idempotent: `make artifacts` skips the rebuild when inputs are unchanged.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the library scalar is f64
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spmv() -> str:
+    vals = jax.ShapeDtypeStruct((model.N, model.K), jnp.float64)
+    cols = jax.ShapeDtypeStruct((model.N, model.K), jnp.int64)
+    x = jax.ShapeDtypeStruct((model.N,), jnp.float64)
+    return to_hlo_text(jax.jit(model.spmv_model).lower(vals, cols, x))
+
+
+def lower_cg_step() -> str:
+    vals = jax.ShapeDtypeStruct((model.N, model.K), jnp.float64)
+    cols = jax.ShapeDtypeStruct((model.N, model.K), jnp.int64)
+    vec = jax.ShapeDtypeStruct((model.N,), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    return to_hlo_text(
+        jax.jit(model.cg_step_model).lower(vals, cols, vec, vec, vec, scalar)
+    )
+
+
+ARTIFACTS = {
+    "spmv_ell.hlo.txt": lower_spmv,
+    "cg_step.hlo.txt": lower_cg_step,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, fn in ARTIFACTS.items():
+        text = fn()
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} N={model.N} K={model.K} bytes={len(text)}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

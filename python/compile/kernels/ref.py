@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference.
+
+Everything the L1 kernels compute is re-expressed here in plain `jnp` ops;
+pytest (and hypothesis sweeps) assert allclose between the two. These also
+define the semantics of the padded **ELL format** used across the stack:
+
+- ``vals``: float array ``(N, K)`` — row ``i``'s nonzero values, padded
+  with zeros.
+- ``cols``: int array ``(N, K)`` — the column of each value; padding
+  entries MUST carry value 0 (their column is arbitrary but in-range,
+  conventionally 0), so the product is exact.
+- ``x``: float array ``(N,)``.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(vals, cols, x):
+    """y = A @ x for A in padded ELL form: y_i = sum_k vals[i,k] * x[cols[i,k]]."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def dot_ref(a, b):
+    """Plain dot product (the VecDot leg of the CG step)."""
+    return jnp.dot(a, b)
+
+
+def cg_step_ref(vals, cols, x, r, p, rz):
+    """One unpreconditioned CG iteration with the ELL operator.
+
+    Returns (x', r', p', rz') — the same update the rust L3 CG performs,
+    expressed over the ELL operator. ``rz`` is ``r . r`` from the previous
+    iteration.
+    """
+    w = spmv_ell_ref(vals, cols, p)
+    alpha = rz / jnp.dot(p, w)
+    x_new = x + alpha * p
+    r_new = r - alpha * w
+    rz_new = jnp.dot(r_new, r_new)
+    beta = rz_new / rz
+    p_new = r_new + beta * p
+    return x_new, r_new, p_new, rz_new

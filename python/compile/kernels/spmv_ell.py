@@ -1,0 +1,76 @@
+"""L1: the block-ELL SpMV Pallas kernel.
+
+Hardware adaptation (DESIGN.md §3): the paper threads a CPU CSR SpMV by
+row chunks, paging each chunk into the computing thread's UMA region. On
+TPU the same insight — *the compute unit owns the rows it streams* — maps
+to row-tiled ELL: rows are padded to ``K`` entries and processed in tiles
+of ``BM`` rows; each grid step owns one ``(BM, K)`` tile of values and
+column indices resident in VMEM (the scratchpad analogue of the UMA-local
+pages), and gathers its ``x`` operands from the (replicated) input vector.
+The BlockSpec row tiling *is* the paper's "page the matrix by rows".
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain
+HLO, which both pytest and the rust runtime execute. On a real TPU the
+same kernel compiles natively; DESIGN.md records the VMEM/MXU estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: BM rows per grid step. 8 sublanes × f32/f64 rows is the
+# natural TPU tile granule; K is padded to the stencil width at AOT time.
+BM = 128
+
+
+def _spmv_ell_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    """One row tile: o = sum_k vals[:, k] * x[cols[:, k]].
+
+    The tile's values/columns live in VMEM; `x` is fully resident (vector
+    replication — the paper's proposed "each UMA region has its own
+    complete copy of the vector" future-work optimisation, which is the
+    natural layout on TPU).
+    """
+    vals = vals_ref[...]          # (BM, K)
+    cols = cols_ref[...]          # (BM, K) int
+    x = x_ref[...]                # (N,)
+    gathered = x[cols]            # (BM, K) gather from the replicated vector
+    o_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv_ell(vals, cols, x, *, block_rows: int = BM):
+    """y = A @ x with A in padded ELL form, via the Pallas kernel.
+
+    vals: (N, K) float; cols: (N, K) int; x: (N,). N must be a multiple of
+    ``block_rows`` (the AOT shapes are chosen that way).
+    """
+    n, k = vals.shape
+    assert n % block_rows == 0, f"N={n} not a multiple of BM={block_rows}"
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)
+
+
+def vmem_estimate(n: int, k: int, block_rows: int = BM, dtype_bytes: int = 8):
+    """Estimated VMEM working set per grid step (bytes) — the number the
+    DESIGN.md roofline discussion uses (interpret mode gives no hardware
+    counters)."""
+    tile_vals = block_rows * k * dtype_bytes
+    tile_cols = block_rows * k * 8  # i64 indices
+    x_resident = n * dtype_bytes
+    out_tile = block_rows * dtype_bytes
+    return tile_vals + tile_cols + x_resident + out_tile

@@ -1,0 +1,45 @@
+"""L2: the JAX compute graphs lowered to artifacts.
+
+Two entry points, both calling the L1 Pallas kernel so that the kernel
+lowers into the same HLO module:
+
+- :func:`spmv_model` — one SpMV, the MatMult hot-spot the rust runtime
+  offloads.
+- :func:`cg_step_model` — a full fused CG iteration (SpMV + the dots and
+  axpys), showing the whole per-iteration compute graph can live behind a
+  single PJRT executable.
+
+Shapes are static (AOT): ``N`` rows, ``K`` padded entries per row. The
+rust side mirrors these constants in ``rust/src/runtime/spmv.rs``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.spmv_ell import spmv_ell
+
+# AOT shapes — keep in sync with rust/src/runtime/spmv.rs and aot.py.
+N = 1024
+K = 16
+
+
+def spmv_model(vals, cols, x):
+    """y = A @ x via the Pallas ELL kernel."""
+    return spmv_ell(vals, cols, x)
+
+
+def cg_step_model(vals, cols, x, r, p, rz):
+    """One unpreconditioned CG iteration over the ELL operator.
+
+    Mirrors ``rust/src/ksp/cg.rs`` (single-rank case): the SpMV runs in the
+    Pallas kernel; the dots/axpys fuse around it in XLA.
+    Returns (x', r', p', rz').
+    """
+    w = spmv_ell(vals, cols, p)
+    alpha = rz / jnp.dot(p, w)
+    x_new = x + alpha * p
+    r_new = r - alpha * w
+    rz_new = jnp.dot(r_new, r_new)
+    beta = rz_new / rz
+    p_new = r_new + beta * p
+    return x_new, r_new, p_new, rz_new

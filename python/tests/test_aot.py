@@ -1,0 +1,34 @@
+"""AOT path: lowering produces valid HLO text with the expected entry
+computation and parameter shapes (what the rust loader consumes)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model
+
+
+def test_spmv_hlo_text_structure():
+    text = aot.lower_spmv()
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # parameters: f64[1024,16], s64[1024,16], f64[1024]
+    assert f"f64[{model.N},{model.K}]" in text
+    assert f"s64[{model.N},{model.K}]" in text
+    assert f"f64[{model.N}]" in text
+
+
+def test_cg_step_hlo_text_structure():
+    text = aot.lower_cg_step()
+    assert "ENTRY" in text
+    # the step returns a 4-tuple: 3 vectors + 1 scalar
+    assert text.count(f"f64[{model.N}]") >= 3
+    assert "f64[]" in text
+
+
+def test_lowering_is_deterministic():
+    assert aot.lower_spmv() == aot.lower_spmv()
+
+
+def test_manifest_names_cover_artifacts():
+    assert set(aot.ARTIFACTS) == {"spmv_ell.hlo.txt", "cg_step.hlo.txt"}

@@ -1,0 +1,60 @@
+//! Ablation: first-touch paging (the §VI.A design choice).
+//!
+//! (a) Model: SpMV with matrix pages placed by the static compute schedule
+//!     vs all pages faulted on one region (serial init).
+//! (b) Host: the actual first-touch effect, measured via the triad with
+//!     serial vs parallel initialization.
+//!
+//! `cargo bench --bench ablate_paging`
+
+use mmpetsc::bench::Table;
+use mmpetsc::numa::bandwidth::{BwModel, Stream};
+use mmpetsc::numa::stream::triad_host;
+use mmpetsc::sim::cost::BYTES_PER_NNZ;
+use mmpetsc::topology::presets::hector_xe6_node;
+use mmpetsc::util::human;
+
+fn main() {
+    let node = hector_xe6_node();
+    let bw = BwModel::for_machine(&node);
+    let nnz = 14.1e6; // Saltfinger pressure
+
+    let mut t = Table::new(
+        "ablation (mode=model): SpMV paging policy on a HECToR node",
+        &["threads", "paged-by-rows (paper)", "serial-init pages", "penalty"],
+    );
+    for threads in [4usize, 8, 16, 32] {
+        let per_uma = node.cores_per_uma();
+        // paged by rows: every thread streams its own bank
+        let good: Vec<Stream> = (0..threads)
+            .map(|t| Stream { thread_uma: t / per_uma, data_uma: t / per_uma })
+            .collect();
+        // serial init: all pages on region 0
+        let bad: Vec<Stream> = (0..threads)
+            .map(|t| Stream { thread_uma: t / per_uma, data_uma: 0 })
+            .collect();
+        let bytes = nnz * BYTES_PER_NNZ / threads as f64;
+        let tg = bw.region_time(bytes, &good);
+        let tb = bw.region_time(bytes, &bad);
+        t.row(&[
+            threads.to_string(),
+            human::secs(tg),
+            human::secs(tb),
+            format!("{:.2}x", tb / tg),
+        ]);
+    }
+    t.print();
+
+    let host = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(2);
+    let th = host.min(8);
+    let s = triad_host(1 << 24, th, false, 3);
+    let p = triad_host(1 << 24, th, true, 3);
+    println!(
+        "host check ({th} threads): serial-init {} vs parallel-init {} ({:.2}x)\n\
+         (on single-socket hosts the effect is small; on the paper's NUMA\n\
+         node it is the 2x of Table 2)",
+        human::gbs(s.bandwidth),
+        human::gbs(p.bandwidth),
+        p.bandwidth / s.bandwidth
+    );
+}

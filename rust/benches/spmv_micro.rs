@@ -1,0 +1,67 @@
+//! SpMV microbenchmark: real threaded CSR SpMV scaling on this host, with
+//! the host roofline (measured triad bandwidth) for the efficiency ratio —
+//! the §Perf "L3 hot path" metric.
+//!
+//! `cargo bench --bench spmv_micro`
+
+use mmpetsc::bench::Table;
+use mmpetsc::matgen::cases::{generate, TestCase};
+use mmpetsc::numa::stream::triad_host;
+use mmpetsc::sim::cost::BYTES_PER_NNZ;
+use mmpetsc::util::human;
+use mmpetsc::util::stats::Summary;
+use mmpetsc::util::timer::bench_loop;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::seq::VecSeq;
+
+fn main() {
+    let host = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(2);
+    let case = TestCase::SaltPressure;
+    let scale = 0.2; // ~140k rows, ~2.9M nnz — larger than LLC
+
+    let mut t = Table::new(
+        &format!("threaded CSR SpMV on this host — {} at scale {scale}", case.name()),
+        &["threads", "median", "nnz/s", "GB/s (@20B/nnz)", "roofline", "efficiency"],
+    );
+    let mut results = Vec::new();
+    let mut threads = 1usize;
+    while threads <= host.min(16) {
+        let ctx = ThreadCtx::new(threads);
+        let a = generate(case, scale, None, ctx.clone()).expect("generate");
+        let x = VecSeq::from_slice(
+            &(0..a.cols()).map(|i| 1.0 + (i % 7) as f64).collect::<Vec<_>>(),
+            ctx.clone(),
+        );
+        let mut y = VecSeq::new(a.rows(), ctx);
+        let samples = bench_loop(0.5, 5, || {
+            a.mult(&x, &mut y).unwrap();
+        });
+        let s = Summary::of(&samples);
+        let rate = a.nnz() as f64 / s.median;
+        let gbs = rate * BYTES_PER_NNZ;
+        // Roofline: the host's triad bandwidth at the same thread count.
+        let triad = triad_host(1 << 23, threads, true, 3).bandwidth;
+        t.row(&[
+            threads.to_string(),
+            human::secs(s.median),
+            format!("{:.1} M", rate / 1e6),
+            human::gbs(gbs),
+            human::gbs(triad),
+            format!("{:.0}%", 100.0 * gbs / triad),
+        ]);
+        results.push((threads, s.median, gbs / triad));
+        threads *= 2;
+    }
+    t.print();
+
+    let (t1, base, _) = results[0];
+    let _ = t1;
+    for &(th, med, eff) in &results[1..] {
+        println!(
+            "speedup {}T: {:.2}x (efficiency vs roofline {:.0}%)",
+            th,
+            base / med,
+            eff * 100.0
+        );
+    }
+}

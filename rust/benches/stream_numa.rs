@@ -1,0 +1,77 @@
+//! Tables 2 & 3: STREAM Triad under first-touch and pinning — model mode
+//! reproduces the paper's numbers; host mode reports this machine.
+//!
+//! `cargo bench --bench stream_numa`
+
+use mmpetsc::bench::{vs_paper, Table};
+use mmpetsc::numa::stream::{triad_host, triad_model};
+use mmpetsc::topology::affinity::{parse_cc_list, AffinityPolicy, Placement};
+use mmpetsc::topology::presets::hector_xe6_node;
+use mmpetsc::util::human;
+
+fn main() {
+    let node = hector_xe6_node();
+    let n = 1_000_000_000; // paper's N = 1e9
+
+    // ---- Table 2 -----------------------------------------------------------
+    let mut t2 = Table::new(
+        "Table 2 (mode=model): Triad, 32 threads, HECToR node",
+        &["initialization", "bandwidth vs paper", "time vs paper"],
+    );
+    let p32 = Placement::compute(&node, 1, 32, &AffinityPolicy::Packed).unwrap();
+    for (par, bw_paper, t_paper, label) in [
+        (false, 21.80, 1.10, "without parallel init"),
+        (true, 43.49, 0.55, "with parallel init"),
+    ] {
+        let r = triad_model(&node, &p32, n, par);
+        t2.row(&[
+            label.to_string(),
+            vs_paper(r.bandwidth / 1e9, bw_paper, "GB/s"),
+            vs_paper(r.seconds, t_paper, "s"),
+        ]);
+    }
+    t2.print();
+
+    // ---- Table 3 -----------------------------------------------------------
+    let mut t3 = Table::new(
+        "Table 3 (mode=model): Triad, 4 threads, explicit placement",
+        &["aprun -cc", "bandwidth vs paper", "time"],
+    );
+    for (cc, bw_paper) in [
+        ("0-3", 6.64),
+        ("0,2,4,6", 6.34),
+        ("0,4,8,12", 12.16),
+        ("0,8,16,24", 30.42),
+    ] {
+        let cores = parse_cc_list(cc).unwrap();
+        let p = Placement::compute(&node, 1, 4, &AffinityPolicy::Explicit(cores)).unwrap();
+        let r = triad_model(&node, &p, n, true);
+        t3.row(&[
+            cc.to_string(),
+            vs_paper(r.bandwidth / 1e9, bw_paper, "GB/s"),
+            human::secs(r.seconds),
+        ]);
+    }
+    t3.print();
+
+    // ---- host counterpart --------------------------------------------------
+    let host_threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(2);
+    let nh = 1 << 24;
+    let mut th = Table::new(
+        &format!("host Triad (N={nh}, this machine — the real first-touch effect)"),
+        &["threads", "serial init", "parallel init", "gain"],
+    );
+    let mut t = 1;
+    while t <= host_threads.min(16) {
+        let s = triad_host(nh, t, false, 3);
+        let p = triad_host(nh, t, true, 3);
+        th.row(&[
+            t.to_string(),
+            human::gbs(s.bandwidth),
+            human::gbs(p.bandwidth),
+            format!("{:.2}x", p.bandwidth / s.bandwidth),
+        ]);
+        t *= 2;
+    }
+    th.print();
+}

@@ -1,0 +1,56 @@
+//! Tables 1 & 6: static inventory plus the generated-matrix check — the
+//! generated cases must match the paper's densities at the chosen scale.
+//!
+//! `cargo bench --bench tables`
+
+use mmpetsc::bench::Table;
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::topology::presets::HECTOR_PHASES;
+use mmpetsc::util::human;
+use mmpetsc::vec::ctx::ThreadCtx;
+
+fn main() {
+    let mut t1 = Table::new(
+        "Table 1 (paper): HECToR system evolution",
+        &["", "Q3 2007", "Q2 2009", "Q1 2011", "Q1 2012"],
+    );
+    let get = |f: fn(&mmpetsc::topology::presets::HectorPhase) -> String| -> Vec<String> {
+        HECTOR_PHASES.iter().map(f).collect()
+    };
+    for (label, vals) in [
+        ("Total cores", get(|p| human::count(p.total_cores as u64))),
+        ("Cores per processor", get(|p| p.cores_per_processor.to_string())),
+        ("Clock rate (GHz)", get(|p| format!("{:.1}", p.clock_ghz))),
+        ("Memory per node (GB)", get(|p| format!("{:.0}", p.memory_per_node_gb))),
+        ("Memory per core (GB)", get(|p| format!("{:.1}", p.memory_per_core_gb))),
+    ] {
+        let mut row = vec![label.to_string()];
+        row.extend(vals);
+        t1.row(&row);
+    }
+    t1.print();
+
+    // Table 6: paper sizes + what the generator produces at a test scale.
+    let scale = 0.01;
+    let mut t6 = Table::new(
+        &format!("Table 6: test matrices — paper vs generated (scale={scale})"),
+        &["case", "matrix", "paper rows", "paper nnz/row", "gen rows", "gen nnz/row"],
+    );
+    for c in TestCase::ALL {
+        let (rows, nnz) = c.paper_size();
+        let (tc, m) = c.paper_label();
+        // The Flue matrix is generated at a smaller scale only (10M rows
+        // at scale 1.0 is priced by the model, never materialised).
+        let s = if c == TestCase::FluePressure { 0.002 } else { scale };
+        let a = mmpetsc::matgen::cases::generate(c, s, None, ThreadCtx::new(2)).unwrap();
+        t6.row(&[
+            tc.to_string(),
+            m.to_string(),
+            human::count(rows as u64),
+            format!("{:.1}", nnz as f64 / rows as f64),
+            human::count(a.rows() as u64),
+            format!("{:.1}", a.nnz() as f64 / a.rows() as f64),
+        ]);
+    }
+    t6.print();
+}

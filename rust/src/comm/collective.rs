@@ -1,0 +1,362 @@
+//! Collective operations over the point-to-point layer.
+//!
+//! Algorithms mirror production MPI implementations so the message pattern
+//! (what the cost model prices) is faithful:
+//! - broadcast / reduce: binomial tree, ⌈log2 P⌉ rounds;
+//! - barrier / allreduce: recursive doubling (power-of-two ranks) with a
+//!   fold-in step for the remainder;
+//! - allgather: ring (P−1 rounds, large-message optimal);
+//! - gatherv: linear to root (what PETSc's VecScatter-to-zero does).
+
+use std::sync::atomic::Ordering;
+
+use crate::comm::endpoint::Comm;
+use crate::comm::message::{Tag, RESERVED_TAG_BASE};
+use crate::error::Result;
+
+const T_BARRIER: Tag = RESERVED_TAG_BASE;
+const T_BCAST: Tag = RESERVED_TAG_BASE + 1;
+const T_REDUCE: Tag = RESERVED_TAG_BASE + 2;
+const T_ALLRED: Tag = RESERVED_TAG_BASE + 3;
+const T_GATHER: Tag = RESERVED_TAG_BASE + 4;
+const T_ALLGATHER: Tag = RESERVED_TAG_BASE + 5;
+const T_SCAN: Tag = RESERVED_TAG_BASE + 6;
+
+impl Comm {
+    /// Synchronize all ranks (recursive-doubling dissemination barrier).
+    pub fn barrier(&mut self) -> Result<()> {
+        self.stats.barriers.fetch_add(1, Ordering::Relaxed);
+        let p = self.size();
+        let me = self.rank();
+        let mut round = 1usize;
+        while round < p {
+            let to = (me + round) % p;
+            let from = (me + p - round % p) % p;
+            self.send(to, T_BARRIER, ())?;
+            self.recv::<()>(from, T_BARRIER)?;
+            round <<= 1;
+        }
+        Ok(())
+    }
+
+    /// Broadcast `value` from `root` to all ranks (binomial tree).
+    pub fn bcast<T: Send + Clone + 'static>(&mut self, root: usize, value: Option<T>) -> Result<T> {
+        self.stats.broadcasts.fetch_add(1, Ordering::Relaxed);
+        let p = self.size();
+        let vrank = (self.rank() + p - root) % p; // virtual rank, root = 0
+        let mut val: Option<T> = if vrank == 0 { value } else { None };
+        // Receive from parent…
+        if vrank != 0 {
+            let mut mask = 1usize;
+            while mask < p {
+                if vrank & mask != 0 {
+                    let vparent = vrank & !mask;
+                    let parent = (vparent + root) % p;
+                    val = Some(self.recv::<T>(parent, T_BCAST)?);
+                    break;
+                }
+                mask <<= 1;
+            }
+        }
+        // …then forward to children.
+        let v = val.expect("bcast: root must supply a value");
+        let mut mask = {
+            // highest bit not shared with a parent
+            let mut m = 1usize;
+            while m < p && vrank & m == 0 {
+                m <<= 1;
+            }
+            if vrank == 0 {
+                let mut top = 1;
+                while top < p {
+                    top <<= 1;
+                }
+                top
+            } else {
+                m
+            }
+        };
+        mask >>= 1;
+        while mask > 0 {
+            let vchild = vrank | mask;
+            if vchild < p && vchild != vrank {
+                let child = (vchild + root) % p;
+                self.send(child, T_BCAST, v.clone())?;
+            }
+            mask >>= 1;
+        }
+        Ok(v)
+    }
+
+    /// Reduce `contribution` to `root` with `op` (binomial tree). Returns
+    /// `Some(total)` on root, `None` elsewhere.
+    pub fn reduce<T, F>(&mut self, root: usize, contribution: T, op: F) -> Result<Option<T>>
+    where
+        T: Send + 'static,
+        F: Fn(T, T) -> T,
+    {
+        self.stats.reductions.fetch_add(1, Ordering::Relaxed);
+        let p = self.size();
+        let vrank = (self.rank() + p - root) % p;
+        let mut acc = contribution;
+        let mut mask = 1usize;
+        while mask < p {
+            if vrank & mask == 0 {
+                let vpeer = vrank | mask;
+                if vpeer < p {
+                    let peer = (vpeer + root) % p;
+                    let theirs = self.recv::<T>(peer, T_REDUCE)?;
+                    acc = op(acc, theirs);
+                }
+            } else {
+                let vparent = vrank & !mask;
+                let parent = (vparent + root) % p;
+                self.send(parent, T_REDUCE, acc)?;
+                return Ok(None);
+            }
+            mask <<= 1;
+        }
+        Ok(Some(acc))
+    }
+
+    /// Allreduce: recursive doubling for the power-of-two part, with
+    /// pre/post folding of the remainder ranks. `op` must be commutative
+    /// and associative (sum, max, min…).
+    pub fn allreduce<T, F>(&mut self, contribution: T, op: F) -> Result<T>
+    where
+        T: Send + Clone + 'static,
+        F: Fn(T, T) -> T,
+    {
+        self.stats.reductions.fetch_add(1, Ordering::Relaxed);
+        let p = self.size();
+        let me = self.rank();
+        let pof2 = p.next_power_of_two() >> usize::from(!p.is_power_of_two());
+        let rem = p - pof2;
+        let mut acc = contribution;
+
+        // Fold remainder ranks into the first `rem` ranks.
+        if me >= pof2 {
+            self.send(me - pof2, T_ALLRED, acc.clone())?;
+            // Wait for the final result at the end.
+            return self.recv::<T>(me - pof2, T_ALLRED);
+        }
+        if me < rem {
+            let theirs = self.recv::<T>(me + pof2, T_ALLRED)?;
+            acc = op(acc, theirs);
+        }
+        // Recursive doubling among ranks [0, pof2).
+        let mut mask = 1usize;
+        while mask < pof2 {
+            let peer = me ^ mask;
+            self.send(peer, T_ALLRED, acc.clone())?;
+            let theirs = self.recv::<T>(peer, T_ALLRED)?;
+            acc = op(acc, theirs);
+            mask <<= 1;
+        }
+        // Push results back to the folded ranks.
+        if me < rem {
+            self.send(me + pof2, T_ALLRED, acc.clone())?;
+        }
+        Ok(acc)
+    }
+
+    /// Gather variable-length vectors to `root` (linear). Returns
+    /// `Some(per-rank payloads)` on root.
+    pub fn gatherv<T: Send + Clone + 'static>(
+        &mut self,
+        root: usize,
+        contribution: Vec<T>,
+    ) -> Result<Option<Vec<Vec<T>>>> {
+        self.stats.gathers.fetch_add(1, Ordering::Relaxed);
+        if self.rank() == root {
+            let mut out: Vec<Vec<T>> = Vec::with_capacity(self.size());
+            for r in 0..self.size() {
+                if r == root {
+                    out.push(contribution.clone());
+                } else {
+                    out.push(self.recv::<Vec<T>>(r, T_GATHER)?);
+                }
+            }
+            Ok(Some(out))
+        } else {
+            self.send(root, T_GATHER, contribution)?;
+            Ok(None)
+        }
+    }
+
+    /// Allgather fixed contributions (ring algorithm, P−1 rounds).
+    pub fn allgather<T: Send + Clone + 'static>(&mut self, contribution: T) -> Result<Vec<T>> {
+        self.stats.gathers.fetch_add(1, Ordering::Relaxed);
+        let p = self.size();
+        let me = self.rank();
+        let mut slots: Vec<Option<T>> = (0..p).map(|_| None).collect();
+        slots[me] = Some(contribution);
+        let right = (me + 1) % p;
+        let left = (me + p - 1) % p;
+        // Round k: send the block we received in round k−1 (initially ours).
+        let mut outgoing = me;
+        for _ in 0..p.saturating_sub(1) {
+            self.send(right, T_ALLGATHER, (outgoing, slots[outgoing].clone().unwrap()))?;
+            let (idx, val): (usize, T) = self.recv(left, T_ALLGATHER)?;
+            slots[idx] = Some(val);
+            outgoing = idx;
+        }
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+    }
+
+    /// Inclusive prefix scan (linear chain — P−1 dependent messages).
+    pub fn scan<T, F>(&mut self, contribution: T, op: F) -> Result<T>
+    where
+        T: Send + Clone + 'static,
+        F: Fn(T, T) -> T,
+    {
+        let me = self.rank();
+        let p = self.size();
+        let mut acc = contribution;
+        if me > 0 {
+            let prefix = self.recv::<T>(me - 1, T_SCAN)?;
+            acc = op(prefix, acc);
+        }
+        if me + 1 < p {
+            self.send(me + 1, T_SCAN, acc.clone())?;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::comm::world::World;
+
+    /// Run a collective across several world sizes, including non-powers of
+    /// two (the fold-in paths).
+    fn sizes() -> Vec<usize> {
+        vec![1, 2, 3, 4, 5, 8]
+    }
+
+    #[test]
+    fn barrier_completes() {
+        for p in sizes() {
+            World::run(p, move |mut c| {
+                c.barrier().unwrap();
+                c.barrier().unwrap();
+            });
+        }
+    }
+
+    #[test]
+    fn bcast_from_each_root() {
+        for p in sizes() {
+            for root in 0..p {
+                let vals = World::run(p, move |mut c| {
+                    let v = if c.rank() == root {
+                        Some(vec![root as f64, 2.0])
+                    } else {
+                        None
+                    };
+                    c.bcast(root, v).unwrap()
+                });
+                for v in vals {
+                    assert_eq!(v, vec![root as f64, 2.0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sum_to_each_root() {
+        for p in sizes() {
+            for root in 0..p {
+                let vals = World::run(p, move |mut c| {
+                    c.reduce(root, c.rank() as u64 + 1, |a, b| a + b).unwrap()
+                });
+                let expect = (p * (p + 1) / 2) as u64;
+                for (r, v) in vals.into_iter().enumerate() {
+                    if r == root {
+                        assert_eq!(v, Some(expect));
+                    } else {
+                        assert_eq!(v, None);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_and_max() {
+        for p in sizes() {
+            let sums = World::run(p, move |mut c| {
+                c.allreduce((c.rank() + 1) as f64, |a, b| a + b).unwrap()
+            });
+            let expect = (p * (p + 1) / 2) as f64;
+            for s in sums {
+                assert_eq!(s, expect);
+            }
+            let maxes = World::run(p, move |mut c| {
+                c.allreduce(c.rank() as u64, |a, b| a.max(b)).unwrap()
+            });
+            for m in maxes {
+                assert_eq!(m, (p - 1) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn gatherv_variable_lengths() {
+        for p in sizes() {
+            let outs = World::run(p, move |mut c| {
+                let mine: Vec<usize> = (0..c.rank()).collect();
+                c.gatherv(0, mine).unwrap()
+            });
+            let root_out = outs[0].as_ref().unwrap();
+            for (r, v) in root_out.iter().enumerate() {
+                assert_eq!(v, &(0..r).collect::<Vec<_>>());
+            }
+            for o in &outs[1..] {
+                assert!(o.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_ring() {
+        for p in sizes() {
+            let outs = World::run(p, move |mut c| c.allgather(c.rank() * 10).unwrap());
+            for o in outs {
+                assert_eq!(o, (0..p).map(|r| r * 10).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn scan_prefix_sums() {
+        for p in sizes() {
+            let outs = World::run(p, move |mut c| {
+                c.scan(c.rank() + 1, |a, b| a + b).unwrap()
+            });
+            for (r, v) in outs.into_iter().enumerate() {
+                assert_eq!(v, (r + 1) * (r + 2) / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn collectives_compose() {
+        // A realistic solver pattern: allreduce a dot product, then bcast a
+        // convergence decision, repeatedly.
+        let outs = World::run(4, |mut c| {
+            let mut x = c.rank() as f64;
+            for _ in 0..10 {
+                let s = c.allreduce(x, |a, b| a + b).unwrap();
+                let stop = c.bcast(0, Some(s > 100.0)).unwrap();
+                if stop {
+                    break;
+                }
+                x = s / 4.0 + 1.0;
+            }
+            x
+        });
+        let first = outs[0];
+        assert!(outs.iter().all(|&v| (v - first).abs() < 1e-12));
+    }
+}

@@ -1,0 +1,246 @@
+//! The per-rank communicator: point-to-point send/recv with MPI matching
+//! semantics.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::message::{wire_size, Envelope, Tag};
+use crate::comm::stats::CommStats;
+use crate::error::{Error, Result};
+
+/// How long a blocking receive waits before declaring the job deadlocked.
+/// Generous enough for heavily oversubscribed CI hosts; small enough that a
+/// protocol bug fails a test instead of hanging it.
+pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// One rank's communicator endpoint.
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    /// Senders to every rank (including self, for symmetric code).
+    peers: Vec<Sender<Envelope>>,
+    /// Our receive endpoint.
+    inbox: Receiver<Envelope>,
+    /// Messages received but not yet matched (MPI unexpected-message queue).
+    pending: VecDeque<Envelope>,
+    /// Shared counters.
+    pub stats: Arc<CommStats>,
+}
+
+impl Comm {
+    /// Construct the full set of endpoints for `size` ranks. Used by
+    /// [`crate::comm::world::World`]; exposed for tests that wire ranks
+    /// manually.
+    pub fn create_all(size: usize) -> Vec<Comm> {
+        assert!(size >= 1);
+        let mut senders = Vec::with_capacity(size);
+        let mut receivers = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = std::sync::mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| Comm {
+                rank,
+                size,
+                peers: senders.clone(),
+                inbox,
+                pending: VecDeque::new(),
+                stats: Arc::new(CommStats::default()),
+            })
+            .collect()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Send `value` to `dest` with `tag`. Non-blocking (buffered channel),
+    /// like an `MPI_Isend` whose buffer is always large enough.
+    pub fn send<T: Send + 'static>(&self, dest: usize, tag: Tag, value: T) -> Result<()> {
+        if dest >= self.size {
+            return Err(Error::Comm(format!(
+                "send to rank {dest} outside communicator of size {}",
+                self.size
+            )));
+        }
+        let bytes = wire_size(&value);
+        self.peers[dest]
+            .send(Envelope {
+                src: self.rank,
+                tag,
+                payload: Box::new(value),
+                bytes,
+            })
+            .map_err(|_| Error::Comm(format!("rank {dest} is gone")))?;
+        self.stats.record_send(bytes);
+        Ok(())
+    }
+
+    /// Blocking receive of a `T` from `src` with `tag`. Matches MPI
+    /// semantics: messages from the same (src, tag) arrive in send order;
+    /// non-matching arrivals are queued.
+    pub fn recv<T: Send + 'static>(&mut self, src: usize, tag: Tag) -> Result<T> {
+        // 1. Unexpected-message queue.
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|e| e.src == src && e.tag == tag)
+        {
+            let env = self.pending.remove(pos).unwrap();
+            return self.unpack(env);
+        }
+        // 2. Drain the inbox until a match.
+        let deadline = std::time::Instant::now() + RECV_TIMEOUT;
+        loop {
+            let remaining = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .ok_or_else(|| {
+                    Error::Comm(format!(
+                        "rank {}: recv(src={src}, tag={tag}) timed out",
+                        self.rank
+                    ))
+                })?;
+            let env = self.inbox.recv_timeout(remaining).map_err(|_| {
+                Error::Comm(format!(
+                    "rank {}: recv(src={src}, tag={tag}) timed out or world dropped",
+                    self.rank
+                ))
+            })?;
+            if env.src == src && env.tag == tag {
+                return self.unpack(env);
+            }
+            self.pending.push_back(env);
+        }
+    }
+
+    /// Non-blocking probe: is a message from (src, tag) available?
+    pub fn iprobe(&mut self, src: usize, tag: Tag) -> bool {
+        if self
+            .pending
+            .iter()
+            .any(|e| e.src == src && e.tag == tag)
+        {
+            return true;
+        }
+        while let Ok(env) = self.inbox.try_recv() {
+            let hit = env.src == src && env.tag == tag;
+            self.pending.push_back(env);
+            if hit {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn unpack<T: Send + 'static>(&self, env: Envelope) -> Result<T> {
+        self.stats.record_recv(env.bytes);
+        env.payload.downcast::<T>().map(|b| *b).map_err(|_| {
+            Error::Comm(format!(
+                "rank {}: type mismatch receiving from {} tag {}",
+                self.rank, env.src, env.tag
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let mut comms = Comm::create_all(2);
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c1.send(0, 5, vec![1.0f64, 2.0]).unwrap();
+        let v: Vec<f64> = c0.recv(1, 5).unwrap();
+        assert_eq!(v, vec![1.0, 2.0]);
+        assert_eq!(c0.stats.snapshot().recvs, 1);
+        assert_eq!(c1.stats.snapshot().bytes_sent, 16);
+    }
+
+    #[test]
+    fn tag_matching_reorders() {
+        let mut comms = Comm::create_all(2);
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c1.send(0, 1, 10u32).unwrap();
+        c1.send(0, 2, 20u32).unwrap();
+        // Receive tag 2 first: tag 1 must be buffered, not lost.
+        assert_eq!(c0.recv::<u32>(1, 2).unwrap(), 20);
+        assert_eq!(c0.recv::<u32>(1, 1).unwrap(), 10);
+    }
+
+    #[test]
+    fn same_tag_fifo_order() {
+        let mut comms = Comm::create_all(2);
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        for i in 0..10u32 {
+            c1.send(0, 3, i).unwrap();
+        }
+        for i in 0..10u32 {
+            assert_eq!(c0.recv::<u32>(1, 3).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn self_send() {
+        let mut comms = Comm::create_all(1);
+        let mut c0 = comms.pop().unwrap();
+        c0.send(0, 9, 3.5f64).unwrap();
+        assert_eq!(c0.recv::<f64>(0, 9).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let mut comms = Comm::create_all(1);
+        let mut c0 = comms.pop().unwrap();
+        c0.send(0, 1, 1u8).unwrap();
+        assert!(c0.recv::<u64>(0, 1).is_err());
+    }
+
+    #[test]
+    fn bad_dest_is_error() {
+        let comms = Comm::create_all(2);
+        assert!(comms[0].send(5, 0, 1u8).is_err());
+    }
+
+    #[test]
+    fn iprobe_sees_buffered_and_incoming() {
+        let mut comms = Comm::create_all(2);
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        assert!(!c0.iprobe(1, 4));
+        c1.send(0, 4, 1u8).unwrap();
+        // allow the channel to deliver
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(c0.iprobe(1, 4));
+        // probing must not consume
+        assert_eq!(c0.recv::<u8>(1, 4).unwrap(), 1);
+    }
+
+    #[test]
+    fn cross_thread_roundtrip() {
+        let mut comms = Comm::create_all(2);
+        let mut c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            let x: Vec<usize> = c1.recv(0, 7).unwrap();
+            c1.send(0, 8, x.iter().sum::<usize>()).unwrap();
+        });
+        c0.send(1, 7, vec![1usize, 2, 3]).unwrap();
+        assert_eq!(c0.recv::<usize>(1, 8).unwrap(), 6);
+        t.join().unwrap();
+    }
+}

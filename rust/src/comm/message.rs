@@ -1,0 +1,78 @@
+//! Message envelopes for the simulated-MPI layer.
+
+use std::any::Any;
+
+/// A tag, as in MPI. Library-internal protocols reserve tags ≥
+/// [`RESERVED_TAG_BASE`].
+pub type Tag = u32;
+
+/// First tag reserved for internal protocols (collectives, scatter plans,
+/// assembly). User code must use tags below this.
+pub const RESERVED_TAG_BASE: Tag = 1 << 24;
+
+/// A typed message in flight.
+pub struct Envelope {
+    pub src: usize,
+    pub tag: Tag,
+    /// The payload, type-erased. `Comm::recv::<T>` downcasts.
+    pub payload: Box<dyn Any + Send>,
+    /// Approximate wire size in bytes (for stats / cost model).
+    pub bytes: usize,
+}
+
+impl std::fmt::Debug for Envelope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Envelope")
+            .field("src", &self.src)
+            .field("tag", &self.tag)
+            .field("bytes", &self.bytes)
+            .finish()
+    }
+}
+
+/// Estimate the wire size of a payload. Exact for the slice types the
+/// library sends; a pointer-size floor for anything else.
+pub fn wire_size<T: 'static>(value: &T) -> usize {
+    let any = value as &dyn Any;
+    if let Some(v) = any.downcast_ref::<Vec<f64>>() {
+        v.len() * 8
+    } else if let Some(v) = any.downcast_ref::<Vec<usize>>() {
+        v.len() * 8
+    } else if let Some(v) = any.downcast_ref::<Vec<u8>>() {
+        v.len()
+    } else if let Some(v) = any.downcast_ref::<Vec<(usize, usize)>>() {
+        v.len() * 16
+    } else if let Some(v) = any.downcast_ref::<Vec<(usize, f64)>>() {
+        v.len() * 16
+    } else if let Some(v) = any.downcast_ref::<Vec<(usize, usize, f64)>>() {
+        v.len() * 24
+    } else {
+        std::mem::size_of::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(wire_size(&vec![1.0f64; 10]), 80);
+        assert_eq!(wire_size(&vec![1usize; 4]), 32);
+        assert_eq!(wire_size(&vec![0u8; 7]), 7);
+        assert_eq!(wire_size(&vec![(1usize, 2usize, 3.0f64); 2]), 48);
+        assert_eq!(wire_size(&42u32), 4);
+    }
+
+    #[test]
+    fn envelope_debug() {
+        let e = Envelope {
+            src: 3,
+            tag: 7,
+            payload: Box::new(vec![1.0f64]),
+            bytes: 8,
+        };
+        let s = format!("{e:?}");
+        assert!(s.contains("src: 3") && s.contains("tag: 7"));
+    }
+}

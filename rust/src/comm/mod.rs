@@ -1,0 +1,28 @@
+//! The "MPI" substrate: simulated message passing between ranks.
+//!
+//! Ranks are OS threads inside one process (the paper's multi-node runs are
+//! priced by [`crate::sim`]); each rank owns a receive endpoint and can
+//! send typed messages to any other rank. Point-to-point semantics follow
+//! MPI: ordered per (source, destination, tag) pair, matched by
+//! `(source, tag)` on the receive side.
+//!
+//! Collectives (barrier, broadcast, reduce, allreduce, allgather, gatherv,
+//! scan) are implemented **on top of the point-to-point layer with the same
+//! algorithms real MPI implementations use** (binomial trees, recursive
+//! doubling) so that the message *pattern* — what the α–β cost model prices
+//! — is faithful.
+//!
+//! Every communicator records [`stats::CommStats`]; the paper's claim that
+//! hybrid wins because "fewer messages need to be passed" is asserted in
+//! tests against these counters.
+
+pub mod message;
+pub mod endpoint;
+pub mod collective;
+pub mod world;
+pub mod timing;
+pub mod stats;
+
+pub use endpoint::Comm;
+pub use timing::NetModel;
+pub use world::World;

@@ -1,0 +1,111 @@
+//! SPMD world launcher: spawn `size` ranks as OS threads.
+
+use crate::comm::endpoint::Comm;
+use crate::comm::stats::CommStatsSnapshot;
+
+/// The SPMD launcher.
+pub struct World;
+
+impl World {
+    /// Run `f(comm)` on `size` ranks (threads) and collect each rank's
+    /// return value, ordered by rank. Panics in any rank propagate.
+    pub fn run<T, F>(size: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Comm) -> T + Send + Sync + 'static,
+    {
+        Self::run_with_stats(size, f).0
+    }
+
+    /// As [`World::run`], additionally returning each rank's communication
+    /// counters (used by benches and the "fewer messages" assertions).
+    pub fn run_with_stats<T, F>(size: usize, f: F) -> (Vec<T>, Vec<CommStatsSnapshot>)
+    where
+        T: Send + 'static,
+        F: Fn(Comm) -> T + Send + Sync + 'static,
+    {
+        assert!(size >= 1, "world needs at least one rank");
+        let comms = Comm::create_all(size);
+        let f = std::sync::Arc::new(f);
+        let mut handles = Vec::with_capacity(size);
+        for comm in comms {
+            let f = std::sync::Arc::clone(&f);
+            let stats = std::sync::Arc::clone(&comm.stats);
+            let rank = comm.rank();
+            handles.push((
+                stats,
+                std::thread::Builder::new()
+                    .name(format!("mmpetsc-rank-{rank}"))
+                    .spawn(move || f(comm))
+                    .expect("spawn rank"),
+            ));
+        }
+        let mut results = Vec::with_capacity(size);
+        let mut stats = Vec::with_capacity(size);
+        for (s, h) in handles {
+            match h.join() {
+                Ok(v) => {
+                    results.push(v);
+                    stats.push(s.snapshot());
+                }
+                Err(e) => std::panic::resume_unwind(e),
+            }
+        }
+        (results, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_are_ordered() {
+        let out = World::run(6, |c| c.rank() * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8, 10]);
+    }
+
+    #[test]
+    fn single_rank_world() {
+        let out = World::run(1, |c| (c.rank(), c.size()));
+        assert_eq!(out, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn ring_pass() {
+        // rank r sends to r+1; total hop count must equal size.
+        let out = World::run(5, |mut c| {
+            let right = (c.rank() + 1) % c.size();
+            let left = (c.rank() + c.size() - 1) % c.size();
+            c.send(right, 1, c.rank()).unwrap();
+            c.recv::<usize>(left, 1).unwrap()
+        });
+        assert_eq!(out, vec![4, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn stats_reported_per_rank() {
+        let (_, stats) = World::run_with_stats(3, |mut c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![0.0f64; 100]).unwrap();
+            }
+            if c.rank() == 1 {
+                c.recv::<Vec<f64>>(0, 1).unwrap();
+            }
+        });
+        assert_eq!(stats[0].sends, 1);
+        assert_eq!(stats[0].bytes_sent, 800);
+        assert_eq!(stats[1].recvs, 1);
+        assert_eq!(stats[2].messages(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_panic_propagates() {
+        World::run(2, |c| {
+            if c.rank() == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -1,0 +1,209 @@
+//! PETSc `-log_summary`-style event logging.
+//!
+//! "performance results presented in this paper … are as reported by
+//! PETSc's internal log functionality" (§VIII.C, footnote 2). Figures 7,
+//! 8, 10 and 11 plot the `MatMult` and `KSPSolve` event timers; this module
+//! is their counterpart. One `EventLog` per rank; interior mutability so it
+//! threads through the solver call tree as `&EventLog`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulated data for one event class (MatMult, VecDot, KSPSolve, ...).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EventStats {
+    /// Number of invocations.
+    pub count: u64,
+    /// Total wall-clock seconds.
+    pub seconds: f64,
+    /// Total floating-point operations attributed.
+    pub flops: f64,
+}
+
+impl EventStats {
+    /// Achieved FLOP rate.
+    pub fn flop_rate(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.flops / self.seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    events: BTreeMap<&'static str, EventStats>,
+    stack: Vec<(&'static str, Instant, f64)>,
+}
+
+/// The per-rank event log.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    inner: RefCell<Inner>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog::default()
+    }
+
+    /// Begin a (possibly nested) event.
+    pub fn begin(&self, name: &'static str) {
+        self.inner
+            .borrow_mut()
+            .stack
+            .push((name, Instant::now(), 0.0));
+    }
+
+    /// Attribute flops to the innermost active event.
+    pub fn add_flops(&self, flops: f64) {
+        if let Some(top) = self.inner.borrow_mut().stack.last_mut() {
+            top.2 += flops;
+        }
+    }
+
+    /// End the innermost active event (must match `name`).
+    pub fn end(&self, name: &'static str) {
+        let mut inner = self.inner.borrow_mut();
+        let (n, t0, flops) = inner
+            .stack
+            .pop()
+            .unwrap_or_else(|| panic!("EventLog::end({name}) with empty stack"));
+        assert_eq!(n, name, "EventLog: end({name}) does not match begin({n})");
+        let e = inner.events.entry(n).or_default();
+        e.count += 1;
+        e.seconds += t0.elapsed().as_secs_f64();
+        e.flops += flops;
+    }
+
+    /// Time a closure under an event, attributing `flops`.
+    pub fn timed<T>(&self, name: &'static str, flops: f64, f: impl FnOnce() -> T) -> T {
+        self.begin(name);
+        let out = f();
+        self.add_flops(flops);
+        self.end(name);
+        out
+    }
+
+    /// Snapshot of one event (zeros if never logged).
+    pub fn stats(&self, name: &str) -> EventStats {
+        self.inner
+            .borrow()
+            .events
+            .get(name)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// All events, sorted by name.
+    pub fn all(&self) -> Vec<(&'static str, EventStats)> {
+        self.inner
+            .borrow()
+            .events
+            .iter()
+            .map(|(&k, &v)| (k, v))
+            .collect()
+    }
+
+    /// Merge another rank's log into this one (summing counts/times —
+    /// used when reporting per-job maxima the way PETSc reports ratios).
+    pub fn merge_max(&self, other: &EventLog) {
+        let other_events: Vec<_> = other.all();
+        let mut inner = self.inner.borrow_mut();
+        for (name, stats) in other_events {
+            let e = inner.events.entry(name).or_default();
+            e.count = e.count.max(stats.count);
+            e.seconds = e.seconds.max(stats.seconds);
+            e.flops += stats.flops;
+        }
+    }
+
+    /// Render a `-log_summary`-style table.
+    pub fn summary(&self) -> String {
+        let mut out = String::from(
+            "Event                Count      Time (sec)     Flops      MFlops/s\n",
+        );
+        for (name, e) in self.all() {
+            out.push_str(&format!(
+                "{:<20} {:>6} {:>14.6} {:>12.3e} {:>10.1}\n",
+                name,
+                e.count,
+                e.seconds,
+                e.flops,
+                e.flop_rate() / 1e6
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_accumulates() {
+        let log = EventLog::new();
+        for _ in 0..3 {
+            log.timed("MatMult", 100.0, || {
+                std::thread::sleep(std::time::Duration::from_millis(2))
+            });
+        }
+        let s = log.stats("MatMult");
+        assert_eq!(s.count, 3);
+        assert!(s.seconds >= 0.005);
+        assert_eq!(s.flops, 300.0);
+        assert!(s.flop_rate() > 0.0);
+    }
+
+    #[test]
+    fn nesting_attributes_to_innermost() {
+        let log = EventLog::new();
+        log.begin("KSPSolve");
+        log.begin("MatMult");
+        log.add_flops(50.0);
+        log.end("MatMult");
+        log.add_flops(7.0); // goes to KSPSolve
+        log.end("KSPSolve");
+        assert_eq!(log.stats("MatMult").flops, 50.0);
+        assert_eq!(log.stats("KSPSolve").flops, 7.0);
+        assert_eq!(log.stats("KSPSolve").count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn mismatched_end_panics() {
+        let log = EventLog::new();
+        log.begin("A");
+        log.end("B");
+    }
+
+    #[test]
+    fn unknown_event_is_zero() {
+        let log = EventLog::new();
+        assert_eq!(log.stats("nope"), EventStats::default());
+    }
+
+    #[test]
+    fn merge_takes_max_time() {
+        let a = EventLog::new();
+        let b = EventLog::new();
+        a.timed("VecDot", 10.0, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        b.timed("VecDot", 20.0, || std::thread::sleep(std::time::Duration::from_millis(4)));
+        a.merge_max(&b);
+        let s = a.stats("VecDot");
+        assert!(s.seconds >= 0.004);
+        assert_eq!(s.flops, 30.0);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let log = EventLog::new();
+        log.timed("MatMult", 1e6, || {});
+        let s = log.summary();
+        assert!(s.contains("MatMult"));
+        assert!(s.contains("Count"));
+    }
+}

@@ -1,0 +1,11 @@
+//! The mixed-mode coordinator: PETSc-style event logging, the options
+//! database, and the hybrid (ranks × threads) run harness that every
+//! benchmark and example drives.
+
+pub mod logging;
+pub mod options;
+pub mod runner;
+
+pub use logging::EventLog;
+pub use options::Options;
+pub use runner::{HybridConfig, HybridReport, run_case};

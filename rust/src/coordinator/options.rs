@@ -1,0 +1,148 @@
+//! The PETSc-style options database: `-ksp_type cg -pc_type jacobi
+//! -ksp_rtol 1e-8 -mat_size 10000 ...` — how `ex6`-style drivers configure
+//! a run (paper §VIII.A: "The problem definition is highly customizable").
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::ksp::KspConfig;
+
+/// A parsed options database.
+#[derive(Debug, Clone, Default)]
+pub struct Options {
+    entries: BTreeMap<String, String>,
+}
+
+impl Options {
+    /// Parse a PETSc-style token stream: options start with `-`; a token
+    /// not starting with `-` is the value of the preceding option;
+    /// value-less options are flags (`"true"`).
+    pub fn parse(tokens: &[String]) -> Result<Options> {
+        let mut entries = BTreeMap::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            let name = t
+                .strip_prefix('-')
+                .ok_or_else(|| Error::InvalidOption(format!("expected -option, got `{t}`")))?;
+            if name.is_empty() {
+                return Err(Error::InvalidOption("bare `-`".into()));
+            }
+            // Negative numbers are values, not options.
+            let next_is_value = tokens
+                .get(i + 1)
+                .map(|n| !n.starts_with('-') || n[1..].starts_with(|c: char| c.is_ascii_digit()))
+                .unwrap_or(false);
+            if next_is_value {
+                entries.insert(name.to_string(), tokens[i + 1].clone());
+                i += 2;
+            } else {
+                entries.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Options { entries })
+    }
+
+    /// Parse from a whitespace-separated string.
+    pub fn parse_str(s: &str) -> Result<Options> {
+        Self::parse(&s.split_whitespace().map(|t| t.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn set(&mut self, name: &str, value: &str) {
+        self.entries.insert(name.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.entries.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidOption(format!("-{name}: `{v}` is not an integer"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidOption(format!("-{name}: `{v}` is not a number"))),
+        }
+    }
+
+    /// Extract a [`KspConfig`] from `-ksp_rtol/-ksp_atol/-ksp_max_it/
+    /// -ksp_gmres_restart/-ksp_monitor`.
+    pub fn ksp_config(&self) -> Result<KspConfig> {
+        let d = KspConfig::default();
+        Ok(KspConfig {
+            rtol: self.f64_or("ksp_rtol", d.rtol)?,
+            atol: self.f64_or("ksp_atol", d.atol)?,
+            dtol: self.f64_or("ksp_dtol", d.dtol)?,
+            max_it: self.usize_or("ksp_max_it", d.max_it)?,
+            restart: self.usize_or("ksp_gmres_restart", d.restart)?,
+            monitor: self.flag("ksp_monitor"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_petsc_style() {
+        let o = Options::parse_str("-ksp_type cg -pc_type jacobi -ksp_rtol 1e-8 -ksp_monitor")
+            .unwrap();
+        assert_eq!(o.get("ksp_type"), Some("cg"));
+        assert_eq!(o.get("pc_type"), Some("jacobi"));
+        assert!(o.flag("ksp_monitor"));
+        assert!(!o.flag("nonexistent"));
+        assert_eq!(o.f64_or("ksp_rtol", 0.0).unwrap(), 1e-8);
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let o = Options::parse_str("-shift -1.5 -flag").unwrap();
+        assert_eq!(o.get("shift"), Some("-1.5"));
+        assert!(o.flag("flag"));
+    }
+
+    #[test]
+    fn ksp_config_extraction() {
+        let o =
+            Options::parse_str("-ksp_rtol 1e-9 -ksp_max_it 50 -ksp_gmres_restart 10").unwrap();
+        let c = o.ksp_config().unwrap();
+        assert_eq!(c.rtol, 1e-9);
+        assert_eq!(c.max_it, 50);
+        assert_eq!(c.restart, 10);
+        assert!(!c.monitor);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Options::parse_str("value-without-option").is_err());
+        assert!(Options::parse_str("-").is_err());
+        let o = Options::parse_str("-n abc").unwrap();
+        assert!(o.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut o = Options::parse_str("-pc_type none").unwrap();
+        o.set("pc_type", "jacobi");
+        assert_eq!(o.get("pc_type"), Some("jacobi"));
+    }
+}

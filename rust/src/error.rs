@@ -1,0 +1,99 @@
+//! Error handling for mmpetsc (the `PetscErrorCode` analogue).
+
+use thiserror::Error;
+
+/// Library-wide error type.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Dimension / layout mismatch between objects.
+    #[error("incompatible sizes: {0}")]
+    SizeMismatch(String),
+
+    /// An index was out of the valid range.
+    #[error("index {index} out of range {range:?}: {context}")]
+    IndexOutOfRange {
+        index: usize,
+        range: (usize, usize),
+        context: String,
+    },
+
+    /// Object used before it was assembled / set up.
+    #[error("object not ready: {0}")]
+    NotReady(String),
+
+    /// A solver failed to converge (carries the reason and iteration count).
+    #[error("solver diverged: {reason} after {iterations} iterations")]
+    Diverged { reason: String, iterations: usize },
+
+    /// Numerical breakdown (zero pivot, indefinite operator for CG, ...).
+    #[error("numerical breakdown: {0}")]
+    Breakdown(String),
+
+    /// Configuration / options error.
+    #[error("invalid option: {0}")]
+    InvalidOption(String),
+
+    /// Unsupported operation for this object type.
+    #[error("unsupported: {0}")]
+    Unsupported(String),
+
+    /// Communication layer failure (rank died, channel closed, ...).
+    #[error("communication error: {0}")]
+    Comm(String),
+
+    /// I/O and file-format errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// File format violation (PETSc binary / MatrixMarket).
+    #[error("format error: {0}")]
+    Format(String),
+
+    /// PJRT / XLA runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+/// Library-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience constructor for [`Error::SizeMismatch`].
+    pub fn size_mismatch(msg: impl Into<String>) -> Self {
+        Error::SizeMismatch(msg.into())
+    }
+
+    /// Convenience constructor for [`Error::NotReady`].
+    pub fn not_ready(msg: impl Into<String>) -> Self {
+        Error::NotReady(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::size_mismatch("vec 3 vs mat 4");
+        assert_eq!(e.to_string(), "incompatible sizes: vec 3 vs mat 4");
+        let e = Error::IndexOutOfRange {
+            index: 7,
+            range: (0, 5),
+            context: "row".into(),
+        };
+        assert!(e.to_string().contains("index 7"));
+        let e = Error::Diverged {
+            reason: "DIVERGED_ITS".into(),
+            iterations: 100,
+        };
+        assert!(e.to_string().contains("100 iterations"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

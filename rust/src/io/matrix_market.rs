@@ -1,0 +1,166 @@
+//! MatrixMarket coordinate format (`%%MatrixMarket matrix coordinate real
+//! general|symmetric`) — the lingua franca for importing external test
+//! matrices.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mat::csr::{MatBuilder, MatSeqAIJ};
+use crate::vec::ctx::ThreadCtx;
+
+/// Read a MatrixMarket coordinate file.
+pub fn read_matrix_market(path: impl AsRef<Path>, ctx: Arc<ThreadCtx>) -> Result<MatSeqAIJ> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = std::io::BufReader::new(f).lines();
+
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Format("empty MatrixMarket file".into()))??;
+    let h = header.to_lowercase();
+    if !h.starts_with("%%matrixmarket matrix coordinate real") {
+        return Err(Error::Format(format!("unsupported MatrixMarket header: {header}")));
+    }
+    let symmetric = h.contains("symmetric");
+    if !symmetric && !h.contains("general") {
+        return Err(Error::Format(format!("unsupported symmetry in: {header}")));
+    }
+
+    // Skip comments, read the size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| Error::Format("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| Error::Format(format!("bad size line: {size_line}"))))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(Error::Format(format!("bad size line: {size_line}")));
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut b = MatBuilder::new(rows, cols);
+    let mut count = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = parse_tok(it.next(), t)?;
+        let j: usize = parse_tok(it.next(), t)?;
+        let v: f64 = parse_tok(it.next(), t)?;
+        if i == 0 || j == 0 {
+            return Err(Error::Format(format!("MatrixMarket is 1-based: {t}")));
+        }
+        b.add(i - 1, j - 1, v)?;
+        if symmetric && i != j {
+            b.add(j - 1, i - 1, v)?;
+        }
+        count += 1;
+    }
+    if count != nnz {
+        return Err(Error::Format(format!("expected {nnz} entries, found {count}")));
+    }
+    Ok(b.assemble(ctx))
+}
+
+fn parse_tok<T: std::str::FromStr>(tok: Option<&str>, line: &str) -> Result<T> {
+    tok.and_then(|t| t.parse().ok())
+        .ok_or_else(|| Error::Format(format!("bad entry line: {line}")))
+}
+
+/// Write a matrix as MatrixMarket coordinate real general.
+pub fn write_matrix_market(path: impl AsRef<Path>, a: &MatSeqAIJ) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by mmpetsc")?;
+    writeln!(w, "{} {} {}", a.rows(), a.cols(), a.nnz())?;
+    for i in 0..a.rows() {
+        let (cols, vals) = a.row(i);
+        for (k, &j) in cols.iter().enumerate() {
+            writeln!(w, "{} {} {:.17e}", i + 1, j + 1, vals[k])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("mmpetsc-mm-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_general() {
+        let mut b = MatBuilder::new(3, 3);
+        b.add(0, 0, 1.0).unwrap();
+        b.add(1, 2, -0.5).unwrap();
+        b.add(2, 0, 3.25).unwrap();
+        let a = b.assemble(ThreadCtx::serial());
+        let p = tmp("gen.mtx");
+        write_matrix_market(&p, &a).unwrap();
+        let a2 = read_matrix_market(&p, ThreadCtx::serial()).unwrap();
+        assert_eq!(a2.nnz(), 3);
+        assert_eq!(a2.get(1, 2), -0.5);
+        assert_eq!(a2.get(2, 0), 3.25);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn reads_symmetric_expansion() {
+        let p = tmp("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n% c\n3 3 3\n1 1 2.0\n2 1 -1.0\n3 3 5.0\n",
+        )
+        .unwrap();
+        let a = read_matrix_market(&p, ThreadCtx::serial()).unwrap();
+        assert_eq!(a.get(0, 1), -1.0);
+        assert_eq!(a.get(1, 0), -1.0);
+        assert_eq!(a.nnz(), 4);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, "not a matrix\n").unwrap();
+        assert!(read_matrix_market(&p, ThreadCtx::serial()).is_err());
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 3.0\n")
+            .unwrap();
+        assert!(read_matrix_market(&p, ThreadCtx::serial()).is_err()); // 0-based entry
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 5\n1 1 3.0\n")
+            .unwrap();
+        assert!(read_matrix_market(&p, ThreadCtx::serial()).is_err()); // count mismatch
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn scientific_notation_values() {
+        let p = tmp("sci.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 -1.25e-17\n",
+        )
+        .unwrap();
+        let a = read_matrix_market(&p, ThreadCtx::serial()).unwrap();
+        assert_eq!(a.get(0, 0), -1.25e-17);
+        std::fs::remove_file(p).ok();
+    }
+}

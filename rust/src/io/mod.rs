@@ -1,0 +1,8 @@
+//! File I/O: PETSc binary format (what the paper's benchmark driver
+//! `ex6.c` reads) and MatrixMarket.
+
+pub mod petsc_binary;
+pub mod matrix_market;
+
+pub use matrix_market::{read_matrix_market, write_matrix_market};
+pub use petsc_binary::{read_mat, read_vec, write_mat, write_vec};

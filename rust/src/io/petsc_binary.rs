@@ -1,0 +1,209 @@
+//! PETSc binary matrix/vector format (big-endian, as PETSc writes it).
+//!
+//! The paper's benchmark "reads a PETSc matrix and vector from a file and
+//! solves a linear system" (ex6.c, §VIII.A). Layout:
+//!
+//! ```text
+//! Mat: i32 MAT_FILE_CLASSID (1211216)
+//!      i32 rows, i32 cols, i32 nnz
+//!      i32 nnz-per-row[rows]
+//!      i32 column-indices[nnz]
+//!      f64 values[nnz]
+//! Vec: i32 VEC_FILE_CLASSID (1211214)
+//!      i32 n
+//!      f64 values[n]
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mat::csr::MatSeqAIJ;
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::seq::VecSeq;
+
+pub const MAT_FILE_CLASSID: i32 = 1_211_216;
+pub const VEC_FILE_CLASSID: i32 = 1_211_214;
+
+fn w_i32(w: &mut impl Write, v: i32) -> Result<()> {
+    w.write_all(&v.to_be_bytes())?;
+    Ok(())
+}
+
+fn w_f64(w: &mut impl Write, v: f64) -> Result<()> {
+    w.write_all(&v.to_be_bytes())?;
+    Ok(())
+}
+
+fn r_i32(r: &mut impl Read) -> Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(i32::from_be_bytes(b))
+}
+
+fn r_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_be_bytes(b))
+}
+
+fn as_i32(v: usize, what: &str) -> Result<i32> {
+    i32::try_from(v).map_err(|_| Error::Format(format!("{what} {v} exceeds i32 (PETSc binary)")))
+}
+
+/// Write a matrix in PETSc binary format.
+pub fn write_mat(path: impl AsRef<Path>, a: &MatSeqAIJ) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    w_i32(&mut w, MAT_FILE_CLASSID)?;
+    w_i32(&mut w, as_i32(a.rows(), "rows")?)?;
+    w_i32(&mut w, as_i32(a.cols(), "cols")?)?;
+    w_i32(&mut w, as_i32(a.nnz(), "nnz")?)?;
+    for i in 0..a.rows() {
+        let nnz_row = a.row_ptr()[i + 1] - a.row_ptr()[i];
+        w_i32(&mut w, as_i32(nnz_row, "row nnz")?)?;
+    }
+    for &c in a.col_idx() {
+        w_i32(&mut w, as_i32(c, "col")?)?;
+    }
+    for &v in a.vals() {
+        w_f64(&mut w, v)?;
+    }
+    Ok(())
+}
+
+/// Read a matrix in PETSc binary format.
+pub fn read_mat(path: impl AsRef<Path>, ctx: Arc<ThreadCtx>) -> Result<MatSeqAIJ> {
+    let f = std::fs::File::open(path)?;
+    let mut r = std::io::BufReader::new(f);
+    let classid = r_i32(&mut r)?;
+    if classid != MAT_FILE_CLASSID {
+        return Err(Error::Format(format!(
+            "bad mat classid {classid} (expected {MAT_FILE_CLASSID})"
+        )));
+    }
+    let rows = r_i32(&mut r)? as usize;
+    let cols = r_i32(&mut r)? as usize;
+    let nnz = r_i32(&mut r)? as usize;
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    row_ptr.push(0usize);
+    for _ in 0..rows {
+        let k = r_i32(&mut r)? as usize;
+        row_ptr.push(row_ptr.last().unwrap() + k);
+    }
+    if *row_ptr.last().unwrap() != nnz {
+        return Err(Error::Format(format!(
+            "row nnz sum {} != header nnz {nnz}",
+            row_ptr.last().unwrap()
+        )));
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        col_idx.push(r_i32(&mut r)? as usize);
+    }
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        vals.push(r_f64(&mut r)?);
+    }
+    MatSeqAIJ::from_csr(rows, cols, row_ptr, col_idx, vals, ctx)
+}
+
+/// Write a vector in PETSc binary format.
+pub fn write_vec(path: impl AsRef<Path>, v: &VecSeq) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    w_i32(&mut w, VEC_FILE_CLASSID)?;
+    w_i32(&mut w, as_i32(v.len(), "len")?)?;
+    for &x in v.as_slice() {
+        w_f64(&mut w, x)?;
+    }
+    Ok(())
+}
+
+/// Read a vector in PETSc binary format.
+pub fn read_vec(path: impl AsRef<Path>, ctx: Arc<ThreadCtx>) -> Result<VecSeq> {
+    let f = std::fs::File::open(path)?;
+    let mut r = std::io::BufReader::new(f);
+    let classid = r_i32(&mut r)?;
+    if classid != VEC_FILE_CLASSID {
+        return Err(Error::Format(format!(
+            "bad vec classid {classid} (expected {VEC_FILE_CLASSID})"
+        )));
+    }
+    let n = r_i32(&mut r)? as usize;
+    let mut xs = Vec::with_capacity(n);
+    for _ in 0..n {
+        xs.push(r_f64(&mut r)?);
+    }
+    Ok(VecSeq::from_slice(&xs, ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::csr::MatBuilder;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("mmpetsc-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        let mut b = MatBuilder::new(3, 4);
+        b.add(0, 0, 1.5).unwrap();
+        b.add(0, 3, -2.0).unwrap();
+        b.add(2, 1, 7.0).unwrap();
+        let a = b.assemble(ThreadCtx::serial());
+        let p = tmp("mat.bin");
+        write_mat(&p, &a).unwrap();
+        let a2 = read_mat(&p, ThreadCtx::serial()).unwrap();
+        assert_eq!(a2.rows(), 3);
+        assert_eq!(a2.cols(), 4);
+        assert_eq!(a2.nnz(), 3);
+        assert_eq!(a2.get(0, 3), -2.0);
+        assert_eq!(a2.get(2, 1), 7.0);
+        assert_eq!(a2.get(1, 1), 0.0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let v = VecSeq::from_slice(&[1.0, -2.5, 1e300, 0.0], ThreadCtx::serial());
+        let p = tmp("vec.bin");
+        write_vec(&p, &v).unwrap();
+        let v2 = read_vec(&p, ThreadCtx::serial()).unwrap();
+        assert_eq!(v.as_slice(), v2.as_slice());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn wrong_classid_rejected() {
+        let v = VecSeq::from_slice(&[1.0], ThreadCtx::serial());
+        let p = tmp("cross.bin");
+        write_vec(&p, &v).unwrap();
+        assert!(read_mat(&p, ThreadCtx::serial()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let p = tmp("trunc.bin");
+        std::fs::write(&p, MAT_FILE_CLASSID.to_be_bytes()).unwrap();
+        assert!(read_mat(&p, ThreadCtx::serial()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn big_endian_on_disk() {
+        let v = VecSeq::from_slice(&[1.0], ThreadCtx::serial());
+        let p = tmp("be.bin");
+        write_vec(&p, &v).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // classid 1211214 = 0x00127B4E big-endian
+        assert_eq!(&bytes[0..4], &[0x00, 0x12, 0x7B, 0x4E]);
+        std::fs::remove_file(p).ok();
+    }
+}

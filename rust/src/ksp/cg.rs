@@ -1,0 +1,251 @@
+//! Preconditioned Conjugate Gradient — the paper's workhorse solver
+//! (Figures 8, 9, 10: "CG solve … with a Jacobi preconditioner").
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::error::Result;
+use crate::ksp::{
+    check_convergence, dot, matmult, norm2, pcapply, ConvergedReason, KspConfig, Operator,
+    SolveStats,
+};
+use crate::pc::Precond;
+use crate::vec::mpi::VecMPI;
+
+/// Solve `A x = b` with preconditioned CG. `x` carries the initial guess.
+pub fn solve(
+    a: &mut dyn Operator,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    log.begin("KSPSolve");
+    let out = solve_inner(a, pc, b, x, cfg, comm, log);
+    log.end("KSPSolve");
+    out
+}
+
+fn solve_inner(
+    a: &mut dyn Operator,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    let bnorm = norm2(b, comm, log)?;
+    let mut history = Vec::new();
+
+    // r = b − A x
+    let mut r = b.duplicate();
+    a_apply_residual(a, b, x, &mut r, comm, log)?;
+    let mut z = r.duplicate();
+    pcapply(pc, &r, &mut z, log)?;
+    let mut p = z.duplicate();
+    p.copy_from(&z)?;
+    let mut w = r.duplicate();
+    let mut rz = dot(&r, &z, comm, log)?;
+    let mut rnorm = norm2(&r, comm, log)?;
+    if cfg.monitor {
+        history.push(rnorm);
+    }
+
+    let mut it = 0usize;
+    loop {
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(SolveStats {
+                reason,
+                iterations: it,
+                b_norm: bnorm,
+                final_residual: rnorm,
+                history,
+            });
+        }
+        // w = A p; alpha = rz / (p, w)
+        matmult(a, &p, &mut w, comm, log)?;
+        let pw = dot(&p, &w, comm, log)?;
+        if pw <= 0.0 {
+            // not SPD (or breakdown)
+            return Ok(SolveStats {
+                reason: ConvergedReason::DivergedBreakdown,
+                iterations: it,
+                b_norm: bnorm,
+                final_residual: rnorm,
+                history,
+            });
+        }
+        let alpha = rz / pw;
+        log.timed("VecAXPY", 4.0 * x.local().len() as f64, || -> Result<()> {
+            x.axpy(alpha, &p)?;
+            r.axpy(-alpha, &w)?;
+            Ok(())
+        })?;
+        rnorm = norm2(&r, comm, log)?;
+        it += 1;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+        // z = M⁻¹ r; beta = (r,z)_new / (r,z)
+        pcapply(pc, &r, &mut z, log)?;
+        let rz_new = dot(&r, &z, comm, log)?;
+        let beta = rz_new / rz;
+        rz = rz_new;
+        log.timed("VecAYPX", 2.0 * p.local().len() as f64, || p.aypx(beta, &z))?;
+    }
+}
+
+/// r = b − A x (skipping the multiply when x = 0 is knowable is not done —
+/// PETSc also applies the operator).
+fn a_apply_residual(
+    a: &mut dyn Operator,
+    b: &VecMPI,
+    x: &VecMPI,
+    r: &mut VecMPI,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<()> {
+    matmult(a, x, r, comm, log)?;
+    log.timed("VecAYPX", 2.0 * r.local().len() as f64, || {
+        r.aypx(-1.0, b) // r = b - (A x)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::ksp::testutil::{manufactured, max_err};
+    use crate::pc::jacobi::PcJacobi;
+    use crate::pc::PcNone;
+    use crate::vec::ctx::ThreadCtx;
+
+    #[test]
+    fn converges_on_spd_system() {
+        World::run(3, |mut c| {
+            let ctx = ThreadCtx::new(2);
+            let (mut a, x_true, b) = manufactured(120, &mut c, ctx.clone());
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            let stats =
+                solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged(), "{:?}", stats.reason);
+            assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+            // events were logged
+            assert!(log.stats("MatMult").count as usize >= stats.iterations);
+            assert!(log.stats("KSPSolve").count == 1);
+        });
+    }
+
+    #[test]
+    fn jacobi_never_hurts_iterations() {
+        World::run(2, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, _x, b) = manufactured(200, &mut c, ctx.clone());
+            let cfg = KspConfig {
+                rtol: 1e-8,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let mut x1 = b.duplicate();
+            let s_none = solve(&mut a, &PcNone, &b, &mut x1, &cfg, &mut c, &log).unwrap();
+            let pc = PcJacobi::setup(&a, &mut c).unwrap();
+            let mut x2 = b.duplicate();
+            let s_jac = solve(&mut a, &pc, &b, &mut x2, &cfg, &mut c, &log).unwrap();
+            assert!(s_none.converged() && s_jac.converged());
+            // constant diagonal => Jacobi == scaled identity: same count ±1
+            assert!(s_jac.iterations <= s_none.iterations + 1);
+        });
+    }
+
+    #[test]
+    fn monitor_records_decreasing_envelope() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, _x, b) = manufactured(150, &mut c, ctx);
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-9,
+                monitor: true,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert_eq!(stats.history.len(), stats.iterations + 1);
+            let first = stats.history[0];
+            let last = *stats.history.last().unwrap();
+            assert!(last < 1e-6 * first);
+        });
+    }
+
+    #[test]
+    fn indefinite_matrix_breaks_down() {
+        World::run(1, |mut c| {
+            use crate::mat::mpiaij::MatMPIAIJ;
+            use crate::vec::mpi::Layout;
+            let layout = Layout::split(2, 1);
+            // indefinite: eigenvalues +1, -1
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                vec![(0, 0, 1.0), (1, 1, -1.0)],
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let b = crate::vec::mpi::VecMPI::from_local_slice(
+                layout.clone(),
+                0,
+                &[1.0, 1.0],
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let stats =
+                solve(&mut a, &PcNone, &b, &mut x, &KspConfig::default(), &mut c, &log).unwrap();
+            // CG on an indefinite operator must detect p·Ap ≤ 0
+            assert_eq!(stats.reason, ConvergedReason::DivergedBreakdown);
+        });
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        World::run(2, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, _x, b) = manufactured(50, &mut c, ctx.clone());
+            let zero = b.duplicate(); // zeroed
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let stats =
+                solve(&mut a, &PcNone, &zero, &mut x, &KspConfig::default(), &mut c, &log)
+                    .unwrap();
+            assert!(stats.converged());
+            assert_eq!(stats.iterations, 0);
+        });
+    }
+
+    #[test]
+    fn max_it_reached_reports_diverged_its() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, _x, b) = manufactured(400, &mut c, ctx);
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-14,
+                max_it: 2,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert_eq!(stats.reason, ConvergedReason::DivergedIts);
+            assert_eq!(stats.iterations, 2);
+        });
+    }
+}

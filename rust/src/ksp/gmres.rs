@@ -1,0 +1,340 @@
+//! Restarted GMRES(m) with modified Gram-Schmidt Arnoldi and Givens
+//! rotations (the paper's Figure 7/11 solver: "a GMRES solve").
+//!
+//! Left-preconditioned, like PETSc's default: the recurrence residual is
+//! the preconditioned one, and convergence is tested against ‖M⁻¹b‖ — also
+//! PETSc's default behaviour.
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::error::Result;
+use crate::ksp::{
+    check_convergence, matmult, norm2, pcapply, ConvergedReason, KspConfig, Operator, SolveStats,
+};
+use crate::pc::Precond;
+use crate::vec::mpi::VecMPI;
+
+/// Solve `A x = b` with left-preconditioned GMRES(cfg.restart).
+pub fn solve(
+    a: &mut dyn Operator,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    log.begin("KSPSolve");
+    let out = solve_inner(a, pc, b, x, cfg, comm, log);
+    log.end("KSPSolve");
+    out
+}
+
+fn solve_inner(
+    a: &mut dyn Operator,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    let m = cfg.restart.max(1);
+    // ‖M⁻¹ b‖ — the left-preconditioned reference norm.
+    let mut mb = b.duplicate();
+    pcapply(pc, b, &mut mb, log)?;
+    let bnorm = norm2(&mb, comm, log)?;
+
+    let mut history = Vec::new();
+    let mut it = 0usize;
+    let mut rnorm;
+
+    // Preallocate basis and scratch.
+    let mut basis: Vec<VecMPI> = (0..=m).map(|_| b.duplicate()).collect();
+    let mut w = b.duplicate();
+    let mut mw = b.duplicate();
+
+    'outer: loop {
+        // r = M⁻¹ (b − A x)
+        matmult(a, x, &mut w, comm, log)?;
+        w.aypx(-1.0, b)?;
+        pcapply(pc, &w, &mut mw, log)?;
+        rnorm = norm2(&mw, comm, log)?;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(finish(reason, it, bnorm, rnorm, history));
+        }
+
+        // v0 = r / ‖r‖
+        basis[0].copy_from(&mw)?;
+        basis[0].scale(1.0 / rnorm);
+
+        // Hessenberg columns (after rotations: upper triangular R), Givens
+        // pairs, and the rotated RHS g.
+        let mut h: Vec<Vec<f64>> = Vec::with_capacity(m);
+        let mut givens: Vec<(f64, f64)> = Vec::with_capacity(m);
+        let mut g = vec![0.0; m + 1];
+        g[0] = rnorm;
+        let mut cols = 0usize;
+
+        for j in 0..m {
+            // w = M⁻¹ A v_j
+            matmult(a, &basis[j], &mut w, comm, log)?;
+            pcapply(pc, &w, &mut mw, log)?;
+
+            // Modified Gram-Schmidt.
+            let mut col = vec![0.0; j + 2];
+            for (i, vi) in basis.iter().take(j + 1).enumerate() {
+                let hij = crate::ksp::dot(&mw, vi, comm, log)?;
+                col[i] = hij;
+                log.timed("VecAXPY", 2.0 * mw.local().len() as f64, || {
+                    mw.axpy(-hij, vi)
+                })?;
+            }
+            let hj1 = norm2(&mw, comm, log)?;
+            col[j + 1] = hj1;
+
+            // Apply accumulated rotations to the new column.
+            for (i, &(c, s)) in givens.iter().enumerate() {
+                let t = c * col[i] + s * col[i + 1];
+                col[i + 1] = -s * col[i] + c * col[i + 1];
+                col[i] = t;
+            }
+            // New rotation to annihilate col[j+1].
+            let (c, s) = rotation(col[j], col[j + 1]);
+            col[j] = c * col[j] + s * col[j + 1];
+            col[j + 1] = 0.0;
+            let gj = g[j];
+            g[j] = c * gj;
+            g[j + 1] = -s * gj;
+            givens.push((c, s));
+            h.push(col);
+            cols = j + 1;
+            it += 1;
+            rnorm = g[j + 1].abs();
+            if cfg.monitor {
+                history.push(rnorm);
+            }
+
+            let lucky = hj1 == 0.0; // exact breakdown: solution is in span
+            if !lucky {
+                basis[j + 1].copy_from(&mw)?;
+                basis[j + 1].scale(1.0 / hj1);
+            }
+            let done = check_convergence(cfg, rnorm, bnorm, it);
+            if done.is_some() || lucky {
+                update_solution(x, &basis, &h, &g, cols, log)?;
+                let reason = done.unwrap_or(ConvergedReason::ConvergedRtol);
+                if reason.converged() || lucky {
+                    return Ok(finish(
+                        if lucky && !reason.converged() {
+                            ConvergedReason::ConvergedRtol
+                        } else {
+                            reason
+                        },
+                        it,
+                        bnorm,
+                        rnorm,
+                        history,
+                    ));
+                }
+                return Ok(finish(reason, it, bnorm, rnorm, history));
+            }
+        }
+        // Restart: fold the inner solution into x and continue.
+        update_solution(x, &basis, &h, &g, cols, log)?;
+        if it >= cfg.max_it {
+            return Ok(finish(ConvergedReason::DivergedIts, it, bnorm, rnorm, history));
+        }
+        continue 'outer;
+    }
+}
+
+/// Back-substitute `R y = g` and apply `x += V y`.
+fn update_solution(
+    x: &mut VecMPI,
+    basis: &[VecMPI],
+    h: &[Vec<f64>],
+    g: &[f64],
+    cols: usize,
+    log: &EventLog,
+) -> Result<()> {
+    let mut y = vec![0.0; cols];
+    for i in (0..cols).rev() {
+        let mut acc = g[i];
+        for j in (i + 1)..cols {
+            acc -= h[j][i] * y[j];
+        }
+        y[i] = acc / h[i][i];
+    }
+    let refs: Vec<&VecMPI> = basis.iter().take(cols).collect();
+    log.timed("VecMAXPY", 2.0 * cols as f64 * x.local().len() as f64, || {
+        x.maxpy(&y, &refs)
+    })
+}
+
+/// A numerically-stable Givens rotation zeroing `b` in `(a, b)`.
+fn rotation(a: f64, b: f64) -> (f64, f64) {
+    if b == 0.0 {
+        (1.0, 0.0)
+    } else if a == 0.0 {
+        (0.0, 1.0)
+    } else {
+        let r = a.hypot(b);
+        (a / r, b / r)
+    }
+}
+
+fn finish(
+    reason: ConvergedReason,
+    iterations: usize,
+    b_norm: f64,
+    final_residual: f64,
+    history: Vec<f64>,
+) -> SolveStats {
+    SolveStats {
+        reason,
+        iterations,
+        b_norm,
+        final_residual,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::ksp::testutil::{manufactured, max_err};
+    use crate::mat::mpiaij::MatMPIAIJ;
+    use crate::pc::jacobi::PcJacobi;
+    use crate::pc::PcNone;
+    use crate::vec::ctx::ThreadCtx;
+    use crate::vec::mpi::Layout;
+
+    #[test]
+    fn converges_on_spd_system() {
+        World::run(2, |mut c| {
+            let ctx = ThreadCtx::new(2);
+            let (mut a, x_true, b) = manufactured(100, &mut c, ctx);
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                restart: 30,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged(), "{:?}", stats.reason);
+            assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn handles_nonsymmetric_systems() {
+        // Upwind convection-diffusion: nonsymmetric, where CG is invalid.
+        World::run(2, |mut c| {
+            let n = 80;
+            let layout = Layout::split(n, 2);
+            let (lo, hi) = layout.range(c.rank());
+            let mut es = Vec::new();
+            for i in lo..hi {
+                es.push((i, i, 3.0));
+                if i > 0 {
+                    es.push((i, i - 1, -2.0)); // upwind
+                }
+                if i + 1 < n {
+                    es.push((i, i + 1, -0.5));
+                }
+            }
+            let ctx = ThreadCtx::serial();
+            let mut a =
+                MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, &mut c, ctx.clone())
+                    .unwrap();
+            let xs: Vec<f64> = (lo..hi).map(|i| 1.0 + (i % 5) as f64).collect();
+            let x_true =
+                crate::vec::mpi::VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx)
+                    .unwrap();
+            let mut b = x_true.duplicate();
+            a.mult(&x_true, &mut b, &mut c).unwrap();
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged());
+            assert!(max_err(&x, &x_true, &mut c) < 1e-6);
+        });
+    }
+
+    #[test]
+    fn restart_still_converges() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, x_true, b) = manufactured(200, &mut c, ctx);
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            // tiny restart forces several outer cycles
+            let cfg = KspConfig {
+                rtol: 1e-9,
+                restart: 5,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged(), "{:?}", stats.reason);
+            assert!(max_err(&x, &x_true, &mut c) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn jacobi_preconditioning_works() {
+        World::run(2, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, x_true, b) = manufactured(150, &mut c, ctx);
+            let pc = PcJacobi::setup(&a, &mut c).unwrap();
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &pc, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged());
+            assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn identity_converges_in_one() {
+        World::run(1, |mut c| {
+            let layout = Layout::split(10, 1);
+            let es: Vec<_> = (0..10).map(|i| (i, i, 1.0)).collect();
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                es,
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let b = crate::vec::mpi::VecMPI::from_local_slice(
+                layout,
+                0,
+                &(0..10).map(|i| i as f64).collect::<Vec<_>>(),
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let stats =
+                solve(&mut a, &PcNone, &b, &mut x, &KspConfig::default(), &mut c, &log).unwrap();
+            assert!(stats.converged());
+            assert!(stats.iterations <= 1);
+            assert!((x.local().as_slice()[3] - 3.0).abs() < 1e-12);
+        });
+    }
+}

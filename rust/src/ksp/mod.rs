@@ -1,0 +1,266 @@
+//! Krylov subspace methods (paper §V.B).
+//!
+//! "Nearly all the computation in methods such as Conjugate Gradient (CG)
+//! or Generalised Minimal Residual (GMRES) is concentrated within basic
+//! vector operations and sparse matrix-vector multiplications. These are
+//! already threaded in the Mat and Vec classes, and thus methods in the KSP
+//! class will use them automatically." — this module is written exactly
+//! that way: no threading appears below, only Vec/Mat calls.
+//!
+//! Methods: CG, GMRES(m), BiCGStab, Richardson, Chebyshev (the PCGAMG
+//! smoother the paper mentions). All log their events (`MatMult`,
+//! `PCApply`, `KSPSolve`, …) through [`crate::coordinator::EventLog`],
+//! which is where the paper's Figure 7/8/10/11 timings come from.
+
+pub mod cg;
+pub mod gmres;
+pub mod bicgstab;
+pub mod richardson;
+pub mod chebyshev;
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::error::Result;
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::vec::mpi::{Layout, VecMPI};
+use crate::vec::seq::NormType;
+
+/// A distributed linear operator `y = A·x`.
+pub trait Operator {
+    fn apply(&mut self, x: &VecMPI, y: &mut VecMPI, comm: &mut Comm) -> Result<()>;
+    /// Flops per application on this rank (for the event log).
+    fn local_flops(&self) -> f64;
+    fn layout(&self) -> &Layout;
+}
+
+impl Operator for MatMPIAIJ {
+    fn apply(&mut self, x: &VecMPI, y: &mut VecMPI, comm: &mut Comm) -> Result<()> {
+        self.mult(x, y, comm)
+    }
+
+    fn local_flops(&self) -> f64 {
+        self.mult_flops()
+    }
+
+    fn layout(&self) -> &Layout {
+        self.row_layout()
+    }
+}
+
+/// Why a solve stopped (PETSc `KSPConvergedReason`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvergedReason {
+    /// ‖r‖ ≤ rtol·‖b‖.
+    ConvergedRtol,
+    /// ‖r‖ ≤ atol.
+    ConvergedAtol,
+    /// Hit max iterations.
+    DivergedIts,
+    /// ‖r‖ grew past dtol·‖b‖.
+    DivergedDtol,
+    /// Numerical breakdown (zero inner product etc.).
+    DivergedBreakdown,
+}
+
+impl ConvergedReason {
+    pub fn converged(&self) -> bool {
+        matches!(
+            self,
+            ConvergedReason::ConvergedRtol | ConvergedReason::ConvergedAtol
+        )
+    }
+}
+
+/// Solver tolerances and limits (PETSc defaults).
+#[derive(Debug, Clone)]
+pub struct KspConfig {
+    pub rtol: f64,
+    pub atol: f64,
+    pub dtol: f64,
+    pub max_it: usize,
+    /// GMRES restart length.
+    pub restart: usize,
+    /// Record per-iteration residual norms.
+    pub monitor: bool,
+}
+
+impl Default for KspConfig {
+    fn default() -> Self {
+        KspConfig {
+            rtol: 1e-5,
+            atol: 1e-50,
+            dtol: 1e5,
+            max_it: 10_000,
+            restart: 30,
+            monitor: false,
+        }
+    }
+}
+
+/// Result of a solve.
+#[derive(Debug, Clone)]
+pub struct SolveStats {
+    pub reason: ConvergedReason,
+    pub iterations: usize,
+    /// ‖b‖₂ (the convergence reference).
+    pub b_norm: f64,
+    /// Final (true or recurrence) residual norm.
+    pub final_residual: f64,
+    /// Per-iteration residual norms (empty unless `monitor`).
+    pub history: Vec<f64>,
+}
+
+impl SolveStats {
+    pub fn converged(&self) -> bool {
+        self.reason.converged()
+    }
+}
+
+/// The shared convergence test: PETSc's default
+/// `‖r‖ < max(rtol·‖b‖, atol)`, divergence at `‖r‖ > dtol·‖b‖`.
+pub(crate) fn check_convergence(
+    cfg: &KspConfig,
+    rnorm: f64,
+    bnorm: f64,
+    it: usize,
+) -> Option<ConvergedReason> {
+    if rnorm.is_nan() {
+        return Some(ConvergedReason::DivergedBreakdown);
+    }
+    if rnorm <= cfg.atol {
+        return Some(ConvergedReason::ConvergedAtol);
+    }
+    if rnorm <= cfg.rtol * bnorm {
+        return Some(ConvergedReason::ConvergedRtol);
+    }
+    if rnorm > cfg.dtol * bnorm.max(f64::MIN_POSITIVE) {
+        return Some(ConvergedReason::DivergedDtol);
+    }
+    if it >= cfg.max_it {
+        return Some(ConvergedReason::DivergedIts);
+    }
+    None
+}
+
+/// Logged global 2-norm.
+pub(crate) fn norm2(v: &VecMPI, comm: &mut Comm, log: &EventLog) -> Result<f64> {
+    log.timed("VecNorm", 2.0 * v.local().len() as f64, || {
+        v.norm(NormType::Two, comm)
+    })
+}
+
+/// Logged global dot.
+pub(crate) fn dot(a: &VecMPI, b: &VecMPI, comm: &mut Comm, log: &EventLog) -> Result<f64> {
+    log.timed("VecDot", 2.0 * a.local().len() as f64, || a.dot(b, comm))
+}
+
+/// Logged operator application.
+pub(crate) fn matmult(
+    a: &mut dyn Operator,
+    x: &VecMPI,
+    y: &mut VecMPI,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<()> {
+    log.timed("MatMult", a.local_flops(), || a.apply(x, y, comm))
+}
+
+/// Logged preconditioner application.
+pub(crate) fn pcapply(
+    pc: &dyn crate::pc::Precond,
+    r: &VecMPI,
+    z: &mut VecMPI,
+    log: &EventLog,
+) -> Result<()> {
+    log.timed("PCApply", pc.flops(), || pc.apply(r, z))
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::vec::ctx::ThreadCtx;
+    use std::sync::Arc;
+
+    /// Distributed tridiagonal SPD system rows.
+    pub fn tridiag_rows(n: usize, lo: usize, hi: usize) -> Vec<(usize, usize, f64)> {
+        let mut es = Vec::new();
+        for i in lo..hi {
+            es.push((i, i, 2.5));
+            if i > 0 {
+                es.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                es.push((i, i + 1, -1.0));
+            }
+        }
+        es
+    }
+
+    /// Build the matrix, a manufactured solution and its RHS on this rank.
+    pub fn manufactured(
+        n: usize,
+        comm: &mut Comm,
+        ctx: Arc<ThreadCtx>,
+    ) -> (MatMPIAIJ, VecMPI, VecMPI) {
+        let layout = Layout::split(n, comm.size());
+        let (lo, hi) = layout.range(comm.rank());
+        let mut a = MatMPIAIJ::assemble(
+            layout.clone(),
+            layout.clone(),
+            tridiag_rows(n, lo, hi),
+            comm,
+            ctx.clone(),
+        )
+        .unwrap();
+        let xs: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.05).sin() + 0.3).collect();
+        let x_true =
+            VecMPI::from_local_slice(layout.clone(), comm.rank(), &xs, ctx.clone()).unwrap();
+        let mut b = VecMPI::new(layout, comm.rank(), ctx);
+        a.mult(&x_true, &mut b, comm).unwrap();
+        (a, x_true, b)
+    }
+
+    /// ‖x − y‖∞ across ranks.
+    pub fn max_err(x: &VecMPI, y: &VecMPI, comm: &mut Comm) -> f64 {
+        let local = x
+            .local()
+            .as_slice()
+            .iter()
+            .zip(y.local().as_slice())
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()));
+        comm.allreduce(local, f64::max).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convergence_test_ordering() {
+        let cfg = KspConfig {
+            rtol: 1e-3,
+            atol: 1e-9,
+            dtol: 1e3,
+            max_it: 10,
+            ..Default::default()
+        };
+        assert_eq!(check_convergence(&cfg, 1e-10, 1.0, 0), Some(ConvergedReason::ConvergedAtol));
+        assert_eq!(check_convergence(&cfg, 1e-4, 1.0, 0), Some(ConvergedReason::ConvergedRtol));
+        assert_eq!(check_convergence(&cfg, 1e4, 1.0, 0), Some(ConvergedReason::DivergedDtol));
+        assert_eq!(check_convergence(&cfg, 0.5, 1.0, 10), Some(ConvergedReason::DivergedIts));
+        assert_eq!(check_convergence(&cfg, 0.5, 1.0, 3), None);
+        assert_eq!(
+            check_convergence(&cfg, f64::NAN, 1.0, 0),
+            Some(ConvergedReason::DivergedBreakdown)
+        );
+    }
+
+    #[test]
+    fn reasons_classify() {
+        assert!(ConvergedReason::ConvergedRtol.converged());
+        assert!(ConvergedReason::ConvergedAtol.converged());
+        assert!(!ConvergedReason::DivergedIts.converged());
+        assert!(!ConvergedReason::DivergedBreakdown.converged());
+    }
+}

@@ -1,0 +1,113 @@
+//! Richardson iteration `x ← x + ω M⁻¹ (b − A x)` — the simplest KSP, and
+//! the scaffolding under relaxation-based smoothers.
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::error::Result;
+use crate::ksp::{
+    check_convergence, matmult, norm2, pcapply, KspConfig, Operator, SolveStats,
+};
+use crate::pc::Precond;
+use crate::vec::mpi::VecMPI;
+
+/// Solve with damped preconditioned Richardson (`omega` = damping).
+pub fn solve(
+    a: &mut dyn Operator,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    omega: f64,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    log.begin("KSPSolve");
+    let out = solve_inner(a, pc, b, x, omega, cfg, comm, log);
+    log.end("KSPSolve");
+    out
+}
+
+fn solve_inner(
+    a: &mut dyn Operator,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    omega: f64,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    let bnorm = norm2(b, comm, log)?;
+    let mut history = Vec::new();
+    let mut r = b.duplicate();
+    let mut z = b.duplicate();
+    let mut it = 0usize;
+    loop {
+        // r = b − A x
+        matmult(a, x, &mut r, comm, log)?;
+        r.aypx(-1.0, b)?;
+        let rnorm = norm2(&r, comm, log)?;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(SolveStats {
+                reason,
+                iterations: it,
+                b_norm: bnorm,
+                final_residual: rnorm,
+                history,
+            });
+        }
+        pcapply(pc, &r, &mut z, log)?;
+        x.axpy(omega, &z)?;
+        it += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::ksp::testutil::{manufactured, max_err};
+    use crate::ksp::ConvergedReason;
+    use crate::pc::jacobi::PcJacobi;
+    use crate::vec::ctx::ThreadCtx;
+
+    #[test]
+    fn jacobi_richardson_converges_on_dominant_system() {
+        World::run(2, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, x_true, b) = manufactured(60, &mut c, ctx);
+            let pc = PcJacobi::setup(&a, &mut c).unwrap();
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-8,
+                max_it: 100_000,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &pc, &b, &mut x, 1.0, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged(), "{:?}", stats.reason);
+            assert!(max_err(&x, &x_true, &mut c) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn overdamped_diverges() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let (mut a, _x, b) = manufactured(60, &mut c, ctx);
+            let pc = PcJacobi::setup(&a, &mut c).unwrap();
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                dtol: 1e3,
+                ..Default::default()
+            };
+            // omega = 2.5 exceeds the stability bound for Jacobi-Richardson
+            let stats = solve(&mut a, &pc, &b, &mut x, 2.5, &cfg, &mut c, &log).unwrap();
+            assert_eq!(stats.reason, ConvergedReason::DivergedDtol);
+        });
+    }
+}

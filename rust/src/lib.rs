@@ -1,0 +1,60 @@
+//! # mmpetsc — Mixed-mode PETSc reproduction
+//!
+//! A from-scratch reproduction of *"Mixed-mode implementation of PETSc for
+//! scalable linear algebra on multi-core processors"* (Weiland, Mitchell,
+//! Parsons, Gorman, Kramer — 2012): the PETSc Vec/Mat/KSP/PC kernel layer
+//! re-implemented with an OpenMP-style fork-join threading layer and a
+//! simulated-MPI distributed layer, so that hybrid (ranks × threads)
+//! configurations of sparse Krylov solves can be run, measured, and compared
+//! against pure-"MPI" runs — on real host threads up to node scale, and via a
+//! calibrated performance model up to the paper's 16,384-core scale.
+//!
+//! The crate is organised like the paper's system:
+//!
+//! - [`topology`] — hardware model: nodes, processors, UMA regions, modules,
+//!   cores; affinity policies (the `aprun -cc` analogue).
+//! - [`numa`] — first-touch page placement and the NUMA bandwidth model.
+//! - [`thread`] — the "OpenMP" substrate: a fork-join pool with
+//!   `schedule(static)` semantics, pinning, and fork-join overhead models.
+//! - [`comm`] — the "MPI" substrate: simulated ranks, point-to-point and
+//!   collective operations, and an α–β message cost model.
+//! - [`vec`], [`mat`] — the threaded PETSc Vec/Mat classes (Seq + MPI),
+//!   VecScatter, assembly.
+//! - [`ksp`], [`pc`] — Krylov methods and preconditioners.
+//! - [`reorder`] — Reverse Cuthill-McKee and sparsity diagnostics.
+//! - [`matgen`] — Fluidity-like benchmark matrix generators (Table 6).
+//! - [`io`] — PETSc binary and MatrixMarket formats.
+//! - [`sim`] — the performance/energy model used for paper-scale figures.
+//! - [`coordinator`] — the mixed-mode runner, options database and
+//!   PETSc-style event logging.
+//! - [`runtime`] — PJRT client: loads the AOT-compiled JAX/Pallas SpMV
+//!   (HLO text in `artifacts/`) and executes it from the solve path.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod error;
+pub mod util;
+pub mod ptest;
+pub mod topology;
+pub mod numa;
+pub mod thread;
+pub mod comm;
+pub mod vec;
+pub mod mat;
+pub mod reorder;
+pub mod matgen;
+pub mod io;
+pub mod ksp;
+pub mod pc;
+pub mod sim;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+
+pub use error::{Error, Result};
+
+/// The scalar type used throughout the library (PETSc's `PetscScalar`).
+pub type Scalar = f64;
+/// The index type used throughout the library (PETSc's `PetscInt`).
+pub type Index = usize;

@@ -1,0 +1,166 @@
+//! The `mmpetsc` CLI: the leader entrypoint for solves, benchmarks and
+//! machine info.
+//!
+//! ```sh
+//! mmpetsc solve --case saltfinger-pressure --scale 0.02 --ranks 4 --threads 2
+//! mmpetsc model --case flue-pressure --cores 8192 --threads 4
+//! mmpetsc info
+//! ```
+
+use mmpetsc::bench::Table;
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::sim::exec::{simulate, SimConfig};
+use mmpetsc::thread::overhead::Compiler;
+use mmpetsc::topology::presets::{hector_xe6, hector_xe6_node, HECTOR_PHASES};
+use mmpetsc::util::cli::Cli;
+use mmpetsc::util::human;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match cmd.as_str() {
+        "solve" => solve(&argv),
+        "model" => model(&argv),
+        "info" => info(),
+        _ => {
+            println!(
+                "mmpetsc — mixed-mode PETSc reproduction\n\n\
+                 commands:\n  solve   run a real mixed-mode solve (ranks × threads in-process)\n  \
+                 model   price a configuration at paper scale (mode=model)\n  \
+                 info    modelled machine and test-case inventory\n\n\
+                 `mmpetsc <command> --help` for options; see also examples/ and benches/."
+            );
+        }
+    }
+}
+
+fn solve(argv: &[String]) {
+    let cli = Cli::new("mmpetsc solve", "real mixed-mode solve")
+        .opt("case", Some("saltfinger-pressure"), "Table-6 case")
+        .opt("scale", Some("0.02"), "matrix scale (1.0 = paper)")
+        .opt("ranks", Some("4"), "simulated MPI ranks")
+        .opt("threads", Some("2"), "threads per rank")
+        .opt("ksp", Some("cg"), "cg|gmres|bicgstab|richardson|chebyshev")
+        .opt("pc", Some("jacobi"), "none|jacobi|bjacobi|sor|ilu0")
+        .opt("rtol", Some("1e-8"), "relative tolerance");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let case = TestCase::from_name(&a.get_or("case", "saltfinger-pressure")).expect("case");
+    let mut cfg = HybridConfig::default_for(
+        case,
+        a.get_f64("scale").unwrap(),
+        a.get_usize("ranks").unwrap(),
+        a.get_usize("threads").unwrap(),
+    );
+    cfg.ksp_type = a.get_or("ksp", "cg");
+    cfg.pc_type = a.get_or("pc", "jacobi");
+    cfg.ksp.rtol = a.get_f64("rtol").unwrap();
+    let rep = run_case(&cfg).expect("solve failed");
+    println!(
+        "{} {}x{}: converged={} its={} KSPSolve={} MatMult={} msgs={} bytes={}",
+        case.name(),
+        cfg.ranks,
+        cfg.threads,
+        rep.converged,
+        rep.iterations,
+        human::secs(rep.ksp_time),
+        human::secs(rep.matmult_time),
+        rep.messages,
+        human::bytes(rep.bytes as f64),
+    );
+}
+
+fn model(argv: &[String]) {
+    let cli = Cli::new("mmpetsc model", "paper-scale performance model")
+        .opt("case", Some("flue-pressure"), "Table-6 case")
+        .opt("cores", Some("8192"), "total cores")
+        .opt("threads", Some("4"), "threads per rank")
+        .opt("iterations", Some("100"), "Krylov iterations to price");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return;
+        }
+    };
+    let case = TestCase::from_name(&a.get_or("case", "flue-pressure")).expect("case");
+    let cores = a.get_usize("cores").unwrap();
+    let threads = a.get_usize("threads").unwrap();
+    let cluster = hector_xe6();
+    let rep = simulate(
+        &cluster,
+        &SimConfig {
+            case,
+            scale: 1.0,
+            ranks: cores / threads,
+            threads,
+            iterations: a.get_usize("iterations").unwrap(),
+            ksp_type: "cg",
+            compiler: Compiler::Cray803,
+        },
+    );
+    let (diag, scat, off, blas) = rep.per_iter;
+    println!(
+        "mode=model {} cores={cores} ({} ranks x {threads}): MatMult={} KSPSolve={}",
+        case.name(),
+        rep.ranks,
+        human::secs(rep.matmult_time),
+        human::secs(rep.ksp_time)
+    );
+    println!(
+        "  per-iteration: diag={} scatter={} offdiag={} blas1+reduce={}",
+        human::secs(diag),
+        human::secs(scat),
+        human::secs(off),
+        human::secs(blas)
+    );
+}
+
+fn info() {
+    let node = hector_xe6_node();
+    println!(
+        "modelled node: {} — {} cores, {} UMA regions, peak {} / {}\n",
+        node.name,
+        node.cores_per_node(),
+        node.uma_regions(),
+        human::gbs(node.node_peak_bw()),
+        human::flops(node.node_peak_flops()),
+    );
+    let mut t1 = Table::new(
+        "Table 1: HECToR evolution",
+        &["period", "cores", "cores/proc", "GHz", "GB/node", "GB/core"],
+    );
+    for p in HECTOR_PHASES {
+        t1.row(&[
+            p.period.to_string(),
+            human::count(p.total_cores as u64),
+            p.cores_per_processor.to_string(),
+            format!("{:.1}", p.clock_ghz),
+            format!("{:.0}", p.memory_per_node_gb),
+            format!("{:.1}", p.memory_per_core_gb),
+        ]);
+    }
+    t1.print();
+    let mut t6 = Table::new(
+        "Table 6: test matrices (paper sizes)",
+        &["case", "matrix", "rows", "nnz", "nnz/row"],
+    );
+    for c in TestCase::ALL {
+        let (rows, nnz) = c.paper_size();
+        let (tc, m) = c.paper_label();
+        t6.row(&[
+            tc.to_string(),
+            m.to_string(),
+            human::count(rows as u64),
+            human::count(nnz as u64),
+            format!("{:.1}", nnz as f64 / rows as f64),
+        ]);
+    }
+    t6.print();
+}

@@ -1,0 +1,312 @@
+//! `MatSeqBAIJ` — block CSR storage (paper §V.A's "block storage").
+//!
+//! For vector-valued FEM fields (the paper's velocity matrices carry 2–3
+//! dof per mesh node), storing dense `bs × bs` blocks amortises the index
+//! per block and keeps the per-node coupling contiguous. The threaded
+//! mat-vec partitions *block* rows under the same static paging contract.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mat::csr::{MatBuilder, MatSeqAIJ};
+use crate::vec::ctx::ThreadCtx;
+
+/// Block-CSR matrix with square `bs × bs` dense blocks.
+pub struct MatSeqBAIJ {
+    /// Block rows/cols.
+    brows: usize,
+    bcols: usize,
+    bs: usize,
+    block_ptr: Vec<usize>,
+    block_col: Vec<usize>,
+    /// Block values, row-major within each block: `blocks[k][r * bs + c]`.
+    blocks: Vec<f64>,
+    ctx: Arc<ThreadCtx>,
+}
+
+struct RawMut(*mut f64);
+unsafe impl Send for RawMut {}
+unsafe impl Sync for RawMut {}
+impl RawMut {
+    #[inline]
+    fn ptr(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// Builder accumulating block triplets.
+pub struct BaijBuilder {
+    brows: usize,
+    bcols: usize,
+    bs: usize,
+    entries: Vec<(usize, usize, Vec<f64>)>,
+}
+
+impl BaijBuilder {
+    pub fn new(brows: usize, bcols: usize, bs: usize) -> BaijBuilder {
+        assert!(bs >= 1);
+        BaijBuilder {
+            brows,
+            bcols,
+            bs,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Add a dense block at block position (bi, bj), row-major, ADD_VALUES.
+    pub fn add_block(&mut self, bi: usize, bj: usize, block: &[f64]) -> Result<()> {
+        if bi >= self.brows || bj >= self.bcols {
+            return Err(Error::IndexOutOfRange {
+                index: if bi >= self.brows { bi } else { bj },
+                range: (0, if bi >= self.brows { self.brows } else { self.bcols }),
+                context: "BaijBuilder::add_block".into(),
+            });
+        }
+        if block.len() != self.bs * self.bs {
+            return Err(Error::size_mismatch(format!(
+                "block has {} entries, bs^2 = {}",
+                block.len(),
+                self.bs * self.bs
+            )));
+        }
+        self.entries.push((bi, bj, block.to_vec()));
+        Ok(())
+    }
+
+    pub fn assemble(mut self, ctx: Arc<ThreadCtx>) -> MatSeqBAIJ {
+        self.entries.sort_by_key(|&(i, j, _)| (i, j));
+        let bs2 = self.bs * self.bs;
+        let mut block_ptr = vec![0usize; self.brows + 1];
+        let mut block_col = Vec::new();
+        let mut blocks: Vec<f64> = Vec::new();
+        for (i, j, b) in self.entries {
+            let dup = block_ptr[i + 1] == block_col.len()
+                && block_ptr[i] < block_col.len()
+                && block_col.last() == Some(&j);
+            if dup {
+                let base = blocks.len() - bs2;
+                for (dst, src) in blocks[base..].iter_mut().zip(&b) {
+                    *dst += src;
+                }
+            } else {
+                block_col.push(j);
+                blocks.extend_from_slice(&b);
+                block_ptr[i + 1] = block_col.len();
+            }
+        }
+        for i in 1..=self.brows {
+            if block_ptr[i] < block_ptr[i - 1] {
+                block_ptr[i] = block_ptr[i - 1];
+            }
+        }
+        MatSeqBAIJ {
+            brows: self.brows,
+            bcols: self.bcols,
+            bs: self.bs,
+            block_ptr,
+            block_col,
+            blocks,
+            ctx,
+        }
+    }
+}
+
+impl MatSeqBAIJ {
+    pub fn rows(&self) -> usize {
+        self.brows * self.bs
+    }
+
+    pub fn cols(&self) -> usize {
+        self.bcols * self.bs
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.bs
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.block_col.len()
+    }
+
+    /// Scalar nonzeros (counting full blocks, as PETSc does).
+    pub fn nnz(&self) -> usize {
+        self.nnz_blocks() * self.bs * self.bs
+    }
+
+    /// Threaded `y = A·x`, partitioned by block rows.
+    pub fn mult_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.cols() || y.len() != self.rows() {
+            return Err(Error::size_mismatch("BAIJ MatMult shapes"));
+        }
+        let bs = self.bs;
+        let bs2 = bs * bs;
+        let raw = RawMut(y.as_mut_ptr());
+        self.ctx.for_range(self.brows, |_t, lo, hi| {
+            for bi in lo..hi {
+                // accumulate the block row into a small local buffer
+                let mut acc = [0.0f64; 16]; // bs ≤ 4 fast path
+                let mut acc_v;
+                let acc: &mut [f64] = if bs <= 4 {
+                    &mut acc[..bs]
+                } else {
+                    acc_v = vec![0.0; bs];
+                    &mut acc_v
+                };
+                for k in self.block_ptr[bi]..self.block_ptr[bi + 1] {
+                    let bj = self.block_col[k];
+                    let blk = &self.blocks[k * bs2..(k + 1) * bs2];
+                    let xs = &x[bj * bs..(bj + 1) * bs];
+                    for r in 0..bs {
+                        let mut s = 0.0;
+                        for c in 0..bs {
+                            s += blk[r * bs + c] * xs[c];
+                        }
+                        acc[r] += s;
+                    }
+                }
+                // SAFETY: disjoint block rows.
+                for (r, &v) in acc.iter().enumerate() {
+                    unsafe { *raw.ptr().add(bi * bs + r) = v };
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// Expand to scalar AIJ (for cross-validation and interop).
+    pub fn to_aij(&self) -> MatSeqAIJ {
+        let bs = self.bs;
+        let bs2 = bs * bs;
+        let mut b = MatBuilder::new(self.rows(), self.cols());
+        for bi in 0..self.brows {
+            for k in self.block_ptr[bi]..self.block_ptr[bi + 1] {
+                let bj = self.block_col[k];
+                let blk = &self.blocks[k * bs2..(k + 1) * bs2];
+                for r in 0..bs {
+                    for c in 0..bs {
+                        let v = blk[r * bs + c];
+                        if v != 0.0 {
+                            b.add(bi * bs + r, bj * bs + c, v).unwrap();
+                        }
+                    }
+                }
+            }
+        }
+        b.assemble(self.ctx.clone())
+    }
+}
+
+impl std::fmt::Debug for MatSeqBAIJ {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MatSeqBAIJ({}x{}, bs={}, {} blocks)",
+            self.rows(),
+            self.cols(),
+            self.bs,
+            self.nnz_blocks()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::close;
+    use crate::util::rng::XorShift64;
+
+    fn ctx() -> Arc<ThreadCtx> {
+        ThreadCtx::new(3)
+    }
+
+    fn random_baij(brows: usize, bs: usize, seed: u64) -> MatSeqBAIJ {
+        let mut rng = XorShift64::new(seed);
+        let mut b = BaijBuilder::new(brows, brows, bs);
+        for bi in 0..brows {
+            // diagonal block + 2 random off-blocks
+            let blk: Vec<f64> = (0..bs * bs).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            b.add_block(bi, bi, &blk).unwrap();
+            for _ in 0..2 {
+                let bj = rng.below(brows);
+                let blk: Vec<f64> = (0..bs * bs).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                b.add_block(bi, bj, &blk).unwrap();
+            }
+        }
+        b.assemble(ctx())
+    }
+
+    #[test]
+    fn matches_expanded_aij() {
+        for bs in [1usize, 2, 3, 5] {
+            let a = random_baij(17, bs, bs as u64);
+            let aij = a.to_aij();
+            let n = a.cols();
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).cos()).collect();
+            let mut y1 = vec![0.0; n];
+            let mut y2 = vec![0.0; n];
+            a.mult_slices(&x, &mut y1).unwrap();
+            aij.mult_slices(&x, &mut y2).unwrap();
+            for (g, w) in y1.iter().zip(&y2) {
+                assert!(close(*g, *w, 1e-12).is_ok(), "bs={bs}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_blocks_accumulate() {
+        let mut b = BaijBuilder::new(2, 2, 2);
+        b.add_block(0, 0, &[1.0, 0.0, 0.0, 1.0]).unwrap();
+        b.add_block(0, 0, &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        let a = b.assemble(ctx());
+        assert_eq!(a.nnz_blocks(), 1);
+        let aij = a.to_aij();
+        assert_eq!(aij.get(0, 0), 2.0);
+        assert_eq!(aij.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn builder_validates() {
+        let mut b = BaijBuilder::new(2, 2, 2);
+        assert!(b.add_block(2, 0, &[0.0; 4]).is_err());
+        assert!(b.add_block(0, 0, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn threaded_equals_serial() {
+        let a_ser = {
+            let mut b = BaijBuilder::new(40, 40, 3);
+            for i in 0..40 {
+                let blk: Vec<f64> = (0..9).map(|k| (i * 9 + k) as f64 * 0.01).collect();
+                b.add_block(i, i, &blk).unwrap();
+                if i > 0 {
+                    b.add_block(i, i - 1, &blk).unwrap();
+                }
+            }
+            b.assemble(ThreadCtx::serial())
+        };
+        let a_par = {
+            let mut b = BaijBuilder::new(40, 40, 3);
+            for i in 0..40 {
+                let blk: Vec<f64> = (0..9).map(|k| (i * 9 + k) as f64 * 0.01).collect();
+                b.add_block(i, i, &blk).unwrap();
+                if i > 0 {
+                    b.add_block(i, i - 1, &blk).unwrap();
+                }
+            }
+            b.assemble(ctx())
+        };
+        let x: Vec<f64> = (0..120).map(|i| 1.0 + (i % 5) as f64).collect();
+        let mut y1 = vec![0.0; 120];
+        let mut y2 = vec![0.0; 120];
+        a_ser.mult_slices(&x, &mut y1).unwrap();
+        a_par.mult_slices(&x, &mut y2).unwrap();
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = random_baij(4, 2, 1);
+        let mut y = vec![0.0; 7];
+        assert!(a.mult_slices(&vec![0.0; 8], &mut y).is_err());
+    }
+}

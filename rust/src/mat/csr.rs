@@ -1,0 +1,785 @@
+//! `MatSeqAIJ` — sequential CSR storage (PETSc's default AIJ format) with
+//! threaded kernels.
+//!
+//! The matrix is **paged by rows** (paper §VI.A, Figure 3): the thread that
+//! owns row chunk `[lo, hi)` under the static schedule first-touches the
+//! `row_ptr`, `cols` and `vals` entries of those rows, so the sparse
+//! matrix–vector multiply streams its matrix data from local memory.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::numa::page::PageMap;
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::seq::VecSeq;
+
+/// Triplet-based builder (PETSc `MatSetValues` + `MatAssembly` for the
+/// sequential case).
+#[derive(Debug, Clone)]
+pub struct MatBuilder {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl MatBuilder {
+    pub fn new(rows: usize, cols: usize) -> MatBuilder {
+        MatBuilder {
+            rows,
+            cols,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Insert (adds to any existing value at (i,j), PETSc `ADD_VALUES`).
+    pub fn add(&mut self, i: usize, j: usize, v: f64) -> Result<()> {
+        if i >= self.rows || j >= self.cols {
+            return Err(Error::IndexOutOfRange {
+                index: if i >= self.rows { i } else { j },
+                range: (0, if i >= self.rows { self.rows } else { self.cols }),
+                context: "MatBuilder::add".into(),
+            });
+        }
+        self.entries.push((i, j, v));
+        Ok(())
+    }
+
+    /// Compress to CSR, summing duplicates, dropping explicit zeros is NOT
+    /// done (PETSc keeps them).
+    pub fn assemble(mut self, ctx: Arc<ThreadCtx>) -> MatSeqAIJ {
+        self.entries
+            .sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        let mut cols = Vec::with_capacity(self.entries.len());
+        let mut vals = Vec::with_capacity(self.entries.len());
+        for &(i, j, v) in &self.entries {
+            // Duplicate (i, j) iff the last emitted entry belongs to row i
+            // (row_ptr[i+1] tracks the running end of row i) and has col j.
+            let is_dup = row_ptr[i + 1] == cols.len()
+                && row_ptr[i] < cols.len()
+                && cols.last() == Some(&j);
+            if is_dup {
+                *vals.last_mut().unwrap() += v;
+            } else {
+                cols.push(j);
+                vals.push(v);
+                row_ptr[i + 1] = cols.len();
+            }
+        }
+        // Fill empty-row gaps: row_ptr must be non-decreasing.
+        for i in 1..=self.rows {
+            if row_ptr[i] < row_ptr[i - 1] {
+                row_ptr[i] = row_ptr[i - 1];
+            }
+        }
+        MatSeqAIJ::from_csr(self.rows, self.cols, row_ptr, cols, vals, ctx).unwrap()
+    }
+}
+
+/// Sequential CSR matrix.
+pub struct MatSeqAIJ {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    vals: Vec<f64>,
+    /// Page placement of `vals` (the dominant array), by row chunk.
+    pages: PageMap,
+    ctx: Arc<ThreadCtx>,
+    /// Row partition for threads: either the static row schedule (paper) or
+    /// an nnz-balanced partition (ablation).
+    partition: Vec<(usize, usize)>,
+}
+
+struct RawMut(*mut f64);
+unsafe impl Send for RawMut {}
+unsafe impl Sync for RawMut {}
+impl RawMut {
+    /// Accessor so closures capture the (Sync) wrapper, not the raw field.
+    #[inline]
+    fn ptr(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+impl MatSeqAIJ {
+    /// Wrap raw CSR arrays. Validates the structure.
+    pub fn from_csr(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        vals: Vec<f64>,
+        ctx: Arc<ThreadCtx>,
+    ) -> Result<MatSeqAIJ> {
+        if row_ptr.len() != rows + 1 {
+            return Err(Error::Format(format!(
+                "row_ptr length {} != rows+1 = {}",
+                row_ptr.len(),
+                rows + 1
+            )));
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != col_idx.len() {
+            return Err(Error::Format("row_ptr endpoints invalid".into()));
+        }
+        if col_idx.len() != vals.len() {
+            return Err(Error::Format("col_idx/vals length mismatch".into()));
+        }
+        if row_ptr.windows(2).any(|w| w[1] < w[0]) {
+            return Err(Error::Format("row_ptr not monotone".into()));
+        }
+        if col_idx.iter().any(|&c| c >= cols) {
+            return Err(Error::Format("column index out of range".into()));
+        }
+        let mut m = MatSeqAIJ {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            vals,
+            pages: PageMap::new(0, 8),
+            ctx,
+            partition: Vec::new(),
+        };
+        m.partition = (0..m.ctx.nthreads())
+            .map(|t| m.ctx.chunk(rows, t))
+            .collect();
+        m.page_by_rows();
+        Ok(m)
+    }
+
+    /// First-touch the value/column arrays by row chunk (paper Figure 3:
+    /// "we page the matrix data by rows"). On the host this re-writes the
+    /// arrays in parallel; in the model it records page ownership.
+    fn page_by_rows(&mut self) {
+        let nnz = self.vals.len();
+        let mut pages = PageMap::new(nnz, 8);
+        let part = self.partition.clone();
+        let row_ptr = &self.row_ptr;
+        let raw = RawMut(self.vals.as_mut_ptr());
+        let ctx = self.ctx.clone();
+        ctx.for_range_paging(part.len(), |tid, _lo, _hi| {
+            // One "iteration" per thread: touch this thread's row chunk.
+            let (rlo, rhi) = part[tid];
+            let (elo, ehi) = (row_ptr[rlo], row_ptr[rhi]);
+            if elo < ehi {
+                // SAFETY: per-thread nnz ranges are disjoint.
+                let chunk =
+                    unsafe { std::slice::from_raw_parts_mut(raw.ptr().add(elo), ehi - elo) };
+                let mut acc = 0.0;
+                for v in chunk.iter() {
+                    acc += *v; // read-touch (values already set)
+                }
+                std::hint::black_box(acc);
+            }
+        });
+        for (tid, &(rlo, rhi)) in part.iter().enumerate() {
+            let (elo, ehi) = (row_ptr[rlo], row_ptr[rhi]);
+            pages.touch_range(elo, ehi.max(elo), self.ctx.thread_uma(tid));
+        }
+        self.pages = pages;
+    }
+
+    /// Switch to an nnz-balanced thread partition (ablation vs the paper's
+    /// plain row-static schedule; helps strongly imbalanced rows).
+    pub fn balance_partition_by_nnz(&mut self) {
+        let t = self.ctx.nthreads();
+        let nnz = self.col_idx.len();
+        let target = nnz.div_ceil(t).max(1);
+        let mut part = Vec::with_capacity(t);
+        let mut row = 0;
+        for _ in 0..t {
+            let lo = row;
+            let start_nnz = self.row_ptr[lo];
+            while row < self.rows && self.row_ptr[row + 1] - start_nnz < target {
+                row += 1;
+            }
+            if row < self.rows && lo == row {
+                row += 1; // at least one row per non-empty chunk
+            }
+            part.push((lo, row));
+        }
+        part.last_mut().unwrap().1 = self.rows;
+        self.partition = part;
+        self.page_by_rows();
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn ctx(&self) -> &Arc<ThreadCtx> {
+        &self.ctx
+    }
+
+    pub fn pages(&self) -> &PageMap {
+        &self.pages
+    }
+
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    pub fn col_idx(&self) -> &[usize] {
+        &self.col_idx
+    }
+
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    pub fn partition(&self) -> &[(usize, usize)] {
+        &self.partition
+    }
+
+    /// One row's (cols, vals).
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Entry lookup (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&j) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Serial SpMV over a row range into `y[rlo..rhi]` — the per-thread
+    /// kernel (the library's hottest loop; see EXPERIMENTS.md §Perf).
+    ///
+    /// Bounds checks are hoisted: the CSR invariants (`row_ptr` monotone,
+    /// ends at `nnz`, `col_idx[k] < cols`) are validated once at
+    /// construction in [`MatSeqAIJ::from_csr`], so the unchecked accesses
+    /// below are safe for any matrix that exists.
+    #[inline]
+    fn spmv_rows(&self, x: &[f64], y: &mut [f64], rlo: usize, rhi: usize) {
+        debug_assert!(x.len() >= self.cols && rhi <= self.rows);
+        let vals = self.vals.as_ptr();
+        let cols = self.col_idx.as_ptr();
+        for i in rlo..rhi {
+            let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            // Four independent accumulators break the FP add dependency
+            // chain (gathers dominate, but the extra ILP is measurable).
+            let mut acc0 = 0.0;
+            let mut acc1 = 0.0;
+            let mut acc2 = 0.0;
+            let mut acc3 = 0.0;
+            let mut k = lo;
+            // SAFETY: lo..hi ⊆ 0..nnz and every col_idx < self.cols ≤
+            // x.len(), both validated in from_csr.
+            unsafe {
+                while k + 4 <= hi {
+                    acc0 += *vals.add(k) * *x.get_unchecked(*cols.add(k));
+                    acc1 += *vals.add(k + 1) * *x.get_unchecked(*cols.add(k + 1));
+                    acc2 += *vals.add(k + 2) * *x.get_unchecked(*cols.add(k + 2));
+                    acc3 += *vals.add(k + 3) * *x.get_unchecked(*cols.add(k + 3));
+                    k += 4;
+                }
+                while k < hi {
+                    acc0 += *vals.add(k) * *x.get_unchecked(*cols.add(k));
+                    k += 1;
+                }
+            }
+            y[i - rlo] = (acc0 + acc1) + (acc2 + acc3);
+        }
+    }
+
+    /// MatMult: `y = A·x` (threaded by row partition).
+    pub fn mult(&self, x: &VecSeq, y: &mut VecSeq) -> Result<()> {
+        self.mult_slices(x.as_slice(), y.as_mut_slice())
+    }
+
+    /// Slice-level MatMult (used by MPIAIJ for the ghost part).
+    pub fn mult_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.cols || y.len() != self.rows {
+            return Err(Error::size_mismatch(format!(
+                "MatMult: A is {}x{}, x is {}, y is {}",
+                self.rows,
+                self.cols,
+                x.len(),
+                y.len()
+            )));
+        }
+        let part = &self.partition;
+        let raw = RawMut(y.as_mut_ptr());
+        self.ctx.for_range(part.len().max(1), |tid, _l, _h| {
+            if tid >= part.len() {
+                return;
+            }
+            let (rlo, rhi) = part[tid];
+            if rlo < rhi {
+                // SAFETY: row partitions are disjoint.
+                let yc = unsafe { std::slice::from_raw_parts_mut(raw.ptr().add(rlo), rhi - rlo) };
+                self.spmv_rows(x, yc, rlo, rhi);
+            }
+        });
+        Ok(())
+    }
+
+    /// MatMultAdd: `y += A·x` (threaded).
+    pub fn mult_add_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.cols || y.len() != self.rows {
+            return Err(Error::size_mismatch("MatMultAdd shapes"));
+        }
+        let part = &self.partition;
+        let raw = RawMut(y.as_mut_ptr());
+        self.ctx.for_range(part.len().max(1), |tid, _l, _h| {
+            if tid >= part.len() {
+                return;
+            }
+            let (rlo, rhi) = part[tid];
+            let vals = self.vals.as_ptr();
+            let cols = self.col_idx.as_ptr();
+            for i in rlo..rhi {
+                let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                let mut acc = 0.0;
+                // SAFETY: CSR invariants validated in from_csr (as in
+                // spmv_rows).
+                for k in lo..hi {
+                    unsafe {
+                        acc += *vals.add(k) * *x.get_unchecked(*cols.add(k));
+                    }
+                }
+                // SAFETY: disjoint rows.
+                unsafe { *raw.ptr().add(i) += acc };
+            }
+        });
+        Ok(())
+    }
+
+    /// MatMultTranspose: `y = Aᵀ·x`. Computed with per-thread private
+    /// accumulators (no atomics), reduced at the end.
+    pub fn mult_transpose_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.rows || y.len() != self.cols {
+            return Err(Error::size_mismatch("MatMultTranspose shapes"));
+        }
+        let t = self.ctx.nthreads();
+        let part = &self.partition;
+        let cols = self.cols;
+        let partials: Vec<std::sync::Mutex<Vec<f64>>> =
+            (0..t).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        self.ctx.for_range(part.len().max(1), |tid, _l, _h| {
+            if tid >= part.len() {
+                return;
+            }
+            let mut acc = vec![0.0; cols];
+            let (rlo, rhi) = part[tid];
+            for i in rlo..rhi {
+                let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                let xi = x[i];
+                for k in lo..hi {
+                    acc[self.col_idx[k]] += self.vals[k] * xi;
+                }
+            }
+            *partials[tid].lock().unwrap() = acc;
+        });
+        y.fill(0.0);
+        for p in partials {
+            let acc = p.into_inner().unwrap();
+            if !acc.is_empty() {
+                for (yi, ai) in y.iter_mut().zip(&acc) {
+                    *yi += ai;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// MatGetDiagonal (threaded).
+    pub fn get_diagonal(&self, d: &mut VecSeq) -> Result<()> {
+        if d.len() != self.rows.min(self.cols) && d.len() != self.rows {
+            return Err(Error::size_mismatch("MatGetDiagonal"));
+        }
+        let raw = RawMut(d.as_mut_slice().as_mut_ptr());
+        self.ctx.for_range(self.rows, |_tid, lo, hi| {
+            for i in lo..hi {
+                // SAFETY: disjoint chunks.
+                unsafe { *raw.ptr().add(i) = self.get(i, i) };
+            }
+        });
+        Ok(())
+    }
+
+    /// MatScale: `A *= a` (threaded over the value array by row chunk).
+    pub fn scale(&mut self, a: f64) {
+        let part = self.partition.clone();
+        let row_ptr = &self.row_ptr;
+        let raw = RawMut(self.vals.as_mut_ptr());
+        self.ctx.for_range(part.len().max(1), |tid, _l, _h| {
+            if tid >= part.len() {
+                return;
+            }
+            let (rlo, rhi) = part[tid];
+            let (elo, ehi) = (row_ptr[rlo], row_ptr[rhi]);
+            for k in elo..ehi {
+                // SAFETY: disjoint nnz ranges.
+                unsafe { *raw.ptr().add(k) *= a };
+            }
+        });
+    }
+
+    /// MatDiagonalScale: `A = diag(l) · A · diag(r)` (either side optional).
+    pub fn diagonal_scale(&mut self, l: Option<&[f64]>, r: Option<&[f64]>) -> Result<()> {
+        if let Some(l) = l {
+            if l.len() != self.rows {
+                return Err(Error::size_mismatch("diagonal_scale l"));
+            }
+        }
+        if let Some(r) = r {
+            if r.len() != self.cols {
+                return Err(Error::size_mismatch("diagonal_scale r"));
+            }
+        }
+        let part = self.partition.clone();
+        let row_ptr = &self.row_ptr;
+        let col_idx = &self.col_idx;
+        let raw = RawMut(self.vals.as_mut_ptr());
+        self.ctx.for_range(part.len().max(1), |tid, _l_, _h| {
+            if tid >= part.len() {
+                return;
+            }
+            let (rlo, rhi) = part[tid];
+            for i in rlo..rhi {
+                let li = l.map(|l| l[i]).unwrap_or(1.0);
+                for k in row_ptr[i]..row_ptr[i + 1] {
+                    let rj = r.map(|r| r[col_idx[k]]).unwrap_or(1.0);
+                    // SAFETY: disjoint rows.
+                    unsafe { *raw.ptr().add(k) *= li * rj };
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// MatZeroEntries (keeps the pattern, zeroes values — threaded).
+    pub fn zero_entries(&mut self) {
+        let part = self.partition.clone();
+        let row_ptr = &self.row_ptr;
+        let raw = RawMut(self.vals.as_mut_ptr());
+        self.ctx.for_range(part.len().max(1), |tid, _l, _h| {
+            if tid >= part.len() {
+                return;
+            }
+            let (rlo, rhi) = part[tid];
+            let (elo, ehi) = (row_ptr[rlo], row_ptr[rhi]);
+            if elo < ehi {
+                // SAFETY: disjoint nnz ranges.
+                let chunk =
+                    unsafe { std::slice::from_raw_parts_mut(raw.ptr().add(elo), ehi - elo) };
+                chunk.fill(0.0);
+            }
+        });
+    }
+
+    /// Frobenius norm (threaded reduction).
+    pub fn norm_frobenius(&self) -> f64 {
+        let vals = &self.vals;
+        self.ctx
+            .reduce(
+                vals.len(),
+                0.0,
+                |_t, lo, hi| vals[lo..hi].iter().map(|v| v * v).sum::<f64>(),
+                |a, b| a + b,
+            )
+            .sqrt()
+    }
+
+    /// ∞-norm: max row sum of |a_ij| (threaded over rows).
+    pub fn norm_inf(&self) -> f64 {
+        let m = self;
+        self.ctx.reduce(
+            self.rows,
+            0.0f64,
+            |_t, lo, hi| {
+                let mut best = 0.0f64;
+                for i in lo..hi {
+                    let (elo, ehi) = (m.row_ptr[i], m.row_ptr[i + 1]);
+                    let s: f64 = m.vals[elo..ehi].iter().map(|v| v.abs()).sum();
+                    best = best.max(s);
+                }
+                best
+            },
+            f64::max,
+        )
+    }
+
+    /// Bandwidth: max |i − j| over nonzeros (what RCM minimises, Fig 6).
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for i in 0..self.rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.col_idx[k];
+                bw = bw.max(i.abs_diff(j));
+            }
+        }
+        bw
+    }
+
+    /// Apply a symmetric permutation: `B[p(i), p(j)] = A[i, j]`.
+    /// (`perm[old] = new`.)
+    pub fn permute_symmetric(&self, perm: &[usize]) -> Result<MatSeqAIJ> {
+        if perm.len() != self.rows || self.rows != self.cols {
+            return Err(Error::size_mismatch("permute_symmetric: square only"));
+        }
+        let mut b = MatBuilder::new(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                b.add(perm[i], perm[self.col_idx[k]], self.vals[k])?;
+            }
+        }
+        Ok(b.assemble(self.ctx.clone()))
+    }
+
+    /// Dense row-major copy (testing only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.cols]; self.rows];
+        for i in 0..self.rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                d[i][self.col_idx[k]] += self.vals[k];
+            }
+        }
+        d
+    }
+}
+
+impl std::fmt::Debug for MatSeqAIJ {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MatSeqAIJ({}x{}, nnz={}, threads={})",
+            self.rows,
+            self.cols,
+            self.nnz(),
+            self.ctx.nthreads()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::close;
+    use crate::util::rng::XorShift64;
+
+    fn ctx() -> Arc<ThreadCtx> {
+        ThreadCtx::new(4)
+    }
+
+    /// 1D Laplacian [-1, 2, -1].
+    fn laplacian(n: usize, c: Arc<ThreadCtx>) -> MatSeqAIJ {
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 2.0).unwrap();
+            if i > 0 {
+                b.add(i, i - 1, -1.0).unwrap();
+            }
+            if i + 1 < n {
+                b.add(i, i + 1, -1.0).unwrap();
+            }
+        }
+        b.assemble(c)
+    }
+
+    fn random_csr(rows: usize, cols: usize, per_row: usize, seed: u64, c: Arc<ThreadCtx>) -> MatSeqAIJ {
+        let mut r = XorShift64::new(seed);
+        let mut b = MatBuilder::new(rows, cols);
+        for i in 0..rows {
+            for _ in 0..per_row {
+                b.add(i, r.below(cols), r.range_f64(-1.0, 1.0)).unwrap();
+            }
+        }
+        b.assemble(c)
+    }
+
+    #[test]
+    fn builder_assembles_sorted_dedup() {
+        let mut b = MatBuilder::new(2, 2);
+        b.add(1, 1, 1.0).unwrap();
+        b.add(0, 0, 2.0).unwrap();
+        b.add(1, 1, 3.0).unwrap(); // duplicate accumulates
+        let m = b.assemble(ctx());
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 0), 2.0);
+        assert_eq!(m.get(1, 1), 4.0);
+        assert_eq!(m.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn builder_rejects_out_of_range() {
+        let mut b = MatBuilder::new(2, 2);
+        assert!(b.add(2, 0, 1.0).is_err());
+        assert!(b.add(0, 5, 1.0).is_err());
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut b = MatBuilder::new(4, 4);
+        b.add(0, 0, 1.0).unwrap();
+        b.add(3, 3, 1.0).unwrap();
+        let m = b.assemble(ctx());
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row(1).0.len(), 0);
+        let x = VecSeq::from_slice(&[1.0; 4], ctx());
+        let mut y = VecSeq::new(4, ctx());
+        m.mult(&x, &mut y).unwrap();
+        assert_eq!(y.as_slice(), &[1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn from_csr_validates() {
+        let c = ctx();
+        assert!(MatSeqAIJ::from_csr(2, 2, vec![0, 1], vec![0], vec![1.0], c.clone()).is_err());
+        assert!(
+            MatSeqAIJ::from_csr(2, 2, vec![0, 1, 1], vec![9], vec![1.0], c.clone()).is_err()
+        );
+        assert!(MatSeqAIJ::from_csr(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0; 2], c).is_err());
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = random_csr(101, 73, 5, 42, ctx());
+        let mut rng = XorShift64::new(7);
+        let xs: Vec<f64> = (0..73).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let dense = m.to_dense();
+        let expect: Vec<f64> = dense
+            .iter()
+            .map(|row| row.iter().zip(&xs).map(|(a, b)| a * b).sum())
+            .collect();
+        let x = VecSeq::from_slice(&xs, m.ctx().clone());
+        let mut y = VecSeq::new(101, m.ctx().clone());
+        m.mult(&x, &mut y).unwrap();
+        for (a, b) in y.as_slice().iter().zip(&expect) {
+            assert!(close(*a, *b, 1e-12).is_ok());
+        }
+    }
+
+    #[test]
+    fn spmv_threaded_equals_serial() {
+        let serial = random_csr(500, 500, 7, 3, ThreadCtx::serial());
+        let par = MatSeqAIJ::from_csr(
+            500,
+            500,
+            serial.row_ptr().to_vec(),
+            serial.col_idx().to_vec(),
+            serial.vals().to_vec(),
+            ThreadCtx::new(4),
+        )
+        .unwrap();
+        let xs: Vec<f64> = (0..500).map(|i| (i as f64).sin()).collect();
+        let mut y1 = vec![0.0; 500];
+        let mut y2 = vec![0.0; 500];
+        serial.mult_slices(&xs, &mut y1).unwrap();
+        par.mult_slices(&xs, &mut y2).unwrap();
+        assert_eq!(y1, y2); // identical: same per-row serial accumulation
+    }
+
+    #[test]
+    fn mult_add_accumulates() {
+        let m = laplacian(10, ctx());
+        let x = vec![1.0; 10];
+        let mut y = vec![5.0; 10];
+        m.mult_add_slices(&x, &mut y).unwrap();
+        // Laplacian * ones = [1, 0, ..., 0, 1]
+        assert_eq!(y[0], 6.0);
+        assert_eq!(y[5], 5.0);
+        assert_eq!(y[9], 6.0);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = random_csr(40, 30, 4, 9, ctx());
+        let xs: Vec<f64> = (0..40).map(|i| (i as f64 * 0.3).cos()).collect();
+        let dense = m.to_dense();
+        let mut expect = vec![0.0; 30];
+        for i in 0..40 {
+            for j in 0..30 {
+                expect[j] += dense[i][j] * xs[i];
+            }
+        }
+        let mut y = vec![0.0; 30];
+        m.mult_transpose_slices(&xs, &mut y).unwrap();
+        for (a, b) in y.iter().zip(&expect) {
+            assert!(close(*a, *b, 1e-12).is_ok());
+        }
+    }
+
+    #[test]
+    fn diagonal_scale_norms() {
+        let mut m = laplacian(6, ctx());
+        let mut d = VecSeq::new(6, ctx());
+        m.get_diagonal(&mut d).unwrap();
+        assert!(d.as_slice().iter().all(|&v| v == 2.0));
+        m.scale(2.0);
+        assert_eq!(m.get(0, 0), 4.0);
+        m.diagonal_scale(Some(&[0.5; 6]), None).unwrap();
+        assert_eq!(m.get(0, 0), 2.0);
+        assert!((m.norm_inf() - 4.0).abs() < 1e-14);
+        m.zero_entries();
+        assert_eq!(m.norm_frobenius(), 0.0);
+        assert_eq!(m.nnz(), 16); // pattern kept (3n−2 for tridiagonal)
+    }
+
+    #[test]
+    fn bandwidth_and_permute() {
+        let m = laplacian(8, ctx());
+        assert_eq!(m.bandwidth(), 1);
+        // reverse permutation keeps tridiagonal bandwidth
+        let perm: Vec<usize> = (0..8).rev().collect();
+        let p = m.permute_symmetric(&perm).unwrap();
+        assert_eq!(p.bandwidth(), 1);
+        assert_eq!(p.get(0, 0), 2.0);
+        // a "bad" permutation increases bandwidth
+        let perm = vec![0, 4, 1, 5, 2, 6, 3, 7];
+        let p = m.permute_symmetric(&perm).unwrap();
+        assert!(p.bandwidth() > 1);
+    }
+
+    #[test]
+    fn nnz_balanced_partition_same_result() {
+        // Heavily imbalanced rows: first row dense, rest sparse.
+        let mut b = MatBuilder::new(100, 100);
+        for j in 0..100 {
+            b.add(0, j, 1.0).unwrap();
+        }
+        for i in 1..100 {
+            b.add(i, i, 2.0).unwrap();
+        }
+        let mut m = b.assemble(ctx());
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut y1 = vec![0.0; 100];
+        m.mult_slices(&xs, &mut y1).unwrap();
+        m.balance_partition_by_nnz();
+        // partition boundaries must cover all rows exactly
+        assert_eq!(m.partition().first().unwrap().0, 0);
+        assert_eq!(m.partition().last().unwrap().1, 100);
+        let mut y2 = vec![0.0; 100];
+        m.mult_slices(&xs, &mut y2).unwrap();
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let m = laplacian(5, ctx());
+        let mut y = vec![0.0; 4];
+        assert!(m.mult_slices(&[0.0; 5], &mut y).is_err());
+        assert!(m.mult_slices(&[0.0; 4], &mut vec![0.0; 5]).is_err());
+        assert!(m.mult_transpose_slices(&[0.0; 4], &mut vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn pages_cover_nnz() {
+        let m = random_csr(200, 200, 6, 1, ctx());
+        assert_eq!(m.pages().len(), m.nnz());
+    }
+}

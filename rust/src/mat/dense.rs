@@ -1,0 +1,289 @@
+//! `MatSeqDense` — dense storage (paper §V.A: "PETSc has support for
+//! compressed row sparse storage (CSR, the default type), dense storage
+//! and block storage"). Row-major, threaded mat-vec by row chunk under the
+//! same static paging contract as AIJ.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::vec::blas1;
+use crate::vec::ctx::ThreadCtx;
+
+/// Dense row-major matrix with threaded kernels.
+pub struct MatSeqDense {
+    rows: usize,
+    cols: usize,
+    /// Row-major data, `rows * cols`.
+    data: Vec<f64>,
+    ctx: Arc<ThreadCtx>,
+}
+
+struct RawMut(*mut f64);
+unsafe impl Send for RawMut {}
+unsafe impl Sync for RawMut {}
+impl RawMut {
+    #[inline]
+    fn ptr(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+impl MatSeqDense {
+    /// Zeroed dense matrix, first-touched by row chunk.
+    pub fn new(rows: usize, cols: usize, ctx: Arc<ThreadCtx>) -> MatSeqDense {
+        let mut data = vec![0.0; rows * cols];
+        let raw = RawMut(data.as_mut_ptr());
+        ctx.for_range_paging(rows, |_t, lo, hi| {
+            // SAFETY: disjoint row chunks.
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(raw.ptr().add(lo * cols), (hi - lo) * cols) };
+            chunk.fill(0.0);
+        });
+        MatSeqDense {
+            rows,
+            cols,
+            data,
+            ctx,
+        }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64], ctx: Arc<ThreadCtx>) -> Result<MatSeqDense> {
+        if data.len() != rows * cols {
+            return Err(Error::size_mismatch(format!(
+                "dense data {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        let mut m = MatSeqDense::new(rows, cols, ctx);
+        m.data.copy_from_slice(data);
+        Ok(m)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) -> Result<()> {
+        if i >= self.rows || j >= self.cols {
+            return Err(Error::IndexOutOfRange {
+                index: if i >= self.rows { i } else { j },
+                range: (0, if i >= self.rows { self.rows } else { self.cols }),
+                context: "MatSeqDense::set".into(),
+            });
+        }
+        self.data[i * self.cols + j] = v;
+        Ok(())
+    }
+
+    /// Threaded `y = A·x` (row-partitioned GEMV).
+    pub fn mult_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.cols || y.len() != self.rows {
+            return Err(Error::size_mismatch("dense MatMult shapes"));
+        }
+        let cols = self.cols;
+        let data = &self.data;
+        let raw = RawMut(y.as_mut_ptr());
+        self.ctx.for_range(self.rows, |_t, lo, hi| {
+            for i in lo..hi {
+                let row = &data[i * cols..(i + 1) * cols];
+                // SAFETY: disjoint rows.
+                unsafe { *raw.ptr().add(i) = blas1::dot(row, x) };
+            }
+        });
+        Ok(())
+    }
+
+    /// Threaded `y = Aᵀ·x` via per-thread partials.
+    pub fn mult_transpose_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.rows || y.len() != self.cols {
+            return Err(Error::size_mismatch("dense MatMultTranspose shapes"));
+        }
+        let t = self.ctx.nthreads();
+        let cols = self.cols;
+        let data = &self.data;
+        let partials: Vec<std::sync::Mutex<Vec<f64>>> =
+            (0..t).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        self.ctx.for_range(self.rows, |tid, lo, hi| {
+            let mut acc = vec![0.0; cols];
+            for i in lo..hi {
+                let xi = x[i];
+                for (j, aij) in data[i * cols..(i + 1) * cols].iter().enumerate() {
+                    acc[j] += aij * xi;
+                }
+            }
+            *partials[tid].lock().unwrap() = acc;
+        });
+        y.fill(0.0);
+        for p in partials {
+            let acc = p.into_inner().unwrap();
+            if !acc.is_empty() {
+                for (yj, aj) in y.iter_mut().zip(&acc) {
+                    *yj += aj;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Threaded Frobenius norm.
+    pub fn norm_frobenius(&self) -> f64 {
+        let data = &self.data;
+        self.ctx
+            .reduce(
+                data.len(),
+                0.0,
+                |_t, lo, hi| blas1::sqnorm(&data[lo..hi]),
+                |a, b| a + b,
+            )
+            .sqrt()
+    }
+
+    /// Dense LU with partial pivoting, solving in place (small systems —
+    /// the GMRES Hessenberg / coarse-grid solves).
+    pub fn lu_solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if self.rows != self.cols || b.len() != self.rows {
+            return Err(Error::size_mismatch("lu_solve shapes"));
+        }
+        let n = self.rows;
+        let mut a = self.data.clone();
+        let mut x = b.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // partial pivot
+            let mut p = k;
+            for i in k + 1..n {
+                if a[piv[i] * n + k].abs() > a[piv[p] * n + k].abs() {
+                    p = i;
+                }
+            }
+            piv.swap(k, p);
+            let pivot = a[piv[k] * n + k];
+            if pivot == 0.0 {
+                return Err(Error::Breakdown(format!("LU: zero pivot at {k}")));
+            }
+            for i in k + 1..n {
+                let l = a[piv[i] * n + k] / pivot;
+                a[piv[i] * n + k] = l;
+                for j in k + 1..n {
+                    let v = a[piv[k] * n + j];
+                    a[piv[i] * n + j] -= l * v;
+                }
+            }
+        }
+        // forward
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = x[piv[i]];
+            for j in 0..i {
+                acc -= a[piv[i] * n + j] * y[j];
+            }
+            y[i] = acc;
+        }
+        // backward
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for j in i + 1..n {
+                acc -= a[piv[i] * n + j] * x[j];
+            }
+            x[i] = acc / a[piv[i] * n + i];
+        }
+        Ok(x)
+    }
+}
+
+impl std::fmt::Debug for MatSeqDense {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MatSeqDense({}x{})", self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::close;
+
+    fn ctx() -> Arc<ThreadCtx> {
+        ThreadCtx::new(3)
+    }
+
+    #[test]
+    fn mult_matches_manual() {
+        let m = MatSeqDense::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], ctx()).unwrap();
+        let mut y = [0.0; 2];
+        m.mult_slices(&[1.0, 1.0, 1.0], &mut y).unwrap();
+        assert_eq!(y, [6.0, 15.0]);
+        let mut z = [0.0; 3];
+        m.mult_transpose_slices(&[1.0, 1.0], &mut z).unwrap();
+        assert_eq!(z, [5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn threaded_equals_serial() {
+        let n = 64;
+        let data: Vec<f64> = (0..n * n).map(|i| ((i * 13 % 101) as f64) - 50.0).collect();
+        let a1 = MatSeqDense::from_rows(n, n, &data, ThreadCtx::serial()).unwrap();
+        let a2 = MatSeqDense::from_rows(n, n, &data, ctx()).unwrap();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let mut y1 = vec![0.0; n];
+        let mut y2 = vec![0.0; n];
+        a1.mult_slices(&x, &mut y1).unwrap();
+        a2.mult_slices(&x, &mut y2).unwrap();
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn lu_solves_exactly() {
+        let a = MatSeqDense::from_rows(3, 3, &[4.0, 1.0, 0.0, 1.0, 4.0, 1.0, 0.0, 1.0, 4.0], ctx())
+            .unwrap();
+        let x_true = [1.0, -2.0, 3.0];
+        let mut b = [0.0; 3];
+        a.mult_slices(&x_true, &mut b).unwrap();
+        let x = a.lu_solve(&b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!(close(*g, *w, 1e-13).is_ok());
+        }
+    }
+
+    #[test]
+    fn lu_pivots_when_needed() {
+        // leading zero forces a pivot swap
+        let a = MatSeqDense::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0], ctx()).unwrap();
+        let x = a.lu_solve(&[2.0, 3.0]).unwrap();
+        assert!(close(x[0], 3.0, 1e-14).is_ok());
+        assert!(close(x[1], 2.0, 1e-14).is_ok());
+    }
+
+    #[test]
+    fn singular_rejected() {
+        let a = MatSeqDense::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0], ctx()).unwrap();
+        assert!(a.lu_solve(&[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn norms_and_accessors() {
+        let mut m = MatSeqDense::new(2, 2, ctx());
+        m.set(0, 0, 3.0).unwrap();
+        m.set(1, 1, 4.0).unwrap();
+        assert!(m.set(2, 0, 1.0).is_err());
+        assert_eq!(m.get(0, 0), 3.0);
+        assert!(close(m.norm_frobenius(), 5.0, 1e-14).is_ok());
+    }
+
+    #[test]
+    fn shape_errors() {
+        let m = MatSeqDense::new(2, 3, ctx());
+        let mut y = [0.0; 2];
+        assert!(m.mult_slices(&[0.0; 2], &mut y).is_err());
+        assert!(MatSeqDense::from_rows(2, 2, &[0.0; 3], ctx()).is_err());
+        assert!(m.lu_solve(&[0.0; 2]).is_err());
+    }
+}

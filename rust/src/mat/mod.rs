@@ -1,0 +1,14 @@
+//! The Mat class: sequential CSR (AIJ) and distributed (MPIAIJ) sparse
+//! matrices with threaded, row-partitioned kernels (paper §V.A, §VI, §VII).
+
+pub mod csr;
+pub mod dense;
+pub mod baij;
+pub mod mpiaij;
+pub mod shell;
+
+pub use baij::{BaijBuilder, MatSeqBAIJ};
+pub use csr::{MatBuilder, MatSeqAIJ};
+pub use dense::MatSeqDense;
+pub use mpiaij::MatMPIAIJ;
+pub use shell::MatShell;

@@ -1,0 +1,521 @@
+//! `MatMPIAIJ` — the distributed sparse matrix (paper §VII, Figures 4–5).
+//!
+//! Each rank owns a contiguous block of rows, stored as two sequential
+//! matrices: the **diagonal block** `A` (columns inside the rank's own
+//! column range, local column indices) and the **off-diagonal block** `B`
+//! (all other columns, *compacted*: `B`'s column `k` corresponds to global
+//! column `garray[k]`, PETSc's `garray`). MatMult is then
+//!
+//! ```text
+//! scatter.begin(x)                 // post ghost sends (overlaps ↓)
+//! y_local  = A · x_local           // threaded, all pages local
+//! ghosts   = scatter.end()
+//! y_local += B · ghosts            // threaded
+//! ```
+//!
+//! exactly the paper's Figure 4(b–d) / Figure 5 decomposition, with the
+//! hybrid version threading both products by row chunk.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::comm::endpoint::Comm;
+use crate::comm::message::{Tag, RESERVED_TAG_BASE};
+use crate::error::{Error, Result};
+use crate::mat::csr::{MatBuilder, MatSeqAIJ};
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::mpi::{Layout, VecMPI};
+use crate::vec::scatter::VecScatter;
+
+const T_STASH: Tag = RESERVED_TAG_BASE + 32;
+
+/// The distributed CSR matrix.
+pub struct MatMPIAIJ {
+    row_layout: Layout,
+    col_layout: Layout,
+    rank: usize,
+    /// Diagonal block (local rows × local cols, local indices).
+    a_diag: MatSeqAIJ,
+    /// Off-diagonal block (local rows × ghost cols, compact indices).
+    b_off: MatSeqAIJ,
+    /// Compact ghost column k ↔ global column `garray[k]` (ascending).
+    garray: Vec<usize>,
+    /// Ghost exchange plan for MatMult.
+    scatter: VecScatter,
+}
+
+impl MatMPIAIJ {
+    /// Collective assembly from global triplets. Entries may reference any
+    /// global row: off-process entries are stashed and shipped to their
+    /// owner, PETSc's `MatSetValues` + `MatAssemblyBegin/End` protocol.
+    pub fn assemble(
+        row_layout: Layout,
+        col_layout: Layout,
+        entries: Vec<(usize, usize, f64)>,
+        comm: &mut Comm,
+        ctx: Arc<ThreadCtx>,
+    ) -> Result<MatMPIAIJ> {
+        let rank = comm.rank();
+        let size = comm.size();
+        if row_layout.size() != size || col_layout.size() != size {
+            return Err(Error::size_mismatch("layout size != comm size"));
+        }
+        let (row_lo, row_hi) = row_layout.range(rank);
+
+        // ---- stash exchange: route entries to their row owners ----------
+        let mut mine: Vec<(usize, usize, f64)> = Vec::new();
+        let mut stash: BTreeMap<usize, Vec<(usize, usize, f64)>> = BTreeMap::new();
+        for (i, j, v) in entries {
+            if j >= col_layout.global_len() {
+                return Err(Error::IndexOutOfRange {
+                    index: j,
+                    range: (0, col_layout.global_len()),
+                    context: "MatSetValues col".into(),
+                });
+            }
+            if i >= row_lo && i < row_hi {
+                mine.push((i, j, v));
+            } else {
+                let owner = row_layout.owner(i)?;
+                stash.entry(owner).or_default().push((i, j, v));
+            }
+        }
+        // Everyone learns who sends to whom (counts), then p2p payloads.
+        let mut counts = vec![0usize; size];
+        for (&dest, es) in &stash {
+            counts[dest] = es.len();
+        }
+        let matrix = comm.allgather(counts)?;
+        for (dest, es) in stash {
+            comm.send(dest, T_STASH, es)?;
+        }
+        for (src, row) in matrix.iter().enumerate() {
+            if row[rank] > 0 {
+                let es: Vec<(usize, usize, f64)> = comm.recv(src, T_STASH)?;
+                mine.extend(es);
+            }
+        }
+
+        // ---- split diag / off-diag, compact ghost columns ----------------
+        let (col_lo, col_hi) = col_layout.range(rank);
+        let local_rows = row_hi - row_lo;
+        let local_cols = col_hi - col_lo;
+        let mut garray: Vec<usize> = mine
+            .iter()
+            .filter(|&&(_, j, _)| j < col_lo || j >= col_hi)
+            .map(|&(_, j, _)| j)
+            .collect();
+        garray.sort_unstable();
+        garray.dedup();
+
+        let mut a_b = MatBuilder::new(local_rows, local_cols);
+        let mut b_b = MatBuilder::new(local_rows, garray.len());
+        for (i, j, v) in mine {
+            debug_assert!(i >= row_lo && i < row_hi, "stash routed to wrong rank");
+            if j >= col_lo && j < col_hi {
+                a_b.add(i - row_lo, j - col_lo, v)?;
+            } else {
+                let k = garray.binary_search(&j).unwrap();
+                b_b.add(i - row_lo, k, v)?;
+            }
+        }
+        let a_diag = a_b.assemble(ctx.clone());
+        let b_off = b_b.assemble(ctx.clone());
+
+        // ---- ghost exchange plan (collective) ----------------------------
+        let scatter = VecScatter::plan(&col_layout, comm, &garray)?;
+
+        Ok(MatMPIAIJ {
+            row_layout,
+            col_layout,
+            rank,
+            a_diag,
+            b_off,
+            garray,
+            scatter,
+        })
+    }
+
+    pub fn row_layout(&self) -> &Layout {
+        &self.row_layout
+    }
+
+    pub fn col_layout(&self) -> &Layout {
+        &self.col_layout
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn global_rows(&self) -> usize {
+        self.row_layout.global_len()
+    }
+
+    pub fn global_cols(&self) -> usize {
+        self.col_layout.global_len()
+    }
+
+    pub fn local_rows(&self) -> usize {
+        self.a_diag.rows()
+    }
+
+    /// Diagonal block (on-process columns).
+    pub fn diag_block(&self) -> &MatSeqAIJ {
+        &self.a_diag
+    }
+
+    /// Off-diagonal block (compacted ghost columns).
+    pub fn offdiag_block(&self) -> &MatSeqAIJ {
+        &self.b_off
+    }
+
+    /// Global columns of the compacted ghost block.
+    pub fn garray(&self) -> &[usize] {
+        &self.garray
+    }
+
+    /// The ghost exchange plan.
+    pub fn scatter(&self) -> &VecScatter {
+        &self.scatter
+    }
+
+    /// Local nnz split as (diag, offdiag) — the balance the hybrid-vs-MPI
+    /// trade-off revolves around (§VII: fewer ranks ⇒ more diag, less
+    /// gather volume).
+    pub fn nnz_split(&self) -> (usize, usize) {
+        (self.a_diag.nnz(), self.b_off.nnz())
+    }
+
+    fn check_vecs(&self, x: &VecMPI, y: &VecMPI) -> Result<()> {
+        if x.layout() != &self.col_layout {
+            return Err(Error::size_mismatch("MatMult: x layout"));
+        }
+        if y.layout() != &self.row_layout {
+            return Err(Error::size_mismatch("MatMult: y layout"));
+        }
+        Ok(())
+    }
+
+    /// Distributed MatMult `y = A·x` with communication/computation overlap.
+    pub fn mult(&mut self, x: &VecMPI, y: &mut VecMPI, comm: &mut Comm) -> Result<()> {
+        self.check_vecs(x, y)?;
+        // 1. Post ghost sends.
+        self.scatter.begin(x, comm)?;
+        // 2. Diagonal product while data is in flight (threaded).
+        self.a_diag.mult(x.local(), y.local_mut())?;
+        // 3. Complete receives; 4. off-diagonal product (threaded).
+        let ghosts = self.scatter.end(comm)?;
+        self.b_off
+            .mult_add_slices(&ghosts, y.local_mut().as_mut_slice())?;
+        Ok(())
+    }
+
+    /// Flops of one MatMult on this rank (2·nnz).
+    pub fn mult_flops(&self) -> f64 {
+        2.0 * (self.a_diag.nnz() + self.b_off.nnz()) as f64
+    }
+
+    /// Distributed MatGetDiagonal.
+    pub fn get_diagonal(&self, d: &mut VecMPI) -> Result<()> {
+        if d.layout() != &self.row_layout {
+            return Err(Error::size_mismatch("MatGetDiagonal layout"));
+        }
+        let (row_lo, _) = self.row_layout.range(self.rank);
+        let (col_lo, col_hi) = self.col_layout.range(self.rank);
+        let out = d.local_mut().as_mut_slice();
+        for i in 0..self.a_diag.rows() {
+            let g = row_lo + i; // global diagonal index
+            out[i] = if g >= col_lo && g < col_hi {
+                self.a_diag.get(i, g - col_lo)
+            } else {
+                // Rectangular layouts: diagonal falls in the ghost block.
+                match self.garray.binary_search(&g) {
+                    Ok(k) => self.b_off.get(i, k),
+                    Err(_) => 0.0,
+                }
+            };
+        }
+        Ok(())
+    }
+
+    /// Global Frobenius norm (collective).
+    pub fn norm_frobenius(&self, comm: &mut Comm) -> Result<f64> {
+        let a = self.a_diag.norm_frobenius();
+        let b = self.b_off.norm_frobenius();
+        let local = a * a + b * b;
+        Ok(comm.allreduce(local, |x, y| x + y)?.sqrt())
+    }
+
+    /// Ghost volume this rank receives per MatMult (elements).
+    pub fn ghost_in(&self) -> usize {
+        self.scatter.ghost_len()
+    }
+}
+
+impl std::fmt::Debug for MatMPIAIJ {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MatMPIAIJ({}x{}, rank {}/{}, local {}x{}, nnz {}+{})",
+            self.global_rows(),
+            self.global_cols(),
+            self.rank,
+            self.row_layout.size(),
+            self.a_diag.rows(),
+            self.a_diag.cols(),
+            self.a_diag.nnz(),
+            self.b_off.nnz()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::ptest::close;
+    use crate::util::rng::XorShift64;
+
+    /// Global 1D Laplacian triplets for rows [lo, hi).
+    fn laplacian_rows(n: usize, lo: usize, hi: usize) -> Vec<(usize, usize, f64)> {
+        let mut es = Vec::new();
+        for i in lo..hi {
+            es.push((i, i, 2.0));
+            if i > 0 {
+                es.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                es.push((i, i + 1, -1.0));
+            }
+        }
+        es
+    }
+
+    #[test]
+    fn assembles_and_splits_blocks() {
+        let n = 20;
+        World::run(4, move |mut c| {
+            let layout = Layout::split(n, 4);
+            let (lo, hi) = layout.range(c.rank());
+            let a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                laplacian_rows(n, lo, hi),
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let (diag, off) = a.nnz_split();
+            // Interior ranks: 5 local rows, tridiagonal: 5*3-2 = 13 local
+            // + 2 couplings to neighbours.
+            if c.rank() == 0 || c.rank() == 3 {
+                assert_eq!(off, 1, "edge ranks couple to one neighbour");
+            } else {
+                assert_eq!(off, 2, "interior ranks couple to two");
+            }
+            assert_eq!(diag + off, a.diag_block().nnz() + a.offdiag_block().nnz());
+            // garray holds exactly the neighbour columns.
+            for &g in a.garray() {
+                assert!(g < lo || g >= hi);
+            }
+        });
+    }
+
+    #[test]
+    fn matmult_matches_serial() {
+        let n = 101;
+        let outs = World::run(3, move |mut c| {
+            let layout = Layout::split(n, 3);
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                laplacian_rows(n, lo, hi),
+                &mut c,
+                ctx.clone(),
+            )
+            .unwrap();
+            let xs: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.1).sin()).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            let mut y = VecMPI::new(layout, c.rank(), ctx);
+            a.mult(&x, &mut y, &mut c).unwrap();
+            y.gather_all(&mut c).unwrap()
+        });
+        // serial reference
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+        let mut expect = vec![0.0; n];
+        for i in 0..n {
+            expect[i] = 2.0 * xs[i]
+                - if i > 0 { xs[i - 1] } else { 0.0 }
+                - if i + 1 < n { xs[i + 1] } else { 0.0 };
+        }
+        for out in outs {
+            for (a, b) in out.iter().zip(&expect) {
+                assert!(close(*a, *b, 1e-13).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn off_process_setvalues_routed() {
+        // Every rank inserts the FULL matrix's entries for row (rank+1)%size
+        // — all off-process. The stash must route them home.
+        let n = 12;
+        World::run(3, move |mut c| {
+            let layout = Layout::split(n, 3);
+            let target = (c.rank() + 1) % 3;
+            let (tlo, thi) = layout.range(target);
+            let es: Vec<(usize, usize, f64)> =
+                (tlo..thi).map(|i| (i, i, (i + 1) as f64)).collect();
+            let a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                es,
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            // Each rank ends up owning its own diagonal entries.
+            let mut d = VecMPI::new(layout.clone(), c.rank(), ThreadCtx::serial());
+            a.get_diagonal(&mut d).unwrap();
+            let (lo, hi) = layout.range(c.rank());
+            let expect: Vec<f64> = (lo..hi).map(|i| (i + 1) as f64).collect();
+            assert_eq!(d.local().as_slice(), &expect[..]);
+        });
+    }
+
+    #[test]
+    fn duplicate_adds_accumulate_across_ranks() {
+        // All ranks add 1.0 to the SAME entry (0, 0).
+        World::run(4, |mut c| {
+            let layout = Layout::split(4, 4);
+            let a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                vec![(0, 0, 1.0)],
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            if c.rank() == 0 {
+                assert_eq!(a.diag_block().get(0, 0), 4.0);
+            }
+        });
+    }
+
+    #[test]
+    fn random_matrix_matches_dense_reference() {
+        let n = 60;
+        // deterministic global entry set, every rank generates the same
+        let gen = move || {
+            let mut rng = XorShift64::new(99);
+            let mut es = Vec::new();
+            for i in 0..n {
+                for _ in 0..4 {
+                    es.push((i, rng.below(n), rng.range_f64(-1.0, 1.0)));
+                }
+                es.push((i, i, 4.0));
+            }
+            es
+        };
+        let outs = World::run(4, move |mut c| {
+            let layout = Layout::split(n, 4);
+            let (lo, hi) = layout.range(c.rank());
+            // each rank contributes only its own rows
+            let es: Vec<_> = gen()
+                .into_iter()
+                .filter(|&(i, _, _)| i >= lo && i < hi)
+                .collect();
+            let ctx = ThreadCtx::new(2);
+            let mut a =
+                MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, &mut c, ctx.clone())
+                    .unwrap();
+            let xs: Vec<f64> = (lo..hi).map(|i| 1.0 + (i % 7) as f64).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            let mut y = VecMPI::new(layout, c.rank(), ctx);
+            a.mult(&x, &mut y, &mut c).unwrap();
+            y.gather_all(&mut c).unwrap()
+        });
+        // dense reference
+        let mut dense = vec![vec![0.0; n]; n];
+        for (i, j, v) in gen() {
+            dense[i][j] += v;
+        }
+        let xs: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        let expect: Vec<f64> = dense
+            .iter()
+            .map(|row| row.iter().zip(&xs).map(|(a, b)| a * b).sum())
+            .collect();
+        for out in outs {
+            for (a, b) in out.iter().zip(&expect) {
+                assert!(close(*a, *b, 1e-12).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_ranks_less_ghost_volume() {
+        // The §VII claim: on the same matrix, fewer ranks ⇒ smaller total
+        // scatter volume.
+        let n = 120;
+        let total_ghosts = |ranks: usize| -> usize {
+            let outs = World::run(ranks, move |mut c| {
+                let layout = Layout::split(n, c.size());
+                let (lo, hi) = layout.range(c.rank());
+                let a = MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout.clone(),
+                    laplacian_rows(n, lo, hi),
+                    &mut c,
+                    ThreadCtx::serial(),
+                )
+                .unwrap();
+                a.ghost_in()
+            });
+            outs.iter().sum()
+        };
+        let g8 = total_ghosts(8);
+        let g2 = total_ghosts(2);
+        assert!(g2 < g8, "2 ranks ghost {g2} vs 8 ranks ghost {g8}");
+    }
+
+    #[test]
+    fn norm_frobenius_global() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(4, 2);
+            let (lo, hi) = layout.range(c.rank());
+            let es: Vec<_> = (lo..hi).map(|i| (i, i, 2.0)).collect();
+            let a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout,
+                es,
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let nf = a.norm_frobenius(&mut c).unwrap();
+            assert!((nf - 4.0).abs() < 1e-14); // sqrt(4 * 2^2)
+        });
+    }
+
+    #[test]
+    fn layout_mismatch_rejected() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(10, 2);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                vec![(0, 0, 1.0)],
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let bad = Layout::split(11, 2);
+            let x = VecMPI::new(bad.clone(), c.rank(), ThreadCtx::serial());
+            let mut y = VecMPI::new(layout, c.rank(), ThreadCtx::serial());
+            assert!(a.mult(&x, &mut y, &mut c).is_err());
+        });
+    }
+}

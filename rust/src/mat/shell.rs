@@ -1,0 +1,63 @@
+//! `MatShell` — a matrix-free operator defined by a closure (PETSc's
+//! MATSHELL). Lets the KSP layer be tested against exact operators and lets
+//! the PJRT runtime expose an AOT-compiled SpMV as an operator.
+
+use crate::error::{Error, Result};
+
+/// A matrix-free square operator `y = A·x` over plain slices.
+pub struct MatShell {
+    n: usize,
+    apply: Box<dyn Fn(&[f64], &mut [f64]) + Send + Sync>,
+}
+
+impl MatShell {
+    pub fn new(n: usize, apply: impl Fn(&[f64], &mut [f64]) + Send + Sync + 'static) -> MatShell {
+        MatShell {
+            n,
+            apply: Box::new(apply),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mult(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.n || y.len() != self.n {
+            return Err(Error::size_mismatch(format!(
+                "MatShell: n={}, x={}, y={}",
+                self.n,
+                x.len(),
+                y.len()
+            )));
+        }
+        (self.apply)(x, y);
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for MatShell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MatShell(n={})", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_shell() {
+        let id = MatShell::new(3, |x, y| y.copy_from_slice(x));
+        let mut y = [0.0; 3];
+        id.mult(&[1.0, 2.0, 3.0], &mut y).unwrap();
+        assert_eq!(y, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn shape_checked() {
+        let id = MatShell::new(3, |x, y| y.copy_from_slice(x));
+        let mut y = [0.0; 2];
+        assert!(id.mult(&[1.0; 3], &mut y).is_err());
+    }
+}

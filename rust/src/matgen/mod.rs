@@ -1,0 +1,17 @@
+//! Benchmark matrix generators — the stand-in for the paper's
+//! Fluidity-extracted matrices (§VIII.A, Table 6).
+//!
+//! The paper's matrices come from proprietary CFD runs we cannot re-run
+//! (repro gate). What the solver and SpMV benchmarks actually depend on is:
+//! size, nnz-per-row density, symmetric positive-definiteness, FEM-mesh
+//! locality (bounded bandwidth after RCM), and the diag/off-diag split
+//! under row partitioning. The generators reproduce those properties:
+//! stencil-based FEM-style operators on structured grids with the paper's
+//! per-case nnz/row densities and aspect ratios, optionally with shuffled
+//! node numbering (to exercise RCM exactly as §VIII.B does).
+
+pub mod stencil;
+pub mod cases;
+
+pub use cases::{generate, generate_rows, TestCase};
+pub use stencil::{stencil_offsets, StencilSpec};

@@ -1,0 +1,23 @@
+//! NUMA memory model: first-touch page placement and the calibrated
+//! bandwidth model (§IV.A of the paper).
+//!
+//! The paper's single-node results are entirely explained by *where pages
+//! live* (first-touch) and *how many threads stream against each memory
+//! bank / HyperTransport link*. We model both explicitly:
+//!
+//! - [`page::PageMap`] records, per 4 KiB page of a simulated allocation,
+//!   the UMA region that first touched it — the Linux first-touch policy as
+//!   an explicit data structure.
+//! - [`bandwidth::BwModel`] prices a set of concurrent memory streams
+//!   (thread UMA → data UMA) using per-bank concurrency curves calibrated to
+//!   the paper's own STREAM measurements (Tables 2 and 3).
+//! - [`stream`] implements the STREAM Triad benchmark twice: a *real* run on
+//!   host threads (used for calibration of the host roofline) and a *model*
+//!   run that regenerates the paper's Tables 2 and 3.
+
+pub mod page;
+pub mod bandwidth;
+pub mod stream;
+
+pub use bandwidth::BwModel;
+pub use page::{PageMap, PAGE_SIZE};

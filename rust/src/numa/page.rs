@@ -1,0 +1,202 @@
+//! First-touch page placement as an explicit data structure.
+//!
+//! Linux places a faulted page on the memory bank of the CPU that first
+//! touches it (§IV.A). PETSc's trick (§VI.A) is that it *zeroes* every
+//! allocated vector and preallocated matrix — so if the zeroing loop runs
+//! under the same OpenMP static schedule as the compute loops, every page
+//! is resident in the UMA region of the thread that will later use it.
+//!
+//! The simulation keeps that bookkeeping explicit: a [`PageMap`] tags each
+//! 4 KiB page of an allocation with its owning UMA region. The threaded
+//! vector/matrix constructors "first-touch" their pages with the static
+//! schedule; the bandwidth model then prices local vs remote streams, and
+//! tests assert the paging contract (compute chunk ⊆ owned pages).
+
+use crate::topology::machine::UmaRegionId;
+
+/// Simulated OS page size in bytes.
+pub const PAGE_SIZE: usize = 4096;
+
+/// Page → UMA-region ownership for one contiguous allocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PageMap {
+    /// Owner of each page; `None` until first touch.
+    owners: Vec<Option<UmaRegionId>>,
+    /// Element size of the allocation this map describes (bytes).
+    elem_size: usize,
+    /// Number of elements.
+    len: usize,
+}
+
+impl PageMap {
+    /// A fresh (unfaulted) allocation of `len` elements of `elem_size` bytes.
+    pub fn new(len: usize, elem_size: usize) -> Self {
+        let bytes = len * elem_size;
+        PageMap {
+            owners: vec![None; bytes.div_ceil(PAGE_SIZE).max(1)],
+            elem_size,
+            len,
+        }
+    }
+
+    /// Number of pages backing the allocation.
+    pub fn pages(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// Number of elements described.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The page index containing element `i`.
+    pub fn page_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.len.max(1));
+        i * self.elem_size / PAGE_SIZE
+    }
+
+    /// First-touch the element range `[lo, hi)` from a thread on `uma`.
+    /// Pages already owned keep their owner (first touch wins), exactly like
+    /// the kernel policy.
+    pub fn touch_range(&mut self, lo: usize, hi: usize, uma: UmaRegionId) {
+        if lo >= hi {
+            return;
+        }
+        let p_lo = self.page_of(lo);
+        let p_hi = self.page_of(hi - 1);
+        for p in p_lo..=p_hi {
+            let o = &mut self.owners[p];
+            if o.is_none() {
+                *o = Some(uma);
+            }
+        }
+    }
+
+    /// Fault *all* pages from one region (serial initialization — the
+    /// "without parallel initialization" row of Table 2).
+    pub fn touch_all(&mut self, uma: UmaRegionId) {
+        if self.len > 0 {
+            self.touch_range(0, self.len, uma);
+        }
+    }
+
+    /// Owner of the page containing element `i` (None = untouched).
+    pub fn owner_of(&self, i: usize) -> Option<UmaRegionId> {
+        self.owners[self.page_of(i)]
+    }
+
+    /// For an element range, the fraction of its bytes resident on `uma`.
+    /// Untouched pages count as non-local (they will fault wherever the
+    /// reader runs, but a *read* of never-written memory is not a case the
+    /// library produces).
+    pub fn local_fraction(&self, lo: usize, hi: usize, uma: UmaRegionId) -> f64 {
+        if lo >= hi {
+            return 1.0;
+        }
+        let p_lo = self.page_of(lo);
+        let p_hi = self.page_of(hi - 1);
+        let total = p_hi - p_lo + 1;
+        let local = (p_lo..=p_hi)
+            .filter(|&p| self.owners[p] == Some(uma))
+            .count();
+        local as f64 / total as f64
+    }
+
+    /// Histogram: bytes per UMA region (untouched pages under key `None`).
+    pub fn residency(&self) -> std::collections::BTreeMap<Option<UmaRegionId>, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for &o in &self.owners {
+            *h.entry(o).or_insert(0) += PAGE_SIZE;
+        }
+        h
+    }
+
+    /// Check the paging contract: every page that chunk `[lo, hi)` reads is
+    /// owned by `uma`, modulo the (at most two) pages shared with adjacent
+    /// chunks at the boundaries.
+    pub fn chunk_is_local(&self, lo: usize, hi: usize, uma: UmaRegionId) -> bool {
+        if lo >= hi {
+            return true;
+        }
+        let p_lo = self.page_of(lo);
+        let p_hi = self.page_of(hi - 1);
+        if p_hi - p_lo < 2 {
+            // chunk smaller than ~2 pages: boundary pages dominate, accept
+            return true;
+        }
+        ((p_lo + 1)..p_hi).all(|p| self.owners[p] == Some(uma))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_count() {
+        let m = PageMap::new(1024, 8); // 8 KiB
+        assert_eq!(m.pages(), 2);
+        let m = PageMap::new(1, 8);
+        assert_eq!(m.pages(), 1);
+        let m = PageMap::new(513, 8); // 4104 bytes -> 2 pages
+        assert_eq!(m.pages(), 2);
+    }
+
+    #[test]
+    fn first_touch_wins() {
+        let mut m = PageMap::new(1024, 8);
+        m.touch_range(0, 512, 0); // page 0
+        m.touch_range(0, 1024, 3); // pages 0..2, page 0 already owned
+        assert_eq!(m.owner_of(0), Some(0));
+        assert_eq!(m.owner_of(600), Some(3));
+    }
+
+    #[test]
+    fn parallel_static_init_distributes() {
+        // 4 threads static-init 65536 elements of 8B = 128 pages: 32 each.
+        let n = 65_536;
+        let mut m = PageMap::new(n, 8);
+        for t in 0..4 {
+            let chunk = n / 4;
+            m.touch_range(t * chunk, (t + 1) * chunk, t);
+        }
+        let res = m.residency();
+        for t in 0..4 {
+            assert_eq!(res[&Some(t)], 32 * PAGE_SIZE, "uma {t}");
+        }
+        assert!(m.chunk_is_local(n / 4, n / 2, 1));
+        assert!(!m.chunk_is_local(n / 4, n / 2, 0));
+    }
+
+    #[test]
+    fn serial_init_lands_on_one_region() {
+        let mut m = PageMap::new(1 << 16, 8);
+        m.touch_all(0);
+        let res = m.residency();
+        assert_eq!(res.len(), 1);
+        assert_eq!(m.local_fraction(0, 1 << 16, 0), 1.0);
+        assert_eq!(m.local_fraction(0, 1 << 16, 1), 0.0);
+    }
+
+    #[test]
+    fn local_fraction_mixed() {
+        let mut m = PageMap::new(1024, 8); // 2 pages
+        m.touch_range(0, 512, 0);
+        m.touch_range(512, 1024, 1);
+        assert_eq!(m.local_fraction(0, 1024, 0), 0.5);
+        assert_eq!(m.local_fraction(0, 1024, 1), 0.5);
+    }
+
+    #[test]
+    fn empty_ranges_safe() {
+        let mut m = PageMap::new(16, 8);
+        m.touch_range(5, 5, 2);
+        assert_eq!(m.owner_of(5), None);
+        assert_eq!(m.local_fraction(3, 3, 0), 1.0);
+        assert!(m.chunk_is_local(2, 2, 0));
+    }
+}

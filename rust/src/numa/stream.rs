@@ -1,0 +1,251 @@
+//! The STREAM Triad benchmark (`a[i] = b[i] + q*c[i]`), in both execution
+//! modes (§IV.A, Tables 2 and 3).
+//!
+//! - **Real mode**: runs the triad on host OS threads, with serial or
+//!   parallel (static-schedule) initialization. On the build host this
+//!   measures the *actual* machine — used to calibrate the cost model's
+//!   host roofline and as the honest counterpart to the paper's numbers.
+//! - **Model mode**: prices the same experiment on a modelled machine
+//!   (HECToR XE6 node) with the calibrated [`BwModel`], regenerating
+//!   Tables 2 and 3.
+
+use std::sync::Barrier;
+
+use crate::numa::bandwidth::{BwModel, Stream};
+use crate::numa::page::PageMap;
+use crate::thread::schedule::static_chunk;
+use crate::topology::machine::MachineTopology;
+use crate::topology::affinity::Placement;
+
+/// Bytes moved per triad element: read b, read c, write a (classic STREAM
+/// counting; 24 B for f64).
+pub const TRIAD_BYTES_PER_ELEM: f64 = 24.0;
+
+/// Result of one triad run.
+#[derive(Debug, Clone)]
+pub struct TriadResult {
+    /// Reported bandwidth, bytes/s (STREAM convention: 24·N / time).
+    pub bandwidth: f64,
+    /// Elapsed seconds for `reps` sweeps (best-of reported, like STREAM).
+    pub seconds: f64,
+    /// Number of elements.
+    pub n: usize,
+    /// Threads used.
+    pub threads: usize,
+    /// Checksum to defeat dead-code elimination and validate the kernel.
+    pub checksum: f64,
+}
+
+/// Real-mode triad on host threads.
+///
+/// `parallel_init` controls first-touch: when true, each thread initializes
+/// (and therefore faults) its own static chunk before the timed sweeps —
+/// the paper's "with parallel initialization" row; when false, thread 0
+/// writes everything first.
+pub fn triad_host(n: usize, threads: usize, parallel_init: bool, reps: usize) -> TriadResult {
+    assert!(threads >= 1 && n >= threads);
+    let q = 3.0f64;
+    let mut a = vec![0.0f64; n];
+    let mut b = vec![0.0f64; n];
+    let mut c = vec![0.0f64; n];
+
+    if parallel_init {
+        // First-touch by the owning thread, same static schedule as compute.
+        std::thread::scope(|s| {
+            let chunks_a = split_static(&mut a, threads);
+            let chunks_b = split_static(&mut b, threads);
+            let chunks_c = split_static(&mut c, threads);
+            for ((ca, cb), cc) in chunks_a.into_iter().zip(chunks_b).zip(chunks_c) {
+                s.spawn(move || {
+                    for x in ca {
+                        *x = 1.0;
+                    }
+                    for x in cb {
+                        *x = 2.0;
+                    }
+                    for x in cc {
+                        *x = 0.5;
+                    }
+                });
+            }
+        });
+    } else {
+        for x in a.iter_mut() {
+            *x = 1.0;
+        }
+        for x in b.iter_mut() {
+            *x = 2.0;
+        }
+        for x in c.iter_mut() {
+            *x = 0.5;
+        }
+    }
+
+    // Timed sweeps: best-of-reps, as STREAM reports.
+    let barrier = Barrier::new(threads);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let chunks_a = split_static(&mut a, threads);
+            let b = &b;
+            let c = &c;
+            let barrier = &barrier;
+            for (t, ca) in chunks_a.into_iter().enumerate() {
+                let (lo, _hi) = static_chunk(n, threads, t);
+                s.spawn(move || {
+                    barrier.wait();
+                    for (i, x) in ca.iter_mut().enumerate() {
+                        *x = b[lo + i] + q * c[lo + i];
+                    }
+                });
+            }
+        });
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    let checksum = a.iter().step_by((n / 64).max(1)).sum();
+    TriadResult {
+        bandwidth: TRIAD_BYTES_PER_ELEM * n as f64 / best,
+        seconds: best,
+        n,
+        threads,
+        checksum,
+    }
+}
+
+/// Split a slice into the same static chunks `static_chunk` prescribes.
+fn split_static<'a, T>(xs: &'a mut [T], threads: usize) -> Vec<&'a mut [T]> {
+    let n = xs.len();
+    let mut out = Vec::with_capacity(threads);
+    let mut rest = xs;
+    let mut consumed = 0;
+    for t in 0..threads {
+        let (lo, hi) = static_chunk(n, threads, t);
+        debug_assert_eq!(lo, consumed);
+        let (chunk, tail) = rest.split_at_mut(hi - lo);
+        out.push(chunk);
+        rest = tail;
+        consumed = hi;
+    }
+    out
+}
+
+/// Model-mode triad on a modelled machine: `placement` gives each thread's
+/// core; the page map is built by serial or parallel first-touch; the
+/// BwModel prices the streams.
+pub fn triad_model(
+    node: &MachineTopology,
+    placement: &Placement,
+    n: usize,
+    parallel_init: bool,
+) -> TriadResult {
+    assert_eq!(placement.cores.len(), 1, "triad is single-'rank'");
+    let cores = &placement.cores[0];
+    let threads = cores.len();
+    let model = BwModel::for_machine(node);
+
+    // Three arrays of n f64 — build one shared page map per array; triad
+    // touches all three with the same schedule, so one map suffices.
+    let mut pages = PageMap::new(n, 8);
+    if parallel_init {
+        for (t, &core) in cores.iter().enumerate() {
+            let (lo, hi) = static_chunk(n, threads, t);
+            pages.touch_range(lo, hi, node.uma_of_core(core));
+        }
+    } else {
+        pages.touch_all(node.uma_of_core(cores[0]));
+    }
+
+    // Each thread's triad traffic streams against the bank(s) owning its
+    // chunk; with static paging that is one bank per thread.
+    let streams: Vec<Stream> = cores
+        .iter()
+        .enumerate()
+        .map(|(t, &core)| {
+            let (lo, hi) = static_chunk(n, threads, t);
+            // Sample mid-chunk: the first page of a chunk is shared with the
+            // neighbouring thread and may have been faulted by it.
+            let mid = (lo + hi.max(lo + 1) - 1) / 2;
+            let data_uma = pages.owner_of(mid.min(n - 1)).unwrap_or(0);
+            Stream {
+                thread_uma: node.uma_of_core(core),
+                data_uma,
+            }
+        })
+        .collect();
+    let bytes_per_stream = TRIAD_BYTES_PER_ELEM * (n as f64 / threads as f64);
+    let seconds = model.region_time(bytes_per_stream, &streams);
+    TriadResult {
+        bandwidth: model.reported_bw(bytes_per_stream, &streams),
+        seconds,
+        n,
+        threads,
+        checksum: f64::NAN, // model mode computes no data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::affinity::{parse_cc_list, AffinityPolicy};
+    use crate::topology::presets::hector_xe6_node;
+
+    #[test]
+    fn host_triad_computes_correctly() {
+        let r = triad_host(1 << 14, 2, true, 1);
+        // a[i] = 2.0 + 3*0.5 = 3.5 everywhere.
+        let expected = 3.5 * (((1 << 14) as f64) / ((1 << 14) as f64 / 64.0).floor()).round();
+        // checksum sampled every n/64 elements -> 64 samples of 3.5 = 224.
+        assert!((r.checksum - 224.0).abs() < 1e-9, "checksum {} vs {expected}", r.checksum);
+        assert!(r.bandwidth > 0.0);
+    }
+
+    #[test]
+    fn host_triad_single_thread() {
+        let r = triad_host(4096, 1, false, 1);
+        assert_eq!(r.threads, 1);
+        assert!(r.seconds > 0.0);
+    }
+
+    #[test]
+    fn model_reproduces_table2() {
+        let node = hector_xe6_node();
+        let p = Placement::compute(&node, 1, 32, &AffinityPolicy::Packed).unwrap();
+        let with = triad_model(&node, &p, 1_000_000_000, true);
+        let without = triad_model(&node, &p, 1_000_000_000, false);
+        // Paper: 43.49 vs 21.80 GB/s; times 0.55s vs 1.10s (for 24 GB).
+        assert!((with.bandwidth - 43.49e9).abs() / 43.49e9 < 0.02);
+        assert!((without.bandwidth - 21.8e9).abs() / 21.8e9 < 0.02);
+        let speedup = with.bandwidth / without.bandwidth;
+        assert!((speedup - 2.0).abs() < 0.1, "paper: factor of two, got {speedup}");
+    }
+
+    #[test]
+    fn model_reproduces_table3() {
+        let node = hector_xe6_node();
+        for (cc, paper) in [
+            ("0-3", 6.64e9),
+            ("0,2,4,6", 6.34e9),
+            ("0,4,8,12", 12.16e9),
+            ("0,8,16,24", 30.42e9),
+        ] {
+            let cores = parse_cc_list(cc).unwrap();
+            let p =
+                Placement::compute(&node, 1, 4, &AffinityPolicy::Explicit(cores)).unwrap();
+            let r = triad_model(&node, &p, 1_000_000_000, true);
+            assert!(
+                (r.bandwidth - paper).abs() / paper < 0.06,
+                "cc={cc}: model {:.2} vs paper {:.2}",
+                r.bandwidth / 1e9,
+                paper / 1e9
+            );
+        }
+    }
+
+    #[test]
+    fn split_static_covers_all() {
+        let mut v: Vec<u32> = (0..103).collect();
+        let total: usize = split_static(&mut v, 7).iter().map(|c| c.len()).sum();
+        assert_eq!(total, 103);
+    }
+}

@@ -1,0 +1,101 @@
+//! Jacobi (diagonal) preconditioning — the PC the paper benchmarks with
+//! (Figure 10: "CG solve … with a Jacobi preconditioner").
+//!
+//! Setup extracts the matrix diagonal and inverts it once; application is
+//! a threaded pointwise multiply — entirely Vec-class functionality, which
+//! is why the paper counts Jacobi among the "threaded for free" PCs.
+
+use crate::comm::endpoint::Comm;
+use crate::error::{Error, Result};
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::pc::Precond;
+use crate::vec::mpi::VecMPI;
+
+/// Jacobi preconditioner: `z_i = r_i / a_ii`.
+pub struct PcJacobi {
+    /// 1 / diag(A), distributed like A's rows.
+    inv_diag: VecMPI,
+}
+
+impl PcJacobi {
+    /// Extract and invert the diagonal (collective only through layout
+    /// checks; the diagonal is rank-local).
+    pub fn setup(a: &MatMPIAIJ, _comm: &mut Comm) -> Result<PcJacobi> {
+        let mut d = VecMPI::new(a.row_layout().clone(), a.rank(), a.diag_block().ctx().clone());
+        a.get_diagonal(&mut d)?;
+        if d.local().as_slice().iter().any(|&v| v == 0.0) {
+            return Err(Error::Breakdown("Jacobi: zero on diagonal".into()));
+        }
+        d.local_mut().reciprocal();
+        Ok(PcJacobi { inv_diag: d })
+    }
+
+    pub fn inv_diag(&self) -> &VecMPI {
+        &self.inv_diag
+    }
+}
+
+impl Precond for PcJacobi {
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn apply(&self, r: &VecMPI, z: &mut VecMPI) -> Result<()> {
+        z.pointwise_mult(r, &self.inv_diag)
+    }
+
+    fn flops(&self) -> f64 {
+        self.inv_diag.local().len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::vec::ctx::ThreadCtx;
+    use crate::vec::mpi::Layout;
+
+    #[test]
+    fn applies_inverse_diagonal() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(4, 2);
+            let (lo, hi) = layout.range(c.rank());
+            let es: Vec<_> = (lo..hi).map(|i| (i, i, (i + 1) as f64)).collect();
+            let a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                es,
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let pc = PcJacobi::setup(&a, &mut c).unwrap();
+            let ones: Vec<f64> = vec![1.0; hi - lo];
+            let r = VecMPI::from_local_slice(layout.clone(), c.rank(), &ones, ThreadCtx::serial())
+                .unwrap();
+            let mut z = VecMPI::new(layout.clone(), c.rank(), ThreadCtx::serial());
+            pc.apply(&r, &mut z).unwrap();
+            for (k, &v) in z.local().as_slice().iter().enumerate() {
+                let g = lo + k;
+                assert!((v - 1.0 / (g + 1) as f64).abs() < 1e-15);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_diagonal_is_breakdown() {
+        World::run(1, |mut c| {
+            let layout = Layout::split(2, 1);
+            let a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout,
+                vec![(0, 0, 1.0), (1, 0, 1.0)], // a_11 = 0
+                &mut c,
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            assert!(PcJacobi::setup(&a, &mut c).is_err());
+        });
+    }
+}

@@ -1,0 +1,202 @@
+//! (S)SOR — symmetric successive over-relaxation, serial per rank.
+//!
+//! As the paper notes (§V.B), SOR's forward/backward sweeps carry a loop
+//! dependency across rows, so the threaded library keeps it serial; it is
+//! exercised here both standalone (single rank) and as block-Jacobi's
+//! local solve.
+
+use crate::error::{Error, Result};
+use crate::mat::csr::MatSeqAIJ;
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::pc::Precond;
+use crate::vec::mpi::VecMPI;
+
+/// One symmetric SOR application as a preconditioner `z ≈ A⁻¹ r` on a
+/// sequential matrix: `sweeps` forward+backward Gauss-Seidel passes with
+/// relaxation `omega`, starting from z = 0.
+pub struct SorSweeper {
+    omega: f64,
+    sweeps: usize,
+}
+
+impl SorSweeper {
+    pub fn new(omega: f64, sweeps: usize) -> Result<SorSweeper> {
+        if !(0.0 < omega && omega < 2.0) {
+            return Err(Error::InvalidOption(format!(
+                "SOR omega must be in (0,2), got {omega}"
+            )));
+        }
+        Ok(SorSweeper {
+            omega,
+            sweeps: sweeps.max(1),
+        })
+    }
+
+    /// `z ≈ A⁻¹ r` via SSOR sweeps (z starts at 0).
+    pub fn apply(&self, a: &MatSeqAIJ, r: &[f64], z: &mut [f64]) -> Result<()> {
+        let n = a.rows();
+        if a.cols() != n || r.len() != n || z.len() != n {
+            return Err(Error::size_mismatch("SOR shapes"));
+        }
+        z.fill(0.0);
+        for _ in 0..self.sweeps {
+            // forward sweep
+            for i in 0..n {
+                self.relax_row(a, r, z, i)?;
+            }
+            // backward sweep
+            for i in (0..n).rev() {
+                self.relax_row(a, r, z, i)?;
+            }
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn relax_row(&self, a: &MatSeqAIJ, r: &[f64], z: &mut [f64], i: usize) -> Result<()> {
+        let (cols, vals) = a.row(i);
+        let mut acc = r[i];
+        let mut diag = 0.0;
+        for (k, &j) in cols.iter().enumerate() {
+            if j == i {
+                diag = vals[k];
+            } else {
+                acc -= vals[k] * z[j];
+            }
+        }
+        if diag == 0.0 {
+            return Err(Error::Breakdown(format!("SOR: zero diagonal in row {i}")));
+        }
+        z[i] = (1.0 - self.omega) * z[i] + self.omega * acc / diag;
+        Ok(())
+    }
+
+    pub fn flops_per_apply(&self, a: &MatSeqAIJ) -> f64 {
+        2.0 * self.sweeps as f64 * 2.0 * a.nnz() as f64
+    }
+}
+
+/// SOR over the local diagonal block as a distributed PC.
+pub struct PcSor {
+    sweeper: SorSweeper,
+    /// We keep our own copy of the local block to stay independent of the
+    /// operator's lifetime.
+    local: MatSeqAIJ,
+}
+
+impl PcSor {
+    pub fn setup(a: &MatMPIAIJ, omega: f64, sweeps: usize) -> Result<PcSor> {
+        let d = a.diag_block();
+        let local = MatSeqAIJ::from_csr(
+            d.rows(),
+            d.cols(),
+            d.row_ptr().to_vec(),
+            d.col_idx().to_vec(),
+            d.vals().to_vec(),
+            d.ctx().clone(),
+        )?;
+        Ok(PcSor {
+            sweeper: SorSweeper::new(omega, sweeps)?,
+            local,
+        })
+    }
+}
+
+impl Precond for PcSor {
+    fn name(&self) -> &'static str {
+        "sor"
+    }
+
+    fn apply(&self, r: &VecMPI, z: &mut VecMPI) -> Result<()> {
+        self.sweeper
+            .apply(&self.local, r.local().as_slice(), z.local_mut().as_mut_slice())
+    }
+
+    fn flops(&self) -> f64 {
+        self.sweeper.flops_per_apply(&self.local)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::csr::MatBuilder;
+    use crate::vec::ctx::ThreadCtx;
+
+    fn laplace2d(k: usize) -> MatSeqAIJ {
+        let n = k * k;
+        let mut b = MatBuilder::new(n, n);
+        for x in 0..k {
+            for y in 0..k {
+                let u = x * k + y;
+                b.add(u, u, 4.0).unwrap();
+                if x > 0 {
+                    b.add(u, u - k, -1.0).unwrap();
+                }
+                if x + 1 < k {
+                    b.add(u, u + k, -1.0).unwrap();
+                }
+                if y > 0 {
+                    b.add(u, u - 1, -1.0).unwrap();
+                }
+                if y + 1 < k {
+                    b.add(u, u + 1, -1.0).unwrap();
+                }
+            }
+        }
+        b.assemble(ThreadCtx::serial())
+    }
+
+    #[test]
+    fn ssor_reduces_residual() {
+        let a = laplace2d(10);
+        let n = a.rows();
+        let r: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+        let sw = SorSweeper::new(1.2, 3).unwrap();
+        let mut z = vec![0.0; n];
+        sw.apply(&a, &r, &mut z).unwrap();
+        let mut az = vec![0.0; n];
+        a.mult_slices(&z, &mut az).unwrap();
+        let rn: f64 = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let en: f64 = r.iter().zip(&az).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(en < 0.5 * rn, "residual {en} vs {rn}");
+    }
+
+    #[test]
+    fn more_sweeps_help() {
+        let a = laplace2d(8);
+        let n = a.rows();
+        let r = vec![1.0; n];
+        let err = |sweeps: usize| {
+            let sw = SorSweeper::new(1.0, sweeps).unwrap();
+            let mut z = vec![0.0; n];
+            sw.apply(&a, &r, &mut z).unwrap();
+            let mut az = vec![0.0; n];
+            a.mult_slices(&z, &mut az).unwrap();
+            r.iter()
+                .zip(&az)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(err(4) < err(1));
+    }
+
+    #[test]
+    fn omega_validated() {
+        assert!(SorSweeper::new(0.0, 1).is_err());
+        assert!(SorSweeper::new(2.0, 1).is_err());
+        assert!(SorSweeper::new(1.9, 1).is_ok());
+    }
+
+    #[test]
+    fn zero_diag_breakdown() {
+        let mut b = MatBuilder::new(2, 2);
+        b.add(0, 1, 1.0).unwrap();
+        b.add(1, 1, 1.0).unwrap();
+        let a = b.assemble(ThreadCtx::serial());
+        let sw = SorSweeper::new(1.0, 1).unwrap();
+        let mut z = vec![0.0; 2];
+        assert!(sw.apply(&a, &[1.0, 1.0], &mut z).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! A minimal property-based testing framework (the in-repo `proptest`
+//! substitute).
+//!
+//! Provides value generators over a deterministic PRNG, a `forall` runner
+//! that reports the failing case and its seed, and greedy input shrinking for
+//! integer/size-shaped inputs. Coordinator invariants (routing, layouts,
+//! scatter plans, solver algebra) are property-tested with this.
+
+use crate::util::rng::XorShift64;
+
+/// A generator of random values of type `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut XorShift64) -> T;
+}
+
+impl<T, F: Fn(&mut XorShift64) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut XorShift64) -> T {
+        self(rng)
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PtConfig {
+    /// Number of random cases to try.
+    pub cases: usize,
+    /// Base seed; each case derives its own stream.
+    pub seed: u64,
+    /// Maximum shrink attempts after a failure.
+    pub max_shrink: usize,
+}
+
+impl Default for PtConfig {
+    fn default() -> Self {
+        PtConfig {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_shrink: 200,
+        }
+    }
+}
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs from `gen`. Panics with the failing
+/// case (Debug-printed), its case index and seed on the first failure —
+/// after attempting to shrink it with `shrink`.
+pub fn forall_shrink<T: Clone + std::fmt::Debug>(
+    cfg: &PtConfig,
+    gen: impl Gen<T>,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = XorShift64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.split(case as u64);
+        let input = gen.generate(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first shrunk candidate that
+            // still fails.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// [`forall_shrink`] without shrinking.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    cfg: &PtConfig,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    forall_shrink(cfg, gen, |_| Vec::new(), prop);
+}
+
+/// Assert helper: build a `PropResult` from a condition.
+pub fn check(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are close in relative terms.
+pub fn close(a: f64, b: f64, rtol: f64) -> PropResult {
+    let scale = a.abs().max(b.abs()).max(1e-30);
+    if (a - b).abs() <= rtol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (rtol {rtol}, rel err {})", (a - b).abs() / scale))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// Generator: usize in `[lo, hi)`.
+pub fn usizes(lo: usize, hi: usize) -> impl Gen<usize> {
+    move |rng: &mut XorShift64| rng.range(lo, hi)
+}
+
+/// Generator: f64 in `[lo, hi)`.
+pub fn floats(lo: f64, hi: f64) -> impl Gen<f64> {
+    move |rng: &mut XorShift64| rng.range_f64(lo, hi)
+}
+
+/// Generator: Vec<f64> with length in `[min_len, max_len)`, entries in
+/// `[-mag, mag)`.
+pub fn float_vecs(min_len: usize, max_len: usize, mag: f64) -> impl Gen<Vec<f64>> {
+    move |rng: &mut XorShift64| {
+        let n = rng.range(min_len, max_len);
+        (0..n).map(|_| rng.range_f64(-mag, mag)).collect()
+    }
+}
+
+/// Generator: a pair.
+pub fn pairs<A, B>(ga: impl Gen<A>, gb: impl Gen<B>) -> impl Gen<(A, B)> {
+    move |rng: &mut XorShift64| (ga.generate(rng), gb.generate(rng))
+}
+
+/// Shrinker for usize: halves and decrements toward `lo`.
+pub fn shrink_usize(lo: usize) -> impl Fn(&usize) -> Vec<usize> {
+    move |&x: &usize| {
+        let mut out = Vec::new();
+        if x > lo {
+            out.push(lo);
+            let half = lo + (x - lo) / 2;
+            if half != x && half != lo {
+                out.push(half);
+            }
+            if x - 1 != half {
+                out.push(x - 1);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(&PtConfig::default(), usizes(0, 100), |&x| {
+            check(x < 100, "in range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(&PtConfig::default(), usizes(0, 100), |&x| {
+            check(x < 50, format!("{x} >= 50"))
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_boundary() {
+        // Capture the panic message and verify the shrunk value is exactly 50.
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                &PtConfig { cases: 200, ..Default::default() },
+                usizes(0, 1000),
+                shrink_usize(0),
+                |&x| check(x < 50, "boundary"),
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("input: 50"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 1.1, 1e-9).is_err());
+        assert!(close(0.0, 0.0, 1e-15).is_ok());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        use std::cell::RefCell;
+        let run = || {
+            let seen = RefCell::new(Vec::new());
+            forall(
+                &PtConfig { cases: 5, ..Default::default() },
+                usizes(0, 1_000_000),
+                |&x| {
+                    seen.borrow_mut().push(x);
+                    Ok(())
+                },
+            );
+            seen.into_inner()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,8 @@
+//! Matrix reordering and sparsity diagnostics (paper §VIII.B, Figure 6):
+//! Reverse Cuthill-McKee bandwidth reduction and "spy" plots.
+
+pub mod rcm;
+pub mod spy;
+
+pub use rcm::{rcm_permutation, BandwidthStats};
+pub use spy::{spy_ascii, spy_pgm};

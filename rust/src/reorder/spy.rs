@@ -1,0 +1,105 @@
+//! Sparsity "spy" plots (Figure 6): render a matrix pattern as ASCII art or
+//! a binary PGM image, down-sampled to a fixed raster.
+
+use crate::mat::csr::MatSeqAIJ;
+
+/// Down-sample the pattern to a `px × px` density raster (counts per cell).
+fn raster(a: &MatSeqAIJ, px: usize) -> Vec<Vec<u32>> {
+    let n_r = a.rows().max(1);
+    let n_c = a.cols().max(1);
+    let mut grid = vec![vec![0u32; px]; px];
+    for i in 0..a.rows() {
+        let (cols, _) = a.row(i);
+        let gi = i * px / n_r;
+        for &j in cols {
+            let gj = j * px / n_c;
+            grid[gi][gj] += 1;
+        }
+    }
+    grid
+}
+
+/// ASCII spy plot: ` ` empty, `.` sparse, `:` medium, `#` dense cells.
+pub fn spy_ascii(a: &MatSeqAIJ, px: usize) -> String {
+    let grid = raster(a, px);
+    let max = grid.iter().flatten().copied().max().unwrap_or(0).max(1);
+    let mut out = String::with_capacity(px * (px + 1));
+    for row in &grid {
+        for &c in row {
+            out.push(if c == 0 {
+                ' '
+            } else if c * 4 <= max {
+                '.'
+            } else if c * 2 <= max {
+                ':'
+            } else {
+                '#'
+            });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Binary PGM (P5) image of the pattern, `px × px`, dark = dense.
+pub fn spy_pgm(a: &MatSeqAIJ, px: usize) -> Vec<u8> {
+    let grid = raster(a, px);
+    let max = grid.iter().flatten().copied().max().unwrap_or(0).max(1) as f64;
+    let mut out = format!("P5\n{px} {px}\n255\n").into_bytes();
+    for row in &grid {
+        for &c in row {
+            let shade = 255.0 * (1.0 - (c as f64 / max).powf(0.4));
+            out.push(shade as u8);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::csr::MatBuilder;
+    use crate::vec::ctx::ThreadCtx;
+
+    fn diag_mat(n: usize) -> MatSeqAIJ {
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 1.0).unwrap();
+        }
+        b.assemble(ThreadCtx::serial())
+    }
+
+    #[test]
+    fn ascii_diagonal_is_diagonal() {
+        let a = diag_mat(100);
+        let s = spy_ascii(&a, 10);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 10);
+        for (r, line) in lines.iter().enumerate() {
+            for (c, ch) in line.chars().enumerate() {
+                if r == c {
+                    assert_ne!(ch, ' ', "diagonal cell ({r},{c}) empty");
+                } else {
+                    assert_eq!(ch, ' ', "off-diagonal cell ({r},{c}) marked");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pgm_header_and_size() {
+        let a = diag_mat(50);
+        let img = spy_pgm(&a, 32);
+        assert!(img.starts_with(b"P5\n32 32\n255\n"));
+        let header_len = b"P5\n32 32\n255\n".len();
+        assert_eq!(img.len(), header_len + 32 * 32);
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let b = MatBuilder::new(3, 3);
+        let a = b.assemble(ThreadCtx::serial());
+        let s = spy_ascii(&a, 4);
+        assert!(s.chars().all(|c| c == ' ' || c == '\n'));
+    }
+}

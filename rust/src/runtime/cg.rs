@@ -1,0 +1,210 @@
+//! The fused CG-step executor: drives a complete CG solve whose entire
+//! per-iteration compute (SpMV + dots + axpys) runs inside the AOT
+//! `cg_step.hlo.txt` artifact — the L2 graph with the L1 Pallas kernel
+//! embedded.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::ksp::{ConvergedReason, SolveStats};
+use crate::mat::csr::MatSeqAIJ;
+use crate::runtime::client::{wrap, PjrtContext};
+
+/// A compiled fixed-shape CG step over a padded-ELL operator.
+pub struct CgStep {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+    k: usize,
+    vals: Vec<f64>,
+    cols: Vec<i64>,
+}
+
+impl CgStep {
+    /// Load the artifact and pack `a` (must fit the `(n, k)` ELL shape;
+    /// `a` must be exactly `n × n` — CG needs the true operator, padding
+    /// rows would change the system).
+    pub fn from_csr(
+        ctx: &PjrtContext,
+        artifact: impl AsRef<Path>,
+        a: &MatSeqAIJ,
+        n: usize,
+        k: usize,
+    ) -> Result<CgStep> {
+        if a.rows() != n || a.cols() != n {
+            return Err(Error::size_mismatch(format!(
+                "CG artifact needs an exactly {n}x{n} operator, got {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let mut vals = vec![0.0f64; n * k];
+        let mut cols = vec![0i64; n * k];
+        for i in 0..n {
+            let (cs, vs) = a.row(i);
+            if cs.len() > k {
+                return Err(Error::size_mismatch(format!(
+                    "row {i} has {} nnz > artifact K={k}",
+                    cs.len()
+                )));
+            }
+            for (j, (&c, &v)) in cs.iter().zip(vs).enumerate() {
+                vals[i * k + j] = v;
+                cols[i * k + j] = c as i64;
+            }
+        }
+        let exe = ctx.load_hlo_text(artifact)?;
+        Ok(CgStep {
+            exe,
+            n,
+            k,
+            vals,
+            cols,
+        })
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n, self.k)
+    }
+
+    /// Solve `A x = b` (x starts at the supplied guess), entire iteration
+    /// inside the PJRT executable. Unpreconditioned CG.
+    pub fn solve(&self, b: &[f64], x: &mut [f64], rtol: f64, max_it: usize) -> Result<SolveStats> {
+        if b.len() != self.n || x.len() != self.n {
+            return Err(Error::size_mismatch("CgStep::solve shapes"));
+        }
+        let lv = xla::Literal::vec1(&self.vals)
+            .reshape(&[self.n as i64, self.k as i64])
+            .map_err(wrap)?;
+        let lc = xla::Literal::vec1(&self.cols)
+            .reshape(&[self.n as i64, self.k as i64])
+            .map_err(wrap)?;
+
+        // r = b − A x via one host SpMV (cheap relative to the solve).
+        let mut r = b.to_vec();
+        {
+            let mut ax = vec![0.0; self.n];
+            // reuse the ELL arrays for a host-side SpMV
+            for i in 0..self.n {
+                let mut acc = 0.0;
+                for j in 0..self.k {
+                    acc += self.vals[i * self.k + j] * x[self.cols[i * self.k + j] as usize];
+                }
+                ax[i] = acc;
+            }
+            for i in 0..self.n {
+                r[i] -= ax[i];
+            }
+        }
+        let mut p = r.clone();
+        let mut rz: f64 = r.iter().map(|v| v * v).sum();
+        let b_norm = (b.iter().map(|v| v * v).sum::<f64>()).sqrt();
+        let target = rtol * b_norm;
+
+        let mut xs = x.to_vec();
+        let mut its = 0usize;
+        while rz.sqrt() > target && its < max_it {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[
+                    lv.clone(),
+                    lc.clone(),
+                    xla::Literal::vec1(&xs),
+                    xla::Literal::vec1(&r),
+                    xla::Literal::vec1(&p),
+                    xla::Literal::scalar(rz),
+                ])
+                .map_err(wrap)?;
+            let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+            let mut tuple = lit;
+            let parts = tuple.decompose_tuple().map_err(wrap)?;
+            if parts.len() != 4 {
+                return Err(Error::Runtime(format!(
+                    "cg_step returned {}-tuple, expected 4",
+                    parts.len()
+                )));
+            }
+            xs = parts[0].to_vec().map_err(wrap)?;
+            r = parts[1].to_vec().map_err(wrap)?;
+            p = parts[2].to_vec().map_err(wrap)?;
+            rz = parts[3].to_vec::<f64>().map_err(wrap)?[0];
+            its += 1;
+        }
+        x.copy_from_slice(&xs);
+        let final_residual = rz.sqrt();
+        Ok(SolveStats {
+            reason: if final_residual <= target {
+                ConvergedReason::ConvergedRtol
+            } else {
+                ConvergedReason::DivergedIts
+            },
+            iterations: its,
+            b_norm,
+            final_residual,
+            history: Vec::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::csr::MatBuilder;
+    use crate::runtime::client::default_artifact_dir;
+    use crate::vec::ctx::ThreadCtx;
+
+    const N: usize = 1024;
+    const K: usize = 16;
+
+    fn artifact() -> std::path::PathBuf {
+        default_artifact_dir().join("cg_step.hlo.txt")
+    }
+
+    fn spd(n: usize) -> MatSeqAIJ {
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 2.5).unwrap();
+            if i > 0 {
+                b.add(i, i - 1, -1.0).unwrap();
+            }
+            if i + 1 < n {
+                b.add(i, i + 1, -1.0).unwrap();
+            }
+        }
+        b.assemble(ThreadCtx::serial())
+    }
+
+    #[test]
+    fn cg_inside_pjrt_converges() {
+        if !artifact().exists() {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let ctx = PjrtContext::cpu().unwrap();
+        let a = spd(N);
+        let cg = CgStep::from_csr(&ctx, artifact(), &a, N, K).unwrap();
+        let x_true: Vec<f64> = (0..N).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut b = vec![0.0; N];
+        a.mult_slices(&x_true, &mut b).unwrap();
+        let mut x = vec![0.0; N];
+        let stats = cg.solve(&b, &mut x, 1e-10, 2000).unwrap();
+        assert!(stats.converged(), "{:?}", stats.reason);
+        let err = x
+            .iter()
+            .zip(&x_true)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()));
+        assert!(err < 1e-7, "err {err}");
+        // agrees with the native CG within tolerance class
+        assert!(stats.iterations < 200);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        if !artifact().exists() {
+            eprintln!("SKIP: artifacts missing");
+            return;
+        }
+        let ctx = PjrtContext::cpu().unwrap();
+        let a = spd(500); // not N
+        assert!(CgStep::from_csr(&ctx, artifact(), &a, N, K).is_err());
+    }
+}

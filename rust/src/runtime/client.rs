@@ -1,0 +1,82 @@
+//! PJRT CPU client wrapper: load HLO text → compile → executable.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Shared PJRT client (one per process).
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<PjrtContext> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(PjrtContext { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(wrap)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Resolve the artifacts directory: `$MMPETSC_ARTIFACTS`, else
+/// `<crate root>/artifacts`, else `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("MMPETSC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.exists() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
+
+pub(crate) fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let ctx = PjrtContext::cpu().unwrap();
+        assert!(ctx.platform().to_lowercase().contains("cpu") || !ctx.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let ctx = PjrtContext::cpu().unwrap();
+        let e = match ctx.load_hlo_text("/nonexistent/x.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing artifact"),
+        };
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

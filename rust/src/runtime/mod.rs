@@ -1,0 +1,18 @@
+//! The PJRT runtime: load AOT-compiled JAX/Pallas computations (HLO text
+//! emitted by `python/compile/aot.py` into `artifacts/`) and execute them
+//! from the rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 JAX
+//! model (which calls the L1 Pallas kernel) to HLO text once; this module
+//! compiles it on the PJRT CPU client and exposes it as an operator the
+//! coordinator can call. HLO *text* is the interchange format — the
+//! `xla`-crate's XLA build rejects jax ≥ 0.5's serialized protos (64-bit
+//! instruction ids), but the text parser reassigns ids.
+
+pub mod client;
+pub mod spmv;
+pub mod cg;
+
+pub use cg::CgStep;
+pub use client::{default_artifact_dir, PjrtContext};
+pub use spmv::EllSpmv;

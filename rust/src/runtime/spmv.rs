@@ -1,0 +1,179 @@
+//! The AOT SpMV operator: executes the JAX/Pallas block-ELL SpMV artifact
+//! from the rust solve path.
+//!
+//! The artifact has a fixed shape `(N, K)` baked in at lowering time (AOT
+//! means shapes are static): `N` matrix rows/cols, `K` padded entries per
+//! row. [`EllSpmv::from_csr`] converts a `MatSeqAIJ` into the padded ELL
+//! arrays (pad entries point at column 0 with value 0, preserving the
+//! product exactly).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::mat::csr::MatSeqAIJ;
+use crate::runtime::client::{wrap, PjrtContext};
+
+/// A compiled fixed-shape ELL SpMV: `y = A·x` with `A` in `(N, K)` padded
+/// ELL form.
+pub struct EllSpmv {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+    k: usize,
+    /// Device-resident padded values `(N, K)` f64, row-major.
+    vals: Vec<f64>,
+    /// Padded column indices `(N, K)` i64 (pad: 0, with val 0).
+    cols: Vec<i64>,
+}
+
+impl EllSpmv {
+    /// Load the artifact for shape `(n, k)` and pack `a` into it.
+    pub fn from_csr(
+        ctx: &PjrtContext,
+        artifact: impl AsRef<Path>,
+        a: &MatSeqAIJ,
+        n: usize,
+        k: usize,
+    ) -> Result<EllSpmv> {
+        if a.rows() > n || a.cols() > n {
+            return Err(Error::size_mismatch(format!(
+                "matrix {}x{} exceeds artifact shape N={n}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let max_row = (0..a.rows())
+            .map(|i| a.row(i).0.len())
+            .max()
+            .unwrap_or(0);
+        if max_row > k {
+            return Err(Error::size_mismatch(format!(
+                "row with {max_row} nnz exceeds artifact K={k}"
+            )));
+        }
+        let mut vals = vec![0.0f64; n * k];
+        let mut cols = vec![0i64; n * k];
+        for i in 0..a.rows() {
+            let (cs, vs) = a.row(i);
+            for (j, (&c, &v)) in cs.iter().zip(vs).enumerate() {
+                vals[i * k + j] = v;
+                cols[i * k + j] = c as i64;
+            }
+        }
+        let exe = ctx.load_hlo_text(artifact)?;
+        Ok(EllSpmv {
+            exe,
+            n,
+            k,
+            vals,
+            cols,
+        })
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n, self.k)
+    }
+
+    /// Execute `y = A·x` through PJRT. `x` is zero-padded to `N`; `y` is
+    /// truncated back to `len`.
+    pub fn mult(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() > self.n || y.len() > self.n {
+            return Err(Error::size_mismatch(format!(
+                "x/y ({}, {}) exceed artifact N={}",
+                x.len(),
+                y.len(),
+                self.n
+            )));
+        }
+        let mut xp = vec![0.0f64; self.n];
+        xp[..x.len()].copy_from_slice(x);
+
+        let lv = xla::Literal::vec1(&self.vals)
+            .reshape(&[self.n as i64, self.k as i64])
+            .map_err(wrap)?;
+        let lc = xla::Literal::vec1(&self.cols)
+            .reshape(&[self.n as i64, self.k as i64])
+            .map_err(wrap)?;
+        let lx = xla::Literal::vec1(&xp);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lv, lc, lx])
+            .map_err(wrap)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(wrap)?;
+        let vals: Vec<f64> = out.to_vec().map_err(wrap)?;
+        if vals.len() != self.n {
+            return Err(Error::Runtime(format!(
+                "artifact returned {} values, expected {}",
+                vals.len(),
+                self.n
+            )));
+        }
+        let m = y.len();
+        y.copy_from_slice(&vals[..m]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::csr::MatBuilder;
+    use crate::runtime::client::default_artifact_dir;
+    use crate::vec::ctx::ThreadCtx;
+
+    /// Shape constants must match python/compile/aot.py.
+    const N: usize = 1024;
+    const K: usize = 16;
+
+    fn artifact() -> std::path::PathBuf {
+        default_artifact_dir().join("spmv_ell.hlo.txt")
+    }
+
+    #[test]
+    fn pjrt_spmv_matches_native() {
+        if !artifact().exists() {
+            eprintln!("SKIP: {} missing (run `make artifacts`)", artifact().display());
+            return;
+        }
+        let ctxp = PjrtContext::cpu().unwrap();
+        // tridiagonal on 500 rows (< N, tests padding too)
+        let n = 500;
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 2.0).unwrap();
+            if i > 0 {
+                b.add(i, i - 1, -1.0).unwrap();
+            }
+            if i + 1 < n {
+                b.add(i, i + 1, -1.0).unwrap();
+            }
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        let ell = EllSpmv::from_csr(&ctxp, artifact(), &a, N, K).unwrap();
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut y_native = vec![0.0; n];
+        a.mult_slices(&xs, &mut y_native).unwrap();
+        let mut y_pjrt = vec![0.0; n];
+        ell.mult(&xs, &mut y_pjrt).unwrap();
+        for (p, q) in y_pjrt.iter().zip(&y_native) {
+            assert!((p - q).abs() < 1e-12, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn shape_violations_rejected() {
+        if !artifact().exists() {
+            eprintln!("SKIP: artifacts missing");
+            return;
+        }
+        let ctxp = PjrtContext::cpu().unwrap();
+        // a row with K+1 nonzeros must be rejected
+        let mut b = MatBuilder::new(8, 2000);
+        for j in 0..K + 1 {
+            b.add(0, j, 1.0).unwrap();
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        assert!(EllSpmv::from_csr(&ctxp, artifact(), &a, N, K).is_err());
+    }
+}

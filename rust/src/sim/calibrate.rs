@@ -1,0 +1,100 @@
+//! Host calibration: measure the build machine's actual STREAM and SpMV
+//! rates so real-mode timings and model-mode predictions can be compared
+//! honestly in the benches (every model-mode report prints alongside the
+//! host-calibrated numbers).
+
+use std::sync::Arc;
+
+use crate::matgen::cases::{generate, TestCase};
+use crate::numa::stream::triad_host;
+use crate::util::timer::bench_loop;
+use crate::util::stats::Summary;
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::seq::VecSeq;
+
+/// Host calibration results.
+#[derive(Debug, Clone)]
+pub struct HostCalibration {
+    /// Single-thread triad bandwidth (B/s).
+    pub triad_bw_1t: f64,
+    /// Triad bandwidth at `threads` threads.
+    pub triad_bw_nt: f64,
+    pub threads: usize,
+    /// Single-thread CSR SpMV rate (nnz/s).
+    pub spmv_nnz_rate_1t: f64,
+    /// SpMV rate at `threads` threads (nnz/s).
+    pub spmv_nnz_rate_nt: f64,
+    /// Effective bytes per nonzero implied by the two measurements.
+    pub bytes_per_nnz: f64,
+}
+
+/// Run the calibration microbenchmarks (a few seconds).
+pub fn calibrate_host(threads: usize, quick: bool) -> HostCalibration {
+    let n = if quick { 1 << 21 } else { 1 << 24 };
+    let reps = if quick { 2 } else { 5 };
+    let t1 = triad_host(n, 1, true, reps);
+    let tn = triad_host(n, threads, true, reps);
+
+    let scale = if quick { 0.01 } else { 0.05 };
+    let rate_1 = spmv_rate(TestCase::SaltPressure, scale, ThreadCtx::serial(), quick);
+    let rate_n = spmv_rate(TestCase::SaltPressure, scale, ThreadCtx::new(threads), quick);
+
+    HostCalibration {
+        triad_bw_1t: t1.bandwidth,
+        triad_bw_nt: tn.bandwidth,
+        threads,
+        spmv_nnz_rate_1t: rate_1,
+        spmv_nnz_rate_nt: rate_n,
+        bytes_per_nnz: t1.bandwidth / rate_1,
+    }
+}
+
+/// Measured nnz/s of the threaded CSR SpMV on a generated case.
+pub fn spmv_rate(case: TestCase, scale: f64, ctx: Arc<ThreadCtx>, quick: bool) -> f64 {
+    let a = generate(case, scale, None, ctx.clone()).expect("generate");
+    let x = VecSeq::from_slice(
+        &(0..a.cols()).map(|i| 1.0 + (i % 7) as f64).collect::<Vec<_>>(),
+        ctx.clone(),
+    );
+    let mut y = VecSeq::new(a.rows(), ctx);
+    let samples = bench_loop(if quick { 0.05 } else { 0.4 }, 3, || {
+        a.mult(&x, &mut y).unwrap();
+    });
+    let s = Summary::of(&samples);
+    a.nnz() as f64 / s.median
+}
+
+impl std::fmt::Display for HostCalibration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "host calibration: triad {:.2} GB/s (1T) / {:.2} GB/s ({}T)",
+            self.triad_bw_1t / 1e9,
+            self.triad_bw_nt / 1e9,
+            self.threads
+        )?;
+        writeln!(
+            f,
+            "                  spmv  {:.1} Mnnz/s (1T) / {:.1} Mnnz/s ({}T), {:.1} B/nnz",
+            self.spmv_nnz_rate_1t / 1e6,
+            self.spmv_nnz_rate_nt / 1e6,
+            self.threads,
+            self.bytes_per_nnz
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_calibration_sane() {
+        let c = calibrate_host(2, true);
+        assert!(c.triad_bw_1t > 1e8, "triad {}", c.triad_bw_1t); // > 0.1 GB/s
+        assert!(c.spmv_nnz_rate_1t > 1e6, "spmv {}", c.spmv_nnz_rate_1t);
+        assert!(c.bytes_per_nnz > 1.0 && c.bytes_per_nnz < 1000.0);
+        let txt = format!("{c}");
+        assert!(txt.contains("GB/s") && txt.contains("Mnnz/s"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Node-level operation cost model: SpMV and BLAS-1 ops priced by the
+//! memory roofline over the calibrated NUMA bandwidth model, plus the
+//! fork-join overhead of the modelled OpenMP runtime.
+
+use crate::numa::bandwidth::BwModel;
+use crate::thread::overhead::CompilerModel;
+use crate::topology::machine::MachineTopology;
+
+/// Average traffic per CSR nonzero for SpMV: 8 B value + 8 B column index
+/// + amortised vector/result traffic. 20 B/nnz reproduces measured CSR
+/// SpMV rates on cache-based CPUs (matrix streams, x mostly cached after
+/// RCM).
+pub const BYTES_PER_NNZ: f64 = 20.0;
+
+/// Traffic per element for `y += a·x`-class ops (read x, read+write y).
+pub const BYTES_PER_AXPY_ELEM: f64 = 24.0;
+
+/// Traffic per element for a dot product (read two vectors).
+pub const BYTES_PER_DOT_ELEM: f64 = 16.0;
+
+/// Cost model for one node configuration: a rank with `threads` threads
+/// pinned within one UMA region (the paper's hybrid placement), or a
+/// single-threaded MPI rank.
+#[derive(Debug, Clone)]
+pub struct NodeCostModel {
+    bw: BwModel,
+    overhead: CompilerModel,
+    /// Threads per rank.
+    pub threads: usize,
+    /// Threads streaming against the same UMA bank simultaneously (= all
+    /// active threads on the bank, across ranks sharing it).
+    pub streams_per_bank: usize,
+    /// Peak per-core flop rate (roofline compute leg).
+    core_flops: f64,
+}
+
+impl NodeCostModel {
+    /// Model for a fully-populated node: `ranks_per_node × threads` cores,
+    /// UMA-per-rank placement (the paper's §VIII.E rule). With T threads
+    /// per rank and 8-core UMA regions, `8 / T` ranks share each bank on a
+    /// 32-core node when T < 8.
+    pub fn hybrid(node: &MachineTopology, threads: usize, overhead: CompilerModel) -> NodeCostModel {
+        let per_uma = node.cores_per_uma();
+        NodeCostModel {
+            bw: BwModel::for_machine(node),
+            overhead,
+            threads,
+            // full population: every core of the UMA region streams
+            streams_per_bank: per_uma,
+            core_flops: node.core_flops,
+        }
+    }
+
+    /// Effective bandwidth one thread sees for mostly-local traffic, with
+    /// a locality fraction for the paper's non-local vector accesses
+    /// (§VII): fraction `local_frac` of the traffic is bank-local, the
+    /// rest crosses HyperTransport.
+    pub fn thread_bw(&self, local_frac: f64) -> f64 {
+        self.bw
+            .mixed_bw(local_frac, self.streams_per_bank, self.streams_per_bank)
+    }
+
+    /// Time for this rank to stream `bytes` with `local_frac` locality,
+    /// split across its threads, including the fork-join overhead.
+    pub fn stream_time(&self, bytes: f64, local_frac: f64) -> f64 {
+        let per_thread = bytes / self.threads as f64;
+        per_thread / self.thread_bw(local_frac) + self.fork_overhead()
+    }
+
+    /// Time for `flops` of compute-bound work (rarely binding for sparse).
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / (self.threads as f64 * self.core_flops)
+    }
+
+    /// Local SpMV time for `nnz` nonzeros with vector-access locality
+    /// `local_frac` (roofline: max of memory and compute legs).
+    pub fn spmv_time(&self, nnz: f64, local_frac: f64) -> f64 {
+        let mem = self.stream_time(nnz * BYTES_PER_NNZ, local_frac);
+        let cmp = self.compute_time(2.0 * nnz);
+        mem.max(cmp)
+    }
+
+    /// Local axpy-class op on `n` elements (all-local by the paging
+    /// contract).
+    pub fn axpy_time(&self, n: f64) -> f64 {
+        self.stream_time(n * BYTES_PER_AXPY_ELEM, 1.0)
+    }
+
+    /// Local dot-product leg on `n` elements (reduction adds a fork-join).
+    pub fn dot_local_time(&self, n: f64) -> f64 {
+        self.stream_time(n * BYTES_PER_DOT_ELEM, 1.0)
+    }
+
+    /// Fork-join overhead of one parallel region at this thread count.
+    pub fn fork_overhead(&self) -> f64 {
+        if self.threads <= 1 {
+            0.0
+        } else {
+            self.overhead.overhead(self.threads)
+        }
+    }
+
+    /// The vector-access locality fraction for SpMV on a banded matrix:
+    /// a thread's x-accesses stay within ± `band` rows of its chunk; with
+    /// `rows_per_thread` rows per chunk, roughly `band / rows_per_thread`
+    /// of the accesses land in a neighbouring thread's pages (§VII's
+    /// penalty, which grows with thread count).
+    pub fn band_locality(band: f64, rows_per_thread: f64) -> f64 {
+        if rows_per_thread <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - (band / rows_per_thread).min(1.0)).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thread::overhead::Compiler;
+    use crate::topology::presets::hector_xe6_node;
+
+    fn model(threads: usize) -> NodeCostModel {
+        NodeCostModel::hybrid(
+            &hector_xe6_node(),
+            threads,
+            CompilerModel::paper(Compiler::Cray803),
+        )
+    }
+
+    #[test]
+    fn more_threads_faster_spmv() {
+        let nnz = 14e6;
+        let t1 = model(1).spmv_time(nnz, 1.0);
+        let t4 = model(4).spmv_time(nnz, 1.0);
+        let t8 = model(8).spmv_time(nnz, 1.0);
+        assert!(t4 < t1 && t8 < t4);
+        // but not superlinear
+        assert!(t8 > t1 / 16.0);
+    }
+
+    #[test]
+    fn nonlocal_access_penalty() {
+        let m = model(8);
+        let fast = m.spmv_time(1e7, 1.0);
+        let slow = m.spmv_time(1e7, 0.5);
+        assert!(slow > 1.2 * fast, "remote accesses must hurt: {fast} vs {slow}");
+    }
+
+    #[test]
+    fn fork_overhead_only_when_threaded() {
+        assert_eq!(model(1).fork_overhead(), 0.0);
+        assert!(model(8).fork_overhead() > 0.0);
+        // overhead dominates tiny ops: a 100-element axpy on 8 threads is
+        // slower than the fork alone would suggest for big ops
+        let m = model(8);
+        assert!(m.axpy_time(100.0) > 0.9 * m.fork_overhead());
+    }
+
+    #[test]
+    fn band_locality_behaviour() {
+        // thin band, fat chunk: nearly all local
+        assert!(NodeCostModel::band_locality(100.0, 100_000.0) > 0.99);
+        // band as wide as the chunk: nothing guaranteed local
+        assert_eq!(NodeCostModel::band_locality(1e5, 1e5), 0.0);
+        assert_eq!(NodeCostModel::band_locality(1.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn spmv_is_memory_bound_here() {
+        // For sparse kernels the memory leg must dominate the flop leg.
+        let m = model(8);
+        let nnz = 1e7;
+        assert!(m.stream_time(nnz * BYTES_PER_NNZ, 1.0) > m.compute_time(2.0 * nnz));
+    }
+}

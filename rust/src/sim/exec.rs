@@ -1,0 +1,425 @@
+//! The cluster-scale solve model (Figures 10 and 11).
+//!
+//! Prices a full Krylov solve of a Table-6 case at paper scale for a
+//! (ranks × threads) configuration on the modelled cluster. The partition
+//! geometry — ghost columns and neighbour ranks of the slab decomposition
+//! under the row-contiguous layout — is computed in closed form as the
+//! union of the stencil's reach intervals, from the same `StencilSpec` the
+//! real generator uses. Model mode therefore prices exactly the
+//! communication pattern real mode executes; a test cross-checks the two
+//! at a scale where both run.
+
+use crate::comm::timing::NetModel;
+use crate::matgen::cases::TestCase;
+use crate::matgen::stencil::stencil_offsets;
+use crate::sim::cost::NodeCostModel;
+use crate::thread::overhead::{Compiler, CompilerModel};
+use crate::topology::machine::Cluster;
+
+/// One model-mode experiment.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub case: TestCase,
+    /// Matrix scale (1.0 = the paper's full-size matrix).
+    pub scale: f64,
+    pub ranks: usize,
+    pub threads: usize,
+    /// Krylov iterations to price (the paper compares fixed solves, so
+    /// iteration counts are equal across configurations).
+    pub iterations: usize,
+    /// `cg` or `gmres` (drives the per-iteration op mix).
+    pub ksp_type: &'static str,
+    /// OpenMP runtime pricing fork-join overheads.
+    pub compiler: Compiler,
+}
+
+impl SimConfig {
+    pub fn cores(&self) -> usize {
+        self.ranks * self.threads
+    }
+}
+
+/// Partition statistics of one (interior) rank under the slab
+/// decomposition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionStats {
+    pub rows_per_rank: f64,
+    pub nnz_per_rank: f64,
+    /// Ghost elements received per rank per MatMult.
+    pub ghosts_per_rank: f64,
+    /// Neighbour messages per rank per MatMult (both sides).
+    pub msgs_per_rank: f64,
+    /// Off-diagonal nnz per rank.
+    pub offdiag_nnz: f64,
+    /// Matrix half-bandwidth in rows (vector-locality driver).
+    pub band: f64,
+    /// Rank-distances of the neighbours on one side (e.g. `[1, 24, 25]`:
+    /// the in-plane halo plus the two z-plane clusters).
+    pub neighbour_distances: Vec<usize>,
+}
+
+impl PartitionStats {
+    /// Fraction of neighbour messages that stay on-node for a layout with
+    /// `rpn` ranks per node: a neighbour at rank-distance δ is on-node
+    /// with probability `max(0, 1 − δ/rpn)` (uniform position in node).
+    pub fn intra_fraction(&self, rpn: usize) -> f64 {
+        if self.neighbour_distances.is_empty() {
+            return 0.0;
+        }
+        let rpn = rpn.max(1) as f64;
+        self.neighbour_distances
+            .iter()
+            .map(|&d| (1.0 - d as f64 / rpn).max(0.0))
+            .sum::<f64>()
+            / self.neighbour_distances.len() as f64
+    }
+}
+
+/// Merge half-open intervals and return (total measure, merged list).
+fn merge_intervals(mut iv: Vec<(f64, f64)>) -> (f64, Vec<(f64, f64)>) {
+    iv.retain(|&(a, b)| b > a);
+    iv.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    let mut merged: Vec<(f64, f64)> = Vec::new();
+    for (a, b) in iv {
+        match merged.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => merged.push((a, b)),
+        }
+    }
+    let total = merged.iter().map(|&(a, b)| b - a).sum();
+    (total, merged)
+}
+
+/// Closed-form partition statistics from the generator geometry.
+///
+/// A rank owns rows `[lo, hi)`, `n_loc = hi − lo`. For a stencil offset
+/// with linear row delta `d > 0`, the out-of-range columns on the right
+/// are `{r + d : r ∈ [lo, hi)} ∩ [hi, ∞)` — the interval
+/// `[hi + max(0, d − n_loc), hi + d)`. Distinct ghosts are the measure of
+/// the union of those intervals over all deltas (× 2 sides, symmetric
+/// stencil); neighbour ranks are the owners the union touches.
+pub fn partition_stats(case: TestCase, scale: f64, ranks: usize) -> PartitionStats {
+    let spec = case.grid(scale);
+    let k = spec.nnz_per_row;
+    let three_d = spec.nz > 1;
+    let offsets = stencil_offsets(k, three_d);
+    let n = spec.rows() as f64;
+    let n_loc = n / ranks as f64;
+
+    let (nx, ny) = (spec.nx as i64, spec.ny as i64);
+    let deltas: Vec<f64> = {
+        let mut d: Vec<f64> = offsets
+            .iter()
+            .map(|&(dx, dy, dz)| (dx + dy * nx + dz * nx * ny).unsigned_abs() as f64)
+            .filter(|&d| d > 0.0)
+            .collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        d.dedup();
+        d
+    };
+    let band = deltas.last().copied().unwrap_or(0.0);
+
+    // Right-side ghost intervals, relative to the cut at `hi`.
+    let intervals: Vec<(f64, f64)> = deltas
+        .iter()
+        .map(|&d| ((d - n_loc).max(0.0), d))
+        .collect();
+    let (per_side, merged) = merge_intervals(intervals);
+    let ghosts = (2.0 * per_side).min(n - n_loc);
+
+    // Neighbour rank-distances on one side.
+    let mut dists: Vec<usize> = Vec::new();
+    for &(a, b) in &merged {
+        let lo_rank = (a / n_loc).floor() as usize + 1;
+        let hi_rank = ((b - 1.0).max(0.0) / n_loc).floor() as usize + 1;
+        for d in lo_rank..=hi_rank {
+            if d < ranks {
+                dists.push(d);
+            }
+        }
+    }
+    dists.sort_unstable();
+    dists.dedup();
+    let msgs = (2.0 * dists.len() as f64).min(ranks as f64 - 1.0);
+
+    // Off-diagonal nnz: each crossing (row, offset) pair is one entry.
+    let offdiag_nnz: f64 = 2.0
+        * deltas
+            .iter()
+            .map(|&d| d.min(n_loc))
+            .sum::<f64>()
+            .min(k as f64 * n_loc / 2.0);
+
+    PartitionStats {
+        rows_per_rank: n_loc,
+        nnz_per_rank: k as f64 * n_loc,
+        ghosts_per_rank: ghosts,
+        msgs_per_rank: msgs,
+        offdiag_nnz,
+        band,
+        neighbour_distances: dists,
+    }
+}
+
+/// Model-mode timing report for one configuration.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub cfg_cores: usize,
+    pub ranks: usize,
+    pub threads: usize,
+    /// Seconds in MatMult per solve (the Figure 10-right / 11 metric).
+    pub matmult_time: f64,
+    /// Seconds in the whole solve (the Figure 10-left metric).
+    pub ksp_time: f64,
+    /// One-iteration breakdown: (diag compute, scatter, offdiag,
+    /// blas1+reductions).
+    pub per_iter: (f64, f64, f64, f64),
+    pub stats: PartitionStats,
+}
+
+/// Price a solve on `cluster`.
+pub fn simulate(cluster: &Cluster, cfg: &SimConfig) -> SimReport {
+    let stats = partition_stats(cfg.case, cfg.scale, cfg.ranks);
+    let node = &cluster.node;
+    let overhead = CompilerModel::paper(cfg.compiler);
+    let cost = NodeCostModel::hybrid(node, cfg.threads, overhead);
+
+    let ranks_per_node = (node.cores_per_node() / cfg.threads).min(cfg.ranks).max(1);
+    let net = NetModel::for_job(cluster, ranks_per_node);
+
+    // --- MatMult -----------------------------------------------------------
+    // Vector locality for the threaded products (§VII): the penalty bites
+    // when a rank's threads span more than one UMA region — then a thread
+    // reaching ±band rows around its chunk crosses into pages another
+    // region first-touched. With the paper's UMA-per-rank placement
+    // (threads ≤ region width) all the rank's pages share one bank and
+    // the accesses stay local.
+    let umas_spanned = cfg.threads.div_ceil(node.cores_per_uma().max(1));
+    let rows_per_thread = stats.rows_per_rank / cfg.threads as f64;
+    let local_frac = if umas_spanned <= 1 {
+        1.0
+    } else {
+        NodeCostModel::band_locality(stats.band, rows_per_thread)
+    };
+
+    let diag_nnz = (stats.nnz_per_rank - stats.offdiag_nnz).max(0.0);
+    let t_diag = cost.spmv_time(diag_nnz, local_frac);
+    let intra_frac = stats.intra_fraction(ranks_per_node);
+    let inter_msgs = stats.msgs_per_rank * (1.0 - intra_frac);
+    let concurrent = ((ranks_per_node as f64) * (1.0 - intra_frac))
+        .ceil()
+        .max(1.0) as usize;
+    let t_scatter = net.neighbour_exchange(
+        stats.msgs_per_rank.round() as usize,
+        8.0 * stats.ghosts_per_rank / stats.msgs_per_rank.max(1.0),
+        intra_frac,
+        concurrent,
+    );
+    let _ = inter_msgs;
+    let t_off = cost.spmv_time(stats.offdiag_nnz, local_frac);
+    // VecScatter pack/unpack: every ghost element is copied through a send
+    // buffer on the owner and into the sequential ghost vector on the
+    // receiver (~3 × 8 B of memory traffic per element). Pure MPI pays
+    // this once per core; hybrid shares it across the rank's threads —
+    // part of the paper's "less data needs to be gathered" advantage.
+    let t_pack = cost.stream_time(stats.ghosts_per_rank * 24.0, 1.0);
+    // Overlap: scatter proceeds while the diagonal product runs (§VII).
+    let t_matmult = t_diag.max(t_scatter) + t_off + t_pack;
+
+    // --- BLAS-1 + reductions per iteration ----------------------------------
+    let n_loc = stats.rows_per_rank;
+    let (dots, axpys) = match cfg.ksp_type {
+        // CG: 2 dots + 1 norm (priced as dots), 3 axpy-class, + PC apply.
+        "cg" => (3.0, 4.0),
+        // GMRES(30): ~ (j+1)/2 dots per iteration ≈ 16, plus axpys.
+        "gmres" => (17.0, 2.0),
+        _ => (3.0, 4.0),
+    };
+    let t_blas1 = dots * (cost.dot_local_time(n_loc) + net.allreduce(8.0, cfg.ranks))
+        + axpys * cost.axpy_time(n_loc);
+
+    let per_iter = t_matmult + t_blas1;
+    SimReport {
+        cfg_cores: cfg.cores(),
+        ranks: cfg.ranks,
+        threads: cfg.threads,
+        matmult_time: t_matmult * cfg.iterations as f64,
+        ksp_time: per_iter * cfg.iterations as f64,
+        per_iter: (t_diag, t_scatter, t_off, t_blas1),
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::hector_xe6;
+
+    fn cfg(case: TestCase, scale: f64, ranks: usize, threads: usize) -> SimConfig {
+        SimConfig {
+            case,
+            scale,
+            ranks,
+            threads,
+            iterations: 100,
+            ksp_type: "cg",
+            compiler: Compiler::Cray803,
+        }
+    }
+
+    #[test]
+    fn merge_intervals_basics() {
+        let (total, merged) = merge_intervals(vec![(0.0, 2.0), (1.0, 3.0), (5.0, 6.0)]);
+        assert_eq!(total, 4.0);
+        assert_eq!(merged, vec![(0.0, 3.0), (5.0, 6.0)]);
+        let (t, m) = merge_intervals(vec![(1.0, 1.0)]);
+        assert_eq!(t, 0.0);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn partition_stats_match_real_assembly() {
+        // Cross-check the closed-form geometry against the real
+        // MatMPIAIJ/VecScatter at a feasible scale.
+        use crate::comm::world::World;
+        use crate::matgen::cases::generate_rows;
+        use crate::mat::mpiaij::MatMPIAIJ;
+        use crate::vec::ctx::ThreadCtx;
+        use crate::vec::mpi::Layout;
+        for (case, scale, ranks) in [
+            (TestCase::SaltPressure, 0.01, 4usize),
+            (TestCase::LockExchangePressure, 0.02, 3),
+            (TestCase::BfsVelocity, 0.003, 4),
+        ] {
+            let model = partition_stats(case, scale, ranks);
+            let reals = World::run(ranks, move |mut c| {
+                let spec = case.grid(scale);
+                let layout = Layout::split(spec.rows(), c.size());
+                let (lo, hi) = layout.range(c.rank());
+                let a = MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout,
+                    generate_rows(case, scale, lo, hi),
+                    &mut c,
+                    ThreadCtx::serial(),
+                )
+                .unwrap();
+                (a.ghost_in() as f64, a.nnz_split().1 as f64)
+            });
+            let mean_ghosts: f64 = reals.iter().map(|r| r.0).sum::<f64>() / ranks as f64;
+            let mean_off: f64 = reals.iter().map(|r| r.1).sum::<f64>() / ranks as f64;
+            // The model ignores the periodic wrap (real ranks see slightly
+            // more); require agreement within 40%.
+            let rel_g = (model.ghosts_per_rank - mean_ghosts).abs() / mean_ghosts;
+            assert!(
+                rel_g < 0.4,
+                "{case:?}: ghosts model {} vs real {mean_ghosts}",
+                model.ghosts_per_rank
+            );
+            let rel_o = (model.offdiag_nnz - mean_off).abs() / mean_off;
+            assert!(
+                rel_o < 0.5,
+                "{case:?}: offdiag model {} vs real {mean_off}",
+                model.offdiag_nnz
+            );
+        }
+    }
+
+    #[test]
+    fn total_ghost_volume_grows_with_ranks() {
+        let g = |ranks: usize| {
+            partition_stats(TestCase::FluePressure, 1.0, ranks).ghosts_per_rank * ranks as f64
+        };
+        assert!(g(1024) < g(4096), "{} vs {}", g(1024), g(4096));
+        assert!(g(4096) < g(16384));
+    }
+
+    #[test]
+    fn hybrid_beats_mpi_at_scale_flue() {
+        // Figure 11's content: at 8192 cores, 4 and 8 threads beat pure
+        // MPI by >50% (time reduced by more than a third).
+        let cluster = hector_xe6();
+        let mpi = simulate(&cluster, &cfg(TestCase::FluePressure, 1.0, 8192, 1));
+        let t4 = simulate(&cluster, &cfg(TestCase::FluePressure, 1.0, 2048, 4));
+        let t8 = simulate(&cluster, &cfg(TestCase::FluePressure, 1.0, 1024, 8));
+        assert!(
+            t4.matmult_time < 0.67 * mpi.matmult_time,
+            ">50% for 4T: mpi {} vs {}",
+            mpi.matmult_time,
+            t4.matmult_time
+        );
+        assert!(
+            t8.matmult_time < 0.67 * mpi.matmult_time,
+            ">50% for 8T: mpi {} vs {}",
+            mpi.matmult_time,
+            t8.matmult_time
+        );
+    }
+
+    #[test]
+    fn mpi_scaling_stalls_hybrid_continues() {
+        // Figure 11: "For the MPI code strong scaling essentially stops at
+        // 2k cores. The hybrid code on the other hand continues to scale."
+        let cluster = hector_xe6();
+        let mpi_2k = simulate(&cluster, &cfg(TestCase::FluePressure, 1.0, 2048, 1));
+        let mpi_8k = simulate(&cluster, &cfg(TestCase::FluePressure, 1.0, 8192, 1));
+        let hyb_2k = simulate(&cluster, &cfg(TestCase::FluePressure, 1.0, 512, 4));
+        let hyb_8k = simulate(&cluster, &cfg(TestCase::FluePressure, 1.0, 2048, 4));
+        let mpi_speedup = mpi_2k.matmult_time / mpi_8k.matmult_time;
+        let hyb_speedup = hyb_2k.matmult_time / hyb_8k.matmult_time;
+        assert!(
+            mpi_speedup < 2.2,
+            "MPI 2k->8k should stall (got {mpi_speedup:.2}x for 4x cores)"
+        );
+        assert!(
+            hyb_speedup > mpi_speedup + 0.3,
+            "hybrid must scale further: {hyb_speedup:.2} vs {mpi_speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn small_core_counts_hybrid_advantage_smaller() {
+        // Fig 10/11: "for smaller numbers of cores … the benefits of using
+        // threads are less pronounced".
+        let cluster = hector_xe6();
+        let gain = |cores: usize| {
+            let mpi = simulate(&cluster, &cfg(TestCase::SaltPressure, 1.0, cores, 1));
+            let hyb = simulate(&cluster, &cfg(TestCase::SaltPressure, 1.0, cores / 4, 4));
+            mpi.ksp_time / hyb.ksp_time
+        };
+        assert!(
+            gain(512) > gain(64),
+            "gain at 512 {} vs 64 {}",
+            gain(512),
+            gain(64)
+        );
+    }
+
+    #[test]
+    fn intra_fraction_behaviour() {
+        let s = PartitionStats {
+            rows_per_rank: 100.0,
+            nnz_per_rank: 1000.0,
+            ghosts_per_rank: 10.0,
+            msgs_per_rank: 4.0,
+            offdiag_nnz: 20.0,
+            band: 50.0,
+            neighbour_distances: vec![1, 24],
+        };
+        // rpn=32: d=1 mostly on-node (31/32), d=24 mostly off (8/32).
+        let f = s.intra_fraction(32);
+        assert!((f - (31.0 / 32.0 + 8.0 / 32.0) / 2.0).abs() < 1e-12);
+        // rpn=1: everything off-node.
+        assert_eq!(s.intra_fraction(1), 0.0);
+    }
+
+    #[test]
+    fn report_components_positive() {
+        let cluster = hector_xe6();
+        let r = simulate(&cluster, &cfg(TestCase::SaltPressure, 1.0, 64, 4));
+        let (a, b, c, d) = r.per_iter;
+        assert!(a > 0.0 && b > 0.0 && c >= 0.0 && d > 0.0);
+        assert!(r.ksp_time > r.matmult_time);
+        assert_eq!(r.cfg_cores, 256);
+    }
+}

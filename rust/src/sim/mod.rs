@@ -1,0 +1,24 @@
+//! The performance / energy model ("model mode").
+//!
+//! The paper's multi-node results (Figures 10, 11) were measured on up to
+//! 16,384 HECToR cores; its energy study (Figure 9) used likwid-powermeter
+//! on an i7. Neither is available here, so this module prices the *actual
+//! algorithm structure* — the same partition geometry, scatter pattern and
+//! per-iteration operation sequence the real code executes — with the
+//! calibrated NUMA model ([`crate::numa::bandwidth`]), the α–β network
+//! model ([`crate::comm::timing`]) and the Table-4 fork-join overheads.
+//!
+//! Every model constant is either calibrated against the paper's own
+//! single-node measurements (Tables 2–4) or derived from the generator
+//! geometry; `calibrate` additionally measures the build host so that
+//! real-mode and model-mode numbers can be sanity-checked against each
+//! other in the benches.
+
+pub mod cost;
+pub mod exec;
+pub mod energy;
+pub mod calibrate;
+
+pub use cost::NodeCostModel;
+pub use energy::EnergyModel;
+pub use exec::{SimConfig, SimReport};

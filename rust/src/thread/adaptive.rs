@@ -1,0 +1,123 @@
+//! Size-adaptive threading cut-off (§VI.C).
+//!
+//! "An advantage that macros can bring is the ability to switch the
+//! multi-threaded parallelism on or off, depending on the size of the
+//! objects that are being used." The paper leaves this as future work; we
+//! implement it: a policy decides, per parallel region, whether forking
+//! pays for itself, given the region's size, its per-element cost, and the
+//! pool's fork-join overhead.
+
+use crate::thread::overhead::CompilerModel;
+
+/// Decides whether a parallel region of `n` elements should fork.
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    /// Fork-join overhead (seconds) for the pool's thread count.
+    pub fork_overhead: f64,
+    /// Estimated serial time per element (seconds) — memory-bound vector
+    /// ops stream ~16 B/element at a few GB/s, so ~2–5 ns/element.
+    pub per_elem: f64,
+    /// Minimum speedup forking must promise (hysteresis; > 1).
+    pub min_gain: f64,
+    /// Hard floor: never fork below this many elements.
+    pub floor: usize,
+}
+
+impl AdaptivePolicy {
+    /// Policy for a pool of `threads` threads under a compiler model.
+    pub fn for_pool(model: &CompilerModel, threads: usize) -> AdaptivePolicy {
+        AdaptivePolicy {
+            fork_overhead: model.overhead(threads),
+            per_elem: 3e-9,
+            min_gain: 1.1,
+            floor: 256,
+        }
+    }
+
+    /// Disabled policy: always fork (the paper's current implementation).
+    pub fn always() -> AdaptivePolicy {
+        AdaptivePolicy {
+            fork_overhead: 0.0,
+            per_elem: 1.0,
+            min_gain: 1.0,
+            floor: 0,
+        }
+    }
+
+    /// Should a region of `n` elements on `threads` threads fork?
+    ///
+    /// Serial time `n·c`; threaded time `n·c/T + o`. Fork iff
+    /// `serial > min_gain · threaded`.
+    pub fn should_fork(&self, n: usize, threads: usize) -> bool {
+        if threads <= 1 || n < self.floor {
+            return false;
+        }
+        let serial = n as f64 * self.per_elem;
+        let threaded = serial / threads as f64 + self.fork_overhead;
+        serial > self.min_gain * threaded
+    }
+
+    /// The break-even size: smallest `n` for which forking pays.
+    pub fn breakeven(&self, threads: usize) -> usize {
+        if threads <= 1 {
+            return usize::MAX;
+        }
+        // n·c = g·(n·c/T + o)  =>  n = g·o / (c·(1 − g/T))
+        let g = self.min_gain;
+        let t = threads as f64;
+        let denom = self.per_elem * (1.0 - g / t);
+        if denom <= 0.0 {
+            return usize::MAX;
+        }
+        ((g * self.fork_overhead / denom).ceil() as usize).max(self.floor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thread::overhead::{Compiler, CompilerModel};
+
+    #[test]
+    fn small_objects_stay_serial() {
+        let m = CompilerModel::paper(Compiler::Gcc462);
+        let p = AdaptivePolicy::for_pool(&m, 8);
+        // GCC @8 threads: 21.65µs overhead; a 1k-element axpy (~3µs serial)
+        // must NOT fork.
+        assert!(!p.should_fork(1_000, 8));
+        // A 10M-element axpy must fork.
+        assert!(p.should_fork(10_000_000, 8));
+    }
+
+    #[test]
+    fn breakeven_consistent_with_should_fork() {
+        let m = CompilerModel::paper(Compiler::Cray803);
+        let p = AdaptivePolicy::for_pool(&m, 16);
+        let be = p.breakeven(16);
+        assert!(be > p.floor);
+        assert!(p.should_fork(be + 1, 16));
+        assert!(!p.should_fork(be.saturating_sub(2).max(1), 16));
+    }
+
+    #[test]
+    fn cheaper_runtime_forks_sooner() {
+        let cray = AdaptivePolicy::for_pool(&CompilerModel::paper(Compiler::Cray803), 8);
+        let gcc = AdaptivePolicy::for_pool(&CompilerModel::paper(Compiler::Gcc462), 8);
+        assert!(cray.breakeven(8) < gcc.breakeven(8));
+    }
+
+    #[test]
+    fn always_policy_forks_everything() {
+        let p = AdaptivePolicy::always();
+        assert!(p.should_fork(1, 2));
+        assert!(!p.should_fork(1, 1)); // never "fork" on one thread
+    }
+
+    #[test]
+    fn one_thread_never_forks() {
+        let m = CompilerModel::paper(Compiler::Pgi121);
+        let p = AdaptivePolicy::for_pool(&m, 1);
+        assert!(!p.should_fork(usize::MAX / 2, 1));
+        assert_eq!(p.breakeven(1), usize::MAX);
+    }
+}

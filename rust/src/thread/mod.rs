@@ -1,0 +1,19 @@
+//! The "OpenMP" substrate: a persistent fork-join thread pool with
+//! `schedule(static)` semantics, core pinning, measured fork-join overheads
+//! and the paper's per-compiler overhead models (Table 4), plus the
+//! size-adaptive threading cut-off the paper lists as future work (§VI.C).
+//!
+//! PETSc's OpenMP branch wraps parallel regions in `VecOMPParallelBegin/End`
+//! macros (Table 5). The analogue here is [`pool::Pool::for_range`]: the
+//! caller supplies a closure over `(thread id, __start, __end)` and the pool
+//! guarantees the same static chunking that paged the data (the paging
+//! contract of §VI.A).
+
+pub mod schedule;
+pub mod pool;
+pub mod overhead;
+pub mod adaptive;
+
+pub use adaptive::AdaptivePolicy;
+pub use pool::Pool;
+pub use schedule::{static_chunk, static_chunks};

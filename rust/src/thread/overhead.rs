@@ -1,0 +1,193 @@
+//! Fork-join ("parallel for") overheads — Table 4 of the paper.
+//!
+//! Two faces, as everywhere in this repo:
+//!
+//! - [`measure_fork_join`] measures the **real** overhead of this library's
+//!   pool on the host (the honest analogue of the EPCC/CLOMP
+//!   microbenchmarks the paper cites).
+//! - [`CompilerModel`] reproduces the **paper's** Table 4 numbers for the
+//!   Cray, GCC and PGI OpenMP runtimes, interpolated over thread counts.
+//!   These feed Figure 7 (the gcc-vs-craycc comparison) and the adaptive
+//!   threading cut-off.
+
+use crate::thread::pool::Pool;
+use crate::util::stats::Summary;
+
+/// Measure the fork-join overhead of a pool: mean seconds to execute an
+/// empty parallel region (EPCC "parallel" overhead methodology: reference
+/// serial time is ~0 for an empty body).
+pub fn measure_fork_join(pool: &Pool, reps: usize) -> Summary {
+    let reps = reps.max(16);
+    // Warm up.
+    for _ in 0..32 {
+        pool.run(|_| {});
+    }
+    // Time in batches of 64 forks to get above timer resolution.
+    const BATCH: usize = 64;
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        for _ in 0..BATCH {
+            pool.run(|_| {});
+        }
+        samples.push(t0.elapsed().as_secs_f64() / BATCH as f64);
+    }
+    Summary::of(&samples)
+}
+
+/// The compilers of Table 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Compiler {
+    Cray803,
+    Gcc462,
+    Pgi121,
+    /// This library's own pool, measured on the host at model-build time and
+    /// frozen into the model for reproducibility.
+    Native,
+}
+
+impl Compiler {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compiler::Cray803 => "Cray 8.0.3",
+            Compiler::Gcc462 => "GCC 4.6.2",
+            Compiler::Pgi121 => "PGI 12.1",
+            Compiler::Native => "mmpetsc pool",
+        }
+    }
+
+    pub fn all_paper() -> [Compiler; 3] {
+        [Compiler::Cray803, Compiler::Gcc462, Compiler::Pgi121]
+    }
+}
+
+/// Thread counts of Table 4's columns.
+pub const TABLE4_THREADS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Table 4, µs — "overheads for the `parallel for` loop construct and the
+/// creation of a static loop schedule".
+const TABLE4_US: [(Compiler, [f64; 6]); 3] = [
+    (Compiler::Cray803, [1.04, 1.02, 1.39, 2.74, 4.86, 8.10]),
+    (Compiler::Gcc462, [0.55, 1.16, 5.94, 21.65, 50.15, 88.40]),
+    (Compiler::Pgi121, [0.22, 0.42, 1.73, 2.83, 5.44, 6.92]),
+];
+
+/// A per-compiler fork-join overhead model: log2-interpolates Table 4.
+#[derive(Debug, Clone)]
+pub struct CompilerModel {
+    pub compiler: Compiler,
+    /// `(threads, seconds)` knots.
+    knots: Vec<(usize, f64)>,
+}
+
+impl CompilerModel {
+    pub fn paper(compiler: Compiler) -> CompilerModel {
+        let row = TABLE4_US
+            .iter()
+            .find(|(c, _)| *c == compiler)
+            .unwrap_or_else(|| panic!("{compiler:?} is not a paper compiler"));
+        CompilerModel {
+            compiler,
+            knots: TABLE4_THREADS
+                .iter()
+                .zip(row.1.iter())
+                .map(|(&t, &us)| (t, us * 1e-6))
+                .collect(),
+        }
+    }
+
+    /// Build from measurements of this library's own pool.
+    pub fn measured_native(max_threads: usize) -> CompilerModel {
+        let mut knots = Vec::new();
+        let mut t = 1;
+        while t <= max_threads {
+            let pool = Pool::new(t);
+            let s = measure_fork_join(&pool, 24);
+            knots.push((t, s.median));
+            t *= 2;
+        }
+        CompilerModel {
+            compiler: Compiler::Native,
+            knots,
+        }
+    }
+
+    /// Fork-join overhead (seconds) for a parallel region on `threads`
+    /// threads; piecewise-linear in log2(threads).
+    pub fn overhead(&self, threads: usize) -> f64 {
+        let threads = threads.max(1);
+        let first = self.knots[0];
+        if threads <= first.0 {
+            return first.1;
+        }
+        for w in self.knots.windows(2) {
+            let (t0, o0) = w[0];
+            let (t1, o1) = w[1];
+            if threads <= t1 {
+                let x = ((threads as f64).log2() - (t0 as f64).log2())
+                    / ((t1 as f64).log2() - (t0 as f64).log2());
+                return o0 + x * (o1 - o0);
+            }
+        }
+        // Extrapolate beyond the last knot linearly in log2.
+        let (&(t0, o0), &(t1, o1)) = {
+            let k = &self.knots;
+            (&k[k.len() - 2], &k[k.len() - 1])
+        };
+        let slope = (o1 - o0) / ((t1 as f64).log2() - (t0 as f64).log2());
+        o1 + slope * ((threads as f64).log2() - (t1 as f64).log2())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_knots_exact() {
+        let near = |a: f64, b: f64| (a - b).abs() < 1e-12;
+        let cray = CompilerModel::paper(Compiler::Cray803);
+        assert!(near(cray.overhead(1), 1.04e-6));
+        assert!(near(cray.overhead(32), 8.10e-6));
+        let gcc = CompilerModel::paper(Compiler::Gcc462);
+        assert!(near(gcc.overhead(8), 21.65e-6));
+        let pgi = CompilerModel::paper(Compiler::Pgi121);
+        assert!(near(pgi.overhead(2), 0.42e-6));
+    }
+
+    #[test]
+    fn gcc_much_worse_than_cray_at_scale() {
+        // The paper's observation driving Figure 7's compiler comparison.
+        let cray = CompilerModel::paper(Compiler::Cray803);
+        let gcc = CompilerModel::paper(Compiler::Gcc462);
+        for t in [4, 8, 16, 32] {
+            assert!(gcc.overhead(t) > 2.0 * cray.overhead(t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn interpolation_between_knots() {
+        let cray = CompilerModel::paper(Compiler::Cray803);
+        let o3 = cray.overhead(3);
+        assert!(o3 > 1.02e-6 && o3 < 1.39e-6);
+        // log2 midpoint of 2 and 4 is ~2.83; at t=3 x=(log2 3 - 1)/1≈0.585
+        let expect = 1.02e-6 + 0.585 * (1.39e-6 - 1.02e-6);
+        assert!((o3 - expect).abs() < 0.01e-6);
+    }
+
+    #[test]
+    fn extrapolates_past_32() {
+        let cray = CompilerModel::paper(Compiler::Cray803);
+        assert!(cray.overhead(64) > cray.overhead(32));
+    }
+
+    #[test]
+    fn native_pool_measured() {
+        // Overhead must be finite and small; on any sane host the fork-join
+        // of a 2-thread pool is below 1 ms.
+        let pool = Pool::new(2);
+        let s = measure_fork_join(&pool, 16);
+        assert!(s.median > 0.0);
+        assert!(s.median < 1e-3, "fork-join {}s", s.median);
+    }
+}

@@ -1,0 +1,346 @@
+//! The persistent fork-join thread pool (the OpenMP runtime analogue).
+//!
+//! One pool per simulated MPI rank. Workers are created once (OpenMP's
+//! thread-pool behaviour — the paper's §V.C interoperability argument is
+//! precisely that an application should not run *two* of these), optionally
+//! pinned to cores, and reused by every parallel region.
+//!
+//! The master thread participates as thread 0, workers are threads
+//! `1..nthreads`, matching OpenMP semantics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+use crate::topology::machine::{CoreId, MachineTopology, UmaRegionId};
+
+/// A parallel job handed to workers: a borrowed closure made 'static for
+/// the duration of the fork (the join barrier guarantees the borrow ends
+/// before `run` returns).
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+}
+// SAFETY: the referenced closure is Sync and outlives the fork (join
+// barrier in `Pool::run`).
+unsafe impl Send for Job {}
+
+struct Worker {
+    sender: SyncSender<Job>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The fork-join pool.
+pub struct Pool {
+    workers: Vec<Worker>,
+    nthreads: usize,
+    /// Completion countdown for the active fork.
+    remaining: Arc<AtomicUsize>,
+    /// Core each thread is pinned to (empty when unpinned).
+    cores: Vec<CoreId>,
+    /// UMA region of each thread under the *modelled* topology (all zero
+    /// when the pool is unpinned / topology-free).
+    umas: Vec<UmaRegionId>,
+}
+
+impl Pool {
+    /// An unpinned pool of `nthreads` threads (master + nthreads-1 workers).
+    pub fn new(nthreads: usize) -> Pool {
+        Self::build(nthreads, None)
+    }
+
+    /// A single-thread pool: every parallel region degenerates to a serial
+    /// loop on the caller (OpenMP with `OMP_NUM_THREADS=1`).
+    pub fn serial() -> Pool {
+        Self::new(1)
+    }
+
+    /// A pool pinned to `cores` of the *host* machine, with `node` providing
+    /// the modelled UMA mapping for locality bookkeeping. The host may have
+    /// fewer cores than the model; pinning silently wraps modulo the host
+    /// CPU count (the model mapping stays faithful).
+    pub fn pinned(node: &MachineTopology, cores: &[CoreId]) -> Pool {
+        assert!(!cores.is_empty());
+        let mut pool = Self::build(cores.len(), Some(cores.to_vec()));
+        pool.umas = cores.iter().map(|&c| node.uma_of_core(c)).collect();
+        pool
+    }
+
+    fn build(nthreads: usize, cores: Option<Vec<CoreId>>) -> Pool {
+        assert!(nthreads >= 1, "pool needs at least one thread");
+        let remaining = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(nthreads.saturating_sub(1));
+        for tid in 1..nthreads {
+            let (tx, rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(1);
+            let remaining = Arc::clone(&remaining);
+            let pin = cores.as_ref().map(|c| c[tid]);
+            let handle = std::thread::Builder::new()
+                .name(format!("mmpetsc-omp-{tid}"))
+                .spawn(move || {
+                    if let Some(core) = pin {
+                        pin_current_thread(core);
+                    }
+                    while let Ok(job) = rx.recv() {
+                        (job.f)(tid);
+                        remaining.fetch_sub(1, Ordering::Release);
+                    }
+                })
+                .expect("spawn pool worker");
+            workers.push(Worker {
+                sender: tx,
+                handle: Some(handle),
+            });
+        }
+        if let Some(ref c) = cores {
+            pin_current_thread(c[0]); // master participates as thread 0
+        }
+        Pool {
+            workers,
+            nthreads,
+            remaining,
+            cores: cores.unwrap_or_default(),
+            umas: vec![0; nthreads],
+        }
+    }
+
+    /// Number of threads (including the master).
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// The modelled UMA region of thread `tid`.
+    pub fn thread_uma(&self, tid: usize) -> UmaRegionId {
+        self.umas.get(tid).copied().unwrap_or(0)
+    }
+
+    /// The pinned core of thread `tid`, if pinned.
+    pub fn thread_core(&self, tid: usize) -> Option<CoreId> {
+        self.cores.get(tid).copied()
+    }
+
+    /// Fork-join: run `f(tid)` on every thread (master runs tid 0).
+    /// The parallel-region primitive all higher-level loops build on.
+    pub fn run<F: Fn(usize) + Sync>(&self, f: F) {
+        if self.nthreads == 1 {
+            f(0);
+            return;
+        }
+        let r: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: we erase the lifetime, but join below ensures every worker
+        // is done with the reference before `f` is dropped.
+        let job = Job {
+            f: unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(r)
+            },
+        };
+        self.remaining
+            .store(self.workers.len(), Ordering::Release);
+        for w in &self.workers {
+            w.sender.send(job).expect("pool worker died");
+        }
+        f(0);
+        // Join barrier: spin briefly, then yield.
+        let mut spins = 0u32;
+        while self.remaining.load(Ordering::Acquire) != 0 {
+            spins += 1;
+            if spins < 10_000 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// `parallel for` over `0..n` with the static schedule: `f(tid, lo, hi)`.
+    /// This is the `VecOMPParallelBegin(x, ...)` / `__start..__end` analogue
+    /// (paper Table 5).
+    pub fn for_range<F: Fn(usize, usize, usize) + Sync>(&self, n: usize, f: F) {
+        let t = self.nthreads;
+        self.run(|tid| {
+            let (lo, hi) = super::schedule::static_chunk(n, t, tid);
+            if lo < hi {
+                f(tid, lo, hi);
+            }
+        });
+    }
+
+    /// Parallel reduction over static chunks.
+    pub fn reduce<T, M, C>(&self, n: usize, identity: T, map: M, combine: C) -> T
+    where
+        T: Send + Clone,
+        M: Fn(usize, usize, usize) -> T + Sync,
+        C: Fn(T, T) -> T,
+    {
+        let t = self.nthreads;
+        let slots: Vec<std::sync::Mutex<Option<T>>> =
+            (0..t).map(|_| std::sync::Mutex::new(None)).collect();
+        self.run(|tid| {
+            let (lo, hi) = super::schedule::static_chunk(n, t, tid);
+            let v = if lo < hi {
+                Some(map(tid, lo, hi))
+            } else {
+                None
+            };
+            *slots[tid].lock().unwrap() = v;
+        });
+        let mut acc = identity;
+        for s in slots {
+            if let Some(v) = s.into_inner().unwrap() {
+                acc = combine(acc, v);
+            }
+        }
+        acc
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // Dropping each sender closes its channel; the worker's recv() errors
+        // and the thread exits, then we join it.
+        let workers = std::mem::take(&mut self.workers);
+        for mut w in workers {
+            drop(w.sender);
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Pin the calling thread to a host CPU (wrapping modulo available CPUs).
+pub fn pin_current_thread(core: CoreId) {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let ncpu = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
+        if ncpu <= 0 {
+            return;
+        }
+        let target = core % ncpu as usize;
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(target, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = core;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_threads_run() {
+        let pool = Pool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            hits.fetch_or(1 << tid, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn serial_pool_runs_master_only() {
+        let pool = Pool::serial();
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            hits.fetch_add(1 + tid as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn for_range_covers_exactly_once() {
+        let pool = Pool::new(3);
+        let n = 1001;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.for_range(n, |_tid, lo, hi| {
+            for c in &counts[lo..hi] {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn for_range_empty() {
+        let pool = Pool::new(4);
+        pool.for_range(0, |_, _, _| panic!("no work expected"));
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let pool = Pool::new(4);
+        let n = 10_000usize;
+        let data: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let s = pool.reduce(
+            n,
+            0.0,
+            |_tid, lo, hi| data[lo..hi].iter().sum::<f64>(),
+            |a, b| a + b,
+        );
+        let expect = (n * (n - 1) / 2) as f64;
+        assert_eq!(s, expect);
+    }
+
+    #[test]
+    fn reuse_many_forks() {
+        let pool = Pool::new(4);
+        let total = AtomicU64::new(0);
+        for _ in 0..1000 {
+            pool.run(|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4000);
+    }
+
+    #[test]
+    fn nested_data_borrow_is_safe() {
+        // The unsafe lifetime erasure must not outlive the call: mutate a
+        // stack vector through chunk-disjoint borrows.
+        let pool = Pool::new(4);
+        let mut v = vec![0u64; 4096];
+        let ptr = SendPtr(v.as_mut_ptr());
+        pool.for_range(v.len(), |_tid, lo, hi| {
+            // SAFETY: chunks are disjoint.
+            let p = &ptr;
+            for i in lo..hi {
+                unsafe { *p.0.add(i) = i as u64 }
+            }
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u64));
+    }
+
+    struct SendPtr(*mut u64);
+    unsafe impl Sync for SendPtr {}
+    unsafe impl Send for SendPtr {}
+
+    #[test]
+    fn pinned_pool_records_umas() {
+        let node = crate::topology::presets::hector_xe6_node();
+        let pool = Pool::pinned(&node, &[0, 8, 16, 24]);
+        assert_eq!(
+            (0..4).map(|t| pool.thread_uma(t)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(pool.thread_core(2), Some(16));
+        // still executes correctly
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            hits.fetch_or(1 << tid, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        // Just exercising Drop: no hang, no panic.
+        for _ in 0..10 {
+            let pool = Pool::new(8);
+            pool.run(|_| {});
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! OpenMP `schedule(static)` chunking.
+//!
+//! This is the **paging contract** of the whole library (§VI.A): the *same*
+//! function decides (a) which thread first-touches which element range at
+//! allocation time and (b) which thread computes which range in every
+//! parallel region. As long as both sides call [`static_chunk`], every
+//! compute access is page-local.
+//!
+//! The formula matches OpenMP's static schedule with unspecified chunk
+//! size: iterations are divided into `nthreads` contiguous chunks whose
+//! sizes differ by at most one, with the larger chunks first.
+
+/// The half-open range `[lo, hi)` of iterations thread `tid` of `nthreads`
+/// executes for a loop of `n` iterations.
+#[inline]
+pub fn static_chunk(n: usize, nthreads: usize, tid: usize) -> (usize, usize) {
+    debug_assert!(nthreads > 0 && tid < nthreads);
+    let base = n / nthreads;
+    let rem = n % nthreads;
+    // First `rem` threads take `base+1`, the rest `base`.
+    let lo = tid * base + tid.min(rem);
+    let hi = lo + base + usize::from(tid < rem);
+    (lo, hi)
+}
+
+/// All chunks for a loop of `n` iterations.
+pub fn static_chunks(n: usize, nthreads: usize) -> Vec<(usize, usize)> {
+    (0..nthreads).map(|t| static_chunk(n, nthreads, t)).collect()
+}
+
+/// The thread that owns iteration `i` under the static schedule — the
+/// inverse of [`static_chunk`]. Used when a consumer must locate data it
+/// did not page itself (e.g. the scatter receive side).
+#[inline]
+pub fn owner_of(n: usize, nthreads: usize, i: usize) -> usize {
+    debug_assert!(i < n);
+    let base = n / nthreads;
+    let rem = n % nthreads;
+    let boundary = rem * (base + 1);
+    if i < boundary {
+        i / (base + 1)
+    } else {
+        rem + (i - boundary) / base.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::{check, forall, pairs, usizes, PtConfig};
+
+    #[test]
+    fn chunks_partition_exactly() {
+        for n in [0usize, 1, 7, 64, 100, 1023] {
+            for t in [1usize, 2, 3, 4, 7, 8, 32] {
+                let chunks = static_chunks(n, t);
+                assert_eq!(chunks[0].0, 0);
+                assert_eq!(chunks[t - 1].1, n);
+                for w in chunks.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+                let sizes: Vec<usize> = chunks.iter().map(|(a, b)| b - a).collect();
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "balanced: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_omp_examples() {
+        // 10 iterations, 4 threads -> 3,3,2,2 (larger chunks first).
+        assert_eq!(static_chunks(10, 4), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        // n < nthreads: one iteration for the first n threads.
+        assert_eq!(static_chunks(2, 4), vec![(0, 1), (1, 2), (2, 2), (2, 2)]);
+    }
+
+    #[test]
+    fn owner_inverts_chunk() {
+        forall(
+            &PtConfig { cases: 200, ..Default::default() },
+            pairs(usizes(1, 10_000), usizes(1, 64)),
+            |&(n, t)| {
+                for tid in 0..t {
+                    let (lo, hi) = static_chunk(n, t, tid);
+                    for i in [lo, (lo + hi) / 2, hi.saturating_sub(1)] {
+                        if i >= lo && i < hi {
+                            if owner_of(n, t, i) != tid {
+                                return Err(format!(
+                                    "owner_of({n},{t},{i}) = {} != {tid}",
+                                    owner_of(n, t, i)
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_paging_contract() {
+        // Two independent calls agree — the property the library relies on.
+        forall(
+            &PtConfig::default(),
+            pairs(usizes(0, 100_000), usizes(1, 33)),
+            |&(n, t)| {
+                check(
+                    static_chunks(n, t) == static_chunks(n, t),
+                    "pure function",
+                )
+            },
+        );
+    }
+}

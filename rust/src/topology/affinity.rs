@@ -1,0 +1,331 @@
+//! Thread/process affinity: CPU sets, placement policies, and the
+//! `aprun -cc` list syntax (§IV.B, §VIII.C.2).
+//!
+//! The paper shows (Table 3, Figure 8) that *where* ranks and threads are
+//! pinned dominates achievable memory bandwidth on NUMA nodes. This module
+//! computes placements; `thread::pool` applies them to real OS threads via
+//! `sched_setaffinity`, and `numa::bandwidth` prices them in the model.
+
+use crate::error::{Error, Result};
+use crate::topology::machine::{CoreId, MachineTopology};
+
+/// A set of cores (bitmask over node cores).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CpuSet {
+    bits: Vec<u64>,
+    ncores: usize,
+}
+
+impl CpuSet {
+    pub fn empty(ncores: usize) -> Self {
+        CpuSet {
+            bits: vec![0; ncores.div_ceil(64)],
+            ncores,
+        }
+    }
+
+    pub fn from_cores(ncores: usize, cores: &[CoreId]) -> Self {
+        let mut s = CpuSet::empty(ncores);
+        for &c in cores {
+            s.insert(c);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, core: CoreId) {
+        assert!(core < self.ncores, "core {core} out of range");
+        self.bits[core / 64] |= 1 << (core % 64);
+    }
+
+    pub fn contains(&self, core: CoreId) -> bool {
+        core < self.ncores && self.bits[core / 64] & (1 << (core % 64)) != 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cores in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = CoreId> + '_ {
+        (0..self.ncores).filter(move |&c| self.contains(c))
+    }
+}
+
+/// How ranks/threads are mapped to cores.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AffinityPolicy {
+    /// OS default: pack sequentially from core 0 (what the paper calls
+    /// "default affinity" — round-robin close packing; worst for bandwidth
+    /// when under-populating).
+    Packed,
+    /// Spread across UMA regions first (the paper's best placement:
+    /// `-cc 0,8,16,24` style).
+    Spread,
+    /// Explicit core list, exactly `aprun -cc 0,4,8,12`.
+    Explicit(Vec<CoreId>),
+    /// One rank per UMA region, threads filling the region — the paper's
+    /// hybrid placement rule ("each of these processes is placed on its own
+    /// UMA region", §VIII.E).
+    UmaPerRank,
+}
+
+/// A concrete placement: for each rank, the core of each of its threads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// `cores[rank][thread]` = node-local core id.
+    pub cores: Vec<Vec<CoreId>>,
+    /// Total node cores (for validation).
+    pub ncores: usize,
+}
+
+impl Placement {
+    /// Compute a placement of `ranks × threads` execution streams on one
+    /// node under `policy`.
+    pub fn compute(
+        node: &MachineTopology,
+        ranks: usize,
+        threads: usize,
+        policy: &AffinityPolicy,
+    ) -> Result<Placement> {
+        let total = ranks * threads;
+        let ncores = node.cores_per_node();
+        if total > ncores {
+            return Err(Error::InvalidOption(format!(
+                "{ranks} ranks x {threads} threads = {total} streams > {ncores} cores on node"
+            )));
+        }
+        let flat: Vec<CoreId> = match policy {
+            AffinityPolicy::Packed => (0..total).collect(),
+            AffinityPolicy::Spread => spread_order(node).into_iter().take(total).collect(),
+            AffinityPolicy::Explicit(list) => {
+                if list.len() < total {
+                    return Err(Error::InvalidOption(format!(
+                        "explicit core list has {} entries, need {total}",
+                        list.len()
+                    )));
+                }
+                for &c in list {
+                    if c >= ncores {
+                        return Err(Error::InvalidOption(format!(
+                            "core {c} not on node (0..{ncores})"
+                        )));
+                    }
+                }
+                list[..total].to_vec()
+            }
+            AffinityPolicy::UmaPerRank => {
+                let umas = node.uma_regions();
+                let per_uma = node.cores_per_uma();
+                if threads > per_uma {
+                    return Err(Error::InvalidOption(format!(
+                        "{threads} threads per rank exceed UMA region width {per_uma}"
+                    )));
+                }
+                if ranks > umas {
+                    // more ranks than regions: fill regions round-robin
+                    // with offset packing inside each.
+                    let mut per_region_used = vec![0usize; umas];
+                    let mut flat = Vec::with_capacity(total);
+                    for r in 0..ranks {
+                        let uma = r % umas;
+                        let base = uma * per_uma + per_region_used[uma];
+                        if per_region_used[uma] + threads > per_uma {
+                            return Err(Error::InvalidOption(format!(
+                                "cannot fit rank {r} ({threads} threads) in UMA {uma}"
+                            )));
+                        }
+                        for t in 0..threads {
+                            flat.push(base + t);
+                        }
+                        per_region_used[uma] += threads;
+                    }
+                    flat
+                } else {
+                    let mut flat = Vec::with_capacity(total);
+                    for r in 0..ranks {
+                        let base = r * per_uma;
+                        for t in 0..threads {
+                            flat.push(base + t);
+                        }
+                    }
+                    flat
+                }
+            }
+        };
+        // Reject double-booking.
+        let mut seen = CpuSet::empty(ncores);
+        for &c in &flat {
+            if seen.contains(c) {
+                return Err(Error::InvalidOption(format!("core {c} assigned twice")));
+            }
+            seen.insert(c);
+        }
+        let cores = flat.chunks(threads).map(|c| c.to_vec()).collect();
+        Ok(Placement { cores, ncores })
+    }
+
+    /// The UMA regions each rank touches.
+    pub fn uma_footprint(&self, node: &MachineTopology, rank: usize) -> Vec<usize> {
+        let mut umas: Vec<usize> = self.cores[rank]
+            .iter()
+            .map(|&c| node.uma_of_core(c))
+            .collect();
+        umas.sort_unstable();
+        umas.dedup();
+        umas
+    }
+
+    /// Number of distinct UMA regions used by the whole placement.
+    pub fn distinct_umas(&self, node: &MachineTopology) -> usize {
+        let mut umas: Vec<usize> = self
+            .cores
+            .iter()
+            .flatten()
+            .map(|&c| node.uma_of_core(c))
+            .collect();
+        umas.sort_unstable();
+        umas.dedup();
+        umas.len()
+    }
+}
+
+/// The core visitation order that spreads consecutive streams as far apart
+/// as possible: first core 0 of each UMA region, then core 1 of each, …
+/// On the XE6 node this yields 0, 8, 16, 24, 1, 9, 17, 25, 2, …
+pub fn spread_order(node: &MachineTopology) -> Vec<CoreId> {
+    let per = node.cores_per_uma();
+    let umas = node.uma_regions();
+    let mut order = Vec::with_capacity(per * umas);
+    for offset in 0..per {
+        for uma in 0..umas {
+            order.push(uma * per + offset);
+        }
+    }
+    order
+}
+
+/// Parse an `aprun -cc` style core list: comma-separated entries, each a
+/// core or an inclusive range `a-b`. E.g. `"0-3"`, `"0,2,4,6"`, `"0,8,16,24"`.
+pub fn parse_cc_list(s: &str) -> Result<Vec<CoreId>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((a, b)) => {
+                let a: usize = a.trim().parse().map_err(|_| bad_cc(s))?;
+                let b: usize = b.trim().parse().map_err(|_| bad_cc(s))?;
+                if b < a {
+                    return Err(bad_cc(s));
+                }
+                out.extend(a..=b);
+            }
+            None => out.push(part.parse().map_err(|_| bad_cc(s))?),
+        }
+    }
+    if out.is_empty() {
+        return Err(bad_cc(s));
+    }
+    Ok(out)
+}
+
+fn bad_cc(s: &str) -> Error {
+    Error::InvalidOption(format!("invalid -cc core list `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::presets::hector_xe6_node;
+
+    #[test]
+    fn cc_list_forms() {
+        assert_eq!(parse_cc_list("0-3").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cc_list("0,2,4,6").unwrap(), vec![0, 2, 4, 6]);
+        assert_eq!(parse_cc_list("0,8,16,24").unwrap(), vec![0, 8, 16, 24]);
+        assert_eq!(parse_cc_list("0, 4, 8-9").unwrap(), vec![0, 4, 8, 9]);
+        assert!(parse_cc_list("").is_err());
+        assert!(parse_cc_list("3-1").is_err());
+        assert!(parse_cc_list("x").is_err());
+    }
+
+    #[test]
+    fn spread_order_xe6() {
+        let node = hector_xe6_node();
+        let order = spread_order(&node);
+        assert_eq!(&order[..8], &[0, 8, 16, 24, 1, 9, 17, 25]);
+        assert_eq!(order.len(), 32);
+    }
+
+    #[test]
+    fn packed_vs_spread_distinct_umas() {
+        let node = hector_xe6_node();
+        // 4 threads packed -> 1 UMA region; spread -> 4 (Table 3's contrast).
+        let packed = Placement::compute(&node, 1, 4, &AffinityPolicy::Packed).unwrap();
+        assert_eq!(packed.distinct_umas(&node), 1);
+        let spread = Placement::compute(&node, 1, 4, &AffinityPolicy::Spread).unwrap();
+        assert_eq!(spread.distinct_umas(&node), 4);
+    }
+
+    #[test]
+    fn explicit_matches_table3_rows() {
+        let node = hector_xe6_node();
+        for (cc, expected_umas) in [
+            ("0-3", 1),
+            ("0,2,4,6", 1),
+            ("0,4,8,12", 2),
+            ("0,8,16,24", 4),
+        ] {
+            let list = parse_cc_list(cc).unwrap();
+            let p = Placement::compute(&node, 1, 4, &AffinityPolicy::Explicit(list)).unwrap();
+            assert_eq!(p.distinct_umas(&node), expected_umas, "cc={cc}");
+        }
+    }
+
+    #[test]
+    fn uma_per_rank_hybrid() {
+        let node = hector_xe6_node();
+        // 4 ranks x 8 threads on a 32-core node: each rank owns one region.
+        let p = Placement::compute(&node, 4, 8, &AffinityPolicy::UmaPerRank).unwrap();
+        for r in 0..4 {
+            assert_eq!(p.uma_footprint(&node, r), vec![r]);
+        }
+        // 8 ranks x 4 threads: two ranks per region, no overlap.
+        let p = Placement::compute(&node, 8, 4, &AffinityPolicy::UmaPerRank).unwrap();
+        assert_eq!(p.distinct_umas(&node), 4);
+        let mut all: Vec<_> = p.cores.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rejects_oversubscription_and_double_booking() {
+        let node = hector_xe6_node();
+        assert!(Placement::compute(&node, 8, 8, &AffinityPolicy::Packed).is_err());
+        assert!(Placement::compute(
+            &node,
+            1,
+            2,
+            &AffinityPolicy::Explicit(vec![5, 5])
+        )
+        .is_err());
+        assert!(Placement::compute(&node, 1, 16, &AffinityPolicy::UmaPerRank).is_err());
+    }
+
+    #[test]
+    fn cpuset_ops() {
+        let mut s = CpuSet::empty(70);
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(65);
+        assert!(s.contains(0) && s.contains(65) && !s.contains(64));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 65]);
+    }
+}

@@ -1,0 +1,234 @@
+//! The machine tree: cores → modules → UMA regions → processors → node →
+//! cluster.
+//!
+//! Core numbering follows the Cray XE6 convention the paper uses with
+//! `aprun -cc`: cores are numbered contiguously within a UMA region, UMA
+//! regions contiguously within a processor, processors within a node. So on
+//! a 32-core HECToR node, cores 0–7 are UMA region 0, 8–15 region 1 (same
+//! processor), 16–23 region 2 and 24–31 region 3 (second processor) — which
+//! is why the paper's best 4-thread placement is `-cc 0,8,16,24`.
+
+/// A core index within one node (0-based, XE6 numbering).
+pub type CoreId = usize;
+/// A UMA region index within one node.
+pub type UmaRegionId = usize;
+
+/// Description of one shared-memory node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineTopology {
+    /// Human-readable name ("hector-xe6-node", "core-i7-920").
+    pub name: String,
+    /// Sockets per node.
+    pub processors: usize,
+    /// UMA regions (NUMA domains) per processor.
+    pub uma_per_processor: usize,
+    /// Bulldozer-style modules per UMA region (pairs of cores sharing FP/L2).
+    /// 1 when cores are independent (e.g. Intel without module pairing).
+    pub modules_per_uma: usize,
+    /// Cores per module (2 on Interlagos; for SMT machines, logical cores).
+    pub cores_per_module: usize,
+    /// Hardware threads per core presented to the OS (2 with hyper-threading).
+    pub smt: usize,
+    /// Clock rate in GHz (Table 1 tracks this).
+    pub clock_ghz: f64,
+    /// Memory per node in GB (Table 1).
+    pub memory_gb: f64,
+    /// Peak local memory bandwidth of ONE UMA region's bank, bytes/s.
+    pub uma_local_bw: f64,
+    /// Remote-access bandwidth factor through HyperTransport/QPI (0..1,
+    /// applied to `uma_local_bw`).
+    pub remote_bw_factor: f64,
+    /// Extra latency (seconds) for a remote-UMA cache-line access.
+    pub remote_latency: f64,
+    /// Per-core achievable share of a UMA bank's bandwidth when only few
+    /// cores are active (a single core cannot saturate the bank).
+    pub core_bw_limit: f64,
+    /// Peak FLOP/s of one core (FMA pipelines × width × clock).
+    pub core_flops: f64,
+}
+
+impl MachineTopology {
+    /// Logical cores (OS CPUs) per UMA region.
+    pub fn cores_per_uma(&self) -> usize {
+        self.modules_per_uma * self.cores_per_module * self.smt
+    }
+
+    /// Logical cores per processor (socket).
+    pub fn cores_per_processor(&self) -> usize {
+        self.cores_per_uma() * self.uma_per_processor
+    }
+
+    /// Logical cores per node.
+    pub fn cores_per_node(&self) -> usize {
+        self.cores_per_processor() * self.processors
+    }
+
+    /// UMA regions per node.
+    pub fn uma_regions(&self) -> usize {
+        self.processors * self.uma_per_processor
+    }
+
+    /// The UMA region a core belongs to (XE6 contiguous numbering).
+    pub fn uma_of_core(&self, core: CoreId) -> UmaRegionId {
+        assert!(core < self.cores_per_node(), "core {core} out of range");
+        core / self.cores_per_uma()
+    }
+
+    /// The module index (within the node) a core belongs to.
+    pub fn module_of_core(&self, core: CoreId) -> usize {
+        assert!(core < self.cores_per_node());
+        core / (self.cores_per_module * self.smt)
+    }
+
+    /// The processor (socket) a core belongs to.
+    pub fn processor_of_core(&self, core: CoreId) -> usize {
+        core / self.cores_per_processor()
+    }
+
+    /// All cores belonging to a UMA region.
+    pub fn cores_in_uma(&self, uma: UmaRegionId) -> std::ops::Range<CoreId> {
+        assert!(uma < self.uma_regions(), "uma {uma} out of range");
+        let w = self.cores_per_uma();
+        uma * w..(uma + 1) * w
+    }
+
+    /// Aggregate peak node memory bandwidth (all banks streaming locally).
+    pub fn node_peak_bw(&self) -> f64 {
+        self.uma_local_bw * self.uma_regions() as f64
+    }
+
+    /// Peak node FLOP/s.
+    pub fn node_peak_flops(&self) -> f64 {
+        // SMT threads share the physical pipelines: count physical cores.
+        let physical = self.processors
+            * self.uma_per_processor
+            * self.modules_per_uma
+            * self.cores_per_module;
+        physical as f64 * self.core_flops
+    }
+}
+
+/// A cluster: many identical nodes plus an interconnect description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    pub name: String,
+    pub node: MachineTopology,
+    pub nodes: usize,
+    /// Inter-node message latency (seconds) — Gemini-class.
+    pub net_latency: f64,
+    /// Inter-node per-link bandwidth (bytes/s).
+    pub net_bandwidth: f64,
+    /// Latency (seconds) of an intra-node (shared-memory) MPI message.
+    pub intranode_latency: f64,
+    /// Bandwidth of an intra-node MPI message (memcpy through shared memory).
+    pub intranode_bandwidth: f64,
+}
+
+impl Cluster {
+    /// Total logical cores.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.node.cores_per_node()
+    }
+
+    /// How many nodes a job with `ranks` MPI ranks × `threads` threads needs,
+    /// at full population.
+    pub fn nodes_for(&self, ranks: usize, threads: usize) -> usize {
+        let cores = ranks * threads;
+        cores.div_ceil(self.node.cores_per_node())
+    }
+
+    /// Whether two global core indices are on the same node.
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        a / self.node.cores_per_node() == b / self.node.cores_per_node()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::presets::*;
+
+    #[test]
+    fn xe6_node_shape_matches_paper_fig1() {
+        let node = hector_xe6_node();
+        // "A shared-memory node on HECToR consists of two processors (a total
+        // of 32 cores) and has four UMA regions."
+        assert_eq!(node.processors, 2);
+        assert_eq!(node.cores_per_node(), 32);
+        assert_eq!(node.uma_regions(), 4);
+        assert_eq!(node.cores_per_uma(), 8);
+        // "four modules (or eight cores) thus make up one UMA region"
+        assert_eq!(node.modules_per_uma, 4);
+        assert_eq!(node.cores_per_module, 2);
+    }
+
+    #[test]
+    fn xe6_core_to_uma_mapping() {
+        let node = hector_xe6_node();
+        assert_eq!(node.uma_of_core(0), 0);
+        assert_eq!(node.uma_of_core(7), 0);
+        assert_eq!(node.uma_of_core(8), 1);
+        assert_eq!(node.uma_of_core(16), 2);
+        assert_eq!(node.uma_of_core(24), 3);
+        assert_eq!(node.uma_of_core(31), 3);
+        // The paper's best-spread pinning 0,8,16,24 touches all four regions.
+        let umas: Vec<_> = [0, 8, 16, 24].iter().map(|&c| node.uma_of_core(c)).collect();
+        assert_eq!(umas, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn xe6_modules_and_processors() {
+        let node = hector_xe6_node();
+        assert_eq!(node.module_of_core(0), 0);
+        assert_eq!(node.module_of_core(1), 0); // cores 0,1 share a module
+        assert_eq!(node.module_of_core(2), 1);
+        assert_eq!(node.processor_of_core(15), 0);
+        assert_eq!(node.processor_of_core(16), 1);
+    }
+
+    #[test]
+    fn cores_in_uma_ranges() {
+        let node = hector_xe6_node();
+        assert_eq!(node.cores_in_uma(0), 0..8);
+        assert_eq!(node.cores_in_uma(3), 24..32);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn core_out_of_range_panics() {
+        hector_xe6_node().uma_of_core(32);
+    }
+
+    #[test]
+    fn i7_has_smt() {
+        let i7 = core_i7_920();
+        // "A single physical core is presented to the OS as two logical
+        // cores" — 4 physical, 8 logical, one UMA region.
+        assert_eq!(i7.smt, 2);
+        assert_eq!(i7.cores_per_node(), 8);
+        assert_eq!(i7.uma_regions(), 1);
+    }
+
+    #[test]
+    fn cluster_node_accounting() {
+        let hector = hector_xe6();
+        assert_eq!(hector.node.cores_per_node(), 32);
+        assert_eq!(hector.nodes_for(32, 1), 1);
+        assert_eq!(hector.nodes_for(4, 8), 1);
+        assert_eq!(hector.nodes_for(512, 1), 16);
+        assert_eq!(hector.nodes_for(64, 8), 16);
+        assert!(hector.total_cores() >= 16_384); // paper runs to 16k cores
+        assert!(hector.same_node(0, 31));
+        assert!(!hector.same_node(31, 32));
+    }
+
+    #[test]
+    fn peak_rates_sane() {
+        let node = hector_xe6_node();
+        // Table 2's best: 43.49 GB/s from 32 threads across 4 banks, so each
+        // bank must stream >~ 10 GB/s and the node peak must exceed 43 GB/s.
+        assert!(node.node_peak_bw() > 43e9);
+        assert!(node.uma_local_bw > 10e9);
+        // 830 TFlop/s system peak over 90,112 cores ≈ 9.2 GFlop/s per core.
+        assert!((node.core_flops - 9.2e9).abs() / 9.2e9 < 0.05);
+    }
+}

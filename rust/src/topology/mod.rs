@@ -1,0 +1,17 @@
+//! Hardware topology model.
+//!
+//! The paper's performance analysis (§III, §IV) is driven entirely by the
+//! *shape* of the machine: cores grouped into Bulldozer modules (shared FP
+//! scheduler + L2), modules grouped into dies sharing L3 and a memory bank
+//! (one **UMA region**), dies grouped into processors, processors into
+//! shared-memory nodes, nodes into a cluster. This module models that tree
+//! together with the `aprun -cc`-style affinity controls used throughout the
+//! paper's benchmarks.
+
+pub mod machine;
+pub mod affinity;
+pub mod presets;
+
+pub use affinity::{parse_cc_list, AffinityPolicy, CpuSet, Placement};
+pub use machine::{Cluster, CoreId, MachineTopology, UmaRegionId};
+pub use presets::{core_i7_920, hector_xe6, hector_xe6_node, interlagos_processor};

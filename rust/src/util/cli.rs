@@ -1,0 +1,251 @@
+//! A minimal command-line argument parser (the in-repo `clap` substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! generated `--help` text. All mmpetsc binaries, examples and benches parse
+//! their arguments through this.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declarative specification of one option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A tiny declarative CLI parser.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+        }
+    }
+
+    /// Declare a boolean flag `--name`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Declare a value option `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Render the `--help` text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  {:<28} {}{}\n", left, o.help, def));
+        }
+        s.push_str("  --help                       show this help\n");
+        s
+    }
+
+    /// Parse an argument list (not including argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(raw) = it.next() {
+            if raw == "--help" || raw == "-h" {
+                return Err(Error::InvalidOption(format!("help requested\n{}", self.help())));
+            }
+            if let Some(stripped) = raw.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::InvalidOption(format!("unknown option --{name}")))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| {
+                                Error::InvalidOption(format!("--{name} requires a value"))
+                            })?
+                            .clone(),
+                    };
+                    args.values.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(Error::InvalidOption(format!(
+                            "--{name} does not take a value"
+                        )));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(raw.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`, printing help and exiting on `--help`
+    /// or error.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(Error::InvalidOption(msg)) if msg.starts_with("help requested") => {
+                println!("{}", self.help());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.help());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn is_set(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| Error::InvalidOption(format!("missing --{name}")))?;
+        v.parse()
+            .map_err(|_| Error::InvalidOption(format!("--{name}: `{v}` is not an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| Error::InvalidOption(format!("missing --{name}")))?;
+        v.parse()
+            .map_err(|_| Error::InvalidOption(format!("--{name}: `{v}` is not a number")))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("verbose", "be loud")
+            .opt("n", Some("4"), "count")
+            .opt("name", None, "a name")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let a = cli().parse(&sv(&["--name", "bob"])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 4);
+        assert_eq!(a.get("name"), Some("bob"));
+        assert!(!a.is_set("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(&sv(&["--n=9", "--verbose"])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 9);
+        assert!(a.is_set("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&sv(&["input.mtx", "--n", "2", "out.bin"])).unwrap();
+        assert_eq!(a.positional(), &["input.mtx".to_string(), "out.bin".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(&sv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&sv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli().parse(&sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = cli().parse(&sv(&["--n", "x"])).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let h = cli().help();
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("[default: 4]"));
+    }
+}

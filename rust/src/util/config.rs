@@ -1,0 +1,291 @@
+//! A TOML-subset configuration reader (the in-repo `serde`+`toml`
+//! substitute).
+//!
+//! Supports `[section]` headers, `key = value` pairs with string, integer,
+//! float, boolean and flat-array values, `#` comments. This is what machine
+//! descriptions (`machines/*.toml`) and experiment configs are written in.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: map from `section.key` (or bare `key`) to [`Value`].
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse from a string.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Format(format!(
+                        "config line {}: unterminated section header `{raw}`",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                Error::Format(format!("config line {}: expected key = value", lineno + 1))
+            })?;
+            let key = key.trim();
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim()).map_err(|e| {
+                Error::Format(format!("config line {}: {e}", lineno + 1))
+            })?;
+            cfg.entries.insert(full_key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from a file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::InvalidOption(format!("config: missing string `{key}`")))
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64> {
+        self.get(key)
+            .and_then(Value::as_int)
+            .ok_or_else(|| Error::InvalidOption(format!("config: missing int `{key}`")))
+    }
+
+    pub fn float(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Value::as_float)
+            .ok_or_else(|| Error::InvalidOption(format!("config: missing float `{key}`")))
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    /// All keys, sorted.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string `{s}`"));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated array `{s}`"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a machine description
+name = "hector-xe6"
+
+[node]
+processors = 2        # two Interlagos sockets
+cores = 32
+uma_regions = 4
+local_bw_gbs = 12.5
+remote_penalty = 0.35
+hyperthreading = false
+core_list = [0, 8, 16, 24]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name").unwrap(), "hector-xe6");
+        assert_eq!(c.int("node.processors").unwrap(), 2);
+        assert_eq!(c.float("node.local_bw_gbs").unwrap(), 12.5);
+        assert!(!c.bool_or("node.hyperthreading", true));
+        let arr = c.get("node.core_list").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[3].as_int(), Some(24));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.float("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let c = Config::parse("s = \"a # b\"").unwrap();
+        assert_eq!(c.str("s").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(Config::parse("key").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.float_or("nope", 1.5), 1.5);
+        assert!(c.bool_or("nope", true));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let c = Config::parse("n = 1_000_000").unwrap();
+        assert_eq!(c.int("n").unwrap(), 1_000_000);
+    }
+}

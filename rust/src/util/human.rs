@@ -1,0 +1,95 @@
+//! Human-readable formatting of quantities for bench reports.
+
+/// Format seconds adaptively (`1.23s`, `4.56ms`, `7.89µs`, `12.3ns`).
+pub fn secs(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3}s")
+    } else if t >= 1e-3 {
+        format!("{:.3}ms", t * 1e3)
+    } else if t >= 1e-6 {
+        format!("{:.3}µs", t * 1e6)
+    } else {
+        format!("{:.1}ns", t * 1e9)
+    }
+}
+
+/// Format bytes adaptively (`1.5 GB`, `2.0 MB`, ...). Decimal units, matching
+/// STREAM's GB/s convention.
+pub fn bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format a rate in GB/s (STREAM convention: decimal gigabytes).
+pub fn gbs(bytes_per_sec: f64) -> String {
+    format!("{:.2} GB/s", bytes_per_sec / 1e9)
+}
+
+/// Format FLOP/s adaptively.
+pub fn flops(f: f64) -> String {
+    if f >= 1e12 {
+        format!("{:.2} TFlop/s", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.2} GFlop/s", f / 1e9)
+    } else {
+        format!("{:.2} MFlop/s", f / 1e6)
+    }
+}
+
+/// Format a count with thousands separators (`12,345,678`).
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Left-pad to `w` columns.
+pub fn pad(s: &str, w: usize) -> String {
+    format!("{s:>w$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(2.5), "2.500s");
+        assert_eq!(secs(0.0025), "2.500ms");
+        assert_eq!(secs(2.5e-6), "2.500µs");
+        assert_eq!(secs(2.5e-9), "2.5ns");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(1.5e9), "1.50 GB");
+        assert_eq!(bytes(2e6), "2.00 MB");
+        assert_eq!(bytes(3e3), "3.00 KB");
+        assert_eq!(bytes(42.0), "42 B");
+    }
+
+    #[test]
+    fn counts_grouped() {
+        assert_eq!(count(1), "1");
+        assert_eq!(count(1234), "1,234");
+        assert_eq!(count(747090670), "747,090,670");
+    }
+
+    #[test]
+    fn gbs_format() {
+        assert_eq!(gbs(43.49e9), "43.49 GB/s");
+    }
+}

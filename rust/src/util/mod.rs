@@ -1,0 +1,15 @@
+//! Small self-contained utilities: PRNG, statistics, timing, CLI parsing and
+//! a TOML-subset config reader. These exist because the offline build has no
+//! access to `rand`, `clap`, `serde` or `criterion` — each substrate is built
+//! in-repo instead.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod cli;
+pub mod config;
+pub mod human;
+
+pub use rng::XorShift64;
+pub use stats::Summary;
+pub use timer::Stopwatch;

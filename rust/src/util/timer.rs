@@ -1,0 +1,118 @@
+//! Wall-clock timing helpers for benches and the event log.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating elapsed time over start/stop pairs.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    accumulated: Duration,
+    laps: usize,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            started: None,
+            accumulated: Duration::ZERO,
+            laps: 0,
+        }
+    }
+
+    /// Start (or restart) the current lap. Idempotent while running.
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop the current lap, accumulating its duration.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    /// Total accumulated time in seconds (including a running lap).
+    pub fn seconds(&self) -> f64 {
+        let running = self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+        (self.accumulated + running).as_secs_f64()
+    }
+
+    /// Number of completed start/stop laps.
+    pub fn laps(&self) -> usize {
+        self.laps
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly until at least `min_time` seconds and `min_reps`
+/// repetitions have elapsed; returns per-rep seconds for each repetition.
+/// This is the measurement loop used by all in-repo benchmarks (criterion is
+/// not available offline).
+pub fn bench_loop(min_time: f64, min_reps: usize, mut f: impl FnMut()) -> Vec<f64> {
+    // Warm-up rep (paging, caches, pool spin-up).
+    f();
+    let mut samples = Vec::new();
+    let t_start = Instant::now();
+    while samples.len() < min_reps || t_start.elapsed().as_secs_f64() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break; // pathological fast function; enough samples
+        }
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.seconds() >= 0.004);
+        assert_eq!(sw.laps(), 1);
+    }
+
+    #[test]
+    fn stopwatch_double_stop_safe() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.laps(), 0);
+        assert_eq!(sw.seconds(), 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_meets_minimums() {
+        let samples = bench_loop(0.0, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(samples.len() >= 5);
+    }
+}

@@ -1,0 +1,202 @@
+//! Level-1 BLAS kernels, serial, called per thread chunk (§VI.B).
+//!
+//! "The solution implemented for PETSc is to parallelise calls to BLAS
+//! functions on the library level by calling the functions for a portion of
+//! a vector on each thread." These are those portions' kernels — plain
+//! loops the compiler vectorises; each thread calls them on its static
+//! chunk so all accesses stay page-local.
+
+/// `y += a·x` (daxpy).
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `y = x + b·y` (aypx).
+#[inline]
+pub fn aypx(b: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + b * *yi;
+    }
+}
+
+/// `y = a·x + b·y` (axpby).
+#[inline]
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+/// `w = a·x + y` (waxpy).
+#[inline]
+pub fn waxpy(a: f64, x: &[f64], y: &[f64], w: &mut [f64]) {
+    debug_assert!(x.len() == y.len() && y.len() == w.len());
+    for i in 0..w.len() {
+        w[i] = a * x[i] + y[i];
+    }
+}
+
+/// Dot product (ddot). Four independent accumulators — deterministic per
+/// chunk, and the broken dependency chain lets the compiler vectorise
+/// (strict left-to-right FP addition cannot be; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut acc = [0.0f64; 4];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let k = 4 * c;
+        acc[0] += x[k] * y[k];
+        acc[1] += x[k + 1] * y[k + 1];
+        acc[2] += x[k + 2] * y[k + 2];
+        acc[3] += x[k + 3] * y[k + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for k in 4 * chunks..n {
+        s += x[k] * y[k];
+    }
+    s
+}
+
+/// Sum of squares (for dnrm2 without the sqrt). Same unrolling as [`dot`].
+#[inline]
+pub fn sqnorm(x: &[f64]) -> f64 {
+    let n = x.len();
+    let mut acc = [0.0f64; 4];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let k = 4 * c;
+        acc[0] += x[k] * x[k];
+        acc[1] += x[k + 1] * x[k + 1];
+        acc[2] += x[k + 2] * x[k + 2];
+        acc[3] += x[k + 3] * x[k + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for k in 4 * chunks..n {
+        s += x[k] * x[k];
+    }
+    s
+}
+
+/// 1-norm contribution (dasum).
+#[inline]
+pub fn asum(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// ∞-norm contribution.
+#[inline]
+pub fn amax(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// `x *= a` (dscal).
+#[inline]
+pub fn scal(a: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+/// `y = x` (dcopy).
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// `w = x .* y` (pointwise multiply).
+#[inline]
+pub fn pw_mult(x: &[f64], y: &[f64], w: &mut [f64]) {
+    debug_assert!(x.len() == y.len() && y.len() == w.len());
+    for i in 0..w.len() {
+        w[i] = x[i] * y[i];
+    }
+}
+
+/// `w = x ./ y` (pointwise divide).
+#[inline]
+pub fn pw_div(x: &[f64], y: &[f64], w: &mut [f64]) {
+    debug_assert!(x.len() == y.len() && y.len() == w.len());
+    for i in 0..w.len() {
+        w[i] = x[i] / y[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn aypx_basic() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        aypx(0.5, &x, &mut y);
+        assert_eq!(y, [6.0, 12.0]);
+    }
+
+    #[test]
+    fn axpby_basic() {
+        let x = [1.0, 1.0];
+        let mut y = [2.0, 4.0];
+        axpby(3.0, &x, 0.5, &mut y);
+        assert_eq!(y, [4.0, 5.0]);
+    }
+
+    #[test]
+    fn waxpy_basic() {
+        let mut w = [0.0; 2];
+        waxpy(2.0, &[1.0, 2.0], &[5.0, 5.0], &mut w);
+        assert_eq!(w, [7.0, 9.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let x = [3.0, -4.0];
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(sqnorm(&x), 25.0);
+        assert_eq!(asum(&x), 7.0);
+        assert_eq!(amax(&x), 4.0);
+    }
+
+    #[test]
+    fn pointwise() {
+        let mut w = [0.0; 2];
+        pw_mult(&[2.0, 3.0], &[4.0, 5.0], &mut w);
+        assert_eq!(w, [8.0, 15.0]);
+        pw_div(&[8.0, 15.0], &[2.0, 3.0], &mut w);
+        assert_eq!(w, [4.0, 5.0]);
+    }
+
+    #[test]
+    fn scal_copy() {
+        let mut x = [1.0, 2.0];
+        scal(3.0, &mut x);
+        assert_eq!(x, [3.0, 6.0]);
+        let mut y = [0.0; 2];
+        copy(&x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn empty_slices_ok() {
+        let mut e: [f64; 0] = [];
+        axpy(1.0, &[], &mut e);
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(amax(&[]), 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! The per-rank threading context shared by all threaded objects.
+//!
+//! PETSc's OpenMP branch has one thread pool per process (§V.C — the whole
+//! argument for OpenMP over pthreads is *not* having two pools). Every Vec
+//! and Mat on a rank holds an `Arc<ThreadCtx>`; parallel regions go through
+//! [`ThreadCtx::for_range`], which applies the size-adaptive cut-off
+//! (§VI.C) before forking.
+
+use std::sync::Arc;
+
+use crate::thread::adaptive::AdaptivePolicy;
+use crate::thread::pool::Pool;
+use crate::thread::schedule::static_chunk;
+use crate::topology::machine::{CoreId, MachineTopology, UmaRegionId};
+
+/// Shared threading context: the pool plus the adaptive-threading policy.
+pub struct ThreadCtx {
+    pool: Pool,
+    adaptive: AdaptivePolicy,
+}
+
+impl ThreadCtx {
+    /// Unpinned context with `nthreads` threads, always-fork policy.
+    pub fn new(nthreads: usize) -> Arc<ThreadCtx> {
+        Arc::new(ThreadCtx {
+            pool: Pool::new(nthreads),
+            adaptive: AdaptivePolicy::always(),
+        })
+    }
+
+    /// Serial context (`OMP_NUM_THREADS=1`).
+    pub fn serial() -> Arc<ThreadCtx> {
+        Self::new(1)
+    }
+
+    /// Pinned context: threads pinned to `cores` of the modelled `node`.
+    pub fn pinned(node: &MachineTopology, cores: &[CoreId]) -> Arc<ThreadCtx> {
+        Arc::new(ThreadCtx {
+            pool: Pool::pinned(node, cores),
+            adaptive: AdaptivePolicy::always(),
+        })
+    }
+
+    /// Replace the adaptive policy (builder style).
+    pub fn with_adaptive(self: Arc<Self>, adaptive: AdaptivePolicy) -> Arc<ThreadCtx> {
+        Arc::new(ThreadCtx {
+            pool: Pool::new(self.pool.nthreads()),
+            adaptive,
+        })
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.pool.nthreads()
+    }
+
+    /// The modelled UMA region of thread `tid` (0 when unpinned).
+    pub fn thread_uma(&self, tid: usize) -> UmaRegionId {
+        self.pool.thread_uma(tid)
+    }
+
+    /// The static chunk of thread `tid` for an `n`-element object — the
+    /// paging contract shared by allocation and compute.
+    pub fn chunk(&self, n: usize, tid: usize) -> (usize, usize) {
+        static_chunk(n, self.nthreads(), tid)
+    }
+
+    /// `parallel for` over `0..n` under the adaptive policy:
+    /// `f(tid, lo, hi)`. Falls back to a serial master-thread loop when
+    /// forking would not pay (paper §VI.C).
+    pub fn for_range<F: Fn(usize, usize, usize) + Sync>(&self, n: usize, f: F) {
+        if self.adaptive.should_fork(n, self.nthreads()) || self.nthreads() == 1 {
+            self.pool.for_range(n, f);
+        } else if n > 0 {
+            f(0, 0, n);
+        }
+    }
+
+    /// Parallel-for that ALWAYS uses the full static schedule, regardless of
+    /// the adaptive policy. Used for first-touch initialization: pages must
+    /// land where the compute threads live even for small objects.
+    pub fn for_range_paging<F: Fn(usize, usize, usize) + Sync>(&self, n: usize, f: F) {
+        self.pool.for_range(n, f);
+    }
+
+    /// Parallel reduction over static chunks (adaptive).
+    pub fn reduce<T, M, C>(&self, n: usize, identity: T, map: M, combine: C) -> T
+    where
+        T: Send + Clone,
+        M: Fn(usize, usize, usize) -> T + Sync,
+        C: Fn(T, T) -> T,
+    {
+        if self.adaptive.should_fork(n, self.nthreads()) || self.nthreads() == 1 {
+            self.pool.reduce(n, identity, map, combine)
+        } else if n > 0 {
+            combine(identity, map(0, 0, n))
+        } else {
+            identity
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadCtx")
+            .field("nthreads", &self.nthreads())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thread::overhead::{Compiler, CompilerModel};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn for_range_adaptive_serializes_small() {
+        let model = CompilerModel::paper(Compiler::Gcc462);
+        let ctx = ThreadCtx::new(4).with_adaptive(AdaptivePolicy::for_pool(&model, 4));
+        let max_tid = AtomicUsize::new(0);
+        // 512 elements under GCC@4 threads: stays serial (tid 0 only).
+        ctx.for_range(512, |tid, _, _| {
+            max_tid.fetch_max(tid, Ordering::Relaxed);
+        });
+        assert_eq!(max_tid.load(Ordering::Relaxed), 0);
+        // 10M elements: forks.
+        ctx.for_range(10_000_000, |tid, _, _| {
+            max_tid.fetch_max(tid, Ordering::Relaxed);
+        });
+        assert_eq!(max_tid.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn paging_for_range_always_forks() {
+        let model = CompilerModel::paper(Compiler::Gcc462);
+        let ctx = ThreadCtx::new(4).with_adaptive(AdaptivePolicy::for_pool(&model, 4));
+        let tids = AtomicUsize::new(0);
+        ctx.for_range_paging(512, |tid, _, _| {
+            tids.fetch_or(1 << tid, Ordering::Relaxed);
+        });
+        assert_eq!(tids.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn reduce_matches_serial() {
+        let ctx = ThreadCtx::new(3);
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = ctx.reduce(1000, 0.0, |_t, lo, hi| xs[lo..hi].iter().sum::<f64>(), |a, b| a + b);
+        assert_eq!(s, 499_500.0);
+    }
+}

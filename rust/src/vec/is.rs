@@ -1,0 +1,176 @@
+//! Index Sets — the first PETSc class family the paper lists ("Index
+//! Sets, Vectors and Matrices", §V). General and strided index sets, used
+//! to describe scatters, sub-vectors and permutations.
+
+use crate::error::{Error, Result};
+
+/// An index set: general (explicit list) or strided (first, n, step).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IndexSet {
+    General(Vec<usize>),
+    Stride {
+        first: usize,
+        n: usize,
+        step: usize,
+    },
+}
+
+impl IndexSet {
+    /// General IS from a list (kept in the given order, like ISGeneral).
+    pub fn general(indices: Vec<usize>) -> IndexSet {
+        IndexSet::General(indices)
+    }
+
+    /// Strided IS: `first, first+step, …` (`n` entries).
+    pub fn stride(first: usize, n: usize, step: usize) -> Result<IndexSet> {
+        if step == 0 && n > 1 {
+            return Err(Error::InvalidOption("IS stride: step 0".into()));
+        }
+        Ok(IndexSet::Stride { first, n, step })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            IndexSet::General(v) => v.len(),
+            IndexSet::Stride { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The k-th index.
+    pub fn get(&self, k: usize) -> usize {
+        match self {
+            IndexSet::General(v) => v[k],
+            IndexSet::Stride { first, step, n } => {
+                debug_assert!(k < *n);
+                first + k * step
+            }
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len()).map(move |k| self.get(k))
+    }
+
+    /// Materialise as a vector.
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+
+    /// Are all indices within `[0, n)`?
+    pub fn valid_for(&self, n: usize) -> bool {
+        self.iter().all(|i| i < n)
+    }
+
+    /// Is this a permutation of `0..len`?
+    pub fn is_permutation(&self) -> bool {
+        let n = self.len();
+        let mut seen = vec![false; n];
+        for i in self.iter() {
+            if i >= n || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+        true
+    }
+
+    /// Invert a permutation IS (ISInvertPermutation).
+    pub fn invert_permutation(&self) -> Result<IndexSet> {
+        if !self.is_permutation() {
+            return Err(Error::InvalidOption("IS is not a permutation".into()));
+        }
+        let mut inv = vec![0usize; self.len()];
+        for (k, i) in self.iter().enumerate() {
+            inv[i] = k;
+        }
+        Ok(IndexSet::General(inv))
+    }
+
+    /// Gather `x[is]` into a new vector (sub-vector extraction).
+    pub fn gather(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if !self.valid_for(x.len()) {
+            return Err(Error::IndexOutOfRange {
+                index: self.iter().find(|&i| i >= x.len()).unwrap_or(0),
+                range: (0, x.len()),
+                context: "IS gather".into(),
+            });
+        }
+        Ok(self.iter().map(|i| x[i]).collect())
+    }
+
+    /// Scatter `vals` into `x[is]` (the inverse of [`IndexSet::gather`]).
+    pub fn scatter(&self, vals: &[f64], x: &mut [f64]) -> Result<()> {
+        if vals.len() != self.len() {
+            return Err(Error::size_mismatch("IS scatter length"));
+        }
+        if !self.valid_for(x.len()) {
+            return Err(Error::IndexOutOfRange {
+                index: self.iter().find(|&i| i >= x.len()).unwrap_or(0),
+                range: (0, x.len()),
+                context: "IS scatter".into(),
+            });
+        }
+        for (k, i) in self.iter().enumerate() {
+            x[i] = vals[k];
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stride_enumerates() {
+        let is = IndexSet::stride(3, 4, 2).unwrap();
+        assert_eq!(is.to_vec(), vec![3, 5, 7, 9]);
+        assert_eq!(is.len(), 4);
+        assert!(IndexSet::stride(0, 2, 0).is_err());
+        assert!(IndexSet::stride(5, 1, 0).is_ok()); // single entry, step moot
+    }
+
+    #[test]
+    fn permutation_checks() {
+        assert!(IndexSet::general(vec![2, 0, 1]).is_permutation());
+        assert!(!IndexSet::general(vec![2, 2, 1]).is_permutation());
+        assert!(!IndexSet::general(vec![0, 3]).is_permutation());
+        let identity = IndexSet::stride(0, 5, 1).unwrap();
+        assert!(identity.is_permutation());
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let p = IndexSet::general(vec![2, 0, 3, 1]);
+        let inv = p.invert_permutation().unwrap();
+        for k in 0..4 {
+            assert_eq!(inv.get(p.get(k)), k);
+        }
+        assert!(IndexSet::general(vec![1, 1]).invert_permutation().is_err());
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let x = [10.0, 11.0, 12.0, 13.0, 14.0];
+        let is = IndexSet::general(vec![4, 0, 2]);
+        let g = is.gather(&x).unwrap();
+        assert_eq!(g, vec![14.0, 10.0, 12.0]);
+        let mut y = [0.0; 5];
+        is.scatter(&g, &mut y).unwrap();
+        assert_eq!(y, [10.0, 0.0, 12.0, 0.0, 14.0]);
+    }
+
+    #[test]
+    fn bounds_enforced() {
+        let is = IndexSet::general(vec![0, 9]);
+        assert!(!is.valid_for(5));
+        assert!(is.gather(&[0.0; 5]).is_err());
+        let mut y = [0.0; 5];
+        assert!(is.scatter(&[1.0, 2.0], &mut y).is_err());
+        assert!(IndexSet::general(vec![0]).scatter(&[1.0, 2.0], &mut y).is_err());
+    }
+}

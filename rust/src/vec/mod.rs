@@ -1,0 +1,20 @@
+//! The Vec class: sequential and distributed vectors with OpenMP-style
+//! threading and first-touch paging (paper §V.A, §VI, Figure 2).
+//!
+//! Mirrors PETSc's design: the parallel vector ([`mpi::VecMPI`]) is a thin
+//! layer over the sequential one ([`seq::VecSeq`]) — "by threading the
+//! sequential functionality, the parallel classes essentially pick this
+//! threading up for free".
+
+pub mod ctx;
+pub mod blas1;
+pub mod is;
+pub mod seq;
+pub mod mpi;
+pub mod scatter;
+
+pub use ctx::ThreadCtx;
+pub use is::IndexSet;
+pub use mpi::{Layout, VecMPI};
+pub use scatter::VecScatter;
+pub use seq::VecSeq;

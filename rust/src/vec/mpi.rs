@@ -1,0 +1,410 @@
+//! `VecMPI` — the distributed vector: a [`VecSeq`] per rank plus a global
+//! layout; global reductions go through the communicator (paper §V.A).
+
+use std::sync::Arc;
+
+use crate::comm::endpoint::Comm;
+use crate::error::{Error, Result};
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::seq::{NormType, VecSeq};
+
+/// Row/element ownership: contiguous ranges per rank, PETSc-style.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layout {
+    /// `starts[r]..starts[r+1]` is rank r's range; `starts.len() == size+1`.
+    starts: Vec<usize>,
+}
+
+impl Layout {
+    /// Split `n` elements over `size` ranks as evenly as possible (PETSc's
+    /// default layout: remainder spread over the first ranks — the same
+    /// rule as the thread static schedule, one level up).
+    pub fn split(n: usize, size: usize) -> Layout {
+        assert!(size >= 1);
+        let base = n / size;
+        let rem = n % size;
+        let mut starts = Vec::with_capacity(size + 1);
+        let mut acc = 0;
+        starts.push(0);
+        for r in 0..size {
+            acc += base + usize::from(r < rem);
+            starts.push(acc);
+        }
+        Layout { starts }
+    }
+
+    /// Build from explicit per-rank counts.
+    pub fn from_counts(counts: &[usize]) -> Layout {
+        let mut starts = Vec::with_capacity(counts.len() + 1);
+        starts.push(0);
+        let mut acc = 0;
+        for &c in counts {
+            acc += c;
+            starts.push(acc);
+        }
+        Layout { starts }
+    }
+
+    pub fn size(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    pub fn global_len(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// Rank r's `[start, end)` range.
+    pub fn range(&self, rank: usize) -> (usize, usize) {
+        (self.starts[rank], self.starts[rank + 1])
+    }
+
+    pub fn local_len(&self, rank: usize) -> usize {
+        self.starts[rank + 1] - self.starts[rank]
+    }
+
+    /// The rank owning global index `g` (binary search).
+    pub fn owner(&self, g: usize) -> Result<usize> {
+        if g >= self.global_len() {
+            return Err(Error::IndexOutOfRange {
+                index: g,
+                range: (0, self.global_len()),
+                context: "Layout::owner".into(),
+            });
+        }
+        // partition_point: first rank whose start exceeds g, minus one.
+        Ok(self.starts.partition_point(|&s| s <= g) - 1)
+    }
+
+    /// Global → local index on its owner.
+    pub fn to_local(&self, g: usize) -> Result<(usize, usize)> {
+        let r = self.owner(g)?;
+        Ok((r, g - self.starts[r]))
+    }
+}
+
+/// The distributed vector.
+pub struct VecMPI {
+    layout: Layout,
+    rank: usize,
+    local: VecSeq,
+}
+
+impl VecMPI {
+    /// Create a zeroed distributed vector on this rank.
+    pub fn new(layout: Layout, rank: usize, ctx: Arc<ThreadCtx>) -> VecMPI {
+        let n = layout.local_len(rank);
+        VecMPI {
+            layout,
+            rank,
+            local: VecSeq::new(n, ctx),
+        }
+    }
+
+    /// Create from this rank's local slice of a (conceptually) global vector.
+    pub fn from_local_slice(
+        layout: Layout,
+        rank: usize,
+        xs: &[f64],
+        ctx: Arc<ThreadCtx>,
+    ) -> Result<VecMPI> {
+        if xs.len() != layout.local_len(rank) {
+            return Err(Error::size_mismatch(format!(
+                "local slice {} vs layout {}",
+                xs.len(),
+                layout.local_len(rank)
+            )));
+        }
+        Ok(VecMPI {
+            layout,
+            rank,
+            local: VecSeq::from_slice(xs, ctx),
+        })
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn local(&self) -> &VecSeq {
+        &self.local
+    }
+
+    pub fn local_mut(&mut self) -> &mut VecSeq {
+        &mut self.local
+    }
+
+    pub fn global_len(&self) -> usize {
+        self.layout.global_len()
+    }
+
+    pub fn duplicate(&self) -> VecMPI {
+        VecMPI {
+            layout: self.layout.clone(),
+            rank: self.rank,
+            local: self.local.duplicate(),
+        }
+    }
+
+    fn check_compatible(&self, other: &VecMPI, what: &str) -> Result<()> {
+        if self.layout != other.layout {
+            return Err(Error::size_mismatch(format!("{what}: layouts differ")));
+        }
+        Ok(())
+    }
+
+    // -- local (communication-free) ops: forwarded to VecSeq ---------------
+
+    pub fn set(&mut self, a: f64) {
+        self.local.set(a);
+    }
+
+    pub fn zero(&mut self) {
+        self.local.zero();
+    }
+
+    pub fn scale(&mut self, a: f64) {
+        self.local.scale(a);
+    }
+
+    pub fn axpy(&mut self, a: f64, x: &VecMPI) -> Result<()> {
+        self.check_compatible(x, "VecAXPY")?;
+        self.local.axpy(a, &x.local)
+    }
+
+    pub fn aypx(&mut self, b: f64, x: &VecMPI) -> Result<()> {
+        self.check_compatible(x, "VecAYPX")?;
+        self.local.aypx(b, &x.local)
+    }
+
+    pub fn axpby(&mut self, a: f64, b: f64, x: &VecMPI) -> Result<()> {
+        self.check_compatible(x, "VecAXPBY")?;
+        self.local.axpby(a, b, &x.local)
+    }
+
+    pub fn waxpy(&mut self, a: f64, x: &VecMPI, y: &VecMPI) -> Result<()> {
+        self.check_compatible(x, "VecWAXPY")?;
+        self.check_compatible(y, "VecWAXPY")?;
+        self.local.waxpy(a, &x.local, &y.local)
+    }
+
+    pub fn maxpy(&mut self, coeffs: &[f64], xs: &[&VecMPI]) -> Result<()> {
+        for x in xs {
+            self.check_compatible(x, "VecMAXPY")?;
+        }
+        let locals: Vec<&VecSeq> = xs.iter().map(|x| &x.local).collect();
+        self.local.maxpy(coeffs, &locals)
+    }
+
+    pub fn pointwise_mult(&mut self, x: &VecMPI, y: &VecMPI) -> Result<()> {
+        self.check_compatible(x, "VecPointwiseMult")?;
+        self.check_compatible(y, "VecPointwiseMult")?;
+        self.local.pointwise_mult(&x.local, &y.local)
+    }
+
+    pub fn copy_from(&mut self, x: &VecMPI) -> Result<()> {
+        self.check_compatible(x, "VecCopy")?;
+        self.local.copy_from(&x.local)
+    }
+
+    // -- global reductions: local part + allreduce --------------------------
+
+    /// Global VecDot.
+    pub fn dot(&self, other: &VecMPI, comm: &mut Comm) -> Result<f64> {
+        self.check_compatible(other, "VecDot")?;
+        let local = self.local.dot(&other.local)?;
+        comm.allreduce(local, |a, b| a + b)
+    }
+
+    /// Global VecMDot.
+    pub fn mdot(&self, others: &[&VecMPI], comm: &mut Comm) -> Result<Vec<f64>> {
+        for o in others {
+            self.check_compatible(o, "VecMDot")?;
+        }
+        let locals: Vec<&VecSeq> = others.iter().map(|o| &o.local).collect();
+        let local = self.local.mdot(&locals)?;
+        comm.allreduce(local, |mut a, b| {
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += y;
+            }
+            a
+        })
+    }
+
+    /// Global VecNorm.
+    pub fn norm(&self, t: NormType, comm: &mut Comm) -> Result<f64> {
+        let v = match t {
+            NormType::One => {
+                let l = self.local.norm(NormType::One);
+                comm.allreduce(l, |a, b| a + b)?
+            }
+            NormType::Two => {
+                let l2 = self.local.norm(NormType::Two);
+                comm.allreduce(l2 * l2, |a, b| a + b)?.sqrt()
+            }
+            NormType::Infinity => {
+                let l = self.local.norm(NormType::Infinity);
+                comm.allreduce(l, f64::max)?
+            }
+        };
+        Ok(v)
+    }
+
+    /// Global VecSum.
+    pub fn sum(&self, comm: &mut Comm) -> Result<f64> {
+        comm.allreduce(self.local.sum(), |a, b| a + b)
+    }
+
+    /// Global VecMax (global index + value).
+    pub fn max(&self, comm: &mut Comm) -> Result<(usize, f64)> {
+        let (li, lv) = if self.local.is_empty() {
+            (usize::MAX, f64::NEG_INFINITY)
+        } else {
+            self.local.max()
+        };
+        let gi = if li == usize::MAX {
+            usize::MAX
+        } else {
+            self.layout.range(self.rank).0 + li
+        };
+        comm.allreduce((gi, lv), |a, b| if b.1 > a.1 { b } else { a })
+    }
+
+    /// Gather the full vector onto every rank (testing/diagnostics only —
+    /// this is exactly what real codes avoid).
+    pub fn gather_all(&self, comm: &mut Comm) -> Result<Vec<f64>> {
+        let parts = comm.allgather(self.local.as_slice().to_vec())?;
+        Ok(parts.concat())
+    }
+}
+
+impl std::fmt::Debug for VecMPI {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "VecMPI(global={}, rank={}/{}, local={})",
+            self.global_len(),
+            self.rank,
+            self.layout.size(),
+            self.local.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::ptest::close;
+
+    #[test]
+    fn layout_split_even_and_remainder() {
+        let l = Layout::split(10, 3);
+        assert_eq!(l.range(0), (0, 4));
+        assert_eq!(l.range(1), (4, 7));
+        assert_eq!(l.range(2), (7, 10));
+        assert_eq!(l.global_len(), 10);
+        assert_eq!(l.local_len(0), 4);
+    }
+
+    #[test]
+    fn layout_owner_lookup() {
+        let l = Layout::split(10, 3);
+        assert_eq!(l.owner(0).unwrap(), 0);
+        assert_eq!(l.owner(3).unwrap(), 0);
+        assert_eq!(l.owner(4).unwrap(), 1);
+        assert_eq!(l.owner(9).unwrap(), 2);
+        assert!(l.owner(10).is_err());
+        assert_eq!(l.to_local(5).unwrap(), (1, 1));
+    }
+
+    #[test]
+    fn layout_from_counts() {
+        let l = Layout::from_counts(&[2, 0, 3]);
+        assert_eq!(l.global_len(), 5);
+        assert_eq!(l.local_len(1), 0);
+        assert_eq!(l.owner(2).unwrap(), 2);
+    }
+
+    #[test]
+    fn global_dot_and_norm() {
+        let n = 1000;
+        let out = World::run(4, move |mut c| {
+            let layout = Layout::split(n, c.size());
+            let (lo, hi) = layout.range(c.rank());
+            let xs: Vec<f64> = (lo..hi).map(|i| i as f64).collect();
+            let ctx = ThreadCtx::new(2);
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            let d = x.dot(&x, &mut c).unwrap();
+            let nrm = x.norm(NormType::Two, &mut c).unwrap();
+            let s = x.sum(&mut c).unwrap();
+            (d, nrm, s)
+        });
+        let expect_dot: f64 = (0..1000).map(|i| (i * i) as f64).sum();
+        for (d, nrm, s) in out {
+            assert!(close(d, expect_dot, 1e-12).is_ok());
+            assert!(close(nrm, expect_dot.sqrt(), 1e-12).is_ok());
+            assert!(close(s, 499_500.0, 1e-12).is_ok());
+        }
+    }
+
+    #[test]
+    fn global_max_with_index() {
+        let out = World::run(3, |mut c| {
+            let layout = Layout::split(9, 3);
+            let (lo, hi) = layout.range(c.rank());
+            // global vector: v[i] = -(i as f64), except v[7] = 100.
+            let xs: Vec<f64> = (lo..hi)
+                .map(|i| if i == 7 { 100.0 } else { -(i as f64) })
+                .collect();
+            let x = VecMPI::from_local_slice(layout, c.rank(), &xs, ThreadCtx::serial()).unwrap();
+            x.max(&mut c).unwrap()
+        });
+        for (i, v) in out {
+            assert_eq!((i, v), (7, 100.0));
+        }
+    }
+
+    #[test]
+    fn axpy_is_local_no_messages() {
+        let (_, stats) = World::run_with_stats(3, |mut c| {
+            let layout = Layout::split(300, 3);
+            let ctx = ThreadCtx::serial();
+            let x = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+            let mut y = VecMPI::new(layout, c.rank(), ctx);
+            y.axpy(2.0, &x).unwrap();
+            c.barrier().unwrap(); // only the barrier communicates
+        });
+        // axpy itself sent nothing: every message belongs to the barrier.
+        for s in stats {
+            assert_eq!(s.sends, s.recvs);
+            assert!(s.sends <= 4, "barrier only: {}", s.sends);
+        }
+    }
+
+    #[test]
+    fn gather_all_reassembles() {
+        let out = World::run(4, |mut c| {
+            let layout = Layout::split(10, 4);
+            let (lo, hi) = layout.range(c.rank());
+            let xs: Vec<f64> = (lo..hi).map(|i| i as f64 * 10.0).collect();
+            let x = VecMPI::from_local_slice(layout, c.rank(), &xs, ThreadCtx::serial()).unwrap();
+            x.gather_all(&mut c).unwrap()
+        });
+        let expect: Vec<f64> = (0..10).map(|i| i as f64 * 10.0).collect();
+        for v in out {
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn incompatible_layouts_rejected() {
+        let ctx = ThreadCtx::serial();
+        let a = VecMPI::new(Layout::split(10, 1), 0, ctx.clone());
+        let mut b = VecMPI::new(Layout::split(11, 1), 0, ctx);
+        assert!(b.axpy(1.0, &a).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! `VecScatter` — the ghost-element exchange behind distributed MatMult
+//! (paper §VII, Figure 4c).
+//!
+//! At plan time, each rank announces which remote global indices it needs;
+//! owners learn what to send. At execute time, `begin()` posts all sends
+//! (and can overlap with the on-diagonal multiply, exactly as PETSc
+//! overlaps them — §VII "the scattering of the vector elements and the
+//! initial on-diagonal multiplication are allowed to overlap"), and `end()`
+//! completes the receives into a ghost buffer.
+
+use crate::comm::endpoint::Comm;
+use crate::comm::message::{Tag, RESERVED_TAG_BASE};
+use crate::error::{Error, Result};
+use crate::vec::mpi::{Layout, VecMPI};
+
+const T_PLAN: Tag = RESERVED_TAG_BASE + 16;
+const T_DATA: Tag = RESERVED_TAG_BASE + 17;
+
+/// The communication plan for one ghost pattern.
+#[derive(Debug, Clone)]
+pub struct VecScatter {
+    layout: Layout,
+    rank: usize,
+    /// Remote global indices this rank needs, ascending. Ghost slot `k`
+    /// holds the value of global index `ghosts[k]`.
+    ghosts: Vec<usize>,
+    /// Per source rank: (src, range of ghost slots `[lo, hi)`) — ghosts are
+    /// sorted, so each source's block is contiguous.
+    recv_blocks: Vec<(usize, usize, usize)>,
+    /// Per destination rank: (dest, local indices to pack and send).
+    send_lists: Vec<(usize, Vec<usize>)>,
+    /// In-flight state: Some(ghost buffer) between begin and end.
+    in_flight: Option<Vec<f64>>,
+}
+
+impl VecScatter {
+    /// Build the plan. `needed` is the set of *remote* global indices this
+    /// rank must read (duplicates allowed; they are deduped). Collective —
+    /// every rank in `comm` must call this.
+    pub fn plan(layout: &Layout, comm: &mut Comm, needed: &[usize]) -> Result<VecScatter> {
+        let rank = comm.rank();
+        let size = comm.size();
+        let (own_lo, own_hi) = layout.range(rank);
+
+        let mut ghosts: Vec<usize> = needed.to_vec();
+        ghosts.sort_unstable();
+        ghosts.dedup();
+        if let Some(&g) = ghosts.iter().find(|&&g| g >= own_lo && g < own_hi) {
+            return Err(Error::InvalidOption(format!(
+                "scatter plan: index {g} is local to rank {rank}, not a ghost"
+            )));
+        }
+        if let Some(&g) = ghosts.last() {
+            if g >= layout.global_len() {
+                return Err(Error::IndexOutOfRange {
+                    index: g,
+                    range: (0, layout.global_len()),
+                    context: "scatter plan".into(),
+                });
+            }
+        }
+
+        // Group needs by owner; ghosts are sorted so blocks are contiguous.
+        let mut needs_per_rank = vec![0usize; size];
+        let mut recv_blocks = Vec::new();
+        {
+            let mut k = 0;
+            while k < ghosts.len() {
+                let owner = layout.owner(ghosts[k])?;
+                let start = k;
+                while k < ghosts.len() && layout.owner(ghosts[k])? == owner {
+                    k += 1;
+                }
+                needs_per_rank[owner] = k - start;
+                recv_blocks.push((owner, start, k));
+            }
+        }
+
+        // Everyone learns the full needs matrix (counts only), then index
+        // lists travel point-to-point.
+        let matrix = comm.allgather(needs_per_rank.clone())?;
+        for &(owner, lo, hi) in &recv_blocks {
+            // Owners receive *global* indices and localize them.
+            comm.send(owner, T_PLAN, ghosts[lo..hi].to_vec())?;
+        }
+        let mut send_lists = Vec::new();
+        for (requester, needs) in matrix.iter().enumerate() {
+            if needs[rank] > 0 {
+                let glob: Vec<usize> = comm.recv(requester, T_PLAN)?;
+                let local: Vec<usize> = glob.iter().map(|&g| g - own_lo).collect();
+                send_lists.push((requester, local));
+            }
+        }
+
+        Ok(VecScatter {
+            layout: layout.clone(),
+            rank,
+            ghosts,
+            recv_blocks,
+            send_lists,
+            in_flight: None,
+        })
+    }
+
+    /// Number of ghost values this rank receives.
+    pub fn ghost_len(&self) -> usize {
+        self.ghosts.len()
+    }
+
+    /// The sorted remote global indices (slot `k` ↔ `ghosts()[k]`).
+    pub fn ghosts(&self) -> &[usize] {
+        &self.ghosts
+    }
+
+    /// Ghost slot of global index `g`, if it is in the pattern.
+    pub fn slot_of(&self, g: usize) -> Option<usize> {
+        self.ghosts.binary_search(&g).ok()
+    }
+
+    /// Messages this rank sends per scatter (the counter the hybrid-vs-MPI
+    /// argument is about).
+    pub fn messages_out(&self) -> usize {
+        self.send_lists.len()
+    }
+
+    /// Total values this rank ships per scatter.
+    pub fn volume_out(&self) -> usize {
+        self.send_lists.iter().map(|(_, l)| l.len()).sum()
+    }
+
+    /// Post all sends (pack + send; non-blocking). Call before the
+    /// on-diagonal multiply to overlap communication with compute.
+    pub fn begin(&mut self, x: &VecMPI, comm: &mut Comm) -> Result<()> {
+        if self.in_flight.is_some() {
+            return Err(Error::not_ready("scatter begin(): already in flight"));
+        }
+        if x.layout() != &self.layout || x.rank() != self.rank {
+            return Err(Error::size_mismatch("scatter: vector/plan layout mismatch"));
+        }
+        let xs = x.local().as_slice();
+        for (dest, list) in &self.send_lists {
+            let packed: Vec<f64> = list.iter().map(|&i| xs[i]).collect();
+            comm.send(*dest, T_DATA, packed)?;
+        }
+        self.in_flight = Some(vec![0.0; self.ghosts.len()]);
+        Ok(())
+    }
+
+    /// Complete the receives; returns the ghost buffer (slot `k` holds
+    /// `x[ghosts()[k]]`).
+    pub fn end(&mut self, comm: &mut Comm) -> Result<Vec<f64>> {
+        let mut buf = self
+            .in_flight
+            .take()
+            .ok_or_else(|| Error::not_ready("scatter end() without begin()"))?;
+        for &(src, lo, hi) in &self.recv_blocks {
+            let vals: Vec<f64> = comm.recv(src, T_DATA)?;
+            if vals.len() != hi - lo {
+                return Err(Error::Comm(format!(
+                    "scatter: expected {} values from rank {src}, got {}",
+                    hi - lo,
+                    vals.len()
+                )));
+            }
+            buf[lo..hi].copy_from_slice(&vals);
+        }
+        Ok(buf)
+    }
+
+    /// Convenience: begin + end.
+    pub fn scatter(&mut self, x: &VecMPI, comm: &mut Comm) -> Result<Vec<f64>> {
+        self.begin(x, comm)?;
+        self.end(comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::vec::ctx::ThreadCtx;
+
+    /// Each rank needs the element just left and right of its range
+    /// (periodic) — a 1D halo exchange.
+    #[test]
+    fn halo_exchange() {
+        let n = 40;
+        let out = World::run(4, move |mut c| {
+            let layout = Layout::split(n, c.size());
+            let (lo, hi) = layout.range(c.rank());
+            let left = (lo + n - 1) % n;
+            let right = hi % n;
+            let xs: Vec<f64> = (lo..hi).map(|i| i as f64).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ThreadCtx::serial())
+                .unwrap();
+            let mut sc = VecScatter::plan(&layout, &mut c, &[left, right]).unwrap();
+            let ghosts = sc.scatter(&x, &mut c).unwrap();
+            let lv = ghosts[sc.slot_of(left).unwrap()];
+            let rv = ghosts[sc.slot_of(right).unwrap()];
+            (lv, rv, lo, hi)
+        });
+        for (lv, rv, lo, hi) in out {
+            assert_eq!(lv, ((lo + n - 1) % n) as f64);
+            assert_eq!(rv, (hi % n) as f64);
+        }
+    }
+
+    #[test]
+    fn empty_pattern_is_fine() {
+        World::run(3, |mut c| {
+            let layout = Layout::split(30, 3);
+            let x = VecMPI::new(layout.clone(), c.rank(), ThreadCtx::serial());
+            let mut sc = VecScatter::plan(&layout, &mut c, &[]).unwrap();
+            assert_eq!(sc.ghost_len(), 0);
+            let ghosts = sc.scatter(&x, &mut c).unwrap();
+            assert!(ghosts.is_empty());
+        });
+    }
+
+    #[test]
+    fn duplicates_deduped() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(10, 2);
+            let other = if c.rank() == 0 { 7 } else { 2 };
+            let sc = VecScatter::plan(&layout, &mut c, &[other, other, other]).unwrap();
+            assert_eq!(sc.ghost_len(), 1);
+            // drain the planned data path so both ranks stay in lockstep
+            let xs: Vec<f64> = (0..5).map(|i| i as f64).collect();
+            let x = VecMPI::from_local_slice(layout, c.rank(), &xs, ThreadCtx::serial()).unwrap();
+            let mut sc = sc;
+            let g = sc.scatter(&x, &mut c).unwrap();
+            assert_eq!(g.len(), 1);
+        });
+    }
+
+    #[test]
+    fn local_index_rejected() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(10, 2);
+            let own = layout.range(c.rank()).0;
+            assert!(VecScatter::plan(&layout, &mut c, &[own]).is_err());
+            // Note: after an error the collective is torn; ranks return.
+        });
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(10, 2);
+            assert!(VecScatter::plan(&layout, &mut c, &[99]).is_err());
+        });
+    }
+
+    #[test]
+    fn end_without_begin_errors() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(10, 2);
+            let mut sc = VecScatter::plan(&layout, &mut c, &[]).unwrap();
+            assert!(sc.end(&mut c).is_err());
+        });
+    }
+
+    #[test]
+    fn overlap_begin_compute_end() {
+        // The MatMult pattern: begin scatter, do local work, end scatter.
+        let out = World::run(4, |mut c| {
+            let layout = Layout::split(16, 4);
+            let (lo, hi) = layout.range(c.rank());
+            let xs: Vec<f64> = (lo..hi).map(|i| (i * i) as f64).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ThreadCtx::serial())
+                .unwrap();
+            // need one element from the next rank
+            let need = (hi) % 16;
+            let mut sc = VecScatter::plan(&layout, &mut c, &[need]).unwrap();
+            sc.begin(&x, &mut c).unwrap();
+            let local_work: f64 = xs.iter().sum(); // overlapped compute
+            let ghosts = sc.end(&mut c).unwrap();
+            local_work + ghosts[0]
+        });
+        for (r, v) in out.iter().enumerate() {
+            let (lo, hi) = Layout::split(16, 4).range(r);
+            let expect: f64 =
+                (lo..hi).map(|i| (i * i) as f64).sum::<f64>() + ((hi % 16) * (hi % 16)) as f64;
+            assert_eq!(*v, expect);
+        }
+    }
+
+    #[test]
+    fn message_counters_reflect_pattern() {
+        let out = World::run(4, |mut c| {
+            let layout = Layout::split(16, 4);
+            let (lo, hi) = layout.range(c.rank());
+            // everyone needs one element from every other rank
+            let needed: Vec<usize> = (0..4)
+                .filter(|&r| r != c.rank())
+                .map(|r| layout.range(r).0)
+                .collect();
+            let sc = VecScatter::plan(&layout, &mut c, &needed).unwrap();
+            let m = (sc.messages_out(), sc.volume_out(), sc.ghost_len());
+            // complete the data phase to keep ranks in lockstep
+            let x = VecMPI::from_local_slice(
+                layout,
+                c.rank(),
+                &vec![1.0; hi - lo],
+                ThreadCtx::serial(),
+            )
+            .unwrap();
+            let mut sc = sc;
+            sc.scatter(&x, &mut c).unwrap();
+            m
+        });
+        for (msgs, vol, ghosts) in out {
+            assert_eq!(msgs, 3);
+            assert_eq!(vol, 3);
+            assert_eq!(ghosts, 3);
+        }
+    }
+}

@@ -1,0 +1,593 @@
+//! `VecSeq` — the sequential vector, threaded (paper Figure 2).
+//!
+//! Every operation the paper lists as threaded is threaded here, over the
+//! static schedule that also first-touched the pages (the §VI.A contract):
+//! Set, Scale, Copy, Swap, AXPY, AYPX, AXPBY, WAXPY, MAXPY, Dot, TDot,
+//! MDot, Norm(1|2|∞), Sum, Shift, Reciprocal, PointwiseMult/Divide, Max,
+//! Min, Conjugate.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::numa::page::PageMap;
+use crate::vec::blas1;
+use crate::vec::ctx::ThreadCtx;
+
+/// Norm types, as in PETSc.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormType {
+    One,
+    Two,
+    Infinity,
+}
+
+/// The sequential (per-rank) vector.
+pub struct VecSeq {
+    data: Vec<f64>,
+    /// First-touch bookkeeping for the NUMA model.
+    pages: PageMap,
+    ctx: Arc<ThreadCtx>,
+}
+
+/// Raw-pointer wrapper to hand disjoint chunks of one slice to pool threads.
+struct RawMut(*mut f64);
+unsafe impl Send for RawMut {}
+unsafe impl Sync for RawMut {}
+impl RawMut {
+    /// Accessor so closures capture the (Sync) wrapper, not the raw field.
+    #[inline]
+    fn ptr(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+impl VecSeq {
+    /// Create a zeroed vector. Zeroing runs under the full static schedule
+    /// on the pool — this *is* the first-touch placement step (§VI.A): the
+    /// thread that will compute chunk `[lo,hi)` faults its pages now.
+    pub fn new(n: usize, ctx: Arc<ThreadCtx>) -> VecSeq {
+        let mut data = vec![0.0f64; n];
+        let mut pages = PageMap::new(n, 8);
+        let raw = RawMut(data.as_mut_ptr());
+        ctx.for_range_paging(n, |_tid, lo, hi| {
+            // SAFETY: static chunks are disjoint.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(raw.ptr().add(lo), hi - lo) };
+            chunk.fill(0.0);
+        });
+        // Record the modelled page placement (same schedule).
+        for tid in 0..ctx.nthreads() {
+            let (lo, hi) = ctx.chunk(n, tid);
+            pages.touch_range(lo, hi, ctx.thread_uma(tid));
+        }
+        VecSeq { data, pages, ctx }
+    }
+
+    /// Create from existing data (pages counted as touched by the static
+    /// schedule owners — callers that page differently should rebuild).
+    pub fn from_slice(xs: &[f64], ctx: Arc<ThreadCtx>) -> VecSeq {
+        let mut v = VecSeq::new(xs.len(), ctx);
+        v.data.copy_from_slice(xs);
+        v
+    }
+
+    /// An uninitialized-by-convention duplicate: same size, ctx, zeroed.
+    pub fn duplicate(&self) -> VecSeq {
+        VecSeq::new(self.len(), self.ctx.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ctx(&self) -> &Arc<ThreadCtx> {
+        &self.ctx
+    }
+
+    pub fn pages(&self) -> &PageMap {
+        &self.pages
+    }
+
+    /// Immutable view (PETSc `VecGetArrayRead`).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable view (PETSc `VecGetArray`).
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    fn check_same_len(&self, other: &VecSeq, what: &str) -> Result<()> {
+        if self.len() != other.len() {
+            return Err(Error::size_mismatch(format!(
+                "{what}: {} vs {}",
+                self.len(),
+                other.len()
+            )));
+        }
+        Ok(())
+    }
+
+    // -- mutating element-wise ops ------------------------------------------
+
+    /// Internal: run `f(chunk_of_self, lo)` over static chunks in parallel.
+    fn par_mut<F: Fn(&mut [f64], usize) + Sync>(&mut self, f: F) {
+        let n = self.data.len();
+        let raw = RawMut(self.data.as_mut_ptr());
+        self.ctx.for_range(n, |_tid, lo, hi| {
+            // SAFETY: static chunks are disjoint.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(raw.ptr().add(lo), hi - lo) };
+            f(chunk, lo);
+        });
+    }
+
+    /// VecSet: `x[i] = a`.
+    pub fn set(&mut self, a: f64) {
+        self.par_mut(|chunk, _| chunk.fill(a));
+    }
+
+    /// VecZeroEntries.
+    pub fn zero(&mut self) {
+        self.set(0.0);
+    }
+
+    /// VecScale: `x *= a`.
+    pub fn scale(&mut self, a: f64) {
+        self.par_mut(|chunk, _| blas1::scal(a, chunk));
+    }
+
+    /// VecShift: `x[i] += a`.
+    pub fn shift(&mut self, a: f64) {
+        self.par_mut(|chunk, _| {
+            for v in chunk {
+                *v += a;
+            }
+        });
+    }
+
+    /// VecReciprocal: `x[i] = 1/x[i]` (zeros left untouched, as PETSc).
+    pub fn reciprocal(&mut self) {
+        self.par_mut(|chunk, _| {
+            for v in chunk {
+                if *v != 0.0 {
+                    *v = 1.0 / *v;
+                }
+            }
+        });
+    }
+
+    /// VecConjugate — identity for real scalars, kept for API parity with
+    /// the paper's Table 5 example.
+    pub fn conjugate(&mut self) {
+        self.par_mut(|_chunk, _| {});
+    }
+
+    /// VecCopy: `self = x`.
+    pub fn copy_from(&mut self, x: &VecSeq) -> Result<()> {
+        self.check_same_len(x, "VecCopy")?;
+        let src = x.data.as_ptr() as usize;
+        self.par_mut(|chunk, lo| {
+            let src = unsafe {
+                std::slice::from_raw_parts((src as *const f64).add(lo), chunk.len())
+            };
+            blas1::copy(src, chunk);
+        });
+        Ok(())
+    }
+
+    /// VecSwap.
+    pub fn swap(&mut self, other: &mut VecSeq) -> Result<()> {
+        self.check_same_len(other, "VecSwap")?;
+        std::mem::swap(&mut self.data, &mut other.data);
+        std::mem::swap(&mut self.pages, &mut other.pages);
+        Ok(())
+    }
+
+    /// VecAXPY: `self += a·x`.
+    pub fn axpy(&mut self, a: f64, x: &VecSeq) -> Result<()> {
+        self.check_same_len(x, "VecAXPY")?;
+        let src = x.data.as_ptr() as usize;
+        self.par_mut(|chunk, lo| {
+            let xs = unsafe {
+                std::slice::from_raw_parts((src as *const f64).add(lo), chunk.len())
+            };
+            blas1::axpy(a, xs, chunk);
+        });
+        Ok(())
+    }
+
+    /// VecAYPX: `self = x + b·self`.
+    pub fn aypx(&mut self, b: f64, x: &VecSeq) -> Result<()> {
+        self.check_same_len(x, "VecAYPX")?;
+        let src = x.data.as_ptr() as usize;
+        self.par_mut(|chunk, lo| {
+            let xs = unsafe {
+                std::slice::from_raw_parts((src as *const f64).add(lo), chunk.len())
+            };
+            blas1::aypx(b, xs, chunk);
+        });
+        Ok(())
+    }
+
+    /// VecAXPBY: `self = a·x + b·self`.
+    pub fn axpby(&mut self, a: f64, b: f64, x: &VecSeq) -> Result<()> {
+        self.check_same_len(x, "VecAXPBY")?;
+        let src = x.data.as_ptr() as usize;
+        self.par_mut(|chunk, lo| {
+            let xs = unsafe {
+                std::slice::from_raw_parts((src as *const f64).add(lo), chunk.len())
+            };
+            blas1::axpby(a, xs, b, chunk);
+        });
+        Ok(())
+    }
+
+    /// VecWAXPY: `self = a·x + y`.
+    pub fn waxpy(&mut self, a: f64, x: &VecSeq, y: &VecSeq) -> Result<()> {
+        self.check_same_len(x, "VecWAXPY(x)")?;
+        self.check_same_len(y, "VecWAXPY(y)")?;
+        let xp = x.data.as_ptr() as usize;
+        let yp = y.data.as_ptr() as usize;
+        self.par_mut(|chunk, lo| unsafe {
+            let xs = std::slice::from_raw_parts((xp as *const f64).add(lo), chunk.len());
+            let ys = std::slice::from_raw_parts((yp as *const f64).add(lo), chunk.len());
+            blas1::waxpy(a, xs, ys, chunk);
+        });
+        Ok(())
+    }
+
+    /// VecMAXPY: `self += Σ a[j]·x[j]` — one fused pass per chunk.
+    pub fn maxpy(&mut self, coeffs: &[f64], xs: &[&VecSeq]) -> Result<()> {
+        if coeffs.len() != xs.len() {
+            return Err(Error::size_mismatch(format!(
+                "VecMAXPY: {} coeffs vs {} vectors",
+                coeffs.len(),
+                xs.len()
+            )));
+        }
+        for x in xs {
+            self.check_same_len(x, "VecMAXPY")?;
+        }
+        let ptrs: Vec<usize> = xs.iter().map(|x| x.data.as_ptr() as usize).collect();
+        let coeffs = coeffs.to_vec();
+        self.par_mut(|chunk, lo| {
+            for (j, &p) in ptrs.iter().enumerate() {
+                let xs = unsafe {
+                    std::slice::from_raw_parts((p as *const f64).add(lo), chunk.len())
+                };
+                blas1::axpy(coeffs[j], xs, chunk);
+            }
+        });
+        Ok(())
+    }
+
+    /// VecPointwiseMult: `self = x .* y`.
+    pub fn pointwise_mult(&mut self, x: &VecSeq, y: &VecSeq) -> Result<()> {
+        self.check_same_len(x, "VecPointwiseMult(x)")?;
+        self.check_same_len(y, "VecPointwiseMult(y)")?;
+        let xp = x.data.as_ptr() as usize;
+        let yp = y.data.as_ptr() as usize;
+        self.par_mut(|chunk, lo| unsafe {
+            let xs = std::slice::from_raw_parts((xp as *const f64).add(lo), chunk.len());
+            let ys = std::slice::from_raw_parts((yp as *const f64).add(lo), chunk.len());
+            blas1::pw_mult(xs, ys, chunk);
+        });
+        Ok(())
+    }
+
+    /// VecPointwiseDivide: `self = x ./ y`.
+    pub fn pointwise_divide(&mut self, x: &VecSeq, y: &VecSeq) -> Result<()> {
+        self.check_same_len(x, "VecPointwiseDivide(x)")?;
+        self.check_same_len(y, "VecPointwiseDivide(y)")?;
+        let xp = x.data.as_ptr() as usize;
+        let yp = y.data.as_ptr() as usize;
+        self.par_mut(|chunk, lo| unsafe {
+            let xs = std::slice::from_raw_parts((xp as *const f64).add(lo), chunk.len());
+            let ys = std::slice::from_raw_parts((yp as *const f64).add(lo), chunk.len());
+            blas1::pw_div(xs, ys, chunk);
+        });
+        Ok(())
+    }
+
+    // -- reductions ----------------------------------------------------------
+
+    /// VecDot (VecTDot coincides for real scalars).
+    pub fn dot(&self, other: &VecSeq) -> Result<f64> {
+        self.check_same_len(other, "VecDot")?;
+        let a = &self.data;
+        let b = &other.data;
+        Ok(self
+            .ctx
+            .reduce(a.len(), 0.0, |_t, lo, hi| blas1::dot(&a[lo..hi], &b[lo..hi]), |x, y| x + y))
+    }
+
+    /// VecMDot: dots against several vectors in one sweep.
+    pub fn mdot(&self, others: &[&VecSeq]) -> Result<Vec<f64>> {
+        for o in others {
+            self.check_same_len(o, "VecMDot")?;
+        }
+        let a = &self.data;
+        let n = a.len();
+        let m = others.len();
+        let out = self.ctx.reduce(
+            n,
+            vec![0.0; m],
+            |_t, lo, hi| {
+                let mut acc = vec![0.0; m];
+                for (j, o) in others.iter().enumerate() {
+                    acc[j] = blas1::dot(&a[lo..hi], &o.data[lo..hi]);
+                }
+                acc
+            },
+            |mut x, y| {
+                for (xi, yi) in x.iter_mut().zip(&y) {
+                    *xi += yi;
+                }
+                x
+            },
+        );
+        Ok(out)
+    }
+
+    /// VecNorm.
+    pub fn norm(&self, t: NormType) -> f64 {
+        let a = &self.data;
+        match t {
+            NormType::One => self
+                .ctx
+                .reduce(a.len(), 0.0, |_t, lo, hi| blas1::asum(&a[lo..hi]), |x, y| x + y),
+            NormType::Two => self
+                .ctx
+                .reduce(a.len(), 0.0, |_t, lo, hi| blas1::sqnorm(&a[lo..hi]), |x, y| x + y)
+                .sqrt(),
+            NormType::Infinity => self
+                .ctx
+                .reduce(a.len(), 0.0, |_t, lo, hi| blas1::amax(&a[lo..hi]), f64::max),
+        }
+    }
+
+    /// VecSum.
+    pub fn sum(&self) -> f64 {
+        let a = &self.data;
+        self.ctx
+            .reduce(a.len(), 0.0, |_t, lo, hi| a[lo..hi].iter().sum::<f64>(), |x, y| x + y)
+    }
+
+    /// VecMax: `(index, value)` of the maximum entry.
+    pub fn max(&self) -> (usize, f64) {
+        let a = &self.data;
+        self.ctx.reduce(
+            a.len(),
+            (usize::MAX, f64::NEG_INFINITY),
+            |_t, lo, hi| {
+                let mut best = (lo, a[lo]);
+                for (i, &v) in a[lo..hi].iter().enumerate() {
+                    if v > best.1 {
+                        best = (lo + i, v);
+                    }
+                }
+                best
+            },
+            |x, y| if y.1 > x.1 { y } else { x },
+        )
+    }
+
+    /// VecMin: `(index, value)` of the minimum entry.
+    pub fn min(&self) -> (usize, f64) {
+        let a = &self.data;
+        self.ctx.reduce(
+            a.len(),
+            (usize::MAX, f64::INFINITY),
+            |_t, lo, hi| {
+                let mut best = (lo, a[lo]);
+                for (i, &v) in a[lo..hi].iter().enumerate() {
+                    if v < best.1 {
+                        best = (lo + i, v);
+                    }
+                }
+                best
+            },
+            |x, y| if y.1 < x.1 { y } else { x },
+        )
+    }
+}
+
+impl std::fmt::Debug for VecSeq {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "VecSeq(len={}, threads={})", self.len(), self.ctx.nthreads())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::{self, close, forall, PtConfig};
+    use crate::util::rng::XorShift64;
+
+    fn ctx() -> Arc<ThreadCtx> {
+        ThreadCtx::new(4)
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = XorShift64::new(seed);
+        (0..n).map(|_| r.range_f64(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn new_is_zeroed_and_paged() {
+        let v = VecSeq::new(10_000, ctx());
+        assert!(v.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(v.pages().pages(), (10_000 * 8usize).div_ceil(4096));
+    }
+
+    #[test]
+    fn set_scale_shift() {
+        let mut v = VecSeq::new(1000, ctx());
+        v.set(2.0);
+        v.scale(3.0);
+        v.shift(1.0);
+        assert!(v.as_slice().iter().all(|&x| x == 7.0));
+    }
+
+    #[test]
+    fn axpy_matches_serial() {
+        let n = 10_001;
+        let xs = rand_vec(n, 1);
+        let ys = rand_vec(n, 2);
+        let c = ctx();
+        let x = VecSeq::from_slice(&xs, c.clone());
+        let mut y = VecSeq::from_slice(&ys, c);
+        y.axpy(0.7, &x).unwrap();
+        for i in 0..n {
+            assert_eq!(y.as_slice()[i], ys[i] + 0.7 * xs[i]);
+        }
+    }
+
+    #[test]
+    fn aypx_axpby_waxpy() {
+        let c = ctx();
+        let x = VecSeq::from_slice(&[1.0, 2.0], c.clone());
+        let y0 = VecSeq::from_slice(&[10.0, 20.0], c.clone());
+        let mut y = VecSeq::from_slice(y0.as_slice(), c.clone());
+        y.aypx(0.5, &x).unwrap();
+        assert_eq!(y.as_slice(), &[6.0, 12.0]);
+        let mut z = VecSeq::from_slice(&[2.0, 4.0], c.clone());
+        z.axpby(3.0, 0.5, &x).unwrap();
+        assert_eq!(z.as_slice(), &[4.0, 8.0]);
+        let mut w = VecSeq::new(2, c);
+        w.waxpy(2.0, &x, &y0).unwrap();
+        assert_eq!(w.as_slice(), &[12.0, 24.0]);
+    }
+
+    #[test]
+    fn maxpy_fused() {
+        let c = ctx();
+        let x1 = VecSeq::from_slice(&[1.0, 0.0], c.clone());
+        let x2 = VecSeq::from_slice(&[0.0, 1.0], c.clone());
+        let mut y = VecSeq::from_slice(&[1.0, 1.0], c);
+        y.maxpy(&[2.0, 3.0], &[&x1, &x2]).unwrap();
+        assert_eq!(y.as_slice(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_and_norms_match_serial() {
+        let n = 40_321;
+        let xs = rand_vec(n, 3);
+        let ys = rand_vec(n, 4);
+        let c = ctx();
+        let x = VecSeq::from_slice(&xs, c.clone());
+        let y = VecSeq::from_slice(&ys, c);
+        let serial_dot: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+        assert!(close(x.dot(&y).unwrap(), serial_dot, 1e-12).is_ok());
+        let serial_n2 = xs.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(close(x.norm(NormType::Two), serial_n2, 1e-12).is_ok());
+        let serial_n1: f64 = xs.iter().map(|v| v.abs()).sum();
+        assert!(close(x.norm(NormType::One), serial_n1, 1e-12).is_ok());
+        let serial_inf = xs.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        assert_eq!(x.norm(NormType::Infinity), serial_inf);
+    }
+
+    #[test]
+    fn mdot_matches_individual_dots() {
+        let c = ctx();
+        let x = VecSeq::from_slice(&rand_vec(5000, 5), c.clone());
+        let a = VecSeq::from_slice(&rand_vec(5000, 6), c.clone());
+        let b = VecSeq::from_slice(&rand_vec(5000, 7), c);
+        let m = x.mdot(&[&a, &b]).unwrap();
+        assert!(close(m[0], x.dot(&a).unwrap(), 1e-13).is_ok());
+        assert!(close(m[1], x.dot(&b).unwrap(), 1e-13).is_ok());
+    }
+
+    #[test]
+    fn pointwise_ops() {
+        let c = ctx();
+        let x = VecSeq::from_slice(&[2.0, 3.0], c.clone());
+        let y = VecSeq::from_slice(&[4.0, 6.0], c.clone());
+        let mut w = VecSeq::new(2, c);
+        w.pointwise_mult(&x, &y).unwrap();
+        assert_eq!(w.as_slice(), &[8.0, 18.0]);
+        w.pointwise_divide(&y, &x).unwrap();
+        assert_eq!(w.as_slice(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn reciprocal_skips_zeros() {
+        let c = ctx();
+        let mut v = VecSeq::from_slice(&[2.0, 0.0, 4.0], c);
+        v.reciprocal();
+        assert_eq!(v.as_slice(), &[0.5, 0.0, 0.25]);
+    }
+
+    #[test]
+    fn max_min_with_indices() {
+        let c = ctx();
+        let v = VecSeq::from_slice(&[1.0, -5.0, 9.0, 3.0], c);
+        assert_eq!(v.max(), (2, 9.0));
+        assert_eq!(v.min(), (1, -5.0));
+    }
+
+    #[test]
+    fn copy_swap_duplicate() {
+        let c = ctx();
+        let mut a = VecSeq::from_slice(&[1.0, 2.0], c.clone());
+        let mut b = VecSeq::from_slice(&[3.0, 4.0], c);
+        a.swap(&mut b).unwrap();
+        assert_eq!(a.as_slice(), &[3.0, 4.0]);
+        let mut d = a.duplicate();
+        assert_eq!(d.as_slice(), &[0.0, 0.0]);
+        d.copy_from(&b).unwrap();
+        assert_eq!(d.as_slice(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let c = ctx();
+        let x = VecSeq::new(3, c.clone());
+        let mut y = VecSeq::new(4, c);
+        assert!(y.axpy(1.0, &x).is_err());
+        assert!(y.dot(&x).is_err());
+        assert!(y.maxpy(&[1.0], &[&x]).is_err());
+        assert!(y.maxpy(&[1.0, 2.0], &[&x]).is_err());
+    }
+
+    #[test]
+    fn threaded_matches_serial_property() {
+        // Property: any op sequence gives identical results on 1 vs 4
+        // threads (threading must not change the math).
+        forall(
+            &PtConfig { cases: 24, ..Default::default() },
+            ptest::float_vecs(1, 2000, 10.0),
+            |xs| {
+                let serial = ThreadCtx::serial();
+                let par = ThreadCtx::new(4);
+                let mut a = VecSeq::from_slice(xs, serial);
+                let mut b = VecSeq::from_slice(xs, par);
+                a.scale(1.5);
+                b.scale(1.5);
+                a.shift(-0.25);
+                b.shift(-0.25);
+                let (na, nb) = (a.norm(NormType::Two), b.norm(NormType::Two));
+                close(na, nb, 1e-13)?;
+                let (sa, sb) = (a.sum(), b.sum());
+                close(sa, sb, 1e-12)?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_vector_ops() {
+        let c = ctx();
+        let mut v = VecSeq::new(0, c.clone());
+        v.set(1.0);
+        v.scale(2.0);
+        assert_eq!(v.sum(), 0.0);
+        assert_eq!(v.norm(NormType::Two), 0.0);
+        let x = VecSeq::new(0, c);
+        assert_eq!(v.dot(&x).unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Integration tests: whole-pipeline scenarios across modules.
+
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::logging::EventLog;
+use mmpetsc::coordinator::options::Options;
+use mmpetsc::coordinator::runner::{run_case, solve_by_name, HybridConfig};
+use mmpetsc::io::matrix_market::{read_matrix_market, write_matrix_market};
+use mmpetsc::io::petsc_binary::{read_mat, write_mat};
+use mmpetsc::ksp::KspConfig;
+use mmpetsc::matgen::cases::{generate, TestCase};
+use mmpetsc::mat::csr::MatSeqAIJ;
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::pc;
+use mmpetsc::ptest::{self, forall, PtConfig};
+use mmpetsc::reorder::rcm::{bandwidth_stats, rcm_permutation};
+use mmpetsc::util::rng::XorShift64;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
+use mmpetsc::vec::seq::NormType;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("mmpetsc-it-{}-{name}", std::process::id()));
+    p
+}
+
+/// The full single-node pipeline the paper describes: generate a Fluidity
+/// -like matrix with unstructured numbering, RCM-reorder it (§VIII.B),
+/// store it in PETSc binary (ex6's input), reload, distribute over ranks,
+/// solve with CG+Jacobi, verify against the manufactured solution.
+#[test]
+fn full_pipeline_generate_rcm_store_solve() {
+    let ctx = ThreadCtx::new(2);
+    let a0 = generate(TestCase::SaltGeostrophic, 0.004, Some(99), ctx.clone()).unwrap();
+    let before = bandwidth_stats(&a0);
+    let perm = rcm_permutation(&a0);
+    let a1 = a0.permute_symmetric(&perm).unwrap();
+    let after = bandwidth_stats(&a1);
+    assert!(after.profile < before.profile, "RCM must reduce the profile");
+
+    let path = tmp("pipeline.mat");
+    write_mat(&path, &a1).unwrap();
+    let a2 = read_mat(&path, ctx).unwrap();
+    assert_eq!(a2.nnz(), a1.nnz());
+    std::fs::remove_file(&path).ok();
+
+    // Distribute over 3 ranks and solve.
+    let n = a2.rows();
+    let (row_ptr, col_idx, vals) =
+        (a2.row_ptr().to_vec(), a2.col_idx().to_vec(), a2.vals().to_vec());
+    let outs = World::run(3, move |mut comm| {
+        let ctx = ThreadCtx::serial();
+        let layout = Layout::split(n, comm.size());
+        let (lo, hi) = layout.range(comm.rank());
+        let mut entries = Vec::new();
+        for i in lo..hi {
+            for k in row_ptr[i]..row_ptr[i + 1] {
+                entries.push((i, col_idx[k], vals[k]));
+            }
+        }
+        let mut a =
+            MatMPIAIJ::assemble(layout.clone(), layout.clone(), entries, &mut comm, ctx.clone())
+                .unwrap();
+        let xs: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.01).cos()).collect();
+        let x_true = VecMPI::from_local_slice(layout.clone(), comm.rank(), &xs, ctx.clone()).unwrap();
+        let mut b = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        a.mult(&x_true, &mut b, &mut comm).unwrap();
+        let pcond = pc::from_name("jacobi", &a, &mut comm).unwrap();
+        let log = EventLog::new();
+        let mut x = VecMPI::new(layout, comm.rank(), ctx);
+        let cfg = KspConfig { rtol: 1e-9, ..Default::default() };
+        let stats = solve_by_name("cg", &mut a, pcond.as_ref(), &b, &mut x, &cfg, &mut comm, &log)
+            .unwrap();
+        let mut e = x.duplicate();
+        e.copy_from(&x).unwrap();
+        e.axpy(-1.0, &x_true).unwrap();
+        (stats.converged(), e.norm(NormType::Infinity, &mut comm).unwrap())
+    });
+    for (ok, err) in outs {
+        assert!(ok);
+        assert!(err < 1e-6, "error {err}");
+    }
+}
+
+/// PETSc binary and MatrixMarket agree with each other.
+#[test]
+fn io_formats_cross_agree() {
+    let ctx = ThreadCtx::serial();
+    let a = generate(TestCase::SaltVelocity, 0.002, Some(5), ctx.clone()).unwrap();
+    let pb = tmp("x.mat");
+    let mm = tmp("x.mtx");
+    write_mat(&pb, &a).unwrap();
+    write_matrix_market(&mm, &a).unwrap();
+    let a1 = read_mat(&pb, ctx.clone()).unwrap();
+    let a2 = read_matrix_market(&mm, ctx).unwrap();
+    assert_eq!(a1.nnz(), a2.nnz());
+    for i in (0..a.rows()).step_by(53) {
+        let (c1, v1) = a1.row(i);
+        let (c2, v2) = a2.row(i);
+        assert_eq!(c1, c2);
+        for (x, y) in v1.iter().zip(v2) {
+            assert!((x - y).abs() < 1e-14);
+        }
+    }
+    std::fs::remove_file(&pb).ok();
+    std::fs::remove_file(&mm).ok();
+}
+
+/// Property: distributed MatMult equals the sequential product for random
+/// sparse matrices, any rank count, any thread count.
+#[test]
+fn property_distributed_equals_sequential() {
+    forall(
+        &PtConfig { cases: 10, ..Default::default() },
+        |rng: &mut XorShift64| {
+            let n = rng.range(20, 120);
+            let ranks = rng.range(1, 5);
+            let threads = rng.range(1, 3);
+            let seed = rng.next_u64();
+            (n, ranks, threads, seed)
+        },
+        |&(n, ranks, threads, seed)| {
+            // deterministic global entries
+            let entries = move |seed: u64| {
+                let mut r = XorShift64::new(seed);
+                let mut es = Vec::new();
+                for i in 0..n {
+                    es.push((i, i, 3.0 + r.next_f64()));
+                    for _ in 0..3 {
+                        es.push((i, r.below(n), r.range_f64(-1.0, 1.0)));
+                    }
+                }
+                es
+            };
+            // sequential reference
+            let ctx = ThreadCtx::serial();
+            let mut b = mmpetsc::mat::csr::MatBuilder::new(n, n);
+            for (i, j, v) in entries(seed) {
+                b.add(i, j, v).unwrap();
+            }
+            let aseq = b.assemble(ctx.clone());
+            let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+            let mut want = vec![0.0; n];
+            aseq.mult_slices(&xs, &mut want).unwrap();
+
+            let got_all = World::run(ranks, move |mut comm| {
+                let ctx = ThreadCtx::new(threads);
+                let layout = Layout::split(n, comm.size());
+                let (lo, hi) = layout.range(comm.rank());
+                let es: Vec<_> = entries(seed)
+                    .into_iter()
+                    .filter(|&(i, _, _)| i >= lo && i < hi)
+                    .collect();
+                let mut a =
+                    MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, &mut comm, ctx.clone())
+                        .unwrap();
+                let xs: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.37).sin()).collect();
+                let x = VecMPI::from_local_slice(layout.clone(), comm.rank(), &xs, ctx.clone())
+                    .unwrap();
+                let mut y = VecMPI::new(layout, comm.rank(), ctx);
+                a.mult(&x, &mut y, &mut comm).unwrap();
+                y.gather_all(&mut comm).unwrap()
+            });
+            for got in got_all {
+                for (g, w) in got.iter().zip(&want) {
+                    ptest::close(*g, *w, 1e-12)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the solution of CG on a random SPD diagonally-dominant
+/// system satisfies ‖b − Ax‖ ≤ rtol·‖b‖ whatever the rank/thread split.
+#[test]
+fn property_cg_residual_bound() {
+    forall(
+        &PtConfig { cases: 6, ..Default::default() },
+        |rng: &mut XorShift64| (rng.range(40, 150), rng.range(1, 4), rng.next_u64()),
+        |&(n, ranks, _seed)| {
+            let outs = World::run(ranks, move |mut comm| {
+                let ctx = ThreadCtx::serial();
+                let layout = Layout::split(n, comm.size());
+                let (lo, hi) = layout.range(comm.rank());
+                let mut es = Vec::new();
+                for i in lo..hi {
+                    es.push((i, i, 4.0));
+                    if i > 0 {
+                        es.push((i, i - 1, -1.0));
+                    }
+                    if i + 1 < n {
+                        es.push((i, i + 1, -1.0));
+                    }
+                    es.push((i, (i * 7 + 3) % n, -0.3));
+                    es.push(((i * 7 + 3) % n, i, -0.3));
+                }
+                let mut a = MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout.clone(),
+                    es,
+                    &mut comm,
+                    ctx.clone(),
+                )
+                .unwrap();
+                let b = {
+                    let xs: Vec<f64> = (lo..hi).map(|i| 1.0 + (i % 3) as f64).collect();
+                    let xt =
+                        VecMPI::from_local_slice(layout.clone(), comm.rank(), &xs, ctx.clone())
+                            .unwrap();
+                    let mut b = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+                    a.mult(&xt, &mut b, &mut comm).unwrap();
+                    b
+                };
+                let pcond = pc::from_name("bjacobi", &a, &mut comm).unwrap();
+                let log = EventLog::new();
+                let mut x = VecMPI::new(layout, comm.rank(), ctx);
+                let cfg = KspConfig { rtol: 1e-7, ..Default::default() };
+                let stats =
+                    solve_by_name("cg", &mut a, pcond.as_ref(), &b, &mut x, &cfg, &mut comm, &log)
+                        .unwrap();
+                // true residual
+                let mut r = b.duplicate();
+                a.mult(&x, &mut r, &mut comm).unwrap();
+                r.aypx(-1.0, &b).unwrap();
+                let rn = r.norm(NormType::Two, &mut comm).unwrap();
+                let bn = b.norm(NormType::Two, &mut comm).unwrap();
+                (stats.converged(), rn, bn)
+            });
+            for (ok, rn, bn) in outs {
+                ptest::check(ok, "converged")?;
+                ptest::check(rn <= 1.05e-7 * bn, format!("residual {rn} vs {bn}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The options database drives the runner end-to-end (ex6's wiring).
+#[test]
+fn options_to_runner_wiring() {
+    let o = Options::parse_str("-ksp_type gmres -pc_type bjacobi -ksp_rtol 1e-7 -ksp_gmres_restart 15")
+        .unwrap();
+    let mut cfg = HybridConfig::default_for(TestCase::SaltGeostrophic, 0.002, 2, 1);
+    cfg.ksp_type = o.get_or("ksp_type", "cg");
+    cfg.pc_type = o.get_or("pc_type", "jacobi");
+    cfg.ksp = o.ksp_config().unwrap();
+    let rep = run_case(&cfg).unwrap();
+    assert!(rep.converged);
+}
+
+/// Failure injection: a malformed matrix file must error cleanly through
+/// the whole read path, never panic.
+#[test]
+fn corrupted_file_fails_cleanly() {
+    let p = tmp("corrupt.mat");
+    // valid classid, then garbage
+    let mut bytes = 1_211_216_i32.to_be_bytes().to_vec();
+    bytes.extend_from_slice(&[0xFF; 7]);
+    std::fs::write(&p, bytes).unwrap();
+    assert!(read_mat(&p, ThreadCtx::serial()).is_err());
+    std::fs::remove_file(&p).ok();
+}
+
+/// Failure injection: inconsistent CSR inputs are rejected at every layer.
+#[test]
+fn invalid_inputs_rejected_everywhere() {
+    let ctx = ThreadCtx::serial();
+    // bad CSR
+    assert!(MatSeqAIJ::from_csr(2, 2, vec![0, 3, 2], vec![0, 1], vec![1.0; 2], ctx.clone())
+        .is_err());
+    // solver with mismatched dimensions
+    let mut cfg = HybridConfig::default_for(TestCase::SaltGeostrophic, 0.001, 9, 4);
+    // 9 ranks x 4 threads = 36 streams on a 32-core modelled node
+    assert!(run_case(&cfg).is_err());
+    cfg.ranks = 2;
+    cfg.threads = 2;
+    cfg.pc_type = "not-a-pc".into();
+    assert!(run_case(&cfg).is_err());
+}
+
+/// Threaded and serial solves produce identical iteration counts on the
+/// same system (threading must not change the algorithm).
+#[test]
+fn threading_does_not_change_convergence() {
+    let mut its = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.004, 2, threads);
+        cfg.ksp.rtol = 1e-8;
+        let rep = run_case(&cfg).unwrap();
+        assert!(rep.converged);
+        its.push(rep.iterations);
+    }
+    assert_eq!(its[0], its[1]);
+    assert_eq!(its[1], its[2]);
+}

@@ -1,0 +1,180 @@
+//! The paper's quantitative claims, asserted end-to-end — the
+//! "reproduction test suite". Each test cites the paper section it checks.
+//! Model-mode claims use the calibrated models; real-mode claims run the
+//! actual library.
+
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::numa::bandwidth::BwModel;
+use mmpetsc::numa::stream::triad_model;
+use mmpetsc::sim::energy::{EnergyModel, ProgModel};
+use mmpetsc::sim::exec::{partition_stats, simulate, SimConfig};
+use mmpetsc::thread::overhead::{Compiler, CompilerModel};
+use mmpetsc::topology::affinity::{parse_cc_list, AffinityPolicy, Placement};
+use mmpetsc::topology::presets::{core_i7_920, hector_xe6, hector_xe6_node};
+
+fn flue(ranks: usize, threads: usize) -> mmpetsc::sim::exec::SimReport {
+    simulate(
+        &hector_xe6(),
+        &SimConfig {
+            case: TestCase::FluePressure,
+            scale: 1.0,
+            ranks,
+            threads,
+            iterations: 200,
+            ksp_type: "gmres",
+            compiler: Compiler::Cray803,
+        },
+    )
+}
+
+/// §IV.A / Table 2: "Initializing the arrays in parallel … improves the
+/// performance by a factor of two."
+#[test]
+fn claim_first_touch_factor_two() {
+    let node = hector_xe6_node();
+    let p = Placement::compute(&node, 1, 32, &AffinityPolicy::Packed).unwrap();
+    let with = triad_model(&node, &p, 1_000_000_000, true);
+    let without = triad_model(&node, &p, 1_000_000_000, false);
+    let factor = with.bandwidth / without.bandwidth;
+    assert!((factor - 2.0).abs() < 0.1, "factor {factor}");
+}
+
+/// §IV.B / Table 3: "when placing the four threads across two or four UMA
+/// regions, the memory bandwidth increases accordingly" — monotone in
+/// region count, ~4.6× from packed to fully spread.
+#[test]
+fn claim_spread_placement_bandwidth() {
+    let node = hector_xe6_node();
+    let bw_of = |cc: &str| {
+        let cores = parse_cc_list(cc).unwrap();
+        let p = Placement::compute(&node, 1, 4, &AffinityPolicy::Explicit(cores)).unwrap();
+        triad_model(&node, &p, 1_000_000_000, true).bandwidth
+    };
+    let b1 = bw_of("0-3");
+    let b2 = bw_of("0,4,8,12");
+    let b4 = bw_of("0,8,16,24");
+    assert!(b2 > 1.7 * b1);
+    assert!(b4 > 2.0 * b2);
+    assert!((b4 / b1 - 30.42 / 6.64).abs() < 0.5, "ratio {}", b4 / b1);
+}
+
+/// §IV.C / Table 4: GCC's fork-join overhead is roughly an order of
+/// magnitude above Cray's at 32 threads.
+#[test]
+fn claim_gcc_overhead_order_of_magnitude() {
+    let gcc = CompilerModel::paper(Compiler::Gcc462).overhead(32);
+    let cray = CompilerModel::paper(Compiler::Cray803).overhead(32);
+    assert!(gcc / cray > 9.0, "ratio {}", gcc / cray);
+}
+
+/// §VII: "a lower number of MPI processes means … less data needs to be
+/// gathered from remote processes" — total ghost volume shrinks with the
+/// rank count at fixed matrix.
+#[test]
+fn claim_fewer_ranks_less_gather() {
+    let total = |ranks: usize| {
+        partition_stats(TestCase::FluePressure, 1.0, ranks).ghosts_per_rank * ranks as f64
+    };
+    assert!(total(1024) < total(8192));
+    assert!(total(8192) < total(16384));
+}
+
+/// §VIII.E / Figure 11: "For 8k cores, our mixed-mode version of PETSc
+/// gives a performance improvement of more than 50% for 4 and 8 threads."
+#[test]
+fn claim_headline_50_percent_at_8k() {
+    let mpi = flue(8192, 1);
+    for threads in [4usize, 8] {
+        let hyb = flue(8192 / threads, threads);
+        let gain = (mpi.matmult_time - hyb.matmult_time) / mpi.matmult_time;
+        assert!(gain > 0.5, "{threads}T gain {:.0}%", gain * 100.0);
+    }
+}
+
+/// §VIII.E / Figure 11: "For the MPI code strong scaling essentially
+/// stops at 2k cores. The hybrid code on the other hand continues to
+/// scale."
+#[test]
+fn claim_mpi_stalls_hybrid_scales() {
+    let mpi = flue(2048, 1).matmult_time / flue(8192, 1).matmult_time;
+    let hyb = flue(512, 4).matmult_time / flue(2048, 4).matmult_time;
+    assert!(mpi < 1.5, "MPI 'speedup' 2k->8k = {mpi:.2}x (should stall)");
+    assert!(hyb > 2.0, "hybrid speedup 2k->8k = {hyb:.2}x (should scale)");
+}
+
+/// §VIII.D / Figure 9: the energy sweet spot is 2 cores; OpenMP beats MPI
+/// on energy at every core count through runtime alone.
+#[test]
+fn claim_energy_sweet_spot() {
+    let m = EnergyModel::core_i7(&core_i7_920());
+    let nnz = 11.3e6;
+    let energies: Vec<f64> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&c| m.energy(nnz, 300, c, ProgModel::OpenMp))
+        .collect();
+    let min_idx = energies
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(min_idx, 1, "sweet spot must be 2 cores: {energies:?}");
+    for c in [1usize, 2, 4, 8] {
+        assert!(
+            m.energy(nnz, 300, c, ProgModel::Mpi) >= m.energy(nnz, 300, c, ProgModel::OpenMp)
+        );
+    }
+}
+
+/// §VI.A: the paging contract — compute chunks read the pages their
+/// thread first-touched (asserted on a real threaded vector).
+#[test]
+fn claim_paging_contract_holds() {
+    use mmpetsc::vec::ctx::ThreadCtx;
+    use mmpetsc::vec::seq::VecSeq;
+    let node = hector_xe6_node();
+    let ctx = ThreadCtx::pinned(&node, &[0, 8, 16, 24]);
+    let v = VecSeq::new(1 << 16, ctx.clone());
+    for tid in 0..4 {
+        let (lo, hi) = ctx.chunk(v.len(), tid);
+        assert!(
+            v.pages().chunk_is_local(lo, hi, ctx.thread_uma(tid)),
+            "thread {tid}'s chunk not local"
+        );
+    }
+}
+
+/// §V.A: "by threading the sequential functionality, the parallel classes
+/// essentially pick this threading up for free" — VecMPI norms route
+/// through the threaded VecSeq kernels and agree with serial results.
+#[test]
+fn claim_parallel_inherits_threading() {
+    use mmpetsc::comm::world::World;
+    use mmpetsc::vec::ctx::ThreadCtx;
+    use mmpetsc::vec::mpi::{Layout, VecMPI};
+    use mmpetsc::vec::seq::NormType;
+    let norms = World::run(2, |mut c| {
+        let layout = Layout::split(10_000, 2);
+        let (lo, hi) = layout.range(c.rank());
+        let xs: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.01).sin()).collect();
+        let x = VecMPI::from_local_slice(layout, c.rank(), &xs, ThreadCtx::new(4)).unwrap();
+        x.norm(NormType::Two, &mut c).unwrap()
+    });
+    let serial: f64 = (0..10_000)
+        .map(|i| (i as f64 * 0.01).sin().powi(2))
+        .sum::<f64>()
+        .sqrt();
+    for n in norms {
+        assert!((n - serial).abs() < 1e-10);
+    }
+}
+
+/// The calibration sanity rule (DESIGN.md §2): the bandwidth model must
+/// reproduce the paper's own measurements before pricing anything bigger.
+#[test]
+fn claim_model_calibration_is_consistent() {
+    let m = BwModel::for_machine(&hector_xe6_node());
+    // The calibration points themselves.
+    assert!((m.bank_bw(1) - 7.6e9).abs() < 1e7);
+    assert!((m.bank_bw(8) - 10.9e9).abs() < 1e7);
+}
