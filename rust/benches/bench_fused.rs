@@ -1,0 +1,229 @@
+//! Fused vs unfused CG and static vs nnz-balanced SpMV — the
+//! perf-trajectory seed for the fused-iteration layer.
+//!
+//! Times a fixed-iteration CG solve (Jacobi PC) on a Table-6 stencil
+//! matrix through the kernel-per-fork path and the fused single-fork path,
+//! measures forks-per-iteration for both via the pool's fork counter, and
+//! times the threaded SpMV on a row-density-skewed matrix under the static
+//! and nnz-balanced schedules. Results go to stdout and to
+//! `BENCH_fused_cg.json` (GFLOP/s + per-iteration fork counts), which
+//! future PRs compare against.
+//!
+//! `cargo bench --bench bench_fused -- --threads 4`
+
+use std::sync::Arc;
+
+use mmpetsc::bench::{JsonVal, Table};
+use mmpetsc::comm::endpoint::Comm;
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::logging::EventLog;
+use mmpetsc::ksp::{cg, fused, KspConfig};
+use mmpetsc::mat::csr::{MatBuilder, MatSeqAIJ};
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::matgen::cases::{generate_rows, TestCase};
+use mmpetsc::pc::jacobi::PcJacobi;
+use mmpetsc::util::cli::Cli;
+use mmpetsc::util::rng::XorShift64;
+use mmpetsc::util::stats::Summary;
+use mmpetsc::util::timer::{bench_loop, timed};
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
+use mmpetsc::vec::seq::VecSeq;
+
+/// A matrix whose row density varies at chunk scale: the first eighth of
+/// the rows is 8× denser than the rest, so the static row schedule
+/// overloads the low-tid threads and the nnz-balanced schedule fixes it.
+fn skewed_matrix(n: usize, ctx: Arc<ThreadCtx>) -> MatSeqAIJ {
+    let mut b = MatBuilder::new(n, n);
+    let mut rng = XorShift64::new(7);
+    for i in 0..n {
+        let k = if i < n / 8 { 32 } else { 4 };
+        b.add(i, i, 4.0).unwrap();
+        for _ in 0..k {
+            b.add(i, rng.below(n), 0.01).unwrap();
+        }
+    }
+    b.assemble(ctx)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn solve_once(
+    use_fused: bool,
+    max_it: usize,
+    a: &mut MatMPIAIJ,
+    pc: &PcJacobi,
+    b: &VecMPI,
+    ctx: &Arc<ThreadCtx>,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> (f64, u64) {
+    let cfg = KspConfig {
+        rtol: 1e-300,
+        atol: 0.0,
+        max_it,
+        ..Default::default()
+    };
+    let mut x = b.duplicate();
+    let f0 = ctx.pool().fork_count();
+    let (stats, secs) = timed(|| {
+        if use_fused {
+            fused::solve(a, pc, b, &mut x, &cfg, comm, log).unwrap()
+        } else {
+            cg::solve(a, pc, b, &mut x, &cfg, comm, log).unwrap()
+        }
+    });
+    assert_eq!(stats.iterations, max_it, "solver must run to max_it");
+    (secs, ctx.pool().fork_count() - f0)
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_fused",
+        "fused vs unfused CG, static vs nnz-balanced SpMV",
+    )
+    .opt("threads", None, "threads (default: host cores, capped at 8)")
+    .opt("scale", Some("0.05"), "matrix scale for saltfinger-pressure")
+    .opt("its", Some("60"), "CG iterations to time")
+    .opt("out", Some("BENCH_fused_cg.json"), "output JSON path")
+    .parse_env();
+    let host = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(4);
+    let threads: usize = match args.get("threads") {
+        Some(v) => v.parse().expect("--threads must be an integer"),
+        None => host.min(8),
+    };
+    let scale = args.get_f64("scale").unwrap();
+    let its = args.get_usize("its").unwrap().max(2);
+    let out_path = args.get_or("out", "BENCH_fused_cg.json");
+    let case = TestCase::SaltPressure;
+
+    // ---- CG: unfused vs fused (1 rank × threads) --------------------------
+    let cg_out = World::run(1, move |mut c| {
+        let ctx = ThreadCtx::new(threads);
+        let spec = case.grid(scale);
+        let n = spec.rows();
+        let layout = Layout::split(n, 1);
+        let mut a = MatMPIAIJ::assemble(
+            layout.clone(),
+            layout.clone(),
+            generate_rows(case, scale, 0, n),
+            &mut c,
+            ctx.clone(),
+        )
+        .unwrap();
+        let xs: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.001).sin()).collect();
+        let x_true = VecMPI::from_local_slice(layout.clone(), 0, &xs, ctx.clone()).unwrap();
+        let mut b = VecMPI::new(layout, 0, ctx.clone());
+        a.mult(&x_true, &mut b, &mut c).unwrap();
+        let pc = PcJacobi::setup(&a, &mut c).unwrap();
+        let log = EventLog::new();
+        let nnz = a.diag_block().nnz() + a.offdiag_block().nnz();
+
+        let mut best = [f64::INFINITY; 2]; // [unfused, fused]
+        let mut forks_full = [0u64; 2];
+        for rep in 0..3 {
+            for (slot, use_fused) in [(0usize, false), (1usize, true)] {
+                let (secs, forks) =
+                    solve_once(use_fused, its, &mut a, &pc, &b, &ctx, &mut c, &log);
+                best[slot] = best[slot].min(secs);
+                if rep == 0 {
+                    forks_full[slot] = forks;
+                }
+            }
+        }
+        // forks per iteration via the difference of two run lengths, so the
+        // constant setup forks cancel exactly
+        let half = its / 2;
+        let mut per_iter = [0.0f64; 2];
+        for (slot, use_fused) in [(0usize, false), (1usize, true)] {
+            let (_, forks_half) = solve_once(use_fused, half, &mut a, &pc, &b, &ctx, &mut c, &log);
+            per_iter[slot] = (forks_full[slot] - forks_half) as f64 / (its - half) as f64;
+        }
+        (n, nnz, best, per_iter)
+    });
+    let (n, nnz, best, per_iter) = cg_out.into_iter().next().unwrap();
+    let cg_flops = its as f64 * (2.0 * nnz as f64 + 12.0 * n as f64);
+    let un_gflops = cg_flops / best[0] / 1e9;
+    let fu_gflops = cg_flops / best[1] / 1e9;
+
+    // ---- SpMV: static vs nnz-balanced schedule on a skewed matrix ---------
+    let ctx = ThreadCtx::new(threads);
+    let sn = (n / 2).max(20_000);
+    let mut sa = skewed_matrix(sn, ctx.clone());
+    let sx: Vec<f64> = (0..sn).map(|i| (i as f64 * 0.01).cos()).collect();
+    let mut spmv_gflops = [0.0f64; 2]; // [static, nnz-balanced]
+    for (slot, balanced) in [(0usize, false), (1usize, true)] {
+        if balanced {
+            sa.balance_partition_by_nnz();
+        } else {
+            sa.use_static_partition();
+        }
+        // destination paged by the active ownership map (the §VI.A contract
+        // carried over to the nnz-balanced schedule)
+        let mut sy = VecSeq::new_partitioned(sn, ctx.clone(), sa.partition());
+        let samples = bench_loop(0.3, 5, || {
+            sa.mult_slices(&sx, sy.as_mut_slice()).unwrap();
+        });
+        let med = Summary::of(&samples).median;
+        spmv_gflops[slot] = 2.0 * sa.nnz() as f64 / med / 1e9;
+    }
+
+    // ---- report -----------------------------------------------------------
+    let title = format!(
+        "fused CG — {} scale {scale}, {n} rows, {nnz} nnz, {threads} threads",
+        case.name()
+    );
+    let mut t = Table::new(&title, &["path", "seconds", "GFLOP/s", "forks/iter"]);
+    t.row(&[
+        "unfused".into(),
+        format!("{:.4}", best[0]),
+        format!("{un_gflops:.3}"),
+        format!("{:.1}", per_iter[0]),
+    ]);
+    t.row(&[
+        "fused".into(),
+        format!("{:.4}", best[1]),
+        format!("{fu_gflops:.3}"),
+        format!("{:.1}", per_iter[1]),
+    ]);
+    t.print();
+    println!(
+        "spmv (skewed, {sn} rows): static {:.3} GFLOP/s, nnz-balanced {:.3} GFLOP/s",
+        spmv_gflops[0], spmv_gflops[1]
+    );
+
+    let json = JsonVal::obj(vec![
+        ("bench", JsonVal::Str("fused_cg".into())),
+        ("case", JsonVal::Str(case.name().into())),
+        ("threads", JsonVal::Int(threads as u64)),
+        ("rows", JsonVal::Int(n as u64)),
+        ("nnz", JsonVal::Int(nnz as u64)),
+        ("iterations", JsonVal::Int(its as u64)),
+        (
+            "unfused",
+            JsonVal::obj(vec![
+                ("seconds", JsonVal::Num(best[0])),
+                ("gflops", JsonVal::Num(un_gflops)),
+                ("forks_per_iter", JsonVal::Num(per_iter[0])),
+            ]),
+        ),
+        (
+            "fused",
+            JsonVal::obj(vec![
+                ("seconds", JsonVal::Num(best[1])),
+                ("gflops", JsonVal::Num(fu_gflops)),
+                ("forks_per_iter", JsonVal::Num(per_iter[1])),
+            ]),
+        ),
+        (
+            "spmv_skewed",
+            JsonVal::obj(vec![
+                ("static_gflops", JsonVal::Num(spmv_gflops[0])),
+                ("nnz_balanced_gflops", JsonVal::Num(spmv_gflops[1])),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, json.render() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

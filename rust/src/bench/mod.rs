@@ -59,6 +59,47 @@ impl Table {
     }
 }
 
+/// A minimal JSON value for bench result files (`serde` is unavailable
+/// offline). Covers exactly what the perf-trajectory files need: numbers,
+/// strings, and nested objects with insertion-ordered keys.
+#[derive(Debug, Clone)]
+pub enum JsonVal {
+    Num(f64),
+    Int(u64),
+    Str(String),
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl JsonVal {
+    /// Build an object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, JsonVal)>) -> JsonVal {
+        JsonVal::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render as JSON text (numbers via Rust's shortest-roundtrip float
+    /// formatting; NaN/inf become null, as JSON has no encoding for them).
+    pub fn render(&self) -> String {
+        match self {
+            JsonVal::Num(x) => {
+                if x.is_finite() {
+                    format!("{x}")
+                } else {
+                    "null".to_string()
+                }
+            }
+            JsonVal::Int(i) => format!("{i}"),
+            JsonVal::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            JsonVal::Obj(kvs) => {
+                let inner: Vec<String> = kvs
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\": {}", k, v.render()))
+                    .collect();
+                format!("{{{}}}", inner.join(", "))
+            }
+        }
+    }
+}
+
 /// Format a paper-vs-measured pair with relative deviation.
 pub fn vs_paper(measured: f64, paper: f64, unit: &str) -> String {
     let dev = if paper != 0.0 {
@@ -97,5 +138,29 @@ mod tests {
         let s = vs_paper(43.0, 43.49, "GB/s");
         assert!(s.contains("paper 43.49"));
         assert!(s.contains("-1.1%"));
+    }
+
+    #[test]
+    fn json_renders_nested_objects() {
+        let j = JsonVal::obj(vec![
+            ("bench", JsonVal::Str("fused_cg".into())),
+            ("threads", JsonVal::Int(4)),
+            (
+                "fused",
+                JsonVal::obj(vec![
+                    ("gflops", JsonVal::Num(1.25)),
+                    ("forks_per_iter", JsonVal::Num(1.0)),
+                ]),
+            ),
+            ("nan_is_null", JsonVal::Num(f64::NAN)),
+            ("quoted", JsonVal::Str("a \"b\"".into())),
+        ]);
+        let s = j.render();
+        assert!(s.contains("\"bench\": \"fused_cg\""));
+        assert!(s.contains("\"threads\": 4"));
+        assert!(s.contains("\"fused\": {\"gflops\": 1.25"));
+        assert!(s.contains("\"nan_is_null\": null"));
+        assert!(s.contains("\\\"b\\\""));
+        assert!(s.starts_with('{') && s.ends_with('}'));
     }
 }

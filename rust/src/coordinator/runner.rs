@@ -10,7 +10,7 @@ use crate::comm::stats::CommStatsSnapshot;
 use crate::comm::world::World;
 use crate::coordinator::logging::EventLog;
 use crate::error::{Error, Result};
-use crate::ksp::{self, KspConfig, Operator, SolveStats};
+use crate::ksp::{self, KspConfig, SolveStats};
 use crate::matgen::cases::{generate_rows, TestCase};
 use crate::mat::mpiaij::MatMPIAIJ;
 use crate::pc;
@@ -202,11 +202,14 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
     Ok(report)
 }
 
-/// Dispatch a solver by options-database name.
+/// Dispatch a solver by options-database name. Takes the concrete
+/// [`MatMPIAIJ`] (callers pass the same value they did when this took
+/// `&mut dyn Operator`; the dyn coercion now happens per solver) so the
+/// fused variants can reach the raw CSR block and row partition.
 #[allow(clippy::too_many_arguments)]
 pub fn solve_by_name(
     name: &str,
-    a: &mut dyn Operator,
+    a: &mut MatMPIAIJ,
     pc: &dyn pc::Precond,
     b: &VecMPI,
     x: &mut VecMPI,
@@ -216,12 +219,19 @@ pub fn solve_by_name(
 ) -> Result<SolveStats> {
     match name {
         "cg" => ksp::cg::solve(a, pc, b, x, cfg, comm, log),
+        // Fused single-fork iterations where the layout allows; transparent
+        // fallback to the kernel-per-fork path otherwise.
+        "cg-fused" | "fused" => ksp::fused::solve(a, pc, b, x, cfg, comm, log),
         "gmres" => ksp::gmres::solve(a, pc, b, x, cfg, comm, log),
         "bicgstab" | "bcgs" => ksp::bicgstab::solve(a, pc, b, x, cfg, comm, log),
         "richardson" => ksp::richardson::solve(a, pc, b, x, 1.0, cfg, comm, log),
         "chebyshev" => {
             let (emin, emax) = ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?;
             ksp::chebyshev::solve(a, pc, b, x, emin, emax, cfg, comm, log)
+        }
+        "chebyshev-fused" => {
+            let (emin, emax) = ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?;
+            ksp::chebyshev::solve_fused(a, pc, b, x, emin, emax, cfg, comm, log)
         }
         other => Err(Error::InvalidOption(format!("unknown ksp_type `{other}`"))),
     }
@@ -275,8 +285,37 @@ mod tests {
     }
 
     #[test]
+    fn fused_cg_through_runner() {
+        // Single rank: the fused path engages; result must converge like cg.
+        let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, 1, 4);
+        cfg.ksp.rtol = 1e-8;
+        let unfused = run_case(&cfg).unwrap();
+        cfg.ksp_type = "cg-fused".into();
+        let fused = run_case(&cfg).unwrap();
+        assert!(unfused.converged && fused.converged);
+        assert_eq!(
+            fused.iterations, unfused.iterations,
+            "fused and unfused CG must agree iteration-for-iteration"
+        );
+        // Multi-rank: the same name transparently falls back.
+        let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, 2, 2);
+        cfg.ksp_type = "cg-fused".into();
+        cfg.ksp.rtol = 1e-8;
+        assert!(run_case(&cfg).unwrap().converged);
+    }
+
+    #[test]
     fn all_solvers_dispatch() {
-        for ksp_name in ["cg", "gmres", "bicgstab", "richardson", "chebyshev"] {
+        let names = [
+            "cg",
+            "cg-fused",
+            "gmres",
+            "bicgstab",
+            "richardson",
+            "chebyshev",
+            "chebyshev-fused",
+        ];
+        for ksp_name in names {
             let mut cfg = HybridConfig::default_for(TestCase::SaltGeostrophic, 0.0015, 2, 1);
             cfg.ksp_type = ksp_name.into();
             cfg.ksp.rtol = 1e-6;

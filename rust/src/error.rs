@@ -1,16 +1,16 @@
 //! Error handling for mmpetsc (the `PetscErrorCode` analogue).
-
-use thiserror::Error;
+//!
+//! `Display`/`Error` are hand-implemented: the offline build has no access
+//! to `thiserror` (see `util` for the same policy applied to `rand`/`clap`/
+//! `serde` substitutes).
 
 /// Library-wide error type.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Dimension / layout mismatch between objects.
-    #[error("incompatible sizes: {0}")]
     SizeMismatch(String),
 
     /// An index was out of the valid range.
-    #[error("index {index} out of range {range:?}: {context}")]
     IndexOutOfRange {
         index: usize,
         range: (usize, usize),
@@ -18,40 +18,70 @@ pub enum Error {
     },
 
     /// Object used before it was assembled / set up.
-    #[error("object not ready: {0}")]
     NotReady(String),
 
     /// A solver failed to converge (carries the reason and iteration count).
-    #[error("solver diverged: {reason} after {iterations} iterations")]
     Diverged { reason: String, iterations: usize },
 
     /// Numerical breakdown (zero pivot, indefinite operator for CG, ...).
-    #[error("numerical breakdown: {0}")]
     Breakdown(String),
 
     /// Configuration / options error.
-    #[error("invalid option: {0}")]
     InvalidOption(String),
 
     /// Unsupported operation for this object type.
-    #[error("unsupported: {0}")]
     Unsupported(String),
 
     /// Communication layer failure (rank died, channel closed, ...).
-    #[error("communication error: {0}")]
     Comm(String),
 
     /// I/O and file-format errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// File format violation (PETSc binary / MatrixMarket).
-    #[error("format error: {0}")]
     Format(String),
 
     /// PJRT / XLA runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::SizeMismatch(m) => write!(f, "incompatible sizes: {m}"),
+            Error::IndexOutOfRange {
+                index,
+                range,
+                context,
+            } => write!(f, "index {index} out of range {range:?}: {context}"),
+            Error::NotReady(m) => write!(f, "object not ready: {m}"),
+            Error::Diverged { reason, iterations } => {
+                write!(f, "solver diverged: {reason} after {iterations} iterations")
+            }
+            Error::Breakdown(m) => write!(f, "numerical breakdown: {m}"),
+            Error::InvalidOption(m) => write!(f, "invalid option: {m}"),
+            Error::Unsupported(m) => write!(f, "unsupported: {m}"),
+            Error::Comm(m) => write!(f, "communication error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library-wide result type.
@@ -95,5 +125,7 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
     }
 }

@@ -1,5 +1,14 @@
 //! Preconditioned Conjugate Gradient — the paper's workhorse solver
 //! (Figures 8, 9, 10: "CG solve … with a Jacobi preconditioner").
+//!
+//! This is the kernel-per-fork path: every Vec/Mat call below opens (and
+//! joins) its own pool region — ~9 forks per iteration at the default
+//! Jacobi setup. [`crate::ksp::fused`] runs the same iteration inside a
+//! single persistent region per iteration and falls back to this
+//! implementation whenever the operator/PC/communicator layout is not
+//! fusable; its reductions use the same fixed static chunks as the
+//! Vec-class reductions here, so both paths produce bitwise-identical
+//! residual histories.
 
 use crate::comm::endpoint::Comm;
 use crate::coordinator::logging::EventLog;
@@ -56,26 +65,20 @@ fn solve_inner(
     let mut it = 0usize;
     loop {
         if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
-            return Ok(SolveStats {
-                reason,
-                iterations: it,
-                b_norm: bnorm,
-                final_residual: rnorm,
-                history,
-            });
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
         }
         // w = A p; alpha = rz / (p, w)
         matmult(a, &p, &mut w, comm, log)?;
         let pw = dot(&p, &w, comm, log)?;
         if pw <= 0.0 {
             // not SPD (or breakdown)
-            return Ok(SolveStats {
-                reason: ConvergedReason::DivergedBreakdown,
-                iterations: it,
-                b_norm: bnorm,
-                final_residual: rnorm,
+            return Ok(SolveStats::new(
+                ConvergedReason::DivergedBreakdown,
+                it,
+                bnorm,
+                rnorm,
                 history,
-            });
+            ));
         }
         let alpha = rz / pw;
         log.timed("VecAXPY", 4.0 * x.local().len() as f64, || -> Result<()> {
@@ -98,8 +101,9 @@ fn solve_inner(
 }
 
 /// r = b − A x (skipping the multiply when x = 0 is knowable is not done —
-/// PETSc also applies the operator).
-fn a_apply_residual(
+/// PETSc also applies the operator). Shared with the fused path so both
+/// setups execute the identical fp sequence.
+pub(crate) fn a_apply_residual(
     a: &mut dyn Operator,
     b: &VecMPI,
     x: &VecMPI,

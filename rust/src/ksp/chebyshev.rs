@@ -17,6 +17,14 @@ use crate::ksp::{
 use crate::pc::Precond;
 use crate::vec::mpi::VecMPI;
 
+/// Fused-iteration variant: one persistent parallel region per Chebyshev
+/// iteration (two in-region barriers instead of ~6 fork-joins), with the
+/// same recurrence and bitwise-identical residual history; falls back to
+/// [`solve`] for non-fusable operator/PC/communicator combinations. The
+/// smoother role in GAMG makes Chebyshev the second adopter of the fused
+/// substrate after CG.
+pub use crate::ksp::fused::solve_chebyshev as solve_fused;
+
 /// Estimate `(emin, emax)` of `M⁻¹A` with `its` power iterations, then
 /// apply safety factors (0.03·emax, 1.5·emax). The wide lower margin keeps
 /// slow low-frequency modes inside the Chebyshev interval so the method

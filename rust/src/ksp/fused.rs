@@ -1,0 +1,654 @@
+//! Fused single-fork Krylov iterations.
+//!
+//! The paper's central performance lesson (§V–§VI) is that mixed-mode wins
+//! are eaten by per-kernel threading overhead: every Vec/Mat call on the CG
+//! hot path opens its own parallel region — SpMV, two dots, a norm, the
+//! Jacobi apply and the axpy/aypx updates are ~9 forks per iteration, each
+//! fork a channel send plus spin-join in [`crate::thread::pool`]. The
+//! follow-up work (Lange et al. 2013) shows that *fusing* the kernels into
+//! long-lived parallel regions is what makes the hybrid version win.
+//!
+//! This module runs the **entire preconditioned-CG iteration inside one
+//! [`Pool::run`] region**: SpMV over the matrix's (nnz-balanced) row
+//! partition, then dot → axpy/aypx → norm → element-wise PC apply → dot →
+//! aypx over fixed static chunks, sequenced by a sense-reversing
+//! [`RegionBarrier`] with cache-line-padded [`ReduceSlots`] for the
+//! reductions. Three in-region barriers replace eight joins.
+//!
+//! **Determinism contract**: reductions fold the per-thread partials in
+//! thread-id order over the *same* static chunks the Vec-class reductions
+//! use, and every element-wise kernel is the same `blas1` routine on the
+//! same chunk — so the fused and unfused paths execute identical fp
+//! operation sequences and produce **bitwise-identical residual histories**
+//! (asserted in tests). Fusion falls back transparently to the
+//! kernel-per-fork path for multi-rank communicators (where MPI reductions
+//! interleave the region), non-element-wise PCs, and mismatched thread
+//! contexts.
+//!
+//! [`Pool::run`]: crate::thread::pool::Pool::run
+//! [`RegionBarrier`]: crate::thread::pool::RegionBarrier
+//! [`ReduceSlots`]: crate::thread::pool::ReduceSlots
+
+use std::sync::Arc;
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::error::{Error, Result};
+use crate::ksp::{
+    check_convergence, dot, norm2, pcapply, ConvergedReason, KspConfig, SolveStats,
+};
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::pc::{FusedPc, Precond};
+use crate::thread::pool::{RegionBarrier, ReduceSlots};
+use crate::thread::schedule::static_chunk;
+use crate::vec::blas1;
+use crate::vec::mpi::VecMPI;
+
+/// Raw base pointer of a vector's storage, shared across region threads.
+/// All slicing goes through [`ref_slice`]/[`mut_slice`] under the phase
+/// discipline documented on each call site.
+struct Raw(*mut f64);
+unsafe impl Send for Raw {}
+unsafe impl Sync for Raw {}
+
+/// # Safety
+/// `[lo, lo+len)` must be in bounds of the allocation behind `raw`, and no
+/// thread may hold a `&mut` overlapping it for the lifetime of the returned
+/// slice (guaranteed by the barrier phase structure).
+#[inline]
+unsafe fn ref_slice<'a>(raw: &Raw, lo: usize, len: usize) -> &'a [f64] {
+    std::slice::from_raw_parts(raw.0.add(lo) as *const f64, len)
+}
+
+/// # Safety
+/// As [`ref_slice`], and additionally the range must be writable by exactly
+/// this thread in the current phase (disjoint chunks).
+#[inline]
+#[allow(clippy::mut_from_ref)]
+unsafe fn mut_slice<'a>(raw: &Raw, lo: usize, len: usize) -> &'a mut [f64] {
+    std::slice::from_raw_parts_mut(raw.0.add(lo), len)
+}
+
+/// Fold per-thread partials in thread-id order, skipping empty chunks —
+/// the exact accumulation order of [`crate::thread::pool::Pool::reduce`]
+/// with a `+` combiner, which is what makes fused reductions bitwise equal
+/// to the Vec-class ones.
+fn reduce_sum(slots: &ReduceSlots, n: usize, t: usize) -> f64 {
+    let mut acc = 0.0;
+    for tid in 0..t {
+        let (lo, hi) = static_chunk(n, t, tid);
+        if lo < hi {
+            acc += slots.get(tid);
+        }
+    }
+    acc
+}
+
+/// Can this (operator, PC, vectors, communicator) combination run fused?
+///
+/// Requirements: a single rank (no interleaved MPI reductions), an
+/// element-wise PC, a square local block with no off-diagonal part, one
+/// shared thread context so the matrix partition and the vector chunks
+/// describe the same pool, and the always-fork adaptive policy (a real
+/// size-adaptive cut-off changes the unfused reduction fold order for
+/// small vectors, which would break the bitwise-identity contract).
+pub fn can_fuse(a: &MatMPIAIJ, pc: &dyn Precond, b: &VecMPI, x: &VecMPI, comm: &Comm) -> bool {
+    if comm.size() != 1 {
+        return false;
+    }
+    if matches!(pc.fused(), FusedPc::Unfusable) {
+        return false;
+    }
+    let diag = a.diag_block();
+    if diag.rows() != diag.cols() || a.offdiag_block().nnz() != 0 {
+        return false;
+    }
+    let ctx = diag.ctx();
+    Arc::ptr_eq(ctx, b.local().ctx())
+        && Arc::ptr_eq(ctx, x.local().ctx())
+        && diag.partition().len() == ctx.nthreads()
+        && ctx.always_forks()
+}
+
+/// Preconditioned CG with fused single-fork iterations, falling back to
+/// [`crate::ksp::cg::solve`] whenever [`can_fuse`] says no.
+pub fn solve(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    if !can_fuse(a, pc, b, x, comm) {
+        return crate::ksp::cg::solve(a, pc, b, x, cfg, comm, log);
+    }
+    log.begin("KSPSolve");
+    let out = cg_fused_inner(a, pc, b, x, cfg, comm, log);
+    log.end("KSPSolve");
+    out
+}
+
+fn cg_fused_inner(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    // ---- setup: the identical call sequence (and fp order) to cg::solve ---
+    let bnorm = norm2(b, comm, log)?;
+    let mut history = Vec::new();
+    let mut r = b.duplicate();
+    crate::ksp::cg::a_apply_residual(a, b, x, &mut r, comm, log)?;
+    let mut z = r.duplicate();
+    pcapply(pc, &r, &mut z, log)?;
+    let mut p = z.duplicate();
+    p.copy_from(&z)?;
+    let mut w = r.duplicate();
+    let mut rz = dot(&r, &z, comm, log)?;
+    let mut rnorm = norm2(&r, comm, log)?;
+    if cfg.monitor {
+        history.push(rnorm);
+    }
+
+    // ---- fused iterations -------------------------------------------------
+    let diag = a.diag_block();
+    let ctx = diag.ctx().clone();
+    let pool = ctx.pool();
+    let t = pool.nthreads();
+    let n = x.local().len();
+    let part: Vec<(usize, usize)> = diag.partition().to_vec();
+    debug_assert_eq!(part.len(), t);
+    let inv_diag: Option<&[f64]> = match pc.fused() {
+        FusedPc::Jacobi(d) => Some(d),
+        FusedPc::Identity => None,
+        FusedPc::Unfusable => {
+            return Err(Error::Unsupported("fused CG: PC is not fusable".into()))
+        }
+    };
+    if let Some(d) = inv_diag {
+        if d.len() != n {
+            return Err(Error::size_mismatch("fused CG: inv_diag length"));
+        }
+    }
+
+    let x_raw = Raw(x.local_mut().as_mut_slice().as_mut_ptr());
+    let r_raw = Raw(r.local_mut().as_mut_slice().as_mut_ptr());
+    let z_raw = Raw(z.local_mut().as_mut_slice().as_mut_ptr());
+    let p_raw = Raw(p.local_mut().as_mut_slice().as_mut_ptr());
+    let w_raw = Raw(w.local_mut().as_mut_slice().as_mut_ptr());
+
+    let barrier = RegionBarrier::new(t);
+    let pw_slots = ReduceSlots::new(t);
+    let rr_slots = ReduceSlots::new(t);
+    let rz_slots = ReduceSlots::new(t);
+    let iter_flops = 2.0 * diag.nnz() as f64 + 12.0 * n as f64;
+
+    let mut it = 0usize;
+    loop {
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
+        }
+        let rz_now = rz;
+        // One pool fork for the whole iteration; everything below the run()
+        // is sequenced by the in-region barriers.
+        log.timed("KSPFusedIter", iter_flops, || {
+            pool.run(|tid| {
+                let mut ws = barrier.waiter();
+                // -- 1. SpMV: w[rlo..rhi) = (A p)[rlo..rhi) over the row
+                //    partition (nnz-balanced by default).
+                let (rlo, rhi) = part[tid];
+                if rlo < rhi {
+                    // SAFETY: row chunks are disjoint; p is read-only until
+                    // after the last barrier of this region.
+                    let wrows = unsafe { mut_slice(&w_raw, rlo, rhi - rlo) };
+                    let pall = unsafe { ref_slice(&p_raw, 0, n) };
+                    diag.spmv_rows(pall, wrows, rlo, rhi);
+                }
+                barrier.wait(&mut ws);
+                // -- 2. partial (p, w) over the fixed static chunk.
+                let (lo, hi) = static_chunk(n, t, tid);
+                if lo < hi {
+                    // SAFETY: w fully written (barrier above); reads only.
+                    let pc_ = unsafe { ref_slice(&p_raw, lo, hi - lo) };
+                    let wc = unsafe { ref_slice(&w_raw, lo, hi - lo) };
+                    pw_slots.set(tid, blas1::dot(pc_, wc));
+                }
+                barrier.wait(&mut ws);
+                let pw = reduce_sum(&pw_slots, n, t);
+                if pw <= 0.0 {
+                    // Breakdown: every thread computes the same pw and takes
+                    // this exit together; the master reports it after join.
+                    return;
+                }
+                let alpha = rz_now / pw;
+                if lo < hi {
+                    // SAFETY: static chunks are disjoint across threads; all
+                    // remaining phases touch only this thread's chunk.
+                    // -- 3. x += α p ; r -= α w.
+                    let xc = unsafe { mut_slice(&x_raw, lo, hi - lo) };
+                    let pc_ = unsafe { ref_slice(&p_raw, lo, hi - lo) };
+                    let wc = unsafe { ref_slice(&w_raw, lo, hi - lo) };
+                    blas1::axpy(alpha, pc_, xc);
+                    let rc = unsafe { mut_slice(&r_raw, lo, hi - lo) };
+                    blas1::axpy(-alpha, wc, rc);
+                    // -- 4. partial ‖r‖².
+                    rr_slots.set(tid, blas1::sqnorm(rc));
+                    // -- 5. z = M⁻¹ r (element-wise PC).
+                    let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                    match inv_diag {
+                        Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                        None => blas1::copy(rc, zc),
+                    }
+                    // -- 6. partial (r, z).
+                    rz_slots.set(tid, blas1::dot(rc, zc));
+                }
+                barrier.wait(&mut ws);
+                // -- 7. p = z + β p (needs every thread's rz partial).
+                let rz_new = reduce_sum(&rz_slots, n, t);
+                let beta = rz_new / rz_now;
+                if lo < hi {
+                    let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
+                    let pm = unsafe { mut_slice(&p_raw, lo, hi - lo) };
+                    blas1::aypx(beta, zc, pm);
+                }
+            });
+        });
+        let pw = reduce_sum(&pw_slots, n, t);
+        if pw <= 0.0 {
+            return Ok(SolveStats::new(
+                ConvergedReason::DivergedBreakdown,
+                it,
+                bnorm,
+                rnorm,
+                history,
+            ));
+        }
+        // Mirror VecMPI::norm(Two) on one rank exactly: local sqrt, square
+        // for the (no-op) allreduce, sqrt again.
+        let l2 = reduce_sum(&rr_slots, n, t).sqrt();
+        rnorm = (l2 * l2).sqrt();
+        it += 1;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+        rz = reduce_sum(&rz_slots, n, t);
+    }
+}
+
+/// Chebyshev iteration with fused single-fork iterations, falling back to
+/// [`crate::ksp::chebyshev::solve`] whenever [`can_fuse`] says no. Same
+/// determinism contract as the fused CG.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_chebyshev(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    emin: f64,
+    emax: f64,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    if !can_fuse(a, pc, b, x, comm) {
+        return crate::ksp::chebyshev::solve(a, pc, b, x, emin, emax, cfg, comm, log);
+    }
+    if !(emax > emin && emin > 0.0) {
+        return Err(Error::InvalidOption(format!(
+            "Chebyshev needs 0 < emin < emax, got [{emin}, {emax}]"
+        )));
+    }
+    log.begin("KSPSolve");
+    let out = cheby_fused_inner(a, pc, b, x, emin, emax, cfg, comm, log);
+    log.end("KSPSolve");
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn cheby_fused_inner(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    emin: f64,
+    emax: f64,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    // ---- setup mirrors chebyshev::solve_inner -----------------------------
+    let bnorm = norm2(b, comm, log)?;
+    let mut history = Vec::new();
+    let theta = 0.5 * (emax + emin);
+    let delta = 0.5 * (emax - emin);
+    let sigma = theta / delta;
+    let mut rho = 1.0 / sigma;
+
+    let mut r = b.duplicate();
+    let mut z = b.duplicate();
+    let mut p = b.duplicate();
+    crate::ksp::matmult(a, x, &mut r, comm, log)?;
+    r.aypx(-1.0, b)?;
+    let mut rnorm = norm2(&r, comm, log)?;
+    if cfg.monitor {
+        history.push(rnorm);
+    }
+
+    // ---- fused iterations -------------------------------------------------
+    let diag = a.diag_block();
+    let ctx = diag.ctx().clone();
+    let pool = ctx.pool();
+    let t = pool.nthreads();
+    let n = x.local().len();
+    let part: Vec<(usize, usize)> = diag.partition().to_vec();
+    let inv_diag: Option<&[f64]> = match pc.fused() {
+        FusedPc::Jacobi(d) => Some(d),
+        FusedPc::Identity => None,
+        FusedPc::Unfusable => {
+            return Err(Error::Unsupported("fused Chebyshev: PC is not fusable".into()))
+        }
+    };
+    if let Some(d) = inv_diag {
+        if d.len() != n {
+            return Err(Error::size_mismatch("fused Chebyshev: inv_diag length"));
+        }
+    }
+    let bs: &[f64] = b.local().as_slice();
+
+    let x_raw = Raw(x.local_mut().as_mut_slice().as_mut_ptr());
+    let r_raw = Raw(r.local_mut().as_mut_slice().as_mut_ptr());
+    let z_raw = Raw(z.local_mut().as_mut_slice().as_mut_ptr());
+    let p_raw = Raw(p.local_mut().as_mut_slice().as_mut_ptr());
+
+    let barrier = RegionBarrier::new(t);
+    let rr_slots = ReduceSlots::new(t);
+    let iter_flops = 2.0 * diag.nnz() as f64 + 10.0 * n as f64;
+    let inv_theta = 1.0 / theta;
+
+    let mut it = 0usize;
+    let mut first = true;
+    loop {
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
+        }
+        // Per-iteration scalars, computed on the master exactly as the
+        // unfused recurrence does, captured by value by this region.
+        let (pscale, zscale, rho_next) = if first {
+            (0.0, 0.0, rho)
+        } else {
+            let rho_new = 1.0 / (2.0 * sigma - rho);
+            (rho_new * rho, rho_new * 2.0 / delta, rho_new)
+        };
+        let is_first = first;
+        log.timed("KSPFusedIter", iter_flops, || {
+            pool.run(|tid| {
+                let mut ws = barrier.waiter();
+                let (lo, hi) = static_chunk(n, t, tid);
+                if lo < hi {
+                    // SAFETY: static chunks disjoint; r last written under
+                    // the same chunks (previous region end or setup).
+                    // -- 1. z = M⁻¹ r.
+                    let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                    let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                    match inv_diag {
+                        Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                        None => blas1::copy(rc, zc),
+                    }
+                    // -- 2. p recurrence.
+                    let pm = unsafe { mut_slice(&p_raw, lo, hi - lo) };
+                    if is_first {
+                        blas1::copy(zc, pm);
+                        blas1::scal(inv_theta, pm);
+                    } else {
+                        blas1::scal(pscale, pm);
+                        blas1::axpy(zscale, zc, pm);
+                    }
+                    // -- 3. x += p.
+                    let xc = unsafe { mut_slice(&x_raw, lo, hi - lo) };
+                    blas1::axpy(1.0, pm, xc);
+                }
+                barrier.wait(&mut ws);
+                // -- 4. r[rlo..rhi) = (A x)[rlo..rhi) over the row partition.
+                let (rlo, rhi) = part[tid];
+                if rlo < rhi {
+                    // SAFETY: x fully updated (barrier); row chunks disjoint.
+                    let rrows = unsafe { mut_slice(&r_raw, rlo, rhi - rlo) };
+                    let xall = unsafe { ref_slice(&x_raw, 0, n) };
+                    diag.spmv_rows(xall, rrows, rlo, rhi);
+                }
+                barrier.wait(&mut ws);
+                // -- 5. r = b − r ; partial ‖r‖² (static chunks again).
+                if lo < hi {
+                    let rc = unsafe { mut_slice(&r_raw, lo, hi - lo) };
+                    blas1::aypx(-1.0, &bs[lo..hi], rc);
+                    rr_slots.set(tid, blas1::sqnorm(rc));
+                }
+            });
+        });
+        let l2 = reduce_sum(&rr_slots, n, t).sqrt();
+        rnorm = (l2 * l2).sqrt();
+        it += 1;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+        if first {
+            first = false;
+        } else {
+            rho = rho_next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::ksp::testutil::{manufactured, max_err};
+    use crate::ksp::{cg, chebyshev};
+    use crate::pc::jacobi::PcJacobi;
+    use crate::pc::PcNone;
+    use crate::vec::ctx::ThreadCtx;
+
+    fn assert_bitwise_equal(a: &SolveStats, b: &SolveStats, what: &str) {
+        assert_eq!(a.reason, b.reason, "{what}: reason");
+        assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+        assert_eq!(a.history.len(), b.history.len(), "{what}: history length");
+        for (k, (u, f)) in a.history.iter().zip(&b.history).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                f.to_bits(),
+                "{what}: residual history diverges at iteration {k}: {u} vs {f}"
+            );
+        }
+        assert_eq!(
+            a.final_residual.to_bits(),
+            b.final_residual.to_bits(),
+            "{what}: final residual"
+        );
+    }
+
+    #[test]
+    fn fused_cg_matches_unfused_bitwise() {
+        World::run(1, |mut c| {
+            for threads in [1usize, 2, 4] {
+                let ctx = ThreadCtx::new(threads);
+                let (mut a, x_true, b) = manufactured(257, &mut c, ctx.clone());
+                let cfg = KspConfig {
+                    rtol: 1e-10,
+                    monitor: true,
+                    ..Default::default()
+                };
+                let log = EventLog::new();
+
+                // identity PC
+                let mut x1 = b.duplicate();
+                let s_un = cg::solve(&mut a, &PcNone, &b, &mut x1, &cfg, &mut c, &log).unwrap();
+                let mut x2 = b.duplicate();
+                let s_fu = solve(&mut a, &PcNone, &b, &mut x2, &cfg, &mut c, &log).unwrap();
+                assert!(s_fu.converged(), "threads={threads}: {:?}", s_fu.reason);
+                assert_bitwise_equal(&s_un, &s_fu, &format!("none/{threads}T"));
+                for (u, f) in x1.local().as_slice().iter().zip(x2.local().as_slice()) {
+                    assert_eq!(u.to_bits(), f.to_bits(), "solution differs");
+                }
+                assert!(max_err(&x2, &x_true, &mut c) < 1e-7);
+
+                // Jacobi PC
+                let pc = PcJacobi::setup(&a, &mut c).unwrap();
+                let mut x3 = b.duplicate();
+                let s_un = cg::solve(&mut a, &pc, &b, &mut x3, &cfg, &mut c, &log).unwrap();
+                let mut x4 = b.duplicate();
+                let s_fu = solve(&mut a, &pc, &b, &mut x4, &cfg, &mut c, &log).unwrap();
+                assert_bitwise_equal(&s_un, &s_fu, &format!("jacobi/{threads}T"));
+            }
+        });
+    }
+
+    #[test]
+    fn fused_cg_is_one_fork_per_iteration() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::new(4);
+            let (mut a, _xt, b) = manufactured(200, &mut c, ctx.clone());
+            // rtol/atol unreachable → the solver runs exactly max_it
+            // iterations; the fork-count difference between two runs then
+            // measures forks-per-iteration exactly, independent of setup.
+            let run = |fused: bool, max_it: usize, a: &mut MatMPIAIJ, c: &mut Comm| -> u64 {
+                let cfg = KspConfig {
+                    rtol: 1e-300,
+                    atol: 0.0,
+                    max_it,
+                    ..Default::default()
+                };
+                let log = EventLog::new();
+                let mut x = b.duplicate();
+                let before = ctx.pool().fork_count();
+                let stats = if fused {
+                    solve(a, &PcNone, &b, &mut x, &cfg, c, &log).unwrap()
+                } else {
+                    cg::solve(a, &PcNone, &b, &mut x, &cfg, c, &log).unwrap()
+                };
+                assert_eq!(stats.iterations, max_it, "must run to max_it");
+                ctx.pool().fork_count() - before
+            };
+            let f3 = run(true, 3, &mut a, &mut c);
+            let f8 = run(true, 8, &mut a, &mut c);
+            assert_eq!(f8 - f3, 5, "fused: exactly 1 fork per iteration");
+            let u3 = run(false, 3, &mut a, &mut c);
+            let u8 = run(false, 8, &mut a, &mut c);
+            assert!(
+                u8 - u3 >= 7 * 5,
+                "unfused: ≥7 forks per iteration, got {} for 5 its",
+                u8 - u3
+            );
+        });
+    }
+
+    #[test]
+    fn fused_cg_breakdown_matches_unfused() {
+        World::run(1, |mut c| {
+            use crate::vec::mpi::Layout;
+            let ctx = ThreadCtx::new(2);
+            let layout = Layout::split(2, 1);
+            // indefinite: eigenvalues +1, −1 — CG must detect p·Ap ≤ 0
+            let build = |c: &mut Comm, ctx: &std::sync::Arc<ThreadCtx>| {
+                MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout.clone(),
+                    vec![(0, 0, 1.0), (1, 1, -1.0)],
+                    c,
+                    ctx.clone(),
+                )
+                .unwrap()
+            };
+            let b = VecMPI::from_local_slice(layout.clone(), 0, &[1.0, 1.0], ctx.clone()).unwrap();
+            let log = EventLog::new();
+            let cfg = KspConfig::default();
+            let mut a1 = build(&mut c, &ctx);
+            let mut x1 = b.duplicate();
+            let s_un = cg::solve(&mut a1, &PcNone, &b, &mut x1, &cfg, &mut c, &log).unwrap();
+            let mut a2 = build(&mut c, &ctx);
+            let mut x2 = b.duplicate();
+            let s_fu = solve(&mut a2, &PcNone, &b, &mut x2, &cfg, &mut c, &log).unwrap();
+            assert_eq!(s_un.reason, ConvergedReason::DivergedBreakdown);
+            assert_eq!(s_fu.reason, ConvergedReason::DivergedBreakdown);
+            assert_eq!(s_un.iterations, s_fu.iterations);
+        });
+    }
+
+    #[test]
+    fn fused_falls_back_on_multiple_ranks() {
+        World::run(3, |mut c| {
+            let ctx = ThreadCtx::new(2);
+            let (mut a, x_true, b) = manufactured(120, &mut c, ctx.clone());
+            let mut x = b.duplicate();
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            assert!(!can_fuse(&a, &PcNone, &b, &x, &c));
+            let stats = solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged(), "{:?}", stats.reason);
+            assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn fused_falls_back_on_unfusable_pc() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::new(2);
+            let (mut a, x_true, b) = manufactured(90, &mut c, ctx.clone());
+            let pc = crate::pc::bjacobi::PcBJacobi::setup_ilu0(&a).unwrap();
+            assert!(matches!(
+                crate::pc::Precond::fused(&pc),
+                FusedPc::Unfusable
+            ));
+            let mut x = b.duplicate();
+            assert!(!can_fuse(&a, &pc, &b, &x, &c));
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            let stats = solve(&mut a, &pc, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged());
+            assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn fused_chebyshev_matches_unfused_bitwise() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::new(3);
+            let (mut a, x_true, b) = manufactured(150, &mut c, ctx.clone());
+            let pc = PcJacobi::setup(&a, &mut c).unwrap();
+            let log = EventLog::new();
+            let (emin, emax) =
+                chebyshev::estimate_bounds(&mut a, &pc, &b, 8, &mut c, &log).unwrap();
+            let cfg = KspConfig {
+                rtol: 1e-8,
+                max_it: 50_000,
+                monitor: true,
+                ..Default::default()
+            };
+            let mut x1 = b.duplicate();
+            let s_un =
+                chebyshev::solve(&mut a, &pc, &b, &mut x1, emin, emax, &cfg, &mut c, &log).unwrap();
+            let mut x2 = b.duplicate();
+            let s_fu =
+                solve_chebyshev(&mut a, &pc, &b, &mut x2, emin, emax, &cfg, &mut c, &log).unwrap();
+            assert!(s_fu.converged(), "{:?}", s_fu.reason);
+            assert_bitwise_equal(&s_un, &s_fu, "chebyshev");
+            assert!(max_err(&x2, &x_true, &mut c) < 1e-5);
+            // invalid bounds still rejected on the fused path
+            let mut x3 = b.duplicate();
+            assert!(
+                solve_chebyshev(&mut a, &pc, &b, &mut x3, 2.0, 1.0, &cfg, &mut c, &log).is_err()
+            );
+        });
+    }
+}

@@ -17,6 +17,7 @@ pub mod gmres;
 pub mod bicgstab;
 pub mod richardson;
 pub mod chebyshev;
+pub mod fused;
 
 use crate::comm::endpoint::Comm;
 use crate::coordinator::logging::EventLog;
@@ -111,6 +112,23 @@ pub struct SolveStats {
 }
 
 impl SolveStats {
+    /// Assemble a result record — shared by every solver's exit paths.
+    pub fn new(
+        reason: ConvergedReason,
+        iterations: usize,
+        b_norm: f64,
+        final_residual: f64,
+        history: Vec<f64>,
+    ) -> SolveStats {
+        SolveStats {
+            reason,
+            iterations,
+            b_norm,
+            final_residual,
+            history,
+        }
+    }
+
     pub fn converged(&self) -> bool {
         self.reason.converged()
     }

@@ -15,7 +15,9 @@
 //!   cores; affinity policies (the `aprun -cc` analogue).
 //! - [`numa`] — first-touch page placement and the NUMA bandwidth model.
 //! - [`thread`] — the "OpenMP" substrate: a fork-join pool with
-//!   `schedule(static)` semantics, pinning, and fork-join overhead models.
+//!   `schedule(static)` semantics, pinning, fork-join overhead models, and
+//!   the in-region barrier/reduction primitives behind [`ksp::fused`]'s
+//!   single-fork Krylov iterations.
 //! - [`comm`] — the "MPI" substrate: simulated ranks, point-to-point and
 //!   collective operations, and an α–β message cost model.
 //! - [`vec`], [`mat`] — the threaded PETSc Vec/Mat classes (Seq + MPI),
@@ -27,8 +29,10 @@
 //! - [`sim`] — the performance/energy model used for paper-scale figures.
 //! - [`coordinator`] — the mixed-mode runner, options database and
 //!   PETSc-style event logging.
-//! - [`runtime`] — PJRT client: loads the AOT-compiled JAX/Pallas SpMV
-//!   (HLO text in `artifacts/`) and executes it from the solve path.
+//! - `runtime` (feature `pjrt`) — PJRT client: loads the AOT-compiled
+//!   JAX/Pallas SpMV (HLO text in `artifacts/`) and executes it from the
+//!   solve path. Gated because its `xla` dependency is not vendored in the
+//!   offline build image.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -49,6 +53,7 @@ pub mod ksp;
 pub mod pc;
 pub mod sim;
 pub mod coordinator;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod bench;
 

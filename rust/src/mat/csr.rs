@@ -77,6 +77,22 @@ impl MatBuilder {
 }
 
 /// Sequential CSR matrix.
+///
+/// Two thread schedules are computed once at assembly and cached: the plain
+/// static row schedule (the paper's §VI.A contract) and an **nnz-balanced**
+/// row partition ([`crate::thread::schedule::nnz_balanced_chunks`]). The
+/// nnz-balanced one is the **default** active schedule — on FEM matrices
+/// with uneven row densities it removes the tail-thread imbalance the
+/// static schedule suffers in SpMV — and first-touch paging always follows
+/// the *active* partition, so switching schedules re-pages the matrix data.
+///
+/// Note on vector locality: SpMV *destination* vectors created with
+/// [`crate::vec::seq::VecSeq::new`] are still paged by the static schedule;
+/// where the row partitions diverge strongly from static (heavily skewed
+/// densities), page the destination with
+/// [`crate::vec::seq::VecSeq::new_partitioned`] using [`Self::partition`]
+/// to keep the §VI.A write-locality contract exact. For the near-uniform
+/// Table-6 stencil rows the two schedules coincide to within a row.
 pub struct MatSeqAIJ {
     rows: usize,
     cols: usize,
@@ -86,9 +102,12 @@ pub struct MatSeqAIJ {
     /// Page placement of `vals` (the dominant array), by row chunk.
     pages: PageMap,
     ctx: Arc<ThreadCtx>,
-    /// Row partition for threads: either the static row schedule (paper) or
-    /// an nnz-balanced partition (ablation).
+    /// The *active* row partition threaded kernels run over.
     partition: Vec<(usize, usize)>,
+    /// Cached static row schedule (chunk sizes differ by ≤ 1 row).
+    static_partition: Vec<(usize, usize)>,
+    /// Cached nnz-balanced partition (chunk nonzero counts near-equal).
+    nnz_partition: Vec<(usize, usize)>,
 }
 
 struct RawMut(*mut f64);
@@ -140,10 +159,17 @@ impl MatSeqAIJ {
             pages: PageMap::new(0, 8),
             ctx,
             partition: Vec::new(),
+            static_partition: Vec::new(),
+            nnz_partition: Vec::new(),
         };
-        m.partition = (0..m.ctx.nthreads())
+        m.static_partition = (0..m.ctx.nthreads())
             .map(|t| m.ctx.chunk(rows, t))
             .collect();
+        m.nnz_partition =
+            crate::thread::schedule::nnz_balanced_chunks(&m.row_ptr, m.ctx.nthreads());
+        // nnz-balanced is the default thread schedule (see struct docs);
+        // first-touch paging below follows it.
+        m.partition = m.nnz_partition.clone();
         m.page_by_rows();
         Ok(m)
     }
@@ -180,28 +206,29 @@ impl MatSeqAIJ {
         self.pages = pages;
     }
 
-    /// Switch to an nnz-balanced thread partition (ablation vs the paper's
-    /// plain row-static schedule; helps strongly imbalanced rows).
+    /// Switch the active schedule to the cached nnz-balanced partition (the
+    /// default) and re-run first-touch paging to match.
     pub fn balance_partition_by_nnz(&mut self) {
-        let t = self.ctx.nthreads();
-        let nnz = self.col_idx.len();
-        let target = nnz.div_ceil(t).max(1);
-        let mut part = Vec::with_capacity(t);
-        let mut row = 0;
-        for _ in 0..t {
-            let lo = row;
-            let start_nnz = self.row_ptr[lo];
-            while row < self.rows && self.row_ptr[row + 1] - start_nnz < target {
-                row += 1;
-            }
-            if row < self.rows && lo == row {
-                row += 1; // at least one row per non-empty chunk
-            }
-            part.push((lo, row));
-        }
-        part.last_mut().unwrap().1 = self.rows;
-        self.partition = part;
+        self.partition = self.nnz_partition.clone();
         self.page_by_rows();
+    }
+
+    /// Switch the active schedule to the cached plain static row schedule
+    /// (the paper's original contract) and re-page to match. Used by the
+    /// schedule ablation in `benches/bench_fused.rs`.
+    pub fn use_static_partition(&mut self) {
+        self.partition = self.static_partition.clone();
+        self.page_by_rows();
+    }
+
+    /// The cached static row schedule.
+    pub fn static_partition(&self) -> &[(usize, usize)] {
+        &self.static_partition
+    }
+
+    /// The cached nnz-balanced row partition.
+    pub fn nnz_partition(&self) -> &[(usize, usize)] {
+        &self.nnz_partition
     }
 
     pub fn rows(&self) -> usize {
@@ -255,16 +282,26 @@ impl MatSeqAIJ {
         }
     }
 
-    /// Serial SpMV over a row range into `y[rlo..rhi]` — the per-thread
+    /// Serial SpMV over a row range into `y[0..rhi-rlo]` — the per-thread
     /// kernel (the library's hottest loop; see EXPERIMENTS.md §Perf).
+    /// Public so the fused-iteration layer ([`crate::ksp::fused`]) can run
+    /// it on this matrix's row partition inside its own parallel region.
     ///
     /// Bounds checks are hoisted: the CSR invariants (`row_ptr` monotone,
     /// ends at `nnz`, `col_idx[k] < cols`) are validated once at
-    /// construction in [`MatSeqAIJ::from_csr`], so the unchecked accesses
-    /// below are safe for any matrix that exists.
+    /// construction in [`MatSeqAIJ::from_csr`], and the per-call argument
+    /// preconditions are real asserts (once per call, not per nonzero) so
+    /// the unchecked accesses below stay safe from safe callers.
     #[inline]
-    fn spmv_rows(&self, x: &[f64], y: &mut [f64], rlo: usize, rhi: usize) {
-        debug_assert!(x.len() >= self.cols && rhi <= self.rows);
+    pub fn spmv_rows(&self, x: &[f64], y: &mut [f64], rlo: usize, rhi: usize) {
+        assert!(
+            x.len() >= self.cols && rlo <= rhi && rhi <= self.rows && y.len() == rhi - rlo,
+            "spmv_rows: x.len() {} (cols {}), rows {rlo}..{rhi} of {}, y.len() {}",
+            x.len(),
+            self.cols,
+            self.rows,
+            y.len()
+        );
         let vals = self.vals.as_ptr();
         let cols = self.col_idx.as_ptr();
         for i in rlo..rhi {
@@ -331,6 +368,14 @@ impl MatSeqAIJ {
     pub fn mult_add_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
         if x.len() != self.cols || y.len() != self.rows {
             return Err(Error::size_mismatch("MatMultAdd shapes"));
+        }
+        if self.col_idx.is_empty() {
+            // y += 0: skip the sweep entirely. Matters because the
+            // nnz-balanced partition of an all-empty matrix (every
+            // single-rank off-diagonal block) is one full-range chunk, which
+            // would otherwise serialize a whole-vector read-modify-write of
+            // zeros onto thread 0 on every MatMult.
+            return Ok(());
         }
         let part = &self.partition;
         let raw = RawMut(y.as_mut_ptr());
@@ -591,7 +636,13 @@ mod tests {
         b.assemble(c)
     }
 
-    fn random_csr(rows: usize, cols: usize, per_row: usize, seed: u64, c: Arc<ThreadCtx>) -> MatSeqAIJ {
+    fn random_csr(
+        rows: usize,
+        cols: usize,
+        per_row: usize,
+        seed: u64,
+        c: Arc<ThreadCtx>,
+    ) -> MatSeqAIJ {
         let mut r = XorShift64::new(seed);
         let mut b = MatBuilder::new(rows, cols);
         for i in 0..rows {
@@ -743,6 +794,89 @@ mod tests {
         let perm = vec![0, 4, 1, 5, 2, 6, 3, 7];
         let p = m.permute_symmetric(&perm).unwrap();
         assert!(p.bandwidth() > 1);
+    }
+
+    #[test]
+    fn assemble_coalescing_matches_hashmap_reference() {
+        // Property: MatBuilder::assemble's adjacent-duplicate coalescing
+        // (the subtle `is_dup` branch) agrees with a naive HashMap sum for
+        // arbitrary triplet streams — duplicates, empty rows, repeated
+        // columns straddling row boundaries, all of it.
+        use crate::ptest::{check, forall, PtConfig};
+        use std::collections::HashMap;
+        forall(
+            &PtConfig { cases: 40, ..Default::default() },
+            |rng: &mut XorShift64| {
+                let rows = rng.range(1, 12);
+                let cols = rng.range(1, 12);
+                let k = rng.below(60);
+                let es: Vec<(usize, usize, f64)> = (0..k)
+                    .map(|_| (rng.below(rows), rng.below(cols), rng.range_f64(-2.0, 2.0)))
+                    .collect();
+                (rows, cols, es)
+            },
+            |(rows, cols, es)| {
+                let mut b = MatBuilder::new(*rows, *cols);
+                let mut reference: HashMap<(usize, usize), f64> = HashMap::new();
+                for &(i, j, v) in es {
+                    b.add(i, j, v).map_err(|e| e.to_string())?;
+                    *reference.entry((i, j)).or_insert(0.0) += v;
+                }
+                let m = b.assemble(ThreadCtx::serial());
+                check(
+                    m.nnz() == reference.len(),
+                    format!("nnz {} vs {} distinct keys", m.nnz(), reference.len()),
+                )?;
+                for (&(i, j), &want) in &reference {
+                    let got = m.get(i, j);
+                    // same additions, possibly different order: tiny fp slack
+                    check(
+                        (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                        format!("({i},{j}): {got} vs {want}"),
+                    )?;
+                }
+                // structure invariants the kernels rely on
+                check(m.row_ptr()[0] == 0, "row_ptr[0]")?;
+                check(
+                    *m.row_ptr().last().unwrap() == m.nnz(),
+                    "row_ptr end",
+                )?;
+                for i in 0..*rows {
+                    let (cs, _) = m.row(i);
+                    check(cs.windows(2).all(|w| w[0] < w[1]), "sorted, deduped row")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn default_partition_is_nnz_balanced_and_cached() {
+        // One dense row among diagonal rows: the default active schedule
+        // must isolate it (nnz-balanced), while the cached static schedule
+        // still splits rows evenly.
+        let mut b = MatBuilder::new(80, 80);
+        for j in 0..80 {
+            b.add(0, j, 1.0).unwrap();
+        }
+        for i in 1..80 {
+            b.add(i, i, 2.0).unwrap();
+        }
+        let mut m = b.assemble(ctx()); // 4 threads
+        assert_eq!(m.partition(), m.nnz_partition());
+        assert_eq!(m.partition()[0], (0, 1), "dense row isolated by default");
+        assert_eq!(m.static_partition()[0], (0, 20));
+        // switching schedules changes the active partition and keeps results
+        let xs: Vec<f64> = (0..80).map(|i| (i as f64 * 0.11).cos()).collect();
+        let mut y_nnz = vec![0.0; 80];
+        m.mult_slices(&xs, &mut y_nnz).unwrap();
+        m.use_static_partition();
+        assert_eq!(m.partition(), m.static_partition());
+        let mut y_static = vec![0.0; 80];
+        m.mult_slices(&xs, &mut y_static).unwrap();
+        assert_eq!(y_nnz, y_static, "schedule must not change the math");
+        m.balance_partition_by_nnz();
+        assert_eq!(m.partition(), m.nnz_partition());
     }
 
     #[test]

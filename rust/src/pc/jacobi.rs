@@ -8,7 +8,7 @@
 use crate::comm::endpoint::Comm;
 use crate::error::{Error, Result};
 use crate::mat::mpiaij::MatMPIAIJ;
-use crate::pc::Precond;
+use crate::pc::{FusedPc, Precond};
 use crate::vec::mpi::VecMPI;
 
 /// Jacobi preconditioner: `z_i = r_i / a_ii`.
@@ -46,6 +46,13 @@ impl Precond for PcJacobi {
 
     fn flops(&self) -> f64 {
         self.inv_diag.local().len() as f64
+    }
+
+    /// Jacobi is a pure element-wise multiply, so the fused layer inlines it
+    /// as one `pw_mult` on each thread's chunk — the same kernel `apply`
+    /// routes through `VecSeq::pointwise_mult`.
+    fn fused(&self) -> FusedPc<'_> {
+        FusedPc::Jacobi(self.inv_diag.local().as_slice())
     }
 }
 

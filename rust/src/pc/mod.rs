@@ -22,6 +22,21 @@ use crate::error::Result;
 use crate::mat::mpiaij::MatMPIAIJ;
 use crate::vec::mpi::VecMPI;
 
+/// How the fused-iteration layer ([`crate::ksp::fused`]) can inline a
+/// preconditioner application inside its single parallel region. Only
+/// element-wise PCs are fusable — anything with cross-row data dependencies
+/// (ILU/SOR sweeps, multigrid cycles) reports [`FusedPc::Unfusable`] and the
+/// solver falls back to the kernel-per-fork path.
+pub enum FusedPc<'a> {
+    /// `z = r` (PCNone).
+    Identity,
+    /// `z_i = r_i · inv_diag[i]` (Jacobi), with the rank-local inverse
+    /// diagonal.
+    Jacobi(&'a [f64]),
+    /// Cannot be applied inside a fused region.
+    Unfusable,
+}
+
 /// A preconditioner: `z = M⁻¹ r`. Application is communication-free
 /// (block-diagonal across ranks), as for all PCs in this family.
 pub trait Precond {
@@ -31,6 +46,10 @@ pub trait Precond {
     fn apply(&self, r: &VecMPI, z: &mut VecMPI) -> Result<()>;
     /// Flops per application on this rank.
     fn flops(&self) -> f64;
+    /// The fused-region description of this PC (default: not fusable).
+    fn fused(&self) -> FusedPc<'_> {
+        FusedPc::Unfusable
+    }
 }
 
 /// Build a preconditioner by options-database name.
@@ -69,6 +88,10 @@ impl Precond for PcNone {
 
     fn flops(&self) -> f64 {
         0.0
+    }
+
+    fn fused(&self) -> FusedPc<'_> {
+        FusedPc::Identity
     }
 }
 

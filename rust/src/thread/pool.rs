@@ -1,4 +1,6 @@
-//! The persistent fork-join thread pool (the OpenMP runtime analogue).
+//! The persistent fork-join thread pool (the OpenMP runtime analogue) and
+//! the in-region synchronisation primitives the fused-iteration layer
+//! ([`crate::ksp::fused`]) builds on.
 //!
 //! One pool per simulated MPI rank. Workers are created once (OpenMP's
 //! thread-pool behaviour — the paper's §V.C interoperability argument is
@@ -7,12 +9,38 @@
 //!
 //! The master thread participates as thread 0, workers are threads
 //! `1..nthreads`, matching OpenMP semantics.
+//!
+//! Two execution styles are supported:
+//!
+//! - **Fork-join** ([`Pool::run`] / [`Pool::for_range`] / [`Pool::reduce`]):
+//!   one parallel region per kernel. Every region pays one channel send per
+//!   worker plus a spin-join — the per-kernel overhead the paper's Table 4
+//!   quantifies.
+//! - **Fused regions**: one [`Pool::run`] sequences *many* kernels with
+//!   [`RegionBarrier`] waits and [`ReduceSlots`] reductions inside the
+//!   region, paying the fork cost once. [`Pool::fork_count`] counts regions
+//!   so benches/tests can assert the fork savings.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
 use crate::topology::machine::{CoreId, MachineTopology, UmaRegionId};
+
+/// How many spin-loop iterations a waiter burns before falling back to
+/// `yield_now`. Shared by the fork-join loop in [`Pool::run`] and the
+/// in-region [`RegionBarrier`], so both waiting strategies stay in step.
+pub const SPIN_YIELD_THRESHOLD: u32 = 10_000;
+
+/// How long a [`RegionBarrier`] waiter yields before declaring the region
+/// dead (a peer thread panicked and will never arrive) and panicking
+/// itself. This bounds a whole region *phase* — an early arrival waits for
+/// the slowest thread's entire phase, not just scheduling skew — so it is
+/// sized far above any realistic fused-kernel phase (minutes of SpMV on one
+/// thread would mean the solve is mis-sized anyway). Converts an in-region
+/// panic from a silent deadlock into a panic cascade that the pool's
+/// worker catch/poison machinery then reports.
+pub const BARRIER_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(300);
 
 /// A parallel job handed to workers: a borrowed closure made 'static for
 /// the duration of the fork (the join barrier guarantees the borrow ends
@@ -36,6 +64,13 @@ pub struct Pool {
     nthreads: usize,
     /// Completion countdown for the active fork.
     remaining: Arc<AtomicUsize>,
+    /// Set when a worker's job panicked; the master re-raises after join so
+    /// a panicking region fails the caller instead of silently corrupting
+    /// results (workers stay alive and reusable).
+    poisoned: Arc<AtomicBool>,
+    /// Number of parallel regions launched (the fork counter benches and
+    /// the fused-vs-unfused tests assert against).
+    forks: AtomicU64,
     /// Core each thread is pinned to (empty when unpinned).
     cores: Vec<CoreId>,
     /// UMA region of each thread under the *modelled* topology (all zero
@@ -69,10 +104,12 @@ impl Pool {
     fn build(nthreads: usize, cores: Option<Vec<CoreId>>) -> Pool {
         assert!(nthreads >= 1, "pool needs at least one thread");
         let remaining = Arc::new(AtomicUsize::new(0));
+        let poisoned = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::with_capacity(nthreads.saturating_sub(1));
         for tid in 1..nthreads {
             let (tx, rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(1);
             let remaining = Arc::clone(&remaining);
+            let poisoned = Arc::clone(&poisoned);
             let pin = cores.as_ref().map(|c| c[tid]);
             let handle = std::thread::Builder::new()
                 .name(format!("mmpetsc-omp-{tid}"))
@@ -81,7 +118,15 @@ impl Pool {
                         pin_current_thread(core);
                     }
                     while let Ok(job) = rx.recv() {
-                        (job.f)(tid);
+                        // A panicking job must still decrement `remaining`,
+                        // or the master's join would spin forever and Drop
+                        // would leak the thread.
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || (job.f)(tid),
+                        ));
+                        if out.is_err() {
+                            poisoned.store(true, Ordering::Release);
+                        }
                         remaining.fetch_sub(1, Ordering::Release);
                     }
                 })
@@ -98,6 +143,8 @@ impl Pool {
             workers,
             nthreads,
             remaining,
+            poisoned,
+            forks: AtomicU64::new(0),
             cores: cores.unwrap_or_default(),
             umas: vec![0; nthreads],
         }
@@ -106,6 +153,14 @@ impl Pool {
     /// Number of threads (including the master).
     pub fn nthreads(&self) -> usize {
         self.nthreads
+    }
+
+    /// Number of parallel regions launched so far (including degenerate
+    /// single-thread regions). The fused CG acceptance criterion — one fork
+    /// per iteration vs ≥ 7 on the kernel-per-fork path — is asserted
+    /// against this counter.
+    pub fn fork_count(&self) -> u64 {
+        self.forks.load(Ordering::Relaxed)
     }
 
     /// The modelled UMA region of thread `tid`.
@@ -121,33 +176,57 @@ impl Pool {
     /// Fork-join: run `f(tid)` on every thread (master runs tid 0).
     /// The parallel-region primitive all higher-level loops build on.
     pub fn run<F: Fn(usize) + Sync>(&self, f: F) {
+        self.forks.fetch_add(1, Ordering::Relaxed);
+        // Discard any stale poison from a region whose master panicked
+        // before observing it (that panic already reached the caller).
+        self.poisoned.store(false, Ordering::Release);
         if self.nthreads == 1 {
             f(0);
             return;
         }
         let r: &(dyn Fn(usize) + Sync) = &f;
-        // SAFETY: we erase the lifetime, but join below ensures every worker
-        // is done with the reference before `f` is dropped.
+        // SAFETY: we erase the lifetime, but the join guard below ensures
+        // every worker is done with the reference before `f` is dropped —
+        // on the normal path *and* on every panic path (master panic,
+        // mid-dispatch send failure).
         let job = Job {
             f: unsafe {
                 std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(r)
             },
         };
-        self.remaining
-            .store(self.workers.len(), Ordering::Release);
+        // Join-on-drop guard over the count of *dispatched* jobs. Installed
+        // before the first send so that a panic anywhere after dispatch
+        // waits for the workers that did receive the borrowed closure.
+        struct Join<'a>(&'a AtomicUsize);
+        impl Drop for Join<'_> {
+            fn drop(&mut self) {
+                let mut spins = 0u32;
+                while self.0.load(Ordering::Acquire) != 0 {
+                    spins += 1;
+                    if spins < SPIN_YIELD_THRESHOLD {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(self.remaining.load(Ordering::Acquire), 0);
+        let join = Join(&self.remaining);
         for w in &self.workers {
-            w.sender.send(job).expect("pool worker died");
+            // Count before sending: a worker can only ever decrement a
+            // dispatch that was already counted, so the counter never goes
+            // negative and the guard waits for exactly the jobs sent.
+            self.remaining.fetch_add(1, Ordering::AcqRel);
+            if w.sender.send(job).is_err() {
+                self.remaining.fetch_sub(1, Ordering::AcqRel);
+                panic!("mmpetsc pool: a worker thread died (channel closed)");
+            }
         }
         f(0);
-        // Join barrier: spin briefly, then yield.
-        let mut spins = 0u32;
-        while self.remaining.load(Ordering::Acquire) != 0 {
-            spins += 1;
-            if spins < 10_000 {
-                std::hint::spin_loop();
-            } else {
-                std::thread::yield_now();
-            }
+        drop(join); // the normal-path join barrier
+        if self.poisoned.swap(false, Ordering::AcqRel) {
+            panic!("mmpetsc pool: a worker panicked inside a parallel region");
         }
     }
 
@@ -196,7 +275,8 @@ impl Pool {
 impl Drop for Pool {
     fn drop(&mut self) {
         // Dropping each sender closes its channel; the worker's recv() errors
-        // and the thread exits, then we join it.
+        // and the thread exits, then we join it. Workers always decrement
+        // `remaining` (even on job panic), so this cannot hang.
         let workers = std::mem::take(&mut self.workers);
         for mut w in workers {
             drop(w.sender);
@@ -207,23 +287,193 @@ impl Drop for Pool {
     }
 }
 
-/// Pin the calling thread to a host CPU (wrapping modulo available CPUs).
-pub fn pin_current_thread(core: CoreId) {
-    #[cfg(target_os = "linux")]
-    unsafe {
-        let ncpu = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
-        if ncpu <= 0 {
-            return;
+// ---------------------------------------------------------------------------
+// In-region synchronisation: the fused-iteration substrate
+// ---------------------------------------------------------------------------
+
+/// A sense-reversing centralized barrier for use *inside* one [`Pool::run`]
+/// region. All `nthreads` threads of the region must call [`wait`] the same
+/// number of times; any number of waits per region is fine.
+///
+/// Safety argument (see DESIGN.md §Fused regions): the arrival counter is an
+/// `AcqRel` read-modify-write, so the release sequence on `count` makes every
+/// pre-barrier write of every thread visible to the last arrival; the last
+/// arrival's `Release` store of the sense flag, `Acquire`-loaded by the
+/// spinners, then publishes all of them to every thread. Local senses live in
+/// [`BarrierWaiter`]s created at region entry, so the barrier itself carries
+/// no per-region state to reset between regions.
+///
+/// [`wait`]: RegionBarrier::wait
+pub struct RegionBarrier {
+    nthreads: usize,
+    count: AtomicUsize,
+    sense: AtomicBool,
+}
+
+/// Per-thread barrier state. Create one per thread at region entry with
+/// [`RegionBarrier::waiter`]; creating it mid-region (after another thread
+/// already waited) is a usage error.
+pub struct BarrierWaiter {
+    sense: bool,
+}
+
+impl RegionBarrier {
+    pub fn new(nthreads: usize) -> RegionBarrier {
+        assert!(nthreads >= 1);
+        RegionBarrier {
+            nthreads,
+            count: AtomicUsize::new(0),
+            sense: AtomicBool::new(false),
         }
-        let target = core % ncpu as usize;
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(target, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
     }
-    #[cfg(not(target_os = "linux"))]
-    {
-        let _ = core;
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
     }
+
+    /// A fresh per-thread waiter. Correct at any quiescent point (region
+    /// entry): the global sense is stable until all `nthreads` threads have
+    /// both created their waiter *and* reached the first wait, because the
+    /// sense only flips on the last arrival.
+    pub fn waiter(&self) -> BarrierWaiter {
+        BarrierWaiter {
+            sense: !self.sense.load(Ordering::Acquire),
+        }
+    }
+
+    /// Block until all `nthreads` threads of the region have arrived.
+    pub fn wait(&self, w: &mut BarrierWaiter) {
+        let my = w.sense;
+        w.sense = !my;
+        if self.count.fetch_add(1, Ordering::AcqRel) == self.nthreads - 1 {
+            // Last arrival: reset the counter for the next round *before*
+            // releasing the spinners (a released thread may immediately
+            // re-enter the next wait).
+            self.count.store(0, Ordering::Relaxed);
+            self.sense.store(my, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            let mut yielding_since: Option<std::time::Instant> = None;
+            while self.sense.load(Ordering::Acquire) != my {
+                spins += 1;
+                if spins < SPIN_YIELD_THRESHOLD {
+                    std::hint::spin_loop();
+                } else {
+                    // A peer that panicked will never arrive; after a
+                    // generous skew allowance, panic instead of deadlocking
+                    // so the pool's poison machinery reports the region.
+                    let t0 = *yielding_since.get_or_insert_with(std::time::Instant::now);
+                    if t0.elapsed() > BARRIER_TIMEOUT {
+                        panic!(
+                            "RegionBarrier::wait: no arrival in {BARRIER_TIMEOUT:?} — \
+                             a region thread likely panicked"
+                        );
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// One cache-line-padded `f64` slot per thread, for in-region reductions.
+/// Padding (128 B covers adjacent-line prefetching on x86) keeps each
+/// thread's store from false-sharing its neighbours' lines — the slots are
+/// written once per reduction by their owner and read by everyone after a
+/// barrier.
+#[repr(align(128))]
+struct PaddedSlot(AtomicU64);
+
+pub struct ReduceSlots {
+    slots: Vec<PaddedSlot>,
+}
+
+impl ReduceSlots {
+    pub fn new(nthreads: usize) -> ReduceSlots {
+        ReduceSlots {
+            slots: (0..nthreads.max(1))
+                .map(|_| PaddedSlot(AtomicU64::new(0)))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Store thread `tid`'s partial. `Release` so a following barrier wait
+    /// publishes it.
+    #[inline]
+    pub fn set(&self, tid: usize, v: f64) {
+        self.slots[tid].0.store(v.to_bits(), Ordering::Release);
+    }
+
+    /// Read thread `tid`'s partial (call only after a barrier that ordered
+    /// the corresponding `set`).
+    #[inline]
+    pub fn get(&self, tid: usize) -> f64 {
+        f64::from_bits(self.slots[tid].0.load(Ordering::Acquire))
+    }
+}
+
+/// The number of online host CPUs. Read from sysfs, NOT from
+/// `available_parallelism`: the latter shrinks with the calling thread's
+/// own affinity mask, which [`pin_current_thread`] itself mutates — basing
+/// the wrap modulus on it would collapse every pool pinned from an
+/// already-pinned thread onto core 0.
+#[cfg(target_os = "linux")]
+fn online_cpus() -> usize {
+    if let Ok(s) = std::fs::read_to_string("/sys/devices/system/cpu/online") {
+        // Format: "0-31" or "0,2-5,8".
+        let max = s
+            .trim()
+            .split(',')
+            .filter_map(|part| part.rsplit('-').next()?.trim().parse::<usize>().ok())
+            .max();
+        if let Some(m) = max {
+            return m + 1;
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Pin the calling thread to a host CPU (wrapping modulo online CPUs).
+///
+/// Dependency-free: instead of the `libc` crate (not vendored offline) we
+/// declare the one symbol we need; std already links the platform libc.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(core: CoreId) {
+    const SET_WORDS: usize = 1024 / 64; // glibc cpu_set_t is 1024 bits
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; SET_WORDS],
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let target = core % online_cpus().max(1);
+    let mut set = CpuSet {
+        bits: [0; SET_WORDS],
+    };
+    set.bits[target / 64] |= 1 << (target % 64);
+    // SAFETY: pid 0 = calling thread; the mask outlives the call. A failure
+    // (e.g. the target is outside a cgroup cpuset) leaves the thread
+    // unpinned, matching the previous libc-based behaviour.
+    unsafe {
+        sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set);
+    }
+}
+
+/// Pin the calling thread to a host CPU — no-op off Linux.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(core: CoreId) {
+    let _ = core;
 }
 
 #[cfg(test)]
@@ -298,6 +548,65 @@ mod tests {
     }
 
     #[test]
+    fn fork_counter_counts_regions() {
+        let pool = Pool::new(2);
+        let before = pool.fork_count();
+        for _ in 0..5 {
+            pool.run(|_| {});
+        }
+        pool.for_range(100, |_, _, _| {}); // one region
+        let _ = pool.reduce(100, 0.0, |_t, lo, hi| (hi - lo) as f64, |a, b| a + b);
+        assert_eq!(pool.fork_count() - before, 7);
+        // serial pools count regions too
+        let s = Pool::serial();
+        s.run(|_| {});
+        assert_eq!(s.fork_count(), 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(4);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|tid| {
+                if tid == 2 {
+                    panic!("boom in worker");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "master must re-raise a worker panic");
+        // the pool remains usable afterwards
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            hits.fetch_or(1 << tid, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn master_panic_still_joins_workers() {
+        // tid 0 (the master) panics mid-region; the join-on-drop guard must
+        // wait for the workers before the closure is dropped, and the pool
+        // must stay usable.
+        let pool = Pool::new(4);
+        let done = AtomicU64::new(0);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|tid| {
+                if tid == 0 {
+                    panic!("boom on master");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(caught.is_err());
+        assert_eq!(done.load(Ordering::Relaxed), 3, "workers completed");
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            hits.fetch_or(1 << tid, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
     fn nested_data_borrow_is_safe() {
         // The unsafe lifetime erasure must not outlive the call: mutate a
         // stack vector through chunk-disjoint borrows.
@@ -341,6 +650,94 @@ mod tests {
         for _ in 0..10 {
             let pool = Pool::new(8);
             pool.run(|_| {});
+        }
+    }
+
+    // -- in-region primitives ------------------------------------------------
+
+    #[test]
+    fn barrier_orders_phases_within_one_region() {
+        // Phase 1: each thread writes its cell. Barrier. Phase 2: each
+        // thread sums ALL cells — every thread must see every phase-1 write.
+        let t = 4;
+        let pool = Pool::new(t);
+        let barrier = RegionBarrier::new(t);
+        let cells: Vec<AtomicU64> = (0..t).map(|_| AtomicU64::new(0)).collect();
+        let sums: Vec<AtomicU64> = (0..t).map(|_| AtomicU64::new(0)).collect();
+        pool.run(|tid| {
+            let mut w = barrier.waiter();
+            cells[tid].store((tid as u64 + 1) * 10, Ordering::Release);
+            barrier.wait(&mut w);
+            let s: u64 = cells.iter().map(|c| c.load(Ordering::Acquire)).sum();
+            sums[tid].store(s, Ordering::Release);
+        });
+        for s in &sums {
+            assert_eq!(s.load(Ordering::Acquire), 10 + 20 + 30 + 40);
+        }
+        assert_eq!(pool.fork_count(), 1, "one region, many phases");
+    }
+
+    #[test]
+    fn barrier_many_rounds_and_regions() {
+        // Odd number of waits per region exercises the sense bookkeeping
+        // across regions (waiter() re-derives the local sense each region).
+        let t = 3;
+        let pool = Pool::new(t);
+        let barrier = RegionBarrier::new(t);
+        let counter = AtomicU64::new(0);
+        for _region in 0..10 {
+            pool.run(|_tid| {
+                let mut w = barrier.waiter();
+                for _round in 0..7 {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    barrier.wait(&mut w);
+                }
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 10 * 7 * t as u64);
+    }
+
+    #[test]
+    fn barrier_single_thread_is_noop() {
+        let barrier = RegionBarrier::new(1);
+        let mut w = barrier.waiter();
+        for _ in 0..5 {
+            barrier.wait(&mut w);
+        }
+    }
+
+    #[test]
+    fn reduce_slots_roundtrip_and_determinism() {
+        let t = 4;
+        let pool = Pool::new(t);
+        let barrier = RegionBarrier::new(t);
+        let slots = ReduceSlots::new(t);
+        assert_eq!(slots.len(), t);
+        let xs: Vec<f64> = (0..4000).map(|i| (i as f64 * 0.37).sin()).collect();
+        let run_once = || {
+            let out: Vec<std::sync::Mutex<f64>> =
+                (0..t).map(|_| std::sync::Mutex::new(0.0)).collect();
+            pool.run(|tid| {
+                let mut w = barrier.waiter();
+                let (lo, hi) = crate::thread::schedule::static_chunk(xs.len(), t, tid);
+                slots.set(tid, xs[lo..hi].iter().sum::<f64>());
+                barrier.wait(&mut w);
+                // every thread folds the slots in the same (tid) order
+                let mut acc = 0.0;
+                for k in 0..t {
+                    acc += slots.get(k);
+                }
+                *out[tid].lock().unwrap() = acc;
+            });
+            let v: Vec<f64> = out.iter().map(|m| *m.lock().unwrap()).collect();
+            v
+        };
+        let a = run_once();
+        let b = run_once();
+        // all threads agree, and repeated runs are bitwise identical
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+            assert_eq!(x.to_bits(), a[0].to_bits());
         }
     }
 }

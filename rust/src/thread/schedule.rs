@@ -28,6 +28,40 @@ pub fn static_chunks(n: usize, nthreads: usize) -> Vec<(usize, usize)> {
     (0..nthreads).map(|t| static_chunk(n, nthreads, t)).collect()
 }
 
+/// An **nnz-balanced** row partition for CSR kernels: `nthreads` contiguous
+/// row chunks whose *nonzero* counts (not row counts) are as even as the
+/// row granularity allows. This is the load-balance fix the mixed-mode
+/// follow-up work applies to SpMV — with strongly varying row densities the
+/// plain static schedule leaves threads idle while one drags the join.
+///
+/// Greedy sweep: each chunk accumulates rows up to and *including* the row
+/// that crosses `target = ceil(nnz / nthreads)` nonzeros, so every chunk
+/// holds fewer than `target + max_row_nnz` nonzeros and trailing chunks may
+/// be empty when a dense row swallows several targets' worth. Chunks are
+/// contiguous, monotone, and cover `0..rows` exactly.
+pub fn nnz_balanced_chunks(row_ptr: &[usize], nthreads: usize) -> Vec<(usize, usize)> {
+    assert!(nthreads >= 1);
+    debug_assert!(!row_ptr.is_empty());
+    let rows = row_ptr.len() - 1;
+    let nnz = *row_ptr.last().unwrap();
+    let target = nnz.div_ceil(nthreads).max(1);
+    let mut out = Vec::with_capacity(nthreads);
+    let mut row = 0usize;
+    for _ in 0..nthreads {
+        let lo = row;
+        let start = row_ptr[lo];
+        // stop at the first boundary with ≥ target nonzeros behind it
+        while row < rows && row_ptr[row] - start < target {
+            row += 1;
+        }
+        out.push((lo, row));
+    }
+    if let Some(last) = out.last_mut() {
+        last.1 = rows; // the final chunk always closes the row range
+    }
+    out
+}
+
 /// The thread that owns iteration `i` under the static schedule — the
 /// inverse of [`static_chunk`]. Used when a consumer must locate data it
 /// did not page itself (e.g. the scatter receive side).
@@ -97,6 +131,60 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn nnz_chunks_cover_and_balance() {
+        // Random row densities: chunks must tile 0..rows and no chunk may
+        // exceed target + (max row nnz − 1).
+        forall(
+            &PtConfig { cases: 60, ..Default::default() },
+            |rng: &mut crate::util::rng::XorShift64| {
+                let rows = rng.range(1, 200);
+                let t = rng.range(1, 17);
+                let mut row_ptr = vec![0usize];
+                for _ in 0..rows {
+                    let k = rng.below(12);
+                    row_ptr.push(row_ptr.last().unwrap() + k);
+                }
+                (row_ptr, t)
+            },
+            |(row_ptr, t)| {
+                let rows = row_ptr.len() - 1;
+                let nnz = *row_ptr.last().unwrap();
+                let chunks = nnz_balanced_chunks(row_ptr, *t);
+                check(chunks.len() == *t, "one chunk per thread")?;
+                check(chunks[0].0 == 0, "starts at 0")?;
+                check(chunks[*t - 1].1 == rows, "ends at rows")?;
+                for w in chunks.windows(2) {
+                    check(w[0].1 == w[1].0, "contiguous")?;
+                }
+                let max_row = (0..rows).map(|i| row_ptr[i + 1] - row_ptr[i]).max().unwrap_or(0);
+                let target = nnz.div_ceil(*t).max(1);
+                for &(lo, hi) in &chunks {
+                    let c = row_ptr[hi] - row_ptr[lo];
+                    check(
+                        c <= target + max_row.saturating_sub(1),
+                        format!("chunk nnz {c} vs target {target} (max row {max_row})"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nnz_chunks_isolate_dense_rows() {
+        // one dense row among light rows: it gets its own chunk
+        let row_ptr = vec![0usize, 100, 101, 102, 103];
+        let chunks = nnz_balanced_chunks(&row_ptr, 4);
+        assert_eq!(chunks[0], (0, 1), "dense row isolated");
+        assert_eq!(chunks.last().unwrap().1, 4);
+        // empty matrix degenerates cleanly
+        let chunks = nnz_balanced_chunks(&[0, 0, 0], 2);
+        assert_eq!(chunks.last().unwrap().1, 2);
+        let total: usize = chunks.iter().map(|&(a, b)| b - a).sum();
+        assert_eq!(total, 2);
     }
 
     #[test]

@@ -199,4 +199,44 @@ mod tests {
         assert_eq!(dot(&[], &[]), 0.0);
         assert_eq!(amax(&[]), 0.0);
     }
+
+    #[test]
+    fn dot_handles_all_tail_lengths() {
+        // The 4-accumulator kernel splits n into 4·⌊n/4⌋ + tail; every
+        // tail length (n mod 4 = 0..3) must be summed. Integer-valued
+        // doubles keep the expected sums exact in fp.
+        for n in 1..=19usize {
+            let x: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+            let y = vec![1.0; n];
+            let expect = (n * (n + 1) / 2) as f64;
+            assert_eq!(dot(&x, &y), expect, "dot tail n={n}");
+            let sq: f64 = x.iter().map(|v| v * v).sum();
+            assert_eq!(sqnorm(&x), sq, "sqnorm tail n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_tail_values_actually_contribute() {
+        // Regression guard: zero the body, put weight only in the tail.
+        for tail in 1..4usize {
+            let n = 8 + tail;
+            let mut x = vec![0.0; n];
+            for (k, v) in x.iter_mut().enumerate().skip(8) {
+                *v = (k + 1) as f64;
+            }
+            let ones = vec![1.0; n];
+            let expect: f64 = (9..=n).map(|i| i as f64).sum();
+            assert_eq!(dot(&x, &ones), expect, "tail={tail}");
+        }
+    }
+
+    #[test]
+    fn dot_deterministic_per_slice() {
+        // Same slice, same result bit-for-bit (the fused layer's fixed-chunk
+        // reductions rely on per-chunk determinism).
+        let x: Vec<f64> = (0..1003).map(|i| (i as f64 * 0.7).sin()).collect();
+        let y: Vec<f64> = (0..1003).map(|i| (i as f64 * 0.3).cos()).collect();
+        assert_eq!(dot(&x, &y).to_bits(), dot(&x, &y).to_bits());
+        assert_eq!(sqnorm(&x).to_bits(), sqnorm(&x).to_bits());
+    }
 }

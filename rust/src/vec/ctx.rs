@@ -53,6 +53,25 @@ impl ThreadCtx {
         self.pool.nthreads()
     }
 
+    /// Direct access to the pool, for callers that manage their own region
+    /// structure — the fused-iteration layer ([`crate::ksp::fused`]) opens
+    /// one [`crate::thread::pool::Pool::run`] region and sequences kernels
+    /// inside it with in-region barriers instead of per-kernel forks.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// Whether every parallel region forks regardless of size (the
+    /// [`AdaptivePolicy::always`] policy). The fused-iteration layer's
+    /// bitwise-identity contract only holds under this policy: a real
+    /// size-adaptive cut-off serializes small reductions into one chunk,
+    /// which changes the fp fold order relative to the fused fixed chunks.
+    pub fn always_forks(&self) -> bool {
+        self.adaptive.fork_overhead == 0.0
+            && self.adaptive.floor == 0
+            && self.adaptive.min_gain <= 1.0
+    }
+
     /// The modelled UMA region of thread `tid` (0 when unpinned).
     pub fn thread_uma(&self, tid: usize) -> UmaRegionId {
         self.pool.thread_uma(tid)

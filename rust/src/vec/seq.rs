@@ -62,6 +62,49 @@ impl VecSeq {
         VecSeq { data, pages, ctx }
     }
 
+    /// Create a zeroed vector first-touched by an explicit ownership map
+    /// instead of the static schedule — `partition[tid]` is the element
+    /// range thread `tid` owns. Used when a vector's hot-path consumer
+    /// iterates under a matrix's row partition (e.g. the SpMV destination
+    /// inside a fused region with the nnz-balanced schedule): paging the
+    /// vector by the *same* map keeps the §VI.A locality contract intact.
+    pub fn new_partitioned(n: usize, ctx: Arc<ThreadCtx>, partition: &[(usize, usize)]) -> VecSeq {
+        // One range per pool thread — the first-touch pass below maps
+        // partition[tid] to thread tid, which is only meaningful when the
+        // counts line up (matrix partitions always have nthreads entries).
+        assert_eq!(
+            partition.len(),
+            ctx.nthreads(),
+            "new_partitioned: partition length must equal the context's thread count"
+        );
+        // Real assert, not debug: the unsafe chunked write below trusts
+        // these bounds, and this runs once per construction.
+        assert!(
+            partition.iter().all(|&(lo, hi)| lo <= hi && hi <= n),
+            "new_partitioned: partition ranges must be ordered and within 0..{n}"
+        );
+        let mut data = vec![0.0f64; n];
+        let mut pages = PageMap::new(n, 8);
+        let raw = RawMut(data.as_mut_ptr());
+        let part = partition.to_vec();
+        ctx.for_range_paging(part.len().max(1), |tid, _lo, _hi| {
+            if let Some(&(lo, hi)) = part.get(tid) {
+                if lo < hi {
+                    // SAFETY: partition ranges are disjoint by contract.
+                    let chunk =
+                        unsafe { std::slice::from_raw_parts_mut(raw.ptr().add(lo), hi - lo) };
+                    chunk.fill(0.0);
+                }
+            }
+        });
+        for (tid, &(lo, hi)) in partition.iter().enumerate() {
+            if lo < hi {
+                pages.touch_range(lo, hi, ctx.thread_uma(tid));
+            }
+        }
+        VecSeq { data, pages, ctx }
+    }
+
     /// Create from existing data (pages counted as touched by the static
     /// schedule owners — callers that page differently should rebuild).
     pub fn from_slice(xs: &[f64], ctx: Arc<ThreadCtx>) -> VecSeq {
@@ -422,6 +465,26 @@ mod tests {
         let v = VecSeq::new(10_000, ctx());
         assert!(v.as_slice().iter().all(|&x| x == 0.0));
         assert_eq!(v.pages().pages(), (10_000 * 8usize).div_ceil(4096));
+    }
+
+    #[test]
+    fn new_partitioned_zeroed_and_paged_by_map() {
+        let node = crate::topology::presets::hector_xe6_node();
+        let c = ThreadCtx::pinned(&node, &[0, 8, 16, 24]);
+        // deliberately uneven ownership map (a fake nnz-balanced partition)
+        let part = [(0usize, 40_000usize), (40_000, 50_000), (50_000, 60_000), (60_000, 65_536)];
+        let v = VecSeq::new_partitioned(65_536, c.clone(), &part);
+        assert!(v.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(v.len(), 65_536);
+        for (tid, &(lo, hi)) in part.iter().enumerate() {
+            assert!(
+                v.pages().chunk_is_local(lo, hi, c.thread_uma(tid)),
+                "chunk of thread {tid} not paged by its owner"
+            );
+        }
+        // partial maps leave the tail unfaulted but usable
+        let w = VecSeq::new_partitioned(100, ThreadCtx::new(2), &[(0, 50), (50, 100)]);
+        assert_eq!(w.as_slice().len(), 100);
     }
 
     #[test]
