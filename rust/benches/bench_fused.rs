@@ -81,6 +81,7 @@ fn main() {
         "bench_fused",
         "fused vs unfused CG, static vs nnz-balanced SpMV",
     )
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
     .opt("threads", None, "threads (default: host cores, capped at 8)")
     .opt("scale", Some("0.05"), "matrix scale for saltfinger-pressure")
     .opt("its", Some("60"), "CG iterations to time")

@@ -1,0 +1,168 @@
+//! Hybrid rank×thread sweep: fused (split-phase overlap + slot-ordered
+//! reductions) vs unfused multi-rank CG at a fixed core count, reporting
+//! GFLOP/s, the measured comm/compute overlap fraction, and the ghost
+//! messages hidden per iteration. Results go to stdout and
+//! `BENCH_hybrid.json` — the mixed-mode half of the perf trajectory
+//! (`BENCH_fused_cg.json` is the threaded half).
+//!
+//! `cargo bench --bench bench_hybrid -- --cores 4 --scale 0.003`
+
+use mmpetsc::bench::{JsonVal, Table};
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::util::cli::Cli;
+
+struct ConfigResult {
+    ranks: usize,
+    threads: usize,
+    fused_gflops: f64,
+    unfused_gflops: f64,
+    fused_seconds: f64,
+    unfused_seconds: f64,
+    overlap_fraction: f64,
+    msgs_hidden_per_iter: f64,
+    messages: u64,
+    rows: usize,
+}
+
+fn run_decomposition(
+    case: TestCase,
+    scale: f64,
+    ranks: usize,
+    threads: usize,
+    its: usize,
+) -> ConfigResult {
+    let fixed_its = |ksp: &str| -> HybridConfig {
+        let mut cfg = HybridConfig::default_for(case, scale, ranks, threads);
+        cfg.ksp_type = ksp.into();
+        // unreachable tolerances: the solve runs exactly `its` iterations,
+        // so both paths execute the same iteration count
+        cfg.ksp.rtol = 1e-300;
+        cfg.ksp.atol = 0.0;
+        cfg.ksp.max_it = its;
+        cfg
+    };
+    let mut fused_best = f64::INFINITY;
+    let mut unfused_best = f64::INFINITY;
+    let mut fused_flops = 0.0;
+    let mut unfused_flops = 0.0;
+    let mut overlap = 0.0;
+    let mut hidden = 0.0;
+    let mut messages = 0u64;
+    let mut rows = 0usize;
+    for _rep in 0..3 {
+        let f = run_case(&fixed_its("cg-fused")).expect("fused run");
+        if f.ksp_time < fused_best {
+            fused_best = f.ksp_time;
+            fused_flops = f.total_flops;
+        }
+        overlap = overlap.max(f.overlap_fraction);
+        hidden = hidden.max(f.msgs_hidden as f64 / its.max(1) as f64);
+        messages = messages.max(f.messages);
+        rows = f.rows;
+        let u = run_case(&fixed_its("cg")).expect("unfused run");
+        if u.ksp_time < unfused_best {
+            unfused_best = u.ksp_time;
+            unfused_flops = u.total_flops;
+        }
+    }
+    ConfigResult {
+        ranks,
+        threads,
+        fused_gflops: fused_flops / fused_best / 1e9,
+        unfused_gflops: unfused_flops / unfused_best / 1e9,
+        fused_seconds: fused_best,
+        unfused_seconds: unfused_best,
+        overlap_fraction: overlap,
+        msgs_hidden_per_iter: hidden,
+        messages,
+        rows,
+    }
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_hybrid",
+        "hybrid rank×thread fused CG sweep with overlap accounting",
+    )
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .opt("cores", Some("4"), "total cores to factor into rank×thread grids")
+    .opt("scale", Some("0.003"), "matrix scale for saltfinger-pressure")
+    .opt("its", Some("40"), "CG iterations to time")
+    .opt("out", Some("BENCH_hybrid.json"), "output JSON path")
+    .parse_env();
+    let cores = args.get_usize("cores").unwrap().max(1);
+    let scale = args.get_f64("scale").unwrap();
+    let its = args.get_usize("its").unwrap().max(2);
+    let out_path = args.get_or("out", "BENCH_hybrid.json");
+    let case = TestCase::SaltPressure;
+
+    // every rank×thread factorisation of `cores`
+    let decomps: Vec<(usize, usize)> = (1..=cores)
+        .filter(|r| cores % r == 0)
+        .map(|r| (r, cores / r))
+        .collect();
+
+    let mut results = Vec::new();
+    for &(r, t) in &decomps {
+        results.push(run_decomposition(case, scale, r, t, its));
+    }
+
+    let rows = results.first().map(|c| c.rows).unwrap_or(0);
+    let title = format!(
+        "hybrid CG — {} scale {scale}, {rows} rows, {cores} cores, {its} its",
+        case.name()
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "ranks×threads",
+            "fused GF/s",
+            "unfused GF/s",
+            "speedup",
+            "overlap",
+            "hidden msg/it",
+        ],
+    );
+    for c in &results {
+        t.row(&[
+            format!("{}×{}", c.ranks, c.threads),
+            format!("{:.3}", c.fused_gflops),
+            format!("{:.3}", c.unfused_gflops),
+            format!("{:.2}×", c.unfused_seconds / c.fused_seconds.max(1e-12)),
+            format!("{:.0}%", 100.0 * c.overlap_fraction),
+            format!("{:.2}", c.msgs_hidden_per_iter),
+        ]);
+    }
+    t.print();
+
+    let configs: Vec<(String, JsonVal)> = results
+        .iter()
+        .map(|c| {
+            (
+                format!("r{}t{}", c.ranks, c.threads),
+                JsonVal::obj(vec![
+                    ("ranks", JsonVal::Int(c.ranks as u64)),
+                    ("threads", JsonVal::Int(c.threads as u64)),
+                    ("fused_seconds", JsonVal::Num(c.fused_seconds)),
+                    ("fused_gflops", JsonVal::Num(c.fused_gflops)),
+                    ("unfused_seconds", JsonVal::Num(c.unfused_seconds)),
+                    ("unfused_gflops", JsonVal::Num(c.unfused_gflops)),
+                    ("overlap_fraction", JsonVal::Num(c.overlap_fraction)),
+                    ("msgs_hidden_per_iter", JsonVal::Num(c.msgs_hidden_per_iter)),
+                    ("messages", JsonVal::Int(c.messages)),
+                ]),
+            )
+        })
+        .collect();
+    let json = JsonVal::Obj(vec![
+        ("bench".to_string(), JsonVal::Str("hybrid".into())),
+        ("case".to_string(), JsonVal::Str(case.name().into())),
+        ("cores".to_string(), JsonVal::Int(cores as u64)),
+        ("rows".to_string(), JsonVal::Int(rows as u64)),
+        ("iterations".to_string(), JsonVal::Int(its as u64)),
+        ("configs".to_string(), JsonVal::Obj(configs)),
+    ]);
+    std::fs::write(&out_path, json.render() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

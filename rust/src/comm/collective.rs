@@ -160,6 +160,37 @@ impl Comm {
         Ok(acc)
     }
 
+    /// Deterministic sum-allreduce in **rank-then-contribution order**: every
+    /// rank contributes a list of `K`-component partials (one per local
+    /// thread slot, in thread order); all contributions are allgathered and
+    /// every rank folds the concatenation rank 0 first, left to right, with
+    /// a single accumulator per component.
+    ///
+    /// Unlike [`Comm::allreduce`] (recursive doubling, whose fp fold order
+    /// depends on the rank count), the result is bitwise identical on every
+    /// rank *and* across any `ranks × threads` decomposition that produces
+    /// the same flat sequence of partials — the reduction half of the fused
+    /// hybrid layer's determinism contract (DESIGN.md §5). Costs a ring
+    /// allgather (P−1 rounds) instead of ⌈log2 P⌉ exchanges; for the
+    /// O(8·K·P)-byte payloads of solver reductions this is latency-bound
+    /// and the difference is priced, not hidden (see `comm::timing`).
+    pub fn allreduce_sum_ordered<const K: usize>(
+        &mut self,
+        contribution: Vec<[f64; K]>,
+    ) -> Result<[f64; K]> {
+        self.stats.reductions.fetch_add(1, Ordering::Relaxed);
+        let all = self.allgather(contribution)?;
+        let mut acc = [0.0f64; K];
+        for rank_parts in &all {
+            for part in rank_parts {
+                for c in 0..K {
+                    acc[c] += part[c];
+                }
+            }
+        }
+        Ok(acc)
+    }
+
     /// Gather variable-length vectors to `root` (linear). Returns
     /// `Some(per-rank payloads)` on root.
     pub fn gatherv<T: Send + Clone + 'static>(
@@ -299,6 +330,35 @@ mod tests {
                 assert_eq!(m, (p - 1) as u64);
             }
         }
+    }
+
+    #[test]
+    fn allreduce_sum_ordered_is_decomposition_invariant() {
+        // 8 fixed slot partials, dealt out to 1, 2, 4 or 8 ranks (contiguous
+        // runs, rank-then-slot order): the folded result must be bitwise
+        // identical — the property plain recursive-doubling allreduce lacks.
+        let partials: Vec<[f64; 2]> = (0..8)
+            .map(|i| [(i as f64 * 0.7).sin() * 1e-3, (i as f64 * 1.3).cos()])
+            .collect();
+        let mut bits: Vec<(u64, u64)> = Vec::new();
+        for p in [1usize, 2, 4, 8] {
+            let per = 8 / p;
+            let parts = partials.clone();
+            let outs = World::run(p, move |mut c| {
+                let mine = parts[c.rank() * per..(c.rank() + 1) * per].to_vec();
+                c.allreduce_sum_ordered(mine).unwrap()
+            });
+            for o in &outs {
+                assert_eq!(o[0].to_bits(), outs[0][0].to_bits(), "ranks agree");
+            }
+            bits.push((outs[0][0].to_bits(), outs[0][1].to_bits()));
+        }
+        for w in bits.windows(2) {
+            assert_eq!(w[0], w[1], "fold must not depend on the rank split");
+        }
+        // and it really is the flat left-to-right sum
+        let expect: f64 = partials.iter().fold(0.0, |a, p| a + p[0]);
+        assert_eq!(bits[0].0, expect.to_bits());
     }
 
     #[test]

@@ -9,6 +9,63 @@
 
 use crate::topology::machine::Cluster;
 
+/// Measured communication/computation overlap accounting for split-phase
+/// exchanges (the `VecScatter::begin` → local compute → `end` pattern of
+/// hybrid MatMult). One instance per scatter plan; the fused hybrid layer
+/// asserts against it (overlap window nonzero, messages hidden) and
+/// `benches/bench_hybrid.rs` reports it.
+///
+/// Wall-clock seconds here are *measured on the host*, not modelled — the
+/// α–β [`NetModel`] below prices patterns, this records what the simulated
+/// exchange actually overlapped.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OverlapStats {
+    /// Completed begin→end exchanges.
+    pub exchanges: u64,
+    /// Σ (time from compute start to the `end()` call): local work done
+    /// while ghost messages were in flight — the hidden window.
+    pub overlap_seconds: f64,
+    /// Σ (time blocked inside `end()` waiting for receives): the exposed
+    /// communication the overlap failed to hide.
+    pub exposed_seconds: f64,
+    /// Σ (begin→end-return span): the full exchange window.
+    pub window_seconds: f64,
+    /// Ghost messages already delivered when `end()` was entered — fully
+    /// hidden behind the overlapped compute.
+    pub msgs_hidden: u64,
+    /// Ghost messages received in total.
+    pub msgs_total: u64,
+}
+
+impl OverlapStats {
+    /// Fraction of the exchange window covered by overlapped compute.
+    pub fn overlap_fraction(&self) -> f64 {
+        if self.window_seconds > 0.0 {
+            (self.overlap_seconds / self.window_seconds).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of ghost messages that were fully hidden.
+    pub fn hidden_fraction(&self) -> f64 {
+        if self.msgs_total > 0 {
+            self.msgs_hidden as f64 / self.msgs_total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Average messages hidden per exchange.
+    pub fn msgs_hidden_per_exchange(&self) -> f64 {
+        if self.exchanges > 0 {
+            self.msgs_hidden as f64 / self.exchanges as f64
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Cost model over a cluster's interconnect.
 #[derive(Debug, Clone)]
 pub struct NetModel {
@@ -180,6 +237,25 @@ mod tests {
         let t32 = model(32).neighbour_exchange(8, 1e3, 0.0, 32);
         let t4 = model(4).neighbour_exchange(8, 1e3, 0.0, 4);
         assert!(t32 > 4.0 * t4, "{t32} vs {t4}");
+    }
+
+    #[test]
+    fn overlap_stats_fractions() {
+        let s = OverlapStats {
+            exchanges: 4,
+            overlap_seconds: 0.5,
+            exposed_seconds: 0.25,
+            window_seconds: 1.0,
+            msgs_hidden: 6,
+            msgs_total: 8,
+        };
+        assert!((s.overlap_fraction() - 0.5).abs() < 1e-15);
+        assert!((s.hidden_fraction() - 0.75).abs() < 1e-15);
+        assert!((s.msgs_hidden_per_exchange() - 1.5).abs() < 1e-15);
+        let z = OverlapStats::default();
+        assert_eq!(z.overlap_fraction(), 0.0);
+        assert_eq!(z.hidden_fraction(), 0.0);
+        assert_eq!(z.msgs_hidden_per_exchange(), 0.0);
     }
 
     #[test]

@@ -40,6 +40,34 @@ pub fn estimate_bounds(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<(f64, f64)> {
+    power_iteration_bounds(
+        a,
+        pc,
+        seed_vec,
+        its,
+        comm,
+        log,
+        &mut |v, c| norm2(v, c, log),
+        &mut |u, w, c| crate::ksp::dot(u, w, c, log),
+    )
+}
+
+/// The shared power-iteration body behind [`estimate_bounds`] and the
+/// fused layer's deterministic variant
+/// ([`crate::ksp::fused::estimate_bounds_hybrid`]): the reduction strategy
+/// is injected, so the seed vector, recurrence and safety factors cannot
+/// drift apart between the two estimators.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn power_iteration_bounds(
+    a: &mut dyn Operator,
+    pc: &dyn Precond,
+    seed_vec: &VecMPI,
+    its: usize,
+    comm: &mut Comm,
+    log: &EventLog,
+    norm2f: &mut dyn FnMut(&VecMPI, &mut Comm) -> Result<f64>,
+    dotf: &mut dyn FnMut(&VecMPI, &VecMPI, &mut Comm) -> Result<f64>,
+) -> Result<(f64, f64)> {
     let mut v = seed_vec.duplicate();
     {
         // Seed with a deterministic rough vector: a constant vector is the
@@ -55,7 +83,7 @@ pub fn estimate_bounds(
     let mut mav = v.duplicate();
     let mut emax = 0.0;
     for _ in 0..its.max(1) {
-        let n = norm2(&v, comm, log)?;
+        let n = norm2f(&v, comm)?;
         if n == 0.0 {
             return Err(Error::Breakdown("power iteration collapsed".into()));
         }
@@ -63,7 +91,7 @@ pub fn estimate_bounds(
         matmult(a, &v, &mut av, comm, log)?;
         pcapply(pc, &av, &mut mav, log)?;
         // Rayleigh quotient for M⁻¹A.
-        emax = crate::ksp::dot(&v, &mav, comm, log)?;
+        emax = dotf(&v, &mav, comm)?;
         v.copy_from(&mav)?;
     }
     let emax = emax.abs().max(1e-12);

@@ -37,12 +37,13 @@ use crate::error::{Error, Result};
 use crate::ksp::{
     check_convergence, dot, norm2, pcapply, ConvergedReason, KspConfig, SolveStats,
 };
-use crate::mat::mpiaij::MatMPIAIJ;
+use crate::mat::mpiaij::{HybridPlan, MatMPIAIJ};
 use crate::pc::{FusedPc, Precond};
 use crate::thread::pool::{RegionBarrier, ReduceSlots};
 use crate::thread::schedule::static_chunk;
 use crate::vec::blas1;
 use crate::vec::mpi::VecMPI;
+use crate::vec::scatter::VecScatter;
 
 /// Raw base pointer of a vector's storage, shared across region threads.
 /// All slicing goes through [`ref_slice`]/[`mut_slice`] under the phase
@@ -110,8 +111,54 @@ pub fn can_fuse(a: &MatMPIAIJ, pc: &dyn Precond, b: &VecMPI, x: &VecMPI, comm: &
         && ctx.always_forks()
 }
 
-/// Preconditioned CG with fused single-fork iterations, falling back to
-/// [`crate::ksp::cg::solve`] whenever [`can_fuse`] says no.
+/// Can this combination run the **multi-rank hybrid** fused path? Requires
+/// a built [`crate::mat::mpiaij::HybridPlan`] (see
+/// [`MatMPIAIJ::enable_hybrid`]) whose grid matches this communicator, an
+/// element-wise PC, and the same shared-context conditions as [`can_fuse`].
+/// Hybrid fusion is opt-in via the plan, so single-rank callers that never
+/// enable it keep the legacy path's unfused-bitwise-identity contract.
+pub fn can_fuse_hybrid(
+    a: &MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &VecMPI,
+    comm: &Comm,
+) -> bool {
+    let plan = match a.hybrid_plan() {
+        Some(p) => p,
+        None => return false,
+    };
+    if matches!(pc.fused(), FusedPc::Unfusable) {
+        return false;
+    }
+    if a.row_layout() != a.col_layout()
+        || b.layout() != a.row_layout()
+        || x.layout() != a.row_layout()
+        || comm.size() != a.row_layout().size()
+        // Rank must match too: on uneven layouts a vector built for another
+        // rank shares the layout but has a different local length, and the
+        // region's raw slices are sized for this rank's plan.
+        || b.rank() != comm.rank()
+        || x.rank() != comm.rank()
+    {
+        return false;
+    }
+    let ctx = a.diag_block().ctx();
+    plan.nslots_local() == ctx.nthreads()
+        && plan.first_slot() == comm.rank() * ctx.nthreads()
+        && Arc::ptr_eq(ctx, b.local().ctx())
+        && Arc::ptr_eq(ctx, x.local().ctx())
+        && ctx.always_forks()
+}
+
+/// Preconditioned CG with fused single-fork iterations.
+///
+/// Dispatch: the multi-rank **hybrid** path when the operator carries a
+/// matching [`crate::mat::mpiaij::HybridPlan`] (split-phase MatMult with
+/// comm/compute overlap, slot-ordered deterministic reductions — bitwise
+/// identical across `ranks × threads` decompositions of one slot grid);
+/// else the legacy single-rank fused path (bitwise identical to the unfused
+/// solver); else the kernel-per-fork fallback [`crate::ksp::cg::solve`].
 pub fn solve(
     a: &mut MatMPIAIJ,
     pc: &dyn Precond,
@@ -121,6 +168,12 @@ pub fn solve(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
+    if can_fuse_hybrid(a, pc, b, x, comm) {
+        log.begin("KSPSolve");
+        let out = cg_hybrid_inner(a, pc, b, x, cfg, comm, log);
+        log.end("KSPSolve");
+        return out;
+    }
     if !can_fuse(a, pc, b, x, comm) {
         return crate::ksp::cg::solve(a, pc, b, x, cfg, comm, log);
     }
@@ -280,6 +333,509 @@ fn cg_fused_inner(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Hybrid (multi-rank) fused path: split-phase MatMult with comm/compute
+// overlap + slot-ordered deterministic reductions (DESIGN.md §5)
+// ---------------------------------------------------------------------------
+
+/// Master-only raw pointer to the communicator: dereferenced exclusively by
+/// thread 0, whose accesses are sequenced on the master thread itself
+/// (post hook → region body → after join).
+struct RawComm(*mut Comm);
+unsafe impl Send for RawComm {}
+unsafe impl Sync for RawComm {}
+
+/// Master-only raw pointer to the scatter plan (same discipline).
+struct RawScatter(*mut VecScatter);
+unsafe impl Send for RawScatter {}
+unsafe impl Sync for RawScatter {}
+
+/// Read-only view of the persistent ghost buffer: written by the master's
+/// `scatter.end()`, read by workers only after a barrier orders the writes.
+struct RawGhost(*const f64, usize);
+unsafe impl Send for RawGhost {}
+unsafe impl Sync for RawGhost {}
+
+fn slot_norm2_over(v: &VecMPI, ranges: &[(usize, usize)], comm: &mut Comm) -> Result<f64> {
+    let xs = v.local().as_slice();
+    let parts: Vec<[f64; 1]> = ranges
+        .iter()
+        .map(|&(lo, hi)| [blas1::sqnorm(&xs[lo..hi])])
+        .collect();
+    Ok(comm.allreduce_sum_ordered(parts)?[0].sqrt())
+}
+
+fn slot_dot_over(
+    u: &VecMPI,
+    v: &VecMPI,
+    ranges: &[(usize, usize)],
+    comm: &mut Comm,
+) -> Result<f64> {
+    let us = u.local().as_slice();
+    let vs = v.local().as_slice();
+    let parts: Vec<[f64; 1]> = ranges
+        .iter()
+        .map(|&(lo, hi)| [blas1::dot(&us[lo..hi], &vs[lo..hi])])
+        .collect();
+    Ok(comm.allreduce_sum_ordered(parts)?[0])
+}
+
+/// Deterministic (slot-ordered) global 2-norm under a hybrid plan: one
+/// `blas1::sqnorm` partial per local slot, folded across all ranks in
+/// rank-then-slot order. Bitwise identical for every decomposition sharing
+/// the plan's slot grid — and on every rank.
+pub fn hybrid_norm2(v: &VecMPI, plan: &HybridPlan, comm: &mut Comm) -> Result<f64> {
+    slot_norm2_over(v, plan.slot_ranges(), comm)
+}
+
+/// Deterministic (slot-ordered) global dot under a hybrid plan; see
+/// [`hybrid_norm2`].
+pub fn hybrid_dot(u: &VecMPI, v: &VecMPI, plan: &HybridPlan, comm: &mut Comm) -> Result<f64> {
+    slot_dot_over(u, v, plan.slot_ranges(), comm)
+}
+
+/// Published-scalar slots for the hybrid region (master writes after its
+/// ordered allreduce, everyone reads after the next barrier).
+const S_PW: usize = 0;
+const S_RR: usize = 1;
+const S_RZ: usize = 2;
+
+#[allow(clippy::too_many_arguments)]
+fn cg_hybrid_inner(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    let n = x.local().len();
+    let inv_diag: Option<&[f64]> = match pc.fused() {
+        FusedPc::Jacobi(d) => Some(d),
+        FusedPc::Identity => None,
+        FusedPc::Unfusable => {
+            return Err(Error::Unsupported("hybrid fused CG: PC is not fusable".into()))
+        }
+    };
+    if let Some(d) = inv_diag {
+        if d.len() != n {
+            return Err(Error::size_mismatch("hybrid fused CG: inv_diag length"));
+        }
+    }
+
+    // ---- deterministic setup: every reduction slot-ordered, every
+    //      elementwise op exact, the residual via the plan-aware MatMult ---
+    let bnorm = hybrid_norm2(b, a.hybrid_plan().expect("checked by can_fuse_hybrid"), comm)?;
+    let mut history = Vec::new();
+    let mut r = b.duplicate();
+    crate::ksp::cg::a_apply_residual(a, b, x, &mut r, comm, log)?;
+    let mut z = r.duplicate();
+    pcapply(pc, &r, &mut z, log)?;
+    let mut p = z.duplicate();
+    p.copy_from(&z)?;
+    let mut w = r.duplicate();
+    let mut rz = hybrid_dot(&r, &z, a.hybrid_plan().unwrap(), comm)?;
+    let mut rnorm = hybrid_norm2(&r, a.hybrid_plan().unwrap(), comm)?;
+    if cfg.monitor {
+        history.push(rnorm);
+    }
+
+    // ---- split-borrow the operator for the region --------------------------
+    let (diag, off, plan, scratch, scatter) = a.hybrid_split()?;
+    let ctx = diag.ctx().clone();
+    let pool = ctx.pool();
+    let t = pool.nthreads();
+    let part: Vec<(usize, usize)> = plan.partition().to_vec();
+    let seg_ptr: &[usize] = plan.seg_ptr();
+    let slot_ranges: &[(usize, usize)] = plan.slot_ranges();
+    let (gp, gl) = scatter.ghost_raw();
+    let ghost_raw = RawGhost(gp, gl);
+
+    let x_raw = Raw(x.local_mut().as_mut_slice().as_mut_ptr());
+    let r_raw = Raw(r.local_mut().as_mut_slice().as_mut_ptr());
+    let z_raw = Raw(z.local_mut().as_mut_slice().as_mut_ptr());
+    let p_raw = Raw(p.local_mut().as_mut_slice().as_mut_ptr());
+    let w_raw = Raw(w.local_mut().as_mut_slice().as_mut_ptr());
+    let scratch_raw = Raw(scratch.as_mut_ptr());
+    let comm_raw = RawComm(&mut *comm as *mut Comm);
+    let scatter_raw = RawScatter(&mut *scatter as *mut VecScatter);
+
+    let barrier = RegionBarrier::new(t);
+    let pw_slots = ReduceSlots::new(t);
+    let rr_slots = ReduceSlots::new(t);
+    let rz_slots = ReduceSlots::new(t);
+    let shared = ReduceSlots::new(3);
+    let iter_flops = 2.0 * (diag.nnz() + off.nnz()) as f64 + 12.0 * n as f64;
+
+    let mut it = 0usize;
+    loop {
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
+        }
+        let rz_now = rz;
+        // One pool fork per rank per iteration. The master posts the ghost
+        // sends for p in the entry hook — the workers' diagonal partials
+        // start while the messages are still being packed.
+        log.timed("KSPFusedIter", iter_flops, || {
+            pool.run_posted(
+                || {
+                    // SAFETY: master thread only; sequenced before its own
+                    // region body (f(0) runs after this hook returns).
+                    let comm = unsafe { &mut *comm_raw.0 };
+                    let sc = unsafe { &mut *scatter_raw.0 };
+                    let ps = unsafe { ref_slice(&p_raw, 0, n) };
+                    sc.begin_local(ps, comm).expect("hybrid CG: scatter begin");
+                    sc.mark_compute_start();
+                },
+                |tid| {
+                    let mut ws = barrier.waiter();
+                    // -- 1. diagonal slot partials over the nnz-balanced row
+                    //    chunk, ghost messages in flight.
+                    let (rlo, rhi) = part[tid];
+                    if rlo < rhi {
+                        let (slo, shi) = (seg_ptr[rlo], seg_ptr[rhi]);
+                        // SAFETY: disjoint row chunks ⇒ disjoint seg windows.
+                        let scr = unsafe { mut_slice(&scratch_raw, slo, shi - slo) };
+                        let pall = unsafe { ref_slice(&p_raw, 0, n) };
+                        plan.diag_partials(diag, pall, rlo, rhi, scr);
+                    }
+                    if tid == 0 {
+                        // Complete the receives; workers may still be in
+                        // phase 1 — that concurrency IS the overlap window.
+                        // SAFETY: master-only.
+                        let comm = unsafe { &mut *comm_raw.0 };
+                        let sc = unsafe { &mut *scatter_raw.0 };
+                        sc.end(comm).expect("hybrid CG: scatter end");
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 2. ghost partials + ascending-slot fold → w = A p.
+                    if rlo < rhi {
+                        // SAFETY: ghost writes ordered by the barrier.
+                        let ghosts =
+                            unsafe { std::slice::from_raw_parts(ghost_raw.0, ghost_raw.1) };
+                        let (slo, shi) = (seg_ptr[rlo], seg_ptr[rhi]);
+                        let scr = unsafe { ref_slice(&scratch_raw, slo, shi - slo) };
+                        let wrows = unsafe { mut_slice(&w_raw, rlo, rhi - rlo) };
+                        plan.apply_rows(off, ghosts, scr, rlo, rhi, wrows);
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 3. (p, w) partial over this thread's slot.
+                    let (lo, hi) = slot_ranges[tid];
+                    {
+                        // SAFETY: w fully written (barrier above); reads only.
+                        let pch = unsafe { ref_slice(&p_raw, lo, hi - lo) };
+                        let wc = unsafe { ref_slice(&w_raw, lo, hi - lo) };
+                        pw_slots.set(tid, blas1::dot(pch, wc));
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 4. master: slot-ordered allreduce of (p, w).
+                    if tid == 0 {
+                        let comm = unsafe { &mut *comm_raw.0 };
+                        let parts: Vec<[f64; 1]> = (0..t).map(|k| [pw_slots.get(k)]).collect();
+                        let pw = comm
+                            .allreduce_sum_ordered(parts)
+                            .expect("hybrid CG: pw allreduce")[0];
+                        shared.set(S_PW, pw);
+                    }
+                    barrier.wait(&mut ws);
+                    let pw = shared.get(S_PW);
+                    if pw <= 0.0 {
+                        // Breakdown: identical pw on every thread of every
+                        // rank; all exit together, master reports after join.
+                        return;
+                    }
+                    let alpha = rz_now / pw;
+                    // -- 5. x += αp; r −= αw; ‖r‖², z = M⁻¹r, (r,z) partials
+                    //    over the slot chunk.
+                    {
+                        // SAFETY: slot chunks are disjoint across threads.
+                        let xc = unsafe { mut_slice(&x_raw, lo, hi - lo) };
+                        let pch = unsafe { ref_slice(&p_raw, lo, hi - lo) };
+                        let wc = unsafe { ref_slice(&w_raw, lo, hi - lo) };
+                        blas1::axpy(alpha, pch, xc);
+                        let rc = unsafe { mut_slice(&r_raw, lo, hi - lo) };
+                        blas1::axpy(-alpha, wc, rc);
+                        rr_slots.set(tid, blas1::sqnorm(rc));
+                        let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                        match inv_diag {
+                            Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                            None => blas1::copy(rc, zc),
+                        }
+                        rz_slots.set(tid, blas1::dot(rc, zc));
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 6. master: slot-ordered allreduce of (‖r‖², (r,z)).
+                    if tid == 0 {
+                        let comm = unsafe { &mut *comm_raw.0 };
+                        let parts: Vec<[f64; 2]> = (0..t)
+                            .map(|k| [rr_slots.get(k), rz_slots.get(k)])
+                            .collect();
+                        let s = comm
+                            .allreduce_sum_ordered(parts)
+                            .expect("hybrid CG: rr/rz allreduce");
+                        shared.set(S_RR, s[0]);
+                        shared.set(S_RZ, s[1]);
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 7. p = z + βp.
+                    let beta = shared.get(S_RZ) / rz_now;
+                    {
+                        let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
+                        let pm = unsafe { mut_slice(&p_raw, lo, hi - lo) };
+                        blas1::aypx(beta, zc, pm);
+                    }
+                },
+            );
+        });
+        let pw = shared.get(S_PW);
+        if pw <= 0.0 {
+            return Ok(SolveStats::new(
+                ConvergedReason::DivergedBreakdown,
+                it,
+                bnorm,
+                rnorm,
+                history,
+            ));
+        }
+        rnorm = shared.get(S_RR).sqrt();
+        rz = shared.get(S_RZ);
+        it += 1;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn cheby_hybrid_inner(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    emin: f64,
+    emax: f64,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    let n = x.local().len();
+    let inv_diag: Option<&[f64]> = match pc.fused() {
+        FusedPc::Jacobi(d) => Some(d),
+        FusedPc::Identity => None,
+        FusedPc::Unfusable => {
+            return Err(Error::Unsupported(
+                "hybrid fused Chebyshev: PC is not fusable".into(),
+            ))
+        }
+    };
+    if let Some(d) = inv_diag {
+        if d.len() != n {
+            return Err(Error::size_mismatch("hybrid fused Chebyshev: inv_diag length"));
+        }
+    }
+
+    // ---- deterministic setup (mirrors chebyshev::solve_inner) -------------
+    let bnorm = hybrid_norm2(b, a.hybrid_plan().expect("checked"), comm)?;
+    let mut history = Vec::new();
+    let theta = 0.5 * (emax + emin);
+    let delta = 0.5 * (emax - emin);
+    let sigma = theta / delta;
+    let mut rho = 1.0 / sigma;
+    let inv_theta = 1.0 / theta;
+
+    let mut r = b.duplicate();
+    let mut z = b.duplicate();
+    let mut p = b.duplicate();
+    crate::ksp::matmult(a, x, &mut r, comm, log)?;
+    r.aypx(-1.0, b)?;
+    let mut rnorm = hybrid_norm2(&r, a.hybrid_plan().unwrap(), comm)?;
+    if cfg.monitor {
+        history.push(rnorm);
+    }
+
+    // ---- split-borrow the operator for the region --------------------------
+    let (diag, off, plan, scratch, scatter) = a.hybrid_split()?;
+    let ctx = diag.ctx().clone();
+    let pool = ctx.pool();
+    let t = pool.nthreads();
+    let part: Vec<(usize, usize)> = plan.partition().to_vec();
+    let seg_ptr: &[usize] = plan.seg_ptr();
+    let slot_ranges: &[(usize, usize)] = plan.slot_ranges();
+    let (gp, gl) = scatter.ghost_raw();
+    let ghost_raw = RawGhost(gp, gl);
+    let bs: &[f64] = b.local().as_slice();
+
+    let x_raw = Raw(x.local_mut().as_mut_slice().as_mut_ptr());
+    let r_raw = Raw(r.local_mut().as_mut_slice().as_mut_ptr());
+    let z_raw = Raw(z.local_mut().as_mut_slice().as_mut_ptr());
+    let p_raw = Raw(p.local_mut().as_mut_slice().as_mut_ptr());
+    let scratch_raw = Raw(scratch.as_mut_ptr());
+    let comm_raw = RawComm(&mut *comm as *mut Comm);
+    let scatter_raw = RawScatter(&mut *scatter as *mut VecScatter);
+
+    let barrier = RegionBarrier::new(t);
+    let rr_slots = ReduceSlots::new(t);
+    let iter_flops = 2.0 * (diag.nnz() + off.nnz()) as f64 + 10.0 * n as f64;
+
+    let mut it = 0usize;
+    let mut first = true;
+    loop {
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
+        }
+        let (pscale, zscale, rho_next) = if first {
+            (0.0, 0.0, rho)
+        } else {
+            let rho_new = 1.0 / (2.0 * sigma - rho);
+            (rho_new * rho, rho_new * 2.0 / delta, rho_new)
+        };
+        let is_first = first;
+        // One fork per rank per iteration; the sends for the fresh x are
+        // posted mid-region right after the x update barrier, then hidden
+        // behind the diagonal partials.
+        log.timed("KSPFusedIter", iter_flops, || {
+            pool.run(|tid| {
+                let mut ws = barrier.waiter();
+                let (lo, hi) = slot_ranges[tid];
+                // -- 1. z = M⁻¹ r; p recurrence; x += p (slot chunk).
+                {
+                    // SAFETY: slot chunks disjoint; r last written under the
+                    // same chunks (previous region phase 4 or setup).
+                    let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                    let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                    match inv_diag {
+                        Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                        None => blas1::copy(rc, zc),
+                    }
+                    let pm = unsafe { mut_slice(&p_raw, lo, hi - lo) };
+                    if is_first {
+                        blas1::copy(zc, pm);
+                        blas1::scal(inv_theta, pm);
+                    } else {
+                        blas1::scal(pscale, pm);
+                        blas1::axpy(zscale, zc, pm);
+                    }
+                    let xc = unsafe { mut_slice(&x_raw, lo, hi - lo) };
+                    blas1::axpy(1.0, pm, xc);
+                }
+                barrier.wait(&mut ws);
+                // -- 2. master posts the ghost sends for the fresh x; all
+                //    threads run the diagonal partials while they fly.
+                if tid == 0 {
+                    // SAFETY: master-only.
+                    let comm = unsafe { &mut *comm_raw.0 };
+                    let sc = unsafe { &mut *scatter_raw.0 };
+                    let xs = unsafe { ref_slice(&x_raw, 0, n) };
+                    sc.begin_local(xs, comm)
+                        .expect("hybrid Chebyshev: scatter begin");
+                    sc.mark_compute_start();
+                }
+                let (rlo, rhi) = part[tid];
+                if rlo < rhi {
+                    let (slo, shi) = (seg_ptr[rlo], seg_ptr[rhi]);
+                    // SAFETY: disjoint row chunks ⇒ disjoint seg windows.
+                    let scr = unsafe { mut_slice(&scratch_raw, slo, shi - slo) };
+                    let xall = unsafe { ref_slice(&x_raw, 0, n) };
+                    plan.diag_partials(diag, xall, rlo, rhi, scr);
+                }
+                if tid == 0 {
+                    let comm = unsafe { &mut *comm_raw.0 };
+                    let sc = unsafe { &mut *scatter_raw.0 };
+                    sc.end(comm).expect("hybrid Chebyshev: scatter end");
+                }
+                barrier.wait(&mut ws);
+                // -- 3. ghost partials + ordered fold → r rows = (A x) rows.
+                if rlo < rhi {
+                    // SAFETY: ghost writes ordered by the barrier.
+                    let ghosts =
+                        unsafe { std::slice::from_raw_parts(ghost_raw.0, ghost_raw.1) };
+                    let (slo, shi) = (seg_ptr[rlo], seg_ptr[rhi]);
+                    let scr = unsafe { ref_slice(&scratch_raw, slo, shi - slo) };
+                    let rrows = unsafe { mut_slice(&r_raw, rlo, rhi - rlo) };
+                    plan.apply_rows(off, ghosts, scr, rlo, rhi, rrows);
+                }
+                barrier.wait(&mut ws);
+                // -- 4. r = b − r; ‖r‖² partial (slot chunks again).
+                {
+                    let rc = unsafe { mut_slice(&r_raw, lo, hi - lo) };
+                    blas1::aypx(-1.0, &bs[lo..hi], rc);
+                    rr_slots.set(tid, blas1::sqnorm(rc));
+                }
+            });
+        });
+        // Master: slot-ordered allreduce of ‖r‖² (after the join — the
+        // trailing reduction needs no in-region consumers). Goes through
+        // the same raw handle the region used so all communicator access
+        // stays on one derivation chain.
+        let parts: Vec<[f64; 1]> = (0..t).map(|k| [rr_slots.get(k)]).collect();
+        // SAFETY: region joined; master-only access.
+        let comm_m = unsafe { &mut *comm_raw.0 };
+        rnorm = comm_m.allreduce_sum_ordered(parts)?[0].sqrt();
+        it += 1;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+        if first {
+            first = false;
+        } else {
+            rho = rho_next;
+        }
+    }
+}
+
+/// Spectral-bound estimation with the same recurrence as
+/// [`crate::ksp::chebyshev::estimate_bounds`] but **slot-ordered
+/// deterministic reductions** and the plan-aware MatMult, so the estimated
+/// interval — and hence the whole Chebyshev history — is bitwise identical
+/// across decompositions of one slot grid.
+pub fn estimate_bounds_hybrid(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    seed_vec: &VecMPI,
+    its: usize,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<(f64, f64)> {
+    let ranges = match a.hybrid_plan() {
+        Some(p) => p.slot_ranges().to_vec(), // owned: `a` is mut-borrowed below
+        None => return Err(Error::not_ready("estimate_bounds_hybrid: no hybrid plan")),
+    };
+    // Same seed, recurrence and safety factors as the plain estimator by
+    // construction — only the reductions are swapped for slot-ordered ones.
+    crate::ksp::chebyshev::power_iteration_bounds(
+        a,
+        pc,
+        seed_vec,
+        its,
+        comm,
+        log,
+        &mut |v, c| slot_norm2_over(v, &ranges, c),
+        &mut |u, w, c| slot_dot_over(u, w, &ranges, c),
+    )
+}
+
+/// Chebyshev with automatic bound estimation, picking the deterministic
+/// hybrid estimator whenever the hybrid path will run (so the runner's
+/// `chebyshev-fused` sweeps are decomposition-invariant end to end).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_chebyshev_auto(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    cfg: &KspConfig,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<SolveStats> {
+    let (emin, emax) = if can_fuse_hybrid(a, pc, b, x, comm) {
+        estimate_bounds_hybrid(a, pc, b, 20, comm, log)?
+    } else {
+        crate::ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?
+    };
+    solve_chebyshev(a, pc, b, x, emin, emax, cfg, comm, log)
+}
+
 /// Chebyshev iteration with fused single-fork iterations, falling back to
 /// [`crate::ksp::chebyshev::solve`] whenever [`can_fuse`] says no. Same
 /// determinism contract as the fused CG.
@@ -295,6 +851,17 @@ pub fn solve_chebyshev(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
+    if can_fuse_hybrid(a, pc, b, x, comm) {
+        if !(emax > emin && emin > 0.0) {
+            return Err(Error::InvalidOption(format!(
+                "Chebyshev needs 0 < emin < emax, got [{emin}, {emax}]"
+            )));
+        }
+        log.begin("KSPSolve");
+        let out = cheby_hybrid_inner(a, pc, b, x, emin, emax, cfg, comm, log);
+        log.end("KSPSolve");
+        return out;
+    }
     if !can_fuse(a, pc, b, x, comm) {
         return crate::ksp::chebyshev::solve(a, pc, b, x, emin, emax, cfg, comm, log);
     }
@@ -618,6 +1185,282 @@ mod tests {
             assert!(stats.converged());
             assert!(max_err(&x, &x_true, &mut c) < 1e-7);
         });
+    }
+
+    // -- hybrid (multi-rank) fused path --------------------------------------
+
+    use crate::ksp::testutil::tridiag_rows;
+    use crate::vec::mpi::Layout;
+
+    /// Build an SPD system on the slot-aligned layout with the hybrid plan
+    /// enabled; b = A·x_true via the plan-aware (deterministic) MatMult, so
+    /// the whole problem is bitwise identical across decompositions.
+    fn hybrid_system(
+        n: usize,
+        threads: usize,
+        c: &mut Comm,
+    ) -> (MatMPIAIJ, VecMPI, VecMPI) {
+        let layout = Layout::slot_aligned(n, c.size(), threads);
+        let (lo, hi) = layout.range(c.rank());
+        let ctx = crate::vec::ctx::ThreadCtx::new(threads);
+        let mut a = MatMPIAIJ::assemble(
+            layout.clone(),
+            layout.clone(),
+            tridiag_rows(n, lo, hi),
+            c,
+            ctx.clone(),
+        )
+        .unwrap();
+        a.enable_hybrid().unwrap();
+        let xs: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.05).sin() + 0.3).collect();
+        let x_true = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+        let mut b = VecMPI::new(layout, c.rank(), ctx);
+        a.mult(&x_true, &mut b, c).unwrap();
+        (a, x_true, b)
+    }
+
+    /// Run a hybrid fused solve at `ranks × threads`; return the residual
+    /// history and the solution, both as bit patterns.
+    fn hybrid_cg_bits(
+        n: usize,
+        ranks: usize,
+        threads: usize,
+        jacobi: bool,
+    ) -> (Vec<u64>, Vec<u64>) {
+        let outs = World::run(ranks, move |mut c| {
+            let (mut a, _xt, b) = hybrid_system(n, threads, &mut c);
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                monitor: true,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let mut x = b.duplicate();
+            let stats = if jacobi {
+                let pc = PcJacobi::setup(&a, &mut c).unwrap();
+                assert!(can_fuse_hybrid(&a, &pc, &b, &x, &c));
+                solve(&mut a, &pc, &b, &mut x, &cfg, &mut c, &log).unwrap()
+            } else {
+                assert!(can_fuse_hybrid(&a, &PcNone, &b, &x, &c));
+                solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap()
+            };
+            assert!(stats.converged(), "{:?}", stats.reason);
+            let hist: Vec<u64> = stats.history.iter().map(|v| v.to_bits()).collect();
+            let xg: Vec<u64> = x
+                .gather_all(&mut c)
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            (hist, xg)
+        });
+        // every rank reports the identical history
+        for o in &outs {
+            assert_eq!(o.0, outs[0].0, "ranks disagree on the history");
+        }
+        outs.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn hybrid_cg_residual_history_is_decomposition_invariant() {
+        // The acceptance criterion: cg-fused at 2×2 is bitwise identical to
+        // 1×4 and 4×1 on the same global problem — history AND solution.
+        let n = 257;
+        for jacobi in [false, true] {
+            let h14 = hybrid_cg_bits(n, 1, 4, jacobi);
+            let h22 = hybrid_cg_bits(n, 2, 2, jacobi);
+            let h41 = hybrid_cg_bits(n, 4, 1, jacobi);
+            assert!(!h14.0.is_empty());
+            assert_eq!(h14.0, h22.0, "history 1×4 vs 2×2 (jacobi={jacobi})");
+            assert_eq!(h22.0, h41.0, "history 2×2 vs 4×1 (jacobi={jacobi})");
+            assert_eq!(h14.1, h22.1, "solution 1×4 vs 2×2 (jacobi={jacobi})");
+            assert_eq!(h22.1, h41.1, "solution 2×2 vs 4×1 (jacobi={jacobi})");
+        }
+    }
+
+    #[test]
+    fn hybrid_cg_converges_to_truth() {
+        World::run(2, |mut c| {
+            let (mut a, x_true, b) = hybrid_system(200, 2, &mut c);
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let mut x = b.duplicate();
+            let stats = solve(&mut a, &PcNone, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged(), "{:?}", stats.reason);
+            assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn hybrid_cg_is_one_fork_per_iteration_with_overlap() {
+        World::run(2, |mut c| {
+            let (mut a, _xt, b) = hybrid_system(160, 2, &mut c);
+            let ctx = a.diag_block().ctx().clone();
+            let run = |max_it: usize, a: &mut MatMPIAIJ, c: &mut Comm| -> u64 {
+                let cfg = KspConfig {
+                    rtol: 1e-300,
+                    atol: 0.0,
+                    max_it,
+                    ..Default::default()
+                };
+                let log = EventLog::new();
+                let mut x = b.duplicate();
+                let before = ctx.pool().fork_count();
+                let stats = solve(a, &PcNone, &b, &mut x, &cfg, c, &log).unwrap();
+                assert_eq!(stats.iterations, max_it, "must run to max_it");
+                ctx.pool().fork_count() - before
+            };
+            let (g0, _) = a.scatter().ghost_raw();
+            let f3 = run(3, &mut a, &mut c);
+            let f8 = run(8, &mut a, &mut c);
+            assert_eq!(f8 - f3, 5, "hybrid fused: exactly 1 fork per iteration");
+            // Overlap regression: the ghost receives completed after the
+            // diagonal compute started on every iteration, and the ghost
+            // buffer was never reallocated.
+            let o = *a.scatter().overlap_stats();
+            assert!(o.exchanges > 0);
+            assert!(
+                o.overlap_seconds > 0.0,
+                "nonzero comm/compute overlap window required"
+            );
+            assert!(o.window_seconds >= o.overlap_seconds);
+            let (g1, _) = a.scatter().ghost_raw();
+            assert_eq!(g0, g1, "ghost buffer reallocated across iterations");
+        });
+    }
+
+    #[test]
+    fn hybrid_chebyshev_history_is_decomposition_invariant() {
+        let n = 150;
+        let run = |ranks: usize, threads: usize| -> Vec<u64> {
+            let outs = World::run(ranks, move |mut c| {
+                let (mut a, x_true, b) = hybrid_system(n, threads, &mut c);
+                let pc = PcJacobi::setup(&a, &mut c).unwrap();
+                let cfg = KspConfig {
+                    rtol: 1e-8,
+                    max_it: 50_000,
+                    monitor: true,
+                    ..Default::default()
+                };
+                let log = EventLog::new();
+                let mut x = b.duplicate();
+                let stats =
+                    solve_chebyshev_auto(&mut a, &pc, &b, &mut x, &cfg, &mut c, &log).unwrap();
+                assert!(stats.converged(), "{:?}", stats.reason);
+                assert!(max_err(&x, &x_true, &mut c) < 1e-5);
+                stats.history.iter().map(|v| v.to_bits()).collect::<Vec<u64>>()
+            });
+            for o in &outs {
+                assert_eq!(o, &outs[0]);
+            }
+            outs.into_iter().next().unwrap()
+        };
+        let h14 = run(1, 4);
+        let h22 = run(2, 2);
+        let h41 = run(4, 1);
+        assert!(!h14.is_empty());
+        assert_eq!(h14, h22, "chebyshev 1×4 vs 2×2");
+        assert_eq!(h22, h41, "chebyshev 2×2 vs 4×1");
+    }
+
+    #[test]
+    fn hybrid_falls_back_on_unfusable_pc() {
+        World::run(2, |mut c| {
+            let (mut a, x_true, b) = hybrid_system(120, 2, &mut c);
+            let pc = crate::pc::bjacobi::PcBJacobi::setup_ilu0(&a).unwrap();
+            let x = b.duplicate();
+            assert!(!can_fuse_hybrid(&a, &pc, &b, &x, &c));
+            let log = EventLog::new();
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            let mut x = b.duplicate();
+            let stats = solve(&mut a, &pc, &b, &mut x, &cfg, &mut c, &log).unwrap();
+            assert!(stats.converged());
+            assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn hybrid_reductions_match_serial_slot_fold() {
+        // Property: hybrid_dot / hybrid_norm2 across any ranks × threads
+        // decomposition equal the serial slot-ordered fold of the global
+        // vectors, bitwise.
+        use crate::ptest::{check, forall, PtConfig};
+        use crate::util::rng::XorShift64;
+        use crate::vec::mpi::SlotGrid;
+        forall(
+            &PtConfig { cases: 10, ..Default::default() },
+            |rng: &mut XorShift64| {
+                let ranks = rng.range(1, 5);
+                let threads = rng.range(1, 4);
+                let n = rng.range(ranks * threads, 300);
+                let seed = rng.below(1 << 30) as u64;
+                (ranks, threads, n, seed)
+            },
+            |&(ranks, threads, n, seed)| {
+                let outs = World::run(ranks, move |mut c| {
+                    let layout = Layout::slot_aligned(n, c.size(), threads);
+                    let (lo, hi) = layout.range(c.rank());
+                    let ctx = crate::vec::ctx::ThreadCtx::new(threads);
+                    // any square matrix on the layout gives us the plan
+                    let mut a = MatMPIAIJ::assemble(
+                        layout.clone(),
+                        layout.clone(),
+                        (lo..hi).map(|i| (i, i, 1.0)).collect(),
+                        &mut c,
+                        ctx.clone(),
+                    )
+                    .unwrap();
+                    a.enable_hybrid().unwrap();
+                    let mut rng = XorShift64::new(seed);
+                    let all_u: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                    let all_v: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                    let u = VecMPI::from_local_slice(
+                        layout.clone(),
+                        c.rank(),
+                        &all_u[lo..hi],
+                        ctx.clone(),
+                    )
+                    .unwrap();
+                    let v =
+                        VecMPI::from_local_slice(layout.clone(), c.rank(), &all_v[lo..hi], ctx)
+                            .unwrap();
+                    let plan = a.hybrid_plan().unwrap();
+                    let d = hybrid_dot(&u, &v, plan, &mut c).unwrap();
+                    let nn = hybrid_norm2(&u, plan, &mut c).unwrap();
+                    (d.to_bits(), nn.to_bits())
+                });
+                // serial slot-ordered reference on the full vectors
+                let grid = SlotGrid::new(n, ranks * threads);
+                let mut rng = XorShift64::new(seed);
+                let all_u: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                let all_v: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                let mut dref = 0.0f64;
+                let mut nref = 0.0f64;
+                for s in 0..grid.slots() {
+                    let (lo, hi) = grid.range(s);
+                    dref += blas1::dot(&all_u[lo..hi], &all_v[lo..hi]);
+                    nref += blas1::sqnorm(&all_u[lo..hi]);
+                }
+                let nref = nref.sqrt();
+                for (db, nb) in outs {
+                    check(
+                        db == dref.to_bits(),
+                        format!("dot bits differ at {ranks}×{threads}, n={n}"),
+                    )?;
+                    check(
+                        nb == nref.to_bits(),
+                        format!("norm bits differ at {ranks}×{threads}, n={n}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod shell;
 pub use baij::{BaijBuilder, MatSeqBAIJ};
 pub use csr::{MatBuilder, MatSeqAIJ};
 pub use dense::MatSeqDense;
-pub use mpiaij::MatMPIAIJ;
+pub use mpiaij::{HybridPlan, HybridSeg, MatMPIAIJ};
 pub use shell::MatShell;

@@ -23,11 +23,159 @@ use crate::comm::endpoint::Comm;
 use crate::comm::message::{Tag, RESERVED_TAG_BASE};
 use crate::error::{Error, Result};
 use crate::mat::csr::{MatBuilder, MatSeqAIJ};
+use crate::thread::schedule::nnz_balanced_chunks;
 use crate::vec::ctx::ThreadCtx;
-use crate::vec::mpi::{Layout, VecMPI};
+use crate::vec::mpi::{Layout, SlotGrid, VecMPI};
 use crate::vec::scatter::VecScatter;
 
 const T_STASH: Tag = RESERVED_TAG_BASE + 32;
+
+/// Raw base pointer shared across pool threads; all access goes through
+/// disjoint per-thread ranges under the row partition.
+struct RawF64(*mut f64);
+unsafe impl Send for RawF64 {}
+unsafe impl Sync for RawF64 {}
+
+/// One slot-block of a row under a [`HybridPlan`]: a maximal run of the
+/// row's nonzeros whose global columns fall in a single slot of the grid.
+/// `lo..hi` indexes the owning block's CSR arrays (`off` selects diagonal
+/// vs off-diagonal block). Segments of a row are stored in ascending global
+/// column (= ascending slot) order.
+#[derive(Debug, Clone, Copy)]
+pub struct HybridSeg {
+    /// True: indexes the off-diagonal (ghost) block; false: the diagonal.
+    pub off: bool,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// The decomposition-invariant execution plan for hybrid fused MatMult
+/// (DESIGN.md §5). Row sums are computed as per-slot partial sums folded in
+/// ascending slot order, so `y = A·x` is **bitwise identical for every
+/// `ranks × threads` factorisation with the same slot grid** — the
+/// diagonal/off-diagonal split may differ per rank count, but the slot cuts
+/// (and hence the fp grouping) never do. The diagonal-block partials can be
+/// computed while ghost messages are in flight (phase A), the ghost
+/// partials and the ordered fold after `VecScatter::end` (phase B).
+#[derive(Debug, Clone)]
+pub struct HybridPlan {
+    grid: SlotGrid,
+    /// Global slot id of this rank's first local slot (`rank · threads`).
+    first_slot: usize,
+    /// Local slots (= threads per rank).
+    nslots_local: usize,
+    /// Segment list start per local row (`rows + 1` entries).
+    seg_ptr: Vec<usize>,
+    segs: Vec<HybridSeg>,
+    /// nnz-balanced row partition over the *combined* (diag + off) nonzero
+    /// counts — one chunk per pool thread for both phases.
+    part: Vec<(usize, usize)>,
+    /// Per local slot: the slot's sub-range of the rank-local index space
+    /// (for slot-chunked vector kernels and reductions).
+    slot_ranges: Vec<(usize, usize)>,
+}
+
+impl HybridPlan {
+    pub fn grid(&self) -> &SlotGrid {
+        &self.grid
+    }
+
+    pub fn first_slot(&self) -> usize {
+        self.first_slot
+    }
+
+    /// Local slot count (threads per rank the plan was built for).
+    pub fn nslots_local(&self) -> usize {
+        self.nslots_local
+    }
+
+    /// The nnz-balanced row partition (one chunk per thread).
+    pub fn partition(&self) -> &[(usize, usize)] {
+        &self.part
+    }
+
+    pub fn seg_ptr(&self) -> &[usize] {
+        &self.seg_ptr
+    }
+
+    pub fn nsegs(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Local index sub-range of local slot `j` (`0 ≤ j < nslots_local`).
+    pub fn local_slot_range(&self, j: usize) -> (usize, usize) {
+        self.slot_ranges[j]
+    }
+
+    /// All local slot ranges (one per thread, rank-local coordinates).
+    pub fn slot_ranges(&self) -> &[(usize, usize)] {
+        &self.slot_ranges
+    }
+
+    /// Phase A: diagonal-block slot partials for rows `[rlo, rhi)`, while
+    /// ghost messages are in flight. `partials` is the scratch window for
+    /// exactly these rows' segments (`seg_ptr[rhi] − seg_ptr[rlo]` slots);
+    /// off-block segment entries are left untouched.
+    pub fn diag_partials(
+        &self,
+        diag: &MatSeqAIJ,
+        x: &[f64],
+        rlo: usize,
+        rhi: usize,
+        partials: &mut [f64],
+    ) {
+        let base = self.seg_ptr[rlo];
+        debug_assert_eq!(partials.len(), self.seg_ptr[rhi] - base);
+        let vals = diag.vals();
+        let cols = diag.col_idx();
+        for s in base..self.seg_ptr[rhi] {
+            let seg = self.segs[s];
+            if !seg.off {
+                let mut acc = 0.0;
+                for k in seg.lo..seg.hi {
+                    acc += vals[k] * x[cols[k]];
+                }
+                partials[s - base] = acc;
+            }
+        }
+    }
+
+    /// Phase B: ghost-block partials plus the ordered per-row fold for rows
+    /// `[rlo, rhi)`: `y[i−rlo] = Σ_slots partial(i, slot)`, ascending slot
+    /// order, one accumulator — the fold whose grouping is decomposition-
+    /// invariant. `partials` is the same scratch window phase A filled.
+    pub fn apply_rows(
+        &self,
+        off: &MatSeqAIJ,
+        ghosts: &[f64],
+        partials: &[f64],
+        rlo: usize,
+        rhi: usize,
+        y: &mut [f64],
+    ) {
+        let base = self.seg_ptr[rlo];
+        debug_assert_eq!(y.len(), rhi - rlo);
+        let ovals = off.vals();
+        let ocols = off.col_idx();
+        for i in rlo..rhi {
+            let mut yi = 0.0;
+            for s in self.seg_ptr[i]..self.seg_ptr[i + 1] {
+                let seg = self.segs[s];
+                let p = if seg.off {
+                    let mut acc = 0.0;
+                    for k in seg.lo..seg.hi {
+                        acc += ovals[k] * ghosts[ocols[k]];
+                    }
+                    acc
+                } else {
+                    partials[s - base]
+                };
+                yi += p;
+            }
+            y[i - rlo] = yi;
+        }
+    }
+}
 
 /// The distributed CSR matrix.
 pub struct MatMPIAIJ {
@@ -42,6 +190,13 @@ pub struct MatMPIAIJ {
     garray: Vec<usize>,
     /// Ghost exchange plan for MatMult.
     scatter: VecScatter,
+    /// The slot-segmented hybrid execution plan (None until
+    /// [`MatMPIAIJ::enable_hybrid`]).
+    hybrid: Option<HybridPlan>,
+    /// Per-segment partial-sum scratch for the hybrid phases (lives outside
+    /// the plan so the fused region can borrow plan-shared and scratch-mut
+    /// simultaneously).
+    hybrid_scratch: Vec<f64>,
 }
 
 impl MatMPIAIJ {
@@ -133,7 +288,144 @@ impl MatMPIAIJ {
             b_off,
             garray,
             scatter,
+            hybrid: None,
+            hybrid_scratch: Vec::new(),
         })
+    }
+
+    /// Build the slot-segmented [`HybridPlan`] for this matrix, keyed to a
+    /// `ranks × threads` slot grid with `ranks = layout.size()` and
+    /// `threads = ctx.nthreads()`. Requires a square operator on a
+    /// slot-aligned layout ([`Layout::slot_aligned`]); errors otherwise so
+    /// callers can fall back to the plain path. Idempotent.
+    pub fn enable_hybrid(&mut self) -> Result<()> {
+        let t = self.a_diag.ctx().nthreads();
+        let size = self.row_layout.size();
+        if self.row_layout != self.col_layout {
+            return Err(Error::Unsupported(
+                "hybrid plan: operator must be square with row layout == col layout".into(),
+            ));
+        }
+        let grid = SlotGrid::new(self.col_layout.global_len(), size * t);
+        if grid.rank_layout(t) != self.col_layout {
+            return Err(Error::InvalidOption(format!(
+                "hybrid plan: layout is not slot-aligned for {size} ranks × {t} threads \
+                 (build it with Layout::slot_aligned)"
+            )));
+        }
+        if let Some(p) = &self.hybrid {
+            if p.grid == grid {
+                return Ok(()); // already built for this decomposition
+            }
+        }
+        let (col_lo, _) = self.col_layout.range(self.rank);
+        let rows = self.a_diag.rows();
+        let mut seg_ptr = Vec::with_capacity(rows + 1);
+        seg_ptr.push(0usize);
+        let mut segs: Vec<HybridSeg> = Vec::new();
+        let mut comb = Vec::with_capacity(rows + 1);
+        comb.push(0usize);
+        for i in 0..rows {
+            let (dc, _) = self.a_diag.row(i);
+            let (oc, _) = self.b_off.row(i);
+            let drow_base = self.a_diag.row_ptr()[i];
+            let orow_base = self.b_off.row_ptr()[i];
+            // Merge the two sorted runs by global column; a maximal same-slot
+            // run is always block-pure (a slot's columns belong to one rank).
+            let mut di = 0usize;
+            let mut oi = 0usize;
+            while di < dc.len() || oi < oc.len() {
+                let dg = dc.get(di).map(|&c| col_lo + c);
+                let og = oc.get(oi).map(|&k| self.garray[k]);
+                let take_off = match (dg, og) {
+                    (Some(d), Some(o)) => o < d,
+                    (None, Some(_)) => true,
+                    _ => false,
+                };
+                if take_off {
+                    let (_, s_hi) = grid.range(grid.slot_of(og.unwrap()));
+                    let start = oi;
+                    while oi < oc.len() && self.garray[oc[oi]] < s_hi {
+                        oi += 1;
+                    }
+                    segs.push(HybridSeg {
+                        off: true,
+                        lo: orow_base + start,
+                        hi: orow_base + oi,
+                    });
+                } else {
+                    let (_, s_hi) = grid.range(grid.slot_of(dg.unwrap()));
+                    let start = di;
+                    while di < dc.len() && col_lo + dc[di] < s_hi {
+                        di += 1;
+                    }
+                    segs.push(HybridSeg {
+                        off: false,
+                        lo: drow_base + start,
+                        hi: drow_base + di,
+                    });
+                }
+            }
+            seg_ptr.push(segs.len());
+            comb.push(comb[i] + dc.len() + oc.len());
+        }
+        let part = nnz_balanced_chunks(&comb, t);
+        let first_slot = self.rank * t;
+        let slot_ranges = (0..t)
+            .map(|j| {
+                let (glo, ghi) = grid.range(first_slot + j);
+                (glo - col_lo, ghi - col_lo)
+            })
+            .collect();
+        let nsegs = segs.len();
+        self.hybrid = Some(HybridPlan {
+            grid,
+            first_slot,
+            nslots_local: t,
+            seg_ptr,
+            segs,
+            part,
+            slot_ranges,
+        });
+        self.hybrid_scratch = vec![0.0; nsegs];
+        Ok(())
+    }
+
+    /// The hybrid plan, if built.
+    pub fn hybrid_plan(&self) -> Option<&HybridPlan> {
+        self.hybrid.as_ref()
+    }
+
+    pub fn hybrid_enabled(&self) -> bool {
+        self.hybrid.is_some()
+    }
+
+    /// Split-borrow everything the fused hybrid region needs in one call:
+    /// the two sequential blocks (shared), the plan (shared), the per-
+    /// segment scratch and the scatter (both exclusive). Errors until
+    /// [`MatMPIAIJ::enable_hybrid`] has run.
+    #[allow(clippy::type_complexity)]
+    pub fn hybrid_split(
+        &mut self,
+    ) -> Result<(
+        &MatSeqAIJ,
+        &MatSeqAIJ,
+        &HybridPlan,
+        &mut Vec<f64>,
+        &mut VecScatter,
+    )> {
+        match self.hybrid.as_ref() {
+            Some(plan) => Ok((
+                &self.a_diag,
+                &self.b_off,
+                plan,
+                &mut self.hybrid_scratch,
+                &mut self.scatter,
+            )),
+            None => Err(Error::not_ready(
+                "hybrid plan not built — call enable_hybrid() first",
+            )),
+        }
     }
 
     pub fn row_layout(&self) -> &Layout {
@@ -198,17 +490,103 @@ impl MatMPIAIJ {
     }
 
     /// Distributed MatMult `y = A·x` with communication/computation overlap.
+    /// With a [`HybridPlan`] enabled this runs the slot-segmented
+    /// (decomposition-invariant) kernels; otherwise the plain diag/off split.
     pub fn mult(&mut self, x: &VecMPI, y: &mut VecMPI, comm: &mut Comm) -> Result<()> {
         self.check_vecs(x, y)?;
-        // 1. Post ghost sends.
-        self.scatter.begin(x, comm)?;
-        // 2. Diagonal product while data is in flight (threaded).
-        self.a_diag.mult(x.local(), y.local_mut())?;
-        // 3. Complete receives; 4. off-diagonal product (threaded).
-        let ghosts = self.scatter.end(comm)?;
-        self.b_off
-            .mult_add_slices(&ghosts, y.local_mut().as_mut_slice())?;
-        Ok(())
+        self.mult_begin(x, comm)?;
+        self.mult_overlap(x, y)?;
+        self.mult_end(y, comm)
+    }
+
+    /// Split-phase MatMult, step 1: post the ghost sends (non-blocking).
+    /// Everything until [`MatMPIAIJ::mult_end`] overlaps with the exchange.
+    pub fn mult_begin(&mut self, x: &VecMPI, comm: &mut Comm) -> Result<()> {
+        if x.layout() != &self.col_layout {
+            return Err(Error::size_mismatch("MatMult begin: x layout"));
+        }
+        self.scatter.begin(x, comm)
+    }
+
+    /// Split-phase MatMult, step 2: the local (diagonal-block) compute that
+    /// hides the in-flight exchange. Plain path: `y_local = A_diag · x`.
+    /// Hybrid path: per-(row, slot) diagonal partials into the plan scratch.
+    /// Starts the overlap clock here — `OverlapStats::overlap_seconds` means
+    /// "local compute while messages were in flight", not begin→end idle.
+    pub fn mult_overlap(&mut self, x: &VecMPI, y: &mut VecMPI) -> Result<()> {
+        if x.layout() != &self.col_layout || x.local().len() != self.a_diag.cols() {
+            return Err(Error::size_mismatch("MatMult overlap: x layout/rank"));
+        }
+        if y.layout() != &self.row_layout || y.local().len() != self.a_diag.rows() {
+            return Err(Error::size_mismatch("MatMult overlap: y layout/rank"));
+        }
+        self.scatter.mark_compute_start();
+        match self.hybrid.as_ref() {
+            Some(plan) => {
+                let scratch = RawF64(self.hybrid_scratch.as_mut_ptr());
+                let diag = &self.a_diag;
+                let xs = x.local().as_slice();
+                let ctx = diag.ctx().clone();
+                let t = plan.part.len();
+                ctx.for_range_paging(t, |tid, _l, _h| {
+                    let (rlo, rhi) = plan.part[tid];
+                    if rlo < rhi {
+                        let (slo, shi) = (plan.seg_ptr[rlo], plan.seg_ptr[rhi]);
+                        // SAFETY: per-thread row chunks are disjoint, so the
+                        // seg_ptr windows into the scratch are too.
+                        let pw = unsafe {
+                            std::slice::from_raw_parts_mut(scratch.0.add(slo), shi - slo)
+                        };
+                        plan.diag_partials(diag, xs, rlo, rhi, pw);
+                    }
+                });
+                Ok(())
+            }
+            None => self.a_diag.mult(x.local(), y.local_mut()),
+        }
+    }
+
+    /// Split-phase MatMult, step 3: complete the receives (into the
+    /// persistent ghost buffer) and apply the ghost couplings. Hybrid path:
+    /// ghost partials plus the ascending-slot ordered fold per row.
+    pub fn mult_end(&mut self, y: &mut VecMPI, comm: &mut Comm) -> Result<()> {
+        // Checked here too (not only in mult()): the hybrid arm below
+        // writes y through a raw pointer sized by the plan's row partition,
+        // so a mis-sized y from a direct split-phase caller must be
+        // rejected before the unsafe block. Layout equality alone is not
+        // enough — on uneven layouts a vector built for another rank has
+        // the same layout but a shorter local buffer, hence the explicit
+        // local-length check.
+        if y.layout() != &self.row_layout || y.local().len() != self.a_diag.rows() {
+            return Err(Error::size_mismatch("MatMult end: y layout/rank"));
+        }
+        match self.hybrid.as_ref() {
+            Some(plan) => {
+                let ghosts = self.scatter.end(comm)?;
+                let scratch: &[f64] = &self.hybrid_scratch;
+                let off = &self.b_off;
+                let yr = RawF64(y.local_mut().as_mut_slice().as_mut_ptr());
+                let ctx = off.ctx().clone();
+                let t = plan.part.len();
+                ctx.for_range_paging(t, |tid, _l, _h| {
+                    let (rlo, rhi) = plan.part[tid];
+                    if rlo < rhi {
+                        let (slo, shi) = (plan.seg_ptr[rlo], plan.seg_ptr[rhi]);
+                        // SAFETY: disjoint row chunks.
+                        let yc = unsafe {
+                            std::slice::from_raw_parts_mut(yr.0.add(rlo), rhi - rlo)
+                        };
+                        plan.apply_rows(off, ghosts, &scratch[slo..shi], rlo, rhi, yc);
+                    }
+                });
+                Ok(())
+            }
+            None => {
+                let ghosts = self.scatter.end(comm)?;
+                self.b_off
+                    .mult_add_slices(ghosts, y.local_mut().as_mut_slice())
+            }
+        }
     }
 
     /// Flops of one MatMult on this rank (2·nnz).
@@ -453,6 +831,162 @@ mod tests {
                 assert!(close(*a, *b, 1e-12).is_ok());
             }
         }
+    }
+
+    /// Laplacian plus deterministic long-range couplings so rows straddle
+    /// several slots of the hybrid grid.
+    fn wide_rows(n: usize, lo: usize, hi: usize) -> Vec<(usize, usize, f64)> {
+        let mut es = laplacian_rows(n, lo, hi);
+        for i in lo..hi {
+            es.push((i, (i * 7 + 13) % n, 0.01 + (i % 5) as f64 * 0.003));
+            es.push((i, (i * 3 + n / 2) % n, -0.02));
+        }
+        es
+    }
+
+    fn hybrid_mult_bits(n: usize, ranks: usize, threads: usize) -> Vec<u64> {
+        let outs = World::run(ranks, move |mut c| {
+            let layout = Layout::slot_aligned(n, c.size(), threads);
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(threads);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                wide_rows(n, lo, hi),
+                &mut c,
+                ctx.clone(),
+            )
+            .unwrap();
+            a.enable_hybrid().unwrap();
+            let xs: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.1).sin() + 0.2).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            let mut y = VecMPI::new(layout, c.rank(), ctx);
+            a.mult(&x, &mut y, &mut c).unwrap();
+            y.gather_all(&mut c).unwrap()
+        });
+        outs[0].iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn hybrid_mult_is_decomposition_invariant_bitwise() {
+        // The tentpole invariant: y = A·x computed via the slot-segmented
+        // plan is bitwise identical for every ranks × threads factorisation
+        // of the same slot grid — 1×4, 2×2, 4×1 (G = 4) and 1×2, 2×1
+        // (G = 2).
+        let n = 101;
+        let y14 = hybrid_mult_bits(n, 1, 4);
+        let y22 = hybrid_mult_bits(n, 2, 2);
+        let y41 = hybrid_mult_bits(n, 4, 1);
+        assert_eq!(y14, y22, "1×4 vs 2×2");
+        assert_eq!(y22, y41, "2×2 vs 4×1");
+        let y12 = hybrid_mult_bits(n, 1, 2);
+        let y21 = hybrid_mult_bits(n, 2, 1);
+        assert_eq!(y12, y21, "1×2 vs 2×1");
+    }
+
+    #[test]
+    fn hybrid_mult_matches_plain_mult_values() {
+        // Same product, different fp grouping: results agree to rounding.
+        let n = 90;
+        let outs = World::run(3, move |mut c| {
+            let layout = Layout::slot_aligned(n, c.size(), 2);
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let build = |c: &mut Comm| {
+                MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout.clone(),
+                    wide_rows(n, lo, hi),
+                    c,
+                    ctx.clone(),
+                )
+                .unwrap()
+            };
+            let xs: Vec<f64> = (lo..hi).map(|i| 1.0 + (i % 7) as f64 * 0.25).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            let mut plain = build(&mut c);
+            let mut y1 = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+            plain.mult(&x, &mut y1, &mut c).unwrap();
+            let mut hybrid = build(&mut c);
+            hybrid.enable_hybrid().unwrap();
+            assert!(hybrid.hybrid_enabled());
+            let mut y2 = VecMPI::new(layout.clone(), c.rank(), ctx);
+            hybrid.mult(&x, &mut y2, &mut c).unwrap();
+            (
+                y1.gather_all(&mut c).unwrap(),
+                y2.gather_all(&mut c).unwrap(),
+            )
+        });
+        for (y1, y2) in outs {
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!(close(*a, *b, 1e-12).is_ok(), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_plan_requires_slot_aligned_layout() {
+        World::run(2, |mut c| {
+            // Layout::split(10, 2) = (5, 5) but the 2×2 grid groups to
+            // (6, 4): enable must fail cleanly, and the matrix still works.
+            let layout = Layout::split(10, 2);
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                laplacian_rows(10, lo, hi),
+                &mut c,
+                ctx.clone(),
+            )
+            .unwrap();
+            assert!(a.enable_hybrid().is_err());
+            assert!(!a.hybrid_enabled());
+            let x = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+            let mut y = VecMPI::new(layout, c.rank(), ctx);
+            a.mult(&x, &mut y, &mut c).unwrap();
+        });
+    }
+
+    #[test]
+    fn split_phase_mult_overlap_accounting() {
+        // Drive mult_begin / mult_overlap / mult_end directly: ghost
+        // receives complete after the overlapped compute started (nonzero
+        // overlap window) and the ghost buffer is never reallocated.
+        let n = 64;
+        World::run(2, move |mut c| {
+            let layout = Layout::slot_aligned(n, c.size(), 2);
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                wide_rows(n, lo, hi),
+                &mut c,
+                ctx.clone(),
+            )
+            .unwrap();
+            a.enable_hybrid().unwrap();
+            let xs: Vec<f64> = (lo..hi).map(|i| i as f64).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            let mut y = VecMPI::new(layout, c.rank(), ctx);
+            let (g0, _) = a.scatter().ghost_raw();
+            for _ in 0..10 {
+                a.mult_begin(&x, &mut c).unwrap();
+                a.mult_overlap(&x, &mut y).unwrap();
+                a.mult_end(&mut y, &mut c).unwrap();
+            }
+            let o = *a.scatter().overlap_stats();
+            assert_eq!(o.exchanges, 10);
+            assert!(o.msgs_total >= 10, "one neighbour message per exchange");
+            assert!(
+                o.overlap_seconds > 0.0,
+                "receives must complete after the diag compute started"
+            );
+            assert!(o.window_seconds >= o.overlap_seconds);
+            let (g1, _) = a.scatter().ghost_raw();
+            assert_eq!(g0, g1, "ghost buffer reallocated across iterations");
+        });
     }
 
     #[test]

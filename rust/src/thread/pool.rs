@@ -176,11 +176,26 @@ impl Pool {
     /// Fork-join: run `f(tid)` on every thread (master runs tid 0).
     /// The parallel-region primitive all higher-level loops build on.
     pub fn run<F: Fn(usize) + Sync>(&self, f: F) {
+        self.run_posted(|| {}, f)
+    }
+
+    /// [`Pool::run`] with a master-side `post` hook executed **after the
+    /// workers have been dispatched but before the master joins the region
+    /// as thread 0**. This is the region-entry shape of the fused hybrid
+    /// solvers: `post` posts the ghost sends (`VecScatter::begin`), so the
+    /// workers' diagonal-block SpMV starts concurrently with the master
+    /// still packing messages — communication is in flight for the whole
+    /// parallel phase, not just from the master's first instruction.
+    ///
+    /// Counts as one fork. On a single-thread pool `post` simply runs
+    /// before `f(0)`.
+    pub fn run_posted<P: FnOnce(), F: Fn(usize) + Sync>(&self, post: P, f: F) {
         self.forks.fetch_add(1, Ordering::Relaxed);
         // Discard any stale poison from a region whose master panicked
         // before observing it (that panic already reached the caller).
         self.poisoned.store(false, Ordering::Release);
         if self.nthreads == 1 {
+            post();
             f(0);
             return;
         }
@@ -223,6 +238,9 @@ impl Pool {
                 panic!("mmpetsc pool: a worker thread died (channel closed)");
             }
         }
+        // Workers are live; the master-side hook (ghost-send posting) runs
+        // concurrently with their first phase, then the master joins in.
+        post();
         f(0);
         drop(join); // the normal-path join barrier
         if self.poisoned.swap(false, Ordering::AcqRel) {
@@ -561,6 +579,34 @@ mod tests {
         let s = Pool::serial();
         s.run(|_| {});
         assert_eq!(s.fork_count(), 1);
+    }
+
+    #[test]
+    fn run_posted_hook_runs_once_before_master_joins() {
+        for t in [1usize, 4] {
+            let pool = Pool::new(t);
+            let posted = AtomicU64::new(0);
+            let master_saw_post = AtomicU64::new(0);
+            let hits = AtomicU64::new(0);
+            let before = pool.fork_count();
+            pool.run_posted(
+                || {
+                    posted.fetch_add(1, Ordering::SeqCst);
+                },
+                |tid| {
+                    hits.fetch_or(1 << tid, Ordering::Relaxed);
+                    if tid == 0 {
+                        // the hook is sequenced before the master's region body
+                        master_saw_post
+                            .store(posted.load(Ordering::SeqCst), Ordering::SeqCst);
+                    }
+                },
+            );
+            assert_eq!(posted.load(Ordering::SeqCst), 1, "post runs exactly once");
+            assert_eq!(master_saw_post.load(Ordering::SeqCst), 1);
+            assert_eq!(hits.load(Ordering::Relaxed), (1u64 << t) - 1);
+            assert_eq!(pool.fork_count() - before, 1, "one fork");
+        }
     }
 
     #[test]

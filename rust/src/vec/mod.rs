@@ -15,6 +15,6 @@ pub mod scatter;
 
 pub use ctx::ThreadCtx;
 pub use is::IndexSet;
-pub use mpi::{Layout, VecMPI};
+pub use mpi::{Layout, SlotGrid, VecMPI};
 pub use scatter::VecScatter;
 pub use seq::VecSeq;

@@ -82,6 +82,77 @@ impl Layout {
     }
 }
 
+/// The **slot grid**: a refinement of a [`Layout`] into `ranks × threads`
+/// contiguous index slots — the unit the hybrid fused execution layer
+/// ([`crate::ksp::fused`]) keys every floating-point fold to.
+///
+/// A `ranks × threads` decomposition with the same *total* slot count
+/// `G = ranks·threads` produces the **same** grid: slot boundaries come from
+/// the `G`-way even split of the global length, never from the rank split.
+/// Partial sums computed per slot and folded in ascending slot order
+/// ("rank-then-thread order", since each rank owns a contiguous slot run)
+/// are therefore bitwise identical for 1×4, 2×2 and 4×1 of the same global
+/// problem — the decomposition-invariance contract DESIGN.md §5 argues.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotGrid {
+    /// `starts[s]..starts[s+1]` is slot s's range; `starts.len() == G+1`.
+    starts: Vec<usize>,
+}
+
+impl SlotGrid {
+    /// Split `n` indices into `slots` contiguous slots, remainder spread
+    /// over the first slots (the same rule as [`Layout::split`] and the
+    /// thread static schedule — one more level down).
+    pub fn new(n: usize, slots: usize) -> SlotGrid {
+        assert!(slots >= 1);
+        SlotGrid {
+            starts: Layout::split(n, slots).starts,
+        }
+    }
+
+    /// Total number of slots `G`.
+    pub fn slots(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    pub fn global_len(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// Slot s's `[start, end)` global index range.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        (self.starts[s], self.starts[s + 1])
+    }
+
+    /// The slot containing global index `g` (must be in range).
+    pub fn slot_of(&self, g: usize) -> usize {
+        debug_assert!(g < self.global_len());
+        self.starts.partition_point(|&s| s <= g) - 1
+    }
+
+    /// Group the slots into ranks of `slots_per_rank` each: the rank layout
+    /// every hybrid-fusable object must carry. `slots() % slots_per_rank`
+    /// must be zero.
+    pub fn rank_layout(&self, slots_per_rank: usize) -> Layout {
+        assert!(slots_per_rank >= 1 && self.slots() % slots_per_rank == 0);
+        let ranks = self.slots() / slots_per_rank;
+        let starts = (0..=ranks).map(|r| self.starts[r * slots_per_rank]).collect();
+        Layout { starts }
+    }
+}
+
+impl Layout {
+    /// The slot-aligned layout for a `ranks × threads_per_rank` hybrid run:
+    /// rank boundaries land on the `ranks·threads_per_rank`-way slot grid,
+    /// so per-slot reductions are decomposition-invariant. Differs from
+    /// [`Layout::split`]`(n, ranks)` whenever the remainder of the finer
+    /// split lands unevenly — which is exactly why the fused hybrid solvers
+    /// require it.
+    pub fn slot_aligned(n: usize, ranks: usize, threads_per_rank: usize) -> Layout {
+        SlotGrid::new(n, ranks * threads_per_rank).rank_layout(threads_per_rank)
+    }
+}
+
 /// The distributed vector.
 pub struct VecMPI {
     layout: Layout,
@@ -327,6 +398,39 @@ mod tests {
         assert_eq!(l.global_len(), 5);
         assert_eq!(l.local_len(1), 0);
         assert_eq!(l.owner(2).unwrap(), 2);
+    }
+
+    #[test]
+    fn slot_grid_is_decomposition_invariant() {
+        // The same G = ranks·threads gives the same slot boundaries no
+        // matter how G factors — and the rank layout is grouping, not
+        // re-splitting.
+        let n = 10;
+        let g = SlotGrid::new(n, 4);
+        assert_eq!(
+            (0..4).map(|s| g.range(s)).collect::<Vec<_>>(),
+            vec![(0, 3), (3, 6), (6, 8), (8, 10)]
+        );
+        let l22 = g.rank_layout(2); // 2 ranks × 2 threads
+        assert_eq!(l22.range(0), (0, 6));
+        assert_eq!(l22.range(1), (6, 10));
+        // NOT Layout::split(10, 2) = (0,5),(5,10): alignment is the point.
+        assert_ne!(l22, Layout::split(10, 2));
+        let l41 = g.rank_layout(1); // 4 ranks × 1 thread
+        assert_eq!(l41, Layout::split(10, 4));
+        let l14 = g.rank_layout(4); // 1 rank × 4 threads
+        assert_eq!(l14.range(0), (0, 10));
+        // slot_of inverts range
+        for s in 0..4 {
+            let (lo, hi) = g.range(s);
+            for i in lo..hi {
+                assert_eq!(g.slot_of(i), s);
+            }
+        }
+        // the public constructor matches the grouping
+        assert_eq!(Layout::slot_aligned(10, 2, 2), l22);
+        assert_eq!(Layout::slot_aligned(10, 4, 1), l41);
+        assert_eq!(Layout::slot_aligned(10, 1, 4), l14);
     }
 
     #[test]

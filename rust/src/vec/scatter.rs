@@ -8,8 +8,11 @@
 //! initial on-diagonal multiplication are allowed to overlap"), and `end()`
 //! completes the receives into a ghost buffer.
 
+use std::time::Instant;
+
 use crate::comm::endpoint::Comm;
 use crate::comm::message::{Tag, RESERVED_TAG_BASE};
+use crate::comm::timing::OverlapStats;
 use crate::error::{Error, Result};
 use crate::vec::mpi::{Layout, VecMPI};
 
@@ -29,8 +32,19 @@ pub struct VecScatter {
     recv_blocks: Vec<(usize, usize, usize)>,
     /// Per destination rank: (dest, local indices to pack and send).
     send_lists: Vec<(usize, Vec<usize>)>,
-    /// In-flight state: Some(ghost buffer) between begin and end.
-    in_flight: Option<Vec<f64>>,
+    /// The persistent ghost buffer: allocated once at plan time, filled in
+    /// place by every `end()`. Its address is stable for the plan's
+    /// lifetime, which is what lets the fused hybrid layer hand workers a
+    /// raw view of it before the receives complete.
+    ghost_buf: Vec<f64>,
+    /// True between `begin()` and `end()`.
+    in_flight: bool,
+    /// `begin()` timestamp of the in-flight exchange.
+    t_begin: Option<Instant>,
+    /// Overlapped-compute start mark (see [`VecScatter::mark_compute_start`]).
+    t_compute: Option<Instant>,
+    /// Accumulated overlap accounting.
+    overlap: OverlapStats,
 }
 
 impl VecScatter {
@@ -92,13 +106,18 @@ impl VecScatter {
             }
         }
 
+        let ghost_buf = vec![0.0; ghosts.len()];
         Ok(VecScatter {
             layout: layout.clone(),
             rank,
             ghosts,
             recv_blocks,
             send_lists,
-            in_flight: None,
+            ghost_buf,
+            in_flight: false,
+            t_begin: None,
+            t_compute: None,
+            overlap: OverlapStats::default(),
         })
     }
 
@@ -131,28 +150,64 @@ impl VecScatter {
     /// Post all sends (pack + send; non-blocking). Call before the
     /// on-diagonal multiply to overlap communication with compute.
     pub fn begin(&mut self, x: &VecMPI, comm: &mut Comm) -> Result<()> {
-        if self.in_flight.is_some() {
-            return Err(Error::not_ready("scatter begin(): already in flight"));
-        }
         if x.layout() != &self.layout || x.rank() != self.rank {
             return Err(Error::size_mismatch("scatter: vector/plan layout mismatch"));
         }
-        let xs = x.local().as_slice();
+        self.begin_local(x.local().as_slice(), comm)
+    }
+
+    /// As [`VecScatter::begin`], from the vector's raw local slice — the
+    /// form the fused hybrid region uses from inside a parallel region,
+    /// where the vector is only reachable through its region-shared base
+    /// pointer. `xs` must be the plan vector's full local slice.
+    pub fn begin_local(&mut self, xs: &[f64], comm: &mut Comm) -> Result<()> {
+        if self.in_flight {
+            return Err(Error::not_ready("scatter begin(): already in flight"));
+        }
+        if xs.len() != self.layout.local_len(self.rank) {
+            return Err(Error::size_mismatch("scatter begin: local slice length"));
+        }
+        let t0 = Instant::now();
         for (dest, list) in &self.send_lists {
             let packed: Vec<f64> = list.iter().map(|&i| xs[i]).collect();
             comm.send(*dest, T_DATA, packed)?;
         }
-        self.in_flight = Some(vec![0.0; self.ghosts.len()]);
+        self.in_flight = true;
+        self.t_begin = Some(t0);
+        self.t_compute = None;
         Ok(())
     }
 
-    /// Complete the receives; returns the ghost buffer (slot `k` holds
-    /// `x[ghosts()[k]]`).
-    pub fn end(&mut self, comm: &mut Comm) -> Result<Vec<f64>> {
-        let mut buf = self
-            .in_flight
-            .take()
-            .ok_or_else(|| Error::not_ready("scatter end() without begin()"))?;
+    /// Mark the start of the compute this exchange is being overlapped with
+    /// (the diagonal-block SpMV). Idempotent per exchange: only the first
+    /// mark after `begin()` sticks, so callers may mark defensively.
+    pub fn mark_compute_start(&mut self) {
+        if self.in_flight && self.t_compute.is_none() {
+            self.t_compute = Some(Instant::now());
+        }
+    }
+
+    /// Complete the receives into the **persistent** ghost buffer and return
+    /// a view of it (slot `k` holds `x[ghosts()[k]]`). No allocation: the
+    /// buffer was created at plan time and its address never changes.
+    ///
+    /// Overlap accounting: messages already delivered when this is entered
+    /// (probed without blocking) count as *hidden*; the time spent blocked
+    /// here is the *exposed* remainder.
+    pub fn end(&mut self, comm: &mut Comm) -> Result<&[f64]> {
+        if !self.in_flight {
+            return Err(Error::not_ready("scatter end() without begin()"));
+        }
+        // Reset up front (like the old in_flight.take()): an error below
+        // must not wedge the plan into permanent "already in flight".
+        self.in_flight = false;
+        let t_end_call = Instant::now();
+        let mut hidden = 0u64;
+        for &(src, _, _) in &self.recv_blocks {
+            if comm.iprobe(src, T_DATA) {
+                hidden += 1;
+            }
+        }
         for &(src, lo, hi) in &self.recv_blocks {
             let vals: Vec<f64> = comm.recv(src, T_DATA)?;
             if vals.len() != hi - lo {
@@ -162,15 +217,47 @@ impl VecScatter {
                     vals.len()
                 )));
             }
-            buf[lo..hi].copy_from_slice(&vals);
+            self.ghost_buf[lo..hi].copy_from_slice(&vals);
         }
-        Ok(buf)
+        let done = Instant::now();
+        self.overlap.exchanges += 1;
+        self.overlap.msgs_hidden += hidden;
+        self.overlap.msgs_total += self.recv_blocks.len() as u64;
+        self.overlap.exposed_seconds += done.duration_since(t_end_call).as_secs_f64();
+        if let Some(t0) = self.t_begin.take() {
+            self.overlap.window_seconds += done.duration_since(t0).as_secs_f64();
+        }
+        if let Some(tc) = self.t_compute.take() {
+            self.overlap.overlap_seconds += t_end_call.duration_since(tc).as_secs_f64();
+        }
+        Ok(&self.ghost_buf)
     }
 
-    /// Convenience: begin + end.
+    /// Convenience: begin + end, copying the ghosts out (tests/diagnostics;
+    /// hot paths use `begin`/`end` and read the persistent buffer).
     pub fn scatter(&mut self, x: &VecMPI, comm: &mut Comm) -> Result<Vec<f64>> {
         self.begin(x, comm)?;
-        self.end(comm)
+        Ok(self.end(comm)?.to_vec())
+    }
+
+    /// Raw view (pointer, length) of the persistent ghost buffer. The
+    /// pointer is stable for the plan's lifetime (the "no per-iteration
+    /// allocation" regression tests assert its stability across
+    /// exchanges); the fused hybrid region hands it to worker threads,
+    /// which read it only after a barrier that orders the master's
+    /// `end()` writes.
+    pub fn ghost_raw(&self) -> (*const f64, usize) {
+        (self.ghost_buf.as_ptr(), self.ghost_buf.len())
+    }
+
+    /// Accumulated overlap accounting for this plan's exchanges.
+    pub fn overlap_stats(&self) -> &OverlapStats {
+        &self.overlap
+    }
+
+    /// Reset the overlap accounting (e.g. between bench phases).
+    pub fn reset_overlap_stats(&mut self) {
+        self.overlap = OverlapStats::default();
     }
 }
 
@@ -283,6 +370,101 @@ mod tests {
                 (lo..hi).map(|i| (i * i) as f64).sum::<f64>() + ((hi % 16) * (hi % 16)) as f64;
             assert_eq!(*v, expect);
         }
+    }
+
+    #[test]
+    fn ghost_buffer_is_persistent_across_scatters() {
+        // Many begin/end rounds: the ghost buffer must be allocated exactly
+        // once (at plan time) and keep a stable address — the hybrid fused
+        // layer publishes that address to worker threads before receives
+        // complete.
+        World::run(2, |mut c| {
+            let layout = Layout::split(10, 2);
+            let other = if c.rank() == 0 { 7 } else { 2 };
+            let mut sc = VecScatter::plan(&layout, &mut c, &[other]).unwrap();
+            let (p0, len) = sc.ghost_raw();
+            assert_eq!(len, 1);
+            for round in 0..20 {
+                let xs: Vec<f64> = (0..5).map(|i| (i + round) as f64).collect();
+                let x =
+                    VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ThreadCtx::serial())
+                        .unwrap();
+                sc.begin(&x, &mut c).unwrap();
+                sc.mark_compute_start();
+                let g = sc.end(&mut c).unwrap();
+                let local = if c.rank() == 0 { 7 - 5 } else { 2 };
+                assert_eq!(g[0], (local + round) as f64);
+            }
+            let (p1, _) = sc.ghost_raw();
+            assert_eq!(p0, p1, "ghost buffer moved (reallocated across scatters)");
+            let o = sc.overlap_stats();
+            assert_eq!(o.exchanges, 20);
+            assert_eq!(o.msgs_total, 20);
+            assert!(o.window_seconds >= o.overlap_seconds);
+        });
+    }
+
+    #[test]
+    fn plan_matches_naive_allgather_reference() {
+        // Property: for random layouts and random ghost sets, the planned
+        // scatter delivers exactly x[g] for every requested global index g —
+        // checked against the brute-force allgather of the whole vector.
+        use crate::ptest::{check, forall, PtConfig};
+        use crate::util::rng::XorShift64;
+        forall(
+            &PtConfig { cases: 12, ..Default::default() },
+            |rng: &mut XorShift64| {
+                let ranks = rng.range(1, 5);
+                // random per-rank counts, some possibly tiny
+                let counts: Vec<usize> = (0..ranks).map(|_| rng.range(1, 9)).collect();
+                let seed = rng.below(1 << 30) as u64;
+                (counts, seed)
+            },
+            |(counts, seed)| {
+                let counts = counts.clone();
+                let seed = *seed;
+                let ranks = counts.len();
+                let outs = World::run(ranks, move |mut c| {
+                    let layout = Layout::from_counts(&counts);
+                    let n = layout.global_len();
+                    let (lo, hi) = layout.range(c.rank());
+                    // deterministic global vector
+                    let xs: Vec<f64> =
+                        (lo..hi).map(|i| (i as f64 * 0.13).sin() + i as f64).collect();
+                    let x = VecMPI::from_local_slice(
+                        layout.clone(),
+                        c.rank(),
+                        &xs,
+                        ThreadCtx::serial(),
+                    )
+                    .unwrap();
+                    // random remote ghost set, distinct per rank
+                    let mut rng = XorShift64::new(seed ^ (c.rank() as u64 + 1));
+                    let mut needed = Vec::new();
+                    for _ in 0..rng.below(2 * n) {
+                        let g = rng.below(n);
+                        if g < lo || g >= hi {
+                            needed.push(g);
+                        }
+                    }
+                    let mut sc = VecScatter::plan(&layout, &mut c, &needed).unwrap();
+                    let got = sc.scatter(&x, &mut c).unwrap();
+                    let reference = x.gather_all(&mut c).unwrap();
+                    let pairs: Vec<(usize, f64)> =
+                        sc.ghosts().iter().copied().zip(got).collect();
+                    (pairs, reference)
+                });
+                for (pairs, reference) in outs {
+                    for (g, v) in pairs {
+                        check(
+                            v.to_bits() == reference[g].to_bits(),
+                            format!("ghost {g}: {v} vs {}", reference[g]),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Golden solver-matrix suite: every KSP × PC combination on two small
+//! stencil cases, plus the decomposition-invariance contract for the fused
+//! cg/chebyshev families across ranks ∈ {1,2,4} × threads ∈ {1,2,4}.
+//!
+//! Expectations are per-pair: combinations that are mathematically sound on
+//! these SPD, strictly diagonally dominant operators must converge to rtol;
+//! the few analytically shaky pairings (CG/Chebyshev with the nonsymmetric
+//! SOR preconditioner, unpreconditioned Richardson) must merely complete
+//! cleanly — no panic, no error — and are recorded either way.
+
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::matgen::cases::TestCase;
+
+const KSPS: [&str; 7] = [
+    "cg",
+    "cg-fused",
+    "chebyshev",
+    "chebyshev-fused",
+    "bicgstab",
+    "gmres",
+    "richardson",
+];
+const PCS: [&str; 5] = ["none", "jacobi", "bjacobi", "sor", "ilu"];
+
+/// Must this (ksp, pc) pair converge on an SPD strictly-dominant operator?
+///
+/// - CG (both variants) needs an SPD preconditioner: SOR's single forward
+///   sweep is nonsymmetric, so that pair is best-effort only.
+/// - Chebyshev needs a positive real preconditioned spectrum: same SOR
+///   caveat.
+/// - Richardson (scale 1) diverges unpreconditioned on these operators
+///   (ρ(I − A) > 1) but converges under any of the regular splittings.
+fn must_converge(ksp: &str, pc: &str) -> bool {
+    match (ksp, pc) {
+        ("cg" | "cg-fused" | "chebyshev" | "chebyshev-fused", "sor") => false,
+        ("richardson", "none") => false,
+        _ => true,
+    }
+}
+
+fn golden_cases() -> [(TestCase, f64); 2] {
+    [
+        (TestCase::SaltPressure, 0.003),
+        (TestCase::SaltGeostrophic, 0.002),
+    ]
+}
+
+#[test]
+fn every_ksp_pc_pair_on_stencil_cases() {
+    for (case, scale) in golden_cases() {
+        for ksp in KSPS {
+            for pc in PCS {
+                let mut cfg = HybridConfig::default_for(case, scale, 2, 2);
+                cfg.ksp_type = ksp.into();
+                cfg.pc_type = pc.into();
+                cfg.ksp.rtol = 1e-6;
+                cfg.ksp.max_it = 50_000;
+                let report = run_case(&cfg).unwrap_or_else(|e| {
+                    panic!("{ksp} × {pc} on {case:?} errored: {e}")
+                });
+                if must_converge(ksp, pc) {
+                    assert!(
+                        report.converged,
+                        "{ksp} × {pc} on {case:?} did not converge \
+                         ({} its, final residual {})",
+                        report.iterations, report.final_residual
+                    );
+                    assert!(report.iterations > 0 || report.final_residual == 0.0);
+                } else {
+                    // Best-effort pair: completing without error (the
+                    // unwrap above) is the bar. A run that *claims*
+                    // convergence must still have a finite, genuinely
+                    // small residual.
+                    if report.converged {
+                        assert!(
+                            report.final_residual.is_finite(),
+                            "{ksp} × {pc} on {case:?} converged to a \
+                             non-finite residual"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Residual history of one fused-family run, as bit patterns.
+fn fused_history(ksp: &str, case: TestCase, scale: f64, ranks: usize, threads: usize) -> Vec<u64> {
+    let mut cfg = HybridConfig::default_for(case, scale, ranks, threads);
+    cfg.ksp_type = ksp.into();
+    cfg.pc_type = "jacobi".into();
+    cfg.ksp.rtol = 1e-7;
+    cfg.ksp.max_it = 50_000;
+    cfg.ksp.monitor = true;
+    let report = run_case(&cfg)
+        .unwrap_or_else(|e| panic!("{ksp} at {ranks}×{threads} errored: {e}"));
+    assert!(report.converged, "{ksp} at {ranks}×{threads} did not converge");
+    assert!(!report.history.is_empty(), "monitor produced no history");
+    report.history.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn fused_families_decomposition_invariant_over_rank_thread_grid() {
+    // All decompositions from ranks ∈ {1,2,4} × threads ∈ {1,2,4} sharing a
+    // slot-grid size G = ranks·threads must produce bitwise-identical
+    // residual histories. (Different G means a different grid — and a
+    // legitimately different fp grouping — so comparisons group by G.)
+    let grid: Vec<(usize, usize)> = [1usize, 2, 4]
+        .iter()
+        .flat_map(|&r| [1usize, 2, 4].iter().map(move |&t| (r, t)))
+        .collect();
+    let (case, scale) = (TestCase::SaltPressure, 0.003);
+    for ksp in ["cg-fused", "chebyshev-fused"] {
+        for g in [1usize, 2, 4, 8, 16] {
+            let members: Vec<(usize, usize)> =
+                grid.iter().copied().filter(|&(r, t)| r * t == g).collect();
+            if members.len() < 2 {
+                continue;
+            }
+            let histories: Vec<Vec<u64>> = members
+                .iter()
+                .map(|&(r, t)| fused_history(ksp, case, scale, r, t))
+                .collect();
+            for (m, h) in members.iter().zip(&histories).skip(1) {
+                assert_eq!(
+                    h, &histories[0],
+                    "{ksp}: {}×{} differs from {}×{} (G = {g})",
+                    m.0, m.1, members[0].0, members[0].1
+                );
+            }
+        }
+    }
+}
