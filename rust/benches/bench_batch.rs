@@ -1,0 +1,189 @@
+//! Batched multi-RHS sweep: SpMM GFLOP/s and queue throughput (solves/s)
+//! vs batch width k, per rank×thread decomposition of a fixed core count.
+//! Demonstrates the batch engine's amortization claim — one matrix
+//! traversal and one ghost message per neighbour serving k right-hand
+//! sides — and writes `BENCH_batch.json` for the perf-trajectory artifact
+//! upload (the committed file is the schema baseline; CI regenerates
+//! measured numbers).
+//!
+//! `cargo bench --bench bench_batch -- --cores 4 --its 20 --requests 8`
+
+use std::time::Instant;
+
+use mmpetsc::bench::{JsonVal, Table};
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::batch::{run_batch_case, BatchConfig};
+use mmpetsc::matgen::cases::{generate_rows, TestCase};
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::util::cli::Cli;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::Layout;
+use mmpetsc::vec::multi::MultiVecMPI;
+
+const KS: [usize; 4] = [1, 2, 4, 8];
+
+struct SpmmResult {
+    seconds: f64,
+    gflops: f64,
+    rows: usize,
+}
+
+/// Time `its` k-wide SpMM applications at one decomposition. Returns the
+/// max-across-ranks wall time of the timed loop and the aggregate GFLOP/s.
+fn time_spmm(case: TestCase, scale: f64, ranks: usize, threads: usize, k: usize, its: usize) -> SpmmResult {
+    let outs = World::run(ranks, move |mut comm| {
+        let spec = case.grid(scale);
+        let n = spec.rows();
+        let layout = Layout::slot_aligned(n, comm.size(), threads);
+        let (lo, hi) = layout.range(comm.rank());
+        let ctx = ThreadCtx::new(threads);
+        let entries = generate_rows(case, scale, lo, hi);
+        let mut a = MatMPIAIJ::assemble(
+            layout.clone(),
+            layout.clone(),
+            entries,
+            &mut comm,
+            ctx.clone(),
+        )
+        .unwrap();
+        a.enable_hybrid().unwrap();
+        let mut x = MultiVecMPI::new_partitioned(
+            layout.clone(),
+            comm.rank(),
+            k,
+            ctx.clone(),
+            a.diag_block().partition(),
+        );
+        for c in 0..k {
+            let xs: Vec<f64> = (lo..hi)
+                .map(|g| (g as f64 * 0.01 + c as f64).sin() + 0.2)
+                .collect();
+            x.local_mut().set_col(c, &xs).unwrap();
+        }
+        let mut y = MultiVecMPI::new_partitioned(
+            layout.clone(),
+            comm.rank(),
+            k,
+            ctx.clone(),
+            a.diag_block().partition(),
+        );
+        // warm: page the multi scratch/ghost buffers and the plan
+        a.mult_multi(&x, &mut y, &mut comm).unwrap();
+        comm.barrier().unwrap();
+        let t0 = Instant::now();
+        for _ in 0..its {
+            a.mult_multi(&x, &mut y, &mut comm).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let (d, o) = a.nnz_split();
+        (dt, d + o, n)
+    });
+    let seconds = outs.iter().map(|&(dt, _, _)| dt).fold(0.0f64, f64::max);
+    let nnz: usize = outs.iter().map(|&(_, nz, _)| nz).sum();
+    let rows = outs[0].2;
+    SpmmResult {
+        seconds,
+        gflops: 2.0 * nnz as f64 * k as f64 * its as f64 / seconds.max(1e-12) / 1e9,
+        rows,
+    }
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_batch",
+        "batched multi-RHS SpMM + solve-queue throughput sweep",
+    )
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .opt("cores", Some("4"), "total cores to factor into rank×thread grids")
+    .opt("scale", Some("0.003"), "matrix scale for saltfinger-pressure")
+    .opt("its", Some("20"), "SpMM applications to time per width")
+    .opt("requests", Some("8"), "queued solve requests per throughput point")
+    .opt("rtol", Some("1e-8"), "tolerance of every queued request")
+    .opt("out", Some("BENCH_batch.json"), "output JSON path")
+    .parse_env();
+    let cores = args.get_usize("cores").unwrap().max(1);
+    let scale = args.get_f64("scale").unwrap();
+    let its = args.get_usize("its").unwrap().max(2);
+    let nreq = args.get_usize("requests").unwrap().max(1);
+    let rtol = args.get_f64("rtol").unwrap();
+    let out_path = args.get_or("out", "BENCH_batch.json");
+    let case = TestCase::SaltPressure;
+
+    let decomps: Vec<(usize, usize)> = (1..=cores)
+        .filter(|r| cores % r == 0)
+        .map(|r| (r, cores / r))
+        .collect();
+
+    let mut table = Table::new(
+        &format!("batched multi-RHS — {} scale {scale}, {cores} cores", case.name()),
+        &[
+            "ranks×threads",
+            "k",
+            "SpMM GF/s",
+            "amortized",
+            "solves/s",
+            "batches",
+        ],
+    );
+    let mut configs: Vec<(String, JsonVal)> = Vec::new();
+    let mut rows = 0usize;
+    for &(r, t) in &decomps {
+        let mut k1_seconds = 0.0f64;
+        for &k in &KS {
+            let spmm = time_spmm(case, scale, r, t, k, its);
+            rows = spmm.rows;
+            if k == 1 {
+                k1_seconds = spmm.seconds;
+            }
+            // amortization: time of k solo traversals over one k-wide one
+            let amortized = k as f64 * k1_seconds / spmm.seconds.max(1e-12);
+            let mut cfg = BatchConfig::default_for(case, scale, r, t, k, nreq);
+            cfg.set_uniform_rtol(rtol);
+            let queue = run_batch_case(&cfg).expect("batch queue run");
+            assert!(queue.converged_all, "{r}×{t} k={k}: queue did not converge");
+            table.row(&[
+                format!("{r}×{t}"),
+                k.to_string(),
+                format!("{:.3}", spmm.gflops),
+                format!("{:.2}×", amortized),
+                format!("{:.2}", queue.solves_per_sec),
+                queue.batches.to_string(),
+            ]);
+            configs.push((
+                format!("r{r}t{t}k{k}"),
+                JsonVal::obj(vec![
+                    ("ranks", JsonVal::Int(r as u64)),
+                    ("threads", JsonVal::Int(t as u64)),
+                    ("k", JsonVal::Int(k as u64)),
+                    ("spmm_seconds", JsonVal::Num(spmm.seconds)),
+                    ("spmm_gflops", JsonVal::Num(spmm.gflops)),
+                    ("spmm_amortization", JsonVal::Num(amortized)),
+                    ("solves_per_sec", JsonVal::Num(queue.solves_per_sec)),
+                    ("queue_wall_seconds", JsonVal::Num(queue.wall_seconds)),
+                    ("batches", JsonVal::Int(queue.batches as u64)),
+                    (
+                        "spmm_traversals",
+                        JsonVal::Int(queue.spmm_traversals as u64),
+                    ),
+                    (
+                        "solo_traversals",
+                        JsonVal::Int(queue.solo_traversals as u64),
+                    ),
+                ]),
+            ));
+        }
+    }
+    table.print();
+
+    let json = JsonVal::Obj(vec![
+        ("bench".to_string(), JsonVal::Str("batch".into())),
+        ("case".to_string(), JsonVal::Str(case.name().into())),
+        ("cores".to_string(), JsonVal::Int(cores as u64)),
+        ("rows".to_string(), JsonVal::Int(rows as u64)),
+        ("spmm_iterations".to_string(), JsonVal::Int(its as u64)),
+        ("requests".to_string(), JsonVal::Int(nreq as u64)),
+        ("configs".to_string(), JsonVal::Obj(configs)),
+    ]);
+    std::fs::write(&out_path, json.render() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

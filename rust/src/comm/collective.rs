@@ -12,7 +12,7 @@ use std::sync::atomic::Ordering;
 
 use crate::comm::endpoint::Comm;
 use crate::comm::message::{Tag, RESERVED_TAG_BASE};
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 const T_BARRIER: Tag = RESERVED_TAG_BASE;
 const T_BCAST: Tag = RESERVED_TAG_BASE + 1;
@@ -191,6 +191,55 @@ impl Comm {
         Ok(acc)
     }
 
+    /// Runtime-width variant of [`Comm::allreduce_sum_ordered`]: every rank
+    /// contributes a list of `width`-component partials (one per local
+    /// thread slot, in thread order) where `width` is only known at run
+    /// time — the k-RHS case of the batched solve engine, where `k` is the
+    /// number of right-hand sides in flight. The fold order per component
+    /// is identical to the const-`K` version (rank 0 first, left to right,
+    /// one accumulator per component), so for any fixed component `c` the
+    /// result is bitwise identical to an `allreduce_sum_ordered::<1>` of
+    /// that component's partials alone — the property that makes each
+    /// column of a batched solve reproduce its solo solve exactly.
+    pub fn allreduce_sum_ordered_vec(
+        &mut self,
+        contribution: Vec<Vec<f64>>,
+    ) -> Result<Vec<f64>> {
+        self.stats.reductions.fetch_add(1, Ordering::Relaxed);
+        let width = match contribution.first() {
+            Some(p) => p.len(),
+            None => {
+                return Err(Error::InvalidOption(
+                    "allreduce_sum_ordered_vec: every rank must contribute \
+                     at least one partial (one per thread slot)"
+                        .into(),
+                ))
+            }
+        };
+        if contribution.iter().any(|p| p.len() != width) {
+            return Err(Error::InvalidOption(
+                "allreduce_sum_ordered_vec: ragged partial widths".into(),
+            ));
+        }
+        let all = self.allgather(contribution)?;
+        let mut acc = vec![0.0f64; width];
+        for rank_parts in &all {
+            for part in rank_parts {
+                if part.len() != width {
+                    return Err(Error::Comm(format!(
+                        "allreduce_sum_ordered_vec: rank contributed width {} \
+                         partials, expected {width}",
+                        part.len()
+                    )));
+                }
+                for (a, v) in acc.iter_mut().zip(part) {
+                    *a += v;
+                }
+            }
+        }
+        Ok(acc)
+    }
+
     /// Gather variable-length vectors to `root` (linear). Returns
     /// `Some(per-rank payloads)` on root.
     pub fn gatherv<T: Send + Clone + 'static>(
@@ -359,6 +408,53 @@ mod tests {
         // and it really is the flat left-to-right sum
         let expect: f64 = partials.iter().fold(0.0, |a, p| a + p[0]);
         assert_eq!(bits[0].0, expect.to_bits());
+    }
+
+    #[test]
+    fn allreduce_sum_ordered_vec_matches_const_width_per_component() {
+        // The runtime-width fold must be bitwise identical, component by
+        // component, to the const-K fold of that component's partials —
+        // the per-column parity contract of the batched solve engine.
+        let width = 3usize;
+        let partials: Vec<Vec<f64>> = (0..8)
+            .map(|i| {
+                (0..width)
+                    .map(|c| ((i * width + c) as f64 * 0.37).sin() * 1e-2)
+                    .collect()
+            })
+            .collect();
+        for p in [1usize, 2, 4] {
+            let per = 8 / p;
+            let parts = partials.clone();
+            let outs = World::run(p, move |mut c| {
+                let mine = parts[c.rank() * per..(c.rank() + 1) * per].to_vec();
+                let vec_fold = c.allreduce_sum_ordered_vec(mine.clone()).unwrap();
+                let per_comp: Vec<f64> = (0..mine[0].len())
+                    .map(|comp| {
+                        let single: Vec<[f64; 1]> =
+                            mine.iter().map(|part| [part[comp]]).collect();
+                        c.allreduce_sum_ordered(single).unwrap()[0]
+                    })
+                    .collect();
+                (vec_fold, per_comp)
+            });
+            for (vec_fold, per_comp) in outs {
+                assert_eq!(vec_fold.len(), width);
+                for (a, b) in vec_fold.iter().zip(&per_comp) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{p} ranks");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_ordered_vec_rejects_ragged_widths() {
+        World::run(1, |mut c| {
+            assert!(c.allreduce_sum_ordered_vec(vec![]).is_err());
+            assert!(c
+                .allreduce_sum_ordered_vec(vec![vec![1.0], vec![1.0, 2.0]])
+                .is_err());
+        });
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! database, and the hybrid (ranks × threads) run harness that every
 //! benchmark and example drives.
 
+pub mod batch;
 pub mod logging;
 pub mod options;
 pub mod runner;
 
+pub use batch::{run_batch_case, BatchConfig, BatchReport, BatchRequest};
 pub use logging::EventLog;
 pub use options::Options;
 pub use runner::{HybridConfig, HybridReport, run_case};

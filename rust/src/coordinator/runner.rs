@@ -156,10 +156,16 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
                 &mut comm,
                 ctx.clone(),
             )?;
-            if is_fused_ksp(&cfg.ksp_type) {
+            if is_fused_ksp(&cfg.ksp_type) && !(comm.size() == 1 && cfg.threads <= 1) {
                 // Enable before building b: the RHS must come from the
                 // slot-segmented (decomposition-invariant) MatMult too, or
                 // the problem itself would differ bitwise across sweeps.
+                // The degenerate 1×1 decomposition is left on the plain
+                // kernels instead: its slot-grid group has no other member
+                // to be invariant against, and skipping the plan keeps the
+                // whole 1×1 run (RHS build included) bitwise identical to
+                // the unfused path — the exact-agreement contract the
+                // runner tests assert.
                 let _ = a.enable_hybrid();
             }
 
@@ -260,10 +266,12 @@ pub fn solve_by_name(
     comm: &mut crate::comm::endpoint::Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    if is_fused_ksp(name) {
+    if is_fused_ksp(name) && !(comm.size() == 1 && a.diag_block().ctx().nthreads() <= 1) {
         // Opt the operator into hybrid fusion when its layout allows (it
         // does whenever run_case built it — slot-aligned). On a mismatched
-        // layout this is a no-op and the fused layer falls back.
+        // layout this is a no-op and the fused layer falls back. The
+        // degenerate 1×1 decomposition stays on the legacy fused path
+        // (bitwise identical to unfused — see ksp::fused::degenerate_serial).
         let _ = a.enable_hybrid();
     }
     match name {
@@ -336,10 +344,11 @@ mod tests {
 
     #[test]
     fn fused_cg_through_runner() {
-        // Single rank: the fused path engages; result must converge like
-        // cg. The runner routes cg-fused through the hybrid (slot-ordered)
-        // kernels, whose fp grouping differs from the unfused fold — so the
-        // iteration counts agree to ±1, not necessarily exactly.
+        // Single rank, several threads: the fused path engages; result must
+        // converge like cg. The runner routes cg-fused through the hybrid
+        // (slot-ordered) kernels, whose fp grouping differs from the unfused
+        // fold — so the iteration counts agree to ±1, not necessarily
+        // exactly.
         let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, 1, 4);
         cfg.ksp.rtol = 1e-8;
         let unfused = run_case(&cfg).unwrap();
@@ -352,6 +361,28 @@ mod tests {
             fused.iterations,
             unfused.iterations
         );
+        // The degenerate 1×1 decomposition routes through the legacy fused
+        // path, which is bitwise identical to the unfused solver: exact
+        // iteration agreement and a bitwise-equal residual history, no ±1.
+        let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, 1, 1);
+        cfg.ksp.rtol = 1e-8;
+        cfg.ksp.monitor = true;
+        let unfused = run_case(&cfg).unwrap();
+        cfg.ksp_type = "cg-fused".into();
+        let fused = run_case(&cfg).unwrap();
+        assert!(unfused.converged && fused.converged);
+        assert_eq!(
+            fused.iterations, unfused.iterations,
+            "1×1 fused CG must match unfused exactly"
+        );
+        assert_eq!(fused.history.len(), unfused.history.len());
+        for (i, (f, u)) in fused.history.iter().zip(&unfused.history).enumerate() {
+            assert_eq!(
+                f.to_bits(),
+                u.to_bits(),
+                "1×1 residual history diverges at iteration {i}: {f} vs {u}"
+            );
+        }
         // Multi-rank: the same name runs the hybrid path (no fallback) and
         // must both converge and measure a nonzero overlap window.
         let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, 2, 2);

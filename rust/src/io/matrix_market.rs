@@ -151,6 +151,79 @@ mod tests {
         std::fs::remove_file(p).ok();
     }
 
+    /// Exact structural + value equality of two CSR matrices (the `{:.17e}`
+    /// writer round-trips every f64 bit pattern).
+    fn assert_csr_equal(a: &MatSeqAIJ, b: &MatSeqAIJ) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "dimensions");
+        assert_eq!(a.nnz(), b.nnz(), "nnz");
+        assert_eq!(a.row_ptr(), b.row_ptr(), "row_ptr");
+        assert_eq!(a.col_idx(), b.col_idx(), "col_idx");
+        for (i, (x, y)) in a.vals().iter().zip(b.vals()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "value {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_stencil_case_preserves_everything() {
+        // A real Table-6 stencil operator: write → read must preserve
+        // dimensions, nnz and every value bitwise.
+        use crate::matgen::cases::{generate_rows, TestCase};
+        let case = TestCase::SaltPressure;
+        let spec = case.grid(0.002);
+        let n = spec.rows();
+        let mut b = MatBuilder::new(n, n);
+        for (i, j, v) in generate_rows(case, 0.002, 0, n) {
+            b.add(i, j, v).unwrap();
+        }
+        let a = b.assemble(ThreadCtx::new(2));
+        let p = tmp("stencil.mtx");
+        write_matrix_market(&p, &a).unwrap();
+        let a2 = read_matrix_market(&p, ThreadCtx::new(2)).unwrap();
+        assert_csr_equal(&a, &a2);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn roundtrip_pattern_symmetric_case_preserves_everything() {
+        // Pattern-symmetric (structurally symmetric, values asymmetric):
+        // the general writer must keep both triangles and the exact
+        // pattern symmetry through a roundtrip.
+        use crate::util::rng::XorShift64;
+        let n = 37;
+        let mut rng = XorShift64::new(99);
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 4.0 + i as f64 * 0.01).unwrap();
+            for _ in 0..3 {
+                let j = rng.below(n);
+                if j != i {
+                    // distinct values at (i,j) and (j,i): symmetric pattern,
+                    // asymmetric values
+                    b.add(i, j, rng.range_f64(-1.0, 1.0)).unwrap();
+                    b.add(j, i, rng.range_f64(-1.0, 1.0)).unwrap();
+                }
+            }
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        let p = tmp("patsym.mtx");
+        write_matrix_market(&p, &a).unwrap();
+        let a2 = read_matrix_market(&p, ThreadCtx::serial()).unwrap();
+        assert_csr_equal(&a, &a2);
+        // the pattern really is symmetric, and stays so: every stored (i,j)
+        // has a stored (j,i)
+        for i in 0..n {
+            let (cols, _) = a2.row(i);
+            for &j in cols {
+                let (jcols, _) = a2.row(j);
+                assert!(
+                    jcols.binary_search(&i).is_ok(),
+                    "pattern symmetry broken at ({i},{j})"
+                );
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
     #[test]
     fn scientific_notation_values() {
         let p = tmp("sci.mtx");

@@ -1,0 +1,1034 @@
+//! Batched multi-RHS ("block") Krylov solves (DESIGN.md §6).
+//!
+//! The paper's analysis says SpMV and the BLAS1 kernels are memory-
+//! bandwidth-bound; the lever this module pulls is **arithmetic
+//! intensity**: amortize each traversal of the matrix (the dominant
+//! memory stream) over `k` right-hand sides at once. Two solvers:
+//!
+//! - [`solve`] — block CG, kernel-per-fork: each column runs the standard
+//!   PCG recurrence with its own scalars (α, β, (r,z)), but every SpMV is
+//!   one SpMM ([`MatMPIAIJ::mult_multi`], one CSR traversal + one ghost
+//!   message per neighbour for all k), every BLAS1 update is one k-wide
+//!   masked fork, and every reduction is one k-wide slot-ordered
+//!   allreduce.
+//! - [`solve_fused`] — the same iteration fused into **one pool region per
+//!   iteration** (the PR 1/2 single-fork discipline, k-wide): the master
+//!   posts the k-wide ghost sends at region entry, diagonal slot partials
+//!   overlap the exchange, and per-RHS **convergence masking** freezes
+//!   converged columns while the region keeps iterating the rest.
+//!
+//! **Per-column reproducibility contract**: each column's fp sequence is
+//! *identical* to a solo hybrid fused CG of that column — the SpMM per
+//! column reuses the plan kernels' accumulation order, the k-wide
+//! reductions fold per-(rank, slot) partials per column exactly as the
+//! width-1 ordered allreduce does, and the element-wise updates are the
+//! same `blas1` calls. A batched solve therefore reproduces, column by
+//! column, the residual history of solving each RHS alone (and is itself
+//! bitwise decomposition-invariant across `ranks × threads` splits of one
+//! slot grid). Columns are independent recurrences — this is deliberately
+//! *not* O'Leary block CG with a shared Krylov space, whose per-column
+//! histories could not match solo solves; the shared-traversal form is
+//! what the serving layer ([`crate::coordinator::batch`]) needs, since
+//! requests arrive independently and leave independently.
+//!
+//! One documented exception: at the **degenerate 1 rank × 1 thread**
+//! decomposition the solo dispatcher routes through the legacy fused path
+//! (bitwise identical to the *unfused* solver — see
+//! [`crate::ksp::fused::solve`]), while the batched engines stay on the
+//! plan kernels, so there the per-column agreement with a solo solve is
+//! to rounding (last-ulp SpMV fold differences), not bitwise. Every
+//! decomposition with G ≥ 2 keeps the exact contract.
+
+use std::sync::Arc;
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::error::{Error, Result};
+use crate::ksp::{check_convergence, ConvergedReason, KspConfig, SolveStats};
+use crate::mat::mpiaij::{HybridPlan, MatMPIAIJ};
+use crate::pc::{FusedPc, Precond};
+use crate::thread::pool::{RegionBarrier, ReduceSlots};
+use crate::vec::blas1;
+use crate::vec::multi::MultiVecMPI;
+use crate::vec::mpi::VecMPI;
+use crate::vec::scatter::VecScatter;
+
+/// Result of one batched solve: one [`SolveStats`] per column plus which
+/// engine ran.
+#[derive(Debug, Clone)]
+pub struct BlockStats {
+    /// Per-column stats, index-aligned with the multivector columns.
+    pub cols: Vec<SolveStats>,
+    /// True when the single-region-per-iteration engine ran (vs the
+    /// kernel-per-fork reference or the per-column fallback).
+    pub fused: bool,
+}
+
+impl BlockStats {
+    /// Iterations of the longest-running column (= SpMM traversals of the
+    /// batched loop).
+    pub fn iterations(&self) -> usize {
+        self.cols.iter().map(|s| s.iterations).max().unwrap_or(0)
+    }
+
+    pub fn all_converged(&self) -> bool {
+        self.cols.iter().all(|s| s.converged())
+    }
+}
+
+/// Per-column solver configs: the shared base with each column's own rtol.
+/// `col_rtol` empty ⇒ every column uses `cfg.rtol`.
+fn col_cfgs(cfg: &KspConfig, col_rtol: &[f64], k: usize) -> Result<Vec<KspConfig>> {
+    if !col_rtol.is_empty() && col_rtol.len() != k {
+        return Err(Error::size_mismatch(format!(
+            "block solve: {} per-column rtols for k = {k}",
+            col_rtol.len()
+        )));
+    }
+    Ok((0..k)
+        .map(|c| {
+            let mut one = cfg.clone();
+            if !col_rtol.is_empty() {
+                one.rtol = col_rtol[c];
+            }
+            one
+        })
+        .collect())
+}
+
+/// Deterministic (slot-ordered) global 2-norms of every column under a
+/// hybrid plan: per-(slot, column) `sqnorm` partials folded across ranks
+/// in rank-then-slot order, one accumulator per column — column `c` is
+/// bitwise identical to [`crate::ksp::fused::hybrid_norm2`] of that
+/// column.
+pub fn hybrid_norm2_cols(
+    v: &MultiVecMPI,
+    plan: &HybridPlan,
+    comm: &mut Comm,
+) -> Result<Vec<f64>> {
+    let parts = v.local().slot_sqnorms(plan.slot_ranges());
+    Ok(comm
+        .allreduce_sum_ordered_vec(parts)?
+        .iter()
+        .map(|s| s.sqrt())
+        .collect())
+}
+
+/// Deterministic (slot-ordered) global dots of every column pair
+/// `(u[:,c], v[:,c])`; see [`hybrid_norm2_cols`].
+pub fn hybrid_dot_cols(
+    u: &MultiVecMPI,
+    v: &MultiVecMPI,
+    plan: &HybridPlan,
+    comm: &mut Comm,
+) -> Result<Vec<f64>> {
+    let parts = u.local().slot_dots(v.local(), plan.slot_ranges())?;
+    comm.allreduce_sum_ordered_vec(parts)
+}
+
+/// Does the operator carry a hybrid plan matching this communicator and
+/// these multivectors? (The batched engines are plan-keyed: the plan is
+/// what makes every column decomposition-invariant.) The operator-side
+/// conditions are the *same predicate* the single-RHS path gates on
+/// ([`crate::ksp::fused::plan_matches_operator`]), so the two dispatches
+/// cannot drift; only the vector-side checks are k-wide here.
+fn plan_matches(a: &MatMPIAIJ, b: &MultiVecMPI, x: &MultiVecMPI, comm: &Comm) -> bool {
+    if !crate::ksp::fused::plan_matches_operator(a, comm) {
+        return false;
+    }
+    if b.layout() != a.row_layout()
+        || x.layout() != a.row_layout()
+        || b.rank() != comm.rank()
+        || x.rank() != comm.rank()
+        || b.ncols() != x.ncols()
+    {
+        return false;
+    }
+    let ctx = a.diag_block().ctx();
+    Arc::ptr_eq(ctx, b.local().ctx()) && Arc::ptr_eq(ctx, x.local().ctx())
+}
+
+/// Can this combination run the single-region-per-iteration batched
+/// engine? Same conditions as the single-RHS hybrid fusion — a matching
+/// plan, an element-wise PC, one shared always-forking thread context —
+/// k-wide.
+pub fn can_fuse_block(
+    a: &MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &MultiVecMPI,
+    x: &MultiVecMPI,
+    comm: &Comm,
+) -> bool {
+    plan_matches(a, b, x, comm)
+        && !matches!(pc.fused(), FusedPc::Unfusable)
+        && a.diag_block().ctx().always_forks()
+}
+
+fn matmult_multi(
+    a: &mut MatMPIAIJ,
+    x: &MultiVecMPI,
+    y: &mut MultiVecMPI,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<()> {
+    log.timed("MatMultBatch", a.mult_multi_flops(x.ncols()), || {
+        a.mult_multi(x, y, comm)
+    })
+}
+
+fn pcapply_multi(
+    pc: &dyn Precond,
+    r: &MultiVecMPI,
+    z: &mut MultiVecMPI,
+    log: &EventLog,
+) -> Result<()> {
+    log.timed("PCApplyBatch", pc.flops_multi(r.ncols()), || {
+        pc.apply_multi(r, z)
+    })
+}
+
+/// Block CG (kernel-per-fork reference engine): k independent PCG
+/// recurrences sharing every matrix traversal, ghost exchange, fork and
+/// reduction. `x` carries the initial guesses. Falls back to solving the
+/// columns one by one through [`crate::ksp::fused::solve`] when the
+/// operator has no matching hybrid plan (correct, just unamortized).
+#[allow(clippy::too_many_arguments)]
+pub fn solve(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &MultiVecMPI,
+    x: &mut MultiVecMPI,
+    cfg: &KspConfig,
+    col_rtol: &[f64],
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<BlockStats> {
+    let k = b.ncols();
+    if x.ncols() != k {
+        return Err(Error::size_mismatch("block solve: b/x column counts"));
+    }
+    let cfgs = col_cfgs(cfg, col_rtol, k)?;
+    if !plan_matches(a, b, x, comm) {
+        return solve_percol(a, pc, b, x, &cfgs, comm, log);
+    }
+    log.begin("KSPSolveBatch");
+    let out = solve_ref_inner(a, pc, b, x, &cfgs, comm, log);
+    log.end("KSPSolveBatch");
+    out
+}
+
+/// Fused block CG: the reference iteration run as **one pool region per
+/// iteration** with per-RHS convergence masking. Dispatch: the fused
+/// engine when [`can_fuse_block`] allows; else the kernel-per-fork
+/// reference (any PC); else the per-column fallback. Histories are
+/// bitwise identical to [`solve`] — the engines share every kernel and
+/// fold order.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_fused(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &MultiVecMPI,
+    x: &mut MultiVecMPI,
+    cfg: &KspConfig,
+    col_rtol: &[f64],
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<BlockStats> {
+    let k = b.ncols();
+    if x.ncols() != k {
+        return Err(Error::size_mismatch("block solve: b/x column counts"));
+    }
+    if !can_fuse_block(a, pc, b, x, comm) {
+        return solve(a, pc, b, x, cfg, col_rtol, comm, log);
+    }
+    let cfgs = col_cfgs(cfg, col_rtol, k)?;
+    log.begin("KSPSolveBatch");
+    let out = solve_fused_inner(a, pc, b, x, &cfgs, comm, log);
+    log.end("KSPSolveBatch");
+    out
+}
+
+/// Fallback: solve the columns independently (no amortization, any
+/// layout) through the single-RHS dispatcher.
+fn solve_percol(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &MultiVecMPI,
+    x: &mut MultiVecMPI,
+    cfgs: &[KspConfig],
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<BlockStats> {
+    let ctx = b.local().ctx().clone();
+    let mut cols = Vec::with_capacity(cfgs.len());
+    for (c, cfg) in cfgs.iter().enumerate() {
+        let mut bc = VecMPI::new(b.layout().clone(), b.rank(), ctx.clone());
+        b.extract_col_into(c, &mut bc)?;
+        let mut xc = VecMPI::new(b.layout().clone(), b.rank(), ctx.clone());
+        x.extract_col_into(c, &mut xc)?;
+        let stats = crate::ksp::fused::solve(a, pc, &bc, &mut xc, cfg, comm, log)?;
+        x.set_col_from(c, &xc)?;
+        cols.push(stats);
+    }
+    Ok(BlockStats { cols, fused: false })
+}
+
+/// Shared masked-iteration bookkeeping: which columns still iterate, and
+/// the per-column outcome once frozen.
+struct Mask {
+    active: Vec<bool>,
+    reasons: Vec<Option<ConvergedReason>>,
+    its: Vec<usize>,
+}
+
+impl Mask {
+    fn new(k: usize) -> Mask {
+        Mask {
+            active: vec![true; k],
+            reasons: vec![None; k],
+            its: vec![0; k],
+        }
+    }
+
+    fn freeze(&mut self, c: usize, reason: ConvergedReason, it: usize) {
+        self.active[c] = false;
+        self.reasons[c] = Some(reason);
+        self.its[c] = it;
+    }
+
+    fn any_active(&self) -> bool {
+        self.active.iter().any(|&a| a)
+    }
+
+    /// Freeze every column whose convergence test fires at iteration `it`.
+    fn check_all(&mut self, cfgs: &[KspConfig], rnorm: &[f64], bnorm: &[f64], it: usize) {
+        for c in 0..self.active.len() {
+            if self.active[c] {
+                if let Some(reason) = check_convergence(&cfgs[c], rnorm[c], bnorm[c], it) {
+                    self.freeze(c, reason, it);
+                }
+            }
+        }
+    }
+
+    fn into_stats(
+        self,
+        bnorm: &[f64],
+        rnorm: &[f64],
+        histories: Vec<Vec<f64>>,
+        fused: bool,
+    ) -> BlockStats {
+        let cols = self
+            .reasons
+            .into_iter()
+            .zip(self.its)
+            .enumerate()
+            .zip(histories)
+            .map(|((c, (reason, its)), history)| {
+                SolveStats::new(
+                    reason.expect("every column frozen before stats"),
+                    its,
+                    bnorm[c],
+                    rnorm[c],
+                    history,
+                )
+            })
+            .collect();
+        BlockStats { cols, fused }
+    }
+}
+
+/// Batched residual setup shared by both plan-keyed engines: r = b − A·X,
+/// z = M⁻¹r, p = z, plus the slot-ordered (b-norm, (r,z), ‖r‖) batches —
+/// per column the exact fp sequence of the solo hybrid CG setup.
+#[allow(clippy::type_complexity)]
+fn setup_state(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &MultiVecMPI,
+    x: &MultiVecMPI,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<(
+    MultiVecMPI, // r
+    MultiVecMPI, // z
+    MultiVecMPI, // p
+    MultiVecMPI, // w
+    Vec<f64>,    // bnorm
+    Vec<f64>,    // rz
+    Vec<f64>,    // rnorm
+)> {
+    let k = b.ncols();
+    let all = vec![true; k];
+    let plan = a.hybrid_plan().expect("plan checked by caller");
+    let bnorm = hybrid_norm2_cols(b, plan, comm)?;
+    // Work multivectors are first-touch paged by the operator's row
+    // partition — p and w are the SpMM input/output, so their pages must
+    // live where the nnz-balanced row chunks compute (the §VI.A locality
+    // contract, k-wide). `b.duplicate()` would silently revert them to
+    // static-chunk paging.
+    let part = a.diag_block().partition().to_vec();
+    let ctx = b.local().ctx().clone();
+    let fresh =
+        || MultiVecMPI::new_partitioned(b.layout().clone(), b.rank(), k, ctx.clone(), &part);
+    let mut r = fresh();
+    matmult_multi(a, x, &mut r, comm, log)?;
+    log.timed("VecAYPXBatch", (2 * k * r.local().len()) as f64, || {
+        r.aypx_cols(&vec![-1.0; k], b, &all) // r = b − A·x, per column
+    })?;
+    let mut z = fresh();
+    pcapply_multi(pc, &r, &mut z, log)?;
+    let mut p = fresh();
+    p.copy_from(&z)?;
+    let w = fresh();
+    let plan = a.hybrid_plan().unwrap();
+    let rz = hybrid_dot_cols(&r, &z, plan, comm)?;
+    let rnorm = hybrid_norm2_cols(&r, plan, comm)?;
+    Ok((r, z, p, w, bnorm, rz, rnorm))
+}
+
+fn solve_ref_inner(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &MultiVecMPI,
+    x: &mut MultiVecMPI,
+    cfgs: &[KspConfig],
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<BlockStats> {
+    let k = b.ncols();
+    let monitor = cfgs[0].monitor;
+    let (mut r, mut z, mut p, mut w, bnorm, mut rz, mut rnorm) =
+        setup_state(a, pc, b, x, comm, log)?;
+    let mut histories: Vec<Vec<f64>> = vec![Vec::new(); k];
+    if monitor {
+        for c in 0..k {
+            histories[c].push(rnorm[c]);
+        }
+    }
+
+    let mut mask = Mask::new(k);
+    let mut it = 0usize;
+    loop {
+        mask.check_all(cfgs, &rnorm, &bnorm, it);
+        if !mask.any_active() {
+            return Ok(mask.into_stats(&bnorm, &rnorm, histories, false));
+        }
+        // W = A·P — one traversal, one ghost message per neighbour, all k.
+        matmult_multi(a, &p, &mut w, comm, log)?;
+        let plan = a.hybrid_plan().unwrap();
+        let pw = hybrid_dot_cols(&p, &w, plan, comm)?;
+        let mut alphas = vec![0.0; k];
+        for c in 0..k {
+            if !mask.active[c] {
+                continue;
+            }
+            if pw[c] <= 0.0 {
+                // This column's operator is not SPD along p: freeze it with
+                // the solo solver's verdict; the batch keeps the rest.
+                mask.freeze(c, ConvergedReason::DivergedBreakdown, it);
+            } else {
+                alphas[c] = rz[c] / pw[c];
+            }
+        }
+        if !mask.any_active() {
+            return Ok(mask.into_stats(&bnorm, &rnorm, histories, false));
+        }
+        log.timed("VecAXPYBatch", (4 * k * x.local().len()) as f64, || {
+            x.axpy_cols(&alphas, &p, &mask.active)?;
+            let neg: Vec<f64> = alphas.iter().map(|a| -a).collect();
+            r.axpy_cols(&neg, &w, &mask.active)
+        })?;
+        let rnorm_new = hybrid_norm2_cols(&r, a.hybrid_plan().unwrap(), comm)?;
+        it += 1;
+        for c in 0..k {
+            if mask.active[c] {
+                rnorm[c] = rnorm_new[c];
+                if monitor {
+                    histories[c].push(rnorm[c]);
+                }
+            }
+        }
+        // Full-width PC apply and reductions even when some columns are
+        // frozen: the frozen values are never read (the masked updates skip
+        // them), and keeping every layout static is what lets the SpMM and
+        // the ordered folds stay k-independent. The wasted work is bounded
+        // by the batch's convergence spread, which the scheduler's
+        // tolerance-grouping policy exists to keep small (DESIGN.md §6).
+        pcapply_multi(pc, &r, &mut z, log)?;
+        let rz_new = hybrid_dot_cols(&r, &z, a.hybrid_plan().unwrap(), comm)?;
+        let mut betas = vec![0.0; k];
+        for c in 0..k {
+            if mask.active[c] {
+                betas[c] = rz_new[c] / rz[c];
+                rz[c] = rz_new[c];
+            }
+        }
+        log.timed("VecAYPXBatch", (2 * k * p.local().len()) as f64, || {
+            p.aypx_cols(&betas, &z, &mask.active) // p = z + β·p
+        })?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused engine: one pool region per iteration, k-wide, masked
+// ---------------------------------------------------------------------------
+
+/// Raw base pointer of a slab buffer, shared across region threads (same
+/// discipline as the single-RHS fused module).
+struct Raw(*mut f64);
+unsafe impl Send for Raw {}
+unsafe impl Sync for Raw {}
+
+/// # Safety
+/// `[lo, lo+len)` must be in bounds of the allocation behind `raw` and no
+/// thread may hold an overlapping `&mut` for the returned lifetime
+/// (guaranteed by the barrier phase structure).
+#[inline]
+unsafe fn ref_slice<'a>(raw: &Raw, lo: usize, len: usize) -> &'a [f64] {
+    std::slice::from_raw_parts(raw.0.add(lo) as *const f64, len)
+}
+
+/// # Safety
+/// As [`ref_slice`], and the range must be writable by exactly this
+/// thread in the current phase (disjoint chunks × disjoint slabs).
+#[inline]
+#[allow(clippy::mut_from_ref)]
+unsafe fn mut_slice<'a>(raw: &Raw, lo: usize, len: usize) -> &'a mut [f64] {
+    std::slice::from_raw_parts_mut(raw.0.add(lo), len)
+}
+
+/// Master-only raw pointer to the communicator (dereferenced exclusively
+/// by thread 0; sequenced on the master thread itself).
+struct RawComm(*mut Comm);
+unsafe impl Send for RawComm {}
+unsafe impl Sync for RawComm {}
+
+/// Master-only raw pointer to the scatter plan (same discipline).
+struct RawScatter(*mut VecScatter);
+unsafe impl Send for RawScatter {}
+unsafe impl Sync for RawScatter {}
+
+/// Read-only view of the persistent multi ghost buffer: written by the
+/// master's `end_multi()`, read by workers only after a barrier orders
+/// the writes.
+struct RawGhost(*const f64, usize);
+unsafe impl Send for RawGhost {}
+unsafe impl Sync for RawGhost {}
+
+fn solve_fused_inner(
+    a: &mut MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &MultiVecMPI,
+    x: &mut MultiVecMPI,
+    cfgs: &[KspConfig],
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<BlockStats> {
+    let k = b.ncols();
+    let n = x.local().len();
+    let monitor = cfgs[0].monitor;
+    let inv_diag: Option<&[f64]> = match pc.fused() {
+        FusedPc::Jacobi(d) => Some(d),
+        FusedPc::Identity => None,
+        FusedPc::Unfusable => {
+            return Err(Error::Unsupported("fused block CG: PC is not fusable".into()))
+        }
+    };
+    if let Some(d) = inv_diag {
+        if d.len() != n {
+            return Err(Error::size_mismatch("fused block CG: inv_diag length"));
+        }
+    }
+
+    // ---- setup: identical (per column) to the solo hybrid CG setup -------
+    let (mut r, mut z, mut p, mut w, bnorm, mut rz, mut rnorm) =
+        setup_state(a, pc, b, x, comm, log)?;
+    let mut histories: Vec<Vec<f64>> = vec![Vec::new(); k];
+    if monitor {
+        for c in 0..k {
+            histories[c].push(rnorm[c]);
+        }
+    }
+
+    // ---- split-borrow the operator for the k-wide region ------------------
+    a.ensure_multi_width(k)?;
+    let (diag, off, plan, scratch, scatter) = a.hybrid_split_multi(k)?;
+    let ctx = diag.ctx().clone();
+    let pool = ctx.pool();
+    let t = pool.nthreads();
+    let part: Vec<(usize, usize)> = plan.partition().to_vec();
+    let seg_ptr: &[usize] = plan.seg_ptr();
+    let slot_ranges: &[(usize, usize)] = plan.slot_ranges();
+    let glen = off.cols();
+    let (gp, gl) = scatter.ghost_multi_raw();
+    debug_assert_eq!(gl, glen * k);
+    let ghost_raw = RawGhost(gp, gl);
+
+    let x_raw = Raw(x.local_mut().as_mut_slice().as_mut_ptr());
+    let r_raw = Raw(r.local_mut().as_mut_slice().as_mut_ptr());
+    let z_raw = Raw(z.local_mut().as_mut_slice().as_mut_ptr());
+    let p_raw = Raw(p.local_mut().as_mut_slice().as_mut_ptr());
+    let w_raw = Raw(w.local_mut().as_mut_slice().as_mut_ptr());
+    let scratch_raw = Raw(scratch.as_mut_ptr());
+    let comm_raw = RawComm(&mut *comm as *mut Comm);
+    let scatter_raw = RawScatter(&mut *scatter as *mut VecScatter);
+
+    let barrier = RegionBarrier::new(t);
+    // Per-(thread, column) reduction slots, thread-major (`tid·k + c`).
+    let pw_slots = ReduceSlots::new(t * k);
+    let rr_slots = ReduceSlots::new(t * k);
+    let rz_slots = ReduceSlots::new(t * k);
+    // Published per-column scalars: pw at `c`, ‖r‖² at `k + c`, (r,z) at
+    // `2k + c` — master writes after its ordered allreduces, everyone
+    // reads after the next barrier.
+    let shared = ReduceSlots::new(3 * k);
+    let iter_flops = (2.0 * (diag.nnz() + off.nnz()) as f64 + 12.0 * n as f64) * k as f64;
+
+    let mut mask = Mask::new(k);
+    let mut it = 0usize;
+    loop {
+        mask.check_all(cfgs, &rnorm, &bnorm, it);
+        if !mask.any_active() {
+            return Ok(mask.into_stats(&bnorm, &rnorm, histories, true));
+        }
+        let rz_now = rz.clone();
+        let act: &[bool] = &mask.active;
+        // One pool fork per rank per iteration: the master posts the k-wide
+        // ghost sends for P in the entry hook, the diagonal slot partials
+        // hide the exchange, and every phase loops the *live* columns.
+        log.timed("KSPFusedIterBatch", iter_flops, || {
+            pool.run_posted(
+                || {
+                    // SAFETY: master thread only; sequenced before its own
+                    // region body.
+                    let comm = unsafe { &mut *comm_raw.0 };
+                    let sc = unsafe { &mut *scatter_raw.0 };
+                    let ps = unsafe { ref_slice(&p_raw, 0, n * k) };
+                    sc.begin_local_multi(ps, k, comm)
+                        .expect("fused block CG: scatter begin");
+                    sc.mark_compute_start();
+                },
+                |tid| {
+                    let mut ws = barrier.waiter();
+                    // -- 1. diagonal slot partials for all k columns in one
+                    //    CSR traversal, ghost messages in flight.
+                    let (rlo, rhi) = part[tid];
+                    if rlo < rhi {
+                        let (slo, shi) = (seg_ptr[rlo], seg_ptr[rhi]);
+                        // SAFETY: disjoint row chunks ⇒ disjoint seg×k
+                        // windows.
+                        let scr =
+                            unsafe { mut_slice(&scratch_raw, slo * k, (shi - slo) * k) };
+                        let pall = unsafe { ref_slice(&p_raw, 0, n * k) };
+                        plan.diag_partials_multi(diag, pall, k, rlo, rhi, scr);
+                    }
+                    if tid == 0 {
+                        // Complete the k-wide receives; workers may still be
+                        // in phase 1 — that concurrency IS the overlap.
+                        // SAFETY: master-only.
+                        let comm = unsafe { &mut *comm_raw.0 };
+                        let sc = unsafe { &mut *scatter_raw.0 };
+                        sc.end_multi(comm).expect("fused block CG: scatter end");
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 2. ghost partials + ascending-slot fold → W = A·P.
+                    if rlo < rhi {
+                        // SAFETY: ghost writes ordered by the barrier; the
+                        // slab stride n keeps w's columns disjoint.
+                        let ghosts =
+                            unsafe { std::slice::from_raw_parts(ghost_raw.0, ghost_raw.1) };
+                        let (slo, shi) = (seg_ptr[rlo], seg_ptr[rhi]);
+                        let scr = unsafe { ref_slice(&scratch_raw, slo * k, (shi - slo) * k) };
+                        unsafe {
+                            plan.apply_rows_multi(
+                                off, ghosts, k, scr, rlo, rhi, w_raw.0, n,
+                            );
+                        }
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 3. (p, w) partials per live column over this
+                    //    thread's slot chunk.
+                    let (lo, hi) = slot_ranges[tid];
+                    for (c, &on) in act.iter().enumerate() {
+                        let v = if on {
+                            // SAFETY: w fully written (barrier); reads only.
+                            let pch = unsafe { ref_slice(&p_raw, c * n + lo, hi - lo) };
+                            let wc = unsafe { ref_slice(&w_raw, c * n + lo, hi - lo) };
+                            blas1::dot(pch, wc)
+                        } else {
+                            0.0
+                        };
+                        pw_slots.set(tid * k + c, v);
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 4. master: k-wide slot-ordered allreduce of (p, w).
+                    if tid == 0 {
+                        let comm = unsafe { &mut *comm_raw.0 };
+                        let parts: Vec<Vec<f64>> = (0..t)
+                            .map(|ts| (0..k).map(|c| pw_slots.get(ts * k + c)).collect())
+                            .collect();
+                        let pw = comm
+                            .allreduce_sum_ordered_vec(parts)
+                            .expect("fused block CG: pw allreduce");
+                        for (c, v) in pw.iter().enumerate() {
+                            shared.set(c, *v);
+                        }
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 5. per live column with pw > 0: x += αp; r −= αw;
+                    //    ‖r‖²; z = M⁻¹r; (r,z) — slot chunk. Columns whose
+                    //    pw ≤ 0 broke down: every thread of every rank sees
+                    //    the identical pw and skips them together (the
+                    //    master freezes them after the join).
+                    for (c, &on) in act.iter().enumerate() {
+                        if !on || shared.get(c) <= 0.0 {
+                            rr_slots.set(tid * k + c, 0.0);
+                            rz_slots.set(tid * k + c, 0.0);
+                            continue;
+                        }
+                        let alpha = rz_now[c] / shared.get(c);
+                        // SAFETY: slot chunks × slabs are disjoint across
+                        // threads; all phases below touch only this
+                        // thread's chunk of column c.
+                        let xc = unsafe { mut_slice(&x_raw, c * n + lo, hi - lo) };
+                        let pch = unsafe { ref_slice(&p_raw, c * n + lo, hi - lo) };
+                        let wc = unsafe { ref_slice(&w_raw, c * n + lo, hi - lo) };
+                        blas1::axpy(alpha, pch, xc);
+                        let rc = unsafe { mut_slice(&r_raw, c * n + lo, hi - lo) };
+                        blas1::axpy(-alpha, wc, rc);
+                        rr_slots.set(tid * k + c, blas1::sqnorm(rc));
+                        let zc = unsafe { mut_slice(&z_raw, c * n + lo, hi - lo) };
+                        match inv_diag {
+                            Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                            None => blas1::copy(rc, zc),
+                        }
+                        rz_slots.set(tid * k + c, blas1::dot(rc, zc));
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 6. master: k-wide ordered allreduce of (‖r‖², (r,z))
+                    //    — one 2k-component payload.
+                    if tid == 0 {
+                        let comm = unsafe { &mut *comm_raw.0 };
+                        let parts: Vec<Vec<f64>> = (0..t)
+                            .map(|ts| {
+                                let mut row = Vec::with_capacity(2 * k);
+                                for c in 0..k {
+                                    row.push(rr_slots.get(ts * k + c));
+                                }
+                                for c in 0..k {
+                                    row.push(rz_slots.get(ts * k + c));
+                                }
+                                row
+                            })
+                            .collect();
+                        let s = comm
+                            .allreduce_sum_ordered_vec(parts)
+                            .expect("fused block CG: rr/rz allreduce");
+                        for c in 0..k {
+                            shared.set(k + c, s[c]);
+                            shared.set(2 * k + c, s[k + c]);
+                        }
+                    }
+                    barrier.wait(&mut ws);
+                    // -- 7. p = z + βp per live, non-broken column.
+                    for (c, &on) in act.iter().enumerate() {
+                        if !on || shared.get(c) <= 0.0 {
+                            continue;
+                        }
+                        let beta = shared.get(2 * k + c) / rz_now[c];
+                        let zc = unsafe { ref_slice(&z_raw, c * n + lo, hi - lo) };
+                        let pm = unsafe { mut_slice(&p_raw, c * n + lo, hi - lo) };
+                        blas1::aypx(beta, zc, pm);
+                    }
+                },
+            );
+        });
+        // ---- after the join: freeze breakdowns, advance the rest ----------
+        let mut progressed = false;
+        for c in 0..k {
+            if !mask.active[c] {
+                continue;
+            }
+            if shared.get(c) <= 0.0 {
+                mask.freeze(c, ConvergedReason::DivergedBreakdown, it);
+                continue;
+            }
+            progressed = true;
+            rnorm[c] = shared.get(k + c).sqrt();
+            rz[c] = shared.get(2 * k + c);
+        }
+        if progressed {
+            it += 1;
+            if monitor {
+                for c in 0..k {
+                    if mask.active[c] {
+                        histories[c].push(rnorm[c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::ksp::testutil::max_err;
+    use crate::pc::jacobi::PcJacobi;
+    use crate::pc::PcNone;
+    use crate::vec::ctx::ThreadCtx;
+    use crate::vec::mpi::Layout;
+
+    /// Symmetric, strictly diagonally dominant global triplets with
+    /// long-range couplings (rows straddle several hybrid slots). Every
+    /// rank generates the full list and keeps its own rows.
+    fn spd_wide_entries(n: usize) -> Vec<(usize, usize, f64)> {
+        let mut es = Vec::new();
+        for i in 0..n {
+            es.push((i, i, 6.0));
+            if i + 1 < n {
+                es.push((i, i + 1, -1.0));
+                es.push((i + 1, i, -1.0));
+            }
+            let j = (i * 5 + n / 3) % n;
+            if j != i {
+                es.push((i, j, -0.05));
+                es.push((j, i, -0.05));
+            }
+        }
+        es
+    }
+
+    /// Deterministic per-(column, global index) RHS entry.
+    fn rhs_entry(c: usize, g: usize) -> f64 {
+        (g as f64 * 0.05 + c as f64 * 1.7).sin() + 0.3
+    }
+
+    /// Assemble the SPD system on the slot-aligned layout with the plan
+    /// enabled, plus a k-column RHS.
+    fn system(
+        n: usize,
+        k: usize,
+        threads: usize,
+        comm: &mut Comm,
+    ) -> (MatMPIAIJ, MultiVecMPI, MultiVecMPI) {
+        let layout = Layout::slot_aligned(n, comm.size(), threads);
+        let (lo, hi) = layout.range(comm.rank());
+        let ctx = ThreadCtx::new(threads);
+        let es: Vec<_> = spd_wide_entries(n)
+            .into_iter()
+            .filter(|&(i, _, _)| i >= lo && i < hi)
+            .collect();
+        let mut a =
+            MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, comm, ctx.clone()).unwrap();
+        a.enable_hybrid().unwrap();
+        let mut b = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        for c in 0..k {
+            let xs: Vec<f64> = (lo..hi).map(|g| rhs_entry(c, g)).collect();
+            b.local_mut().set_col(c, &xs).unwrap();
+        }
+        let x = MultiVecMPI::new(layout, comm.rank(), k, ctx);
+        (a, b, x)
+    }
+
+    #[test]
+    fn fused_and_reference_engines_agree_bitwise() {
+        World::run(2, |mut c| {
+            let cfg = KspConfig {
+                rtol: 1e-9,
+                monitor: true,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let (mut a, b, mut x1) = system(90, 3, 2, &mut c);
+            let mut x2 = x1.duplicate();
+            let s_ref = solve(&mut a, &PcNone, &b, &mut x1, &cfg, &[], &mut c, &log).unwrap();
+            let s_fus =
+                solve_fused(&mut a, &PcNone, &b, &mut x2, &cfg, &[], &mut c, &log).unwrap();
+            assert!(!s_ref.fused);
+            assert!(s_fus.fused);
+            assert!(s_ref.all_converged() && s_fus.all_converged());
+            for col in 0..3 {
+                let (u, f) = (&s_ref.cols[col], &s_fus.cols[col]);
+                assert_eq!(u.iterations, f.iterations, "col {col}");
+                assert_eq!(u.history.len(), f.history.len(), "col {col}");
+                for (a_, b_) in u.history.iter().zip(&f.history) {
+                    assert_eq!(a_.to_bits(), b_.to_bits(), "col {col}");
+                }
+            }
+            for col in 0..3 {
+                for (a_, b_) in x1.local().col(col).iter().zip(x2.local().col(col)) {
+                    assert_eq!(a_.to_bits(), b_.to_bits(), "solution col {col}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn solves_spd_system_all_columns() {
+        World::run(2, |mut c| {
+            let cfg = KspConfig {
+                rtol: 1e-10,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let (mut a, b, mut x) = system(120, 4, 2, &mut c);
+            let pc = PcJacobi::setup(&a, &mut c).unwrap();
+            let stats =
+                solve_fused(&mut a, &pc, &b, &mut x, &cfg, &[], &mut c, &log).unwrap();
+            assert!(stats.fused);
+            assert!(stats.all_converged());
+            // verify every column: ‖b − A x‖ small
+            let layout = x.layout().clone();
+            let ctx = b.local().ctx().clone();
+            for col in 0..4 {
+                let mut xc = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+                x.extract_col_into(col, &mut xc).unwrap();
+                let mut axc = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+                a.mult(&xc, &mut axc, &mut c).unwrap();
+                let mut bc = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+                b.extract_col_into(col, &mut bc).unwrap();
+                assert!(
+                    max_err(&axc, &bc, &mut c) < 1e-7,
+                    "col {col} residual too large"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn per_column_tolerances_mask_independently() {
+        World::run(1, |mut c| {
+            let cfg = KspConfig {
+                rtol: 1e-4,
+                monitor: true,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let (mut a, mut b, mut x) = system(96, 3, 2, &mut c);
+            // identical RHS in every column: identical trajectories, so the
+            // freeze points are strictly ordered by tolerance alone
+            let col0 = b.local().col(0).to_vec();
+            b.local_mut().set_col(1, &col0).unwrap();
+            b.local_mut().set_col(2, &col0).unwrap();
+            let rtols = [1e-2, 1e-6, 1e-10];
+            let stats =
+                solve_fused(&mut a, &PcNone, &b, &mut x, &cfg, &rtols, &mut c, &log).unwrap();
+            assert!(stats.all_converged());
+            // looser tolerance ⇒ no more iterations than tighter
+            assert!(stats.cols[0].iterations <= stats.cols[1].iterations);
+            assert!(stats.cols[1].iterations <= stats.cols[2].iterations);
+            // masking: the early column's history is frozen short
+            assert_eq!(stats.cols[0].history.len(), stats.cols[0].iterations + 1);
+            assert!(stats.cols[0].history.len() < stats.cols[2].history.len());
+            // each met its own tolerance
+            for (col, s) in stats.cols.iter().enumerate() {
+                assert!(
+                    s.final_residual <= rtols[col] * s.b_norm,
+                    "col {col}: {} vs {}",
+                    s.final_residual,
+                    rtols[col] * s.b_norm
+                );
+            }
+            assert_eq!(stats.iterations(), stats.cols[2].iterations);
+        });
+    }
+
+    #[test]
+    fn breakdown_column_freezes_batch_continues() {
+        World::run(1, |mut c| {
+            // Column 1's recurrence hits an indefinite direction: diag has
+            // a negative entry only "visible" to the solve through p·Ap.
+            let layout = Layout::slot_aligned(4, 1, 1);
+            let ctx = ThreadCtx::new(1);
+            let es = vec![(0, 0, 2.0), (1, 1, 2.0), (2, 2, -1.0), (3, 3, 2.0)];
+            let mut a =
+                MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, &mut c, ctx.clone())
+                    .unwrap();
+            a.enable_hybrid().unwrap();
+            let mut b = MultiVecMPI::new(layout.clone(), 0, 2, ctx.clone());
+            // column 0 avoids the indefinite coordinate; column 1 hits it
+            b.local_mut().set_col(0, &[1.0, 1.0, 0.0, 1.0]).unwrap();
+            b.local_mut().set_col(1, &[1.0, 1.0, 1.0, 1.0]).unwrap();
+            let mut x = MultiVecMPI::new(layout, 0, 2, ctx);
+            let cfg = KspConfig {
+                rtol: 1e-12,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let stats =
+                solve_fused(&mut a, &PcNone, &b, &mut x, &cfg, &[], &mut c, &log).unwrap();
+            assert!(stats.cols[0].converged(), "{:?}", stats.cols[0].reason);
+            assert_eq!(stats.cols[1].reason, ConvergedReason::DivergedBreakdown);
+        });
+    }
+
+    #[test]
+    fn unfusable_pc_routes_to_reference_engine() {
+        World::run(2, |mut c| {
+            let cfg = KspConfig {
+                rtol: 1e-8,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let (mut a, b, mut x) = system(80, 2, 2, &mut c);
+            let pc = crate::pc::bjacobi::PcBJacobi::setup_ilu0(&a).unwrap();
+            assert!(!can_fuse_block(&a, &pc, &b, &x, &c));
+            let stats = solve_fused(&mut a, &pc, &b, &mut x, &cfg, &[], &mut c, &log).unwrap();
+            assert!(!stats.fused, "must route through the reference engine");
+            assert!(stats.all_converged());
+        });
+    }
+
+    #[test]
+    fn no_plan_routes_to_per_column_fallback() {
+        World::run(2, |mut c| {
+            // Layout::split(10, 2) is not slot-aligned for 2×2 ⇒ no plan;
+            // the batch entrypoint must still solve, column by column.
+            let n = 10;
+            let layout = Layout::split(n, 2);
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let es: Vec<_> = spd_wide_entries(n)
+                .into_iter()
+                .filter(|&(i, _, _)| i >= lo && i < hi)
+                .collect();
+            let mut a =
+                MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, &mut c, ctx.clone())
+                    .unwrap();
+            assert!(a.enable_hybrid().is_err());
+            let mut b = MultiVecMPI::new(layout.clone(), c.rank(), 2, ctx.clone());
+            for col in 0..2 {
+                let xs: Vec<f64> = (lo..hi).map(|g| rhs_entry(col, g)).collect();
+                b.local_mut().set_col(col, &xs).unwrap();
+            }
+            let mut x = MultiVecMPI::new(layout, c.rank(), 2, ctx);
+            let cfg = KspConfig {
+                rtol: 1e-8,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let stats =
+                solve_fused(&mut a, &PcNone, &b, &mut x, &cfg, &[], &mut c, &log).unwrap();
+            assert!(!stats.fused);
+            assert!(stats.all_converged());
+        });
+    }
+
+    #[test]
+    fn bad_widths_rejected() {
+        World::run(1, |mut c| {
+            let (mut a, b, mut x) = system(16, 2, 1, &mut c);
+            let log = EventLog::new();
+            let cfg = KspConfig::default();
+            assert!(solve(&mut a, &PcNone, &b, &mut x, &cfg, &[1e-3], &mut c, &log).is_err());
+            let mut x3 = MultiVecMPI::new(x.layout().clone(), 0, 3, b.local().ctx().clone());
+            assert!(
+                solve(&mut a, &PcNone, &b, &mut x3, &cfg, &[], &mut c, &log).is_err(),
+                "b/x width mismatch"
+            );
+        });
+    }
+}

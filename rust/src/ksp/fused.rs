@@ -111,6 +111,23 @@ pub fn can_fuse(a: &MatMPIAIJ, pc: &dyn Precond, b: &VecMPI, x: &VecMPI, comm: &
         && ctx.always_forks()
 }
 
+/// The operator-side half of the hybrid-fusability check, shared with the
+/// batched engines ([`crate::ksp::block`]) so the gating conditions cannot
+/// drift between the single-RHS and k-RHS paths: a built plan on a square
+/// slot-aligned operator whose grid matches this communicator and whose
+/// local slot count matches the operator's thread context.
+pub(crate) fn plan_matches_operator(a: &MatMPIAIJ, comm: &Comm) -> bool {
+    let plan = match a.hybrid_plan() {
+        Some(p) => p,
+        None => return false,
+    };
+    if a.row_layout() != a.col_layout() || comm.size() != a.row_layout().size() {
+        return false;
+    }
+    let ctx = a.diag_block().ctx();
+    plan.nslots_local() == ctx.nthreads() && plan.first_slot() == comm.rank() * ctx.nthreads()
+}
+
 /// Can this combination run the **multi-rank hybrid** fused path? Requires
 /// a built [`crate::mat::mpiaij::HybridPlan`] (see
 /// [`MatMPIAIJ::enable_hybrid`]) whose grid matches this communicator, an
@@ -124,17 +141,14 @@ pub fn can_fuse_hybrid(
     x: &VecMPI,
     comm: &Comm,
 ) -> bool {
-    let plan = match a.hybrid_plan() {
-        Some(p) => p,
-        None => return false,
-    };
+    if !plan_matches_operator(a, comm) {
+        return false;
+    }
     if matches!(pc.fused(), FusedPc::Unfusable) {
         return false;
     }
-    if a.row_layout() != a.col_layout()
-        || b.layout() != a.row_layout()
+    if b.layout() != a.row_layout()
         || x.layout() != a.row_layout()
-        || comm.size() != a.row_layout().size()
         // Rank must match too: on uneven layouts a vector built for another
         // rank shares the layout but has a different local length, and the
         // region's raw slices are sized for this rank's plan.
@@ -144,11 +158,28 @@ pub fn can_fuse_hybrid(
         return false;
     }
     let ctx = a.diag_block().ctx();
-    plan.nslots_local() == ctx.nthreads()
-        && plan.first_slot() == comm.rank() * ctx.nthreads()
-        && Arc::ptr_eq(ctx, b.local().ctx())
+    Arc::ptr_eq(ctx, b.local().ctx())
         && Arc::ptr_eq(ctx, x.local().ctx())
         && ctx.always_forks()
+}
+
+/// Is this the degenerate 1 rank × 1 thread decomposition with the legacy
+/// single-rank fusion available? The legacy fused path is **bitwise
+/// identical to the unfused solver** (the PR 1 contract), while the hybrid
+/// plan's slot-segmented SpMV folds each row with a single accumulator and
+/// so differs from the 4-way-unrolled unfused kernel in the last ulps.
+/// Routing the degenerate case through the legacy path restores *exact*
+/// fused ≡ unfused agreement at 1×1 — and costs nothing elsewhere: the
+/// G = 1 slot-grid group has no other `ranks × threads` member, so the
+/// decomposition-invariance contract is vacuous there.
+fn degenerate_serial(
+    a: &MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &VecMPI,
+    comm: &Comm,
+) -> bool {
+    comm.size() == 1 && a.diag_block().ctx().nthreads() == 1 && can_fuse(a, pc, b, x, comm)
 }
 
 /// Preconditioned CG with fused single-fork iterations.
@@ -158,7 +189,9 @@ pub fn can_fuse_hybrid(
 /// comm/compute overlap, slot-ordered deterministic reductions — bitwise
 /// identical across `ranks × threads` decompositions of one slot grid);
 /// else the legacy single-rank fused path (bitwise identical to the unfused
-/// solver); else the kernel-per-fork fallback [`crate::ksp::cg::solve`].
+/// solver — preferred over the hybrid path at the degenerate 1×1
+/// decomposition, see [`degenerate_serial`]); else the kernel-per-fork
+/// fallback [`crate::ksp::cg::solve`].
 pub fn solve(
     a: &mut MatMPIAIJ,
     pc: &dyn Precond,
@@ -168,7 +201,7 @@ pub fn solve(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    if can_fuse_hybrid(a, pc, b, x, comm) {
+    if can_fuse_hybrid(a, pc, b, x, comm) && !degenerate_serial(a, pc, b, x, comm) {
         log.begin("KSPSolve");
         let out = cg_hybrid_inner(a, pc, b, x, cfg, comm, log);
         log.end("KSPSolve");
@@ -828,11 +861,12 @@ pub fn solve_chebyshev_auto(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    let (emin, emax) = if can_fuse_hybrid(a, pc, b, x, comm) {
-        estimate_bounds_hybrid(a, pc, b, 20, comm, log)?
-    } else {
-        crate::ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?
-    };
+    let (emin, emax) =
+        if can_fuse_hybrid(a, pc, b, x, comm) && !degenerate_serial(a, pc, b, x, comm) {
+            estimate_bounds_hybrid(a, pc, b, 20, comm, log)?
+        } else {
+            crate::ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?
+        };
     solve_chebyshev(a, pc, b, x, emin, emax, cfg, comm, log)
 }
 
@@ -851,7 +885,7 @@ pub fn solve_chebyshev(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    if can_fuse_hybrid(a, pc, b, x, comm) {
+    if can_fuse_hybrid(a, pc, b, x, comm) && !degenerate_serial(a, pc, b, x, comm) {
         if !(emax > emin && emin > 0.0) {
             return Err(Error::InvalidOption(format!(
                 "Chebyshev needs 0 < emin < emax, got [{emin}, {emax}]"

@@ -18,6 +18,7 @@ pub mod bicgstab;
 pub mod richardson;
 pub mod chebyshev;
 pub mod fused;
+pub mod block;
 
 use crate::comm::endpoint::Comm;
 use crate::coordinator::logging::EventLog;

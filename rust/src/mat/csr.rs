@@ -364,6 +364,108 @@ impl MatSeqAIJ {
         Ok(())
     }
 
+    /// SpMM (MatMatMult against a dense multivector): `Y = A·X` for `k`
+    /// column-slab right-hand sides in **one matrix traversal** — the
+    /// arithmetic-intensity play of the batch solve engine (DESIGN.md §6).
+    /// `x` is `k` slabs of `self.cols` values, `y` is `k` slabs of
+    /// `self.rows`; the CSR arrays (the dominant memory stream) are read
+    /// once and feed all `k` columns via the innermost column loop.
+    ///
+    /// Per column the row sum uses a single accumulator in CSR order, so
+    /// results agree with [`MatSeqAIJ::mult_slices`] (4-way unrolled) to
+    /// rounding, not bitwise; the bitwise per-column contract of the batch
+    /// solvers comes from the slot-segmented `HybridPlan` multi kernels,
+    /// which share their accumulation order with the single-RHS plan path.
+    pub fn mult_multi_slices(&self, x: &[f64], y: &mut [f64], k: usize) -> Result<()> {
+        if k < 1 || x.len() != self.cols * k || y.len() != self.rows * k {
+            return Err(Error::size_mismatch(format!(
+                "SpMM: A is {}x{}, x is {} ({} cols), y is {} ({} cols)",
+                self.rows,
+                self.cols,
+                x.len(),
+                k,
+                y.len(),
+                k
+            )));
+        }
+        self.spmm_sweep(x, y, k, false);
+        Ok(())
+    }
+
+    /// SpMM accumulate: `Y += A·X` over `k` column slabs — the ghost-block
+    /// half of the plain (non-plan) distributed SpMM. Skips the sweep
+    /// entirely for an all-empty block, as [`MatSeqAIJ::mult_add_slices`].
+    pub fn mult_add_multi_slices(&self, x: &[f64], y: &mut [f64], k: usize) -> Result<()> {
+        if k < 1 || x.len() != self.cols * k || y.len() != self.rows * k {
+            return Err(Error::size_mismatch("SpMM add shapes"));
+        }
+        if self.col_idx.is_empty() {
+            return Ok(());
+        }
+        self.spmm_sweep(x, y, k, true);
+        Ok(())
+    }
+
+    /// The shared threaded SpMM sweep behind `mult_multi_slices` /
+    /// `mult_add_multi_slices`: one CSR traversal feeds all `k` column
+    /// slabs; `accumulate` selects `Y = A·X` vs `Y += A·X`. Caller has
+    /// validated the slab shapes.
+    fn spmm_sweep(&self, x: &[f64], y: &mut [f64], k: usize, accumulate: bool) {
+        debug_assert!(x.len() == self.cols * k && y.len() == self.rows * k);
+        let part = &self.partition;
+        let raw = RawMut(y.as_mut_ptr());
+        let (rows, cols) = (self.rows, self.cols);
+        self.ctx.for_range(part.len().max(1), |tid, _l, _h| {
+            if tid >= part.len() {
+                return;
+            }
+            let (rlo, rhi) = part[tid];
+            let vals = self.vals.as_ptr();
+            let cix = self.col_idx.as_ptr();
+            let mut acc = vec![0.0f64; k];
+            for i in rlo..rhi {
+                let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                acc.fill(0.0);
+                // SAFETY: CSR invariants validated in from_csr; every
+                // col_idx < cols, so c·cols + j is in bounds of each slab.
+                for e in lo..hi {
+                    unsafe {
+                        let v = *vals.add(e);
+                        let j = *cix.add(e);
+                        for (c, a) in acc.iter_mut().enumerate() {
+                            *a += v * *x.get_unchecked(c * cols + j);
+                        }
+                    }
+                }
+                for (c, a) in acc.iter().enumerate() {
+                    // SAFETY: row chunks are disjoint across threads, slabs
+                    // are disjoint per column.
+                    unsafe {
+                        let dst = raw.ptr().add(c * rows + i);
+                        if accumulate {
+                            *dst += *a;
+                        } else {
+                            *dst = *a;
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// SpMM on multivectors: `Y = A·X`.
+    pub fn mult_multi(
+        &self,
+        x: &crate::vec::multi::MultiVec,
+        y: &mut crate::vec::multi::MultiVec,
+    ) -> Result<()> {
+        if x.ncols() != y.ncols() {
+            return Err(Error::size_mismatch("SpMM: column counts differ"));
+        }
+        let k = x.ncols();
+        self.mult_multi_slices(x.as_slice(), y.as_mut_slice(), k)
+    }
+
     /// MatMultAdd: `y += A·x` (threaded).
     pub fn mult_add_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
         if x.len() != self.cols || y.len() != self.rows {
@@ -915,5 +1017,66 @@ mod tests {
     fn pages_cover_nnz() {
         let m = random_csr(200, 200, 6, 1, ctx());
         assert_eq!(m.pages().len(), m.nnz());
+    }
+
+    #[test]
+    fn spmm_matches_per_column_spmv() {
+        // One traversal feeding k columns must agree with k single SpMVs to
+        // rounding (the accumulator structures differ: single vs 4-way).
+        use crate::vec::multi::MultiVec;
+        let m = random_csr(151, 97, 5, 17, ctx());
+        let k = 4;
+        let mut rng = XorShift64::new(23);
+        let mut x = MultiVec::new(97, k, m.ctx().clone());
+        for c in 0..k {
+            let col: Vec<f64> = (0..97).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            x.set_col(c, &col).unwrap();
+        }
+        let mut y = MultiVec::new(151, k, m.ctx().clone());
+        m.mult_multi(&x, &mut y).unwrap();
+        for c in 0..k {
+            let mut single = vec![0.0; 151];
+            m.mult_slices(x.col(c), &mut single).unwrap();
+            for (a, b) in y.col(c).iter().zip(&single) {
+                assert!(close(*a, *b, 1e-12).is_ok(), "col {c}: {a} vs {b}");
+            }
+        }
+        // k = 1 SpMM is also a valid SpMV
+        let mut x1 = MultiVec::new(97, 1, m.ctx().clone());
+        x1.set_col(0, x.col(2)).unwrap();
+        let mut y1 = MultiVec::new(151, 1, m.ctx().clone());
+        m.mult_multi(&x1, &mut y1).unwrap();
+        for (a, b) in y1.col(0).iter().zip(y.col(2)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "same kernel, same k-independent order");
+        }
+    }
+
+    #[test]
+    fn spmm_add_accumulates_and_skips_empty() {
+        let m = laplacian(10, ctx());
+        let k = 2;
+        let x = vec![1.0; 10 * k];
+        let mut y = vec![5.0; 10 * k];
+        m.mult_add_multi_slices(&x, &mut y, k).unwrap();
+        for c in 0..k {
+            assert_eq!(y[c * 10], 6.0);
+            assert_eq!(y[c * 10 + 5], 5.0);
+            assert_eq!(y[c * 10 + 9], 6.0);
+        }
+        // empty matrix: y untouched
+        let e = MatSeqAIJ::from_csr(3, 3, vec![0, 0, 0, 0], vec![], vec![], ctx()).unwrap();
+        let mut y = vec![7.0; 6];
+        e.mult_add_multi_slices(&[0.0; 6], &mut y, 2).unwrap();
+        assert!(y.iter().all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn spmm_shape_errors() {
+        let m = laplacian(5, ctx());
+        let mut y = vec![0.0; 10];
+        assert!(m.mult_multi_slices(&[0.0; 9], &mut y, 2).is_err());
+        assert!(m.mult_multi_slices(&[0.0; 10], &mut vec![0.0; 9], 2).is_err());
+        assert!(m.mult_multi_slices(&[0.0; 10], &mut y, 0).is_err());
+        assert!(m.mult_add_multi_slices(&[0.0; 9], &mut y, 2).is_err());
     }
 }

@@ -26,6 +26,7 @@ use crate::mat::csr::{MatBuilder, MatSeqAIJ};
 use crate::thread::schedule::nnz_balanced_chunks;
 use crate::vec::ctx::ThreadCtx;
 use crate::vec::mpi::{Layout, SlotGrid, VecMPI};
+use crate::vec::multi::MultiVecMPI;
 use crate::vec::scatter::VecScatter;
 
 const T_STASH: Tag = RESERVED_TAG_BASE + 32;
@@ -175,6 +176,108 @@ impl HybridPlan {
             y[i - rlo] = yi;
         }
     }
+
+    /// Phase A, k-wide (SpMM): diagonal-block slot partials for rows
+    /// `[rlo, rhi)` over `k` column slabs in **one traversal of the CSR
+    /// arrays** — the batch engine's amortization on the hybrid path. `x`
+    /// is `k` slabs of `diag.cols()`; `partials` is the scratch window for
+    /// these rows' segments × columns, segment-major
+    /// (`partials[(s − seg_ptr[rlo])·k + c]`). Per column the accumulation
+    /// order is identical to [`HybridPlan::diag_partials`] (single
+    /// accumulator, CSR order within the segment), which is what makes
+    /// each column of the batched MatMult bitwise equal to the single-RHS
+    /// plan MatMult.
+    pub fn diag_partials_multi(
+        &self,
+        diag: &MatSeqAIJ,
+        x: &[f64],
+        k: usize,
+        rlo: usize,
+        rhi: usize,
+        partials: &mut [f64],
+    ) {
+        let base = self.seg_ptr[rlo];
+        debug_assert_eq!(partials.len(), (self.seg_ptr[rhi] - base) * k);
+        debug_assert_eq!(x.len(), diag.cols() * k);
+        let vals = diag.vals();
+        let cols = diag.col_idx();
+        let n = diag.cols();
+        for s in base..self.seg_ptr[rhi] {
+            let seg = self.segs[s];
+            if !seg.off {
+                let w = &mut partials[(s - base) * k..(s - base) * k + k];
+                w.fill(0.0);
+                for e in seg.lo..seg.hi {
+                    let v = vals[e];
+                    let j = cols[e];
+                    for (c, a) in w.iter_mut().enumerate() {
+                        *a += v * x[c * n + j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Phase B, k-wide: ghost-block partials plus the ascending-slot fold
+    /// for `k` column slabs, one off-block traversal for all columns.
+    /// `ghosts` is `k` slabs of `off.cols()` (the multi ghost buffer);
+    /// `partials` is the window [`HybridPlan::diag_partials_multi`] filled;
+    /// results land at `y[c·yn + i]` for `i ∈ [rlo, rhi)`.
+    ///
+    /// # Safety
+    ///
+    /// `y` must be valid for writes over `k` slabs of `yn` elements, with
+    /// `rhi ≤ yn`; concurrent callers must use disjoint `[rlo, rhi)` row
+    /// ranges (the caller's thread partition), which keeps every written
+    /// index `c·yn + i` exclusive to one thread.
+    pub unsafe fn apply_rows_multi(
+        &self,
+        off: &MatSeqAIJ,
+        ghosts: &[f64],
+        k: usize,
+        partials: &[f64],
+        rlo: usize,
+        rhi: usize,
+        y: *mut f64,
+        yn: usize,
+    ) {
+        let base = self.seg_ptr[rlo];
+        debug_assert_eq!(partials.len(), (self.seg_ptr[rhi] - base) * k);
+        debug_assert!(rhi <= yn);
+        let glen = off.cols();
+        debug_assert_eq!(ghosts.len(), glen * k);
+        let ovals = off.vals();
+        let ocols = off.col_idx();
+        let mut yi = vec![0.0f64; k];
+        let mut pa = vec![0.0f64; k];
+        for i in rlo..rhi {
+            yi.fill(0.0);
+            for s in self.seg_ptr[i]..self.seg_ptr[i + 1] {
+                let seg = self.segs[s];
+                if seg.off {
+                    pa.fill(0.0);
+                    for e in seg.lo..seg.hi {
+                        let v = ovals[e];
+                        let j = ocols[e];
+                        for (c, a) in pa.iter_mut().enumerate() {
+                            *a += v * ghosts[c * glen + j];
+                        }
+                    }
+                    for (c, a) in pa.iter().enumerate() {
+                        yi[c] += *a;
+                    }
+                } else {
+                    let w = &partials[(s - base) * k..(s - base) * k + k];
+                    for (c, a) in w.iter().enumerate() {
+                        yi[c] += *a;
+                    }
+                }
+            }
+            for (c, a) in yi.iter().enumerate() {
+                *y.add(c * yn + i) = *a;
+            }
+        }
+    }
 }
 
 /// The distributed CSR matrix.
@@ -197,6 +300,12 @@ pub struct MatMPIAIJ {
     /// the plan so the fused region can borrow plan-shared and scratch-mut
     /// simultaneously).
     hybrid_scratch: Vec<f64>,
+    /// k-wide analogue of `hybrid_scratch` for the batched (SpMM) phases:
+    /// `nsegs × k` partials, segment-major. Sized lazily by
+    /// [`MatMPIAIJ::ensure_multi_width`]; stable while `k` is fixed.
+    hybrid_scratch_multi: Vec<f64>,
+    /// Current width of `hybrid_scratch_multi` (0 until first use).
+    multi_k: usize,
 }
 
 impl MatMPIAIJ {
@@ -290,6 +399,8 @@ impl MatMPIAIJ {
             scatter,
             hybrid: None,
             hybrid_scratch: Vec::new(),
+            hybrid_scratch_multi: Vec::new(),
+            multi_k: 0,
         })
     }
 
@@ -388,7 +499,39 @@ impl MatMPIAIJ {
             slot_ranges,
         });
         self.hybrid_scratch = vec![0.0; nsegs];
+        self.hybrid_scratch_multi.clear();
+        self.multi_k = 0;
         Ok(())
+    }
+
+    /// Size the k-wide hybrid scratch and the scatter's multi ghost buffer
+    /// for `k` right-hand sides. No-op when already at width `k`, so both
+    /// buffers (and their addresses) are stable across batched solves of
+    /// one width. Errors until [`MatMPIAIJ::enable_hybrid`] has run.
+    pub fn ensure_multi_width(&mut self, k: usize) -> Result<()> {
+        if k < 1 {
+            return Err(Error::InvalidOption("multi width must be ≥ 1".into()));
+        }
+        let nsegs = match &self.hybrid {
+            Some(p) => p.nsegs(),
+            None => {
+                return Err(Error::not_ready(
+                    "ensure_multi_width: hybrid plan not built — call enable_hybrid() first",
+                ))
+            }
+        };
+        if self.multi_k != k {
+            self.hybrid_scratch_multi = vec![0.0; nsegs * k];
+            self.multi_k = k;
+        }
+        self.scatter.ensure_multi(k);
+        Ok(())
+    }
+
+    /// Current k-wide scratch width (0 before any
+    /// [`MatMPIAIJ::ensure_multi_width`]).
+    pub fn multi_width(&self) -> usize {
+        self.multi_k
     }
 
     /// The hybrid plan, if built.
@@ -420,6 +563,44 @@ impl MatMPIAIJ {
                 &self.b_off,
                 plan,
                 &mut self.hybrid_scratch,
+                &mut self.scatter,
+            )),
+            None => Err(Error::not_ready(
+                "hybrid plan not built — call enable_hybrid() first",
+            )),
+        }
+    }
+
+    /// Split-borrow for the **batched** fused region: the two sequential
+    /// blocks and the plan (shared), the k-wide scratch and the scatter
+    /// (exclusive). Errors until [`MatMPIAIJ::enable_hybrid`] and
+    /// [`MatMPIAIJ::ensure_multi_width`]`(k)` have run with the matching
+    /// width.
+    #[allow(clippy::type_complexity)]
+    pub fn hybrid_split_multi(
+        &mut self,
+        k: usize,
+    ) -> Result<(
+        &MatSeqAIJ,
+        &MatSeqAIJ,
+        &HybridPlan,
+        &mut Vec<f64>,
+        &mut VecScatter,
+    )> {
+        if self.multi_k != k || self.scatter.multi_width() != k {
+            return Err(Error::not_ready(format!(
+                "hybrid_split_multi: width {k} not prepared (have scratch {} / scatter {}) — \
+                 call ensure_multi_width({k}) first",
+                self.multi_k,
+                self.scatter.multi_width()
+            )));
+        }
+        match self.hybrid.as_ref() {
+            Some(plan) => Ok((
+                &self.a_diag,
+                &self.b_off,
+                plan,
+                &mut self.hybrid_scratch_multi,
                 &mut self.scatter,
             )),
             None => Err(Error::not_ready(
@@ -587,6 +768,151 @@ impl MatMPIAIJ {
                     .mult_add_slices(ghosts, y.local_mut().as_mut_slice())
             }
         }
+    }
+
+    fn check_multi_vecs(&self, x: &MultiVecMPI, y: &MultiVecMPI) -> Result<()> {
+        if x.layout() != &self.col_layout || x.local().len() != self.a_diag.cols() {
+            return Err(Error::size_mismatch("SpMM: x layout/rank"));
+        }
+        if y.layout() != &self.row_layout || y.local().len() != self.a_diag.rows() {
+            return Err(Error::size_mismatch("SpMM: y layout/rank"));
+        }
+        if x.ncols() != y.ncols() {
+            return Err(Error::size_mismatch("SpMM: column counts differ"));
+        }
+        Ok(())
+    }
+
+    /// Distributed SpMM `Y = A·X` for a k-column multivector, with the same
+    /// communication/computation overlap as [`MatMPIAIJ::mult`]: **one
+    /// ghost message per neighbour** carries all k columns, and one
+    /// traversal of each CSR block feeds all k. With a [`HybridPlan`]
+    /// enabled the slot-segmented multi kernels run, making every column
+    /// bitwise identical to the single-RHS plan MatMult of that column
+    /// (asserted in tests) — the foundation of the batched solvers'
+    /// per-column reproducibility contract.
+    pub fn mult_multi(
+        &mut self,
+        x: &MultiVecMPI,
+        y: &mut MultiVecMPI,
+        comm: &mut Comm,
+    ) -> Result<()> {
+        self.check_multi_vecs(x, y)?;
+        self.mult_multi_begin(x, comm)?;
+        self.mult_multi_overlap(x, y)?;
+        self.mult_multi_end(y, comm)
+    }
+
+    /// Split-phase SpMM, step 1: post the k-wide ghost sends.
+    pub fn mult_multi_begin(&mut self, x: &MultiVecMPI, comm: &mut Comm) -> Result<()> {
+        if x.layout() != &self.col_layout || x.local().len() != self.a_diag.cols() {
+            return Err(Error::size_mismatch("SpMM begin: x layout/rank"));
+        }
+        self.scatter
+            .begin_local_multi(x.local().as_slice(), x.ncols(), comm)
+    }
+
+    /// Split-phase SpMM, step 2: the diagonal-block compute that hides the
+    /// in-flight exchange. Hybrid path: per-(row, slot, column) diagonal
+    /// partials into the k-wide scratch; plain path: `Y_local = A_diag · X`.
+    pub fn mult_multi_overlap(&mut self, x: &MultiVecMPI, y: &mut MultiVecMPI) -> Result<()> {
+        self.check_multi_vecs(x, y)?;
+        let k = x.ncols();
+        self.scatter.mark_compute_start();
+        if self.hybrid.is_some() {
+            // One sizing path for scratch + ghost buffer (ensure_multi_width);
+            // a no-op here in the normal begin→overlap flow, where begin
+            // already sized the scatter to this width.
+            self.ensure_multi_width(k)?;
+        }
+        match self.hybrid.as_ref() {
+            Some(plan) => {
+                let scratch = RawF64(self.hybrid_scratch_multi.as_mut_ptr());
+                let diag = &self.a_diag;
+                let xs = x.local().as_slice();
+                let ctx = diag.ctx().clone();
+                let t = plan.part.len();
+                ctx.for_range_paging(t, |tid, _l, _h| {
+                    let (rlo, rhi) = plan.part[tid];
+                    if rlo < rhi {
+                        let (slo, shi) = (plan.seg_ptr[rlo], plan.seg_ptr[rhi]);
+                        // SAFETY: disjoint row chunks ⇒ disjoint seg×k
+                        // windows into the scratch.
+                        let pw = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                scratch.0.add(slo * k),
+                                (shi - slo) * k,
+                            )
+                        };
+                        plan.diag_partials_multi(diag, xs, k, rlo, rhi, pw);
+                    }
+                });
+                Ok(())
+            }
+            None => self
+                .a_diag
+                .mult_multi_slices(x.local().as_slice(), y.local_mut().as_mut_slice(), k),
+        }
+    }
+
+    /// Split-phase SpMM, step 3: complete the k-wide receives and apply the
+    /// ghost couplings — hybrid: the ascending-slot ordered fold per row
+    /// per column; plain: `Y += B_off · ghosts`.
+    pub fn mult_multi_end(&mut self, y: &mut MultiVecMPI, comm: &mut Comm) -> Result<()> {
+        if y.layout() != &self.row_layout || y.local().len() != self.a_diag.rows() {
+            return Err(Error::size_mismatch("SpMM end: y layout/rank"));
+        }
+        let k = y.ncols();
+        match self.hybrid.as_ref() {
+            Some(plan) => {
+                if self.multi_k != k {
+                    return Err(Error::not_ready(
+                        "SpMM end: scratch width does not match y (overlap not run?)",
+                    ));
+                }
+                let ghosts = self.scatter.end_multi(comm)?;
+                if ghosts.len() != self.b_off.cols() * k {
+                    return Err(Error::size_mismatch("SpMM end: ghost width"));
+                }
+                let scratch: &[f64] = &self.hybrid_scratch_multi;
+                let off = &self.b_off;
+                let yn = self.a_diag.rows();
+                let yr = RawF64(y.local_mut().as_mut_slice().as_mut_ptr());
+                let ctx = off.ctx().clone();
+                let t = plan.part.len();
+                ctx.for_range_paging(t, |tid, _l, _h| {
+                    let (rlo, rhi) = plan.part[tid];
+                    if rlo < rhi {
+                        let (slo, shi) = (plan.seg_ptr[rlo], plan.seg_ptr[rhi]);
+                        // SAFETY: disjoint row chunks across threads; the
+                        // slab stride yn keeps columns disjoint.
+                        unsafe {
+                            plan.apply_rows_multi(
+                                off,
+                                ghosts,
+                                k,
+                                &scratch[slo * k..shi * k],
+                                rlo,
+                                rhi,
+                                yr.0,
+                                yn,
+                            );
+                        }
+                    }
+                });
+                Ok(())
+            }
+            None => {
+                let ghosts = self.scatter.end_multi(comm)?;
+                self.b_off
+                    .mult_add_multi_slices(ghosts, y.local_mut().as_mut_slice(), k)
+            }
+        }
+    }
+
+    /// Flops of one SpMM application on this rank (2·nnz·k).
+    pub fn mult_multi_flops(&self, k: usize) -> f64 {
+        self.mult_flops() * k as f64
     }
 
     /// Flops of one MatMult on this rank (2·nnz).
@@ -986,6 +1312,180 @@ mod tests {
             assert!(o.window_seconds >= o.overlap_seconds);
             let (g1, _) = a.scatter().ghost_raw();
             assert_eq!(g0, g1, "ghost buffer reallocated across iterations");
+        });
+    }
+
+    /// Deterministic per-(column, global index) multivector entry.
+    fn mv_entry(c: usize, g: usize) -> f64 {
+        (g as f64 * 0.17 + c as f64 * 3.1).sin() + 0.1 * c as f64
+    }
+
+    #[test]
+    fn hybrid_spmm_columns_bitwise_equal_single_rhs_hybrid_mult() {
+        // THE batch-engine parity contract: with a plan enabled, column c of
+        // mult_multi is bitwise identical to a single-RHS hybrid mult of
+        // that column — same segments, same single-accumulator CSR order,
+        // same ascending-slot fold. Everything the block solvers promise
+        // per column reduces to this.
+        let n = 101;
+        let k = 3;
+        for (ranks, threads) in [(1usize, 2usize), (2, 2), (3, 1)] {
+            let outs = World::run(ranks, move |mut c| {
+                let layout = Layout::slot_aligned(n, c.size(), threads);
+                let (lo, hi) = layout.range(c.rank());
+                let ctx = ThreadCtx::new(threads);
+                let mut a = MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout.clone(),
+                    wide_rows(n, lo, hi),
+                    &mut c,
+                    ctx.clone(),
+                )
+                .unwrap();
+                a.enable_hybrid().unwrap();
+                let mut x = crate::vec::multi::MultiVecMPI::new(
+                    layout.clone(),
+                    c.rank(),
+                    k,
+                    ctx.clone(),
+                );
+                for col in 0..k {
+                    let xs: Vec<f64> = (lo..hi).map(|g| mv_entry(col, g)).collect();
+                    let xv =
+                        VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone())
+                            .unwrap();
+                    x.set_col_from(col, &xv).unwrap();
+                }
+                let mut y =
+                    crate::vec::multi::MultiVecMPI::new(layout.clone(), c.rank(), k, ctx.clone());
+                a.mult_multi(&x, &mut y, &mut c).unwrap();
+                // reference: k single hybrid MatMults
+                let mut singles = Vec::new();
+                for col in 0..k {
+                    let xs: Vec<f64> = (lo..hi).map(|g| mv_entry(col, g)).collect();
+                    let xv =
+                        VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone())
+                            .unwrap();
+                    let mut yv = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+                    a.mult(&xv, &mut yv, &mut c).unwrap();
+                    singles.push(yv.local().as_slice().to_vec());
+                }
+                let cols: Vec<Vec<f64>> =
+                    (0..k).map(|col| y.local().col(col).to_vec()).collect();
+                (cols, singles)
+            });
+            for (cols, singles) in outs {
+                for col in 0..k {
+                    for (a, b) in cols[col].iter().zip(&singles[col]) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{ranks}×{threads} col {col}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plain_spmm_matches_per_column_mult_values() {
+        // Without a plan the plain diag/off SpMM path runs; values agree
+        // with per-column mult to rounding.
+        let n = 72;
+        let outs = World::run(3, move |mut c| {
+            let layout = Layout::split(n, c.size());
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                wide_rows(n, lo, hi),
+                &mut c,
+                ctx.clone(),
+            )
+            .unwrap();
+            assert!(!a.hybrid_enabled());
+            let k = 2;
+            let mut x =
+                crate::vec::multi::MultiVecMPI::new(layout.clone(), c.rank(), k, ctx.clone());
+            for col in 0..k {
+                let xs: Vec<f64> = (lo..hi).map(|g| mv_entry(col, g)).collect();
+                let xv = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone())
+                    .unwrap();
+                x.set_col_from(col, &xv).unwrap();
+            }
+            let mut y =
+                crate::vec::multi::MultiVecMPI::new(layout.clone(), c.rank(), k, ctx.clone());
+            a.mult_multi(&x, &mut y, &mut c).unwrap();
+            let mut singles = Vec::new();
+            for col in 0..k {
+                let xs: Vec<f64> = (lo..hi).map(|g| mv_entry(col, g)).collect();
+                let xv = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone())
+                    .unwrap();
+                let mut yv = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+                a.mult(&xv, &mut yv, &mut c).unwrap();
+                singles.push(yv.local().as_slice().to_vec());
+            }
+            ((0..k).map(|col| y.local().col(col).to_vec()).collect::<Vec<_>>(), singles)
+        });
+        for (cols, singles) in outs {
+            for (col, single) in singles.iter().enumerate() {
+                for (a, b) in cols[col].iter().zip(single) {
+                    assert!(close(*a, *b, 1e-12).is_ok(), "col {col}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_width_change_and_split_borrow_guards() {
+        World::run(2, |mut c| {
+            let n = 32;
+            let layout = Layout::slot_aligned(n, c.size(), 2);
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                laplacian_rows(n, lo, hi),
+                &mut c,
+                ctx.clone(),
+            )
+            .unwrap();
+            // guards before the plan exists
+            assert!(a.ensure_multi_width(2).is_err());
+            assert!(a.hybrid_split_multi(2).is_err());
+            a.enable_hybrid().unwrap();
+            assert!(a.ensure_multi_width(0).is_err());
+            a.ensure_multi_width(2).unwrap();
+            assert_eq!(a.multi_width(), 2);
+            assert!(a.hybrid_split_multi(3).is_err(), "width mismatch rejected");
+            assert!(a.hybrid_split_multi(2).is_ok());
+            // widths can change between batches; SpMM still works
+            for k in [1usize, 3] {
+                let mut x = crate::vec::multi::MultiVecMPI::new(
+                    layout.clone(),
+                    c.rank(),
+                    k,
+                    ctx.clone(),
+                );
+                for col in 0..k {
+                    let xs: Vec<f64> = (lo..hi).map(|g| mv_entry(col, g)).collect();
+                    let xv =
+                        VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone())
+                            .unwrap();
+                    x.set_col_from(col, &xv).unwrap();
+                }
+                let mut y = crate::vec::multi::MultiVecMPI::new(
+                    layout.clone(),
+                    c.rank(),
+                    k,
+                    ctx.clone(),
+                );
+                a.mult_multi(&x, &mut y, &mut c).unwrap();
+                assert_eq!(a.multi_width(), k);
+            }
         });
     }
 

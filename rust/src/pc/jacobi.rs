@@ -54,6 +54,23 @@ impl Precond for PcJacobi {
     fn fused(&self) -> FusedPc<'_> {
         FusedPc::Jacobi(self.inv_diag.local().as_slice())
     }
+
+    /// k-wide Jacobi: all columns scaled by the shared inverse diagonal in
+    /// one fork (`pw_mult` per column chunk — the same kernel as `apply`,
+    /// so each column is bitwise identical to the single-RHS apply).
+    fn apply_multi(
+        &self,
+        r: &crate::vec::multi::MultiVecMPI,
+        z: &mut crate::vec::multi::MultiVecMPI,
+    ) -> Result<()> {
+        if r.layout() != self.inv_diag.layout() {
+            return Err(Error::size_mismatch("PCApplyMulti: jacobi layout"));
+        }
+        let k = r.ncols();
+        let active = vec![true; k];
+        z.local_mut()
+            .pw_mult_cols(r.local(), self.inv_diag.local().as_slice(), &active)
+    }
 }
 
 #[cfg(test)]

@@ -11,10 +11,12 @@ pub mod blas1;
 pub mod is;
 pub mod seq;
 pub mod mpi;
+pub mod multi;
 pub mod scatter;
 
 pub use ctx::ThreadCtx;
 pub use is::IndexSet;
 pub use mpi::{Layout, SlotGrid, VecMPI};
+pub use multi::{MultiVec, MultiVecMPI};
 pub use scatter::VecScatter;
 pub use seq::VecSeq;

@@ -1,0 +1,717 @@
+//! `MultiVec` — the k-column dense multivector behind the batched
+//! multi-RHS solve engine (DESIGN.md §6).
+//!
+//! Storage is **column-slab**: column `c` occupies the contiguous range
+//! `[c·n, (c+1)·n)` of one allocation, first-touch paged per column under
+//! the same thread partition the single-vector class uses. The slab layout
+//! (rather than row-interleaving the k values of each entry) is a
+//! deliberate determinism choice: every per-column kernel runs the *exact*
+//! `blas1` routine on the *exact* chunk the single-RHS path would, so each
+//! column of a batched operation is bitwise identical to the corresponding
+//! single-vector operation. The bandwidth amortization the batch engine is
+//! after lives in the **matrix** traversal (SpMM reads the CSR arrays once
+//! for all k columns — see [`crate::mat::csr::MatSeqAIJ::mult_multi_slices`]
+//! and the `HybridPlan` multi kernels), which is the dominant memory
+//! stream; the multivector layout does not need to be interleaved for
+//! that to pay.
+//!
+//! Reductions come in two flavours, mirroring the single-RHS design:
+//! per-column [`MultiVec::dot_col`]/[`MultiVec::sqnorm_col`] over the
+//! static thread chunks (the Vec-class fold), and per-**slot** partial
+//! batches ([`MultiVec::slot_dots`]/[`MultiVec::slot_sqnorms`]) that feed
+//! [`crate::comm::endpoint::Comm::allreduce_sum_ordered_vec`] for the
+//! decomposition-invariant hybrid fold (ascending-slot order, one
+//! accumulator per column — the PR 2 contract, k-wide).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::numa::page::PageMap;
+use crate::vec::blas1;
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::mpi::{Layout, VecMPI};
+
+/// Raw-pointer wrapper to hand disjoint chunks of one slab buffer to pool
+/// threads (same discipline as `VecSeq`).
+struct RawMut(*mut f64);
+unsafe impl Send for RawMut {}
+unsafe impl Sync for RawMut {}
+impl RawMut {
+    #[inline]
+    fn ptr(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// The sequential (per-rank) k-column multivector.
+pub struct MultiVec {
+    n: usize,
+    k: usize,
+    /// Column slabs: column `c` at `[c·n, (c+1)·n)`.
+    data: Vec<f64>,
+    pages: PageMap,
+    ctx: Arc<ThreadCtx>,
+}
+
+impl MultiVec {
+    /// Create a zeroed `n × k` multivector. Zeroing runs under the full
+    /// static schedule on the pool, per column — the first-touch placement
+    /// step, applied to every slab (§VI.A, k-wide).
+    pub fn new(n: usize, k: usize, ctx: Arc<ThreadCtx>) -> MultiVec {
+        assert!(k >= 1, "MultiVec needs at least one column");
+        let mut data = vec![0.0f64; n * k];
+        let mut pages = PageMap::new(n * k, 8);
+        let raw = RawMut(data.as_mut_ptr());
+        ctx.for_range_paging(n, |_tid, lo, hi| {
+            for c in 0..k {
+                // SAFETY: static chunks are disjoint, slabs are disjoint.
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(raw.ptr().add(c * n + lo), hi - lo)
+                };
+                chunk.fill(0.0);
+            }
+        });
+        for tid in 0..ctx.nthreads() {
+            let (lo, hi) = ctx.chunk(n, tid);
+            for c in 0..k {
+                pages.touch_range(c * n + lo, c * n + hi, ctx.thread_uma(tid));
+            }
+        }
+        MultiVec { n, k, data, pages, ctx }
+    }
+
+    /// Create a zeroed multivector first-touched by an explicit ownership
+    /// map (one range per pool thread), applied to every column slab —
+    /// the k-wide analogue of `VecSeq::new_partitioned`, used when the
+    /// hot-path consumer is an SpMM over a matrix's nnz-balanced row
+    /// partition.
+    pub fn new_partitioned(
+        n: usize,
+        k: usize,
+        ctx: Arc<ThreadCtx>,
+        partition: &[(usize, usize)],
+    ) -> MultiVec {
+        assert!(k >= 1, "MultiVec needs at least one column");
+        assert_eq!(
+            partition.len(),
+            ctx.nthreads(),
+            "MultiVec::new_partitioned: partition length must equal the thread count"
+        );
+        assert!(
+            partition.iter().all(|&(lo, hi)| lo <= hi && hi <= n),
+            "MultiVec::new_partitioned: partition ranges must be ordered and within 0..{n}"
+        );
+        let mut data = vec![0.0f64; n * k];
+        let mut pages = PageMap::new(n * k, 8);
+        let raw = RawMut(data.as_mut_ptr());
+        let part = partition.to_vec();
+        ctx.for_range_paging(part.len().max(1), |tid, _lo, _hi| {
+            if let Some(&(lo, hi)) = part.get(tid) {
+                if lo < hi {
+                    for c in 0..k {
+                        // SAFETY: partition ranges are disjoint by contract.
+                        let chunk = unsafe {
+                            std::slice::from_raw_parts_mut(raw.ptr().add(c * n + lo), hi - lo)
+                        };
+                        chunk.fill(0.0);
+                    }
+                }
+            }
+        });
+        for (tid, &(lo, hi)) in partition.iter().enumerate() {
+            if lo < hi {
+                for c in 0..k {
+                    pages.touch_range(c * n + lo, c * n + hi, ctx.thread_uma(tid));
+                }
+            }
+        }
+        MultiVec { n, k, data, pages, ctx }
+    }
+
+    /// Rows per column.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of columns (right-hand sides) `k`.
+    pub fn ncols(&self) -> usize {
+        self.k
+    }
+
+    pub fn ctx(&self) -> &Arc<ThreadCtx> {
+        &self.ctx
+    }
+
+    pub fn pages(&self) -> &PageMap {
+        &self.pages
+    }
+
+    /// The full slab buffer (column `c` at `[c·n, (c+1)·n)`) — the form the
+    /// SpMM kernels and the ghost exchange consume.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column `c` as a contiguous slice.
+    pub fn col(&self, c: usize) -> &[f64] {
+        assert!(c < self.k, "MultiVec::col: column {c} of {}", self.k);
+        &self.data[c * self.n..(c + 1) * self.n]
+    }
+
+    pub fn col_mut(&mut self, c: usize) -> &mut [f64] {
+        assert!(c < self.k, "MultiVec::col_mut: column {c} of {}", self.k);
+        &mut self.data[c * self.n..(c + 1) * self.n]
+    }
+
+    /// Overwrite column `c` from a slice.
+    pub fn set_col(&mut self, c: usize, xs: &[f64]) -> Result<()> {
+        if c >= self.k {
+            return Err(Error::IndexOutOfRange {
+                index: c,
+                range: (0, self.k),
+                context: "MultiVec::set_col".into(),
+            });
+        }
+        if xs.len() != self.n {
+            return Err(Error::size_mismatch(format!(
+                "MultiVec::set_col: {} vs {}",
+                xs.len(),
+                self.n
+            )));
+        }
+        self.col_mut(c).copy_from_slice(xs);
+        Ok(())
+    }
+
+    /// An uninitialized-by-convention duplicate: same shape, ctx, zeroed.
+    pub fn duplicate(&self) -> MultiVec {
+        MultiVec::new(self.n, self.k, self.ctx.clone())
+    }
+
+    fn check_same_shape(&self, other: &MultiVec, what: &str) -> Result<()> {
+        if self.n != other.n || self.k != other.k {
+            return Err(Error::size_mismatch(format!(
+                "{what}: {}x{} vs {}x{}",
+                self.n, self.k, other.n, other.k
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_coeffs(&self, coeffs: &[f64], active: &[bool], what: &str) -> Result<()> {
+        if coeffs.len() != self.k || active.len() != self.k {
+            return Err(Error::size_mismatch(format!(
+                "{what}: {} coeffs / {} mask entries for k = {}",
+                coeffs.len(),
+                active.len(),
+                self.k
+            )));
+        }
+        Ok(())
+    }
+
+    /// Run `f(c, y_chunk, x_chunk, lo)` over every (active column, static
+    /// chunk) pair in **one** pool fork — the k-wide fusion that replaces k
+    /// separate Vec-class calls. Element-wise only: the fp result per
+    /// element is chunking-independent, so this is bitwise identical to the
+    /// per-column Vec ops regardless of the thread count.
+    fn par_cols_binary<F>(&mut self, x: &MultiVec, active: &[bool], f: F)
+    where
+        F: Fn(usize, &mut [f64], &[f64], usize) + Sync,
+    {
+        let n = self.n;
+        let k = self.k;
+        let raw = RawMut(self.data.as_mut_ptr());
+        let xp = x.data.as_ptr() as usize;
+        self.ctx.for_range(n, |_tid, lo, hi| {
+            for (c, &on) in active.iter().enumerate().take(k) {
+                if !on {
+                    continue;
+                }
+                // SAFETY: static chunks are disjoint across threads and the
+                // per-column slab offsets keep columns disjoint too.
+                let yc = unsafe {
+                    std::slice::from_raw_parts_mut(raw.ptr().add(c * n + lo), hi - lo)
+                };
+                let xc = unsafe {
+                    std::slice::from_raw_parts((xp as *const f64).add(c * n + lo), hi - lo)
+                };
+                f(c, yc, xc, lo);
+            }
+        });
+    }
+
+    /// Zero every column.
+    pub fn zero(&mut self) {
+        let n = self.n;
+        let k = self.k;
+        let raw = RawMut(self.data.as_mut_ptr());
+        self.ctx.for_range(n, |_tid, lo, hi| {
+            for c in 0..k {
+                // SAFETY: disjoint chunks/slabs.
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(raw.ptr().add(c * n + lo), hi - lo)
+                };
+                chunk.fill(0.0);
+            }
+        });
+    }
+
+    /// `self = x` for every column.
+    pub fn copy_from(&mut self, x: &MultiVec) -> Result<()> {
+        self.check_same_shape(x, "MultiVec copy")?;
+        let all = vec![true; self.k];
+        self.par_cols_binary(x, &all, |_c, yc, xc, _lo| blas1::copy(xc, yc));
+        Ok(())
+    }
+
+    /// Masked k-wide AXPY: `self[:,c] += alphas[c]·x[:,c]` for every active
+    /// column, one fork total.
+    pub fn axpy_cols(&mut self, alphas: &[f64], x: &MultiVec, active: &[bool]) -> Result<()> {
+        self.check_same_shape(x, "MultiVec axpy")?;
+        self.check_coeffs(alphas, active, "MultiVec axpy")?;
+        self.par_cols_binary(x, active, |c, yc, xc, _lo| blas1::axpy(alphas[c], xc, yc));
+        Ok(())
+    }
+
+    /// Masked k-wide AYPX: `self[:,c] = x[:,c] + betas[c]·self[:,c]`.
+    pub fn aypx_cols(&mut self, betas: &[f64], x: &MultiVec, active: &[bool]) -> Result<()> {
+        self.check_same_shape(x, "MultiVec aypx")?;
+        self.check_coeffs(betas, active, "MultiVec aypx")?;
+        self.par_cols_binary(x, active, |c, yc, xc, _lo| blas1::aypx(betas[c], xc, yc));
+        Ok(())
+    }
+
+    /// Masked k-wide copy: `self[:,c] = x[:,c]` for active columns.
+    pub fn copy_cols(&mut self, x: &MultiVec, active: &[bool]) -> Result<()> {
+        self.check_same_shape(x, "MultiVec copy_cols")?;
+        if active.len() != self.k {
+            return Err(Error::size_mismatch("MultiVec copy_cols: mask length"));
+        }
+        self.par_cols_binary(x, active, |_c, yc, xc, _lo| blas1::copy(xc, yc));
+        Ok(())
+    }
+
+    /// Masked k-wide element-wise scaling by one shared diagonal:
+    /// `self[:,c] = x[:,c] .* d` — the k-wide Jacobi apply.
+    pub fn pw_mult_cols(&mut self, x: &MultiVec, d: &[f64], active: &[bool]) -> Result<()> {
+        self.check_same_shape(x, "MultiVec pw_mult")?;
+        if d.len() != self.n || active.len() != self.k {
+            return Err(Error::size_mismatch("MultiVec pw_mult: diag/mask length"));
+        }
+        let dp = d.as_ptr() as usize;
+        self.par_cols_binary(x, active, |_c, yc, xc, lo| {
+            // SAFETY: read-only view of the shared diagonal chunk.
+            let dc = unsafe {
+                std::slice::from_raw_parts((dp as *const f64).add(lo), yc.len())
+            };
+            blas1::pw_mult(xc, dc, yc);
+        });
+        Ok(())
+    }
+
+    /// Per-column dot over the static thread chunks — the Vec-class fold,
+    /// bitwise identical to `VecSeq::dot` of the two columns.
+    pub fn dot_col(&self, c: usize, other: &MultiVec, oc: usize) -> Result<f64> {
+        self.check_same_shape(other, "MultiVec dot")?;
+        let a = self.col(c);
+        let b = other.col(oc);
+        Ok(self
+            .ctx
+            .reduce(a.len(), 0.0, |_t, lo, hi| blas1::dot(&a[lo..hi], &b[lo..hi]), |x, y| x + y))
+    }
+
+    /// Per-column sum of squares over the static thread chunks.
+    pub fn sqnorm_col(&self, c: usize) -> f64 {
+        let a = self.col(c);
+        self.ctx
+            .reduce(a.len(), 0.0, |_t, lo, hi| blas1::sqnorm(&a[lo..hi]), |x, y| x + y)
+    }
+
+    /// Per-(slot, column) sum-of-squares partials: `parts[s][c]` is
+    /// `‖self[ranges[s], c]‖²` — the payload of the k-wide ordered
+    /// hybrid reduction. Column `c`'s partials are exactly what the
+    /// single-RHS `slot_norm2_over` computes for that column.
+    pub fn slot_sqnorms(&self, ranges: &[(usize, usize)]) -> Vec<Vec<f64>> {
+        ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                (0..self.k)
+                    .map(|c| blas1::sqnorm(&self.col(c)[lo..hi]))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Per-(slot, column) dot partials against `other` (column-wise).
+    pub fn slot_dots(&self, other: &MultiVec, ranges: &[(usize, usize)]) -> Result<Vec<Vec<f64>>> {
+        self.check_same_shape(other, "MultiVec slot_dots")?;
+        Ok(ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                (0..self.k)
+                    .map(|c| blas1::dot(&self.col(c)[lo..hi], &other.col(c)[lo..hi]))
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+impl std::fmt::Debug for MultiVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MultiVec({}x{}, threads={})",
+            self.n,
+            self.k,
+            self.ctx.nthreads()
+        )
+    }
+}
+
+/// The distributed k-column multivector: a [`MultiVec`] per rank plus the
+/// global layout — the same thin-layer design as [`VecMPI`] over `VecSeq`.
+pub struct MultiVecMPI {
+    layout: Layout,
+    rank: usize,
+    local: MultiVec,
+}
+
+impl MultiVecMPI {
+    /// Create a zeroed distributed multivector on this rank.
+    pub fn new(layout: Layout, rank: usize, k: usize, ctx: Arc<ThreadCtx>) -> MultiVecMPI {
+        let n = layout.local_len(rank);
+        MultiVecMPI {
+            layout,
+            rank,
+            local: MultiVec::new(n, k, ctx),
+        }
+    }
+
+    /// Create zeroed, first-touch paged by an explicit thread partition
+    /// (typically the operator's nnz-balanced row partition).
+    pub fn new_partitioned(
+        layout: Layout,
+        rank: usize,
+        k: usize,
+        ctx: Arc<ThreadCtx>,
+        partition: &[(usize, usize)],
+    ) -> MultiVecMPI {
+        let n = layout.local_len(rank);
+        MultiVecMPI {
+            layout,
+            rank,
+            local: MultiVec::new_partitioned(n, k, ctx, partition),
+        }
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.local.ncols()
+    }
+
+    pub fn global_len(&self) -> usize {
+        self.layout.global_len()
+    }
+
+    pub fn local(&self) -> &MultiVec {
+        &self.local
+    }
+
+    pub fn local_mut(&mut self) -> &mut MultiVec {
+        &mut self.local
+    }
+
+    pub fn duplicate(&self) -> MultiVecMPI {
+        MultiVecMPI {
+            layout: self.layout.clone(),
+            rank: self.rank,
+            local: self.local.duplicate(),
+        }
+    }
+
+    fn check_compatible(&self, other: &MultiVecMPI, what: &str) -> Result<()> {
+        if self.layout != other.layout || self.ncols() != other.ncols() {
+            return Err(Error::size_mismatch(format!("{what}: layouts/widths differ")));
+        }
+        Ok(())
+    }
+
+    /// Overwrite column `c` from a distributed single vector.
+    pub fn set_col_from(&mut self, c: usize, x: &VecMPI) -> Result<()> {
+        if x.layout() != &self.layout || x.rank() != self.rank {
+            return Err(Error::size_mismatch("MultiVecMPI::set_col_from: layout"));
+        }
+        self.local.set_col(c, x.local().as_slice())
+    }
+
+    /// Copy column `c` out into a distributed single vector.
+    pub fn extract_col_into(&self, c: usize, x: &mut VecMPI) -> Result<()> {
+        if x.layout() != &self.layout || x.rank() != self.rank {
+            return Err(Error::size_mismatch("MultiVecMPI::extract_col_into: layout"));
+        }
+        if c >= self.ncols() {
+            return Err(Error::IndexOutOfRange {
+                index: c,
+                range: (0, self.ncols()),
+                context: "MultiVecMPI::extract_col_into".into(),
+            });
+        }
+        x.local_mut().as_mut_slice().copy_from_slice(self.local.col(c));
+        Ok(())
+    }
+
+    pub fn zero(&mut self) {
+        self.local.zero();
+    }
+
+    pub fn copy_from(&mut self, x: &MultiVecMPI) -> Result<()> {
+        self.check_compatible(x, "MultiVecMPI copy")?;
+        self.local.copy_from(&x.local)
+    }
+
+    pub fn axpy_cols(&mut self, alphas: &[f64], x: &MultiVecMPI, active: &[bool]) -> Result<()> {
+        self.check_compatible(x, "MultiVecMPI axpy")?;
+        self.local.axpy_cols(alphas, &x.local, active)
+    }
+
+    pub fn aypx_cols(&mut self, betas: &[f64], x: &MultiVecMPI, active: &[bool]) -> Result<()> {
+        self.check_compatible(x, "MultiVecMPI aypx")?;
+        self.local.aypx_cols(betas, &x.local, active)
+    }
+
+    pub fn copy_cols(&mut self, x: &MultiVecMPI, active: &[bool]) -> Result<()> {
+        self.check_compatible(x, "MultiVecMPI copy_cols")?;
+        self.local.copy_cols(&x.local, active)
+    }
+
+    /// Gather one full column onto every rank (testing/diagnostics only).
+    pub fn gather_col_all(
+        &self,
+        c: usize,
+        comm: &mut crate::comm::endpoint::Comm,
+    ) -> Result<Vec<f64>> {
+        let parts = comm.allgather(self.local.col(c).to_vec())?;
+        Ok(parts.concat())
+    }
+}
+
+impl std::fmt::Debug for MultiVecMPI {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MultiVecMPI(global={}x{}, rank={}/{})",
+            self.global_len(),
+            self.ncols(),
+            self.rank,
+            self.layout.size()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::close;
+    use crate::util::rng::XorShift64;
+    use crate::vec::seq::VecSeq;
+
+    fn ctx() -> Arc<ThreadCtx> {
+        ThreadCtx::new(4)
+    }
+
+    fn rand_cols(n: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut r = XorShift64::new(seed);
+        (0..k)
+            .map(|_| (0..n).map(|_| r.range_f64(-1.0, 1.0)).collect())
+            .collect()
+    }
+
+    fn filled(n: usize, k: usize, seed: u64, c: Arc<ThreadCtx>) -> MultiVec {
+        let cols = rand_cols(n, k, seed);
+        let mut m = MultiVec::new(n, k, c);
+        for (j, col) in cols.iter().enumerate() {
+            m.set_col(j, col).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn new_is_zeroed_and_paged_per_column() {
+        let v = MultiVec::new(10_000, 3, ctx());
+        assert_eq!(v.len(), 10_000);
+        assert_eq!(v.ncols(), 3);
+        assert!(v.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(v.pages().len(), 30_000);
+    }
+
+    #[test]
+    fn new_partitioned_pages_by_map() {
+        let node = crate::topology::presets::hector_xe6_node();
+        let c = ThreadCtx::pinned(&node, &[0, 8, 16, 24]);
+        let part = [(0usize, 4000usize), (4000, 5000), (5000, 6000), (6000, 8192)];
+        let v = MultiVec::new_partitioned(8192, 2, c.clone(), &part);
+        assert!(v.as_slice().iter().all(|&x| x == 0.0));
+        for (tid, &(lo, hi)) in part.iter().enumerate() {
+            for col in 0..2 {
+                assert!(
+                    v.pages()
+                        .chunk_is_local(col * 8192 + lo, col * 8192 + hi, c.thread_uma(tid)),
+                    "column {col} chunk of thread {tid} not paged by its owner"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn columns_are_disjoint_slabs() {
+        let mut v = MultiVec::new(5, 3, ctx());
+        v.set_col(1, &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert!(v.col(0).iter().all(|&x| x == 0.0));
+        assert_eq!(v.col(1), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(v.col(2).iter().all(|&x| x == 0.0));
+        assert_eq!(&v.as_slice()[5..10], v.col(1));
+    }
+
+    #[test]
+    fn masked_axpy_matches_per_column_vecseq_bitwise() {
+        let n = 4097;
+        let k = 3;
+        let c = ctx();
+        let x = filled(n, k, 7, c.clone());
+        let mut y = filled(n, k, 11, c.clone());
+        let y0 = filled(n, k, 11, c.clone());
+        let alphas = [0.5, -1.25, 2.0];
+        let active = [true, false, true];
+        y.axpy_cols(&alphas, &x, &active).unwrap();
+        for col in 0..k {
+            if !active[col] {
+                assert_eq!(y.col(col), y0.col(col), "masked column must freeze");
+                continue;
+            }
+            let xs = VecSeq::from_slice(x.col(col), c.clone());
+            let mut ys = VecSeq::from_slice(y0.col(col), c.clone());
+            ys.axpy(alphas[col], &xs).unwrap();
+            for (a, b) in y.col(col).iter().zip(ys.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn aypx_pwmult_copy_cols() {
+        let c = ctx();
+        let n = 513;
+        let x = filled(n, 2, 3, c.clone());
+        let mut y = filled(n, 2, 5, c.clone());
+        let y0 = filled(n, 2, 5, c.clone());
+        y.aypx_cols(&[0.5, 0.0], &x, &[true, true]).unwrap();
+        for i in 0..n {
+            assert!(close(y.col(0)[i], x.col(0)[i] + 0.5 * y0.col(0)[i], 1e-15).is_ok());
+            assert_eq!(y.col(1)[i], x.col(1)[i]);
+        }
+        let d: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let mut z = MultiVec::new(n, 2, c.clone());
+        z.pw_mult_cols(&x, &d, &[true, true]).unwrap();
+        for i in 0..n {
+            assert_eq!(z.col(0)[i], x.col(0)[i] * d[i]);
+        }
+        let mut w = MultiVec::new(n, 2, c);
+        w.copy_cols(&x, &[false, true]).unwrap();
+        assert!(w.col(0).iter().all(|&v| v == 0.0));
+        assert_eq!(w.col(1), x.col(1));
+    }
+
+    #[test]
+    fn dot_and_sqnorm_match_vecseq_bitwise() {
+        let n = 2049;
+        let c = ctx();
+        let x = filled(n, 2, 21, c.clone());
+        let y = filled(n, 2, 22, c.clone());
+        for col in 0..2 {
+            let xs = VecSeq::from_slice(x.col(col), c.clone());
+            let ys = VecSeq::from_slice(y.col(col), c.clone());
+            let a = x.dot_col(col, &y, col).unwrap();
+            let b = xs.dot(&ys).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits());
+            let sq = x.sqnorm_col(col);
+            let nv = xs.norm(crate::vec::seq::NormType::Two);
+            assert!(close(sq.sqrt(), nv, 1e-15).is_ok());
+        }
+    }
+
+    #[test]
+    fn slot_partials_match_per_column_serial() {
+        let n = 100;
+        let c = ctx();
+        let x = filled(n, 3, 31, c.clone());
+        let y = filled(n, 3, 32, c);
+        let ranges = [(0usize, 30usize), (30, 60), (60, 100)];
+        let sq = x.slot_sqnorms(&ranges);
+        let dots = x.slot_dots(&y, &ranges).unwrap();
+        for (s, &(lo, hi)) in ranges.iter().enumerate() {
+            for col in 0..3 {
+                assert_eq!(
+                    sq[s][col].to_bits(),
+                    blas1::sqnorm(&x.col(col)[lo..hi]).to_bits()
+                );
+                assert_eq!(
+                    dots[s][col].to_bits(),
+                    blas1::dot(&x.col(col)[lo..hi], &y.col(col)[lo..hi]).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shape_errors_rejected() {
+        let c = ctx();
+        let mut a = MultiVec::new(10, 2, c.clone());
+        let b = MultiVec::new(10, 3, c.clone());
+        let d = MultiVec::new(11, 2, c.clone());
+        assert!(a.axpy_cols(&[1.0, 1.0], &b, &[true, true]).is_err());
+        assert!(a.axpy_cols(&[1.0, 1.0], &d, &[true, true]).is_err());
+        assert!(a.axpy_cols(&[1.0], &MultiVec::new(10, 2, c.clone()), &[true, true]).is_err());
+        assert!(a.set_col(0, &[1.0]).is_err());
+        assert!(a.set_col(2, &[0.0; 10]).is_err(), "column index out of range");
+        assert!(a.pw_mult_cols(&MultiVec::new(10, 2, c), &[1.0; 9], &[true, true]).is_err());
+    }
+
+    #[test]
+    fn mpi_column_roundtrip_and_gather() {
+        use crate::comm::world::World;
+        let n = 40;
+        let outs = World::run(2, move |mut c| {
+            let layout = Layout::split(n, c.size());
+            let (lo, hi) = layout.range(c.rank());
+            let ctx = ThreadCtx::new(2);
+            let mut mv = MultiVecMPI::new(layout.clone(), c.rank(), 2, ctx.clone());
+            let xs: Vec<f64> = (lo..hi).map(|i| i as f64).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            mv.set_col_from(1, &x).unwrap();
+            let mut back = VecMPI::new(layout, c.rank(), ctx);
+            mv.extract_col_into(1, &mut back).unwrap();
+            assert_eq!(back.local().as_slice(), &xs[..]);
+            mv.gather_col_all(1, &mut c).unwrap()
+        });
+        let expect: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+}

@@ -37,6 +37,13 @@ pub struct VecScatter {
     /// lifetime, which is what lets the fused hybrid layer hand workers a
     /// raw view of it before the receives complete.
     ghost_buf: Vec<f64>,
+    /// The persistent **multi-RHS** ghost buffer: `multi_k` column slabs of
+    /// `ghost_len()` values each (column `c` at `[c·glen, (c+1)·glen)`),
+    /// sized by [`VecScatter::ensure_multi`] and stable while the width
+    /// stays fixed — the batched analogue of `ghost_buf`.
+    ghost_multi: Vec<f64>,
+    /// Current width of `ghost_multi` (0 until the first `ensure_multi`).
+    multi_k: usize,
     /// True between `begin()` and `end()`.
     in_flight: bool,
     /// `begin()` timestamp of the in-flight exchange.
@@ -114,6 +121,8 @@ impl VecScatter {
             recv_blocks,
             send_lists,
             ghost_buf,
+            ghost_multi: Vec::new(),
+            multi_k: 0,
             in_flight: false,
             t_begin: None,
             t_compute: None,
@@ -231,6 +240,130 @@ impl VecScatter {
             self.overlap.overlap_seconds += t_end_call.duration_since(tc).as_secs_f64();
         }
         Ok(&self.ghost_buf)
+    }
+
+    // -- multi-RHS (batched) exchange ---------------------------------------
+
+    /// Make the persistent multi-RHS ghost buffer hold `k` column slabs.
+    /// A no-op when the width already matches — the buffer (and its
+    /// address) is then stable across exchanges, the property the fused
+    /// block solver relies on when it publishes the raw view to workers.
+    ///
+    /// Changing the width **while an exchange is in flight** is a contract
+    /// violation (the posted sends were packed at the old width and
+    /// `end_multi` unpacks at the current one) and panics rather than
+    /// desyncing the unpack from the payload.
+    pub fn ensure_multi(&mut self, k: usize) {
+        assert!(k >= 1, "multi scatter needs at least one column");
+        if self.multi_k != k {
+            assert!(
+                !self.in_flight,
+                "scatter ensure_multi({k}): width change while an exchange \
+                 (width {}) is in flight",
+                self.multi_k
+            );
+            self.ghost_multi = vec![0.0; self.ghosts.len() * k];
+            self.multi_k = k;
+        }
+    }
+
+    /// Current width of the multi-RHS ghost buffer (0 before any
+    /// [`VecScatter::ensure_multi`]).
+    pub fn multi_width(&self) -> usize {
+        self.multi_k
+    }
+
+    /// Raw view (pointer, length) of the persistent multi-RHS ghost buffer
+    /// (`k` slabs of `ghost_len()`; column `c` at `[c·glen, (c+1)·glen)`).
+    /// Stable while the width stays fixed; same read-after-barrier
+    /// discipline as [`VecScatter::ghost_raw`].
+    pub fn ghost_multi_raw(&self) -> (*const f64, usize) {
+        (self.ghost_multi.as_ptr(), self.ghost_multi.len())
+    }
+
+    /// Post the sends for `k` right-hand sides in **one message per
+    /// neighbour**: `xs` is a column-slab buffer (`k` slabs of this rank's
+    /// local length), and each destination gets its index list packed
+    /// index-major (`k` values per ghost index). This is the latency
+    /// amortization half of the batch engine — the per-neighbour message
+    /// count is independent of `k`, only the payload grows.
+    pub fn begin_local_multi(&mut self, xs: &[f64], k: usize, comm: &mut Comm) -> Result<()> {
+        if self.in_flight {
+            return Err(Error::not_ready("scatter begin_multi(): already in flight"));
+        }
+        let xn = self.layout.local_len(self.rank);
+        if k < 1 || xs.len() != xn * k {
+            return Err(Error::size_mismatch(format!(
+                "scatter begin_multi: slab buffer {} vs {} locals × {k} columns",
+                xs.len(),
+                xn
+            )));
+        }
+        self.ensure_multi(k);
+        let t0 = Instant::now();
+        for (dest, list) in &self.send_lists {
+            let mut packed: Vec<f64> = Vec::with_capacity(list.len() * k);
+            for &i in list {
+                for c in 0..k {
+                    packed.push(xs[c * xn + i]);
+                }
+            }
+            comm.send(*dest, T_DATA, packed)?;
+        }
+        self.in_flight = true;
+        self.t_begin = Some(t0);
+        self.t_compute = None;
+        Ok(())
+    }
+
+    /// Complete the multi-RHS receives into the persistent slab buffer and
+    /// return a view of it (column `c`'s value of global index
+    /// `ghosts()[j]` at `[c·glen + j]`). Overlap accounting is shared with
+    /// the single-RHS path.
+    pub fn end_multi(&mut self, comm: &mut Comm) -> Result<&[f64]> {
+        if !self.in_flight {
+            return Err(Error::not_ready("scatter end_multi() without begin_multi()"));
+        }
+        self.in_flight = false;
+        let k = self.multi_k;
+        if k == 0 {
+            return Err(Error::not_ready("scatter end_multi(): no multi width set"));
+        }
+        let glen = self.ghosts.len();
+        let t_end_call = Instant::now();
+        let mut hidden = 0u64;
+        for &(src, _, _) in &self.recv_blocks {
+            if comm.iprobe(src, T_DATA) {
+                hidden += 1;
+            }
+        }
+        for &(src, lo, hi) in &self.recv_blocks {
+            let vals: Vec<f64> = comm.recv(src, T_DATA)?;
+            if vals.len() != (hi - lo) * k {
+                return Err(Error::Comm(format!(
+                    "scatter multi: expected {} values from rank {src}, got {}",
+                    (hi - lo) * k,
+                    vals.len()
+                )));
+            }
+            for (off, pos) in (lo..hi).enumerate() {
+                for c in 0..k {
+                    self.ghost_multi[c * glen + pos] = vals[off * k + c];
+                }
+            }
+        }
+        let done = Instant::now();
+        self.overlap.exchanges += 1;
+        self.overlap.msgs_hidden += hidden;
+        self.overlap.msgs_total += self.recv_blocks.len() as u64;
+        self.overlap.exposed_seconds += done.duration_since(t_end_call).as_secs_f64();
+        if let Some(t0) = self.t_begin.take() {
+            self.overlap.window_seconds += done.duration_since(t0).as_secs_f64();
+        }
+        if let Some(tc) = self.t_compute.take() {
+            self.overlap.overlap_seconds += t_end_call.duration_since(tc).as_secs_f64();
+        }
+        Ok(&self.ghost_multi)
     }
 
     /// Convenience: begin + end, copying the ghosts out (tests/diagnostics;
@@ -401,6 +534,93 @@ mod tests {
             assert_eq!(o.exchanges, 20);
             assert_eq!(o.msgs_total, 20);
             assert!(o.window_seconds >= o.overlap_seconds);
+        });
+    }
+
+    #[test]
+    fn multi_scatter_matches_k_single_scatters_bitwise() {
+        // One k-wide exchange must deliver, per column, exactly what k
+        // separate single-vector scatters deliver — same values, but one
+        // message per neighbour instead of k.
+        let n = 48;
+        let k = 3;
+        World::run(4, move |mut c| {
+            let layout = Layout::split(n, c.size());
+            let (lo, hi) = layout.range(c.rank());
+            let xn = hi - lo;
+            // each rank needs two remote elements
+            let needed = [(lo + n - 3) % n, hi % n];
+            let needed: Vec<usize> =
+                needed.iter().copied().filter(|&g| g < lo || g >= hi).collect();
+            let mut sc = VecScatter::plan(&layout, &mut c, &needed).unwrap();
+            // k deterministic global columns, laid out as local slabs
+            let colval = |col: usize, g: usize| (g as f64 * 0.3 + col as f64 * 10.0).sin();
+            let mut slabs = vec![0.0; xn * k];
+            for col in 0..k {
+                for (j, g) in (lo..hi).enumerate() {
+                    slabs[col * xn + j] = colval(col, g);
+                }
+            }
+            let sends_before = c.stats.snapshot().sends;
+            sc.begin_local_multi(&slabs, k, &mut c).unwrap();
+            let sends_multi = c.stats.snapshot().sends - sends_before;
+            let ghosts = sc.end_multi(&mut c).unwrap().to_vec();
+            let glen = sc.ghost_len();
+            // reference: k single scatters
+            for col in 0..k {
+                let xs: Vec<f64> = (lo..hi).map(|g| colval(col, g)).collect();
+                sc.begin_local(&xs, &mut c).unwrap();
+                let single = sc.end(&mut c).unwrap().to_vec();
+                for j in 0..glen {
+                    assert_eq!(
+                        ghosts[col * glen + j].to_bits(),
+                        single[j].to_bits(),
+                        "column {col} ghost {j}"
+                    );
+                }
+            }
+            // message count is k-independent: one per neighbour
+            assert_eq!(sends_multi as usize, sc.messages_out());
+        });
+    }
+
+    #[test]
+    fn multi_ghost_buffer_stable_for_fixed_width() {
+        World::run(2, |mut c| {
+            let layout = Layout::split(10, 2);
+            let other = if c.rank() == 0 { 7 } else { 2 };
+            let mut sc = VecScatter::plan(&layout, &mut c, &[other]).unwrap();
+            sc.ensure_multi(2);
+            let (p0, len0) = sc.ghost_multi_raw();
+            assert_eq!(len0, 2);
+            for round in 0..10 {
+                let xs: Vec<f64> = (0..10).map(|i| (i + round) as f64).collect();
+                sc.begin_local_multi(&xs, 2, &mut c).unwrap();
+                let g = sc.end_multi(&mut c).unwrap();
+                let local = if c.rank() == 0 { 7 - 5 } else { 2 };
+                assert_eq!(g[0], (local + round) as f64);
+                assert_eq!(g[1], (5 + local + round) as f64);
+            }
+            let (p1, _) = sc.ghost_multi_raw();
+            assert_eq!(p0, p1, "multi ghost buffer moved for fixed width");
+            // width change reallocates (by design)
+            sc.ensure_multi(3);
+            assert_eq!(sc.multi_width(), 3);
+            assert_eq!(sc.ghost_multi_raw().1, 3);
+        });
+    }
+
+    #[test]
+    fn multi_scatter_shape_errors() {
+        World::run(1, |mut c| {
+            let layout = Layout::split(6, 1);
+            let mut sc = VecScatter::plan(&layout, &mut c, &[]).unwrap();
+            assert!(sc.begin_local_multi(&[0.0; 5], 1, &mut c).is_err());
+            assert!(sc.begin_local_multi(&[0.0; 6], 0, &mut c).is_err());
+            assert!(sc.end_multi(&mut c).is_err());
+            sc.begin_local_multi(&[0.0; 12], 2, &mut c).unwrap();
+            assert!(sc.begin_local_multi(&[0.0; 12], 2, &mut c).is_err(), "in flight");
+            sc.end_multi(&mut c).unwrap();
         });
     }
 

@@ -1,0 +1,287 @@
+//! Golden suite for the batched multi-RHS solve engine: block CG with k
+//! right-hand sides must reproduce, for every column, the residual history
+//! of solving that column alone with the same KSP/PC (to the golden-suite
+//! tolerance) — asserted for k ∈ {1, 2, 4} across `ranks × threads`
+//! decompositions of the same slot grid — and the batched histories must
+//! themselves be bitwise decomposition-invariant, like every other member
+//! of the fused family.
+
+use mmpetsc::comm::endpoint::Comm;
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::logging::EventLog;
+use mmpetsc::ksp::{block, fused, KspConfig};
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::pc::jacobi::PcJacobi;
+use mmpetsc::pc::{PcNone, Precond};
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::Layout;
+use mmpetsc::vec::multi::MultiVecMPI;
+use mmpetsc::vec::VecMPI;
+
+/// The golden-suite tolerance for history comparison: relative agreement
+/// per recorded residual. (By construction the engines share every kernel
+/// and fold order, so the histories are expected to agree bitwise; the
+/// tolerance keeps the assertion honest about what the contract requires.)
+const GOLDEN_RTOL: f64 = 1e-6;
+
+fn rel_close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= GOLDEN_RTOL * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Symmetric, strictly diagonally dominant global triplets with long-range
+/// couplings so rows straddle several hybrid slots.
+fn spd_wide_entries(n: usize) -> Vec<(usize, usize, f64)> {
+    let mut es = Vec::new();
+    for i in 0..n {
+        es.push((i, i, 6.0));
+        if i + 1 < n {
+            es.push((i, i + 1, -1.0));
+            es.push((i + 1, i, -1.0));
+        }
+        let j = (i * 7 + n / 3) % n;
+        if j != i {
+            es.push((i, j, -0.04));
+            es.push((j, i, -0.04));
+        }
+    }
+    es
+}
+
+fn rhs_entry(c: usize, g: usize) -> f64 {
+    (g as f64 * 0.045 + c as f64 * 2.3).sin() + 0.4
+}
+
+/// Assemble the SPD operator on the slot-aligned layout with the hybrid
+/// plan enabled.
+fn operator(n: usize, threads: usize, comm: &mut Comm) -> MatMPIAIJ {
+    let layout = Layout::slot_aligned(n, comm.size(), threads);
+    let (lo, hi) = layout.range(comm.rank());
+    let ctx = ThreadCtx::new(threads);
+    let es: Vec<_> = spd_wide_entries(n)
+        .into_iter()
+        .filter(|&(i, _, _)| i >= lo && i < hi)
+        .collect();
+    let mut a = MatMPIAIJ::assemble(layout.clone(), layout, es, comm, ctx).unwrap();
+    a.enable_hybrid().unwrap();
+    a
+}
+
+/// Per-column (history, iterations) of one batched solve plus the solo
+/// histories of the same columns at the same decomposition.
+#[allow(clippy::type_complexity)]
+fn batched_and_solo(
+    n: usize,
+    k: usize,
+    ranks: usize,
+    threads: usize,
+    jacobi: bool,
+) -> (Vec<(Vec<f64>, usize)>, Vec<(Vec<f64>, usize)>) {
+    let outs = World::run(ranks, move |mut comm| {
+        let mut a = operator(n, threads, &mut comm);
+        let ctx = a.diag_block().ctx().clone();
+        let layout = a.row_layout().clone();
+        let (lo, hi) = layout.range(comm.rank());
+        let pc: Box<dyn Precond> = if jacobi {
+            Box::new(PcJacobi::setup(&a, &mut comm).unwrap())
+        } else {
+            Box::new(PcNone)
+        };
+        let cfg = KspConfig {
+            rtol: 1e-8,
+            monitor: true,
+            ..Default::default()
+        };
+        let log = EventLog::new();
+
+        // batched
+        let mut b = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        for c in 0..k {
+            let xs: Vec<f64> = (lo..hi).map(|g| rhs_entry(c, g)).collect();
+            b.local_mut().set_col(c, &xs).unwrap();
+        }
+        let mut x = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        let stats = block::solve_fused(
+            &mut a,
+            pc.as_ref(),
+            &b,
+            &mut x,
+            &cfg,
+            &[],
+            &mut comm,
+            &log,
+        )
+        .unwrap();
+        assert!(stats.fused, "{ranks}×{threads} k={k}: fused engine must engage");
+        assert!(stats.all_converged(), "{ranks}×{threads} k={k}");
+
+        // solo, per column, same operator/PC/config
+        let mut solo = Vec::new();
+        for c in 0..k {
+            let mut bc = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+            b.extract_col_into(c, &mut bc).unwrap();
+            let mut xc = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+            let s = fused::solve(&mut a, pc.as_ref(), &bc, &mut xc, &cfg, &mut comm, &log)
+                .unwrap();
+            assert!(s.converged(), "solo col {c} at {ranks}×{threads}");
+            solo.push((s.history, s.iterations));
+        }
+        let batched: Vec<(Vec<f64>, usize)> = stats
+            .cols
+            .into_iter()
+            .map(|s| (s.history, s.iterations))
+            .collect();
+        (batched, solo)
+    });
+    outs.into_iter().next().unwrap()
+}
+
+#[test]
+fn block_cg_columns_match_solo_across_decompositions() {
+    // The acceptance criterion: for k ∈ {1, 2, 4} and every ranks×threads
+    // decomposition of G = 4, each batched column's residual history
+    // equals the solo solve of that column to the golden tolerance.
+    let n = 120;
+    for k in [1usize, 2, 4] {
+        for (ranks, threads) in [(1usize, 4usize), (2, 2), (4, 1)] {
+            let (batched, solo) = batched_and_solo(n, k, ranks, threads, true);
+            for c in 0..k {
+                let (bh, bi) = &batched[c];
+                let (sh, si) = &solo[c];
+                assert!(
+                    bi.abs_diff(*si) <= 1,
+                    "{ranks}×{threads} k={k} col {c}: batched {bi} vs solo {si} iterations"
+                );
+                let m = bh.len().min(sh.len());
+                assert!(m > 1, "histories must be recorded");
+                for i in 0..m {
+                    assert!(
+                        rel_close(bh[i], sh[i]),
+                        "{ranks}×{threads} k={k} col {c} it {i}: {} vs {}",
+                        bh[i],
+                        sh[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_cg_histories_decomposition_invariant_bitwise() {
+    // Within one slot-grid group the batched histories are bitwise
+    // identical across decompositions — the same contract the solo fused
+    // family already honours, k-wide.
+    let n = 120;
+    for k in [1usize, 3] {
+        let histories: Vec<Vec<Vec<u64>>> = [(1usize, 4usize), (2, 2), (4, 1)]
+            .iter()
+            .map(|&(r, t)| {
+                let (batched, _) = batched_and_solo(n, k, r, t, false);
+                batched
+                    .into_iter()
+                    .map(|(h, _)| h.iter().map(|v| v.to_bits()).collect())
+                    .collect()
+            })
+            .collect();
+        assert_eq!(histories[0], histories[1], "k={k}: 1×4 vs 2×2");
+        assert_eq!(histories[1], histories[2], "k={k}: 2×2 vs 4×1");
+    }
+}
+
+#[test]
+fn reference_engine_matches_fused_engine_bitwise_multirank() {
+    // Engine-vs-engine: the kernel-per-fork reference and the one-region
+    // fused engine share every kernel and fold — bitwise-equal histories
+    // and solutions, also across ranks.
+    let n = 96;
+    World::run(3, move |mut comm| {
+        let mut a = operator(n, 2, &mut comm);
+        let ctx = a.diag_block().ctx().clone();
+        let layout = a.row_layout().clone();
+        let (lo, hi) = layout.range(comm.rank());
+        let cfg = KspConfig {
+            rtol: 1e-9,
+            monitor: true,
+            ..Default::default()
+        };
+        let log = EventLog::new();
+        let k = 3;
+        let mut b = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        for c in 0..k {
+            let xs: Vec<f64> = (lo..hi).map(|g| rhs_entry(c, g)).collect();
+            b.local_mut().set_col(c, &xs).unwrap();
+        }
+        let pc = PcJacobi::setup(&a, &mut comm).unwrap();
+        let mut x1 = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        let s_ref =
+            block::solve(&mut a, &pc, &b, &mut x1, &cfg, &[], &mut comm, &log).unwrap();
+        let mut x2 = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        let s_fus =
+            block::solve_fused(&mut a, &pc, &b, &mut x2, &cfg, &[], &mut comm, &log).unwrap();
+        assert!(!s_ref.fused && s_fus.fused);
+        for c in 0..k {
+            assert_eq!(s_ref.cols[c].iterations, s_fus.cols[c].iterations, "col {c}");
+            for (u, f) in s_ref.cols[c].history.iter().zip(&s_fus.cols[c].history) {
+                assert_eq!(u.to_bits(), f.to_bits(), "col {c}");
+            }
+            for (u, f) in x1.local().col(c).iter().zip(x2.local().col(c)) {
+                assert_eq!(u.to_bits(), f.to_bits(), "solution col {c}");
+            }
+        }
+    });
+}
+
+#[test]
+fn masked_columns_meet_their_own_tolerances() {
+    // Mixed per-request tolerances in one batch: every column stops at its
+    // own rtol, early columns freeze (shorter histories), late columns are
+    // unperturbed by the frozen ones.
+    let n = 110;
+    World::run(2, move |mut comm| {
+        let mut a = operator(n, 2, &mut comm);
+        let ctx = a.diag_block().ctx().clone();
+        let layout = a.row_layout().clone();
+        let (lo, hi) = layout.range(comm.rank());
+        let cfg = KspConfig {
+            rtol: 1e-6,
+            monitor: true,
+            ..Default::default()
+        };
+        let log = EventLog::new();
+        let k = 3;
+        let rtols = [1e-2, 1e-6, 1e-10];
+        let mut b = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        for c in 0..k {
+            let xs: Vec<f64> = (lo..hi).map(|g| rhs_entry(c, g)).collect();
+            b.local_mut().set_col(c, &xs).unwrap();
+        }
+        let mut x = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        let stats = block::solve_fused(
+            &mut a, &PcNone, &b, &mut x, &cfg, &rtols, &mut comm, &log,
+        )
+        .unwrap();
+        assert!(stats.all_converged());
+        assert!(stats.cols[0].iterations < stats.cols[2].iterations);
+        for (c, s) in stats.cols.iter().enumerate() {
+            assert!(
+                s.final_residual <= rtols[c] * s.b_norm,
+                "col {c}: {} > {}",
+                s.final_residual,
+                rtols[c] * s.b_norm
+            );
+        }
+        // the tight column's trajectory equals a solo solve at its rtol
+        let mut bc = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        b.extract_col_into(2, &mut bc).unwrap();
+        let mut xc = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        let solo_cfg = KspConfig {
+            rtol: 1e-10,
+            monitor: true,
+            ..Default::default()
+        };
+        let solo =
+            fused::solve(&mut a, &PcNone, &bc, &mut xc, &solo_cfg, &mut comm, &log).unwrap();
+        assert!(solo.converged());
+        assert!(stats.cols[2].iterations.abs_diff(solo.iterations) <= 1);
+    });
+}
