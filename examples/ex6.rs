@@ -62,7 +62,7 @@ fn main() {
     let threads = opts.usize_or("threads", 1).unwrap();
     let ranks = opts.usize_or("ranks", 1).unwrap();
     let ksp_type = opts.get_or("ksp_type", "gmres");
-    let pc_type = opts.get_or("pc_type", "jacobi");
+    let pc_type = opts.pc_name("jacobi");
     let (ksp_for_run, pc_for_run) = (ksp_type.clone(), pc_type.clone());
     let cfg = opts.ksp_config().unwrap();
 

@@ -1,0 +1,170 @@
+//! Preconditioner sweep: fused CG with a *real* (dependency-laden) PC at
+//! full thread count — the scenario the paper benchmarks against Fluidity
+//! and the one PR 4 opens: colored SOR, level-scheduled ILU(0) and the
+//! slot-parallel GAMG V-cycle ride inside the fused iteration instead of
+//! forcing the kernel-per-fork fallback. Reports GFLOP/s, time/iter,
+//! forks/iter (fused ≈ 1, unfused ≥ 7) and the fused-vs-unfused speedup
+//! per rank×thread decomposition. Results go to stdout and
+//! `BENCH_pc.json`, alongside BENCH_hybrid/BENCH_batch in the CI artifact.
+//!
+//! `cargo bench --bench bench_pc -- --cores 4 --scale 0.003`
+
+use mmpetsc::bench::{JsonVal, Table};
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::util::cli::Cli;
+
+const PCS: [&str; 4] = ["jacobi", "sor-colored", "ilu0-level", "gamg-fused"];
+
+struct PcResult {
+    ranks: usize,
+    threads: usize,
+    pc: &'static str,
+    fused_seconds: f64,
+    fused_gflops: f64,
+    fused_forks_per_iter: f64,
+    unfused_seconds: f64,
+    unfused_forks_per_iter: f64,
+    rows: usize,
+}
+
+fn run_point(
+    case: TestCase,
+    scale: f64,
+    ranks: usize,
+    threads: usize,
+    pc: &'static str,
+    its: usize,
+) -> PcResult {
+    let fixed = |ksp: &str| -> HybridConfig {
+        let mut cfg = HybridConfig::default_for(case, scale, ranks, threads);
+        cfg.ksp_type = ksp.into();
+        cfg.pc_type = pc.into();
+        // unreachable tolerances: exactly `its` iterations on both paths
+        cfg.ksp.rtol = 1e-300;
+        cfg.ksp.atol = 0.0;
+        cfg.ksp.max_it = its;
+        cfg
+    };
+    let mut fused_best = f64::INFINITY;
+    let mut fused_flops = 0.0;
+    let mut fused_fpi = 0.0;
+    let mut unfused_best = f64::INFINITY;
+    let mut unfused_fpi = 0.0;
+    let mut rows = 0usize;
+    for _rep in 0..3 {
+        let f = run_case(&fixed("cg-fused")).expect("fused run");
+        if f.ksp_time < fused_best {
+            fused_best = f.ksp_time;
+            fused_flops = f.total_flops;
+        }
+        fused_fpi = f.forks_per_iter();
+        rows = f.rows;
+        let u = run_case(&fixed("cg")).expect("unfused run");
+        if u.ksp_time < unfused_best {
+            unfused_best = u.ksp_time;
+        }
+        unfused_fpi = u.forks_per_iter();
+    }
+    PcResult {
+        ranks,
+        threads,
+        pc,
+        fused_seconds: fused_best,
+        fused_gflops: fused_flops / fused_best / 1e9,
+        fused_forks_per_iter: fused_fpi,
+        unfused_seconds: unfused_best,
+        unfused_forks_per_iter: unfused_fpi,
+        rows,
+    }
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_pc",
+        "fused CG sweep over the threaded dependency-aware preconditioners",
+    )
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .opt("cores", Some("4"), "total cores to factor into rank×thread grids")
+    .opt("scale", Some("0.003"), "matrix scale for saltfinger-pressure")
+    .opt("its", Some("30"), "CG iterations to time")
+    .opt("out", Some("BENCH_pc.json"), "output JSON path")
+    .parse_env();
+    let cores = args.get_usize("cores").unwrap().max(1);
+    let scale = args.get_f64("scale").unwrap();
+    let its = args.get_usize("its").unwrap().max(2);
+    let out_path = args.get_or("out", "BENCH_pc.json");
+    let case = TestCase::SaltPressure;
+
+    let decomps: Vec<(usize, usize)> = (1..=cores)
+        .filter(|r| cores % r == 0)
+        .map(|r| (r, cores / r))
+        .collect();
+
+    let mut results = Vec::new();
+    for &(r, t) in &decomps {
+        for pc in PCS {
+            results.push(run_point(case, scale, r, t, pc, its));
+        }
+    }
+
+    let rows = results.first().map(|c| c.rows).unwrap_or(0);
+    let title = format!(
+        "fused CG × real PCs — {} scale {scale}, {rows} rows, {cores} cores, {its} its",
+        case.name()
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "ranks×threads",
+            "pc",
+            "fused GF/s",
+            "speedup",
+            "fused forks/it",
+            "unfused forks/it",
+        ],
+    );
+    for c in &results {
+        t.row(&[
+            format!("{}×{}", c.ranks, c.threads),
+            c.pc.to_string(),
+            format!("{:.3}", c.fused_gflops),
+            format!("{:.2}×", c.unfused_seconds / c.fused_seconds.max(1e-12)),
+            format!("{:.2}", c.fused_forks_per_iter),
+            format!("{:.2}", c.unfused_forks_per_iter),
+        ]);
+    }
+    t.print();
+
+    let configs: Vec<(String, JsonVal)> = results
+        .iter()
+        .map(|c| {
+            (
+                format!("r{}t{}_{}", c.ranks, c.threads, c.pc),
+                JsonVal::obj(vec![
+                    ("ranks", JsonVal::Int(c.ranks as u64)),
+                    ("threads", JsonVal::Int(c.threads as u64)),
+                    ("pc", JsonVal::Str(c.pc.into())),
+                    ("fused_seconds", JsonVal::Num(c.fused_seconds)),
+                    ("fused_gflops", JsonVal::Num(c.fused_gflops)),
+                    ("fused_forks_per_iter", JsonVal::Num(c.fused_forks_per_iter)),
+                    ("unfused_seconds", JsonVal::Num(c.unfused_seconds)),
+                    (
+                        "unfused_forks_per_iter",
+                        JsonVal::Num(c.unfused_forks_per_iter),
+                    ),
+                ]),
+            )
+        })
+        .collect();
+    let json = JsonVal::Obj(vec![
+        ("bench".to_string(), JsonVal::Str("pc".into())),
+        ("case".to_string(), JsonVal::Str(case.name().into())),
+        ("cores".to_string(), JsonVal::Int(cores as u64)),
+        ("rows".to_string(), JsonVal::Int(rows as u64)),
+        ("iterations".to_string(), JsonVal::Int(its as u64)),
+        ("configs".to_string(), JsonVal::Obj(configs)),
+    ]);
+    std::fs::write(&out_path, json.render() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

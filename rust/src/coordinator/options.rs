@@ -83,6 +83,20 @@ impl Options {
         }
     }
 
+    /// The effective `pc_type`, with the threaded-variant toggles applied:
+    /// `-pc_type sor -pc_sor_colored` selects the multicolor threaded SOR
+    /// (`sor-colored`), `-pc_type gamg -pc_gamg_fused` the slot-parallel
+    /// fused V-cycle (`gamg-fused`). The explicit names keep working; the
+    /// flags mirror how PETSc toggles sub-variants of one PC type.
+    pub fn pc_name(&self, default: &str) -> String {
+        let base = self.get_or("pc_type", default);
+        match base.as_str() {
+            "sor" if self.flag("pc_sor_colored") => "sor-colored".into(),
+            "gamg" if self.flag("pc_gamg_fused") => "gamg-fused".into(),
+            _ => base,
+        }
+    }
+
     /// Extract a [`KspConfig`] from `-ksp_rtol/-ksp_atol/-ksp_max_it/
     /// -ksp_gmres_restart/-ksp_monitor`.
     pub fn ksp_config(&self) -> Result<KspConfig> {
@@ -137,6 +151,22 @@ mod tests {
         assert!(Options::parse_str("-").is_err());
         let o = Options::parse_str("-n abc").unwrap();
         assert!(o.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn pc_variant_flags_resolve() {
+        let o = Options::parse_str("-pc_type sor -pc_sor_colored").unwrap();
+        assert_eq!(o.pc_name("jacobi"), "sor-colored");
+        let o = Options::parse_str("-pc_type gamg -pc_gamg_fused").unwrap();
+        assert_eq!(o.pc_name("jacobi"), "gamg-fused");
+        // flags only fire on their own base type
+        let o = Options::parse_str("-pc_type jacobi -pc_sor_colored -pc_gamg_fused").unwrap();
+        assert_eq!(o.pc_name("jacobi"), "jacobi");
+        // explicit names pass through; default applies without -pc_type
+        let o = Options::parse_str("-pc_type ilu0-level").unwrap();
+        assert_eq!(o.pc_name("jacobi"), "ilu0-level");
+        let o = Options::parse_str("-pc_sor_colored").unwrap();
+        assert_eq!(o.pc_name("jacobi"), "jacobi");
     }
 
     #[test]

@@ -94,6 +94,20 @@ pub struct HybridReport {
     /// Sum across ranks of ghost messages fully hidden behind overlapped
     /// compute.
     pub msgs_hidden: u64,
+    /// Max across ranks of pool parallel regions forked during KSPSolve
+    /// (setup + iterations). The fused solvers fork once per iteration —
+    /// `forks / iterations → 1` — while the kernel-per-fork path forks for
+    /// every Vec/Mat/PC call (≥ 7 per iteration); tests assert a fused
+    /// solve with a colored PC did **not** fall back through this counter.
+    pub forks: u64,
+}
+
+impl HybridReport {
+    /// Solve-phase forks per iteration (includes the constant setup forks,
+    /// so compare counts at two iteration budgets for an exact rate).
+    pub fn forks_per_iter(&self) -> f64 {
+        self.forks as f64 / self.iterations.max(1) as f64
+    }
 }
 
 /// Per-rank result carried out of the SPMD region.
@@ -109,6 +123,7 @@ struct RankOutcome {
     nnz: usize,
     overlap_fraction: f64,
     msgs_hidden: u64,
+    forks: u64,
 }
 
 /// Does this ksp name dispatch through the fused layer (and therefore want
@@ -177,7 +192,8 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
 
             let pc = pc::from_name(&cfg.pc_type, &a, &mut comm)?;
             let log = EventLog::new();
-            let mut x = VecMPI::new(layout, rank, ctx);
+            let mut x = VecMPI::new(layout, rank, ctx.clone());
+            let forks_before = ctx.pool().fork_count();
             let stats = solve_by_name(
                 &cfg.ksp_type,
                 &mut a,
@@ -188,6 +204,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
                 &mut comm,
                 &log,
             )?;
+            let forks = ctx.pool().fork_count() - forks_before;
 
             let total_flops: f64 = log.all().iter().map(|(_, e)| e.flops).sum();
             let ov = *a.scatter().overlap_stats();
@@ -202,6 +219,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
                 nnz: a.diag_block().nnz() + a.offdiag_block().nnz(),
                 overlap_fraction: ov.overlap_fraction(),
                 msgs_hidden: ov.msgs_hidden,
+                forks,
                 stats,
             })
         })
@@ -224,6 +242,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
         history: Vec::new(),
         overlap_fraction: 0.0,
         msgs_hidden: 0,
+        forks: 0,
     };
     for (r, o) in outcomes.into_iter().enumerate() {
         let o = o?;
@@ -240,6 +259,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
         report.ghosts.push(o.ghosts);
         report.overlap_fraction = report.overlap_fraction.max(o.overlap_fraction);
         report.msgs_hidden += o.msgs_hidden;
+        report.forks = report.forks.max(o.forks);
         if r == 0 {
             report.history = o.stats.history.clone();
         }
@@ -415,6 +435,40 @@ mod tests {
         assert!(!histories[0].is_empty());
         assert_eq!(histories[0], histories[1], "1×4 vs 2×2");
         assert_eq!(histories[1], histories[2], "2×2 vs 4×1");
+    }
+
+    #[test]
+    fn colored_pc_rides_the_fused_path_not_the_fallback() {
+        // The acceptance criterion: fused CG with `sor-colored` must not
+        // fall back to the kernel-per-fork path. Asserted via the runner's
+        // forks/iter accounting — the fork-count difference between two
+        // iteration budgets isolates the per-iteration rate exactly.
+        let run = |ksp: &str, max_it: usize| -> HybridReport {
+            let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, 1, 4);
+            cfg.ksp_type = ksp.into();
+            cfg.pc_type = "sor-colored".into();
+            // unreachable tolerances: exactly max_it iterations
+            cfg.ksp.rtol = 1e-300;
+            cfg.ksp.atol = 0.0;
+            cfg.ksp.max_it = max_it;
+            let rep = run_case(&cfg).unwrap();
+            assert_eq!(rep.iterations, max_it, "{ksp} must run to max_it");
+            rep
+        };
+        let f10 = run("cg-fused", 10).forks;
+        let f30 = run("cg-fused", 30).forks;
+        assert_eq!(
+            f30 - f10,
+            20,
+            "cg-fused + sor-colored: exactly 1 fork per iteration (no fallback)"
+        );
+        let u10 = run("cg", 10).forks;
+        let u30 = run("cg", 30).forks;
+        assert!(
+            u30 - u10 >= 20 * 5,
+            "unfused cg must stay kernel-per-fork, got {} forks for 20 its",
+            u30 - u10
+        );
     }
 
     #[test]

@@ -159,8 +159,11 @@ pub fn can_fuse_block(
     x: &MultiVecMPI,
     comm: &Comm,
 ) -> bool {
+    // Strictly element-wise: the k-wide region has no phased-apply lane
+    // yet, so colored/level-scheduled PCs take the reference path (their
+    // generic `apply_multi` is still correct, just unfused).
     plan_matches(a, b, x, comm)
-        && !matches!(pc.fused(), FusedPc::Unfusable)
+        && matches!(pc.fused(), FusedPc::Identity | FusedPc::Jacobi(_))
         && a.diag_block().ctx().always_forks()
 }
 
@@ -531,8 +534,10 @@ fn solve_fused_inner(
     let inv_diag: Option<&[f64]> = match pc.fused() {
         FusedPc::Jacobi(d) => Some(d),
         FusedPc::Identity => None,
-        FusedPc::Unfusable => {
-            return Err(Error::Unsupported("fused block CG: PC is not fusable".into()))
+        FusedPc::Colored(_) | FusedPc::Unfusable => {
+            return Err(Error::Unsupported(
+                "fused block CG: PC is not element-wise".into(),
+            ))
         }
     };
     if let Some(d) = inv_diag {

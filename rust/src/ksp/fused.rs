@@ -38,8 +38,8 @@ use crate::ksp::{
     check_convergence, dot, norm2, pcapply, ConvergedReason, KspConfig, SolveStats,
 };
 use crate::mat::mpiaij::{HybridPlan, MatMPIAIJ};
-use crate::pc::{FusedPc, Precond};
-use crate::thread::pool::{RegionBarrier, ReduceSlots};
+use crate::pc::{FusedPc, PhasedApply, Precond};
+use crate::thread::pool::{BarrierWaiter, RegionBarrier, ReduceSlots};
 use crate::thread::schedule::static_chunk;
 use crate::vec::blas1;
 use crate::vec::mpi::VecMPI;
@@ -70,6 +70,75 @@ unsafe fn mut_slice<'a>(raw: &Raw, lo: usize, len: usize) -> &'a mut [f64] {
     std::slice::from_raw_parts_mut(raw.0.add(lo), len)
 }
 
+/// The in-region form of the preconditioner: element-wise PCs apply inline
+/// on each thread's own chunk; phased PCs ([`FusedPc::Colored`] — colored
+/// SOR sweeps, level-scheduled ILU solves, slot-parallel V-cycles) run as
+/// barrier-separated parallel phases, one extra in-region barrier per
+/// phase.
+enum RegionPc<'a> {
+    /// `None` = identity (PCNone), `Some(d)` = Jacobi inverse diagonal.
+    Ew(Option<&'a [f64]>),
+    /// Dependency-aware apply, sequenced by the region barrier.
+    Phased(&'a dyn PhasedApply),
+}
+
+/// Classify `pc` for a fused region over an `n`-row local block. Sizes are
+/// validated here — for the phased PCs as much as for the Jacobi diagonal —
+/// so a PC built against a different operator is rejected before any raw
+/// region pointer is formed.
+fn region_pc<'a>(pc: &'a dyn Precond, n: usize, what: &str) -> Result<RegionPc<'a>> {
+    match pc.fused() {
+        FusedPc::Identity => Ok(RegionPc::Ew(None)),
+        FusedPc::Jacobi(d) => {
+            if d.len() != n {
+                return Err(Error::size_mismatch(format!("{what}: inv_diag length")));
+            }
+            Ok(RegionPc::Ew(Some(d)))
+        }
+        FusedPc::Colored(p) => {
+            if p.local_len() != n {
+                return Err(Error::size_mismatch(format!(
+                    "{what}: phased PC built for {} local rows, operator has {n}",
+                    p.local_len()
+                )));
+            }
+            Ok(RegionPc::Phased(p))
+        }
+        FusedPc::Unfusable => Err(Error::Unsupported(format!("{what}: PC is not fusable"))),
+    }
+}
+
+/// Run one phased PC application inside a fused region: the colored/level
+/// sweep as `nphases` parallel phases with one in-region barrier after
+/// each (including the last, so the finished `z` is ordered before its
+/// consumers). Shared by all four fused solver regions — the phase/barrier
+/// protocol lives in exactly one place.
+///
+/// # Safety
+/// Region discipline: every thread of the region calls this at the same
+/// point with identical arguments; the local vector behind `r_raw` is
+/// fully written before the call and read-only until the region's next
+/// `r` write; `z_raw` covers the same `n` elements ([`region_pc`] has
+/// validated `n` against the PC) and is touched only by the phases until
+/// the final barrier returns.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_region_phases(
+    p: &dyn PhasedApply,
+    tid: usize,
+    t: usize,
+    r_raw: &Raw,
+    z_raw: &Raw,
+    n: usize,
+    barrier: &RegionBarrier,
+    ws: &mut BarrierWaiter,
+) {
+    let rall = ref_slice(r_raw, 0, n);
+    for ph in 0..p.nphases() {
+        p.apply_phase(ph, tid, t, rall, z_raw.0, n);
+        barrier.wait(ws);
+    }
+}
+
 /// Fold per-thread partials in thread-id order, skipping empty chunks —
 /// the exact accumulation order of [`crate::thread::pool::Pool::reduce`]
 /// with a `+` combiner, which is what makes fused reductions bitwise equal
@@ -87,8 +156,9 @@ fn reduce_sum(slots: &ReduceSlots, n: usize, t: usize) -> f64 {
 
 /// Can this (operator, PC, vectors, communicator) combination run fused?
 ///
-/// Requirements: a single rank (no interleaved MPI reductions), an
-/// element-wise PC, a square local block with no off-diagonal part, one
+/// Requirements: a single rank (no interleaved MPI reductions), a fusable
+/// PC (element-wise, or phased — colored SOR / level-scheduled ILU /
+/// slot-parallel GAMG), a square local block with no off-diagonal part, one
 /// shared thread context so the matrix partition and the vector chunks
 /// describe the same pool, and the always-fork adaptive policy (a real
 /// size-adaptive cut-off changes the unfused reduction fold order for
@@ -130,8 +200,9 @@ pub(crate) fn plan_matches_operator(a: &MatMPIAIJ, comm: &Comm) -> bool {
 
 /// Can this combination run the **multi-rank hybrid** fused path? Requires
 /// a built [`crate::mat::mpiaij::HybridPlan`] (see
-/// [`MatMPIAIJ::enable_hybrid`]) whose grid matches this communicator, an
-/// element-wise PC, and the same shared-context conditions as [`can_fuse`].
+/// [`MatMPIAIJ::enable_hybrid`]) whose grid matches this communicator, a
+/// fusable (element-wise or phased) PC, and the same shared-context
+/// conditions as [`can_fuse`].
 /// Hybrid fusion is opt-in via the plan, so single-rank callers that never
 /// enable it keep the legacy path's unfused-bitwise-identity contract.
 pub fn can_fuse_hybrid(
@@ -249,18 +320,7 @@ fn cg_fused_inner(
     let n = x.local().len();
     let part: Vec<(usize, usize)> = diag.partition().to_vec();
     debug_assert_eq!(part.len(), t);
-    let inv_diag: Option<&[f64]> = match pc.fused() {
-        FusedPc::Jacobi(d) => Some(d),
-        FusedPc::Identity => None,
-        FusedPc::Unfusable => {
-            return Err(Error::Unsupported("fused CG: PC is not fusable".into()))
-        }
-    };
-    if let Some(d) = inv_diag {
-        if d.len() != n {
-            return Err(Error::size_mismatch("fused CG: inv_diag length"));
-        }
-    }
+    let rpc = region_pc(pc, n, "fused CG")?;
 
     let x_raw = Raw(x.local_mut().as_mut_slice().as_mut_ptr());
     let r_raw = Raw(r.local_mut().as_mut_slice().as_mut_ptr());
@@ -314,7 +374,8 @@ fn cg_fused_inner(
                 let alpha = rz_now / pw;
                 if lo < hi {
                     // SAFETY: static chunks are disjoint across threads; all
-                    // remaining phases touch only this thread's chunk.
+                    // remaining elementwise phases touch only this thread's
+                    // chunk.
                     // -- 3. x += α p ; r -= α w.
                     let xc = unsafe { mut_slice(&x_raw, lo, hi - lo) };
                     let pc_ = unsafe { ref_slice(&p_raw, lo, hi - lo) };
@@ -324,14 +385,40 @@ fn cg_fused_inner(
                     blas1::axpy(-alpha, wc, rc);
                     // -- 4. partial ‖r‖².
                     rr_slots.set(tid, blas1::sqnorm(rc));
-                    // -- 5. z = M⁻¹ r (element-wise PC).
-                    let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
-                    match inv_diag {
-                        Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
-                        None => blas1::copy(rc, zc),
+                }
+                match &rpc {
+                    RegionPc::Ew(inv_diag) => {
+                        if lo < hi {
+                            // -- 5. z = M⁻¹ r (element-wise PC).
+                            let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                            let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                            match inv_diag {
+                                Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                                None => blas1::copy(rc, zc),
+                            }
+                            // -- 6. partial (r, z).
+                            rz_slots.set(tid, blas1::dot(rc, zc));
+                        }
                     }
-                    // -- 6. partial (r, z).
-                    rz_slots.set(tid, blas1::dot(rc, zc));
+                    RegionPc::Phased(p) => {
+                        // -- 5'. z = M⁻¹ r as barrier-separated phases. The
+                        // class/level rows a thread sweeps are not its
+                        // static chunk, so the r writes above must be
+                        // ordered first.
+                        barrier.wait(&mut ws);
+                        // SAFETY: r is read-only for the rest of the region;
+                        // phases write disjoint z rows per PhasedApply.
+                        unsafe {
+                            run_region_phases(*p, tid, t, &r_raw, &z_raw, n, &barrier, &mut ws)
+                        };
+                        if lo < hi {
+                            // -- 6'. partial (r, z) back on the static chunk
+                            // (z fully written — last phase barrier above).
+                            let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                            let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
+                            rz_slots.set(tid, blas1::dot(rc, zc));
+                        }
+                    }
                 }
                 barrier.wait(&mut ws);
                 // -- 7. p = z + β p (needs every thread's rz partial).
@@ -444,18 +531,7 @@ fn cg_hybrid_inner(
     log: &EventLog,
 ) -> Result<SolveStats> {
     let n = x.local().len();
-    let inv_diag: Option<&[f64]> = match pc.fused() {
-        FusedPc::Jacobi(d) => Some(d),
-        FusedPc::Identity => None,
-        FusedPc::Unfusable => {
-            return Err(Error::Unsupported("hybrid fused CG: PC is not fusable".into()))
-        }
-    };
-    if let Some(d) = inv_diag {
-        if d.len() != n {
-            return Err(Error::size_mismatch("hybrid fused CG: inv_diag length"));
-        }
-    }
+    let rpc = region_pc(pc, n, "hybrid fused CG")?;
 
     // ---- deterministic setup: every reduction slot-ordered, every
     //      elementwise op exact, the residual via the plan-aware MatMult ---
@@ -579,8 +655,8 @@ fn cg_hybrid_inner(
                         return;
                     }
                     let alpha = rz_now / pw;
-                    // -- 5. x += αp; r −= αw; ‖r‖², z = M⁻¹r, (r,z) partials
-                    //    over the slot chunk.
+                    // -- 5. x += αp; r −= αw; ‖r‖² partial over the slot
+                    //    chunk.
                     {
                         // SAFETY: slot chunks are disjoint across threads.
                         let xc = unsafe { mut_slice(&x_raw, lo, hi - lo) };
@@ -590,12 +666,35 @@ fn cg_hybrid_inner(
                         let rc = unsafe { mut_slice(&r_raw, lo, hi - lo) };
                         blas1::axpy(-alpha, wc, rc);
                         rr_slots.set(tid, blas1::sqnorm(rc));
-                        let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
-                        match inv_diag {
-                            Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
-                            None => blas1::copy(rc, zc),
+                    }
+                    match &rpc {
+                        RegionPc::Ew(inv_diag) => {
+                            // z = M⁻¹r, (r,z) partial — same slot chunk.
+                            let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                            let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                            match inv_diag {
+                                Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                                None => blas1::copy(rc, zc),
+                            }
+                            rz_slots.set(tid, blas1::dot(rc, zc));
                         }
-                        rz_slots.set(tid, blas1::dot(rc, zc));
+                        RegionPc::Phased(p) => {
+                            // z = M⁻¹r as barrier-separated phases (class/
+                            // level rows cross slot boundaries: order the r
+                            // writes first). The phases touch only this
+                            // rank's local block — the colored PCs are slot
+                            // -block-diagonal, communication-free.
+                            barrier.wait(&mut ws);
+                            // SAFETY: region discipline per run_region_phases.
+                            unsafe {
+                                run_region_phases(
+                                    *p, tid, t, &r_raw, &z_raw, n, &barrier, &mut ws,
+                                )
+                            };
+                            let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                            let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
+                            rz_slots.set(tid, blas1::dot(rc, zc));
+                        }
                     }
                     barrier.wait(&mut ws);
                     // -- 6. master: slot-ordered allreduce of (‖r‖², (r,z)).
@@ -653,20 +752,7 @@ fn cheby_hybrid_inner(
     log: &EventLog,
 ) -> Result<SolveStats> {
     let n = x.local().len();
-    let inv_diag: Option<&[f64]> = match pc.fused() {
-        FusedPc::Jacobi(d) => Some(d),
-        FusedPc::Identity => None,
-        FusedPc::Unfusable => {
-            return Err(Error::Unsupported(
-                "hybrid fused Chebyshev: PC is not fusable".into(),
-            ))
-        }
-    };
-    if let Some(d) = inv_diag {
-        if d.len() != n {
-            return Err(Error::size_mismatch("hybrid fused Chebyshev: inv_diag length"));
-        }
-    }
+    let rpc = region_pc(pc, n, "hybrid fused Chebyshev")?;
 
     // ---- deterministic setup (mirrors chebyshev::solve_inner) -------------
     let bnorm = hybrid_norm2(b, a.hybrid_plan().expect("checked"), comm)?;
@@ -731,16 +817,27 @@ fn cheby_hybrid_inner(
             pool.run(|tid| {
                 let mut ws = barrier.waiter();
                 let (lo, hi) = slot_ranges[tid];
-                // -- 1. z = M⁻¹ r; p recurrence; x += p (slot chunk).
+                // -- 1. z = M⁻¹ r (r fully written by the previous region's
+                //    join or the setup), then p recurrence; x += p.
+                if let RegionPc::Phased(p) = &rpc {
+                    // Phased PC: class/level phases first, one barrier per
+                    // phase; the recurrence below then reads the finished z.
+                    // SAFETY: r fully written at the previous region's join
+                    // (or setup); region discipline per run_region_phases.
+                    unsafe { run_region_phases(*p, tid, t, &r_raw, &z_raw, n, &barrier, &mut ws) };
+                }
                 {
                     // SAFETY: slot chunks disjoint; r last written under the
                     // same chunks (previous region phase 4 or setup).
-                    let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
-                    let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
-                    match inv_diag {
-                        Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
-                        None => blas1::copy(rc, zc),
+                    if let RegionPc::Ew(inv_diag) = &rpc {
+                        let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                        let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                        match inv_diag {
+                            Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                            None => blas1::copy(rc, zc),
+                        }
                     }
+                    let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
                     let pm = unsafe { mut_slice(&p_raw, lo, hi - lo) };
                     if is_first {
                         blas1::copy(zc, pm);
@@ -947,18 +1044,7 @@ fn cheby_fused_inner(
     let t = pool.nthreads();
     let n = x.local().len();
     let part: Vec<(usize, usize)> = diag.partition().to_vec();
-    let inv_diag: Option<&[f64]> = match pc.fused() {
-        FusedPc::Jacobi(d) => Some(d),
-        FusedPc::Identity => None,
-        FusedPc::Unfusable => {
-            return Err(Error::Unsupported("fused Chebyshev: PC is not fusable".into()))
-        }
-    };
-    if let Some(d) = inv_diag {
-        if d.len() != n {
-            return Err(Error::size_mismatch("fused Chebyshev: inv_diag length"));
-        }
-    }
+    let rpc = region_pc(pc, n, "fused Chebyshev")?;
     let bs: &[f64] = b.local().as_slice();
 
     let x_raw = Raw(x.local_mut().as_mut_slice().as_mut_ptr());
@@ -990,17 +1076,28 @@ fn cheby_fused_inner(
             pool.run(|tid| {
                 let mut ws = barrier.waiter();
                 let (lo, hi) = static_chunk(n, t, tid);
+                if let RegionPc::Phased(p) = &rpc {
+                    // -- 1'. z = M⁻¹ r as barrier-separated phases (r fully
+                    // written at the previous region's join / setup).
+                    // SAFETY: region discipline per run_region_phases.
+                    unsafe { run_region_phases(*p, tid, t, &r_raw, &z_raw, n, &barrier, &mut ws) };
+                }
                 if lo < hi {
                     // SAFETY: static chunks disjoint; r last written under
                     // the same chunks (previous region end or setup).
-                    // -- 1. z = M⁻¹ r.
-                    let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
-                    let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
-                    match inv_diag {
-                        Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
-                        None => blas1::copy(rc, zc),
+                    if let RegionPc::Ew(inv_diag) = &rpc {
+                        // -- 1. z = M⁻¹ r.
+                        let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
+                        let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                        match inv_diag {
+                            Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
+                            None => blas1::copy(rc, zc),
+                        }
                     }
-                    // -- 2. p recurrence.
+                    // -- 2. p recurrence (z finished: own chunk for the
+                    // element-wise case, last phase barrier for the phased
+                    // one).
+                    let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
                     let pm = unsafe { mut_slice(&p_raw, lo, hi - lo) };
                     if is_first {
                         blas1::copy(zc, pm);
@@ -1495,6 +1592,215 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    // -- phased (colored / level-scheduled / slot-V-cycle) PCs ---------------
+
+    /// Run cg (unfused) and cg-fused with the same PC at a fixed iteration
+    /// count; return (history bits, solution bits) of each.
+    fn phased_pair(
+        pc_name: &str,
+        threads: usize,
+        c: &mut Comm,
+    ) -> ((Vec<u64>, Vec<u64>), (Vec<u64>, Vec<u64>)) {
+        let ctx = ThreadCtx::new(threads);
+        let (mut a, _xt, b) = manufactured(200, c, ctx.clone());
+        let pc = crate::pc::from_name(pc_name, &a, c).unwrap();
+        // Unreachable tolerance: both paths run exactly max_it iterations,
+        // so the comparison never depends on the pair's convergence.
+        let cfg = KspConfig {
+            rtol: 1e-300,
+            atol: 0.0,
+            max_it: 25,
+            monitor: true,
+            ..Default::default()
+        };
+        let log = EventLog::new();
+        let mut x1 = b.duplicate();
+        let s_un = cg::solve(&mut a, pc.as_ref(), &b, &mut x1, &cfg, c, &log).unwrap();
+        let mut x2 = b.duplicate();
+        assert!(
+            can_fuse(&a, pc.as_ref(), &b, &x2, c),
+            "{pc_name} must be fusable at {threads} threads"
+        );
+        let s_fu = solve(&mut a, pc.as_ref(), &b, &mut x2, &cfg, c, &log).unwrap();
+        let hb = |s: &SolveStats| s.history.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+        let xb = |x: &VecMPI| {
+            x.local().as_slice().iter().map(|v| v.to_bits()).collect::<Vec<u64>>()
+        };
+        ((hb(&s_un), xb(&x1)), (hb(&s_fu), xb(&x2)))
+    }
+
+    #[test]
+    fn fused_cg_with_phased_pcs_matches_unfused_bitwise() {
+        // The PR-1 contract extended to the dependency-laden PCs: with the
+        // sweep inlined as in-region phases, the fused path must still be
+        // bitwise identical to the kernel-per-fork path.
+        World::run(1, |mut c| {
+            for pc_name in ["sor-colored", "ilu0-level", "gamg-fused"] {
+                for threads in [1usize, 2, 4] {
+                    let (un, fu) = phased_pair(pc_name, threads, &mut c);
+                    assert_eq!(un.0, fu.0, "{pc_name}/{threads}T history");
+                    assert_eq!(un.1, fu.1, "{pc_name}/{threads}T solution");
+                }
+            }
+        });
+    }
+
+    /// Hybrid fused CG with a phased PC at `ranks × threads`, fixed
+    /// iteration count; (history bits, gathered solution bits).
+    fn hybrid_phased_bits(
+        pc_name: &'static str,
+        n: usize,
+        ranks: usize,
+        threads: usize,
+    ) -> (Vec<u64>, Vec<u64>) {
+        let outs = World::run(ranks, move |mut c| {
+            let (mut a, _xt, b) = hybrid_system(n, threads, &mut c);
+            let pc = crate::pc::from_name(pc_name, &a, &mut c).unwrap();
+            let cfg = KspConfig {
+                rtol: 1e-300,
+                atol: 0.0,
+                max_it: 20,
+                monitor: true,
+                ..Default::default()
+            };
+            let log = EventLog::new();
+            let mut x = b.duplicate();
+            if !(c.size() == 1 && threads == 1) {
+                assert!(
+                    can_fuse_hybrid(&a, pc.as_ref(), &b, &x, &c),
+                    "{pc_name} must run the hybrid fused path at {ranks}×{threads}"
+                );
+            }
+            let stats = solve(&mut a, pc.as_ref(), &b, &mut x, &cfg, &mut c, &log).unwrap();
+            let hist: Vec<u64> = stats.history.iter().map(|v| v.to_bits()).collect();
+            let xg: Vec<u64> = x
+                .gather_all(&mut c)
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            (hist, xg)
+        });
+        for o in &outs {
+            assert_eq!(o.0, outs[0].0, "{pc_name}: ranks disagree on the history");
+        }
+        outs.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn hybrid_cg_with_phased_pcs_is_decomposition_invariant() {
+        // The acceptance criterion, at the solver level: colored SOR,
+        // level-scheduled ILU(0) and the slot V-cycle drive bitwise
+        // identical fused-CG runs across 1×4, 2×2 and 4×1 of G = 4.
+        let n = 257;
+        for pc_name in ["sor-colored", "ilu0-level", "gamg-fused"] {
+            let h14 = hybrid_phased_bits(pc_name, n, 1, 4);
+            let h22 = hybrid_phased_bits(pc_name, n, 2, 2);
+            let h41 = hybrid_phased_bits(pc_name, n, 4, 1);
+            assert!(!h14.0.is_empty());
+            assert_eq!(h14.0, h22.0, "{pc_name}: history 1×4 vs 2×2");
+            assert_eq!(h22.0, h41.0, "{pc_name}: history 2×2 vs 4×1");
+            assert_eq!(h14.1, h22.1, "{pc_name}: solution 1×4 vs 2×2");
+            assert_eq!(h22.1, h41.1, "{pc_name}: solution 2×2 vs 4×1");
+        }
+    }
+
+    #[test]
+    fn hybrid_cg_with_level_ilu_converges_and_stays_one_fork_per_iter() {
+        // Slot-block ILU(0) on a tridiagonal system is the exact inverse of
+        // the slot-diagonal part — a strong PC; the fused path must both
+        // converge and keep the one-fork-per-iteration shape (phases ride
+        // inside the region: more barriers, not more forks).
+        World::run(2, |mut c| {
+            let (mut a, x_true, b) = hybrid_system(160, 2, &mut c);
+            let pc = crate::pc::from_name("ilu0-level", &a, &mut c).unwrap();
+            let ctx = a.diag_block().ctx().clone();
+            {
+                let cfg = KspConfig {
+                    rtol: 1e-10,
+                    ..Default::default()
+                };
+                let log = EventLog::new();
+                let mut x = b.duplicate();
+                let stats =
+                    solve(&mut a, pc.as_ref(), &b, &mut x, &cfg, &mut c, &log).unwrap();
+                assert!(stats.converged(), "{:?}", stats.reason);
+                assert!(max_err(&x, &x_true, &mut c) < 1e-7);
+            }
+            let run = |max_it: usize, a: &mut MatMPIAIJ, c: &mut Comm| -> u64 {
+                let cfg = KspConfig {
+                    rtol: 1e-300,
+                    atol: 0.0,
+                    max_it,
+                    ..Default::default()
+                };
+                let log = EventLog::new();
+                let mut x = b.duplicate();
+                let before = ctx.pool().fork_count();
+                let stats = solve(a, pc.as_ref(), &b, &mut x, &cfg, c, &log).unwrap();
+                assert_eq!(stats.iterations, max_it, "must run to max_it");
+                ctx.pool().fork_count() - before
+            };
+            let f3 = run(3, &mut a, &mut c);
+            let f8 = run(8, &mut a, &mut c);
+            assert_eq!(f8 - f3, 5, "phased PC: exactly 1 fork per iteration");
+        });
+    }
+
+    #[test]
+    fn phased_pc_built_for_another_operator_is_rejected() {
+        // A colored PC carries its own size; using it with a differently
+        // sized operator must surface as an error (setup apply and the
+        // region gate both check), never as out-of-bounds writes.
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::new(2);
+            let (big, _xt, _bb) = manufactured(200, &mut c, ctx.clone());
+            let pc = crate::pc::from_name("sor-colored", &big, &mut c).unwrap();
+            let (mut small, _xt2, bs) = manufactured(100, &mut c, ctx.clone());
+            let mut x = bs.duplicate();
+            assert!(can_fuse(&small, pc.as_ref(), &bs, &x, &c));
+            let log = EventLog::new();
+            let cfg = KspConfig::default();
+            assert!(
+                solve(&mut small, pc.as_ref(), &bs, &mut x, &cfg, &mut c, &log).is_err(),
+                "mismatched phased PC must be rejected"
+            );
+        });
+    }
+
+    #[test]
+    fn fused_chebyshev_with_phased_pc_matches_unfused_bitwise() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::new(3);
+            let (mut a, _xt, b) = manufactured(150, &mut c, ctx.clone());
+            let pc = crate::pc::from_name("gamg-fused", &a, &mut c).unwrap();
+            let log = EventLog::new();
+            let (emin, emax) =
+                chebyshev::estimate_bounds(&mut a, pc.as_ref(), &b, 8, &mut c, &log).unwrap();
+            let cfg = KspConfig {
+                rtol: 1e-300,
+                atol: 0.0,
+                max_it: 20,
+                monitor: true,
+                ..Default::default()
+            };
+            let mut x1 = b.duplicate();
+            let s_un = chebyshev::solve(
+                &mut a, pc.as_ref(), &b, &mut x1, emin, emax, &cfg, &mut c, &log,
+            )
+            .unwrap();
+            let mut x2 = b.duplicate();
+            let s_fu = solve_chebyshev(
+                &mut a, pc.as_ref(), &b, &mut x2, emin, emax, &cfg, &mut c, &log,
+            )
+            .unwrap();
+            assert_bitwise_equal(&s_un, &s_fu, "chebyshev/gamg-fused");
+            for (u, f) in x1.local().as_slice().iter().zip(x2.local().as_slice()) {
+                assert_eq!(u.to_bits(), f.to_bits(), "solution differs");
+            }
+        });
     }
 
     #[test]

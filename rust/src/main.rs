@@ -109,8 +109,12 @@ fn solve(argv: &[String]) {
         .opt("scale", Some("0.02"), "matrix scale (1.0 = paper)")
         .opt("ranks", Some("4"), "simulated MPI ranks")
         .opt("threads", Some("2"), "threads per rank")
-        .opt("ksp", Some("cg"), "cg|gmres|bicgstab|richardson|chebyshev")
-        .opt("pc", Some("jacobi"), "none|jacobi|bjacobi|sor|ilu0")
+        .opt("ksp", Some("cg"), "cg|cg-fused|gmres|bicgstab|richardson|chebyshev|chebyshev-fused")
+        .opt(
+            "pc",
+            Some("jacobi"),
+            "none|jacobi|bjacobi|sor|sor-colored|ilu0|ilu0-level|gamg|gamg-fused",
+        )
         .opt("rtol", Some("1e-8"), "relative tolerance");
     let a = match cli.parse(argv) {
         Ok(a) => a,

@@ -688,6 +688,88 @@ impl MatSeqAIJ {
         Ok(b.assemble(self.ctx.clone()))
     }
 
+    /// Per-row nonzero counts of an arbitrary row subset (one color class
+    /// or solve level) — the weights
+    /// [`crate::thread::schedule::weight_balanced_chunks`] splits a class
+    /// over the pool with.
+    pub fn row_nnz_of(&self, rows: &[usize]) -> Vec<usize> {
+        rows.iter()
+            .map(|&i| self.row_ptr[i + 1] - self.row_ptr[i])
+            .collect()
+    }
+
+    /// The block-diagonal restriction of this matrix over `blocks`
+    /// (contiguous, disjoint row ranges): entry `(i, j)` is kept iff `i`
+    /// and `j` fall in the **same** block; all cross-block couplings are
+    /// dropped. Entry order within rows is preserved, so per-row
+    /// accumulations over the restricted matrix are a sub-sequence of the
+    /// original ones. This is the slot-restriction behind the
+    /// decomposition-invariant colored/level-scheduled preconditioners:
+    /// the restricted operator depends only on the slot grid, never on how
+    /// slots are grouped into ranks or threads.
+    pub fn restrict_to_blocks(
+        &self,
+        blocks: &[(usize, usize)],
+        ctx: Arc<ThreadCtx>,
+    ) -> Result<MatSeqAIJ> {
+        if self.rows != self.cols {
+            return Err(Error::size_mismatch("restrict_to_blocks: square only"));
+        }
+        let mut block_of = vec![usize::MAX; self.rows];
+        for (b, &(lo, hi)) in blocks.iter().enumerate() {
+            if lo > hi || hi > self.rows {
+                return Err(Error::size_mismatch("restrict_to_blocks: bad block range"));
+            }
+            for i in lo..hi {
+                if block_of[i] != usize::MAX {
+                    return Err(Error::size_mismatch("restrict_to_blocks: overlapping blocks"));
+                }
+                block_of[i] = b;
+            }
+        }
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0usize);
+        for i in 0..self.rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.col_idx[k];
+                if block_of[i] != usize::MAX && block_of[i] == block_of[j] {
+                    col_idx.push(j);
+                    vals.push(self.vals[k]);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        MatSeqAIJ::from_csr(self.rows, self.cols, row_ptr, col_idx, vals, ctx)
+    }
+
+    /// Extract the square sub-block of rows/columns `[lo, hi)`, reindexed
+    /// to `0..hi-lo`; entries with a column outside the window are dropped.
+    /// Used by the slot-parallel GAMG hierarchies, which build one coarse
+    /// hierarchy per slot sub-block.
+    pub fn sub_block(&self, lo: usize, hi: usize, ctx: Arc<ThreadCtx>) -> Result<MatSeqAIJ> {
+        if lo > hi || hi > self.rows || hi > self.cols {
+            return Err(Error::size_mismatch("sub_block: window out of range"));
+        }
+        let m = hi - lo;
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0usize);
+        for i in lo..hi {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.col_idx[k];
+                if j >= lo && j < hi {
+                    col_idx.push(j - lo);
+                    vals.push(self.vals[k]);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        MatSeqAIJ::from_csr(m, m, row_ptr, col_idx, vals, ctx)
+    }
+
     /// Dense row-major copy (testing only).
     pub fn to_dense(&self) -> Vec<Vec<f64>> {
         let mut d = vec![vec![0.0; self.cols]; self.rows];
@@ -1002,6 +1084,52 @@ mod tests {
         let mut y2 = vec![0.0; 100];
         m.mult_slices(&xs, &mut y2).unwrap();
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn block_restriction_drops_exactly_cross_block_entries() {
+        let m = random_csr(40, 40, 4, 77, ctx());
+        let blocks = [(0usize, 13usize), (13, 25), (25, 40)];
+        let r = m.restrict_to_blocks(&blocks, m.ctx().clone()).unwrap();
+        assert_eq!(r.rows(), 40);
+        let block_of = |i: usize| blocks.iter().position(|&(lo, hi)| i >= lo && i < hi).unwrap();
+        for i in 0..40 {
+            let (cols, vals) = m.row(i);
+            let kept: Vec<(usize, f64)> = cols
+                .iter()
+                .zip(vals)
+                .filter(|(&j, _)| block_of(j) == block_of(i))
+                .map(|(&j, &v)| (j, v))
+                .collect();
+            let (rcols, rvals) = r.row(i);
+            assert_eq!(rcols.len(), kept.len(), "row {i}");
+            for (k, &(j, v)) in kept.iter().enumerate() {
+                assert_eq!(rcols[k], j);
+                assert_eq!(rvals[k].to_bits(), v.to_bits(), "value order preserved");
+            }
+        }
+        // single full block = identity restriction
+        let full = m.restrict_to_blocks(&[(0, 40)], m.ctx().clone()).unwrap();
+        assert_eq!(full.nnz(), m.nnz());
+        assert_eq!(full.col_idx(), m.col_idx());
+        // overlap rejected
+        assert!(m.restrict_to_blocks(&[(0, 20), (10, 40)], m.ctx().clone()).is_err());
+    }
+
+    #[test]
+    fn sub_block_extracts_window() {
+        let m = laplacian(10, ctx());
+        let s = m.sub_block(3, 7, ThreadCtx::serial()).unwrap();
+        assert_eq!(s.rows(), 4);
+        assert_eq!(s.get(0, 0), 2.0);
+        assert_eq!(s.get(0, 1), -1.0);
+        assert_eq!(s.get(3, 2), -1.0);
+        // the couplings to rows 2 and 7 are dropped
+        assert_eq!(s.nnz(), 3 * 4 - 2);
+        assert!(m.sub_block(5, 11, ThreadCtx::serial()).is_err());
+        let e = m.sub_block(4, 4, ThreadCtx::serial()).unwrap();
+        assert_eq!(e.rows(), 0);
+        assert_eq!(m.row_nnz_of(&[0, 5, 9]), vec![2, 3, 2]);
     }
 
     #[test]

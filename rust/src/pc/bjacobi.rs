@@ -1,17 +1,23 @@
 //! Block-Jacobi: one local solve per rank on the diagonal block — PETSc's
 //! default parallel preconditioner composition. The local solve is ILU(0)
 //! (default) or SSOR.
+//!
+//! The ILU(0) substitutions run through the level scheduler
+//! ([`crate::pc::ilu::Ilu0Level`]): bitwise identical to the serial sweep
+//! (level scheduling reorders *when* rows run, never their arithmetic), so
+//! all historical `bjacobi-ilu0` expectations hold unchanged while the
+//! triangular solves use the full rank-local pool.
 
 use crate::error::Result;
 use crate::mat::csr::MatSeqAIJ;
 use crate::mat::mpiaij::MatMPIAIJ;
-use crate::pc::ilu::Ilu0;
+use crate::pc::ilu::{Ilu0, Ilu0Level};
 use crate::pc::sor::SorSweeper;
 use crate::pc::Precond;
 use crate::vec::mpi::VecMPI;
 
 enum LocalSolve {
-    Ilu(Ilu0),
+    Ilu(Ilu0Level),
     Sor(SorSweeper, MatSeqAIJ),
 }
 
@@ -21,10 +27,12 @@ pub struct PcBJacobi {
 }
 
 impl PcBJacobi {
-    /// Block-Jacobi with ILU(0) local solves (PETSc's parallel default).
+    /// Block-Jacobi with ILU(0) local solves (PETSc's parallel default),
+    /// level-scheduled over the rank's pool.
     pub fn setup_ilu0(a: &MatMPIAIJ) -> Result<PcBJacobi> {
+        let d = a.diag_block();
         Ok(PcBJacobi {
-            solve: LocalSolve::Ilu(Ilu0::factor(a.diag_block())?),
+            solve: LocalSolve::Ilu(Ilu0Level::from_factors(Ilu0::factor(d)?, d.ctx().clone())),
         })
     }
 
@@ -123,6 +131,35 @@ mod tests {
             for (got, want) in z.local().as_slice().iter().zip(&xs) {
                 assert!((got - want).abs() < 1e-12);
             }
+        });
+    }
+
+    #[test]
+    fn threaded_ilu0_local_solve_matches_serial_bitwise() {
+        // Level scheduling must not change a single bit of the block solve,
+        // whatever the pool width.
+        World::run(1, |mut c| {
+            let n = 64;
+            let layout = Layout::split(n, 1);
+            let r_vals: Vec<f64> = (0..n).map(|i| (i as f64 * 0.23).cos()).collect();
+            let mut bits: Vec<Vec<u64>> = Vec::new();
+            for threads in [1usize, 4] {
+                let ctx = ThreadCtx::new(threads);
+                let a = MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout.clone(),
+                    tridiag_rows(n, 0, n),
+                    &mut c,
+                    ctx.clone(),
+                )
+                .unwrap();
+                let pc = PcBJacobi::setup_ilu0(&a).unwrap();
+                let r = VecMPI::from_local_slice(layout.clone(), 0, &r_vals, ctx.clone()).unwrap();
+                let mut z = VecMPI::new(layout.clone(), 0, ctx);
+                pc.apply(&r, &mut z).unwrap();
+                bits.push(z.local().as_slice().iter().map(|v| v.to_bits()).collect());
+            }
+            assert_eq!(bits[0], bits[1], "1-thread vs 4-thread block ILU solve");
         });
     }
 

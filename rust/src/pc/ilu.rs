@@ -1,14 +1,28 @@
 //! ILU(0) — incomplete LU with zero fill, on a sequential matrix.
 //!
-//! Deliberately serial (per rank): the paper classifies ILU among the PCs
-//! whose "complex data dependencies" make threading a redesign (§V.B), so,
-//! as in the paper, it runs unthreaded and serves via block-Jacobi as the
-//! local solve.
+//! The factorization and the serial substitution ([`Ilu0`]) are the
+//! paper's baseline: ILU is classified among the PCs whose "complex data
+//! dependencies" make threading a redesign (§V.B). [`Ilu0Level`] is that
+//! redesign: the triangular solves are **level-scheduled**
+//! ([`crate::reorder::color`]) — rows layered by longest dependency path,
+//! one parallel phase per level. Unlike the multicolor SOR reordering,
+//! level scheduling changes *nothing* about the math: each row's
+//! accumulation runs over its own nonzeros in CSR order exactly as the
+//! serial substitution does, so the threaded solve is **bitwise identical
+//! to [`Ilu0::solve`] at every thread count** (property-tested below).
+//! `PcIlu0Level` additionally slot-restricts the factored block, making
+//! the apply bitwise invariant across `ranks × threads` decompositions of
+//! one slot grid.
+
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::mat::csr::MatSeqAIJ;
 use crate::mat::mpiaij::MatMPIAIJ;
-use crate::pc::Precond;
+use crate::pc::{FusedPc, PhasedApply, Precond};
+use crate::reorder::color::{backward_levels, forward_levels};
+use crate::thread::schedule::weight_balanced_chunks;
+use crate::vec::ctx::ThreadCtx;
 use crate::vec::mpi::VecMPI;
 
 /// ILU(0) factors of a sequential (local) matrix, stored in one CSR copy
@@ -121,6 +135,166 @@ impl Ilu0 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Level-scheduled triangular solves
+// ---------------------------------------------------------------------------
+
+/// [`Ilu0`] factors plus a level schedule of both triangular solves: the
+/// forward substitution's dependency DAG (strictly-lower pattern) and the
+/// backward one's (strictly-upper), each layered into parallel phases.
+/// `solve` runs one pool fork with a barrier per level and computes the
+/// **same bits as [`Ilu0::solve`]** — scheduling changes when a row runs,
+/// never what it computes.
+pub struct Ilu0Level {
+    ilu: Ilu0,
+    /// Forward levels: rows per level, ascending.
+    fwd: Vec<Vec<usize>>,
+    /// Backward levels: rows per level, ascending.
+    bwd: Vec<Vec<usize>>,
+    /// Per level, per tid: nnz-balanced chunks into the level's row list.
+    fwd_chunks: Vec<Vec<(usize, usize)>>,
+    bwd_chunks: Vec<Vec<(usize, usize)>>,
+    nthreads: usize,
+    ctx: Arc<ThreadCtx>,
+}
+
+impl Ilu0Level {
+    /// Level-schedule existing factors for `ctx`'s pool.
+    pub fn from_factors(ilu: Ilu0, ctx: Arc<ThreadCtx>) -> Ilu0Level {
+        let fwd = forward_levels(&ilu.row_ptr, &ilu.col_idx, &ilu.diag_pos);
+        let bwd = backward_levels(&ilu.row_ptr, &ilu.col_idx, &ilu.diag_pos);
+        let t = ctx.nthreads();
+        // Chunk weights: the triangular-part entry count of each row (+1
+        // for the row's own update), per direction.
+        let fwd_chunks = fwd
+            .iter()
+            .map(|rows| {
+                let w: Vec<usize> = rows
+                    .iter()
+                    .map(|&i| ilu.diag_pos[i] - ilu.row_ptr[i] + 1)
+                    .collect();
+                weight_balanced_chunks(&w, t)
+            })
+            .collect();
+        let bwd_chunks = bwd
+            .iter()
+            .map(|rows| {
+                let w: Vec<usize> = rows
+                    .iter()
+                    .map(|&i| ilu.row_ptr[i + 1] - ilu.diag_pos[i])
+                    .collect();
+                weight_balanced_chunks(&w, t)
+            })
+            .collect();
+        Ilu0Level {
+            ilu,
+            fwd,
+            bwd,
+            fwd_chunks,
+            bwd_chunks,
+            nthreads: t,
+            ctx,
+        }
+    }
+
+    /// Factor the slot-restriction of `local` over `slots` and
+    /// level-schedule the solves. The restricted factors (and hence the
+    /// apply) are a pure function of the slot grid.
+    pub fn setup_slots(local: &MatSeqAIJ, slots: &[(usize, usize)]) -> Result<Ilu0Level> {
+        let restricted = local.restrict_to_blocks(slots, local.ctx().clone())?;
+        Ok(Ilu0Level::from_factors(
+            Ilu0::factor(&restricted)?,
+            local.ctx().clone(),
+        ))
+    }
+
+    pub fn n(&self) -> usize {
+        self.ilu.n
+    }
+
+    /// (forward, backward) level counts — the barrier cost of one apply.
+    pub fn nlevels(&self) -> (usize, usize) {
+        (self.fwd.len(), self.bwd.len())
+    }
+
+    /// Threaded `LU z = r`: one pool fork, one barrier per level. Bitwise
+    /// equal to [`Ilu0::solve`] on the same factors.
+    pub fn solve(&self, r: &[f64], z: &mut [f64]) -> Result<()> {
+        if r.len() != self.ilu.n || z.len() != self.ilu.n {
+            return Err(Error::size_mismatch("ILU level-solve shapes"));
+        }
+        crate::pc::apply_phased(self, &self.ctx, r, z);
+        Ok(())
+    }
+
+    pub fn solve_flops(&self) -> f64 {
+        self.ilu.solve_flops()
+    }
+
+    #[inline]
+    fn level_chunk(
+        &self,
+        rows: &[usize],
+        cached: &[(usize, usize)],
+        tid: usize,
+        t: usize,
+    ) -> (usize, usize) {
+        if t == self.nthreads {
+            cached[tid]
+        } else {
+            crate::thread::schedule::static_chunk(rows.len(), t, tid)
+        }
+    }
+}
+
+impl PhasedApply for Ilu0Level {
+    fn nphases(&self) -> usize {
+        self.fwd.len() + self.bwd.len()
+    }
+
+    fn local_len(&self) -> usize {
+        self.ilu.n
+    }
+
+    unsafe fn apply_phase(
+        &self,
+        phase: usize,
+        tid: usize,
+        nthreads: usize,
+        r: &[f64],
+        z: *mut f64,
+        zlen: usize,
+    ) {
+        debug_assert_eq!(zlen, self.ilu.n);
+        let ilu = &self.ilu;
+        if phase < self.fwd.len() {
+            // Forward: L y = r (unit diagonal) — same per-row fp sequence
+            // as the serial loop in Ilu0::solve.
+            let rows = &self.fwd[phase];
+            let (lo, hi) = self.level_chunk(rows, &self.fwd_chunks[phase][..], tid, nthreads);
+            for &i in &rows[lo..hi] {
+                let mut acc = r[i];
+                for k in ilu.row_ptr[i]..ilu.diag_pos[i] {
+                    acc -= ilu.vals[k] * *z.add(ilu.col_idx[k]);
+                }
+                *z.add(i) = acc;
+            }
+        } else {
+            // Backward: U z = y.
+            let phase = phase - self.fwd.len();
+            let rows = &self.bwd[phase];
+            let (lo, hi) = self.level_chunk(rows, &self.bwd_chunks[phase][..], tid, nthreads);
+            for &i in &rows[lo..hi] {
+                let mut acc = *z.add(i);
+                for k in ilu.diag_pos[i] + 1..ilu.row_ptr[i + 1] {
+                    acc -= ilu.vals[k] * *z.add(ilu.col_idx[k]);
+                }
+                *z.add(i) = acc / ilu.vals[ilu.diag_pos[i]];
+            }
+        }
+    }
+}
+
 /// ILU(0) as a per-rank (block-Jacobi-style) preconditioner over the
 /// *local diagonal block* — PETSc's default parallel PC composition.
 pub struct PcIlu0 {
@@ -146,6 +320,48 @@ impl Precond for PcIlu0 {
 
     fn flops(&self) -> f64 {
         self.ilu.solve_flops()
+    }
+}
+
+/// Level-scheduled, slot-restricted ILU(0) as a distributed PC
+/// (`-pc_type ilu0-level`). At G = 1 (one rank × one thread) the slot
+/// restriction is the identity and the apply is bitwise identical to the
+/// legacy [`PcIlu0`]; at any G the apply is bitwise invariant across the
+/// `ranks × threads` factorizations of G. Reports [`FusedPc::Colored`] so
+/// the fused solvers run both substitutions inside their single pool
+/// region, one barrier per level.
+pub struct PcIlu0Level {
+    ilu: Ilu0Level,
+}
+
+impl PcIlu0Level {
+    pub fn setup_local(a: &MatMPIAIJ, comm: &crate::comm::endpoint::Comm) -> Result<PcIlu0Level> {
+        let slots = crate::pc::local_slot_ranges(a, comm);
+        Ok(PcIlu0Level {
+            ilu: Ilu0Level::setup_slots(a.diag_block(), &slots)?,
+        })
+    }
+
+    pub fn nlevels(&self) -> (usize, usize) {
+        self.ilu.nlevels()
+    }
+}
+
+impl Precond for PcIlu0Level {
+    fn name(&self) -> &'static str {
+        "ilu0-level"
+    }
+
+    fn apply(&self, r: &VecMPI, z: &mut VecMPI) -> Result<()> {
+        self.ilu.solve(r.local().as_slice(), z.local_mut().as_mut_slice())
+    }
+
+    fn flops(&self) -> f64 {
+        self.ilu.solve_flops()
+    }
+
+    fn fused(&self) -> FusedPc<'_> {
+        FusedPc::Colored(&self.ilu)
     }
 }
 
@@ -227,6 +443,73 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!(enorm < 0.7 * rnorm, "ILU0 too weak: {enorm} vs {rnorm}");
+    }
+
+    #[test]
+    fn level_solve_is_bitwise_equal_to_serial_sweep() {
+        // Property (satellite): for random sparsity patterns and random
+        // thread counts, the level-scheduled threaded triangular solve
+        // computes the exact bits of the serial substitution.
+        use crate::ptest::{forall, PtConfig};
+        use crate::util::rng::XorShift64;
+        forall(
+            &PtConfig { cases: 25, ..Default::default() },
+            |rng: &mut XorShift64| {
+                let n = rng.range(1, 120);
+                let extra = rng.below(4 * n);
+                let threads = rng.range(1, 5);
+                let seed = rng.below(1 << 30) as u64;
+                (n, extra, threads, seed)
+            },
+            |&(n, extra, threads, seed)| {
+                let mut rng = XorShift64::new(seed);
+                let mut b = MatBuilder::new(n, n);
+                for i in 0..n {
+                    b.add(i, i, 6.0 + (i % 5) as f64).unwrap(); // dominant diag, no 0 pivots
+                }
+                for _ in 0..extra {
+                    let i = rng.below(n);
+                    let j = rng.below(n);
+                    if i != j {
+                        b.add(i, j, rng.range_f64(-1.0, 1.0)).unwrap();
+                    }
+                }
+                let a = b.assemble(ThreadCtx::new(threads));
+                let ilu = Ilu0::factor(&a).map_err(|e| e.to_string())?;
+                let r: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+                let mut z_serial = vec![0.0; n];
+                ilu.solve(&r, &mut z_serial).map_err(|e| e.to_string())?;
+                let lvl = Ilu0Level::from_factors(ilu, a.ctx().clone());
+                let mut z_level = vec![0.0; n];
+                lvl.solve(&r, &mut z_level).map_err(|e| e.to_string())?;
+                for (i, (u, v)) in z_serial.iter().zip(&z_level).enumerate() {
+                    crate::ptest::check(
+                        u.to_bits() == v.to_bits(),
+                        format!("row {i}: serial {u} vs level {v} ({threads} threads)"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn level_solve_exact_on_tridiagonal() {
+        // Tridiagonal ⇒ ILU(0) = LU; the level solve (a pure chain here —
+        // n forward levels) must still be exact and bitwise-serial.
+        let a = tridiag(50);
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64 * 0.17).sin()).collect();
+        let mut b = vec![0.0; 50];
+        a.mult_slices(&xs, &mut b).unwrap();
+        let lvl = Ilu0Level::from_factors(Ilu0::factor(&a).unwrap(), ThreadCtx::new(4));
+        let (f, w) = lvl.nlevels();
+        assert_eq!(f, 50, "tridiagonal forward chain");
+        assert_eq!(w, 50, "tridiagonal backward chain");
+        let mut z = vec![0.0; 50];
+        lvl.solve(&b, &mut z).unwrap();
+        for (got, want) in z.iter().zip(&xs) {
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
     }
 
     #[test]

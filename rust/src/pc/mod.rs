@@ -6,8 +6,13 @@
 //! - **Block-Jacobi** (PETSc's parallel default) applies a *local* solve
 //!   per rank — here ILU(0) or SOR on the diagonal block.
 //! - **SOR and ILU "are difficult [to thread] due to their complex data
-//!   dependencies"** — so, exactly as in the paper, they are implemented as
-//!   serial (per-rank) algorithms and serve as the unthreaded baselines.
+//!   dependencies"** — the legacy `sor`/`ilu` names keep that serial
+//!   (per-rank) baseline exactly as in the paper; the dependency-aware
+//!   threaded redesigns live beside them as `sor-colored` (greedy
+//!   multicolor sweeps), `ilu0-level` (level-scheduled triangular solves)
+//!   and `gamg-fused` (slot-parallel V-cycles), all slot-restricted so one
+//!   apply is bitwise invariant across the `ranks × threads`
+//!   factorizations of a slot grid (DESIGN.md §7).
 //! - **Chebyshev smoothing** (the PCGAMG component the paper mentions)
 //!   lives in [`crate::ksp::chebyshev`] since it is a Krylov-class method.
 
@@ -17,25 +22,155 @@ pub mod sor;
 pub mod ilu;
 pub mod gamg;
 
+use std::sync::Arc;
+
 use crate::comm::endpoint::Comm;
 use crate::error::Result;
 use crate::mat::mpiaij::MatMPIAIJ;
-use crate::vec::mpi::VecMPI;
+use crate::thread::pool::RegionBarrier;
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::mpi::{Layout, SlotGrid, VecMPI};
 use crate::vec::multi::MultiVecMPI;
 
 /// How the fused-iteration layer ([`crate::ksp::fused`]) can inline a
-/// preconditioner application inside its single parallel region. Only
-/// element-wise PCs are fusable — anything with cross-row data dependencies
-/// (ILU/SOR sweeps, multigrid cycles) reports [`FusedPc::Unfusable`] and the
-/// solver falls back to the kernel-per-fork path.
+/// preconditioner application inside its single parallel region.
+/// Element-wise PCs inline directly; dependency-laden PCs (SOR/ILU sweeps,
+/// multigrid cycles) are fusable when they decompose into barrier-separated
+/// parallel **phases** ([`FusedPc::Colored`] — multicolor classes, solve
+/// levels, or slot-parallel V-cycles); anything else reports
+/// [`FusedPc::Unfusable`] and the solver falls back to the kernel-per-fork
+/// path.
 pub enum FusedPc<'a> {
     /// `z = r` (PCNone).
     Identity,
     /// `z_i = r_i · inv_diag[i]` (Jacobi), with the rank-local inverse
     /// diagonal.
     Jacobi(&'a [f64]),
+    /// A dependency-aware apply that runs as a sequence of parallel phases
+    /// inside the fused region, one in-region barrier per phase (colored
+    /// SOR sweeps, level-scheduled ILU triangular solves, slot-parallel
+    /// GAMG V-cycles).
+    Colored(&'a dyn PhasedApply),
     /// Cannot be applied inside a fused region.
     Unfusable,
+}
+
+/// The phase-parallel apply contract behind [`FusedPc::Colored`]: one
+/// application `z = M⁻¹ r` decomposes into [`PhasedApply::nphases`]
+/// **phases**. Within a phase every row update is independent — any split
+/// of a phase's rows over threads computes bitwise-identical values — and
+/// phases are sequenced by barriers (the caller's: the fused region's
+/// in-region barrier, or [`apply_phased`]'s for standalone applies).
+///
+/// The decomposition-invariance contract of the colored PCs rests on this
+/// shape: per-row values depend only on `r` and on rows finished in earlier
+/// phases, never on thread count, thread assignment, or rank grouping.
+pub trait PhasedApply: Sync {
+    /// Number of barrier-separated phases in one application.
+    fn nphases(&self) -> usize;
+
+    /// The rank-local vector length this apply was built for. Callers
+    /// (the fused regions, [`apply_phased`]) validate their `r`/`z`
+    /// lengths against this **before** entering the unsafe phase calls —
+    /// the runtime guard that keeps a PC built for one operator from
+    /// writing out of bounds when misused with another.
+    fn local_len(&self) -> usize;
+
+    /// Execute thread `tid` of `nthreads`'s share of `phase`, reading `r`
+    /// and the already-finished rows of `z`, writing this call's own rows
+    /// of `z` (length `zlen`) in place.
+    ///
+    /// # Safety
+    /// `z` must point to `zlen` valid, initialized (for `phase > 0`: the
+    /// state left by earlier phases) elements of the rank-local `z`
+    /// storage. The caller must (a) run every `tid ∈ 0..nthreads` of a
+    /// phase with the same arguments, (b) separate consecutive phases with
+    /// a barrier (or run them on one thread), and (c) keep `r` and `z`
+    /// otherwise untouched for the whole application. Implementations
+    /// guarantee different `tid`s of one phase write disjoint rows and
+    /// read only `r`, their own rows, and rows finalized in earlier phases.
+    unsafe fn apply_phase(
+        &self,
+        phase: usize,
+        tid: usize,
+        nthreads: usize,
+        r: &[f64],
+        z: *mut f64,
+        zlen: usize,
+    );
+}
+
+/// Shared `*mut f64` for the phase runner (same discipline as the fused
+/// region's raw vector handles).
+struct ZRaw(*mut f64);
+unsafe impl Send for ZRaw {}
+unsafe impl Sync for ZRaw {}
+
+/// Run a full phased application `z = M⁻¹ r` through `ctx`'s pool: **one**
+/// fork, phases sequenced by an in-region barrier — the standalone
+/// (unfused-solver) execution path of every [`FusedPc::Colored`] PC. On a
+/// single-thread context the phases run as a plain serial loop, which by
+/// the [`PhasedApply`] contract computes the identical bits.
+pub fn apply_phased(p: &dyn PhasedApply, ctx: &Arc<ThreadCtx>, r: &[f64], z: &mut [f64]) {
+    // Hard checks, not debug asserts: these bound every raw write below.
+    assert_eq!(r.len(), z.len(), "apply_phased: r/z lengths differ");
+    assert_eq!(z.len(), p.local_len(), "apply_phased: PC built for another size");
+    let np = p.nphases();
+    let n = z.len();
+    let t = ctx.nthreads();
+    if t == 1 {
+        for ph in 0..np {
+            // SAFETY: single thread — phases are trivially sequenced, and
+            // the pointer covers exactly z.
+            unsafe { p.apply_phase(ph, 0, 1, r, z.as_mut_ptr(), n) };
+        }
+        return;
+    }
+    let zp = ZRaw(z.as_mut_ptr());
+    let barrier = RegionBarrier::new(t);
+    ctx.pool().run(|tid| {
+        let mut ws = barrier.waiter();
+        for ph in 0..np {
+            // SAFETY: all tids run each phase with the same arguments;
+            // the barrier below sequences consecutive phases; phases write
+            // disjoint rows per the PhasedApply contract.
+            unsafe { p.apply_phase(ph, tid, t, r, zp.0, n) };
+            if ph + 1 < np {
+                barrier.wait(&mut ws);
+            }
+        }
+    });
+}
+
+/// The **local** (rank-relative) slot ranges the decomposition-invariant
+/// colored PCs block over. When the operator's row layout is the
+/// slot-aligned layout of the `comm.size() × nthreads` grid (every fused
+/// runner layout, and any single-rank layout), these are the global
+/// [`SlotGrid`] slots owned by this rank — identical structure for every
+/// `ranks × threads` factorization of the same G, which is what makes the
+/// colored/level applies bitwise decomposition-invariant. On any other
+/// layout the PC falls back to a rank-local grid of `nthreads` slots:
+/// still valid and threaded, just without the cross-decomposition
+/// contract.
+pub(crate) fn local_slot_ranges(a: &MatMPIAIJ, comm: &Comm) -> Vec<(usize, usize)> {
+    let n = a.row_layout().global_len();
+    let threads = a.diag_block().ctx().nthreads().max(1);
+    let size = comm.size();
+    let rank = comm.rank();
+    let (lo, _hi) = a.row_layout().range(rank);
+    if *a.row_layout() == Layout::slot_aligned(n, size, threads) {
+        let grid = SlotGrid::new(n, size * threads);
+        (rank * threads..(rank + 1) * threads)
+            .map(|s| {
+                let (slo, shi) = grid.range(s);
+                (slo - lo, shi - lo)
+            })
+            .collect()
+    } else {
+        let local = a.row_layout().local_len(rank);
+        let grid = SlotGrid::new(local, threads);
+        (0..threads).map(|s| grid.range(s)).collect()
+    }
 }
 
 /// A preconditioner: `z = M⁻¹ r`. Application is communication-free
@@ -87,6 +222,24 @@ pub trait Precond {
     }
 }
 
+/// Every name [`from_name`] accepts — kept in one place so the
+/// unknown-type error can enumerate them and the factory test can sweep
+/// the full table.
+pub const PC_NAMES: &[&str] = &[
+    "none",
+    "jacobi",
+    "bjacobi",
+    "bjacobi-ilu0",
+    "bjacobi-sor",
+    "sor",
+    "sor-colored",
+    "ilu",
+    "ilu0",
+    "ilu0-level",
+    "gamg",
+    "gamg-fused",
+];
+
 /// Build a preconditioner by options-database name.
 pub fn from_name(
     name: &str,
@@ -99,11 +252,15 @@ pub fn from_name(
         "bjacobi" | "bjacobi-ilu0" => Box::new(bjacobi::PcBJacobi::setup_ilu0(a)?),
         "bjacobi-sor" => Box::new(bjacobi::PcBJacobi::setup_sor(a, 1.0, 2)?),
         "sor" => Box::new(sor::PcSor::setup(a, 1.0, 1)?),
+        "sor-colored" => Box::new(sor::PcSorColored::setup(a, comm, 1.0, 1)?),
         "ilu" | "ilu0" => Box::new(ilu::PcIlu0::setup_local(a)?),
+        "ilu0-level" => Box::new(ilu::PcIlu0Level::setup_local(a, comm)?),
         "gamg" => Box::new(gamg::PcGamg::setup_local(a, 64, 2)?),
+        "gamg-fused" => Box::new(gamg::PcGamgFused::setup_local(a, comm, 64, 2)?),
         other => {
             return Err(crate::error::Error::InvalidOption(format!(
-                "unknown pc_type `{other}`"
+                "unknown pc_type `{other}`; valid types: {}",
+                PC_NAMES.join(", ")
             )))
         }
     })
@@ -201,19 +358,42 @@ mod tests {
     }
 
     #[test]
-    fn factory_rejects_unknown() {
+    fn factory_accepts_full_name_table_and_lists_names_on_unknown() {
         World::run(1, |mut c| {
-            let layout = Layout::split(2, 1);
+            // A small SPD tridiagonal block so every PC (ILU pivots, SOR
+            // diagonals, GAMG smoothers) can actually set up.
+            let n = 12;
+            let layout = Layout::split(n, 1);
+            let mut es = Vec::new();
+            for i in 0..n {
+                es.push((i, i, 3.0));
+                if i > 0 {
+                    es.push((i, i - 1, -1.0));
+                }
+                if i + 1 < n {
+                    es.push((i, i + 1, -1.0));
+                }
+            }
             let a = MatMPIAIJ::assemble(
                 layout.clone(),
                 layout,
-                vec![(0, 0, 1.0), (1, 1, 1.0)],
+                es,
                 &mut c,
-                ThreadCtx::serial(),
+                ThreadCtx::new(2),
             )
             .unwrap();
-            assert!(from_name("bogus", &a, &mut c).is_err());
-            assert!(from_name("none", &a, &mut c).is_ok());
+            for &name in PC_NAMES {
+                let pc = from_name(name, &a, &mut c)
+                    .unwrap_or_else(|e| panic!("pc_type `{name}` failed setup: {e}"));
+                assert!(!pc.name().is_empty());
+            }
+            let err = from_name("bogus", &a, &mut c).unwrap_err().to_string();
+            for &name in PC_NAMES {
+                assert!(
+                    err.contains(name),
+                    "unknown-pc error must list `{name}`, got: {err}"
+                );
+            }
         });
     }
 }

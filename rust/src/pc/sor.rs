@@ -1,14 +1,28 @@
-//! (S)SOR — symmetric successive over-relaxation, serial per rank.
+//! (S)SOR — successive over-relaxation, in two implementations.
 //!
 //! As the paper notes (§V.B), SOR's forward/backward sweeps carry a loop
-//! dependency across rows, so the threaded library keeps it serial; it is
-//! exercised here both standalone (single rank) and as block-Jacobi's
-//! local solve.
+//! dependency across rows, so the original threaded library keeps it
+//! serial; [`SorSweeper`]/[`PcSor`] preserve that serial baseline (and its
+//! exact natural-order semantics) under the legacy `sor` name.
+//!
+//! [`SorColored`]/[`PcSorColored`] (`sor-colored`) are the threaded
+//! answer: a greedy multicolor ordering
+//! ([`crate::reorder::color::greedy_coloring`]) of the **slot-restricted**
+//! local block turns each Gauss-Seidel sweep into one parallel phase per
+//! color — rows of a class share no couplings, so any split of a class
+//! over threads computes identical bits, and the slot restriction (blocks
+//! of the global [`crate::vec::mpi::SlotGrid`]) makes the whole apply a
+//! pure function of the slot grid G = ranks·threads, bitwise invariant
+//! across every `ranks × threads` factorization of G. The sweep order is
+//! the *color* order (the standard reordered multicolor smoother), which
+//! is why the legacy natural-order `sor` keeps its own name and math.
 
 use crate::error::{Error, Result};
 use crate::mat::csr::MatSeqAIJ;
 use crate::mat::mpiaij::MatMPIAIJ;
-use crate::pc::Precond;
+use crate::pc::{FusedPc, PhasedApply, Precond};
+use crate::reorder::color::greedy_coloring;
+use crate::thread::schedule::{static_chunk, weight_balanced_chunks};
 use crate::vec::mpi::VecMPI;
 
 /// One symmetric SOR application as a preconditioner `z ≈ A⁻¹ r` on a
@@ -117,6 +131,232 @@ impl Precond for PcSor {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multicolor SOR: threaded, slot-restricted, decomposition-invariant
+// ---------------------------------------------------------------------------
+
+/// Multicolor S(S)OR over the slot-restricted local block. One application
+/// is `sweeps` symmetric sweeps from `z = 0`: forward through the color
+/// classes in ascending color order, then backward in descending order
+/// (the exact reverse sequence, so the preconditioner stays symmetric for
+/// symmetric blocks). Each class is one parallel phase, split over the
+/// pool by an nnz-balanced chunking of the class rows.
+pub struct SorColored {
+    omega: f64,
+    sweeps: usize,
+    /// The slot-restricted local matrix (cross-slot couplings dropped).
+    a: MatSeqAIJ,
+    /// Rows of each color class, ascending (see [`greedy_coloring`]).
+    classes: Vec<Vec<usize>>,
+    /// Per class, per tid: nnz-balanced index chunks into the class row
+    /// list, cached for the construction-time thread count.
+    chunks: Vec<Vec<(usize, usize)>>,
+    nthreads: usize,
+    n: usize,
+}
+
+impl SorColored {
+    /// Color the slot-restriction of `local` over `slots` and precompute
+    /// the per-class pool chunking. Zero diagonals are rejected here so
+    /// the apply itself is infallible (it runs inside fused regions).
+    pub fn setup(
+        local: &MatSeqAIJ,
+        slots: &[(usize, usize)],
+        omega: f64,
+        sweeps: usize,
+    ) -> Result<SorColored> {
+        if !(0.0 < omega && omega < 2.0) {
+            return Err(Error::InvalidOption(format!(
+                "SOR omega must be in (0,2), got {omega}"
+            )));
+        }
+        let n = local.rows();
+        if local.cols() != n {
+            return Err(Error::size_mismatch("colored SOR: square matrices only"));
+        }
+        let a = local.restrict_to_blocks(slots, local.ctx().clone())?;
+        for i in 0..n {
+            if a.get(i, i) == 0.0 {
+                return Err(Error::Breakdown(format!(
+                    "colored SOR: zero diagonal in row {i}"
+                )));
+            }
+        }
+        let coloring = greedy_coloring(&a);
+        let t = a.ctx().nthreads();
+        let chunks = coloring
+            .classes
+            .iter()
+            .map(|rows| weight_balanced_chunks(&a.row_nnz_of(rows), t))
+            .collect();
+        Ok(SorColored {
+            omega,
+            sweeps: sweeps.max(1),
+            a,
+            classes: coloring.classes,
+            chunks,
+            nthreads: t,
+            n,
+        })
+    }
+
+    pub fn ncolors(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// The class row-index chunk thread `tid` of `t` sweeps in class `c`:
+    /// the cached nnz-balanced chunks when `t` matches the construction
+    /// pool, a plain static split otherwise (same values either way — only
+    /// the load balance differs).
+    #[inline]
+    fn class_chunk(&self, c: usize, tid: usize, t: usize) -> (usize, usize) {
+        if t == self.nthreads {
+            self.chunks[c][tid]
+        } else {
+            static_chunk(self.classes[c].len(), t, tid)
+        }
+    }
+
+    /// One row relaxation, the identical fp sequence to
+    /// [`SorSweeper::relax_row`] (diagonal picked out mid-scan, `acc`
+    /// accumulated in CSR order).
+    ///
+    /// # Safety
+    /// `z` covers the local block and no concurrent call touches row `i`
+    /// (rows of one class are distinct; classes are barrier-separated).
+    #[inline]
+    unsafe fn relax(&self, i: usize, r: &[f64], z: *mut f64) {
+        let (cols, vals) = self.a.row(i);
+        let mut acc = r[i];
+        let mut diag = 0.0;
+        for (k, &j) in cols.iter().enumerate() {
+            if j == i {
+                diag = vals[k];
+            } else {
+                acc -= vals[k] * *z.add(j);
+            }
+        }
+        // diag != 0 validated at setup
+        let zi = z.add(i);
+        *zi = (1.0 - self.omega) * *zi + self.omega * acc / diag;
+    }
+
+    /// Standalone apply `z ≈ A⁻¹ r` (one pool fork, phases
+    /// barrier-sequenced) — the unfused-solver path.
+    pub fn apply(&self, r: &[f64], z: &mut [f64]) -> Result<()> {
+        if r.len() != self.n || z.len() != self.n {
+            return Err(Error::size_mismatch("colored SOR shapes"));
+        }
+        crate::pc::apply_phased(self, self.a.ctx(), r, z);
+        Ok(())
+    }
+
+    /// Serial reference: the same phase sequence on one thread, no pool.
+    /// The threaded apply must match this bitwise at every thread count —
+    /// the definition of the colored sweep's semantics.
+    pub fn apply_serial_reference(&self, r: &[f64], z: &mut [f64]) -> Result<()> {
+        if r.len() != self.n || z.len() != self.n {
+            return Err(Error::size_mismatch("colored SOR shapes"));
+        }
+        for ph in 0..self.nphases() {
+            // SAFETY: single thread, phases sequenced by the loop.
+            unsafe { self.apply_phase(ph, 0, 1, r, z.as_mut_ptr(), z.len()) };
+        }
+        Ok(())
+    }
+
+    pub fn flops_per_apply(&self) -> f64 {
+        2.0 * self.sweeps as f64 * 2.0 * self.a.nnz() as f64
+    }
+}
+
+impl PhasedApply for SorColored {
+    fn nphases(&self) -> usize {
+        // zero-fill + per sweep: forward colors then backward colors
+        1 + self.sweeps * 2 * self.classes.len()
+    }
+
+    fn local_len(&self) -> usize {
+        self.n
+    }
+
+    unsafe fn apply_phase(
+        &self,
+        phase: usize,
+        tid: usize,
+        nthreads: usize,
+        r: &[f64],
+        z: *mut f64,
+        zlen: usize,
+    ) {
+        debug_assert_eq!(zlen, self.n);
+        if phase == 0 {
+            // z = 0 over the static chunk (any disjoint split works).
+            let (lo, hi) = static_chunk(self.n, nthreads, tid);
+            if lo < hi {
+                std::slice::from_raw_parts_mut(z.add(lo), hi - lo).fill(0.0);
+            }
+            return;
+        }
+        let nc = self.classes.len();
+        if nc == 0 {
+            return;
+        }
+        let p = (phase - 1) % (2 * nc);
+        let class = if p < nc { p } else { 2 * nc - 1 - p };
+        let rows = &self.classes[class];
+        let (lo, hi) = self.class_chunk(class, tid, nthreads);
+        for &i in &rows[lo..hi] {
+            self.relax(i, r, z);
+        }
+    }
+}
+
+/// Multicolor SSOR over the slot-restricted diagonal block as a
+/// distributed PC (`-pc_type sor-colored` / `-pc_type sor
+/// -pc_sor_colored`). Reports [`FusedPc::Colored`], so the fused Krylov
+/// solvers run the sweep inside their single pool region.
+pub struct PcSorColored {
+    sweeper: SorColored,
+}
+
+impl PcSorColored {
+    pub fn setup(
+        a: &MatMPIAIJ,
+        comm: &crate::comm::endpoint::Comm,
+        omega: f64,
+        sweeps: usize,
+    ) -> Result<PcSorColored> {
+        let slots = crate::pc::local_slot_ranges(a, comm);
+        Ok(PcSorColored {
+            sweeper: SorColored::setup(a.diag_block(), &slots, omega, sweeps)?,
+        })
+    }
+
+    pub fn ncolors(&self) -> usize {
+        self.sweeper.ncolors()
+    }
+}
+
+impl Precond for PcSorColored {
+    fn name(&self) -> &'static str {
+        "sor-colored"
+    }
+
+    fn apply(&self, r: &VecMPI, z: &mut VecMPI) -> Result<()> {
+        self.sweeper
+            .apply(r.local().as_slice(), z.local_mut().as_mut_slice())
+    }
+
+    fn flops(&self) -> f64 {
+        self.sweeper.flops_per_apply()
+    }
+
+    fn fused(&self) -> FusedPc<'_> {
+        FusedPc::Colored(&self.sweeper)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +438,130 @@ mod tests {
         let sw = SorSweeper::new(1.0, 1).unwrap();
         let mut z = vec![0.0; 2];
         assert!(sw.apply(&a, &[1.0, 1.0], &mut z).is_err());
+    }
+
+    // -- multicolor SOR ------------------------------------------------------
+
+    fn laplace2d_on(k: usize, ctx: std::sync::Arc<ThreadCtx>) -> MatSeqAIJ {
+        let serial = laplace2d(k);
+        MatSeqAIJ::from_csr(
+            serial.rows(),
+            serial.cols(),
+            serial.row_ptr().to_vec(),
+            serial.col_idx().to_vec(),
+            serial.vals().to_vec(),
+            ctx,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn colored_apply_is_thread_count_invariant_bitwise() {
+        // The core PhasedApply property: the same slot structure computes
+        // identical bits on 1, 2, 3 and 4 threads (and the serial
+        // reference), for both single-slot and multi-slot restrictions.
+        let k = 12;
+        let n = k * k;
+        let r: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+        for slots in [vec![(0usize, n)], vec![(0, n / 4), (n / 4, n / 2), (n / 2, n)]] {
+            let mut reference: Option<Vec<u64>> = None;
+            for threads in [1usize, 2, 3, 4] {
+                let a = laplace2d_on(k, ThreadCtx::new(threads));
+                let sw = SorColored::setup(&a, &slots, 1.2, 2).unwrap();
+                let mut z = vec![0.0; n];
+                sw.apply(&r, &mut z).unwrap();
+                let bits: Vec<u64> = z.iter().map(|v| v.to_bits()).collect();
+                let mut zs = vec![0.0; n];
+                sw.apply_serial_reference(&r, &mut zs).unwrap();
+                let sbits: Vec<u64> = zs.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, sbits, "threads={threads}: pooled vs serial reference");
+                match &reference {
+                    None => reference = Some(bits),
+                    Some(want) => assert_eq!(&bits, want, "threads={threads} diverged"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn colored_ssor_reduces_residual() {
+        let k = 10;
+        let n = k * k;
+        let a = laplace2d_on(k, ThreadCtx::new(2));
+        let sw = SorColored::setup(&a, &[(0, n)], 1.2, 3).unwrap();
+        assert!(sw.ncolors() >= 2, "5-point stencil needs ≥ 2 colors");
+        let r: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+        let mut z = vec![0.0; n];
+        sw.apply(&r, &mut z).unwrap();
+        let mut az = vec![0.0; n];
+        a.mult_slices(&z, &mut az).unwrap();
+        let rn: f64 = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let en: f64 = r.iter().zip(&az).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(en < 0.5 * rn, "residual {en} vs {rn}");
+    }
+
+    #[test]
+    fn colored_matches_legacy_sor_when_order_coincides() {
+        // On a diagonal matrix there are no dependencies: one color, and
+        // the colored sweep degenerates to the legacy natural-order sweep —
+        // bitwise. (On coupled patterns the colored sweep is a *reordered*
+        // smoother by design; the legacy `sor` name keeps the natural
+        // order.)
+        let n = 40;
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 2.0 + (i % 3) as f64).unwrap();
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        let r: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let legacy = SorSweeper::new(1.3, 2).unwrap();
+        let mut z1 = vec![0.0; n];
+        legacy.apply(&a, &r, &mut z1).unwrap();
+        let colored = SorColored::setup(&a, &[(0, n)], 1.3, 2).unwrap();
+        assert_eq!(colored.ncolors(), 1);
+        let mut z2 = vec![0.0; n];
+        colored.apply(&r, &mut z2).unwrap();
+        for (u, v) in z1.iter().zip(&z2) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn colored_setup_validates() {
+        let a = laplace2d(4);
+        let n = a.rows();
+        assert!(SorColored::setup(&a, &[(0, n)], 0.0, 1).is_err());
+        assert!(SorColored::setup(&a, &[(0, n)], 2.0, 1).is_err());
+        // zero diagonal rejected at setup (not apply)
+        let mut b = MatBuilder::new(2, 2);
+        b.add(0, 1, 1.0).unwrap();
+        b.add(1, 1, 1.0).unwrap();
+        let bad = b.assemble(ThreadCtx::serial());
+        assert!(SorColored::setup(&bad, &[(0, 2)], 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn slot_restriction_decouples_blocks() {
+        // With per-row slots the restricted sweep is exact Jacobi-like
+        // diagonal solves: z = r / diag after one sweep pair.
+        let n = 6;
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 2.0).unwrap();
+            if i > 0 {
+                b.add(i, i - 1, -1.0).unwrap();
+                b.add(i - 1, i, -1.0).unwrap();
+            }
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        let slots: Vec<(usize, usize)> = (0..n).map(|i| (i, i + 1)).collect();
+        let sw = SorColored::setup(&a, &slots, 1.0, 1).unwrap();
+        assert_eq!(sw.ncolors(), 1, "fully decoupled rows need one color");
+        let r = vec![3.0; n];
+        let mut z = vec![0.0; n];
+        sw.apply(&r, &mut z).unwrap();
+        for &v in &z {
+            assert_eq!(v, 1.5, "restricted sweep solves the 1×1 blocks exactly");
+        }
     }
 }

@@ -1,0 +1,347 @@
+//! Greedy multicolor ordering and triangular-solve level scheduling — the
+//! dependency analysis behind the threaded SOR/ILU preconditioners.
+//!
+//! The paper (§V.B) classifies SOR and ILU as the PETSc components whose
+//! "complex data dependencies" resist threading. Both dependency structures
+//! are graphs over matrix rows, and both admit the classic decompositions:
+//!
+//! - **Multicoloring** partitions the rows of a (symmetrised) sparsity
+//!   graph into color classes with no intra-class edges. A Gauss-Seidel
+//!   sweep in color order touches each class as one fully parallel phase —
+//!   every row of a class reads only rows of *other* classes, so the
+//!   computed values are independent of how the class is split over
+//!   threads (the bitwise decomposition-invariance lever of `pc::sor`).
+//! - **Level scheduling** layers the rows of a triangular factor by
+//!   longest dependency path: level ℓ rows depend only on rows in levels
+//!   `< ℓ`. Processing level by level computes the **same values as the
+//!   serial substitution, bitwise** — each row's accumulation runs over its
+//!   own nonzeros in CSR order either way; only *when* a row runs changes
+//!   (the lever of `pc::ilu`).
+//!
+//! Both passes reuse the RCM adjacency walk
+//! ([`crate::reorder::rcm`]) — coloring and bandwidth reduction look at the
+//! same symmetrised graph.
+
+use crate::mat::csr::MatSeqAIJ;
+use crate::reorder::rcm::symmetric_adjacency;
+
+/// A greedy multicolor partition of the rows of a sparsity graph.
+#[derive(Debug, Clone)]
+pub struct Coloring {
+    /// `color[i]` ∈ `0..ncolors` for every row `i`.
+    pub color: Vec<usize>,
+    /// Number of colors used (≤ max degree + 1 for greedy).
+    pub ncolors: usize,
+    /// Rows of each color class, ascending row order within a class.
+    pub classes: Vec<Vec<usize>>,
+}
+
+/// Greedy first-fit coloring of the symmetrised sparsity graph of `a` in
+/// ascending row order: row `i` takes the smallest color not used by any
+/// already-colored neighbour.
+///
+/// Determinism/invariance note: the color of row `i` depends only on the
+/// colors of its *neighbours* with smaller index, recursively — rows in
+/// disconnected components (e.g. different slot blocks of a
+/// block-restricted matrix) never influence each other, so coloring a
+/// block-diagonal matrix assigns every block the colors it would get in
+/// isolation, independent of how blocks are grouped onto ranks.
+pub fn greedy_coloring(a: &MatSeqAIJ) -> Coloring {
+    let n = a.rows();
+    let adj = symmetric_adjacency(a);
+    let mut color = vec![usize::MAX; n];
+    let mut ncolors = 0usize;
+    // `forbidden[c] == i` marks color c as used by a neighbour of row i —
+    // a stamp array, O(1) reset per row.
+    let mut forbidden: Vec<usize> = Vec::new();
+    for i in 0..n {
+        for &j in &adj[i] {
+            if color[j] != usize::MAX {
+                forbidden[color[j]] = i;
+            }
+        }
+        let mut c = 0;
+        while c < ncolors && forbidden[c] == i {
+            c += 1;
+        }
+        if c == ncolors {
+            ncolors += 1;
+            forbidden.push(usize::MAX);
+        }
+        color[i] = c;
+    }
+    let mut classes: Vec<Vec<usize>> = vec![Vec::new(); ncolors];
+    for (i, &c) in color.iter().enumerate() {
+        classes[c].push(i);
+    }
+    Coloring {
+        color,
+        ncolors,
+        classes,
+    }
+}
+
+/// Level schedule of the **forward** (lower-triangular) substitution of a
+/// CSR factor: row `i` depends on rows `col_idx[row_ptr[i]..diag_pos[i])`
+/// (its strictly-lower entries). Returns the rows of each level, ascending
+/// within a level; levels concatenated cover `0..n` exactly.
+pub fn forward_levels(
+    row_ptr: &[usize],
+    col_idx: &[usize],
+    diag_pos: &[usize],
+) -> Vec<Vec<usize>> {
+    let n = diag_pos.len();
+    let mut level = vec![0usize; n];
+    let mut levels: Vec<Vec<usize>> = Vec::new();
+    for i in 0..n {
+        let mut l = 0usize;
+        for k in row_ptr[i]..diag_pos[i] {
+            l = l.max(level[col_idx[k]] + 1);
+        }
+        level[i] = l;
+        if l == levels.len() {
+            levels.push(Vec::new());
+        }
+        levels[l].push(i);
+    }
+    levels
+}
+
+/// Level schedule of the **backward** (upper-triangular) substitution: row
+/// `i` depends on rows `col_idx[diag_pos[i]+1..row_ptr[i+1])` (its strictly
+/// -upper entries). Rows ascending within each level.
+pub fn backward_levels(
+    row_ptr: &[usize],
+    col_idx: &[usize],
+    diag_pos: &[usize],
+) -> Vec<Vec<usize>> {
+    let n = diag_pos.len();
+    let mut level = vec![0usize; n];
+    let mut levels: Vec<Vec<usize>> = Vec::new();
+    for i in (0..n).rev() {
+        let mut l = 0usize;
+        for k in diag_pos[i] + 1..row_ptr[i + 1] {
+            l = l.max(level[col_idx[k]] + 1);
+        }
+        level[i] = l;
+        if l == levels.len() {
+            levels.push(Vec::new());
+        }
+        levels[l].push(i);
+    }
+    for lvl in &mut levels {
+        lvl.reverse(); // built in descending row order
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::csr::MatBuilder;
+    use crate::ptest::{check, forall, PtConfig};
+    use crate::util::rng::XorShift64;
+    use crate::vec::ctx::ThreadCtx;
+
+    fn random_symmetric(n: usize, edges: usize, rng: &mut XorShift64) -> MatSeqAIJ {
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 4.0).unwrap();
+        }
+        for _ in 0..edges {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            if i != j {
+                b.add(i, j, -1.0).unwrap();
+                b.add(j, i, -1.0).unwrap();
+            }
+        }
+        b.assemble(ThreadCtx::serial())
+    }
+
+    #[test]
+    fn coloring_is_valid_on_random_graphs() {
+        // Property (satellite): no two adjacent rows share a color, and the
+        // classes tile 0..n exactly.
+        forall(
+            &PtConfig { cases: 50, ..Default::default() },
+            |rng: &mut XorShift64| {
+                let n = rng.range(1, 120);
+                let edges = rng.below(4 * n);
+                let seed = rng.below(1 << 30) as u64;
+                (n, edges, seed)
+            },
+            |&(n, edges, seed)| {
+                let mut rng = XorShift64::new(seed);
+                let a = random_symmetric(n, edges, &mut rng);
+                let c = greedy_coloring(&a);
+                check(c.color.len() == n, "one color per row")?;
+                check(c.classes.len() == c.ncolors, "class per color")?;
+                let covered: usize = c.classes.iter().map(|cl| cl.len()).sum();
+                check(covered == n, format!("classes cover {covered} of {n}"))?;
+                let mut seen = vec![false; n];
+                for (ci, class) in c.classes.iter().enumerate() {
+                    for w in class.windows(2) {
+                        check(w[0] < w[1], "class rows ascending")?;
+                    }
+                    for &i in class {
+                        check(!seen[i], format!("row {i} in two classes"))?;
+                        seen[i] = true;
+                        check(c.color[i] == ci, "color/class agree")?;
+                    }
+                }
+                // adjacency check straight off the matrix pattern
+                for i in 0..n {
+                    let (cols, _) = a.row(i);
+                    for &j in cols {
+                        if i != j {
+                            check(
+                                c.color[i] != c.color[j],
+                                format!("adjacent rows {i},{j} share color {}", c.color[i]),
+                            )?;
+                        }
+                    }
+                }
+                // greedy bound: ncolors ≤ max degree + 1
+                let maxdeg = (0..n)
+                    .map(|i| a.row(i).0.iter().filter(|&&j| j != i).count())
+                    .max()
+                    .unwrap_or(0);
+                check(
+                    c.ncolors <= maxdeg + 1,
+                    format!("{} colors for max degree {maxdeg}", c.ncolors),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn tridiagonal_colors_red_black() {
+        let mut b = MatBuilder::new(6, 6);
+        for i in 0..6 {
+            b.add(i, i, 2.0).unwrap();
+            if i > 0 {
+                b.add(i, i - 1, -1.0).unwrap();
+                b.add(i - 1, i, -1.0).unwrap();
+            }
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        let c = greedy_coloring(&a);
+        assert_eq!(c.ncolors, 2);
+        assert_eq!(c.classes[0], vec![0, 2, 4]);
+        assert_eq!(c.classes[1], vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn block_diagonal_coloring_matches_isolated_blocks() {
+        // The invariance property the slot-restricted PCs lean on: coloring
+        // a block-diagonal matrix equals coloring each block alone.
+        let build = |lo: usize, n_all: usize, k: usize| -> MatSeqAIJ {
+            // path graph on rows lo..lo+k inside an n_all-row matrix
+            let mut b = MatBuilder::new(n_all, n_all);
+            for i in 0..n_all {
+                b.add(i, i, 2.0).unwrap();
+            }
+            for i in lo + 1..lo + k {
+                b.add(i, i - 1, -1.0).unwrap();
+                b.add(i - 1, i, -1.0).unwrap();
+            }
+            b.assemble(ThreadCtx::serial())
+        };
+        // two 4-row path blocks in one 8-row matrix
+        let mut b = MatBuilder::new(8, 8);
+        for i in 0..8 {
+            b.add(i, i, 2.0).unwrap();
+        }
+        for blk in [0usize, 4] {
+            for i in blk + 1..blk + 4 {
+                b.add(i, i - 1, -1.0).unwrap();
+                b.add(i - 1, i, -1.0).unwrap();
+            }
+        }
+        let both = greedy_coloring(&b.assemble(ThreadCtx::serial()));
+        let solo = greedy_coloring(&build(0, 4, 4));
+        for i in 0..4 {
+            assert_eq!(both.color[i], solo.color[i], "block 0 row {i}");
+            assert_eq!(both.color[4 + i], solo.color[i], "block 1 row {i}");
+        }
+    }
+
+    #[test]
+    fn level_schedules_respect_dependencies() {
+        // Property (satellite): levels tile 0..n, and every dependency of a
+        // level-ℓ row sits strictly below ℓ (forward and backward).
+        forall(
+            &PtConfig { cases: 50, ..Default::default() },
+            |rng: &mut XorShift64| {
+                let n = rng.range(1, 100);
+                let extra = rng.below(3 * n);
+                let seed = rng.below(1 << 30) as u64;
+                (n, extra, seed)
+            },
+            |&(n, extra, seed)| {
+                let mut rng = XorShift64::new(seed);
+                let a = random_symmetric(n, extra, &mut rng);
+                let (row_ptr, col_idx) = (a.row_ptr().to_vec(), a.col_idx().to_vec());
+                let diag_pos: Vec<usize> = (0..n)
+                    .map(|i| {
+                        (row_ptr[i]..row_ptr[i + 1])
+                            .find(|&k| col_idx[k] == i)
+                            .expect("diagonal present by construction")
+                    })
+                    .collect();
+                for (what, levels) in [
+                    ("forward", forward_levels(&row_ptr, &col_idx, &diag_pos)),
+                    ("backward", backward_levels(&row_ptr, &col_idx, &diag_pos)),
+                ] {
+                    let mut level_of = vec![usize::MAX; n];
+                    let mut covered = 0usize;
+                    for (l, rows) in levels.iter().enumerate() {
+                        for w in rows.windows(2) {
+                            check(w[0] < w[1], format!("{what}: rows ascending in level"))?;
+                        }
+                        for &i in rows {
+                            check(level_of[i] == usize::MAX, format!("{what}: row {i} twice"))?;
+                            level_of[i] = l;
+                            covered += 1;
+                        }
+                    }
+                    check(covered == n, format!("{what}: covered {covered} of {n}"))?;
+                    for i in 0..n {
+                        let deps: Vec<usize> = if what == "forward" {
+                            (row_ptr[i]..diag_pos[i]).map(|k| col_idx[k]).collect()
+                        } else {
+                            (diag_pos[i] + 1..row_ptr[i + 1]).map(|k| col_idx[k]).collect()
+                        };
+                        for j in deps {
+                            check(
+                                level_of[j] < level_of[i],
+                                format!("{what}: dep {j} (lvl {}) !< row {i} (lvl {})",
+                                    level_of[j], level_of[i]),
+                            )?;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn diagonal_matrix_is_one_level_one_color() {
+        let mut b = MatBuilder::new(5, 5);
+        for i in 0..5 {
+            b.add(i, i, 1.0).unwrap();
+        }
+        let a = b.assemble(ThreadCtx::serial());
+        let c = greedy_coloring(&a);
+        assert_eq!(c.ncolors, 1);
+        let diag_pos: Vec<usize> = (0..5).map(|i| a.row_ptr()[i]).collect();
+        let fwd = forward_levels(a.row_ptr(), a.col_idx(), &diag_pos);
+        let bwd = backward_levels(a.row_ptr(), a.col_idx(), &diag_pos);
+        assert_eq!(fwd.len(), 1);
+        assert_eq!(bwd.len(), 1);
+        assert_eq!(fwd[0], vec![0, 1, 2, 3, 4]);
+        assert_eq!(bwd[0], vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,8 +1,12 @@
 //! Matrix reordering and sparsity diagnostics (paper §VIII.B, Figure 6):
-//! Reverse Cuthill-McKee bandwidth reduction and "spy" plots.
+//! Reverse Cuthill-McKee bandwidth reduction, greedy multicolor ordering /
+//! level scheduling for the dependency-laden preconditioners, and "spy"
+//! plots.
 
+pub mod color;
 pub mod rcm;
 pub mod spy;
 
+pub use color::{backward_levels, forward_levels, greedy_coloring, Coloring};
 pub use rcm::{rcm_permutation, BandwidthStats};
 pub use spy::{spy_ascii, spy_pgm};

@@ -51,8 +51,9 @@ pub fn bandwidth_stats(a: &MatSeqAIJ) -> BandwidthStats {
 }
 
 /// Build the symmetrised adjacency (pattern of A + Aᵀ, no self loops),
-/// CSR-like.
-fn symmetric_adjacency(a: &MatSeqAIJ) -> Vec<Vec<usize>> {
+/// CSR-like. Shared with the multicolor ordering pass
+/// ([`crate::reorder::color`]), which walks the same structure.
+pub(crate) fn symmetric_adjacency(a: &MatSeqAIJ) -> Vec<Vec<usize>> {
     let n = a.rows();
     let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
     for i in 0..n {

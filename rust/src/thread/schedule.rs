@@ -62,6 +62,21 @@ pub fn nnz_balanced_chunks(row_ptr: &[usize], nthreads: usize) -> Vec<(usize, us
     out
 }
 
+/// [`nnz_balanced_chunks`] for an **arbitrary row list**: split the
+/// `weights.len()` items (e.g. the rows of one color class, weighted by
+/// their nonzero counts) into `nthreads` contiguous index chunks whose
+/// summed weights are as even as the item granularity allows. Used by the
+/// colored-sweep preconditioners to split each color class / solve level
+/// over the pool with the same greedy rule the SpMV row partition uses.
+pub fn weight_balanced_chunks(weights: &[usize], nthreads: usize) -> Vec<(usize, usize)> {
+    let mut prefix = Vec::with_capacity(weights.len() + 1);
+    prefix.push(0usize);
+    for &w in weights {
+        prefix.push(prefix.last().unwrap() + w);
+    }
+    nnz_balanced_chunks(&prefix, nthreads)
+}
+
 /// The thread that owns iteration `i` under the static schedule — the
 /// inverse of [`static_chunk`]. Used when a consumer must locate data it
 /// did not page itself (e.g. the scatter receive side).
@@ -185,6 +200,21 @@ mod tests {
         assert_eq!(chunks.last().unwrap().1, 2);
         let total: usize = chunks.iter().map(|&(a, b)| b - a).sum();
         assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn weight_chunks_cover_and_isolate_heavy_items() {
+        let w = [5usize, 1, 1, 1, 1, 1];
+        let chunks = weight_balanced_chunks(&w, 3);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0], (0, 1), "heavy head isolated");
+        assert_eq!(chunks.last().unwrap().1, 6);
+        for p in chunks.windows(2) {
+            assert_eq!(p[0].1, p[1].0, "contiguous");
+        }
+        // degenerate: no items
+        let chunks = weight_balanced_chunks(&[], 2);
+        assert_eq!(chunks.last().unwrap().1, 0);
     }
 
     #[test]

@@ -1,15 +1,23 @@
 //! Golden solver-matrix suite: every KSP × PC combination on two small
 //! stencil cases, plus the decomposition-invariance contract for the fused
-//! cg/chebyshev families across ranks ∈ {1,2,4} × threads ∈ {1,2,4}.
+//! cg/chebyshev families across ranks ∈ {1,2,4} × threads ∈ {1,2,4} — for
+//! the element-wise PCs *and* the dependency-laden colored/level-scheduled
+//! ones (`sor-colored`, `ilu0-level`, `gamg-fused`).
 //!
 //! Expectations are per-pair: combinations that are mathematically sound on
 //! these SPD, strictly diagonally dominant operators must converge to rtol;
 //! the few analytically shaky pairings (CG/Chebyshev with the nonsymmetric
-//! SOR preconditioner, unpreconditioned Richardson) must merely complete
+//! SOR preconditioner, unpreconditioned Richardson, Chebyshev bound
+//! estimation on a clustered V-cycle spectrum) must merely complete
 //! cleanly — no panic, no error — and are recorded either way.
 
+use mmpetsc::comm::world::World;
 use mmpetsc::coordinator::runner::{run_case, HybridConfig};
 use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::pc;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
 
 const KSPS: [&str; 7] = [
     "cg",
@@ -20,19 +28,35 @@ const KSPS: [&str; 7] = [
     "gmres",
     "richardson",
 ];
-const PCS: [&str; 5] = ["none", "jacobi", "bjacobi", "sor", "ilu"];
+const PCS: [&str; 8] = [
+    "none",
+    "jacobi",
+    "bjacobi",
+    "sor",
+    "ilu",
+    "sor-colored",
+    "ilu0-level",
+    "gamg-fused",
+];
+
+/// The threaded dependency-aware PC variants added by the colored/level
+/// subsystem — every test that sweeps them names them once, here.
+const COLORED_PCS: [&str; 3] = ["sor-colored", "ilu0-level", "gamg-fused"];
 
 /// Must this (ksp, pc) pair converge on an SPD strictly-dominant operator?
 ///
-/// - CG (both variants) needs an SPD preconditioner: SOR's single forward
-///   sweep is nonsymmetric, so that pair is best-effort only.
+/// - CG (both variants) needs an SPD preconditioner: SOR's sweeps (natural
+///   or multicolor order) are only conditionally symmetric at these
+///   settings, so those pairs are best-effort only.
 /// - Chebyshev needs a positive real preconditioned spectrum: same SOR
-///   caveat.
+///   caveat, and the power-iteration bounds on the strongly clustered
+///   V-cycle-preconditioned spectrum (`gamg-fused`) are best-effort.
 /// - Richardson (scale 1) diverges unpreconditioned on these operators
 ///   (ρ(I − A) > 1) but converges under any of the regular splittings.
 fn must_converge(ksp: &str, pc: &str) -> bool {
     match (ksp, pc) {
-        ("cg" | "cg-fused" | "chebyshev" | "chebyshev-fused", "sor") => false,
+        ("cg" | "cg-fused" | "chebyshev" | "chebyshev-fused", "sor" | "sor-colored") => false,
+        ("chebyshev" | "chebyshev-fused", "gamg-fused") => false,
         ("richardson", "none") => false,
         _ => true,
     }
@@ -97,6 +121,141 @@ fn fused_history(ksp: &str, case: TestCase, scale: f64, ranks: usize, threads: u
     assert!(report.converged, "{ksp} at {ranks}×{threads} did not converge");
     assert!(!report.history.is_empty(), "monitor produced no history");
     report.history.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Residual history of one fused-family run at a **fixed iteration count**
+/// (unreachable tolerance), as bit patterns — invariance comparisons that
+/// cannot depend on whether the (ksp, pc) pair converges.
+fn fixed_its_history(
+    ksp: &str,
+    pc: &str,
+    ranks: usize,
+    threads: usize,
+    its: usize,
+) -> Vec<u64> {
+    let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, ranks, threads);
+    cfg.ksp_type = ksp.into();
+    cfg.pc_type = pc.into();
+    cfg.ksp.rtol = 1e-300;
+    cfg.ksp.atol = 0.0;
+    cfg.ksp.max_it = its;
+    cfg.ksp.monitor = true;
+    let report = run_case(&cfg)
+        .unwrap_or_else(|e| panic!("{ksp} × {pc} at {ranks}×{threads} errored: {e}"));
+    assert!(!report.history.is_empty(), "monitor produced no history");
+    report.history.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn fused_families_with_colored_pcs_decomposition_invariant() {
+    // The tentpole contract: the colored/level-scheduled PCs extend the
+    // bitwise decomposition-invariance guarantee to the last serial hot
+    // path. Every rank×thread factorization of one slot grid G must
+    // produce the identical residual history — per KSP, per PC.
+    let grid: Vec<(usize, usize)> = [1usize, 2, 4]
+        .iter()
+        .flat_map(|&r| [1usize, 2, 4].iter().map(move |&t| (r, t)))
+        .collect();
+    for ksp in ["cg-fused", "chebyshev-fused"] {
+        for pc in COLORED_PCS {
+            for g in [2usize, 4, 8] {
+                let members: Vec<(usize, usize)> =
+                    grid.iter().copied().filter(|&(r, t)| r * t == g).collect();
+                if members.len() < 2 {
+                    continue;
+                }
+                let histories: Vec<Vec<u64>> = members
+                    .iter()
+                    .map(|&(r, t)| fixed_its_history(ksp, pc, r, t, 12))
+                    .collect();
+                for (m, h) in members.iter().zip(&histories).skip(1) {
+                    assert_eq!(
+                        h, &histories[0],
+                        "{ksp} × {pc}: {}×{} differs from {}×{} (G = {g})",
+                        m.0, m.1, members[0].0, members[0].1
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Assemble the shared golden tridiagonal SPD system on the slot-aligned
+/// layout of this communicator and apply `pc_name` to a deterministic
+/// global residual; return the gathered `z` as bit patterns.
+fn pc_apply_bits(pc_name: &str, n: usize, threads: usize, c: &mut mmpetsc::comm::endpoint::Comm) -> Vec<u64> {
+    let layout = Layout::slot_aligned(n, c.size(), threads);
+    let (lo, hi) = layout.range(c.rank());
+    let ctx = ThreadCtx::new(threads);
+    let mut es = Vec::new();
+    for i in lo..hi {
+        es.push((i, i, 4.0 + (i % 3) as f64));
+        if i > 0 {
+            es.push((i, i - 1, -1.0));
+        }
+        if i + 1 < n {
+            es.push((i, i + 1, -1.0));
+        }
+    }
+    let a = MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, c, ctx.clone()).unwrap();
+    let pc = pc::from_name(pc_name, &a, c).unwrap();
+    let rs: Vec<f64> = (lo..hi).map(|g| (g as f64 * 0.17).sin() + 0.25).collect();
+    let r = VecMPI::from_local_slice(layout.clone(), c.rank(), &rs, ctx.clone()).unwrap();
+    let mut z = VecMPI::new(layout, c.rank(), ctx);
+    pc.apply(&r, &mut z).unwrap();
+    z.gather_all(c).unwrap().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn colored_pc_applies_bitwise_invariant_across_decompositions_of_g4() {
+    // The acceptance criterion, at the PC level: one colored SOR /
+    // level-scheduled ILU(0) / slot V-cycle application is bitwise
+    // identical across the 1×4, 2×2 and 4×1 decompositions of G = 4.
+    let n = 229; // deliberately not divisible by 4: uneven slots included
+    for pc_name in COLORED_PCS {
+        let mut reference: Option<Vec<u64>> = None;
+        for (ranks, threads) in [(1usize, 4usize), (2, 2), (4, 1)] {
+            let outs = World::run(ranks, move |mut c| {
+                pc_apply_bits(pc_name, n, threads, &mut c)
+            });
+            for o in &outs {
+                assert_eq!(o, &outs[0], "{pc_name}: ranks disagree on gathered z");
+            }
+            let bits = outs.into_iter().next().unwrap();
+            match &reference {
+                None => reference = Some(bits),
+                Some(want) => assert_eq!(
+                    &bits, want,
+                    "{pc_name}: apply differs at {ranks}×{threads} (G = 4)"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn colored_variants_at_g1_reproduce_legacy_serial_applies() {
+    // At G = 1 (one rank × one thread) the slot restriction is the
+    // identity, so the level-scheduled ILU(0) and the slot V-cycle must
+    // reproduce their legacy serial counterparts bitwise — the existing
+    // golden expectations for `ilu`/`gamg` transfer unchanged. (The
+    // multicolor SOR is a *reordered* smoother by design — its serial
+    // semantics are pinned by the unit tests in `pc::sor` instead, and the
+    // legacy `sor` name keeps the natural-order math.)
+    let n = 120;
+    for (new_name, legacy_name) in [("ilu0-level", "ilu"), ("gamg-fused", "gamg")] {
+        let outs = World::run(1, move |mut c| {
+            (
+                pc_apply_bits(new_name, n, 1, &mut c),
+                pc_apply_bits(legacy_name, n, 1, &mut c),
+            )
+        });
+        let (new_bits, legacy_bits) = &outs[0];
+        assert_eq!(
+            new_bits, legacy_bits,
+            "{new_name} at G = 1 must equal {legacy_name} bitwise"
+        );
+    }
 }
 
 #[test]

@@ -32,6 +32,23 @@ fn history_bits(ranks: usize, threads: usize) -> (Vec<u64>, f64) {
     )
 }
 
+/// Fixed-iteration history of cg-fused with `pc` at this decomposition —
+/// the colored/level-scheduled PCs are compared without depending on the
+/// pair's convergence behaviour.
+fn pc_history_bits(pc: &'static str, ranks: usize, threads: usize, its: usize) -> Vec<u64> {
+    let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, ranks, threads);
+    cfg.ksp_type = "cg-fused".into();
+    cfg.pc_type = pc.into();
+    cfg.ksp.rtol = 1e-300;
+    cfg.ksp.atol = 0.0;
+    cfg.ksp.max_it = its;
+    cfg.ksp.monitor = true;
+    let report = run_case(&cfg)
+        .unwrap_or_else(|e| panic!("cg-fused × {pc} at {ranks}×{threads} errored: {e}"));
+    assert!(!report.history.is_empty());
+    report.history.iter().map(|v| v.to_bits()).collect()
+}
+
 #[test]
 fn rank_thread_matrix_point_is_invariant() {
     let ranks = env_usize("MMPETSC_RANKS", 2);
@@ -57,4 +74,26 @@ fn rank_thread_matrix_point_is_invariant() {
         hist, reference,
         "{ranks}×{threads} history differs from {ref_r}×{ref_t} on the same slot grid"
     );
+}
+
+#[test]
+fn rank_thread_matrix_point_is_invariant_for_colored_pcs() {
+    // The threaded SOR/ILU/GAMG preconditioners extend the invariance
+    // contract: same comparison as above, per colored PC, at a fixed
+    // iteration budget.
+    let ranks = env_usize("MMPETSC_RANKS", 2);
+    let threads = env_usize("MMPETSC_THREADS", 2);
+    let g = ranks * threads;
+    if g == 1 {
+        return;
+    }
+    let (ref_r, ref_t) = if ranks == 1 { (g, 1) } else { (1, g) };
+    for pc in ["sor-colored", "ilu0-level", "gamg-fused"] {
+        let hist = pc_history_bits(pc, ranks, threads, 10);
+        let reference = pc_history_bits(pc, ref_r, ref_t, 10);
+        assert_eq!(
+            hist, reference,
+            "{pc}: {ranks}×{threads} history differs from {ref_r}×{ref_t} (G = {g})"
+        );
+    }
 }
