@@ -9,13 +9,11 @@
 //! ```
 
 use mmpetsc::comm::world::World;
-use mmpetsc::coordinator::logging::EventLog;
 use mmpetsc::coordinator::options::Options;
-use mmpetsc::coordinator::runner::solve_by_name;
 use mmpetsc::io::petsc_binary::{read_mat, read_vec, write_mat, write_vec};
+use mmpetsc::ksp::Ksp;
 use mmpetsc::matgen::cases::{generate, TestCase};
 use mmpetsc::mat::mpiaij::MatMPIAIJ;
-use mmpetsc::pc;
 use mmpetsc::vec::ctx::ThreadCtx;
 use mmpetsc::vec::mpi::{Layout, VecMPI};
 use mmpetsc::vec::seq::VecSeq;
@@ -63,8 +61,7 @@ fn main() {
     let ranks = opts.usize_or("ranks", 1).unwrap();
     let ksp_type = opts.get_or("ksp_type", "gmres");
     let pc_type = opts.pc_name("jacobi");
-    let (ksp_for_run, pc_for_run) = (ksp_type.clone(), pc_type.clone());
-    let cfg = opts.ksp_config().unwrap();
+    let opts_for_run = opts.clone();
 
     let outputs = World::run(ranks, move |mut comm| {
         let ctx = ThreadCtx::new(threads);
@@ -97,21 +94,15 @@ fn main() {
             ctx.clone(),
         )
         .expect("b");
-        let pcond = pc::from_name(&pc_for_run, &a, &mut comm).expect("pc");
-        let log = EventLog::new();
+        // The PETSc lifecycle the paper's drivers use: KSPCreate →
+        // KSPSetFromOptions → KSPSetOperators → KSPSetUp → KSPSolve.
         let mut x = VecMPI::new(layout, comm.rank(), ctx);
-        let stats = solve_by_name(
-            &ksp_for_run,
-            &mut a,
-            pcond.as_ref(),
-            &b,
-            &mut x,
-            &cfg,
-            &mut comm,
-            &log,
-        )
-        .expect("solve");
-        (stats, log.summary())
+        let mut ksp = Ksp::create(&comm);
+        ksp.set_from_options(&opts_for_run).expect("options");
+        ksp.set_operators(&mut a);
+        ksp.set_up(&mut comm).expect("setup");
+        let stats = ksp.solve(&b, &mut x, &mut comm).expect("solve");
+        (stats, ksp.log().summary())
     });
 
     let (stats, summary) = &outputs[0];

@@ -1,0 +1,203 @@
+//! Setup-amortization bench for the `Ksp` solver object: solve #1 (which
+//! pays `KSPSetUp` — hybrid plan, PC build, and for the Chebyshev family
+//! the 20-iteration spectral-bound estimation) against the steady-state
+//! cost of solve #N on the same object, per rank×thread decomposition.
+//! This is the repeated-traffic number the follow-up papers (Lange et al.
+//! 2013) call out: once setup is cached, a mixed-mode solve is pure
+//! iteration. Results go to stdout and `BENCH_ksp_reuse.json` alongside
+//! the other CI bench artifacts.
+//!
+//! `cargo bench --bench bench_ksp_reuse -- --cores 4 --its 20 --solves 6`
+
+use std::time::Instant;
+
+use mmpetsc::bench::{JsonVal, Table};
+use mmpetsc::comm::world::World;
+use mmpetsc::ksp::{Ksp, KspConfig};
+use mmpetsc::matgen::cases::{generate_rows, TestCase};
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::util::cli::Cli;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
+
+const KSPS: [&str; 2] = ["cg-fused", "chebyshev-fused"];
+
+struct ReuseResult {
+    ranks: usize,
+    threads: usize,
+    ksp: &'static str,
+    setup_seconds: f64,
+    first_solve_seconds: f64,
+    /// Best-of-(solves − 1) repeated-solve latency.
+    steady_solve_seconds: f64,
+    rows: usize,
+}
+
+impl ReuseResult {
+    /// How much the first request overpays vs a steady one.
+    fn first_vs_steady(&self) -> f64 {
+        (self.setup_seconds + self.first_solve_seconds) / self.steady_solve_seconds.max(1e-12)
+    }
+}
+
+fn run_point(
+    case: TestCase,
+    scale: f64,
+    ranks: usize,
+    threads: usize,
+    ksp_name: &'static str,
+    its: usize,
+    solves: usize,
+) -> ReuseResult {
+    let outs = World::run(ranks, move |mut comm| {
+        let rank = comm.rank();
+        let ctx = ThreadCtx::new(threads);
+        let spec = case.grid(scale);
+        let n = spec.rows();
+        let layout = Layout::slot_aligned(n, comm.size(), threads);
+        let (lo, hi) = layout.range(rank);
+        let entries = generate_rows(case, scale, lo, hi);
+        let mut a = MatMPIAIJ::assemble(
+            layout.clone(),
+            layout.clone(),
+            entries,
+            &mut comm,
+            ctx.clone(),
+        )
+        .expect("assemble");
+        let bs: Vec<f64> = (lo..hi).map(|g| (g as f64 * 0.013).sin() + 0.3).collect();
+        let b = VecMPI::from_local_slice(layout.clone(), rank, &bs, ctx.clone()).expect("rhs");
+
+        let cfg = KspConfig {
+            // unreachable tolerances: exactly `its` iterations per solve
+            rtol: 1e-300,
+            atol: 0.0,
+            max_it: its,
+            ..Default::default()
+        };
+        let mut kspobj = Ksp::create(&comm);
+        kspobj.set_type(ksp_name).expect("ksp type");
+        kspobj.set_pc("jacobi");
+        kspobj.set_config(cfg);
+        kspobj.set_operators(&mut a);
+
+        let t0 = Instant::now();
+        kspobj.set_up(&mut comm).expect("set_up");
+        let setup = t0.elapsed().as_secs_f64();
+
+        let mut x = VecMPI::new(layout.clone(), rank, ctx.clone());
+        let t1 = Instant::now();
+        kspobj.solve(&b, &mut x, &mut comm).expect("solve #1");
+        let first = t1.elapsed().as_secs_f64();
+
+        let mut steady = f64::INFINITY;
+        for _ in 1..solves.max(2) {
+            let mut xs = VecMPI::new(layout.clone(), rank, ctx.clone());
+            let t = Instant::now();
+            kspobj.solve(&b, &mut xs, &mut comm).expect("repeat solve");
+            steady = steady.min(t.elapsed().as_secs_f64());
+        }
+        assert_eq!(kspobj.setup_count(), 1, "repeat solves must not re-set-up");
+        (setup, first, steady, n)
+    });
+    let (setup, first, steady, rows) = outs[0];
+    ReuseResult {
+        ranks,
+        threads,
+        ksp: ksp_name,
+        setup_seconds: setup,
+        first_solve_seconds: first,
+        steady_solve_seconds: steady,
+        rows,
+    }
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_ksp_reuse",
+        "Ksp cached-setup amortization: solve #1 vs solve #N per decomposition",
+    )
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .opt("cores", Some("4"), "total cores to factor into rank×thread grids")
+    .opt("scale", Some("0.003"), "matrix scale for saltfinger-pressure")
+    .opt("its", Some("20"), "iterations per solve (fixed, unreachable rtol)")
+    .opt("solves", Some("6"), "solves per Ksp object (first + repeats)")
+    .opt("out", Some("BENCH_ksp_reuse.json"), "output JSON path")
+    .parse_env();
+    let cores = args.get_usize("cores").unwrap().max(1);
+    let scale = args.get_f64("scale").unwrap();
+    let its = args.get_usize("its").unwrap().max(2);
+    let solves = args.get_usize("solves").unwrap().max(2);
+    let out_path = args.get_or("out", "BENCH_ksp_reuse.json");
+    let case = TestCase::SaltPressure;
+
+    let decomps: Vec<(usize, usize)> = (1..=cores)
+        .filter(|r| cores % r == 0)
+        .map(|r| (r, cores / r))
+        .collect();
+
+    let mut results = Vec::new();
+    for &(r, t) in &decomps {
+        for ksp_name in KSPS {
+            results.push(run_point(case, scale, r, t, ksp_name, its, solves));
+        }
+    }
+
+    let rows = results.first().map(|c| c.rows).unwrap_or(0);
+    let title = format!(
+        "Ksp setup amortization — {} scale {scale}, {rows} rows, {cores} cores, \
+         {its} its × {solves} solves",
+        case.name()
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "ranks×threads",
+            "ksp",
+            "setup (s)",
+            "solve #1 (s)",
+            "steady (s)",
+            "first/steady",
+        ],
+    );
+    for c in &results {
+        t.row(&[
+            format!("{}×{}", c.ranks, c.threads),
+            c.ksp.to_string(),
+            format!("{:.6}", c.setup_seconds),
+            format!("{:.6}", c.first_solve_seconds),
+            format!("{:.6}", c.steady_solve_seconds),
+            format!("{:.2}×", c.first_vs_steady()),
+        ]);
+    }
+    t.print();
+
+    let configs: Vec<(String, JsonVal)> = results
+        .iter()
+        .map(|c| {
+            (
+                format!("r{}t{}_{}", c.ranks, c.threads, c.ksp),
+                JsonVal::obj(vec![
+                    ("ranks", JsonVal::Int(c.ranks as u64)),
+                    ("threads", JsonVal::Int(c.threads as u64)),
+                    ("ksp", JsonVal::Str(c.ksp.into())),
+                    ("setup_seconds", JsonVal::Num(c.setup_seconds)),
+                    ("first_solve_seconds", JsonVal::Num(c.first_solve_seconds)),
+                    ("steady_solve_seconds", JsonVal::Num(c.steady_solve_seconds)),
+                    ("first_vs_steady", JsonVal::Num(c.first_vs_steady())),
+                ]),
+            )
+        })
+        .collect();
+    let json = JsonVal::Obj(vec![
+        ("bench".to_string(), JsonVal::Str("ksp_reuse".into())),
+        ("case".to_string(), JsonVal::Str(case.name().into())),
+        ("cores".to_string(), JsonVal::Int(cores as u64)),
+        ("rows".to_string(), JsonVal::Int(rows as u64)),
+        ("iterations".to_string(), JsonVal::Int(its as u64)),
+        ("solves".to_string(), JsonVal::Int(solves as u64)),
+        ("configs".to_string(), JsonVal::Obj(configs)),
+    ]);
+    std::fs::write(&out_path, json.render() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

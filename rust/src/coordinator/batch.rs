@@ -3,11 +3,13 @@
 //!
 //! Many `(rhs, tolerance)` requests arrive against **one assembled
 //! operator**; the scheduler groups them into width-k batches, solves each
-//! batch through [`crate::ksp::block::solve_fused`] (one SpMM traversal and
+//! batch through one [`crate::ksp::Ksp`] object's
+//! [`solve_multi`](crate::ksp::Ksp::solve_multi) (one SpMM traversal and
 //! one ghost message per neighbour per iteration for the whole batch, with
 //! per-request convergence masking), and reuses the expensive per-operator
 //! state — assembled blocks, hybrid plan, scatter plan, preconditioner,
-//! thread pool — across every batch. This is exactly the amortization the
+//! thread pool — across every batch: the `Ksp` cached-setup contract is
+//! exactly this scheduler's amortization model. This is exactly the amortization the
 //! ROADMAP's many-concurrent-users north star needs: per-solve setup cost
 //! goes to zero, and the bandwidth-bound matrix traversal is shared k ways.
 //!
@@ -23,13 +25,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::comm::world::World;
-use crate::coordinator::logging::EventLog;
 use crate::error::Result;
-use crate::ksp::block;
+use crate::ksp::context::Ksp;
 use crate::ksp::KspConfig;
 use crate::matgen::cases::{generate_rows, TestCase};
 use crate::mat::mpiaij::MatMPIAIJ;
-use crate::pc;
 use crate::vec::ctx::ThreadCtx;
 use crate::vec::multi::MultiVecMPI;
 use crate::vec::mpi::Layout;
@@ -199,8 +199,21 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
                 ctx.clone(),
             )?;
             a.enable_hybrid()?;
-            let pc = pc::from_name(&cfg.pc_type, &a, &mut comm)?;
-            let log = EventLog::new();
+            // Owned copy: the operator is mut-borrowed by the Ksp below,
+            // and each batch's multivectors page by this partition.
+            let part: Vec<(usize, usize)> = a.diag_block().partition().to_vec();
+
+            // One solver object serves the whole queue: `set_up` builds the
+            // PC once (the enable_hybrid above already built the plan, so
+            // its enable is an idempotent no-op), and every batch reuses
+            // that cached state through `Ksp::solve_multi` — the
+            // per-operator amortization this scheduler exists for.
+            let mut kspobj = Ksp::create(&comm);
+            kspobj.set_type("cg-fused")?;
+            kspobj.set_pc(&cfg.pc_type);
+            kspobj.set_config(cfg.ksp.clone());
+            kspobj.set_operators(&mut a);
+            kspobj.set_up(&mut comm)?;
 
             let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; cfg.requests.len()];
             let mut spmm_traversals = 0usize;
@@ -213,7 +226,7 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
                     rank,
                     k,
                     ctx.clone(),
-                    a.diag_block().partition(),
+                    &part,
                 );
                 for (col, &req) in group.iter().enumerate() {
                     let seed = cfg.requests[req].seed;
@@ -225,12 +238,10 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
                     rank,
                     k,
                     ctx.clone(),
-                    a.diag_block().partition(),
+                    &part,
                 );
                 let rtols: Vec<f64> = group.iter().map(|&r| cfg.requests[r].rtol).collect();
-                let stats = block::solve_fused(
-                    &mut a, pc.as_ref(), &b, &mut x, &cfg.ksp, &rtols, &mut comm, &log,
-                )?;
+                let stats = kspobj.solve_multi(&b, &mut x, &rtols, &mut comm)?;
                 spmm_traversals += stats.iterations() + 1; // + residual setup
                 for (col, &req) in group.iter().enumerate() {
                     let s = &stats.cols[col];

@@ -98,7 +98,7 @@ impl Options {
     }
 
     /// Extract a [`KspConfig`] from `-ksp_rtol/-ksp_atol/-ksp_max_it/
-    /// -ksp_gmres_restart/-ksp_monitor`.
+    /// -ksp_gmres_restart/-ksp_richardson_scale/-ksp_monitor`.
     pub fn ksp_config(&self) -> Result<KspConfig> {
         let d = KspConfig::default();
         Ok(KspConfig {
@@ -107,6 +107,7 @@ impl Options {
             dtol: self.f64_or("ksp_dtol", d.dtol)?,
             max_it: self.usize_or("ksp_max_it", d.max_it)?,
             restart: self.usize_or("ksp_gmres_restart", d.restart)?,
+            richardson_scale: self.f64_or("ksp_richardson_scale", d.richardson_scale)?,
             monitor: self.flag("ksp_monitor"),
         })
     }
@@ -142,7 +143,20 @@ mod tests {
         assert_eq!(c.rtol, 1e-9);
         assert_eq!(c.max_it, 50);
         assert_eq!(c.restart, 10);
+        assert_eq!(c.richardson_scale, 1.0);
         assert!(!c.monitor);
+    }
+
+    #[test]
+    fn richardson_scale_parses_and_rejects_garbage() {
+        let o = Options::parse_str("-ksp_type richardson -ksp_richardson_scale 0.7").unwrap();
+        let c = o.ksp_config().unwrap();
+        assert_eq!(c.richardson_scale, 0.7);
+        // negative damping is a value, not a flag
+        let o = Options::parse_str("-ksp_richardson_scale -0.5").unwrap();
+        assert_eq!(o.ksp_config().unwrap().richardson_scale, -0.5);
+        let o = Options::parse_str("-ksp_richardson_scale fast").unwrap();
+        assert!(o.ksp_config().is_err());
     }
 
     #[test]

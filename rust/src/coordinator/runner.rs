@@ -9,7 +9,8 @@ use std::sync::Arc;
 use crate::comm::stats::CommStatsSnapshot;
 use crate::comm::world::World;
 use crate::coordinator::logging::EventLog;
-use crate::error::{Error, Result};
+use crate::error::Result;
+use crate::ksp::context::{Ksp, KspImpl, SolveArgs};
 use crate::ksp::{self, KspConfig, SolveStats};
 use crate::matgen::cases::{generate_rows, TestCase};
 use crate::mat::mpiaij::MatMPIAIJ;
@@ -127,9 +128,12 @@ struct RankOutcome {
 }
 
 /// Does this ksp name dispatch through the fused layer (and therefore want
-/// the slot-aligned layout + hybrid plan)?
+/// the slot-aligned layout + hybrid plan)? Answered by the registry —
+/// [`crate::ksp::KspImpl::wants_hybrid`] — so new fused methods need no
+/// runner change; an unknown name is simply "no" here and errors at
+/// `Ksp::set_type`.
 pub fn is_fused_ksp(name: &str) -> bool {
-    matches!(name, "cg-fused" | "fused" | "chebyshev-fused")
+    ksp::from_name(name).map(|imp| imp.wants_hybrid()).unwrap_or(false)
 }
 
 /// Run one hybrid solve (collective: spawns `ranks` rank-threads, each
@@ -190,28 +194,37 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
             let mut b = VecMPI::new(layout.clone(), rank, ctx.clone());
             a.mult(&x_true, &mut b, &mut comm)?;
 
-            let pc = pc::from_name(&cfg.pc_type, &a, &mut comm)?;
-            let log = EventLog::new();
+            // The PETSc lifecycle: one solver object per run. `set_up`
+            // builds the PC (and, for the Chebyshev family, the spectral
+            // bounds) once; the enable_hybrid above means the plan build
+            // is already done and set_up's own enable is an idempotent
+            // no-op. `solve` then does no setup work at all — the window
+            // the fork counter brackets is pure iteration.
             let mut x = VecMPI::new(layout, rank, ctx.clone());
+            let mut kspobj = Ksp::create(&comm);
+            kspobj.set_type(&cfg.ksp_type)?;
+            kspobj.set_pc(&cfg.pc_type);
+            kspobj.set_config(cfg.ksp.clone());
+            kspobj.set_operators(&mut a);
+            kspobj.set_up(&mut comm)?;
             let forks_before = ctx.pool().fork_count();
-            let stats = solve_by_name(
-                &cfg.ksp_type,
-                &mut a,
-                pc.as_ref(),
-                &b,
-                &mut x,
-                &cfg.ksp,
-                &mut comm,
-                &log,
-            )?;
+            let stats = kspobj.solve(&b, &mut x, &mut comm)?;
             let forks = ctx.pool().fork_count() - forks_before;
 
-            let total_flops: f64 = log.all().iter().map(|(_, e)| e.flops).sum();
+            let (ksp_time, matmult_time, matmult_count, total_flops) = {
+                let log = kspobj.log();
+                let flops: f64 = log.all().iter().map(|(_, e)| e.flops).sum();
+                let ksp_s = log.stats("KSPSolve");
+                let mm = log.stats("MatMult");
+                (ksp_s.seconds, mm.seconds, mm.count, flops)
+            };
+            drop(kspobj); // release the operator borrow for the stats below
+
             let ov = *a.scatter().overlap_stats();
             Ok(RankOutcome {
-                ksp_time: log.stats("KSPSolve").seconds,
-                matmult_time: log.stats("MatMult").seconds,
-                matmult_count: log.stats("MatMult").count,
+                ksp_time,
+                matmult_time,
+                matmult_count,
                 flops: total_flops,
                 nnz_split: a.nnz_split(),
                 ghosts: a.ghost_in(),
@@ -271,10 +284,12 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
     Ok(report)
 }
 
-/// Dispatch a solver by options-database name. Takes the concrete
-/// [`MatMPIAIJ`] (callers pass the same value they did when this took
-/// `&mut dyn Operator`; the dyn coercion now happens per solver) so the
-/// fused variants can reach the raw CSR block and row partition.
+/// Dispatch a solver by options-database name — the **legacy shim** kept
+/// for callers that already hold a built PC. It now routes through the
+/// [`crate::ksp::KSP_REGISTRY`] (no string `match` here; unknown names
+/// error with the full [`crate::ksp::KSP_NAMES`] table) but re-derives the
+/// per-call setup every time. Prefer [`crate::ksp::Ksp`], which performs
+/// that setup once and caches it across repeated solves.
 #[allow(clippy::too_many_arguments)]
 pub fn solve_by_name(
     name: &str,
@@ -286,7 +301,8 @@ pub fn solve_by_name(
     comm: &mut crate::comm::endpoint::Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    if is_fused_ksp(name) && !(comm.size() == 1 && a.diag_block().ctx().nthreads() <= 1) {
+    let imp = ksp::from_name(name)?;
+    if imp.wants_hybrid() && !(comm.size() == 1 && a.diag_block().ctx().nthreads() <= 1) {
         // Opt the operator into hybrid fusion when its layout allows (it
         // does whenever run_case built it — slot-aligned). On a mismatched
         // layout this is a no-op and the fused layer falls back. The
@@ -294,25 +310,16 @@ pub fn solve_by_name(
         // (bitwise identical to unfused — see ksp::fused::degenerate_serial).
         let _ = a.enable_hybrid();
     }
-    match name {
-        "cg" => ksp::cg::solve(a, pc, b, x, cfg, comm, log),
-        // Fused single-fork iterations where the layout allows — the
-        // multi-rank hybrid path (split-phase overlap, deterministic
-        // reductions) with a plan, the legacy single-rank fusion without;
-        // transparent fallback to the kernel-per-fork path otherwise.
-        "cg-fused" | "fused" => ksp::fused::solve(a, pc, b, x, cfg, comm, log),
-        "gmres" => ksp::gmres::solve(a, pc, b, x, cfg, comm, log),
-        "bicgstab" | "bcgs" => ksp::bicgstab::solve(a, pc, b, x, cfg, comm, log),
-        "richardson" => ksp::richardson::solve(a, pc, b, x, 1.0, cfg, comm, log),
-        "chebyshev" => {
-            let (emin, emax) = ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?;
-            ksp::chebyshev::solve(a, pc, b, x, emin, emax, cfg, comm, log)
-        }
-        // Bound estimation + solve in one: picks the deterministic hybrid
-        // estimator whenever the hybrid path will run.
-        "chebyshev-fused" => ksp::fused::solve_chebyshev_auto(a, pc, b, x, cfg, comm, log),
-        other => Err(Error::InvalidOption(format!("unknown ksp_type `{other}`"))),
-    }
+    imp.solve(SolveArgs {
+        a,
+        pc,
+        b,
+        x,
+        cfg,
+        comm,
+        log,
+        bounds: None,
+    })
 }
 
 #[cfg(test)]

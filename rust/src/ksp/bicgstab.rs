@@ -11,6 +11,20 @@ use crate::ksp::{
 use crate::pc::Precond;
 use crate::vec::mpi::VecMPI;
 
+/// Registry adapter for `-ksp_type bicgstab` / `bcgs` (see
+/// [`crate::ksp::context`]).
+pub struct BicgstabKsp;
+
+impl crate::ksp::context::KspImpl for BicgstabKsp {
+    fn name(&self) -> &'static str {
+        "bicgstab"
+    }
+
+    fn solve(&self, args: crate::ksp::context::SolveArgs<'_>) -> Result<SolveStats> {
+        solve(args.a, args.pc, args.b, args.x, args.cfg, args.comm, args.log)
+    }
+}
+
 /// Solve `A x = b` with right-preconditioned BiCGStab.
 pub fn solve(
     a: &mut dyn Operator,

@@ -38,6 +38,10 @@
 //! plan kernels, so there the per-column agreement with a solo solve is
 //! to rounding (last-ulp SpMV fold differences), not bitwise. Every
 //! decomposition with G ≥ 2 keeps the exact contract.
+//!
+//! The object-API entry is [`crate::ksp::context::Ksp::solve_multi`]
+//! (`KSPMatSolve`): it reuses the `Ksp`-cached operator plan and PC across
+//! batches, which is how [`crate::coordinator::batch`] serves its queue.
 
 use std::sync::Arc;
 

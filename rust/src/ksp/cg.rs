@@ -20,6 +20,19 @@ use crate::ksp::{
 use crate::pc::Precond;
 use crate::vec::mpi::VecMPI;
 
+/// Registry adapter for `-ksp_type cg` (see [`crate::ksp::context`]).
+pub struct CgKsp;
+
+impl crate::ksp::context::KspImpl for CgKsp {
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn solve(&self, args: crate::ksp::context::SolveArgs<'_>) -> Result<SolveStats> {
+        solve(args.a, args.pc, args.b, args.x, args.cfg, args.comm, args.log)
+    }
+}
+
 /// Solve `A x = b` with preconditioned CG. `x` carries the initial guess.
 pub fn solve(
     a: &mut dyn Operator,

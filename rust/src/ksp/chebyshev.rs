@@ -25,6 +25,36 @@ use crate::vec::mpi::VecMPI;
 /// substrate after CG.
 pub use crate::ksp::fused::solve_chebyshev as solve_fused;
 
+/// Registry adapter for `-ksp_type chebyshev` (see
+/// [`crate::ksp::context`]): uses the spectral interval cached by
+/// `Ksp::set_up` when present, estimating inline (the free-function
+/// behavior) otherwise.
+pub struct ChebyshevKsp;
+
+impl crate::ksp::context::KspImpl for ChebyshevKsp {
+    fn name(&self) -> &'static str {
+        "chebyshev"
+    }
+
+    fn needs_bounds(&self) -> bool {
+        true
+    }
+
+    fn solve(&self, args: crate::ksp::context::SolveArgs<'_>) -> Result<SolveStats> {
+        // Explicit reborrows: the `&mut dyn Operator` coercion would
+        // otherwise move `args.a`/`args.comm` into the first call.
+        let (emin, emax) = match args.bounds {
+            Some(be) => be,
+            None => {
+                estimate_bounds(&mut *args.a, args.pc, args.b, 20, &mut *args.comm, args.log)?
+            }
+        };
+        solve(
+            args.a, args.pc, args.b, args.x, emin, emax, args.cfg, args.comm, args.log,
+        )
+    }
+}
+
 /// Estimate `(emin, emax)` of `M⁻¹A` with `its` power iterations, then
 /// apply safety factors (0.03·emax, 1.5·emax). The wide lower margin keeps
 /// slow low-frequency modes inside the Chebyshev interval so the method

@@ -1,0 +1,739 @@
+//! The PETSc-style solver *object*: `Ksp` (paper §V.B).
+//!
+//! The paper's applications drive PETSc through its object lifecycle —
+//! `KSPCreate` → `KSPSetOperators` → `KSPSetFromOptions` → `KSPSetUp` →
+//! `KSPSolve` — and the threading lives *inside* the objects, invisible to
+//! the caller ("Fluidity … uses the library as its linear solver engine").
+//! The follow-up papers (Lange et al., arXiv:1303.5275, arXiv:1307.4567)
+//! stress that amortizing setup across repeated solves is where mixed-mode
+//! wins at production scale; [`Ksp`] is that amortization boundary.
+//!
+//! [`Ksp::set_up`] performs **once** everything the free-function era redid
+//! per call:
+//! - [`MatMPIAIJ::enable_hybrid`] when the method wants the slot-segmented
+//!   plan and the decomposition is not the degenerate 1×1 (which stays on
+//!   the legacy bitwise-identical fused path),
+//! - the preconditioner build via [`crate::pc::from_name`] (ILU
+//!   factorizations, colorings, level schedules, GAMG hierarchies),
+//! - the fused-path eligibility classification of that PC
+//!   ([`crate::pc::FusedPc`]),
+//! - deterministic Chebyshev spectral-bound estimation for the methods
+//!   that need it (cached; invalidated by [`Ksp::set_operators`]).
+//!
+//! [`Ksp::solve`] is then callable repeatedly: solve #2 on the same object
+//! rebuilds no plan, no scatter ghost buffer, no PC, no bounds — and is
+//! bitwise identical to solve #1 re-run from scratch (asserted by
+//! `tests/ksp_context.rs`).
+//!
+//! Method dispatch goes through the [`KspImpl`] trait and the
+//! [`KSP_REGISTRY`] name table (mirroring [`crate::pc::PC_NAMES`]): new
+//! methods register in one place and the unknown-`ksp_type` error lists
+//! the full table.
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::coordinator::options::Options;
+use crate::error::{Error, Result};
+use crate::ksp::block::BlockStats;
+use crate::ksp::{
+    bicgstab, cg, chebyshev, fused, gmres, richardson, ConvergedReason, KspConfig, SolveStats,
+};
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::pc::{self, FusedPc, Precond};
+use crate::vec::mpi::VecMPI;
+use crate::vec::multi::MultiVecMPI;
+
+/// Everything one [`KspImpl::solve`] call needs, borrowed from the [`Ksp`]
+/// object (or, for the legacy free-function shims, from the caller). One
+/// lifetime: the adapters only forward these to the solver free functions.
+pub struct SolveArgs<'s> {
+    pub a: &'s mut MatMPIAIJ,
+    pub pc: &'s dyn Precond,
+    pub b: &'s VecMPI,
+    pub x: &'s mut VecMPI,
+    pub cfg: &'s KspConfig,
+    pub comm: &'s mut Comm,
+    pub log: &'s EventLog,
+    /// Cached spectral interval `(emin, emax)` for the Chebyshev family,
+    /// estimated during [`Ksp::set_up`]. `None` (the shim path) means the
+    /// adapter estimates inline, exactly like the free functions did.
+    pub bounds: Option<(f64, f64)>,
+}
+
+/// A Krylov method registered in [`KSP_REGISTRY`]. Implementations are
+/// stateless unit structs (the per-solve state lives in [`SolveArgs`], the
+/// cached setup in [`Ksp`]); the flags tell `set_up` what to prepare.
+pub trait KspImpl: Sync {
+    /// Canonical registry name (`cg`, `cg-fused`, ...). Aliases resolve to
+    /// the same implementation, so `from_name("fused").name()` is
+    /// `"cg-fused"`.
+    fn name(&self) -> &'static str;
+
+    /// Does this method dispatch through the fused layer — and therefore
+    /// want the slot-aligned layout plus [`MatMPIAIJ::enable_hybrid`] at
+    /// setup?
+    fn wants_hybrid(&self) -> bool {
+        false
+    }
+
+    /// Does this method consume spectral bounds that [`Ksp::set_up`]
+    /// should estimate once and cache (the Chebyshev family)?
+    fn needs_bounds(&self) -> bool {
+        false
+    }
+
+    /// Run one solve. Adapters forward to the per-module free functions,
+    /// so the numerical paths (and their bitwise contracts) are exactly
+    /// the pre-registry ones.
+    fn solve(&self, args: SolveArgs<'_>) -> Result<SolveStats>;
+}
+
+/// Every name [`from_name`] accepts — kept in one place so the
+/// unknown-type error can enumerate them and the factory test can sweep
+/// the full table (the KSP counterpart of [`crate::pc::PC_NAMES`]).
+pub const KSP_NAMES: &[&str] = &[
+    "cg",
+    "cg-fused",
+    "fused",
+    "gmres",
+    "bicgstab",
+    "bcgs",
+    "richardson",
+    "chebyshev",
+    "chebyshev-fused",
+];
+
+/// The registry: options-database name → method implementation. Aliases
+/// (`fused`, `bcgs`) share an entry's implementation. Order matches
+/// [`KSP_NAMES`]; a unit test keeps the two tables in sync.
+pub const KSP_REGISTRY: &[(&str, &dyn KspImpl)] = &[
+    ("cg", &cg::CgKsp),
+    ("cg-fused", &fused::CgFusedKsp),
+    ("fused", &fused::CgFusedKsp),
+    ("gmres", &gmres::GmresKsp),
+    ("bicgstab", &bicgstab::BicgstabKsp),
+    ("bcgs", &bicgstab::BicgstabKsp),
+    ("richardson", &richardson::RichardsonKsp),
+    ("chebyshev", &chebyshev::ChebyshevKsp),
+    ("chebyshev-fused", &fused::ChebyshevFusedKsp),
+];
+
+/// Resolve a method by options-database name. The error lists the full
+/// name table, matching [`crate::pc::from_name`]'s behavior.
+pub fn from_name(name: &str) -> Result<&'static dyn KspImpl> {
+    for (n, imp) in KSP_REGISTRY {
+        if *n == name {
+            return Ok(*imp);
+        }
+    }
+    Err(Error::InvalidOption(format!(
+        "unknown ksp_type `{name}`; valid types: {}",
+        KSP_NAMES.join(", ")
+    )))
+}
+
+/// Per-iteration monitor callback: `(iteration, residual norm)`.
+pub type Monitor<'a> = Box<dyn FnMut(usize, f64) + 'a>;
+
+/// The PETSc-style solver object. See the module docs for the lifecycle;
+/// in short:
+///
+/// ```text
+/// let mut ksp = Ksp::create(&comm);
+/// ksp.set_type("cg-fused")?;          // or set_from_options(&opts)?
+/// ksp.set_pc("jacobi");
+/// ksp.set_operators(&mut a);          // borrows the operator
+/// ksp.set_up(&mut comm)?;             // plan + PC + bounds, once
+/// ksp.solve(&b, &mut x, &mut comm)?;  // repeatable; zero setup after #1
+/// ```
+///
+/// `solve` auto-runs `set_up` when needed, so the explicit call is only
+/// for callers that want the setup cost on its own timer.
+pub struct Ksp<'a> {
+    /// Communicator identity recorded at create (sanity-checked on every
+    /// collective method: a `Ksp` is bound to one rank of one world).
+    rank: usize,
+    size: usize,
+    name: String,
+    imp: &'static dyn KspImpl,
+    pc_name: String,
+    a: Option<&'a mut MatMPIAIJ>,
+    pc: Option<Box<dyn Precond + Send>>,
+    cfg: KspConfig,
+    /// Cached spectral interval for the Chebyshev family.
+    bounds: Option<(f64, f64)>,
+    /// Fused-region classification of the built PC (None until set_up).
+    pc_fusable: Option<bool>,
+    set_up_done: bool,
+    /// How many times `set_up` actually performed setup work (the
+    /// amortization tests assert this stays at 1 across repeated solves).
+    setups: u64,
+    log: EventLog,
+    last: Option<SolveStats>,
+    monitor: Option<Monitor<'a>>,
+}
+
+impl<'a> Ksp<'a> {
+    /// `KSPCreate`: a solver bound to `comm`'s world, with PETSc-flavored
+    /// defaults (`gmres` + `jacobi`, default [`KspConfig`] tolerances).
+    pub fn create(comm: &Comm) -> Ksp<'a> {
+        Ksp {
+            rank: comm.rank(),
+            size: comm.size(),
+            name: "gmres".into(),
+            imp: &gmres::GmresKsp,
+            pc_name: "jacobi".into(),
+            a: None,
+            pc: None,
+            cfg: KspConfig::default(),
+            bounds: None,
+            pc_fusable: None,
+            set_up_done: false,
+            setups: 0,
+            log: EventLog::new(),
+            last: None,
+            monitor: None,
+        }
+    }
+
+    fn check_comm(&self, comm: &Comm) -> Result<()> {
+        if comm.rank() != self.rank || comm.size() != self.size {
+            return Err(Error::InvalidOption(format!(
+                "Ksp created on rank {}/{} used with communicator rank {}/{}",
+                self.rank,
+                self.size,
+                comm.rank(),
+                comm.size()
+            )));
+        }
+        Ok(())
+    }
+
+    /// `KSPSetOperators`: (re)attach the operator. Invalidates all cached
+    /// setup — the PC, the spectral bounds and the set-up flag — exactly
+    /// like PETSc re-triggers `KSPSetUp` after new operators.
+    pub fn set_operators(&mut self, a: &'a mut MatMPIAIJ) {
+        self.a = Some(a);
+        self.pc = None;
+        self.bounds = None;
+        self.pc_fusable = None;
+        self.set_up_done = false;
+    }
+
+    /// Release the operator borrow (e.g. to inspect the matrix after the
+    /// solves). The next solve needs `set_operators` again.
+    pub fn take_operators(&mut self) -> Option<&'a mut MatMPIAIJ> {
+        self.set_up_done = false;
+        self.pc = None;
+        self.bounds = None;
+        self.pc_fusable = None;
+        self.a.take()
+    }
+
+    /// `KSPSetType`: select the method by registry name. Errors list the
+    /// full [`KSP_NAMES`] table. Re-setting the current name is a no-op
+    /// (so re-applying the same options on a live object keeps the cache);
+    /// an actual change invalidates cached bounds (the new method may
+    /// want a hybrid-estimated interval or none at all) but keeps a built
+    /// PC — it depends only on the operator. Note that a hybrid plan a
+    /// previous `set_up` enabled stays on the *operator* (PETSc-style
+    /// Mat-side state, shared with every other consumer of the matrix):
+    /// switching from a fused method to a plain one keeps the
+    /// slot-segmented — deterministic, decomposition-invariant — MatMult,
+    /// whose per-row folds differ in the last ulps from the never-enabled
+    /// kernel.
+    pub fn set_type(&mut self, name: &str) -> Result<()> {
+        if name == self.name {
+            return Ok(());
+        }
+        self.imp = from_name(name)?;
+        self.name = name.to_string();
+        self.bounds = None;
+        self.set_up_done = false;
+        Ok(())
+    }
+
+    /// `PCSetType` (via the KSP, as `-pc_type` does): select the
+    /// preconditioner by [`crate::pc::PC_NAMES`] name. The build happens
+    /// in `set_up`; an unknown name errors there with the full PC table.
+    /// Changing the PC also drops cached spectral bounds — the Chebyshev
+    /// interval is a property of `M⁻¹A`, not of `A` alone. Re-setting the
+    /// current name is a no-op (cached state survives).
+    pub fn set_pc(&mut self, name: &str) {
+        if name == self.pc_name {
+            return;
+        }
+        self.pc = None;
+        self.pc_fusable = None;
+        self.bounds = None;
+        self.pc_name = name.to_string();
+        self.set_up_done = false;
+    }
+
+    /// Replace the whole solver configuration (tolerances, limits,
+    /// monitor flag). Does not invalidate cached setup: tolerances are
+    /// read per solve. An installed [`Ksp::set_monitor`] keeps implying
+    /// `monitor` whatever the new config says.
+    pub fn set_config(&mut self, cfg: KspConfig) {
+        self.cfg = cfg;
+        if self.monitor.is_some() {
+            self.cfg.monitor = true;
+        }
+    }
+
+    /// `KSPSetTolerances`.
+    pub fn set_tolerances(&mut self, rtol: f64, atol: f64, dtol: f64, max_it: usize) {
+        self.cfg.rtol = rtol;
+        self.cfg.atol = atol;
+        self.cfg.dtol = dtol;
+        self.cfg.max_it = max_it;
+    }
+
+    /// `KSPSetFromOptions`: `-ksp_type`, `-pc_type` (with the threaded
+    /// variant flags via [`Options::pc_name`]), and the `-ksp_*`
+    /// tolerances/limits including `-ksp_richardson_scale`.
+    pub fn set_from_options(&mut self, opts: &Options) -> Result<()> {
+        if let Some(name) = opts.get("ksp_type") {
+            self.set_type(name)?;
+        }
+        let pc = opts.pc_name(&self.pc_name);
+        self.set_pc(&pc);
+        self.set_config(opts.ksp_config()?);
+        Ok(())
+    }
+
+    /// `KSPMonitorSet`: record per-iteration residual norms and replay
+    /// them to `f` as `(iteration, rnorm)` after each solve. Implies
+    /// `cfg.monitor` (the solvers collect the history the callback sees).
+    pub fn set_monitor(&mut self, f: Monitor<'a>) {
+        self.cfg.monitor = true;
+        self.monitor = Some(f);
+    }
+
+    /// `KSPSetUp`: perform — once — everything repeated solves share:
+    /// hybrid plan, PC build, fused classification, spectral bounds.
+    /// Idempotent: a second call (and every `solve` after the first) does
+    /// no work until `set_operators`/`set_pc`/`set_type` invalidates.
+    ///
+    /// The Chebyshev bound estimator is chosen (hybrid slot-ordered vs
+    /// plain) by probing vectors that share the operator's `ThreadCtx`,
+    /// which is also what makes the later solve take the hybrid path. A
+    /// caller that builds its `b`/`x` on a *different* `ThreadCtx` makes
+    /// the solve fall back to the plain path while the cached interval
+    /// came from the hybrid estimator — still valid bounds, but not
+    /// bitwise identical to the free-function auto flow. Share the
+    /// operator's context (as the runner, batch scheduler and tests do)
+    /// to keep the bitwise contract.
+    pub fn set_up(&mut self, comm: &mut Comm) -> Result<()> {
+        self.check_comm(comm)?;
+        if self.set_up_done {
+            return Ok(());
+        }
+        let a = self
+            .a
+            .as_deref_mut()
+            .ok_or_else(|| Error::not_ready("KSPSetUp: call set_operators first"))?;
+
+        // 1. The slot-segmented hybrid plan, when the method dispatches
+        //    through the fused layer. The degenerate 1×1 decomposition is
+        //    deliberately left on the legacy kernels (bitwise identical to
+        //    the unfused path — see ksp::fused::degenerate_serial); on a
+        //    non-slot-aligned layout enable_hybrid errors and the fused
+        //    layer transparently falls back, so the error is dropped.
+        let threads = a.diag_block().ctx().nthreads();
+        if self.imp.wants_hybrid() && !(self.size == 1 && threads <= 1) {
+            let _ = a.enable_hybrid();
+        }
+
+        // 2. The preconditioner (factorizations, colorings, hierarchies).
+        if self.pc.is_none() {
+            self.pc = Some(pc::from_name(&self.pc_name, a, comm)?);
+        }
+        let pc = self.pc.as_deref().expect("PC just built");
+        self.pc_fusable = Some(!matches!(pc.fused(), FusedPc::Unfusable));
+
+        // 3. Spectral bounds for the Chebyshev family — the deterministic
+        //    slot-ordered estimator whenever the solve itself will run the
+        //    hybrid path (same predicate, probed with scratch vectors that
+        //    share the operator's context/layout exactly as the runner's
+        //    real b/x do), so a cached-bounds solve is bitwise identical
+        //    to the free-function flow it replaces.
+        if self.imp.needs_bounds() && self.bounds.is_none() {
+            let seed = VecMPI::new(a.row_layout().clone(), self.rank, a.diag_block().ctx().clone());
+            let probe = seed.duplicate();
+            let be = if self.imp.wants_hybrid()
+                && fused::hybrid_path_active(a, pc, &seed, &probe, comm)
+            {
+                fused::estimate_bounds_hybrid(a, pc, &seed, 20, comm, &self.log)?
+            } else {
+                chebyshev::estimate_bounds(a, pc, &seed, 20, comm, &self.log)?
+            };
+            self.bounds = Some(be);
+        }
+
+        self.setups += 1;
+        self.set_up_done = true;
+        Ok(())
+    }
+
+    /// `KSPSolve`: solve `A x = b` (`x` carries the initial guess). Runs
+    /// `set_up` automatically if needed; afterwards [`Ksp::stats`] /
+    /// [`Ksp::reason`] report this solve. Callable repeatedly — repeated
+    /// calls do zero setup work.
+    pub fn solve(&mut self, b: &VecMPI, x: &mut VecMPI, comm: &mut Comm) -> Result<SolveStats> {
+        self.check_comm(comm)?;
+        if !self.set_up_done {
+            self.set_up(comm)?;
+        }
+        let stats = {
+            let a = self
+                .a
+                .as_deref_mut()
+                .ok_or_else(|| Error::not_ready("KSPSolve: call set_operators first"))?;
+            let pc = self
+                .pc
+                .as_deref()
+                .ok_or_else(|| Error::not_ready("KSPSolve: PC missing after set_up"))?;
+            self.imp.solve(SolveArgs {
+                a,
+                pc,
+                b,
+                x,
+                cfg: &self.cfg,
+                comm,
+                log: &self.log,
+                bounds: self.bounds,
+            })?
+        };
+        if let Some(m) = self.monitor.as_mut() {
+            for (it, rnorm) in stats.history.iter().enumerate() {
+                m(it, *rnorm);
+            }
+        }
+        self.last = Some(stats.clone());
+        Ok(stats)
+    }
+
+    /// `KSPMatSolve`: the batched k-RHS entry — one SpMM traversal and one
+    /// ghost message per neighbour per iteration for the whole block, with
+    /// per-column tolerance masking (`col_rtol` empty ⇒ every column uses
+    /// the base config). Reuses exactly the setup `solve` does. The
+    /// batched engine is the CG family ([`crate::ksp::block`], falling
+    /// back per column when the operator/PC don't allow the fused block
+    /// region), so any other `ksp_type` is rejected rather than silently
+    /// substituted. Afterwards [`Ksp::reason`] / [`Ksp::stats`] describe
+    /// the batch's longest-running (or first non-converged) column;
+    /// per-column detail is in the returned [`BlockStats`].
+    pub fn solve_multi(
+        &mut self,
+        b: &MultiVecMPI,
+        x: &mut MultiVecMPI,
+        col_rtol: &[f64],
+        comm: &mut Comm,
+    ) -> Result<BlockStats> {
+        self.check_comm(comm)?;
+        if self.imp.name() != "cg-fused" && self.imp.name() != "cg" {
+            return Err(Error::Unsupported(format!(
+                "KSPMatSolve: the batched engine is the CG family; ksp_type `{}` has no \
+                 k-RHS implementation (set_type(\"cg-fused\"))",
+                self.name
+            )));
+        }
+        if !self.set_up_done {
+            self.set_up(comm)?;
+        }
+        let a = self
+            .a
+            .as_deref_mut()
+            .ok_or_else(|| Error::not_ready("KSPMatSolve: call set_operators first"))?;
+        let pc = self
+            .pc
+            .as_deref()
+            .ok_or_else(|| Error::not_ready("KSPMatSolve: PC missing after set_up"))?;
+        let stats =
+            crate::ksp::block::solve_fused(a, pc, b, x, &self.cfg, col_rtol, comm, &self.log)?;
+        // Represent the batch in the single-solve accessors by its
+        // longest-running column (any non-converged column wins), so
+        // reason()/stats() never report a stale earlier solve — and
+        // replay that column to the monitor, as `solve` would.
+        self.last = stats
+            .cols
+            .iter()
+            .max_by_key(|s| ((!s.converged()) as usize, s.iterations))
+            .cloned();
+        if let (Some(m), Some(rep)) = (self.monitor.as_mut(), self.last.as_ref()) {
+            for (it, rnorm) in rep.history.iter().enumerate() {
+                m(it, *rnorm);
+            }
+        }
+        Ok(stats)
+    }
+
+    // ---- accessors ------------------------------------------------------
+
+    /// The registered type name this object was set to (an alias stays an
+    /// alias; [`Ksp::method_name`] gives the canonical one).
+    pub fn type_name(&self) -> &str {
+        &self.name
+    }
+
+    /// Canonical method name from the registry entry.
+    pub fn method_name(&self) -> &'static str {
+        self.imp.name()
+    }
+
+    pub fn pc_type_name(&self) -> &str {
+        &self.pc_name
+    }
+
+    /// `KSPGetConvergedReason` for the most recent solve.
+    pub fn reason(&self) -> Option<ConvergedReason> {
+        self.last.as_ref().map(|s| s.reason)
+    }
+
+    /// Full stats of the most recent solve.
+    pub fn stats(&self) -> Option<&SolveStats> {
+        self.last.as_ref()
+    }
+
+    /// Iterations of the most recent solve.
+    pub fn iterations(&self) -> Option<usize> {
+        self.last.as_ref().map(|s| s.iterations)
+    }
+
+    pub fn config(&self) -> &KspConfig {
+        &self.cfg
+    }
+
+    pub fn config_mut(&mut self) -> &mut KspConfig {
+        &mut self.cfg
+    }
+
+    /// The attached operator (None before `set_operators`).
+    pub fn operator(&self) -> Option<&MatMPIAIJ> {
+        self.a.as_deref()
+    }
+
+    pub fn operator_mut(&mut self) -> Option<&mut MatMPIAIJ> {
+        self.a.as_deref_mut()
+    }
+
+    /// The built preconditioner (None until `set_up`).
+    pub fn pc(&self) -> Option<&dyn Precond> {
+        self.pc.as_deref().map(|p| p as &dyn Precond)
+    }
+
+    /// Fused-region classification of the built PC (None until `set_up`).
+    pub fn pc_fusable(&self) -> Option<bool> {
+        self.pc_fusable
+    }
+
+    /// The cached Chebyshev interval (None unless the method needs bounds
+    /// and `set_up` ran since the last invalidation).
+    pub fn bounds(&self) -> Option<(f64, f64)> {
+        self.bounds
+    }
+
+    pub fn is_set_up(&self) -> bool {
+        self.set_up_done
+    }
+
+    /// How many times setup work was actually performed — the repeated-
+    /// solve contract asserts this stays at 1 however many solves run.
+    pub fn setup_count(&self) -> u64 {
+        self.setups
+    }
+
+    /// The per-object event log (`KSPSolve`, `MatMult`, ... timings of
+    /// every solve and of the bound estimation in `set_up`).
+    pub fn log(&self) -> &EventLog {
+        &self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::vec::ctx::ThreadCtx;
+    use crate::vec::mpi::Layout;
+
+    fn tridiag_system(
+        n: usize,
+        diag_scale: f64,
+        threads: usize,
+        comm: &mut Comm,
+    ) -> (MatMPIAIJ, VecMPI) {
+        let layout = Layout::slot_aligned(n, comm.size(), threads);
+        let (lo, hi) = layout.range(comm.rank());
+        let ctx = ThreadCtx::new(threads);
+        let mut es = Vec::new();
+        for i in lo..hi {
+            es.push((i, i, diag_scale * (3.0 + (i % 3) as f64)));
+            if i > 0 {
+                es.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                es.push((i, i + 1, -1.0));
+            }
+        }
+        let a = MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, comm, ctx.clone())
+            .unwrap();
+        let bs: Vec<f64> = (lo..hi).map(|g| (g as f64 * 0.13).sin() + 0.4).collect();
+        let b = VecMPI::from_local_slice(layout, comm.rank(), &bs, ctx).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn names_table_matches_registry_and_unknown_lists_all() {
+        assert_eq!(KSP_NAMES.len(), KSP_REGISTRY.len());
+        for (name, (rname, imp)) in KSP_NAMES.iter().zip(KSP_REGISTRY) {
+            assert_eq!(name, rname, "KSP_NAMES and KSP_REGISTRY drifted");
+            let resolved = from_name(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(resolved.name(), imp.name());
+            assert!(!resolved.name().is_empty());
+        }
+        // aliases resolve to their canonical implementation
+        assert_eq!(from_name("fused").unwrap().name(), "cg-fused");
+        assert_eq!(from_name("bcgs").unwrap().name(), "bicgstab");
+        let err = from_name("bogus").unwrap_err().to_string();
+        for name in KSP_NAMES {
+            assert!(err.contains(name), "unknown-ksp error must list `{name}`: {err}");
+        }
+    }
+
+    #[test]
+    fn solve_without_operators_is_not_ready() {
+        World::run(1, |mut c| {
+            let ctx = ThreadCtx::serial();
+            let layout = Layout::split(8, 1);
+            let b = VecMPI::new(layout.clone(), 0, ctx.clone());
+            let mut x = VecMPI::new(layout, 0, ctx);
+            let mut ksp = Ksp::create(&c);
+            assert!(ksp.set_up(&mut c).is_err());
+            assert!(ksp.solve(&b, &mut x, &mut c).is_err());
+        });
+    }
+
+    #[test]
+    fn set_up_is_idempotent_and_counted() {
+        World::run(1, |mut c| {
+            let (mut a, b) = tridiag_system(32, 1.0, 2, &mut c);
+            let mut ksp = Ksp::create(&c);
+            ksp.set_type("cg").unwrap();
+            ksp.set_pc("jacobi");
+            ksp.set_operators(&mut a);
+            ksp.set_up(&mut c).unwrap();
+            ksp.set_up(&mut c).unwrap();
+            assert_eq!(ksp.setup_count(), 1);
+            assert!(ksp.is_set_up());
+            assert_eq!(ksp.pc_fusable(), Some(true));
+            let mut x = b.duplicate();
+            x.zero();
+            let s = ksp.solve(&b, &mut x, &mut c).unwrap();
+            assert!(s.converged());
+            assert_eq!(ksp.setup_count(), 1, "solve after set_up must not re-set-up");
+            assert_eq!(ksp.reason(), Some(s.reason));
+            assert_eq!(ksp.iterations(), Some(s.iterations));
+        });
+    }
+
+    #[test]
+    fn chebyshev_bounds_cached_and_invalidated_by_set_operators() {
+        World::run(1, |mut c| {
+            let (mut a, b) = tridiag_system(48, 1.0, 2, &mut c);
+            let (mut a2, _) = tridiag_system(48, 2.0, 2, &mut c);
+            let mut ksp = Ksp::create(&c);
+            ksp.set_type("chebyshev").unwrap();
+            ksp.set_pc("jacobi");
+            ksp.set_operators(&mut a);
+            assert_eq!(ksp.bounds(), None);
+            ksp.set_up(&mut c).unwrap();
+            let b1 = ksp.bounds().expect("chebyshev set_up must cache bounds");
+            assert!(b1.0 > 0.0 && b1.1 > b1.0);
+            // a second set_up keeps the cache (and does no work)
+            ksp.set_up(&mut c).unwrap();
+            assert_eq!(ksp.bounds(), Some(b1));
+            assert_eq!(ksp.setup_count(), 1);
+            let mut x = b.duplicate();
+            x.zero();
+            assert!(ksp.solve(&b, &mut x, &mut c).unwrap().converged());
+            assert_eq!(ksp.bounds(), Some(b1), "solve must not re-estimate");
+            // new operators: cache invalidated, re-estimated on next set_up
+            ksp.set_operators(&mut a2);
+            assert_eq!(ksp.bounds(), None, "set_operators must drop cached bounds");
+            assert!(!ksp.is_set_up());
+            ksp.set_up(&mut c).unwrap();
+            let b2 = ksp.bounds().unwrap();
+            assert!(
+                (b2.1 - b1.1).abs() > 1e-9,
+                "scaled operator must re-estimate different bounds ({b1:?} vs {b2:?})"
+            );
+            assert_eq!(ksp.setup_count(), 2);
+            // a PC change invalidates too: the interval is for M⁻¹A
+            ksp.set_pc("none");
+            assert_eq!(ksp.bounds(), None, "set_pc must drop cached bounds");
+            ksp.set_up(&mut c).unwrap();
+            let b3 = ksp.bounds().unwrap();
+            assert!(
+                (b3.1 - b2.1).abs() > 1e-12,
+                "new PC must re-estimate its own interval ({b2:?} vs {b3:?})"
+            );
+            // re-setting the current PC name is a no-op: cache survives
+            ksp.set_pc("none");
+            assert_eq!(ksp.bounds(), Some(b3));
+            assert!(ksp.is_set_up());
+        });
+    }
+
+    #[test]
+    fn monitor_replays_history() {
+        World::run(1, |mut c| {
+            let (mut a, b) = tridiag_system(32, 1.0, 1, &mut c);
+            let seen = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            let sink = std::rc::Rc::clone(&seen);
+            let mut ksp = Ksp::create(&c);
+            ksp.set_type("cg").unwrap();
+            ksp.set_pc("none");
+            ksp.set_monitor(Box::new(move |it, r| sink.borrow_mut().push((it, r))));
+            ksp.set_operators(&mut a);
+            let mut x = b.duplicate();
+            x.zero();
+            let s = ksp.solve(&b, &mut x, &mut c).unwrap();
+            assert!(s.converged());
+            assert!(!s.history.is_empty(), "set_monitor must imply cfg.monitor");
+            let seen = seen.borrow();
+            assert_eq!(seen.len(), s.history.len());
+            for (k, (it, r)) in seen.iter().enumerate() {
+                assert_eq!(*it, k);
+                assert_eq!(r.to_bits(), s.history[k].to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn type_and_pc_accessors_track_settings() {
+        World::run(1, |mut c| {
+            let (mut a, b) = tridiag_system(24, 1.0, 1, &mut c);
+            let mut ksp = Ksp::create(&c);
+            assert_eq!(ksp.type_name(), "gmres");
+            assert_eq!(ksp.pc_type_name(), "jacobi");
+            ksp.set_type("fused").unwrap(); // alias
+            assert_eq!(ksp.type_name(), "fused");
+            assert_eq!(ksp.method_name(), "cg-fused");
+            ksp.set_pc("none");
+            assert_eq!(ksp.pc_type_name(), "none");
+            ksp.set_tolerances(1e-9, 1e-50, 1e5, 500);
+            assert_eq!(ksp.config().rtol, 1e-9);
+            assert_eq!(ksp.config().max_it, 500);
+            ksp.set_operators(&mut a);
+            let mut x = b.duplicate();
+            x.zero();
+            assert!(ksp.solve(&b, &mut x, &mut c).unwrap().converged());
+            // take_operators releases the borrow and invalidates setup
+            assert!(ksp.take_operators().is_some());
+            assert!(!ksp.is_set_up());
+            assert!(ksp.solve(&b, &mut x, &mut c).is_err());
+        });
+    }
+}

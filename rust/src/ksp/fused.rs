@@ -253,6 +253,71 @@ fn degenerate_serial(
     comm.size() == 1 && a.diag_block().ctx().nthreads() == 1 && can_fuse(a, pc, b, x, comm)
 }
 
+/// Will the multi-rank **hybrid** fused path actually run for this
+/// combination — [`can_fuse_hybrid`] minus the degenerate 1×1 case (which
+/// prefers the legacy, unfused-bitwise-identical fusion)? The single
+/// predicate behind [`solve`], [`solve_chebyshev`],
+/// [`solve_chebyshev_auto`] and `Ksp::set_up`'s bound-estimator choice,
+/// so the dispatch decision cannot drift between the free functions and
+/// the solver object.
+pub fn hybrid_path_active(
+    a: &MatMPIAIJ,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &VecMPI,
+    comm: &Comm,
+) -> bool {
+    can_fuse_hybrid(a, pc, b, x, comm) && !degenerate_serial(a, pc, b, x, comm)
+}
+
+/// Registry adapter for `-ksp_type cg-fused` / `fused` (see
+/// [`crate::ksp::context`]).
+pub struct CgFusedKsp;
+
+impl crate::ksp::context::KspImpl for CgFusedKsp {
+    fn name(&self) -> &'static str {
+        "cg-fused"
+    }
+
+    fn wants_hybrid(&self) -> bool {
+        true
+    }
+
+    fn solve(&self, args: crate::ksp::context::SolveArgs<'_>) -> Result<SolveStats> {
+        solve(args.a, args.pc, args.b, args.x, args.cfg, args.comm, args.log)
+    }
+}
+
+/// Registry adapter for `-ksp_type chebyshev-fused`: cached bounds from
+/// `Ksp::set_up` when present (estimated with the deterministic hybrid
+/// estimator whenever the hybrid path runs), the auto flow otherwise.
+pub struct ChebyshevFusedKsp;
+
+impl crate::ksp::context::KspImpl for ChebyshevFusedKsp {
+    fn name(&self) -> &'static str {
+        "chebyshev-fused"
+    }
+
+    fn wants_hybrid(&self) -> bool {
+        true
+    }
+
+    fn needs_bounds(&self) -> bool {
+        true
+    }
+
+    fn solve(&self, args: crate::ksp::context::SolveArgs<'_>) -> Result<SolveStats> {
+        match args.bounds {
+            Some((emin, emax)) => solve_chebyshev(
+                args.a, args.pc, args.b, args.x, emin, emax, args.cfg, args.comm, args.log,
+            ),
+            None => {
+                solve_chebyshev_auto(args.a, args.pc, args.b, args.x, args.cfg, args.comm, args.log)
+            }
+        }
+    }
+}
+
 /// Preconditioned CG with fused single-fork iterations.
 ///
 /// Dispatch: the multi-rank **hybrid** path when the operator carries a
@@ -272,7 +337,7 @@ pub fn solve(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    if can_fuse_hybrid(a, pc, b, x, comm) && !degenerate_serial(a, pc, b, x, comm) {
+    if hybrid_path_active(a, pc, b, x, comm) {
         log.begin("KSPSolve");
         let out = cg_hybrid_inner(a, pc, b, x, cfg, comm, log);
         log.end("KSPSolve");
@@ -958,12 +1023,11 @@ pub fn solve_chebyshev_auto(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    let (emin, emax) =
-        if can_fuse_hybrid(a, pc, b, x, comm) && !degenerate_serial(a, pc, b, x, comm) {
-            estimate_bounds_hybrid(a, pc, b, 20, comm, log)?
-        } else {
-            crate::ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?
-        };
+    let (emin, emax) = if hybrid_path_active(a, pc, b, x, comm) {
+        estimate_bounds_hybrid(a, pc, b, 20, comm, log)?
+    } else {
+        crate::ksp::chebyshev::estimate_bounds(a, pc, b, 20, comm, log)?
+    };
     solve_chebyshev(a, pc, b, x, emin, emax, cfg, comm, log)
 }
 
@@ -982,7 +1046,7 @@ pub fn solve_chebyshev(
     comm: &mut Comm,
     log: &EventLog,
 ) -> Result<SolveStats> {
-    if can_fuse_hybrid(a, pc, b, x, comm) && !degenerate_serial(a, pc, b, x, comm) {
+    if hybrid_path_active(a, pc, b, x, comm) {
         if !(emax > emin && emin > 0.0) {
             return Err(Error::InvalidOption(format!(
                 "Chebyshev needs 0 < emin < emax, got [{emin}, {emax}]"

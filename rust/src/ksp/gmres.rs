@@ -14,6 +14,19 @@ use crate::ksp::{
 use crate::pc::Precond;
 use crate::vec::mpi::VecMPI;
 
+/// Registry adapter for `-ksp_type gmres` (see [`crate::ksp::context`]).
+pub struct GmresKsp;
+
+impl crate::ksp::context::KspImpl for GmresKsp {
+    fn name(&self) -> &'static str {
+        "gmres"
+    }
+
+    fn solve(&self, args: crate::ksp::context::SolveArgs<'_>) -> Result<SolveStats> {
+        solve(args.a, args.pc, args.b, args.x, args.cfg, args.comm, args.log)
+    }
+}
+
 /// Solve `A x = b` with left-preconditioned GMRES(cfg.restart).
 pub fn solve(
     a: &mut dyn Operator,

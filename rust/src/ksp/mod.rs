@@ -11,6 +11,12 @@
 //! smoother the paper mentions). All log their events (`MatMult`,
 //! `PCApply`, `KSPSolve`, …) through [`crate::coordinator::EventLog`],
 //! which is where the paper's Figure 7/8/10/11 timings come from.
+//!
+//! Applications drive these through the PETSc-style solver object
+//! [`context::Ksp`] (create → set_operators → set_up → solve, with the
+//! expensive setup cached across repeated solves) and the [`KSP_NAMES`]
+//! registry; the per-module free functions remain the numerical kernels
+//! underneath.
 
 pub mod cg;
 pub mod gmres;
@@ -19,6 +25,9 @@ pub mod richardson;
 pub mod chebyshev;
 pub mod fused;
 pub mod block;
+pub mod context;
+
+pub use context::{from_name, Ksp, KspImpl, SolveArgs, KSP_NAMES, KSP_REGISTRY};
 
 use crate::comm::endpoint::Comm;
 use crate::coordinator::logging::EventLog;
@@ -82,6 +91,9 @@ pub struct KspConfig {
     pub max_it: usize,
     /// GMRES restart length.
     pub restart: usize,
+    /// Richardson damping factor ω (`-ksp_richardson_scale`). The runner
+    /// used to hardcode 1.0; the registry adapter reads this.
+    pub richardson_scale: f64,
     /// Record per-iteration residual norms.
     pub monitor: bool,
 }
@@ -94,6 +106,7 @@ impl Default for KspConfig {
             dtol: 1e5,
             max_it: 10_000,
             restart: 30,
+            richardson_scale: 1.0,
             monitor: false,
         }
     }

@@ -10,6 +10,31 @@ use crate::ksp::{
 use crate::pc::Precond;
 use crate::vec::mpi::VecMPI;
 
+/// Registry adapter for `-ksp_type richardson` (see
+/// [`crate::ksp::context`]). The damping factor comes from
+/// `cfg.richardson_scale` (`-ksp_richardson_scale`, default 1.0) — the
+/// pre-registry runner hardcoded `1.0` here.
+pub struct RichardsonKsp;
+
+impl crate::ksp::context::KspImpl for RichardsonKsp {
+    fn name(&self) -> &'static str {
+        "richardson"
+    }
+
+    fn solve(&self, args: crate::ksp::context::SolveArgs<'_>) -> Result<SolveStats> {
+        solve(
+            args.a,
+            args.pc,
+            args.b,
+            args.x,
+            args.cfg.richardson_scale,
+            args.cfg,
+            args.comm,
+            args.log,
+        )
+    }
+}
+
 /// Solve with damped preconditioned Richardson (`omega` = damping).
 pub fn solve(
     a: &mut dyn Operator,

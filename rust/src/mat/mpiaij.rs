@@ -306,6 +306,10 @@ pub struct MatMPIAIJ {
     hybrid_scratch_multi: Vec<f64>,
     /// Current width of `hybrid_scratch_multi` (0 until first use).
     multi_k: usize,
+    /// How many times a hybrid plan was actually constructed (idempotent
+    /// re-enables don't count). The `Ksp` repeated-solve contract asserts
+    /// this stays at 1 across cached solves.
+    hybrid_builds: u64,
 }
 
 impl MatMPIAIJ {
@@ -401,6 +405,7 @@ impl MatMPIAIJ {
             hybrid_scratch: Vec::new(),
             hybrid_scratch_multi: Vec::new(),
             multi_k: 0,
+            hybrid_builds: 0,
         })
     }
 
@@ -501,6 +506,7 @@ impl MatMPIAIJ {
         self.hybrid_scratch = vec![0.0; nsegs];
         self.hybrid_scratch_multi.clear();
         self.multi_k = 0;
+        self.hybrid_builds += 1;
         Ok(())
     }
 
@@ -541,6 +547,13 @@ impl MatMPIAIJ {
 
     pub fn hybrid_enabled(&self) -> bool {
         self.hybrid.is_some()
+    }
+
+    /// Times a hybrid plan was actually (re)built — the cached-setup
+    /// tests' "no plan rebuild" witness (idempotent
+    /// [`MatMPIAIJ::enable_hybrid`] calls don't increment it).
+    pub fn hybrid_build_count(&self) -> u64 {
+        self.hybrid_builds
     }
 
     /// Split-borrow everything the fused hybrid region needs in one call:

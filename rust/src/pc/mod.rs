@@ -241,6 +241,11 @@ pub const PC_NAMES: &[&str] = &[
 ];
 
 /// Build a preconditioner by options-database name.
+///
+/// Factorizations, colorings, level schedules and GAMG hierarchies all
+/// happen here — which is why [`crate::ksp::Ksp::set_up`] calls this once
+/// and caches the result across repeated solves instead of paying it per
+/// call.
 pub fn from_name(
     name: &str,
     a: &MatMPIAIJ,

@@ -1,0 +1,345 @@
+//! The `Ksp` object-lifecycle contract suite:
+//!
+//! - factory: every [`KSP_NAMES`] entry solves through a `Ksp`, and the
+//!   unknown-type error lists the whole table;
+//! - setup amortization: solve #2 on a reused `Ksp` performs **zero**
+//!   setup work — no plan rebuild, no new scatter ghost buffer, no PC
+//!   rebuild, no bound re-estimation — and is bitwise identical both to
+//!   solve #1 and to a from-scratch solve, across the 1×4 / 2×2 / 4×1
+//!   decompositions of G = 4;
+//! - invalidation: `set_operators` drops cached Chebyshev bounds;
+//! - `-ksp_richardson_scale` reaches the Richardson iteration;
+//! - the object path reproduces the free-function shim bitwise.
+
+use mmpetsc::comm::endpoint::Comm;
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::logging::EventLog;
+use mmpetsc::coordinator::runner::solve_by_name;
+use mmpetsc::ksp::{self, richardson, Ksp, KspConfig, KSP_NAMES};
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::pc::Precond;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
+use std::sync::Arc;
+
+/// SPD, strictly diagonally dominant tridiagonal system on the
+/// slot-aligned layout of this communicator, with a deterministic global
+/// RHS (same bits on every rank count × thread count decomposition).
+fn build_system(
+    n: usize,
+    threads: usize,
+    comm: &mut Comm,
+) -> (MatMPIAIJ, VecMPI, Layout, Arc<ThreadCtx>) {
+    let layout = Layout::slot_aligned(n, comm.size(), threads);
+    let (lo, hi) = layout.range(comm.rank());
+    let ctx = ThreadCtx::new(threads);
+    let mut es = Vec::new();
+    for i in lo..hi {
+        es.push((i, i, 4.0 + (i % 5) as f64 * 0.25));
+        if i > 0 {
+            es.push((i, i - 1, -1.0));
+        }
+        if i + 1 < n {
+            es.push((i, i + 1, -1.0));
+        }
+    }
+    let a = MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, comm, ctx.clone()).unwrap();
+    let bs: Vec<f64> = (lo..hi).map(|g| (g as f64 * 0.037).sin() + 0.5).collect();
+    let b = VecMPI::from_local_slice(layout.clone(), comm.rank(), &bs, ctx.clone()).unwrap();
+    (a, b, layout, ctx)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn pc_addr(p: &dyn Precond) -> usize {
+    p as *const dyn Precond as *const () as usize
+}
+
+#[test]
+fn factory_solves_every_registered_name_and_unknown_lists_table() {
+    World::run(1, |mut c| {
+        for &name in KSP_NAMES {
+            let (mut a, b, layout, ctx) = build_system(96, 2, &mut c);
+            let mut kspobj = Ksp::create(&c);
+            kspobj
+                .set_type(name)
+                .unwrap_or_else(|e| panic!("set_type({name}): {e}"));
+            kspobj.set_pc("jacobi");
+            kspobj.set_tolerances(1e-7, 1e-50, 1e7, 50_000);
+            kspobj.set_operators(&mut a);
+            let mut x = VecMPI::new(layout, c.rank(), ctx);
+            let stats = kspobj
+                .solve(&b, &mut x, &mut c)
+                .unwrap_or_else(|e| panic!("{name} errored: {e}"));
+            assert!(
+                stats.converged(),
+                "{name} × jacobi did not converge ({} its, residual {})",
+                stats.iterations,
+                stats.final_residual
+            );
+            assert_eq!(kspobj.setup_count(), 1, "{name}: solve must set up exactly once");
+        }
+        let err = ksp::from_name("not-a-method").unwrap_err().to_string();
+        for &name in KSP_NAMES {
+            assert!(err.contains(name), "error must list `{name}`: {err}");
+        }
+    });
+}
+
+/// One decomposition's run of the reuse contract; returns rank 0's
+/// (history bits, gathered solution bits) for the cross-decomposition
+/// comparison.
+fn reuse_contract_at(ranks: usize, threads: usize) -> (Vec<u64>, Vec<u64>) {
+    let n = 229; // not divisible by 4: uneven slots included
+    let outs = World::run(ranks, move |mut comm| {
+        let (mut a, b, layout, ctx) = build_system(n, threads, &mut comm);
+        let cfg = KspConfig {
+            rtol: 1e-8,
+            monitor: true,
+            ..Default::default()
+        };
+
+        let mut kspobj = Ksp::create(&comm);
+        kspobj.set_type("cg-fused").unwrap();
+        kspobj.set_pc("jacobi");
+        kspobj.set_config(cfg.clone());
+        kspobj.set_operators(&mut a);
+        kspobj.set_up(&mut comm).unwrap();
+
+        let builds_after_setup = kspobj.operator().unwrap().hybrid_build_count();
+        let pc1 = pc_addr(kspobj.pc().unwrap());
+
+        let mut x1 = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        let s1 = kspobj.solve(&b, &mut x1, &mut comm).unwrap();
+        assert!(s1.converged());
+        let (gptr1, glen1) = kspobj.operator().unwrap().scatter().ghost_raw();
+        let seg1 = kspobj
+            .operator()
+            .unwrap()
+            .hybrid_plan()
+            .map(|p| p.seg_ptr().as_ptr() as usize);
+
+        let mut x2 = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        let s2 = kspobj.solve(&b, &mut x2, &mut comm).unwrap();
+        assert!(s2.converged());
+
+        // --- zero setup work on solve #2 -------------------------------
+        assert_eq!(kspobj.setup_count(), 1, "solve #2 must not re-set-up");
+        assert_eq!(
+            kspobj.operator().unwrap().hybrid_build_count(),
+            builds_after_setup,
+            "solve #2 must not rebuild the hybrid plan"
+        );
+        assert_eq!(pc_addr(kspobj.pc().unwrap()), pc1, "solve #2 must keep the PC");
+        let (gptr2, glen2) = kspobj.operator().unwrap().scatter().ghost_raw();
+        assert_eq!(glen1, glen2);
+        if glen1 > 0 {
+            assert_eq!(
+                gptr1 as usize, gptr2 as usize,
+                "solve #2 must reuse the persistent ghost buffer"
+            );
+        }
+        let seg2 = kspobj
+            .operator()
+            .unwrap()
+            .hybrid_plan()
+            .map(|p| p.seg_ptr().as_ptr() as usize);
+        assert_eq!(seg1, seg2, "solve #2 must keep the plan's segment table");
+
+        // --- solve #2 ≡ solve #1 bitwise --------------------------------
+        assert_eq!(s1.iterations, s2.iterations);
+        assert_eq!(bits(&s1.history), bits(&s2.history), "reused-Ksp history drifted");
+        assert_eq!(
+            bits(x1.local().as_slice()),
+            bits(x2.local().as_slice()),
+            "reused-Ksp solution drifted"
+        );
+
+        // --- solve #2 ≡ a from-scratch solve bitwise --------------------
+        drop(kspobj);
+        let (mut a3, b3, layout3, ctx3) = build_system(n, threads, &mut comm);
+        let mut fresh = Ksp::create(&comm);
+        fresh.set_type("cg-fused").unwrap();
+        fresh.set_pc("jacobi");
+        fresh.set_config(cfg);
+        fresh.set_operators(&mut a3);
+        let mut x3 = VecMPI::new(layout3, comm.rank(), ctx3);
+        let s3 = fresh.solve(&b3, &mut x3, &mut comm).unwrap();
+        assert_eq!(bits(&s2.history), bits(&s3.history), "fresh solve history differs");
+        assert_eq!(
+            bits(x2.local().as_slice()),
+            bits(x3.local().as_slice()),
+            "fresh solve solution differs"
+        );
+
+        let xg = x2.gather_all(&mut comm).unwrap();
+        (bits(&s2.history), bits(&xg))
+    });
+    outs.into_iter().next().unwrap()
+}
+
+#[test]
+fn repeated_solve_is_bitwise_and_rebuilds_nothing_across_decompositions() {
+    let reference = reuse_contract_at(1, 4);
+    assert!(!reference.0.is_empty(), "monitor must record a history");
+    for (r, t) in [(2usize, 2usize), (4, 1)] {
+        let got = reuse_contract_at(r, t);
+        assert_eq!(got.0, reference.0, "{r}×{t} history differs from 1×4 (G = 4)");
+        assert_eq!(got.1, reference.1, "{r}×{t} solution differs from 1×4 (G = 4)");
+    }
+}
+
+#[test]
+fn chebyshev_reuse_skips_bound_estimation_but_matches_fresh_bitwise() {
+    World::run(2, |mut comm| {
+        let (mut a, b, layout, ctx) = build_system(120, 2, &mut comm);
+        let cfg = KspConfig {
+            rtol: 1e-7,
+            monitor: true,
+            ..Default::default()
+        };
+
+        let mut kspobj = Ksp::create(&comm);
+        kspobj.set_type("chebyshev-fused").unwrap();
+        kspobj.set_pc("jacobi");
+        kspobj.set_config(cfg.clone());
+        kspobj.set_operators(&mut a);
+        kspobj.set_up(&mut comm).unwrap();
+        let bounds = kspobj.bounds().expect("set_up must cache the interval");
+        let mm0 = kspobj.log().stats("MatMult").count;
+
+        let mut x1 = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        let s1 = kspobj.solve(&b, &mut x1, &mut comm).unwrap();
+        let mm1 = kspobj.log().stats("MatMult").count;
+        let mut x2 = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        let s2 = kspobj.solve(&b, &mut x2, &mut comm).unwrap();
+        let mm2 = kspobj.log().stats("MatMult").count;
+
+        assert!(s1.converged() && s2.converged());
+        assert_eq!(kspobj.bounds(), Some(bounds), "solve must keep cached bounds");
+        assert_eq!(
+            mm2 - mm1,
+            mm1 - mm0,
+            "solve #2 must do the same MatMult count as #1 — no re-estimation"
+        );
+        assert_eq!(bits(&s1.history), bits(&s2.history));
+
+        // From scratch (set_up + solve, fresh operator): identical bits —
+        // the cached interval is exactly what a fresh estimate computes.
+        drop(kspobj);
+        let (mut a2, b2, layout2, ctx2) = build_system(120, 2, &mut comm);
+        let mut fresh = Ksp::create(&comm);
+        fresh.set_type("chebyshev-fused").unwrap();
+        fresh.set_pc("jacobi");
+        fresh.set_config(cfg);
+        fresh.set_operators(&mut a2);
+        let mut x3 = VecMPI::new(layout2, comm.rank(), ctx2);
+        let s3 = fresh.solve(&b2, &mut x3, &mut comm).unwrap();
+        assert_eq!(fresh.bounds(), Some(bounds), "fresh estimate must agree");
+        assert_eq!(bits(&s1.history), bits(&s3.history));
+    });
+}
+
+#[test]
+fn richardson_scale_reaches_the_iteration() {
+    World::run(1, |mut comm| {
+        let (mut a, b, layout, ctx) = build_system(80, 2, &mut comm);
+        let cfg = KspConfig {
+            rtol: 1e-7,
+            max_it: 100_000,
+            monitor: true,
+            richardson_scale: 0.8,
+            ..Default::default()
+        };
+
+        let mut kspobj = Ksp::create(&comm);
+        kspobj.set_type("richardson").unwrap();
+        kspobj.set_pc("jacobi");
+        kspobj.set_config(cfg.clone());
+        kspobj.set_operators(&mut a);
+        let mut x = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        let via_ksp = kspobj.solve(&b, &mut x, &mut comm).unwrap();
+        assert!(via_ksp.converged());
+        drop(kspobj);
+
+        // the free function with the same ω reproduces it bitwise
+        let pc = mmpetsc::pc::from_name("jacobi", &a, &mut comm).unwrap();
+        let log = EventLog::new();
+        let mut xf = VecMPI::new(layout.clone(), comm.rank(), ctx.clone());
+        let direct =
+            richardson::solve(&mut a, pc.as_ref(), &b, &mut xf, 0.8, &cfg, &mut comm, &log)
+                .unwrap();
+        assert_eq!(bits(&via_ksp.history), bits(&direct.history));
+
+        // and a different ω genuinely changes the iteration
+        let mut cfg2 = cfg.clone();
+        cfg2.richardson_scale = 1.0;
+        let mut x2 = VecMPI::new(layout, comm.rank(), ctx);
+        let log2 = EventLog::new();
+        let other = solve_by_name(
+            "richardson",
+            &mut a,
+            pc.as_ref(),
+            &b,
+            &mut x2,
+            &cfg2,
+            &mut comm,
+            &log2,
+        )
+        .unwrap();
+        assert_ne!(
+            bits(&via_ksp.history),
+            bits(&other.history),
+            "ω = 0.8 and ω = 1.0 must differ"
+        );
+    });
+}
+
+#[test]
+fn object_path_reproduces_the_free_function_shim_bitwise() {
+    // The golden-suite equivalence, asserted directly: routing a solve
+    // through the Ksp object produces bit-for-bit the history the legacy
+    // shim produces, for both an unfused and a hybrid-fused method.
+    for ksp_name in ["cg", "cg-fused"] {
+        let outs = World::run(2, move |mut comm| {
+            let cfg = KspConfig {
+                rtol: 1e-8,
+                monitor: true,
+                ..Default::default()
+            };
+
+            let (mut a1, b1, layout1, ctx1) = build_system(144, 2, &mut comm);
+            let mut kspobj = Ksp::create(&comm);
+            kspobj.set_type(ksp_name).unwrap();
+            kspobj.set_pc("jacobi");
+            kspobj.set_config(cfg.clone());
+            kspobj.set_operators(&mut a1);
+            let mut x1 = VecMPI::new(layout1, comm.rank(), ctx1);
+            let via_obj = kspobj.solve(&b1, &mut x1, &mut comm).unwrap();
+            drop(kspobj);
+
+            let (mut a2, b2, layout2, ctx2) = build_system(144, 2, &mut comm);
+            let pc = mmpetsc::pc::from_name("jacobi", &a2, &mut comm).unwrap();
+            let log = EventLog::new();
+            let mut x2 = VecMPI::new(layout2, comm.rank(), ctx2);
+            let via_shim = solve_by_name(
+                ksp_name,
+                &mut a2,
+                pc.as_ref(),
+                &b2,
+                &mut x2,
+                &cfg,
+                &mut comm,
+                &log,
+            )
+            .unwrap();
+            assert!(via_obj.converged() && via_shim.converged());
+            (bits(&via_obj.history), bits(&via_shim.history))
+        });
+        for (obj, shim) in &outs {
+            assert_eq!(obj, shim, "{ksp_name}: object and shim histories differ");
+        }
+    }
+}
