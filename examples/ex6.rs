@@ -61,9 +61,18 @@ fn main() {
     let ranks = opts.usize_or("ranks", 1).unwrap();
     let ksp_type = opts.get_or("ksp_type", "gmres");
     let pc_type = opts.pc_name("jacobi");
+    // `-fault_spec` / `-fault_seed`: arm the deterministic fault layer
+    // (DESIGN.md §10) for chaos experiments through the options database.
+    let fault = opts
+        .fault_plan(ranks)
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        })
+        .map(std::sync::Arc::new);
     let opts_for_run = opts.clone();
 
-    let outputs = World::run(ranks, move |mut comm| {
+    let body = move |mut comm: mmpetsc::comm::endpoint::Comm| {
         let ctx = ThreadCtx::new(threads);
         // Every rank reads the file and keeps its row slice (simplest
         // parallel-IO stand-in; PETSc does a scattered read).
@@ -103,7 +112,11 @@ fn main() {
         ksp.set_up(&mut comm).expect("setup");
         let stats = ksp.solve(&b, &mut x, &mut comm).expect("solve");
         (stats, ksp.log().summary())
-    });
+    };
+    let outputs = match fault {
+        Some(plan) => World::run_with_fault(ranks, plan, body),
+        None => World::run(ranks, body),
+    };
 
     let (stats, summary) = &outputs[0];
     println!(

@@ -23,6 +23,23 @@ const T_ALLGATHER: Tag = RESERVED_TAG_BASE + 5;
 const T_SCAN: Tag = RESERVED_TAG_BASE + 6;
 
 impl Comm {
+    /// Enrich a timed-out collective error with dead-rank diagnostics:
+    /// after a timeout, probe every peer's channel and name the ones whose
+    /// endpoints are gone. Runs only on the error path, so the success
+    /// path is untouched.
+    fn diagnose_collective(&self, what: &str, err: Error) -> Error {
+        if let Error::Comm(msg) = &err {
+            let dead = self.dead_peers();
+            if !dead.is_empty() {
+                return Error::Comm(format!(
+                    "{what} on rank {}: dead rank(s) {dead:?} detected ({msg})",
+                    self.rank()
+                ));
+            }
+        }
+        err
+    }
+
     /// Synchronize all ranks (recursive-doubling dissemination barrier).
     pub fn barrier(&mut self) -> Result<()> {
         self.stats.barriers.fetch_add(1, Ordering::Relaxed);
@@ -179,7 +196,9 @@ impl Comm {
         contribution: Vec<[f64; K]>,
     ) -> Result<[f64; K]> {
         self.stats.reductions.fetch_add(1, Ordering::Relaxed);
-        let all = self.allgather(contribution)?;
+        let all = self
+            .allgather(contribution)
+            .map_err(|e| self.diagnose_collective("allreduce_sum_ordered", e))?;
         let mut acc = [0.0f64; K];
         for rank_parts in &all {
             for part in rank_parts {
@@ -221,7 +240,9 @@ impl Comm {
                 "allreduce_sum_ordered_vec: ragged partial widths".into(),
             ));
         }
-        let all = self.allgather(contribution)?;
+        let all = self
+            .allgather(contribution)
+            .map_err(|e| self.diagnose_collective("allreduce_sum_ordered_vec", e))?;
         let mut acc = vec![0.0f64; width];
         for rank_parts in &all {
             for part in rank_parts {

@@ -1,19 +1,28 @@
 //! The per-rank communicator: point-to-point send/recv with MPI matching
 //! semantics.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::comm::message::{wire_size, Envelope, Tag};
+use crate::comm::fault::{poison_payload, FaultKind, FaultOp, FaultPlan, SEND_BACKOFF, SEND_RETRIES};
+use crate::comm::message::{wire_size, Envelope, Tag, RESERVED_TAG_BASE};
 use crate::comm::stats::CommStats;
 use crate::error::{Error, Result};
 
 /// How long a blocking receive waits before declaring the job deadlocked.
 /// Generous enough for heavily oversubscribed CI hosts; small enough that a
-/// protocol bug fails a test instead of hanging it.
+/// protocol bug fails a test instead of hanging it. Armed fault plans
+/// substitute their own (much shorter) deadline.
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Tag for the liveness probe sent (only on error paths) to decide whether
+/// a silent peer is dead or merely slow. Probes are never received; alive
+/// peers buffer them in the unexpected-message queue, dead peers' closed
+/// channels reject them.
+pub const T_PROBE: Tag = RESERVED_TAG_BASE + 15;
 
 /// One rank's communicator endpoint.
 pub struct Comm {
@@ -27,6 +36,12 @@ pub struct Comm {
     pending: VecDeque<Envelope>,
     /// Shared counters.
     pub stats: Arc<CommStats>,
+    /// Armed fault schedule (None in production: one branch, no other cost).
+    fault: Option<Arc<FaultPlan>>,
+    /// Per-endpoint op counters for fault matching. `Cell` because `send`
+    /// takes `&self`; each endpoint is owned by exactly one rank thread.
+    fault_sends: Cell<u64>,
+    fault_recvs: Cell<u64>,
 }
 
 impl Comm {
@@ -52,7 +67,56 @@ impl Comm {
                 inbox,
                 pending: VecDeque::new(),
                 stats: Arc::new(CommStats::default()),
+                fault: None,
+                fault_sends: Cell::new(0),
+                fault_recvs: Cell::new(0),
             })
+            .collect()
+    }
+
+    /// Arm a fault schedule on this endpoint. Called by
+    /// [`crate::comm::world::World`] when the environment requests
+    /// injection, or directly by chaos tests.
+    pub fn arm_fault(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
+    }
+
+    /// The armed fault plan, if any (the chaos harness reports it).
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.fault.as_ref()
+    }
+
+    /// The receive deadline currently in force.
+    fn recv_deadline(&self) -> Duration {
+        match &self.fault {
+            Some(p) => p.recv_timeout,
+            None => RECV_TIMEOUT,
+        }
+    }
+
+    /// Probe whether `peer`'s endpoint still exists. Sends a tiny envelope
+    /// on [`T_PROBE`]; a closed channel (rank thread exited and dropped its
+    /// `Receiver`) rejects the send. Only called on error paths, so alive
+    /// peers accumulate at most a few stray probe envelopes in their
+    /// unexpected-message queues.
+    pub fn peer_alive(&self, peer: usize) -> bool {
+        if peer >= self.size {
+            return false;
+        }
+        self.peers[peer]
+            .send(Envelope {
+                src: self.rank,
+                tag: T_PROBE,
+                payload: Box::new(()),
+                bytes: 0,
+            })
+            .is_ok()
+    }
+
+    /// Name the dead peers (error-path diagnostics for collectives).
+    pub fn dead_peers(&self) -> Vec<usize> {
+        (0..self.size)
+            .filter(|&r| r != self.rank && !self.peer_alive(r))
             .collect()
     }
 
@@ -65,7 +129,10 @@ impl Comm {
     }
 
     /// Send `value` to `dest` with `tag`. Non-blocking (buffered channel),
-    /// like an `MPI_Isend` whose buffer is always large enough.
+    /// like an `MPI_Isend` whose buffer is always large enough. A closed
+    /// destination channel (rank thread gone) is retried with bounded
+    /// backoff — modelling a transient link — before reporting
+    /// `Error::Comm`.
     pub fn send<T: Send + 'static>(&self, dest: usize, tag: Tag, value: T) -> Result<()> {
         if dest >= self.size {
             return Err(Error::Comm(format!(
@@ -73,34 +140,117 @@ impl Comm {
                 self.size
             )));
         }
+        let mut value = value;
+        if let Some(plan) = &self.fault {
+            let n = self.fault_sends.get();
+            self.fault_sends.set(n + 1);
+            if plan.is_dead(self.rank) {
+                return Err(Error::Comm(format!(
+                    "fault: rank {} is dead, send suppressed",
+                    self.rank
+                )));
+            }
+            match plan.action(self.rank, FaultOp::Send, n) {
+                Some(FaultKind::Delay(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(FaultKind::Drop) => {
+                    // Message silently lost in flight; the receiver's
+                    // matching recv will time out.
+                    return Ok(());
+                }
+                Some(FaultKind::Nan) => {
+                    poison_payload(&mut value as &mut dyn std::any::Any);
+                }
+                Some(FaultKind::Kill) => {
+                    plan.mark_dead(self.rank);
+                    return Err(Error::Comm(format!(
+                        "fault: rank {} killed at send #{n}",
+                        self.rank
+                    )));
+                }
+                None => {}
+            }
+        }
         let bytes = wire_size(&value);
-        self.peers[dest]
-            .send(Envelope {
-                src: self.rank,
-                tag,
-                payload: Box::new(value),
-                bytes,
-            })
-            .map_err(|_| Error::Comm(format!("rank {dest} is gone")))?;
+        let mut env = Envelope {
+            src: self.rank,
+            tag,
+            payload: Box::new(value),
+            bytes,
+        };
+        let mut attempt = 0usize;
+        loop {
+            match self.peers[dest].send(env) {
+                Ok(()) => break,
+                Err(e) => {
+                    if attempt >= SEND_RETRIES {
+                        return Err(Error::Comm(format!(
+                            "rank {dest} is gone (after {attempt} resend attempts)"
+                        )));
+                    }
+                    env = e.0;
+                    std::thread::sleep(SEND_BACKOFF * (1u32 << attempt.min(8)));
+                    attempt += 1;
+                }
+            }
+        }
         self.stats.record_send(bytes);
         Ok(())
     }
 
     /// Blocking receive of a `T` from `src` with `tag`. Matches MPI
     /// semantics: messages from the same (src, tag) arrive in send order;
-    /// non-matching arrivals are queued.
+    /// non-matching arrivals are queued. Times out (fast when a fault plan
+    /// is armed) with `Error::Comm` rather than hanging.
     pub fn recv<T: Send + 'static>(&mut self, src: usize, tag: Tag) -> Result<T> {
+        // Fault hook: a recv-side fault can delay this receive, eat the
+        // first matching envelope, poison it, or kill the rank outright.
+        let mut eat_next = false;
+        let mut poison_next = false;
+        if let Some(plan) = self.fault.clone() {
+            let n = self.fault_recvs.get();
+            self.fault_recvs.set(n + 1);
+            if plan.is_dead(self.rank) {
+                return Err(Error::Comm(format!(
+                    "fault: rank {} is dead, recv suppressed",
+                    self.rank
+                )));
+            }
+            match plan.action(self.rank, FaultOp::Recv, n) {
+                Some(FaultKind::Delay(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(FaultKind::Drop) => eat_next = true,
+                Some(FaultKind::Nan) => poison_next = true,
+                Some(FaultKind::Kill) => {
+                    plan.mark_dead(self.rank);
+                    return Err(Error::Comm(format!(
+                        "fault: rank {} killed at recv #{n}",
+                        self.rank
+                    )));
+                }
+                None => {}
+            }
+        }
         // 1. Unexpected-message queue.
-        if let Some(pos) = self
+        while let Some(pos) = self
             .pending
             .iter()
             .position(|e| e.src == src && e.tag == tag)
         {
-            let env = self.pending.remove(pos).unwrap();
+            let mut env = self.pending.remove(pos).unwrap();
+            if eat_next {
+                eat_next = false;
+                continue;
+            }
+            if poison_next {
+                poison_payload(env.payload.as_mut());
+            }
             return self.unpack(env);
         }
         // 2. Drain the inbox until a match.
-        let deadline = std::time::Instant::now() + RECV_TIMEOUT;
+        let deadline = std::time::Instant::now() + self.recv_deadline();
         loop {
             let remaining = deadline
                 .checked_duration_since(std::time::Instant::now())
@@ -117,6 +267,14 @@ impl Comm {
                 ))
             })?;
             if env.src == src && env.tag == tag {
+                if eat_next {
+                    eat_next = false;
+                    continue;
+                }
+                let mut env = env;
+                if poison_next {
+                    poison_payload(env.payload.as_mut());
+                }
                 return self.unpack(env);
             }
             self.pending.push_back(env);

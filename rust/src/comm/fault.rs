@@ -1,0 +1,387 @@
+//! Deterministic, seedable fault injection for the simulated-MPI layer.
+//!
+//! A [`FaultPlan`] describes *which* point-to-point operations misbehave —
+//! matched on (rank, op kind, nth occurrence) — and *how*: delay the op,
+//! silently drop the message, corrupt its floating-point payload to NaN,
+//! or kill the rank (every subsequent comm op on that rank fails). Plans
+//! come from an explicit spec string (`-fault_spec` / `MMPETSC_FAULT_SPEC`)
+//! or are derived deterministically from a seed (`MMPETSC_FAULT_SEED`) via
+//! [`crate::util::rng::XorShift64`], so a CI sweep over seeds explores the
+//! fault space reproducibly: same seed + same decomposition ⇒ the same
+//! fault fires at the same message.
+//!
+//! The layer is zero-cost when no plan is armed: `Comm::send`/`recv` test
+//! a single `Option` and fall through to the exact pre-fault code path, so
+//! unfaulted runs stay bitwise identical to the goldens (DESIGN.md §10).
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::rng::XorShift64;
+
+/// Receive timeout while a plan is armed: faulted runs must *fail fast*
+/// (a dropped message surfaces as `Error::Comm` in seconds, not the
+/// 60 s debugging timeout of `endpoint::RECV_TIMEOUT`).
+pub const FAULT_RECV_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Bounded resend attempts when a peer's channel is down (models a
+/// transient link failure; a dead rank stays dead and exhausts these).
+pub const SEND_RETRIES: usize = 3;
+
+/// Base backoff between resend attempts; doubles per attempt.
+pub const SEND_BACKOFF: Duration = Duration::from_millis(5);
+
+/// What a matched fault does to the operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Sleep this many milliseconds, then perform the op normally.
+    Delay(u64),
+    /// Sender discards the message; the receiver's matching `recv` times
+    /// out (or, matched on a recv, the first matching envelope is eaten).
+    Drop,
+    /// Overwrite every floating-point number in the payload with NaN.
+    Nan,
+    /// The rank dies: this op and every later comm op return `Error::Comm`.
+    Kill,
+}
+
+/// Which side of the point-to-point layer the fault matches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    Send,
+    Recv,
+}
+
+/// One injection point: fire `kind` on the `nth` `op` performed by `rank`
+/// (`rank: None` matches any rank; counters are per-rank, so `*` fires
+/// once on *each* rank's nth op).
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub rank: Option<usize>,
+    pub op: FaultOp,
+    pub nth: u64,
+}
+
+/// A deterministic fault schedule, shared (via `Arc`) by every endpoint of
+/// a world. Interior mutability only for the dead-rank set, which is
+/// touched exclusively on fault paths.
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    /// Receive deadline while this plan is armed.
+    pub recv_timeout: Duration,
+    dead: Mutex<HashSet<usize>>,
+}
+
+impl FaultPlan {
+    /// A plan with an explicit fault list and the fail-fast timeout.
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan {
+            faults,
+            recv_timeout: FAULT_RECV_TIMEOUT,
+            dead: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// Parse a spec string: `kind:rank:op:nth[:ms]` joined by `;`.
+    /// `kind` ∈ {delay, drop, nan, kill}; `rank` is a number or `*`;
+    /// `op` ∈ {send, recv}; `nth` is the 0-based op index; `ms` is the
+    /// delay length (delay faults only, default 50).
+    ///
+    /// Example: `nan:1:send:8` — rank 1's 9th send is NaN-poisoned.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 4 {
+                return Err(Error::InvalidOption(format!(
+                    "fault spec '{part}': want kind:rank:op:nth[:ms]"
+                )));
+            }
+            let rank = if fields[1] == "*" {
+                None
+            } else {
+                Some(fields[1].parse::<usize>().map_err(|_| {
+                    Error::InvalidOption(format!("fault spec '{part}': bad rank"))
+                })?)
+            };
+            let op = match fields[2] {
+                "send" => FaultOp::Send,
+                "recv" => FaultOp::Recv,
+                other => {
+                    return Err(Error::InvalidOption(format!(
+                        "fault spec '{part}': unknown op '{other}'"
+                    )))
+                }
+            };
+            let nth = fields[3].parse::<u64>().map_err(|_| {
+                Error::InvalidOption(format!("fault spec '{part}': bad nth"))
+            })?;
+            let kind = match fields[0] {
+                "delay" => {
+                    let ms = match fields.get(4) {
+                        Some(s) => s.parse::<u64>().map_err(|_| {
+                            Error::InvalidOption(format!("fault spec '{part}': bad ms"))
+                        })?,
+                        None => 50,
+                    };
+                    FaultKind::Delay(ms)
+                }
+                "drop" => FaultKind::Drop,
+                "nan" => FaultKind::Nan,
+                "kill" => FaultKind::Kill,
+                other => {
+                    return Err(Error::InvalidOption(format!(
+                        "fault spec '{part}': unknown kind '{other}'"
+                    )))
+                }
+            };
+            faults.push(Fault { kind, rank, op, nth });
+        }
+        if faults.is_empty() {
+            return Err(Error::InvalidOption("empty fault spec".into()));
+        }
+        Ok(FaultPlan::new(faults))
+    }
+
+    /// Derive one fault deterministically from a seed: kind, victim rank,
+    /// op side, and op index all come from the seed's XorShift64 stream,
+    /// so a seed sweep walks the fault space without any spec authoring.
+    pub fn from_seed(seed: u64, size: usize) -> FaultPlan {
+        let mut rng = XorShift64::new(seed);
+        let kind = match rng.below(4) {
+            0 => FaultKind::Delay(10 + rng.below(190) as u64),
+            1 => FaultKind::Drop,
+            2 => FaultKind::Nan,
+            _ => FaultKind::Kill,
+        };
+        let rank = Some(rng.below(size.max(1)));
+        let op = if rng.below(2) == 0 {
+            FaultOp::Send
+        } else {
+            FaultOp::Recv
+        };
+        let nth = rng.below(24) as u64;
+        FaultPlan::new(vec![Fault { kind, rank, op, nth }])
+    }
+
+    /// Read `MMPETSC_FAULT_SPEC` (a spec string) or `MMPETSC_FAULT_SEED`
+    /// (a u64) from the environment. `None` when neither is set; invalid
+    /// values are reported, not ignored.
+    pub fn from_env(size: usize) -> Result<Option<FaultPlan>> {
+        if let Ok(spec) = std::env::var("MMPETSC_FAULT_SPEC") {
+            if !spec.trim().is_empty() {
+                return Ok(Some(FaultPlan::parse(&spec)?));
+            }
+        }
+        if let Ok(seed) = std::env::var("MMPETSC_FAULT_SEED") {
+            if !seed.trim().is_empty() {
+                let s = seed.trim().parse::<u64>().map_err(|_| {
+                    Error::InvalidOption(format!("MMPETSC_FAULT_SEED '{seed}': not a u64"))
+                })?;
+                return Ok(Some(FaultPlan::from_seed(s, size)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Which fault (if any) fires for `rank`'s `counter`-th `op`.
+    pub fn action(&self, rank: usize, op: FaultOp, counter: u64) -> Option<FaultKind> {
+        self.faults
+            .iter()
+            .find(|f| f.op == op && f.nth == counter && (f.rank.is_none() || f.rank == Some(rank)))
+            .map(|f| f.kind)
+    }
+
+    /// Record `rank` as killed; all of its later comm ops fail.
+    pub fn mark_dead(&self, rank: usize) {
+        self.dead.lock().unwrap_or_else(|e| e.into_inner()).insert(rank);
+    }
+
+    /// Has `rank` been killed by this plan?
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .contains(&rank)
+    }
+
+    /// Human-readable one-line description (chaos-harness output).
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .faults
+            .iter()
+            .map(|f| {
+                let kind = match f.kind {
+                    FaultKind::Delay(ms) => format!("delay({ms}ms)"),
+                    FaultKind::Drop => "drop".into(),
+                    FaultKind::Nan => "nan".into(),
+                    FaultKind::Kill => "kill".into(),
+                };
+                let rank = match f.rank {
+                    Some(r) => r.to_string(),
+                    None => "*".into(),
+                };
+                let op = match f.op {
+                    FaultOp::Send => "send",
+                    FaultOp::Recv => "recv",
+                };
+                format!("{kind}@rank{rank}.{op}#{}", f.nth)
+            })
+            .collect();
+        parts.join(";")
+    }
+}
+
+/// Overwrite every f64 in a type-erased payload with NaN. Returns `false`
+/// for payload types that carry no floating-point data (plan/index
+/// messages, barrier tokens) — those pass through unchanged. Covers the
+/// concrete types the library actually sends: ghost-scatter packs
+/// (`Vec<f64>`), ordered-allreduce ring blocks (`(usize, Vec<[f64; K]>)`
+/// for the fused K and `(usize, Vec<Vec<f64>>)` for the batch engine),
+/// reduce/bcast scalars, and assembly stashes.
+pub fn poison_payload(any: &mut dyn std::any::Any) -> bool {
+    if let Some(v) = any.downcast_mut::<f64>() {
+        *v = f64::NAN;
+        true
+    } else if let Some(v) = any.downcast_mut::<Vec<f64>>() {
+        for x in v.iter_mut() {
+            *x = f64::NAN;
+        }
+        true
+    } else if let Some(v) = any.downcast_mut::<Vec<Vec<f64>>>() {
+        for row in v.iter_mut() {
+            for x in row.iter_mut() {
+                *x = f64::NAN;
+            }
+        }
+        true
+    } else if let Some((_, v)) = any.downcast_mut::<(usize, Vec<f64>)>() {
+        for x in v.iter_mut() {
+            *x = f64::NAN;
+        }
+        true
+    } else if let Some((_, v)) = any.downcast_mut::<(usize, Vec<Vec<f64>>)>() {
+        for row in v.iter_mut() {
+            for x in row.iter_mut() {
+                *x = f64::NAN;
+            }
+        }
+        true
+    } else if let Some((_, v)) = any.downcast_mut::<(usize, Vec<[f64; 1]>)>() {
+        for a in v.iter_mut() {
+            a[0] = f64::NAN;
+        }
+        true
+    } else if let Some((_, v)) = any.downcast_mut::<(usize, Vec<[f64; 2]>)>() {
+        for a in v.iter_mut() {
+            for x in a.iter_mut() {
+                *x = f64::NAN;
+            }
+        }
+        true
+    } else if let Some((_, v)) = any.downcast_mut::<(usize, Vec<[f64; 3]>)>() {
+        for a in v.iter_mut() {
+            for x in a.iter_mut() {
+                *x = f64::NAN;
+            }
+        }
+        true
+    } else if let Some(v) = any.downcast_mut::<Vec<(usize, usize, f64)>>() {
+        for (_, _, x) in v.iter_mut() {
+            *x = f64::NAN;
+        }
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = FaultPlan::parse("nan:1:send:8;delay:*:recv:3:120").unwrap();
+        assert_eq!(p.faults.len(), 2);
+        assert_eq!(p.action(1, FaultOp::Send, 8), Some(FaultKind::Nan));
+        assert_eq!(p.action(0, FaultOp::Send, 8), None);
+        // wildcard rank matches everyone
+        assert_eq!(p.action(7, FaultOp::Recv, 3), Some(FaultKind::Delay(120)));
+        assert_eq!(p.describe(), "nan@rank1.send#8;delay(120ms)@rank*.recv#3");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("nan:1:send").is_err());
+        assert!(FaultPlan::parse("frob:1:send:0").is_err());
+        assert!(FaultPlan::parse("nan:x:send:0").is_err());
+        assert!(FaultPlan::parse("nan:0:sideways:0").is_err());
+    }
+
+    #[test]
+    fn seed_is_deterministic_and_in_range() {
+        for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+            let a = FaultPlan::from_seed(seed, 4);
+            let b = FaultPlan::from_seed(seed, 4);
+            assert_eq!(a.describe(), b.describe(), "seed {seed} not stable");
+            let f = &a.faults[0];
+            assert!(f.rank.unwrap() < 4);
+            assert!(f.nth < 24);
+        }
+        // different seeds explore different points (statistically certain
+        // for these four)
+        let d: HashSet<String> = [1u64, 2, 3, 4]
+            .iter()
+            .map(|s| FaultPlan::from_seed(*s, 4).describe())
+            .collect();
+        assert!(d.len() > 1);
+    }
+
+    #[test]
+    fn dead_set_tracks_kills() {
+        let p = FaultPlan::new(vec![Fault {
+            kind: FaultKind::Kill,
+            rank: Some(2),
+            op: FaultOp::Send,
+            nth: 0,
+        }]);
+        assert!(!p.is_dead(2));
+        p.mark_dead(2);
+        assert!(p.is_dead(2));
+        assert!(!p.is_dead(0));
+    }
+
+    #[test]
+    fn poison_covers_solver_payloads() {
+        let mut scalar = 1.5f64;
+        assert!(poison_payload(&mut scalar));
+        assert!(scalar.is_nan());
+
+        let mut pack = vec![1.0f64, 2.0];
+        assert!(poison_payload(&mut pack));
+        assert!(pack.iter().all(|x| x.is_nan()));
+
+        let mut ring = (3usize, vec![[1.0f64, 2.0]]);
+        assert!(poison_payload(&mut ring));
+        assert_eq!(ring.0, 3);
+        assert!(ring.1[0].iter().all(|x| x.is_nan()));
+
+        let mut batch = (0usize, vec![vec![1.0f64]]);
+        assert!(poison_payload(&mut batch));
+        assert!(batch.1[0][0].is_nan());
+
+        // index-only payloads pass through untouched
+        let mut plan = vec![1usize, 2, 3];
+        assert!(!poison_payload(&mut plan));
+        assert_eq!(plan, vec![1, 2, 3]);
+    }
+}

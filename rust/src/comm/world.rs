@@ -1,6 +1,9 @@
 //! SPMD world launcher: spawn `size` ranks as OS threads.
 
+use std::sync::Arc;
+
 use crate::comm::endpoint::Comm;
+use crate::comm::fault::FaultPlan;
 use crate::comm::stats::CommStatsSnapshot;
 
 /// The SPMD launcher.
@@ -9,12 +12,42 @@ pub struct World;
 impl World {
     /// Run `f(comm)` on `size` ranks (threads) and collect each rank's
     /// return value, ordered by rank. Panics in any rank propagate.
+    ///
+    /// If `MMPETSC_FAULT_SPEC` or `MMPETSC_FAULT_SEED` is set, the derived
+    /// [`FaultPlan`] is armed on every endpoint before launch (the chaos
+    /// harness and the CI fault matrix use this path); otherwise the fault
+    /// layer stays a disarmed `None` and costs one branch per comm op.
     pub fn run<T, F>(size: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
         F: Fn(Comm) -> T + Send + Sync + 'static,
     {
         Self::run_with_stats(size, f).0
+    }
+
+    /// As [`World::run`] but with an explicit fault plan, bypassing the
+    /// environment — tests use this so parallel test threads don't race on
+    /// process-global env vars.
+    pub fn run_with_fault<T, F>(size: usize, plan: Arc<FaultPlan>, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Comm) -> T + Send + Sync + 'static,
+    {
+        Self::launch(size, Some(plan), f).0
+    }
+
+    /// As [`World::run_with_fault`], additionally returning each rank's
+    /// communication counters (the chaos harness routes real runs here).
+    pub fn run_with_fault_stats<T, F>(
+        size: usize,
+        plan: Arc<FaultPlan>,
+        f: F,
+    ) -> (Vec<T>, Vec<CommStatsSnapshot>)
+    where
+        T: Send + 'static,
+        F: Fn(Comm) -> T + Send + Sync + 'static,
+    {
+        Self::launch(size, Some(plan), f)
     }
 
     /// As [`World::run`], additionally returning each rank's communication
@@ -24,8 +57,29 @@ impl World {
         T: Send + 'static,
         F: Fn(Comm) -> T + Send + Sync + 'static,
     {
+        let plan = match FaultPlan::from_env(size) {
+            Ok(p) => p.map(Arc::new),
+            Err(e) => panic!("invalid fault environment: {e}"),
+        };
+        Self::launch(size, plan, f)
+    }
+
+    fn launch<T, F>(
+        size: usize,
+        plan: Option<Arc<FaultPlan>>,
+        f: F,
+    ) -> (Vec<T>, Vec<CommStatsSnapshot>)
+    where
+        T: Send + 'static,
+        F: Fn(Comm) -> T + Send + Sync + 'static,
+    {
         assert!(size >= 1, "world needs at least one rank");
-        let comms = Comm::create_all(size);
+        let mut comms = Comm::create_all(size);
+        if let Some(plan) = plan {
+            for c in comms.iter_mut() {
+                c.arm_fault(Arc::clone(&plan));
+            }
+        }
         let f = std::sync::Arc::new(f);
         let mut handles = Vec::with_capacity(size);
         for comm in comms {

@@ -25,7 +25,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::comm::world::World;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::ksp::context::Ksp;
 use crate::ksp::KspConfig;
 use crate::matgen::cases::{generate_rows, TestCase};
@@ -256,11 +256,16 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
                 }
             }
             let wall = t0.elapsed().as_secs_f64();
+            let mut served = Vec::with_capacity(outcomes.len());
+            for (req, o) in outcomes.into_iter().enumerate() {
+                served.push(o.ok_or_else(|| {
+                    Error::Runtime(format!(
+                        "batch scheduler: request {req} was never served by any batch"
+                    ))
+                })?);
+            }
             Ok(RankOut {
-                outcomes: outcomes
-                    .into_iter()
-                    .map(|o| o.expect("every request served by exactly one batch"))
-                    .collect(),
+                outcomes: served,
                 wall,
                 rows: n,
                 spmm_traversals,
@@ -289,7 +294,8 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
             });
         }
     }
-    let mut report = report.expect("at least one rank");
+    let mut report =
+        report.ok_or_else(|| Error::Comm("batch run produced no rank outcomes".into()))?;
     report.wall_seconds = wall;
     report.solves_per_sec = cfg.requests.len() as f64 / wall.max(1e-12);
     Ok(report)

@@ -109,7 +109,25 @@ impl Options {
             restart: self.usize_or("ksp_gmres_restart", d.restart)?,
             richardson_scale: self.f64_or("ksp_richardson_scale", d.richardson_scale)?,
             monitor: self.flag("ksp_monitor"),
+            max_restarts: self.usize_or("ksp_max_restarts", d.max_restarts)?,
         })
+    }
+
+    /// Extract a [`crate::comm::fault::FaultPlan`] from `-fault_spec` /
+    /// `-fault_seed` (command-line mirrors of `MMPETSC_FAULT_SPEC` /
+    /// `MMPETSC_FAULT_SEED`). Returns `None` when neither is given — the
+    /// fault layer then compiles down to a single untaken branch per op.
+    pub fn fault_plan(&self, size: usize) -> Result<Option<crate::comm::fault::FaultPlan>> {
+        if let Some(spec) = self.get("fault_spec") {
+            return Ok(Some(crate::comm::fault::FaultPlan::parse(spec)?));
+        }
+        if let Some(seed) = self.get("fault_seed") {
+            let seed: u64 = seed.parse().map_err(|_| {
+                Error::InvalidOption(format!("-fault_seed: `{seed}` is not an integer"))
+            })?;
+            return Ok(Some(crate::comm::fault::FaultPlan::from_seed(seed, size)));
+        }
+        Ok(None)
     }
 }
 

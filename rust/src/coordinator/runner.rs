@@ -6,6 +6,8 @@
 
 use std::sync::Arc;
 
+use crate::comm::endpoint::Comm;
+use crate::comm::fault::FaultPlan;
 use crate::comm::stats::CommStatsSnapshot;
 use crate::comm::world::World;
 use crate::coordinator::logging::EventLog;
@@ -38,6 +40,11 @@ pub struct HybridConfig {
     pub policy: AffinityPolicy,
     /// Pin host threads (useful on a real multi-core host; harmless off).
     pub pin: bool,
+    /// Armed fault plan (chaos harness / fault-matrix tests). `None` — the
+    /// default — keeps the fault layer on its zero-cost disarmed path.
+    /// Bypasses the `MMPETSC_FAULT_*` environment, so concurrent runs in
+    /// one process don't race on process-global state.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl HybridConfig {
@@ -55,6 +62,7 @@ impl HybridConfig {
             node: crate::topology::presets::hector_xe6_node(),
             policy: AffinityPolicy::UmaPerRank,
             pin: false,
+            fault: None,
         }
     }
 }
@@ -63,6 +71,10 @@ impl HybridConfig {
 #[derive(Debug, Clone)]
 pub struct HybridReport {
     pub converged: bool,
+    /// Rank 0's typed convergence reason. The chaos harness prints this:
+    /// a faulted run must end in a *typed* reason (or a typed `Error`),
+    /// never a hang or a silent wrong answer.
+    pub reason: Option<ksp::ConvergedReason>,
     pub iterations: usize,
     pub final_residual: f64,
     /// Max across ranks of the KSPSolve wall time (the paper's metric).
@@ -143,9 +155,11 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
     let cfg = Arc::new(cfg.clone());
     let placement = Arc::new(placement);
 
+    let nranks = cfg.ranks.max(1);
+    let fault = cfg.fault.clone();
     let (outcomes, comm_stats): (Vec<Result<RankOutcome>>, Vec<CommStatsSnapshot>) = {
         let cfg = Arc::clone(&cfg);
-        World::run_with_stats(cfg.ranks.max(1), move |mut comm| -> Result<RankOutcome> {
+        let body = move |mut comm: Comm| -> Result<RankOutcome> {
             let rank = comm.rank();
             let ctx = if cfg.pin {
                 ThreadCtx::pinned(&cfg.node, &placement.cores[rank])
@@ -235,11 +249,16 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
                 forks,
                 stats,
             })
-        })
+        };
+        match fault {
+            Some(plan) => World::run_with_fault_stats(nranks, plan, body),
+            None => World::run_with_stats(nranks, body),
+        }
     };
 
     let mut report = HybridReport {
         converged: true,
+        reason: None,
         iterations: 0,
         final_residual: 0.0,
         ksp_time: 0.0,
@@ -275,6 +294,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
         report.forks = report.forks.max(o.forks);
         if r == 0 {
             report.history = o.stats.history.clone();
+            report.reason = Some(o.stats.reason);
         }
     }
     for s in comm_stats {

@@ -52,6 +52,11 @@ fn solve_inner(
 ) -> Result<SolveStats> {
     let bnorm = norm2(b, comm, log)?;
     let mut history = Vec::new();
+    if bnorm == 0.0 {
+        // x = 0 solves A x = 0 exactly; skip the dtol-vs-zero comparison.
+        x.zero();
+        return Ok(done(ConvergedReason::ConvergedAtol, 0, bnorm, 0.0, history));
+    }
 
     // r = b − A x
     let mut r = b.duplicate();
@@ -155,6 +160,7 @@ fn done(
         b_norm,
         final_residual,
         history,
+        attempts: 1,
     }
 }
 

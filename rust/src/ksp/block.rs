@@ -48,6 +48,7 @@ use std::sync::Arc;
 use crate::comm::endpoint::Comm;
 use crate::coordinator::logging::EventLog;
 use crate::error::{Error, Result};
+use crate::ksp::fused::region_try;
 use crate::ksp::{check_convergence, ConvergedReason, KspConfig, SolveStats};
 use crate::mat::mpiaij::{HybridPlan, MatMPIAIJ};
 use crate::pc::{FusedPc, Precond};
@@ -280,6 +281,17 @@ fn solve_percol(
     Ok(BlockStats { cols, fused: false })
 }
 
+/// Classify a failed p·Ap curvature test for one column: a finite value
+/// ≤ 0 means the operator is indefinite along p; NaN/±Inf means corruption
+/// (e.g. a poisoned RHS) reached the fold and the column is quarantined.
+fn quarantine_reason(pw: f64) -> ConvergedReason {
+    if pw.is_finite() {
+        ConvergedReason::DivergedIndefiniteMat
+    } else {
+        ConvergedReason::DivergedNanOrInf
+    }
+}
+
 /// Shared masked-iteration bookkeeping: which columns still iterate, and
 /// the per-column outcome once frozen.
 struct Mask {
@@ -430,10 +442,11 @@ fn solve_ref_inner(
             if !mask.active[c] {
                 continue;
             }
-            if pw[c] <= 0.0 {
-                // This column's operator is not SPD along p: freeze it with
-                // the solo solver's verdict; the batch keeps the rest.
-                mask.freeze(c, ConvergedReason::DivergedBreakdown, it);
+            if !(pw[c] > 0.0) {
+                // This column's p·Ap is ≤ 0 (not SPD along p) or non-finite
+                // (corruption reached the fold): freeze it with the solo
+                // solver's verdict; the batch keeps the rest.
+                mask.freeze(c, quarantine_reason(pw[c]), it);
             } else {
                 alphas[c] = rz[c] / pw[c];
             }
@@ -607,15 +620,18 @@ fn solve_fused_inner(
         // ghost sends for P in the entry hook, the diagonal slot partials
         // hide the exchange, and every phase loops the *live* columns.
         log.timed("KSPFusedIterBatch", iter_flops, || {
-            pool.run_posted(
+            pool.run_posted_caught(
                 || {
                     // SAFETY: master thread only; sequenced before its own
                     // region body.
                     let comm = unsafe { &mut *comm_raw.0 };
                     let sc = unsafe { &mut *scatter_raw.0 };
                     let ps = unsafe { ref_slice(&p_raw, 0, n * k) };
-                    sc.begin_local_multi(ps, k, comm)
-                        .expect("fused block CG: scatter begin");
+                    region_try(
+                        &barrier,
+                        "fused block CG: scatter begin",
+                        sc.begin_local_multi(ps, k, comm),
+                    );
                     sc.mark_compute_start();
                 },
                 |tid| {
@@ -638,7 +654,7 @@ fn solve_fused_inner(
                         // SAFETY: master-only.
                         let comm = unsafe { &mut *comm_raw.0 };
                         let sc = unsafe { &mut *scatter_raw.0 };
-                        sc.end_multi(comm).expect("fused block CG: scatter end");
+                        region_try(&barrier, "fused block CG: scatter end", sc.end_multi(comm));
                     }
                     barrier.wait(&mut ws);
                     // -- 2. ghost partials + ascending-slot fold → W = A·P.
@@ -677,9 +693,11 @@ fn solve_fused_inner(
                         let parts: Vec<Vec<f64>> = (0..t)
                             .map(|ts| (0..k).map(|c| pw_slots.get(ts * k + c)).collect())
                             .collect();
-                        let pw = comm
-                            .allreduce_sum_ordered_vec(parts)
-                            .expect("fused block CG: pw allreduce");
+                        let pw = region_try(
+                            &barrier,
+                            "fused block CG: pw allreduce",
+                            comm.allreduce_sum_ordered_vec(parts),
+                        );
                         for (c, v) in pw.iter().enumerate() {
                             shared.set(c, *v);
                         }
@@ -691,7 +709,9 @@ fn solve_fused_inner(
                     //    the identical pw and skips them together (the
                     //    master freezes them after the join).
                     for (c, &on) in act.iter().enumerate() {
-                        if !on || shared.get(c) <= 0.0 {
+                        if !on || !(shared.get(c) > 0.0) {
+                            // Broken-down or NaN-poisoned columns are
+                            // skipped without touching x — quarantine.
                             rr_slots.set(tid * k + c, 0.0);
                             rz_slots.set(tid * k + c, 0.0);
                             continue;
@@ -731,9 +751,11 @@ fn solve_fused_inner(
                                 row
                             })
                             .collect();
-                        let s = comm
-                            .allreduce_sum_ordered_vec(parts)
-                            .expect("fused block CG: rr/rz allreduce");
+                        let s = region_try(
+                            &barrier,
+                            "fused block CG: rr/rz allreduce",
+                            comm.allreduce_sum_ordered_vec(parts),
+                        );
                         for c in 0..k {
                             shared.set(k + c, s[c]);
                             shared.set(2 * k + c, s[k + c]);
@@ -742,7 +764,7 @@ fn solve_fused_inner(
                     barrier.wait(&mut ws);
                     // -- 7. p = z + βp per live, non-broken column.
                     for (c, &on) in act.iter().enumerate() {
-                        if !on || shared.get(c) <= 0.0 {
+                        if !on || !(shared.get(c) > 0.0) {
                             continue;
                         }
                         let beta = shared.get(2 * k + c) / rz_now[c];
@@ -751,16 +773,16 @@ fn solve_fused_inner(
                         blas1::aypx(beta, zc, pm);
                     }
                 },
-            );
-        });
+            )
+        })?;
         // ---- after the join: freeze breakdowns, advance the rest ----------
         let mut progressed = false;
         for c in 0..k {
             if !mask.active[c] {
                 continue;
             }
-            if shared.get(c) <= 0.0 {
-                mask.freeze(c, ConvergedReason::DivergedBreakdown, it);
+            if !(shared.get(c) > 0.0) {
+                mask.freeze(c, quarantine_reason(shared.get(c)), it);
                 continue;
             }
             progressed = true;
@@ -970,7 +992,7 @@ mod tests {
             let stats =
                 solve_fused(&mut a, &PcNone, &b, &mut x, &cfg, &[], &mut c, &log).unwrap();
             assert!(stats.cols[0].converged(), "{:?}", stats.cols[0].reason);
-            assert_eq!(stats.cols[1].reason, ConvergedReason::DivergedBreakdown);
+            assert_eq!(stats.cols[1].reason, ConvergedReason::DivergedIndefiniteMat);
         });
     }
 

@@ -60,6 +60,18 @@ fn solve_inner(
 ) -> Result<SolveStats> {
     let bnorm = norm2(b, comm, log)?;
     let mut history = Vec::new();
+    if bnorm == 0.0 {
+        // A x = 0 has the exact solution x = 0; produce it rather than
+        // letting the dtol test compare against a zero reference.
+        x.zero();
+        return Ok(SolveStats::new(
+            ConvergedReason::ConvergedAtol,
+            0,
+            bnorm,
+            0.0,
+            history,
+        ));
+    }
 
     // r = b − A x
     let mut r = b.duplicate();
@@ -83,15 +95,15 @@ fn solve_inner(
         // w = A p; alpha = rz / (p, w)
         matmult(a, &p, &mut w, comm, log)?;
         let pw = dot(&p, &w, comm, log)?;
-        if pw <= 0.0 {
-            // not SPD (or breakdown)
-            return Ok(SolveStats::new(
-                ConvergedReason::DivergedBreakdown,
-                it,
-                bnorm,
-                rnorm,
-                history,
-            ));
+        if !(pw > 0.0) {
+            // p·Ap ≤ 0 ⇒ the operator is not positive definite; a
+            // non-finite p·Ap means corruption reached the fold.
+            let reason = if pw.is_finite() {
+                ConvergedReason::DivergedIndefiniteMat
+            } else {
+                ConvergedReason::DivergedNanOrInf
+            };
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
         }
         let alpha = rz / pw;
         log.timed("VecAXPY", 4.0 * x.local().len() as f64, || -> Result<()> {
@@ -228,7 +240,7 @@ mod tests {
             let stats =
                 solve(&mut a, &PcNone, &b, &mut x, &KspConfig::default(), &mut c, &log).unwrap();
             // CG on an indefinite operator must detect p·Ap ≤ 0
-            assert_eq!(stats.reason, ConvergedReason::DivergedBreakdown);
+            assert_eq!(stats.reason, ConvergedReason::DivergedIndefiniteMat);
         });
     }
 

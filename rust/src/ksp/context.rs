@@ -380,30 +380,72 @@ impl<'a> Ksp<'a> {
     /// `set_up` automatically if needed; afterwards [`Ksp::stats`] /
     /// [`Ksp::reason`] report this solve. Callable repeatedly — repeated
     /// calls do zero setup work.
+    ///
+    /// When [`KspConfig::max_restarts`] > 0, a breakdown-class divergence
+    /// (`DivergedBreakdown` / `DivergedIndefiniteMat` / `DivergedNanOrInf`)
+    /// triggers a **residual-replacement restart**: non-finite entries of
+    /// the current iterate are scrubbed to zero, and the method re-enters
+    /// with that iterate as the initial guess — the fresh attempt recomputes
+    /// r = b − A x exactly, discarding whatever corruption the recurrence
+    /// accumulated. At most `max_restarts` extra attempts are spent; the
+    /// returned stats report the *total* iterations, the concatenated
+    /// residual history, and the number of attempts. The default
+    /// `max_restarts = 0` makes this loop run exactly once, preserving the
+    /// historical (and golden-locked) behavior bit for bit.
     pub fn solve(&mut self, b: &VecMPI, x: &mut VecMPI, comm: &mut Comm) -> Result<SolveStats> {
         self.check_comm(comm)?;
         if !self.set_up_done {
             self.set_up(comm)?;
         }
-        let stats = {
-            let a = self
-                .a
-                .as_deref_mut()
-                .ok_or_else(|| Error::not_ready("KSPSolve: call set_operators first"))?;
-            let pc = self
-                .pc
-                .as_deref()
-                .ok_or_else(|| Error::not_ready("KSPSolve: PC missing after set_up"))?;
-            self.imp.solve(SolveArgs {
-                a,
-                pc,
-                b,
-                x,
-                cfg: &self.cfg,
-                comm,
-                log: &self.log,
-                bounds: self.bounds,
-            })?
+        let max_restarts = self.cfg.max_restarts;
+        let mut attempt = 0usize;
+        let mut total_its = 0usize;
+        let mut full_history: Vec<f64> = Vec::new();
+        let stats = loop {
+            let mut stats = {
+                let a = self
+                    .a
+                    .as_deref_mut()
+                    .ok_or_else(|| Error::not_ready("KSPSolve: call set_operators first"))?;
+                let pc = self
+                    .pc
+                    .as_deref()
+                    .ok_or_else(|| Error::not_ready("KSPSolve: PC missing after set_up"))?;
+                self.imp.solve(SolveArgs {
+                    a,
+                    pc,
+                    b,
+                    x,
+                    cfg: &self.cfg,
+                    comm,
+                    log: &self.log,
+                    bounds: self.bounds,
+                })?
+            };
+            attempt += 1;
+            total_its += stats.iterations;
+            full_history.extend_from_slice(&stats.history);
+            let restartable = matches!(
+                stats.reason,
+                ConvergedReason::DivergedBreakdown
+                    | ConvergedReason::DivergedIndefiniteMat
+                    | ConvergedReason::DivergedNanOrInf
+            );
+            if restartable && attempt <= max_restarts {
+                // Scrub the iterate: corruption (NaN/Inf) must not seed the
+                // next attempt's residual; finite entries are kept — they
+                // are the progress made so far.
+                for v in x.local_mut().as_mut_slice() {
+                    if !v.is_finite() {
+                        *v = 0.0;
+                    }
+                }
+                continue;
+            }
+            stats.attempts = attempt;
+            stats.iterations = total_its;
+            stats.history = full_history;
+            break stats;
         };
         if let Some(m) = self.monitor.as_mut() {
             for (it, rnorm) in stats.history.iter().enumerate() {

@@ -70,6 +70,23 @@ unsafe fn mut_slice<'a>(raw: &Raw, lo: usize, len: usize) -> &'a mut [f64] {
     std::slice::from_raw_parts_mut(raw.0.add(lo), len)
 }
 
+/// Unwrap an in-region fallible operation, aborting the whole fused region
+/// on failure: the barrier is poisoned first — releasing every peer thread
+/// promptly — and then this thread panics with the typed error's message.
+/// [`Pool::run_posted_caught`] contains the cascade and hands the caller an
+/// `Err` instead of a deadlocked region or a process abort.
+///
+/// [`Pool::run_posted_caught`]: crate::thread::pool::Pool::run_posted_caught
+pub(crate) fn region_try<T>(barrier: &RegionBarrier, what: &str, r: Result<T>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => {
+            barrier.poison();
+            panic!("{what}: {e}");
+        }
+    }
+}
+
 /// The in-region form of the preconditioner: element-wise PCs apply inline
 /// on each thread's own chunk; phased PCs ([`FusedPc::Colored`] — colored
 /// SOR sweeps, level-scheduled ILU solves, slot-parallel V-cycles) run as
@@ -364,6 +381,11 @@ fn cg_fused_inner(
     // ---- setup: the identical call sequence (and fp order) to cg::solve ---
     let bnorm = norm2(b, comm, log)?;
     let mut history = Vec::new();
+    if bnorm == 0.0 {
+        // Same short-circuit as cg::solve: x = 0 is the exact answer.
+        x.zero();
+        return Ok(SolveStats::new(ConvergedReason::ConvergedAtol, 0, bnorm, 0.0, history));
+    }
     let mut r = b.duplicate();
     crate::ksp::cg::a_apply_residual(a, b, x, &mut r, comm, log)?;
     let mut z = r.duplicate();
@@ -431,9 +453,10 @@ fn cg_fused_inner(
                 }
                 barrier.wait(&mut ws);
                 let pw = reduce_sum(&pw_slots, n, t);
-                if pw <= 0.0 {
-                    // Breakdown: every thread computes the same pw and takes
-                    // this exit together; the master reports it after join.
+                if !(pw > 0.0) {
+                    // Breakdown (or NaN): every thread computes the same pw
+                    // and takes this exit together; the master classifies
+                    // and reports it after join.
                     return;
                 }
                 let alpha = rz_now / pw;
@@ -497,14 +520,13 @@ fn cg_fused_inner(
             });
         });
         let pw = reduce_sum(&pw_slots, n, t);
-        if pw <= 0.0 {
-            return Ok(SolveStats::new(
-                ConvergedReason::DivergedBreakdown,
-                it,
-                bnorm,
-                rnorm,
-                history,
-            ));
+        if !(pw > 0.0) {
+            let reason = if pw.is_finite() {
+                ConvergedReason::DivergedIndefiniteMat
+            } else {
+                ConvergedReason::DivergedNanOrInf
+            };
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
         }
         // Mirror VecMPI::norm(Two) on one rank exactly: local sqrt, square
         // for the (no-op) allreduce, sqrt again.
@@ -602,6 +624,11 @@ fn cg_hybrid_inner(
     //      elementwise op exact, the residual via the plan-aware MatMult ---
     let bnorm = hybrid_norm2(b, a.hybrid_plan().expect("checked by can_fuse_hybrid"), comm)?;
     let mut history = Vec::new();
+    if bnorm == 0.0 {
+        // Same short-circuit as cg::solve: x = 0 is the exact answer.
+        x.zero();
+        return Ok(SolveStats::new(ConvergedReason::ConvergedAtol, 0, bnorm, 0.0, history));
+    }
     let mut r = b.duplicate();
     crate::ksp::cg::a_apply_residual(a, b, x, &mut r, comm, log)?;
     let mut z = r.duplicate();
@@ -652,14 +679,14 @@ fn cg_hybrid_inner(
         // sends for p in the entry hook — the workers' diagonal partials
         // start while the messages are still being packed.
         log.timed("KSPFusedIter", iter_flops, || {
-            pool.run_posted(
+            pool.run_posted_caught(
                 || {
                     // SAFETY: master thread only; sequenced before its own
                     // region body (f(0) runs after this hook returns).
                     let comm = unsafe { &mut *comm_raw.0 };
                     let sc = unsafe { &mut *scatter_raw.0 };
                     let ps = unsafe { ref_slice(&p_raw, 0, n) };
-                    sc.begin_local(ps, comm).expect("hybrid CG: scatter begin");
+                    region_try(&barrier, "hybrid CG: scatter begin", sc.begin_local(ps, comm));
                     sc.mark_compute_start();
                 },
                 |tid| {
@@ -680,7 +707,7 @@ fn cg_hybrid_inner(
                         // SAFETY: master-only.
                         let comm = unsafe { &mut *comm_raw.0 };
                         let sc = unsafe { &mut *scatter_raw.0 };
-                        sc.end(comm).expect("hybrid CG: scatter end");
+                        region_try(&barrier, "hybrid CG: scatter end", sc.end(comm));
                     }
                     barrier.wait(&mut ws);
                     // -- 2. ghost partials + ascending-slot fold → w = A p.
@@ -707,16 +734,19 @@ fn cg_hybrid_inner(
                     if tid == 0 {
                         let comm = unsafe { &mut *comm_raw.0 };
                         let parts: Vec<[f64; 1]> = (0..t).map(|k| [pw_slots.get(k)]).collect();
-                        let pw = comm
-                            .allreduce_sum_ordered(parts)
-                            .expect("hybrid CG: pw allreduce")[0];
+                        let pw = region_try(
+                            &barrier,
+                            "hybrid CG: pw allreduce",
+                            comm.allreduce_sum_ordered(parts),
+                        )[0];
                         shared.set(S_PW, pw);
                     }
                     barrier.wait(&mut ws);
                     let pw = shared.get(S_PW);
-                    if pw <= 0.0 {
-                        // Breakdown: identical pw on every thread of every
-                        // rank; all exit together, master reports after join.
+                    if !(pw > 0.0) {
+                        // Breakdown (or NaN): identical pw on every thread of
+                        // every rank; all exit together, master classifies
+                        // and reports after join.
                         return;
                     }
                     let alpha = rz_now / pw;
@@ -768,9 +798,11 @@ fn cg_hybrid_inner(
                         let parts: Vec<[f64; 2]> = (0..t)
                             .map(|k| [rr_slots.get(k), rz_slots.get(k)])
                             .collect();
-                        let s = comm
-                            .allreduce_sum_ordered(parts)
-                            .expect("hybrid CG: rr/rz allreduce");
+                        let s = region_try(
+                            &barrier,
+                            "hybrid CG: rr/rz allreduce",
+                            comm.allreduce_sum_ordered(parts),
+                        );
                         shared.set(S_RR, s[0]);
                         shared.set(S_RZ, s[1]);
                     }
@@ -783,17 +815,16 @@ fn cg_hybrid_inner(
                         blas1::aypx(beta, zc, pm);
                     }
                 },
-            );
-        });
+            )
+        })?;
         let pw = shared.get(S_PW);
-        if pw <= 0.0 {
-            return Ok(SolveStats::new(
-                ConvergedReason::DivergedBreakdown,
-                it,
-                bnorm,
-                rnorm,
-                history,
-            ));
+        if !(pw > 0.0) {
+            let reason = if pw.is_finite() {
+                ConvergedReason::DivergedIndefiniteMat
+            } else {
+                ConvergedReason::DivergedNanOrInf
+            };
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
         }
         rnorm = shared.get(S_RR).sqrt();
         rz = shared.get(S_RZ);
@@ -879,7 +910,7 @@ fn cheby_hybrid_inner(
         // posted mid-region right after the x update barrier, then hidden
         // behind the diagonal partials.
         log.timed("KSPFusedIter", iter_flops, || {
-            pool.run(|tid| {
+            pool.run_posted_caught(|| {}, |tid| {
                 let mut ws = barrier.waiter();
                 let (lo, hi) = slot_ranges[tid];
                 // -- 1. z = M⁻¹ r (r fully written by the previous region's
@@ -922,8 +953,11 @@ fn cheby_hybrid_inner(
                     let comm = unsafe { &mut *comm_raw.0 };
                     let sc = unsafe { &mut *scatter_raw.0 };
                     let xs = unsafe { ref_slice(&x_raw, 0, n) };
-                    sc.begin_local(xs, comm)
-                        .expect("hybrid Chebyshev: scatter begin");
+                    region_try(
+                        &barrier,
+                        "hybrid Chebyshev: scatter begin",
+                        sc.begin_local(xs, comm),
+                    );
                     sc.mark_compute_start();
                 }
                 let (rlo, rhi) = part[tid];
@@ -937,7 +971,7 @@ fn cheby_hybrid_inner(
                 if tid == 0 {
                     let comm = unsafe { &mut *comm_raw.0 };
                     let sc = unsafe { &mut *scatter_raw.0 };
-                    sc.end(comm).expect("hybrid Chebyshev: scatter end");
+                    region_try(&barrier, "hybrid Chebyshev: scatter end", sc.end(comm));
                 }
                 barrier.wait(&mut ws);
                 // -- 3. ghost partials + ordered fold → r rows = (A x) rows.
@@ -957,8 +991,8 @@ fn cheby_hybrid_inner(
                     blas1::aypx(-1.0, &bs[lo..hi], rc);
                     rr_slots.set(tid, blas1::sqnorm(rc));
                 }
-            });
-        });
+            })
+        })?;
         // Master: slot-ordered allreduce of ‖r‖² (after the join — the
         // trailing reduction needs no in-region consumers). Goes through
         // the same raw handle the region used so all communicator access
@@ -1335,8 +1369,8 @@ mod tests {
             let mut a2 = build(&mut c, &ctx);
             let mut x2 = b.duplicate();
             let s_fu = solve(&mut a2, &PcNone, &b, &mut x2, &cfg, &mut c, &log).unwrap();
-            assert_eq!(s_un.reason, ConvergedReason::DivergedBreakdown);
-            assert_eq!(s_fu.reason, ConvergedReason::DivergedBreakdown);
+            assert_eq!(s_un.reason, ConvergedReason::DivergedIndefiniteMat);
+            assert_eq!(s_fu.reason, ConvergedReason::DivergedIndefiniteMat);
             assert_eq!(s_un.iterations, s_fu.iterations);
         });
     }

@@ -213,6 +213,7 @@ fn finish(
         b_norm,
         final_residual,
         history,
+        attempts: 1,
     }
 }
 

@@ -71,6 +71,13 @@ pub enum ConvergedReason {
     DivergedDtol,
     /// Numerical breakdown (zero inner product etc.).
     DivergedBreakdown,
+    /// A residual norm or reduction fold produced NaN/±Inf (PETSc
+    /// `KSP_DIVERGED_NANORINF`) — the typed surface a corrupt-to-NaN fault
+    /// or overflow reaches instead of a silently wrong history.
+    DivergedNanOrInf,
+    /// CG's p·Ap ≤ 0 guard: the (preconditioned) operator is not positive
+    /// definite (PETSc `KSP_DIVERGED_INDEFINITE_MAT`).
+    DivergedIndefiniteMat,
 }
 
 impl ConvergedReason {
@@ -91,6 +98,14 @@ pub struct KspConfig {
     pub max_it: usize,
     /// GMRES restart length.
     pub restart: usize,
+    /// Recovery attempts [`context::Ksp::solve`] may spend after a
+    /// breakdown-class divergence (`DivergedBreakdown` /
+    /// `DivergedIndefiniteMat` / `DivergedNanOrInf`): each attempt restarts
+    /// from the current iterate with a freshly computed (replaced)
+    /// residual, non-finite iterates zeroed first. 0 (the default) keeps
+    /// the historical single-attempt behavior — and the bitwise golden
+    /// histories — exactly.
+    pub max_restarts: usize,
     /// Richardson damping factor ω (`-ksp_richardson_scale`). The runner
     /// used to hardcode 1.0; the registry adapter reads this.
     pub richardson_scale: f64,
@@ -106,6 +121,7 @@ impl Default for KspConfig {
             dtol: 1e5,
             max_it: 10_000,
             restart: 30,
+            max_restarts: 0,
             richardson_scale: 1.0,
             monitor: false,
         }
@@ -123,6 +139,10 @@ pub struct SolveStats {
     pub final_residual: f64,
     /// Per-iteration residual norms (empty unless `monitor`).
     pub history: Vec<f64>,
+    /// Solve attempts consumed (1 + restarts taken by the bounded
+    /// restart policy in [`context::Ksp::solve`]). Always 1 for a direct
+    /// free-function solve.
+    pub attempts: usize,
 }
 
 impl SolveStats {
@@ -140,6 +160,7 @@ impl SolveStats {
             b_norm,
             final_residual,
             history,
+            attempts: 1,
         }
     }
 
@@ -150,14 +171,23 @@ impl SolveStats {
 
 /// The shared convergence test: PETSc's default
 /// `‖r‖ < max(rtol·‖b‖, atol)`, divergence at `‖r‖ > dtol·‖b‖`.
+///
+/// Non-finite residual norms (NaN *or* ±Inf — an overflowed fold is as
+/// fatal as a NaN one) classify as [`ConvergedReason::DivergedNanOrInf`],
+/// and a zero right-hand side short-circuits to `ConvergedAtol` before the
+/// `dtol · ‖b‖` comparison can trip on `bnorm == 0` (the solvers zero `x`
+/// on that path: the exact solution of `A x = 0`).
 pub(crate) fn check_convergence(
     cfg: &KspConfig,
     rnorm: f64,
     bnorm: f64,
     it: usize,
 ) -> Option<ConvergedReason> {
-    if rnorm.is_nan() {
-        return Some(ConvergedReason::DivergedBreakdown);
+    if !rnorm.is_finite() {
+        return Some(ConvergedReason::DivergedNanOrInf);
+    }
+    if bnorm == 0.0 {
+        return Some(ConvergedReason::ConvergedAtol);
     }
     if rnorm <= cfg.atol {
         return Some(ConvergedReason::ConvergedAtol);
@@ -282,9 +312,23 @@ mod tests {
         assert_eq!(check_convergence(&cfg, 1e4, 1.0, 0), Some(ConvergedReason::DivergedDtol));
         assert_eq!(check_convergence(&cfg, 0.5, 1.0, 10), Some(ConvergedReason::DivergedIts));
         assert_eq!(check_convergence(&cfg, 0.5, 1.0, 3), None);
+        // non-finite residuals: NaN *and* ±Inf (is_nan alone missed Inf)
         assert_eq!(
             check_convergence(&cfg, f64::NAN, 1.0, 0),
-            Some(ConvergedReason::DivergedBreakdown)
+            Some(ConvergedReason::DivergedNanOrInf)
+        );
+        assert_eq!(
+            check_convergence(&cfg, f64::INFINITY, 1.0, 0),
+            Some(ConvergedReason::DivergedNanOrInf)
+        );
+        assert_eq!(
+            check_convergence(&cfg, f64::NEG_INFINITY, 1.0, 0),
+            Some(ConvergedReason::DivergedNanOrInf)
+        );
+        // zero RHS: ConvergedAtol, not a dtol trip on bnorm == 0
+        assert_eq!(
+            check_convergence(&cfg, 0.5, 0.0, 0),
+            Some(ConvergedReason::ConvergedAtol)
         );
     }
 
@@ -294,5 +338,7 @@ mod tests {
         assert!(ConvergedReason::ConvergedAtol.converged());
         assert!(!ConvergedReason::DivergedIts.converged());
         assert!(!ConvergedReason::DivergedBreakdown.converged());
+        assert!(!ConvergedReason::DivergedNanOrInf.converged());
+        assert!(!ConvergedReason::DivergedIndefiniteMat.converged());
     }
 }

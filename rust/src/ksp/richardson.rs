@@ -82,6 +82,7 @@ fn solve_inner(
                 b_norm: bnorm,
                 final_residual: rnorm,
                 history,
+                attempts: 1,
             });
         }
         pcapply(pc, &r, &mut z, log)?;

@@ -4,12 +4,23 @@
 //! ```sh
 //! mmpetsc solve --case saltfinger-pressure --scale 0.02 --ranks 4 --threads 2
 //! mmpetsc model --case flue-pressure --cores 8192 --threads 4
+//! mmpetsc fault --seeds 8
 //! mmpetsc info
 //! ```
+//!
+//! Exit codes: 0 success; 1 configuration or run error (typed
+//! [`Error`](mmpetsc::error::Error), printed to stderr); 3 chaos-harness
+//! failure (a faulted run escaped typed error handling — see `fault`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Instant;
 
 use mmpetsc::bench::Table;
+use mmpetsc::comm::fault::FaultPlan;
 use mmpetsc::coordinator::batch::{run_batch_case, BatchConfig};
 use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::error::{Error, Result};
 use mmpetsc::matgen::cases::TestCase;
 use mmpetsc::sim::exec::{simulate, SimConfig};
 use mmpetsc::thread::overhead::Compiler;
@@ -20,25 +31,44 @@ use mmpetsc::util::human;
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
-    match cmd.as_str() {
+    let result = match cmd.as_str() {
         "solve" => solve(&argv),
         "batch" => batch(&argv),
         "model" => model(&argv),
-        "info" => info(),
+        "fault" => fault(&argv),
+        "info" => {
+            info();
+            Ok(())
+        }
         _ => {
             println!(
                 "mmpetsc — mixed-mode PETSc reproduction\n\n\
                  commands:\n  solve   run a real mixed-mode solve (ranks × threads in-process)\n  \
                  batch   serve a queue of RHS requests against one operator (solves/s)\n  \
                  model   price a configuration at paper scale (mode=model)\n  \
+                 fault   chaos harness: inject deterministic faults, assert typed degradation\n  \
                  info    modelled machine and test-case inventory\n\n\
                  `mmpetsc <command> --help` for options; see also examples/ and benches/."
             );
+            Ok(())
         }
+    };
+    if let Err(e) = result {
+        eprintln!("mmpetsc {cmd}: {e}");
+        let code = match e {
+            Error::Runtime(ref m) if m.starts_with("chaos harness") => 3,
+            _ => 1,
+        };
+        std::process::exit(code);
     }
 }
 
-fn batch(argv: &[String]) {
+fn lookup_case(name: &str) -> Result<TestCase> {
+    TestCase::from_name(name)
+        .ok_or_else(|| Error::InvalidOption(format!("unknown test case `{name}`")))
+}
+
+fn batch(argv: &[String]) -> Result<()> {
     let cli = Cli::new("mmpetsc batch", "batched multi-RHS solve queue")
         .opt("case", Some("saltfinger-pressure"), "Table-6 case")
         .opt("scale", Some("0.01"), "matrix scale (1.0 = paper)")
@@ -48,27 +78,21 @@ fn batch(argv: &[String]) {
         .opt("requests", Some("8"), "queued requests")
         .opt("pc", Some("jacobi"), "none|jacobi|bjacobi|sor|ilu0")
         .opt("rtol", Some("1e-8"), "tolerance of every request");
-    let a = match cli.parse(argv) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return;
-        }
-    };
-    let case = TestCase::from_name(&a.get_or("case", "saltfinger-pressure")).expect("case");
-    let rtol = a.get_f64("rtol").unwrap();
-    let nreq = a.get_usize("requests").unwrap().max(1);
+    let a = cli.parse(argv)?;
+    let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
+    let rtol = a.get_f64("rtol")?;
+    let nreq = a.get_usize("requests")?.max(1);
     let mut cfg = BatchConfig::default_for(
         case,
-        a.get_f64("scale").unwrap(),
-        a.get_usize("ranks").unwrap(),
-        a.get_usize("threads").unwrap(),
-        a.get_usize("width").unwrap().max(1),
+        a.get_f64("scale")?,
+        a.get_usize("ranks")?,
+        a.get_usize("threads")?,
+        a.get_usize("width")?.max(1),
         nreq,
     );
     cfg.pc_type = a.get_or("pc", "jacobi");
     cfg.set_uniform_rtol(rtol);
-    let rep = run_batch_case(&cfg).expect("batch run failed");
+    let rep = run_batch_case(&cfg)?;
     let mut t = Table::new(
         &format!(
             "{} {}x{} — {} requests, width {}, {} rows",
@@ -101,9 +125,10 @@ fn batch(argv: &[String]) {
         rep.solo_traversals,
         rep.solo_traversals as f64 / rep.spmm_traversals.max(1) as f64,
     );
+    Ok(())
 }
 
-fn solve(argv: &[String]) {
+fn solve(argv: &[String]) -> Result<()> {
     let cli = Cli::new("mmpetsc solve", "real mixed-mode solve")
         .opt("case", Some("saltfinger-pressure"), "Table-6 case")
         .opt("scale", Some("0.02"), "matrix scale (1.0 = paper)")
@@ -115,25 +140,21 @@ fn solve(argv: &[String]) {
             Some("jacobi"),
             "none|jacobi|bjacobi|sor|sor-colored|ilu0|ilu0-level|gamg|gamg-fused",
         )
-        .opt("rtol", Some("1e-8"), "relative tolerance");
-    let a = match cli.parse(argv) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return;
-        }
-    };
-    let case = TestCase::from_name(&a.get_or("case", "saltfinger-pressure")).expect("case");
+        .opt("rtol", Some("1e-8"), "relative tolerance")
+        .opt("max-restarts", Some("0"), "breakdown restarts before giving up");
+    let a = cli.parse(argv)?;
+    let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let mut cfg = HybridConfig::default_for(
         case,
-        a.get_f64("scale").unwrap(),
-        a.get_usize("ranks").unwrap(),
-        a.get_usize("threads").unwrap(),
+        a.get_f64("scale")?,
+        a.get_usize("ranks")?,
+        a.get_usize("threads")?,
     );
     cfg.ksp_type = a.get_or("ksp", "cg");
     cfg.pc_type = a.get_or("pc", "jacobi");
-    cfg.ksp.rtol = a.get_f64("rtol").unwrap();
-    let rep = run_case(&cfg).expect("solve failed");
+    cfg.ksp.rtol = a.get_f64("rtol")?;
+    cfg.ksp.max_restarts = a.get_usize("max-restarts")?;
+    let rep = run_case(&cfg)?;
     println!(
         "{} {}x{}: converged={} its={} KSPSolve={} MatMult={} msgs={} bytes={}",
         case.name(),
@@ -146,33 +167,157 @@ fn solve(argv: &[String]) {
         rep.messages,
         human::bytes(rep.bytes as f64),
     );
+    Ok(())
 }
 
-fn model(argv: &[String]) {
+/// One chaos-harness verdict: how a faulted run ended.
+enum ChaosOutcome {
+    /// Converged with a finite residual — the fault was absorbed.
+    Converged(usize),
+    /// Typed divergence reason — degraded, but honestly.
+    Diverged(String),
+    /// Typed `Error` — degraded, but honestly.
+    Errored(String),
+    /// A panic escaped the containment layers. Harness failure.
+    Panicked,
+    /// Converged but the residual is non-finite: a silent wrong answer.
+    /// Harness failure.
+    SilentWrong,
+}
+
+impl ChaosOutcome {
+    fn acceptable(&self) -> bool {
+        !matches!(self, ChaosOutcome::Panicked | ChaosOutcome::SilentWrong)
+    }
+
+    fn label(&self) -> String {
+        match self {
+            ChaosOutcome::Converged(its) => format!("converged({its} its)"),
+            ChaosOutcome::Diverged(r) => format!("diverged: {r}"),
+            ChaosOutcome::Errored(e) => format!("error: {e}"),
+            ChaosOutcome::Panicked => "PANIC ESCAPED".into(),
+            ChaosOutcome::SilentWrong => "SILENT WRONG ANSWER".into(),
+        }
+    }
+}
+
+/// The chaos harness (`mmpetsc fault`): run a small solve under each
+/// requested fault plan across a matrix of rank×thread decompositions and
+/// assert that every run degrades *honestly* — a typed `ConvergedReason`
+/// or a typed `Error`, never a hang, an escaped panic, or a converged
+/// answer with a garbage residual. Exit code 3 if any run fails that bar.
+fn fault(argv: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "mmpetsc fault",
+        "deterministic fault injection: assert typed, hang-free degradation",
+    )
+    .opt("case", Some("saltfinger-pressure"), "Table-6 case")
+    .opt("scale", Some("0.003"), "matrix scale (small: many runs)")
+    .opt("spec", None, "explicit fault spec `kind:rank:op:nth[:ms][;...]`")
+    .opt("seed", None, "single seed (deterministic fault derived from it)")
+    .opt("seeds", Some("8"), "sweep seeds 0..N when --seed/--spec absent")
+    .opt("ksp", Some("cg-fused"), "solver under test")
+    .opt("pc", Some("jacobi"), "preconditioner under test")
+    .opt("rtol", Some("1e-8"), "relative tolerance")
+    .opt("max-restarts", Some("1"), "breakdown restarts per solve");
+    let a = cli.parse(argv)?;
+    let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
+    let scale = a.get_f64("scale")?;
+    let rtol = a.get_f64("rtol")?;
+    let max_restarts = a.get_usize("max-restarts")?;
+    let ksp_type = a.get_or("ksp", "cg-fused");
+    let pc_type = a.get_or("pc", "jacobi");
+
+    // Decompositions of 4 cores — the same grid the decomposition-
+    // invariance goldens sweep, so counter-matched faults land on
+    // structurally different message schedules.
+    const DECOMPS: [(usize, usize); 3] = [(1, 4), (2, 2), (4, 1)];
+
+    // Which plans to run: an explicit spec, one seed, or a seed sweep.
+    let mut plans: Vec<(String, Arc<FaultPlan>)> = Vec::new();
+    if let Some(spec) = a.get("spec") {
+        plans.push((format!("spec `{spec}`"), Arc::new(FaultPlan::parse(spec)?)));
+    } else if let Some(seed) = a.get("seed") {
+        let seed: u64 = seed
+            .parse()
+            .map_err(|_| Error::InvalidOption(format!("--seed: `{seed}` is not a u64")))?;
+        plans.push((format!("seed {seed}"), Arc::new(FaultPlan::from_seed(seed, 4))));
+    } else {
+        let n = a.get_usize("seeds")?.max(1);
+        for seed in 0..n as u64 {
+            plans.push((format!("seed {seed}"), Arc::new(FaultPlan::from_seed(seed, 4))));
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("chaos: {} {ksp_type}+{pc_type} rtol={rtol:.0e}", case.name()),
+        &["plan", "fault", "ranks×threads", "wall", "outcome"],
+    );
+    let mut failures = 0usize;
+    for (label, plan) in &plans {
+        for &(ranks, threads) in &DECOMPS {
+            let mut cfg = HybridConfig::default_for(case, scale, ranks, threads);
+            cfg.ksp_type = ksp_type.clone();
+            cfg.pc_type = pc_type.clone();
+            cfg.ksp.rtol = rtol;
+            cfg.ksp.max_restarts = max_restarts;
+            cfg.fault = Some(Arc::clone(plan));
+            let t0 = Instant::now();
+            let run = catch_unwind(AssertUnwindSafe(|| run_case(&cfg)));
+            let wall = t0.elapsed().as_secs_f64();
+            let outcome = match run {
+                Ok(Ok(rep)) if rep.converged && rep.final_residual.is_finite() => {
+                    ChaosOutcome::Converged(rep.iterations)
+                }
+                Ok(Ok(rep)) if rep.converged => ChaosOutcome::SilentWrong,
+                Ok(Ok(rep)) => ChaosOutcome::Diverged(
+                    rep.reason.map_or_else(|| "unknown".into(), |r| format!("{r:?}")),
+                ),
+                Ok(Err(e)) => ChaosOutcome::Errored(e.to_string()),
+                Err(_) => ChaosOutcome::Panicked,
+            };
+            if !outcome.acceptable() {
+                failures += 1;
+            }
+            t.row(&[
+                label.clone(),
+                plan.describe(),
+                format!("{ranks}x{threads}"),
+                human::secs(wall),
+                outcome.label(),
+            ]);
+        }
+    }
+    t.print();
+    let runs = plans.len() * DECOMPS.len();
+    if failures > 0 {
+        return Err(Error::Runtime(format!(
+            "chaos harness: {failures}/{runs} run(s) escaped typed error handling"
+        )));
+    }
+    println!("chaos: {runs}/{runs} runs degraded honestly (typed reason/error, no hangs)");
+    Ok(())
+}
+
+fn model(argv: &[String]) -> Result<()> {
     let cli = Cli::new("mmpetsc model", "paper-scale performance model")
         .opt("case", Some("flue-pressure"), "Table-6 case")
         .opt("cores", Some("8192"), "total cores")
         .opt("threads", Some("4"), "threads per rank")
         .opt("iterations", Some("100"), "Krylov iterations to price");
-    let a = match cli.parse(argv) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return;
-        }
-    };
-    let case = TestCase::from_name(&a.get_or("case", "flue-pressure")).expect("case");
-    let cores = a.get_usize("cores").unwrap();
-    let threads = a.get_usize("threads").unwrap();
+    let a = cli.parse(argv)?;
+    let case = lookup_case(&a.get_or("case", "flue-pressure"))?;
+    let cores = a.get_usize("cores")?;
+    let threads = a.get_usize("threads")?;
     let cluster = hector_xe6();
     let rep = simulate(
         &cluster,
         &SimConfig {
             case,
             scale: 1.0,
-            ranks: cores / threads,
+            ranks: cores / threads.max(1),
             threads,
-            iterations: a.get_usize("iterations").unwrap(),
+            iterations: a.get_usize("iterations")?,
             ksp_type: "cg",
             compiler: Compiler::Cray803,
         },
@@ -192,6 +337,7 @@ fn model(argv: &[String]) {
         human::secs(off),
         human::secs(blas)
     );
+    Ok(())
 }
 
 fn info() {

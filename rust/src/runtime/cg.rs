@@ -141,6 +141,7 @@ impl CgStep {
             b_norm,
             final_residual,
             history: Vec::new(),
+            attempts: 1,
         })
     }
 }

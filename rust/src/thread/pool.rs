@@ -25,6 +25,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
+use crate::error::Error;
 use crate::topology::machine::{CoreId, MachineTopology, UmaRegionId};
 
 /// How many spin-loop iterations a waiter burns before falling back to
@@ -41,6 +42,13 @@ pub const SPIN_YIELD_THRESHOLD: u32 = 10_000;
 /// panic from a silent deadlock into a panic cascade that the pool's
 /// worker catch/poison machinery then reports.
 pub const BARRIER_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(300);
+
+/// How long a [`RegionBarrier`] waiter spends in the yield phase before
+/// escalating to 1 ms sleeps. Past this point the waiter is no longer
+/// latency-sensitive (a peer is late by scheduler-visible amounts, or
+/// gone), so burning a core buys nothing; sleeping keeps an oversubscribed
+/// host responsive while the waiter counts down to [`BARRIER_TIMEOUT`].
+pub const BARRIER_YIELD_PHASE: std::time::Duration = std::time::Duration::from_millis(20);
 
 /// A parallel job handed to workers: a borrowed closure made 'static for
 /// the duration of the fork (the join barrier guarantees the borrow ends
@@ -190,14 +198,39 @@ impl Pool {
     /// Counts as one fork. On a single-thread pool `post` simply runs
     /// before `f(0)`.
     pub fn run_posted<P: FnOnce(), F: Fn(usize) + Sync>(&self, post: P, f: F) {
+        if let Err(e) = self.run_posted_caught(post, f) {
+            panic!("{e}");
+        }
+    }
+
+    /// [`Pool::run_posted`] that *contains* region failure instead of
+    /// unwinding: the master's closure runs under `catch_unwind`, and both
+    /// a master panic and a worker panic surface as `Err(Error::Runtime)`
+    /// after every dispatched worker has been joined. This is the entry
+    /// point of the fused solvers' recovery path — an in-region comm error
+    /// poisons the [`RegionBarrier`] (releasing the other spinners), the
+    /// whole region aborts, and the solver maps the typed error instead of
+    /// the process dying.
+    ///
+    /// The join is deadlock-free only if no surviving thread can block
+    /// forever on a peer that already left: `RegionBarrier::wait` both
+    /// honours poisoning and self-poisons on timeout, so a panic anywhere
+    /// in the region cascades every waiter out within bounded time.
+    pub fn run_posted_caught<P: FnOnce(), F: Fn(usize) + Sync>(
+        &self,
+        post: P,
+        f: F,
+    ) -> std::result::Result<(), Error> {
         self.forks.fetch_add(1, Ordering::Relaxed);
         // Discard any stale poison from a region whose master panicked
         // before observing it (that panic already reached the caller).
         self.poisoned.store(false, Ordering::Release);
         if self.nthreads == 1 {
-            post();
-            f(0);
-            return;
+            return std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                post();
+                f(0)
+            }))
+            .map_err(|p| region_abort_error("master", &p));
         }
         let r: &(dyn Fn(usize) + Sync) = &f;
         // SAFETY: we erase the lifetime, but the join guard below ensures
@@ -240,11 +273,21 @@ impl Pool {
         }
         // Workers are live; the master-side hook (ghost-send posting) runs
         // concurrently with their first phase, then the master joins in.
-        post();
-        f(0);
+        // The hook is inside the catch too: a hook that fails (e.g. a
+        // faulted ghost send) must poison its region barrier before
+        // panicking so the already-dispatched workers cascade out.
+        let master = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            post();
+            f(0)
+        }));
         drop(join); // the normal-path join barrier
-        if self.poisoned.swap(false, Ordering::AcqRel) {
-            panic!("mmpetsc pool: a worker panicked inside a parallel region");
+        let worker_poison = self.poisoned.swap(false, Ordering::AcqRel);
+        match master {
+            Err(p) => Err(region_abort_error("master", &p)),
+            Ok(()) if worker_poison => Err(Error::Runtime(
+                "mmpetsc pool: a worker panicked inside a parallel region".into(),
+            )),
+            Ok(()) => Ok(()),
         }
     }
 
@@ -278,16 +321,31 @@ impl Pool {
             } else {
                 None
             };
-            *slots[tid].lock().unwrap() = v;
+            // Recover the slot even if a sibling's panic poisoned it — the
+            // data under a per-thread slot is never torn (single writer),
+            // and the region's own failure is reported by the poison flag.
+            *slots[tid].lock().unwrap_or_else(|e| e.into_inner()) = v;
         });
         let mut acc = identity;
         for s in slots {
-            if let Some(v) = s.into_inner().unwrap() {
+            if let Some(v) = s.into_inner().unwrap_or_else(|e| e.into_inner()) {
                 acc = combine(acc, v);
             }
         }
         acc
     }
+}
+
+/// Render a caught panic payload as a typed region-abort error.
+fn region_abort_error(who: &str, p: &(dyn std::any::Any + Send)) -> Error {
+    let msg = if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    Error::Runtime(format!("mmpetsc pool: fused region aborted on {who}: {msg}"))
 }
 
 impl Drop for Pool {
@@ -326,6 +384,11 @@ pub struct RegionBarrier {
     nthreads: usize,
     count: AtomicUsize,
     sense: AtomicBool,
+    /// Set when a region thread hit an unrecoverable error (comm failure,
+    /// panic) and will never arrive again: every current and future waiter
+    /// panics out promptly instead of spinning to the timeout, and the
+    /// cascade is contained by [`Pool::run_posted_caught`].
+    poison: AtomicBool,
 }
 
 /// Per-thread barrier state. Create one per thread at region entry with
@@ -342,11 +405,24 @@ impl RegionBarrier {
             nthreads,
             count: AtomicUsize::new(0),
             sense: AtomicBool::new(false),
+            poison: AtomicBool::new(false),
         }
     }
 
     pub fn nthreads(&self) -> usize {
         self.nthreads
+    }
+
+    /// Mark the region dead. Called by a thread that is about to abandon
+    /// the region (comm error, numerical catastrophe needing abort) so its
+    /// peers stop waiting for arrivals that will never come. Idempotent.
+    pub fn poison(&self) {
+        self.poison.store(true, Ordering::Release);
+    }
+
+    /// Has the region been poisoned?
+    pub fn is_poisoned(&self) -> bool {
+        self.poison.load(Ordering::Acquire)
     }
 
     /// A fresh per-thread waiter. Correct at any quiescent point (region
@@ -360,7 +436,17 @@ impl RegionBarrier {
     }
 
     /// Block until all `nthreads` threads of the region have arrived.
+    ///
+    /// Waiting escalates through four states (DESIGN.md §10): busy-spin
+    /// (latency-optimal) → `yield_now` after [`SPIN_YIELD_THRESHOLD`] spins
+    /// → 1 ms sleeps after [`BARRIER_YIELD_PHASE`] of yielding → after
+    /// [`BARRIER_TIMEOUT`], self-poison and panic. A poisoned barrier
+    /// panics every waiter promptly, so one failed thread collapses the
+    /// whole region in bounded time instead of deadlocking it.
     pub fn wait(&self, w: &mut BarrierWaiter) {
+        if self.is_poisoned() {
+            panic!("RegionBarrier::wait: region poisoned — a peer thread aborted");
+        }
         let my = w.sense;
         w.sense = !my;
         if self.count.fetch_add(1, Ordering::AcqRel) == self.nthreads - 1 {
@@ -377,17 +463,29 @@ impl RegionBarrier {
                 if spins < SPIN_YIELD_THRESHOLD {
                     std::hint::spin_loop();
                 } else {
-                    // A peer that panicked will never arrive; after a
-                    // generous skew allowance, panic instead of deadlocking
-                    // so the pool's poison machinery reports the region.
-                    let t0 = *yielding_since.get_or_insert_with(std::time::Instant::now);
-                    if t0.elapsed() > BARRIER_TIMEOUT {
+                    if self.is_poisoned() {
                         panic!(
-                            "RegionBarrier::wait: no arrival in {BARRIER_TIMEOUT:?} — \
-                             a region thread likely panicked"
+                            "RegionBarrier::wait: region poisoned — a peer thread aborted"
                         );
                     }
-                    std::thread::yield_now();
+                    // A peer that panicked will never arrive; after a
+                    // generous skew allowance, poison the region and panic
+                    // instead of deadlocking, so every other waiter
+                    // cascades out and the pool's containment reports it.
+                    let t0 = *yielding_since.get_or_insert_with(std::time::Instant::now);
+                    let waited = t0.elapsed();
+                    if waited > BARRIER_TIMEOUT {
+                        self.poison();
+                        panic!(
+                            "RegionBarrier::wait: no arrival in {BARRIER_TIMEOUT:?} — \
+                             a region thread likely panicked or stalled"
+                        );
+                    }
+                    if waited > BARRIER_YIELD_PHASE {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    } else {
+                        std::thread::yield_now();
+                    }
                 }
             }
         }
@@ -697,6 +795,88 @@ mod tests {
             let pool = Pool::new(8);
             pool.run(|_| {});
         }
+    }
+
+    #[test]
+    fn run_posted_caught_contains_worker_panic() {
+        let pool = Pool::new(4);
+        let out = pool.run_posted_caught(
+            || {},
+            |tid| {
+                if tid == 3 {
+                    panic!("chaos");
+                }
+            },
+        );
+        assert!(out.is_err(), "worker panic must become Err, not unwind");
+        // the pool remains usable afterwards
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            hits.fetch_or(1 << tid, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn run_posted_caught_contains_master_panic() {
+        for t in [1usize, 3] {
+            let pool = Pool::new(t);
+            let out = pool.run_posted_caught(
+                || {},
+                |tid| {
+                    if tid == 0 {
+                        panic!("master chaos");
+                    }
+                },
+            );
+            assert!(out.is_err());
+            let err = format!("{}", out.unwrap_err());
+            assert!(err.contains("master chaos"), "{err}");
+        }
+    }
+
+    #[test]
+    fn run_posted_caught_ok_path_returns_ok() {
+        let pool = Pool::new(2);
+        let hits = AtomicU64::new(0);
+        let out = pool.run_posted_caught(
+            || {
+                hits.fetch_add(100, Ordering::Relaxed);
+            },
+            |_tid| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert!(out.is_ok());
+        assert_eq!(hits.load(Ordering::Relaxed), 102);
+    }
+
+    #[test]
+    fn poisoned_barrier_collapses_region_into_typed_error() {
+        // One thread hits a (simulated) comm failure mid-region: it poisons
+        // the barrier and panics. Every other thread blocked at wait() must
+        // cascade out promptly — no hang — and the caller gets Err.
+        let t = 4;
+        let pool = Pool::new(t);
+        let barrier = RegionBarrier::new(t);
+        let start = std::time::Instant::now();
+        let out = pool.run_posted_caught(
+            || {},
+            |tid| {
+                let mut w = barrier.waiter();
+                if tid == 1 {
+                    barrier.poison();
+                    panic!("simulated comm failure on thread 1");
+                }
+                barrier.wait(&mut w);
+            },
+        );
+        assert!(out.is_err());
+        assert!(barrier.is_poisoned());
+        assert!(
+            start.elapsed() < BARRIER_TIMEOUT,
+            "poison must beat the timeout path"
+        );
     }
 
     // -- in-region primitives ------------------------------------------------

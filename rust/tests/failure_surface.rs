@@ -1,0 +1,311 @@
+//! The failure-surface golden suite: *how* a solve fails is part of the
+//! contract, and must be as decomposition-invariant as how it converges.
+//!
+//! - `DivergedIts` reaches the report unchanged across the 1×4 / 2×2 / 4×1
+//!   decompositions of 4 cores, with bitwise-identical truncated histories;
+//! - an indefinite operator surfaces `DivergedIndefiniteMat` (not a NaN
+//!   history or a hang) through both the unfused and hybrid fused CG,
+//!   again decomposition-invariant;
+//! - the bounded restart policy in `Ksp::solve` spends exactly its budget
+//!   on a persistent breakdown, reports `attempts`, and — at the default
+//!   `max_restarts = 0` and on healthy systems at any budget — leaves the
+//!   single-attempt history bitwise untouched;
+//! - the batched block engine quarantines a NaN-poisoned column with a
+//!   typed per-column reason while the other k−1 columns reproduce their
+//!   solo histories bitwise.
+
+use mmpetsc::comm::endpoint::Comm;
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::logging::EventLog;
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::ksp::{block, ConvergedReason, Ksp, KspConfig};
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::pc::{PcNone, Precond};
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
+use mmpetsc::vec::multi::MultiVecMPI;
+use std::sync::Arc;
+
+const DECOMPS: [(usize, usize); 3] = [(1, 4), (2, 2), (4, 1)];
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Tridiagonal system on the slot-aligned layout; `indefinite` flips a
+/// band of diagonal entries negative so CG's p·Ap guard must trip.
+fn build_system(
+    n: usize,
+    threads: usize,
+    indefinite: bool,
+    comm: &mut Comm,
+) -> (MatMPIAIJ, VecMPI, Layout, Arc<ThreadCtx>) {
+    let layout = Layout::slot_aligned(n, comm.size(), threads);
+    let (lo, hi) = layout.range(comm.rank());
+    let ctx = ThreadCtx::new(threads);
+    let mut es = Vec::new();
+    for i in lo..hi {
+        let d = if indefinite && i >= n / 3 && i < n / 2 {
+            -4.0
+        } else {
+            4.0 + (i % 5) as f64 * 0.25
+        };
+        es.push((i, i, d));
+        if i > 0 {
+            es.push((i, i - 1, -1.0));
+        }
+        if i + 1 < n {
+            es.push((i, i + 1, -1.0));
+        }
+    }
+    let a = MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, comm, ctx.clone()).unwrap();
+    let bs: Vec<f64> = (lo..hi).map(|g| (g as f64 * 0.037).sin() + 0.5).collect();
+    let b = VecMPI::from_local_slice(layout.clone(), comm.rank(), &bs, ctx.clone()).unwrap();
+    (a, b, layout, ctx)
+}
+
+#[test]
+fn diverged_its_reaches_report_across_decompositions() {
+    let mut histories: Vec<Vec<u64>> = Vec::new();
+    for &(ranks, threads) in &DECOMPS {
+        let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, ranks, threads);
+        cfg.ksp_type = "cg-fused".into();
+        cfg.ksp.rtol = 1e-300;
+        cfg.ksp.atol = 0.0;
+        cfg.ksp.max_it = 6;
+        cfg.ksp.monitor = true;
+        let rep = run_case(&cfg).unwrap();
+        assert!(!rep.converged, "{ranks}×{threads}: unreachable tolerance converged?");
+        assert_eq!(
+            rep.reason,
+            Some(ConvergedReason::DivergedIts),
+            "{ranks}×{threads}"
+        );
+        assert_eq!(rep.iterations, 6, "{ranks}×{threads}");
+        histories.push(rep.history.iter().map(|v| v.to_bits()).collect());
+    }
+    assert!(!histories[0].is_empty());
+    assert_eq!(histories[0], histories[1], "1×4 vs 2×2 truncated history");
+    assert_eq!(histories[1], histories[2], "2×2 vs 4×1 truncated history");
+}
+
+/// One decomposition's indefinite-CG outcome via the `Ksp` object:
+/// (reason, history bits) from rank 0.
+fn indefinite_outcome(ranks: usize, threads: usize, ksp: &str) -> (ConvergedReason, Vec<u64>) {
+    let ksp = ksp.to_string();
+    let outs = World::run(ranks, move |mut comm| {
+        let (mut a, b, layout, ctx) = build_system(96, threads, true, &mut comm);
+        let mut kspobj = Ksp::create(&comm);
+        kspobj.set_type(&ksp).unwrap();
+        kspobj.set_pc("none");
+        kspobj.set_config(KspConfig {
+            rtol: 1e-10,
+            max_it: 500,
+            monitor: true,
+            ..Default::default()
+        });
+        kspobj.set_operators(&mut a);
+        let mut x = VecMPI::new(layout, comm.rank(), ctx);
+        let stats = kspobj.solve(&b, &mut x, &mut comm).unwrap();
+        // The iterate must stay finite: the guard fires *before* a
+        // division by a bad p·Ap can poison x.
+        assert!(
+            x.local().as_slice().iter().all(|v| v.is_finite()),
+            "indefinite exit leaked non-finite entries into x"
+        );
+        (stats.reason, bits(&stats.history))
+    });
+    outs.into_iter().next().unwrap()
+}
+
+#[test]
+fn indefinite_operator_is_typed_not_poisonous() {
+    // Unfused CG at one decomposition: the guard itself.
+    let (reason, _) = indefinite_outcome(2, 1, "cg");
+    assert_eq!(reason, ConvergedReason::DivergedIndefiniteMat);
+
+    // Hybrid fused CG: same typed reason and a bitwise decomposition-
+    // invariant truncated history — the failure surface is part of the
+    // golden contract.
+    let outcomes: Vec<(ConvergedReason, Vec<u64>)> = DECOMPS
+        .iter()
+        .map(|&(r, t)| indefinite_outcome(r, t, "cg-fused"))
+        .collect();
+    for (i, (reason, _)) in outcomes.iter().enumerate() {
+        assert_eq!(
+            *reason,
+            ConvergedReason::DivergedIndefiniteMat,
+            "decomposition {:?}",
+            DECOMPS[i]
+        );
+    }
+    assert_eq!(outcomes[0].1, outcomes[1].1, "1×4 vs 2×2 history to the breakdown");
+    assert_eq!(outcomes[1].1, outcomes[2].1, "2×2 vs 4×1 history to the breakdown");
+}
+
+#[test]
+fn restart_policy_spends_its_budget_and_reports_attempts() {
+    World::run(1, |mut comm| {
+        // Persistently indefinite: every restart re-encounters the same
+        // breakdown, so the policy must spend exactly 1 + max_restarts
+        // attempts and then surface the typed reason.
+        let (mut a, b, layout, ctx) = build_system(96, 1, true, &mut comm);
+        let mut kspobj = Ksp::create(&comm);
+        kspobj.set_type("cg").unwrap();
+        kspobj.set_pc("none");
+        kspobj.set_config(KspConfig {
+            rtol: 1e-10,
+            max_restarts: 2,
+            monitor: true,
+            ..Default::default()
+        });
+        kspobj.set_operators(&mut a);
+        let mut x = VecMPI::new(layout, comm.rank(), ctx);
+        let stats = kspobj.solve(&b, &mut x, &mut comm).unwrap();
+        assert_eq!(stats.reason, ConvergedReason::DivergedIndefiniteMat);
+        assert_eq!(stats.attempts, 3, "1 try + 2 restarts");
+        assert!(
+            x.local().as_slice().iter().all(|v| v.is_finite()),
+            "restart scrubbing must keep the iterate finite"
+        );
+    });
+}
+
+#[test]
+fn restart_budget_is_inert_on_healthy_systems() {
+    // A healthy solve must not notice the budget: attempts = 1 and the
+    // history is bitwise identical to the max_restarts = 0 run.
+    let run = |max_restarts: usize| {
+        World::run(1, move |mut comm| {
+            let (mut a, b, layout, ctx) = build_system(96, 2, false, &mut comm);
+            let mut kspobj = Ksp::create(&comm);
+            kspobj.set_type("cg").unwrap();
+            kspobj.set_pc("jacobi");
+            kspobj.set_config(KspConfig {
+                rtol: 1e-8,
+                max_restarts,
+                monitor: true,
+                ..Default::default()
+            });
+            kspobj.set_operators(&mut a);
+            let mut x = VecMPI::new(layout, comm.rank(), ctx);
+            let stats = kspobj.solve(&b, &mut x, &mut comm).unwrap();
+            assert!(stats.converged());
+            (stats.attempts, bits(&stats.history))
+        })
+        .pop()
+        .unwrap()
+    };
+    let (attempts0, hist0) = run(0);
+    let (attempts3, hist3) = run(3);
+    assert_eq!(attempts0, 1);
+    assert_eq!(attempts3, 1, "healthy solve must not restart");
+    assert_eq!(hist0, hist3, "restart budget changed a converging history");
+}
+
+#[test]
+fn poisoned_column_is_quarantined_batchmates_bitwise_clean() {
+    // k = 3, column 1's RHS carries a NaN. The block engine must freeze
+    // that column with the typed NaN reason at iteration 0 and keep the
+    // other two columns' histories bitwise equal to their solo solves.
+    let (ranks, threads, n, k) = (2usize, 2usize, 192usize, 3usize);
+    let outs = World::run(ranks, move |mut comm| {
+        let layout = Layout::slot_aligned(n, comm.size(), threads);
+        let (lo, hi) = layout.range(comm.rank());
+        let ctx = ThreadCtx::new(threads);
+        let mut es = Vec::new();
+        for i in lo..hi {
+            es.push((i, i, 6.0));
+            if i > 0 {
+                es.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                es.push((i, i + 1, -1.0));
+            }
+        }
+        let mut a =
+            MatMPIAIJ::assemble(layout.clone(), layout.clone(), es, &mut comm, ctx.clone())
+                .unwrap();
+        a.enable_hybrid().unwrap();
+        let pc = PcNone;
+        let cfg = KspConfig {
+            rtol: 1e-8,
+            monitor: true,
+            ..Default::default()
+        };
+        let log = EventLog::new();
+
+        let col_rhs = |c: usize, g: usize| (g as f64 * 0.045 + c as f64 * 2.3).sin() + 0.4;
+        let mut b = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        for c in 0..k {
+            let xs: Vec<f64> = (lo..hi)
+                .map(|g| {
+                    if c == 1 && g == n / 2 {
+                        f64::NAN
+                    } else {
+                        col_rhs(c, g)
+                    }
+                })
+                .collect();
+            b.local_mut().set_col(c, &xs).unwrap();
+        }
+        let mut x = MultiVecMPI::new(layout.clone(), comm.rank(), k, ctx.clone());
+        let stats = block::solve_fused(
+            &mut a,
+            &pc as &dyn Precond,
+            &b,
+            &mut x,
+            &cfg,
+            &[],
+            &mut comm,
+            &log,
+        )
+        .unwrap();
+        assert!(stats.fused, "fused engine must engage");
+        assert_eq!(
+            stats.cols[1].reason,
+            ConvergedReason::DivergedNanOrInf,
+            "poisoned column must be quarantined with the typed NaN reason"
+        );
+        assert_eq!(stats.cols[1].iterations, 0, "quarantine at iteration 0");
+        for c in [0usize, 2] {
+            assert!(stats.cols[c].converged(), "clean column {c} must converge");
+            assert!(
+                x.local().col(c).iter().all(|v| v.is_finite()),
+                "NaN leaked from the quarantined column into column {c}"
+            );
+        }
+
+        // Solo references for the clean columns: same operator, PC, cfg.
+        let mut solo = Vec::new();
+        for c in [0usize, 2] {
+            let mut bc = MultiVecMPI::new(layout.clone(), comm.rank(), 1, ctx.clone());
+            let xs: Vec<f64> = (lo..hi).map(|g| col_rhs(c, g)).collect();
+            bc.local_mut().set_col(0, &xs).unwrap();
+            let mut xc = MultiVecMPI::new(layout.clone(), comm.rank(), 1, ctx.clone());
+            let s = block::solve_fused(
+                &mut a,
+                &pc as &dyn Precond,
+                &bc,
+                &mut xc,
+                &cfg,
+                &[],
+                &mut comm,
+                &log,
+            )
+            .unwrap();
+            solo.push(bits(&s.cols[0].history));
+        }
+        (
+            bits(&stats.cols[0].history),
+            bits(&stats.cols[2].history),
+            solo,
+        )
+    });
+    for (rank, (h0, h2, solo)) in outs.into_iter().enumerate() {
+        assert!(!h0.is_empty(), "rank {rank}: monitor must record history");
+        assert_eq!(h0, solo[0], "rank {rank}: column 0 diverged from its solo history");
+        assert_eq!(h2, solo[1], "rank {rank}: column 2 diverged from its solo history");
+    }
+}
