@@ -23,6 +23,12 @@ struct ConfigResult {
     msgs_hidden_per_iter: f64,
     messages: u64,
     rows: usize,
+    /// Fused-CG GFLOP/s with the diag block forced to each local format
+    /// (0.0 when the operator rejects the format, e.g. BAIJ on a
+    /// non-blockable stencil — a typed reject, not a crash).
+    format_gflops: Vec<(&'static str, f64)>,
+    /// The `set_up` autotuner's measured pick (`-mat_type auto`).
+    mat_type_pick: String,
 }
 
 fn run_decomposition(
@@ -66,6 +72,34 @@ fn run_decomposition(
             unfused_flops = u.total_flops;
         }
     }
+    // Per-format throughput of the same fixed-iteration fused solve.
+    let with_format = |fmt: &str| -> HybridConfig {
+        let mut cfg = fixed_its("cg-fused");
+        cfg.ksp.mat_type = fmt.into();
+        cfg
+    };
+    let mut format_gflops = Vec::new();
+    for fmt in ["aij", "sell", "baij"] {
+        let mut best = f64::INFINITY;
+        let mut flops = 0.0;
+        for _rep in 0..2 {
+            match run_case(&with_format(fmt)) {
+                Ok(rep) => {
+                    if rep.ksp_time < best {
+                        best = rep.ksp_time;
+                        flops = rep.total_flops;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let gf = if best.is_finite() { flops / best / 1e9 } else { 0.0 };
+        format_gflops.push((fmt, gf));
+    }
+    let mat_type_pick = match run_case(&with_format("auto")) {
+        Ok(rep) => rep.mat_format.to_string(),
+        Err(_) => "error".to_string(),
+    };
     ConfigResult {
         ranks,
         threads,
@@ -77,6 +111,8 @@ fn run_decomposition(
         msgs_hidden_per_iter: hidden,
         messages,
         rows,
+        format_gflops,
+        mat_type_pick,
     }
 }
 
@@ -122,8 +158,17 @@ fn main() {
             "speedup",
             "overlap",
             "hidden msg/it",
+            "sell GF/s",
+            "mat pick",
         ],
     );
+    let fmt_gf = |c: &ConfigResult, name: &str| {
+        c.format_gflops
+            .iter()
+            .find(|(f, _)| *f == name)
+            .map(|&(_, g)| g)
+            .unwrap_or(0.0)
+    };
     for c in &results {
         t.row(&[
             format!("{}×{}", c.ranks, c.threads),
@@ -132,6 +177,8 @@ fn main() {
             format!("{:.2}×", c.unfused_seconds / c.fused_seconds.max(1e-12)),
             format!("{:.0}%", 100.0 * c.overlap_fraction),
             format!("{:.2}", c.msgs_hidden_per_iter),
+            format!("{:.3}", fmt_gf(c, "sell")),
+            c.mat_type_pick.clone(),
         ]);
     }
     t.print();
@@ -151,6 +198,16 @@ fn main() {
                     ("overlap_fraction", JsonVal::Num(c.overlap_fraction)),
                     ("msgs_hidden_per_iter", JsonVal::Num(c.msgs_hidden_per_iter)),
                     ("messages", JsonVal::Int(c.messages)),
+                    (
+                        "format_gflops",
+                        JsonVal::obj(
+                            c.format_gflops
+                                .iter()
+                                .map(|&(f, g)| (f, JsonVal::Num(g)))
+                                .collect(),
+                        ),
+                    ),
+                    ("mat_type_pick", JsonVal::Str(c.mat_type_pick.clone())),
                 ]),
             )
         })

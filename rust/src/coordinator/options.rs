@@ -98,7 +98,9 @@ impl Options {
     }
 
     /// Extract a [`KspConfig`] from `-ksp_rtol/-ksp_atol/-ksp_max_it/
-    /// -ksp_gmres_restart/-ksp_richardson_scale/-ksp_monitor`.
+    /// -ksp_gmres_restart/-ksp_richardson_scale/-ksp_monitor`, plus the
+    /// operator-format controls `-mat_type`/`-mat_block_size` (validated
+    /// against the format vocabulary at `KSPSetUp`).
     pub fn ksp_config(&self) -> Result<KspConfig> {
         let d = KspConfig::default();
         Ok(KspConfig {
@@ -110,6 +112,8 @@ impl Options {
             richardson_scale: self.f64_or("ksp_richardson_scale", d.richardson_scale)?,
             monitor: self.flag("ksp_monitor"),
             max_restarts: self.usize_or("ksp_max_restarts", d.max_restarts)?,
+            mat_type: self.get_or("mat_type", &d.mat_type),
+            mat_block_size: self.usize_or("mat_block_size", d.mat_block_size)?,
         })
     }
 
@@ -163,6 +167,20 @@ mod tests {
         assert_eq!(c.restart, 10);
         assert_eq!(c.richardson_scale, 1.0);
         assert!(!c.monitor);
+        assert_eq!(c.mat_type, "auto");
+        assert_eq!(c.mat_block_size, 0);
+    }
+
+    #[test]
+    fn mat_type_options_extraction() {
+        let o = Options::parse_str("-mat_type sell -mat_block_size 2").unwrap();
+        let c = o.ksp_config().unwrap();
+        assert_eq!(c.mat_type, "sell");
+        assert_eq!(c.mat_block_size, 2);
+        assert!(Options::parse_str("-mat_block_size two")
+            .unwrap()
+            .ksp_config()
+            .is_err());
     }
 
     #[test]

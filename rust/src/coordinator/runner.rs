@@ -113,6 +113,10 @@ pub struct HybridReport {
     /// every Vec/Mat/PC call (≥ 7 per iteration); tests assert a fused
     /// solve with a colored PC did **not** fall back through this counter.
     pub forks: u64,
+    /// Diag-block format the solve ran with ("aij" / "sell" / "baij"):
+    /// the `-mat_type` override or the set_up autotuner's pick. Identical
+    /// on every rank (the pick is collective); rank 0's copy reported.
+    pub mat_format: &'static str,
 }
 
 impl HybridReport {
@@ -275,6 +279,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
         overlap_fraction: 0.0,
         msgs_hidden: 0,
         forks: 0,
+        mat_format: "aij",
     };
     for (r, o) in outcomes.into_iter().enumerate() {
         let o = o?;
@@ -295,6 +300,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
         if r == 0 {
             report.history = o.stats.history.clone();
             report.reason = Some(o.stats.reason);
+            report.mat_format = o.stats.mat_format;
         }
     }
     for s in comm_stats {

@@ -63,6 +63,15 @@ pub fn read_matrix_market(path: impl AsRef<Path>, ctx: Arc<ThreadCtx>) -> Result
         if i == 0 || j == 0 {
             return Err(Error::Format(format!("MatrixMarket is 1-based: {t}")));
         }
+        if symmetric && j > i {
+            // The MM spec stores only the lower triangle of a symmetric
+            // matrix. A file carrying both triangles used to get every
+            // off-diagonal entry mirrored AND re-read, silently doubling
+            // the value in the duplicate-accumulating builder.
+            return Err(Error::Format(format!(
+                "symmetric MatrixMarket entry above the diagonal: {t}"
+            )));
+        }
         b.add(i - 1, j - 1, v)?;
         if symmetric && i != j {
             b.add(j - 1, i - 1, v)?;
@@ -148,6 +157,40 @@ mod tests {
         std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 5\n1 1 3.0\n")
             .unwrap();
         assert!(read_matrix_market(&p, ThreadCtx::serial()).is_err()); // count mismatch
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_symmetric_with_both_triangles() {
+        // A file that stores both triangles of a symmetric matrix would
+        // previously double every off-diagonal value; it must now be a
+        // typed format error on the first upper-triangle entry.
+        let p = tmp("bothtri.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 4\n1 1 2.0\n2 1 -1.0\n1 2 -1.0\n3 3 5.0\n",
+        )
+        .unwrap();
+        let e = read_matrix_market(&p, ThreadCtx::serial());
+        assert!(matches!(e, Err(Error::Format(_))), "got {e:?}");
+        // general files still accept both triangles
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n3 3 4\n1 1 2.0\n2 1 -1.0\n1 2 -1.0\n3 3 5.0\n",
+        )
+        .unwrap();
+        let a = read_matrix_market(&p, ThreadCtx::serial()).unwrap();
+        assert_eq!(a.get(0, 1), -1.0);
+        assert_eq!(a.get(1, 0), -1.0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_size_line() {
+        let p = tmp("shortsize.mtx");
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n3 3\n").unwrap();
+        let e = read_matrix_market(&p, ThreadCtx::serial());
+        assert!(matches!(e, Err(Error::Format(_))), "got {e:?}");
         std::fs::remove_file(p).ok();
     }
 

@@ -52,6 +52,19 @@ fn as_i32(v: usize, what: &str) -> Result<i32> {
     i32::try_from(v).map_err(|_| Error::Format(format!("{what} {v} exceeds i32 (PETSc binary)")))
 }
 
+/// Typed decode of an on-disk size field. A hostile/corrupt file can carry
+/// a negative i32 here; `as usize` would wrap it to ~2⁶⁴ and feed the
+/// allocator (abort), so this is the only sanctioned i32→usize path on the
+/// read side.
+fn as_usize(v: i32, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| Error::Format(format!("{what} {v} is negative (PETSc binary)")))
+}
+
+/// Pre-allocation cap for length fields read from disk: trust the header
+/// only up to 1 Mi elements; anything larger grows by push (a short file
+/// then fails in `read_exact` instead of aborting in the allocator).
+const CAP_HINT: usize = 1 << 20;
+
 /// Write a matrix in PETSc binary format.
 pub fn write_mat(path: impl AsRef<Path>, a: &MatSeqAIJ) -> Result<()> {
     let f = std::fs::File::create(path)?;
@@ -83,26 +96,27 @@ pub fn read_mat(path: impl AsRef<Path>, ctx: Arc<ThreadCtx>) -> Result<MatSeqAIJ
             "bad mat classid {classid} (expected {MAT_FILE_CLASSID})"
         )));
     }
-    let rows = r_i32(&mut r)? as usize;
-    let cols = r_i32(&mut r)? as usize;
-    let nnz = r_i32(&mut r)? as usize;
-    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let rows = as_usize(r_i32(&mut r)?, "rows")?;
+    let cols = as_usize(r_i32(&mut r)?, "cols")?;
+    let nnz = as_usize(r_i32(&mut r)?, "nnz")?;
+    let mut row_ptr = Vec::with_capacity((rows + 1).min(CAP_HINT));
     row_ptr.push(0usize);
+    let mut total = 0usize;
     for _ in 0..rows {
-        let k = r_i32(&mut r)? as usize;
-        row_ptr.push(row_ptr.last().unwrap() + k);
+        let k = as_usize(r_i32(&mut r)?, "row nnz")?;
+        total = total
+            .checked_add(k)
+            .ok_or_else(|| Error::Format("row nnz sum overflows usize".into()))?;
+        row_ptr.push(total);
     }
-    if *row_ptr.last().unwrap() != nnz {
-        return Err(Error::Format(format!(
-            "row nnz sum {} != header nnz {nnz}",
-            row_ptr.last().unwrap()
-        )));
+    if total != nnz {
+        return Err(Error::Format(format!("row nnz sum {total} != header nnz {nnz}")));
     }
-    let mut col_idx = Vec::with_capacity(nnz);
+    let mut col_idx = Vec::with_capacity(nnz.min(CAP_HINT));
     for _ in 0..nnz {
-        col_idx.push(r_i32(&mut r)? as usize);
+        col_idx.push(as_usize(r_i32(&mut r)?, "col index")?);
     }
-    let mut vals = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz.min(CAP_HINT));
     for _ in 0..nnz {
         vals.push(r_f64(&mut r)?);
     }
@@ -131,8 +145,8 @@ pub fn read_vec(path: impl AsRef<Path>, ctx: Arc<ThreadCtx>) -> Result<VecSeq> {
             "bad vec classid {classid} (expected {VEC_FILE_CLASSID})"
         )));
     }
-    let n = r_i32(&mut r)? as usize;
-    let mut xs = Vec::with_capacity(n);
+    let n = as_usize(r_i32(&mut r)?, "len")?;
+    let mut xs = Vec::with_capacity(n.min(CAP_HINT));
     for _ in 0..n {
         xs.push(r_f64(&mut r)?);
     }
@@ -192,6 +206,88 @@ mod tests {
     fn truncated_file_rejected() {
         let p = tmp("trunc.bin");
         std::fs::write(&p, MAT_FILE_CLASSID.to_be_bytes()).unwrap();
+        assert!(read_mat(&p, ThreadCtx::serial()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    /// Hand-build a mat file from raw i32 header fields (then optional
+    /// payload bytes) to exercise the hostile-input paths a writer can
+    /// never produce.
+    fn raw_mat_file(name: &str, fields: &[i32], payload: &[u8]) -> std::path::PathBuf {
+        let p = tmp(name);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAT_FILE_CLASSID.to_be_bytes());
+        for f in fields {
+            bytes.extend_from_slice(&f.to_be_bytes());
+        }
+        bytes.extend_from_slice(payload);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn negative_header_fields_are_typed_errors() {
+        // rows = -1: `as usize` used to wrap to 2^64-1 and hit the
+        // allocator; now it must come back as a typed Error::Format.
+        for (name, fields) in [
+            ("neg-rows.bin", vec![-1, 4, 3]),
+            ("neg-cols.bin", vec![3, -4, 3]),
+            ("neg-nnz.bin", vec![3, 4, -3]),
+            ("neg-rownnz.bin", vec![2, 2, 2, -2, 4]),
+        ] {
+            let p = raw_mat_file(name, &fields, &[]);
+            let e = read_mat(&p, ThreadCtx::serial());
+            assert!(
+                matches!(e, Err(Error::Format(_))),
+                "{name}: expected Error::Format, got {e:?}"
+            );
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn row_sum_nnz_mismatch_rejected() {
+        // header says nnz = 5, rows sum to 3
+        let p = raw_mat_file("nnz-mismatch.bin", &[2, 2, 5, 1, 2], &[]);
+        let e = read_mat(&p, ThreadCtx::serial());
+        assert!(matches!(e, Err(Error::Format(_))), "got {e:?}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn short_rows_and_truncated_payload_rejected() {
+        // consistent header (2x2, nnz 2, rows 1+1) but no column/value
+        // payload at all: must fail typed in read_exact, not abort.
+        let p = raw_mat_file("short-rows.bin", &[2, 2, 2, 1, 1], &[]);
+        assert!(read_mat(&p, ThreadCtx::serial()).is_err());
+        std::fs::remove_file(p).ok();
+        // payload stops mid-values
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&0i32.to_be_bytes());
+        payload.extend_from_slice(&1i32.to_be_bytes());
+        payload.extend_from_slice(&1.5f64.to_be_bytes());
+        let p = raw_mat_file("short-vals.bin", &[2, 2, 2, 1, 1], &payload);
+        assert!(read_mat(&p, ThreadCtx::serial()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn negative_vec_len_rejected() {
+        let p = tmp("neg-vec.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&VEC_FILE_CLASSID.to_be_bytes());
+        bytes.extend_from_slice(&(-7i32).to_be_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let e = read_vec(&p, ThreadCtx::serial());
+        assert!(matches!(e, Err(Error::Format(_))), "got {e:?}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn oversized_header_fails_typed_not_oom() {
+        // nnz = i32::MAX with an empty payload: capacity is capped, the
+        // loop fails on the first missing byte with a typed Io error.
+        let p = raw_mat_file("huge-nnz.bin", &[1, 1, i32::MAX, i32::MAX], &[]);
         assert!(read_mat(&p, ThreadCtx::serial()).is_err());
         std::fs::remove_file(p).ok();
     }

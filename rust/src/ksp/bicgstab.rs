@@ -161,6 +161,7 @@ fn done(
         final_residual,
         history,
         attempts: 1,
+        mat_format: "aij",
     }
 }
 

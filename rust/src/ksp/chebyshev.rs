@@ -195,6 +195,7 @@ fn solve_inner(
                 final_residual: rnorm,
                 history,
                 attempts: 1,
+                mat_format: "aij",
             });
         }
         pcapply(pc, &r, &mut z, log)?;

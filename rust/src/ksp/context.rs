@@ -38,6 +38,7 @@ use crate::ksp::block::BlockStats;
 use crate::ksp::{
     bicgstab, cg, chebyshev, fused, gmres, richardson, ConvergedReason, KspConfig, SolveStats,
 };
+use crate::mat::format as mat_format;
 use crate::mat::mpiaij::MatMPIAIJ;
 use crate::pc::{self, FusedPc, Precond};
 use crate::vec::mpi::VecMPI;
@@ -165,6 +166,11 @@ pub struct Ksp<'a> {
     /// Fused-region classification of the built PC (None until set_up).
     pc_fusable: Option<bool>,
     set_up_done: bool,
+    /// The diag-block format `set_up` installed on the operator — the
+    /// `-mat_type` override, or the autotuner's cached pick. Re-resolved
+    /// (and re-measured under "auto") whenever `set_operators` invalidates
+    /// the setup; reported through [`SolveStats::mat_format`].
+    mat_format: &'static str,
     /// How many times `set_up` actually performed setup work (the
     /// amortization tests assert this stays at 1 across repeated solves).
     setups: u64,
@@ -189,6 +195,7 @@ impl<'a> Ksp<'a> {
             bounds: None,
             pc_fusable: None,
             set_up_done: false,
+            mat_format: "aij",
             setups: 0,
             log: EventLog::new(),
             last: None,
@@ -218,6 +225,7 @@ impl<'a> Ksp<'a> {
         self.bounds = None;
         self.pc_fusable = None;
         self.set_up_done = false;
+        self.mat_format = "aij";
     }
 
     /// Release the operator borrow (e.g. to inspect the matrix after the
@@ -227,6 +235,7 @@ impl<'a> Ksp<'a> {
         self.pc = None;
         self.bounds = None;
         self.pc_fusable = None;
+        self.mat_format = "aij";
         self.a.take()
     }
 
@@ -345,6 +354,25 @@ impl<'a> Ksp<'a> {
             let _ = a.enable_hybrid();
         }
 
+        // 1b. The diag-block local-operator format (`-mat_type`). An
+        //     explicit choice applies on any path (BAIJ negotiates its
+        //     block size collectively, so an infeasible request errors on
+        //     every rank identically — no hang). "auto" measures only when
+        //     the hybrid plan is active: there the slot-fold contract makes
+        //     the pick bitwise invisible, whereas the plain whole-matrix
+        //     kernels agree across formats only to rounding — so "auto" on
+        //     the plain path conservatively stays on CSR.
+        self.mat_format = match mat_format::MatFormat::parse(&self.cfg.mat_type)? {
+            Some(f) => mat_format::apply_format(a, f, self.cfg.mat_block_size, comm)?,
+            None if a.hybrid_enabled() => {
+                mat_format::autotune_local_format(a, self.cfg.mat_block_size, comm, &self.log)?
+            }
+            None => {
+                a.set_local_format(mat_format::MatFormat::Aij, 0)?;
+                "aij"
+            }
+        };
+
         // 2. The preconditioner (factorizations, colorings, hierarchies).
         if self.pc.is_none() {
             self.pc = Some(pc::from_name(&self.pc_name, a, comm)?);
@@ -445,6 +473,7 @@ impl<'a> Ksp<'a> {
             stats.attempts = attempt;
             stats.iterations = total_its;
             stats.history = full_history;
+            stats.mat_format = self.mat_format;
             break stats;
         };
         if let Some(m) = self.monitor.as_mut() {
@@ -584,6 +613,11 @@ impl<'a> Ksp<'a> {
     /// solve contract asserts this stays at 1 however many solves run.
     pub fn setup_count(&self) -> u64 {
         self.setups
+    }
+
+    /// The diag-block format `set_up` installed ("aij" until setup runs).
+    pub fn mat_format(&self) -> &'static str {
+        self.mat_format
     }
 
     /// The per-object event log (`KSPSolve`, `MatMult`, ... timings of

@@ -214,6 +214,7 @@ fn finish(
         final_residual,
         history,
         attempts: 1,
+        mat_format: "aij",
     }
 }
 

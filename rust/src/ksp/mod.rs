@@ -111,6 +111,14 @@ pub struct KspConfig {
     pub richardson_scale: f64,
     /// Record per-iteration residual norms.
     pub monitor: bool,
+    /// Local-operator format for the diagonal block (`-mat_type`):
+    /// `"aij"` / `"baij"` / `"sell"` force a backend, `"auto"` (default)
+    /// lets [`context::Ksp::set_up`] trial-run the candidates and cache
+    /// the fastest. The hybrid fold contract makes the choice bitwise
+    /// invisible to residual histories.
+    pub mat_type: String,
+    /// BAIJ block-size hint (`-mat_block_size`); 0 probes {2, 3, 4}.
+    pub mat_block_size: usize,
 }
 
 impl Default for KspConfig {
@@ -124,6 +132,8 @@ impl Default for KspConfig {
             max_restarts: 0,
             richardson_scale: 1.0,
             monitor: false,
+            mat_type: "auto".into(),
+            mat_block_size: 0,
         }
     }
 }
@@ -143,6 +153,10 @@ pub struct SolveStats {
     /// restart policy in [`context::Ksp::solve`]). Always 1 for a direct
     /// free-function solve.
     pub attempts: usize,
+    /// Local-operator format the operator ran with ("aij" / "sell" /
+    /// "baij") — the `-mat_type` override or the autotuner's cached pick.
+    /// "aij" for direct free-function solves, which never retune.
+    pub mat_format: &'static str,
 }
 
 impl SolveStats {
@@ -161,6 +175,7 @@ impl SolveStats {
             final_residual,
             history,
             attempts: 1,
+            mat_format: "aij",
         }
     }
 

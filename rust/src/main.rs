@@ -141,7 +141,9 @@ fn solve(argv: &[String]) -> Result<()> {
             "none|jacobi|bjacobi|sor|sor-colored|ilu0|ilu0-level|gamg|gamg-fused",
         )
         .opt("rtol", Some("1e-8"), "relative tolerance")
-        .opt("max-restarts", Some("0"), "breakdown restarts before giving up");
+        .opt("max-restarts", Some("0"), "breakdown restarts before giving up")
+        .opt("mat-type", Some("auto"), "aij|baij|sell|auto (measured pick)")
+        .opt("mat-block-size", Some("0"), "BAIJ block-size hint (0 probes 2..4)");
     let a = cli.parse(argv)?;
     let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let mut cfg = HybridConfig::default_for(
@@ -154,14 +156,17 @@ fn solve(argv: &[String]) -> Result<()> {
     cfg.pc_type = a.get_or("pc", "jacobi");
     cfg.ksp.rtol = a.get_f64("rtol")?;
     cfg.ksp.max_restarts = a.get_usize("max-restarts")?;
+    cfg.ksp.mat_type = a.get_or("mat-type", "auto");
+    cfg.ksp.mat_block_size = a.get_usize("mat-block-size")?;
     let rep = run_case(&cfg)?;
     println!(
-        "{} {}x{}: converged={} its={} KSPSolve={} MatMult={} msgs={} bytes={}",
+        "{} {}x{}: converged={} its={} mat={} KSPSolve={} MatMult={} msgs={} bytes={}",
         case.name(),
         cfg.ranks,
         cfg.threads,
         rep.converged,
         rep.iterations,
+        rep.mat_format,
         human::secs(rep.ksp_time),
         human::secs(rep.matmult_time),
         rep.messages,

@@ -143,10 +143,13 @@ impl MatSeqBAIJ {
         let raw = RawMut(y.as_mut_ptr());
         self.ctx.for_range(self.brows, |_t, lo, hi| {
             for bi in lo..hi {
-                // accumulate the block row into a small local buffer
-                let mut acc = [0.0f64; 16]; // bs ≤ 4 fast path
+                // accumulate the block row into a small local buffer; the
+                // stack buffer serves every bs it can hold (it holds 16 —
+                // gating at 4 forced a heap allocation per block row for
+                // 4 < bs ≤ 16)
+                let mut acc = [0.0f64; 16];
                 let mut acc_v;
-                let acc: &mut [f64] = if bs <= 4 {
+                let acc: &mut [f64] = if bs <= 16 {
                     &mut acc[..bs]
                 } else {
                     acc_v = vec![0.0; bs];
@@ -156,12 +159,14 @@ impl MatSeqBAIJ {
                     let bj = self.block_col[k];
                     let blk = &self.blocks[k * bs2..(k + 1) * bs2];
                     let xs = &x[bj * bs..(bj + 1) * bs];
-                    for r in 0..bs {
-                        let mut s = 0.0;
-                        for c in 0..bs {
-                            s += blk[r * bs + c] * xs[c];
+                    // flat per-lane accumulation: entry order (k, c)
+                    // ascending is exactly the expanded CSR row's column
+                    // order, so each lane folds bitwise like the scalar
+                    // CSR fold (the nested `s`-then-add grouping did not)
+                    for (r, a) in acc.iter_mut().enumerate() {
+                        for (c, &xv) in xs.iter().enumerate() {
+                            *a += blk[r * bs + c] * xv;
                         }
-                        acc[r] += s;
                     }
                 }
                 // SAFETY: disjoint block rows.
@@ -171,6 +176,150 @@ impl MatSeqBAIJ {
             }
         });
         Ok(())
+    }
+
+    /// Why `Ok(())` means "blockable": block row `bi`'s first scalar row
+    /// must consist of aligned groups of `bs` consecutive columns, and the
+    /// other `bs − 1` rows must repeat its column slice exactly — i.e. the
+    /// CSR pattern already *is* a fully-populated block pattern. Under
+    /// that condition a conversion is fill-free: every stored block value
+    /// is a bit-copy of a CSR value and no padding zeros enter the fold.
+    fn block_misfit(a: &MatSeqAIJ, bs: usize) -> Option<String> {
+        if bs == 0 || a.rows() % bs != 0 || a.cols() % bs != 0 {
+            return Some(format!(
+                "block size {} does not divide {}x{}",
+                bs,
+                a.rows(),
+                a.cols()
+            ));
+        }
+        let rp = a.row_ptr();
+        let ci = a.col_idx();
+        for bi in 0..a.rows() / bs {
+            let i0 = bi * bs;
+            let c0 = &ci[rp[i0]..rp[i0 + 1]];
+            if c0.len() % bs != 0 {
+                return Some(format!("row {} has {} entries (not a multiple of {bs})", i0, c0.len()));
+            }
+            for g in 0..c0.len() / bs {
+                let j0 = c0[g * bs];
+                if j0 % bs != 0 {
+                    return Some(format!("row {i0}: column group at {j0} is unaligned"));
+                }
+                for t in 1..bs {
+                    if c0[g * bs + t] != j0 + t {
+                        return Some(format!("row {i0}: block at column {j0} not fully populated"));
+                    }
+                }
+            }
+            for r in 1..bs {
+                let i = i0 + r;
+                if &ci[rp[i]..rp[i + 1]] != c0 {
+                    return Some(format!("rows {i0} and {i} differ in pattern within a block row"));
+                }
+            }
+        }
+        None
+    }
+
+    /// Structural feasibility probe for the autotuner: can `a` convert
+    /// fill-free at block size `bs`? (No values are touched.)
+    pub fn csr_blockable(a: &MatSeqAIJ, bs: usize) -> bool {
+        Self::block_misfit(a, bs).is_none()
+    }
+
+    /// Fill-free conversion from CSR: errors unless every touched
+    /// `bs × bs` block is fully populated (see [`MatSeqBAIJ::block_misfit`]).
+    /// Values are bit-copies of the CSR values, blocks ascend in block
+    /// column (CSR columns are sorted), so the per-row fold order is
+    /// exactly the CSR entry order.
+    pub fn from_csr_exact(a: &MatSeqAIJ, bs: usize) -> Result<MatSeqBAIJ> {
+        if let Some(why) = Self::block_misfit(a, bs) {
+            return Err(Error::Unsupported(format!(
+                "BAIJ conversion of {}x{} CSR at bs={bs}: {why}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let brows = a.rows() / bs;
+        let rp = a.row_ptr();
+        let ci = a.col_idx();
+        let av = a.vals();
+        let mut block_ptr = Vec::with_capacity(brows + 1);
+        block_ptr.push(0usize);
+        let mut block_col = Vec::new();
+        let mut blocks = Vec::new();
+        for bi in 0..brows {
+            let i0 = bi * bs;
+            let ngroups = (rp[i0 + 1] - rp[i0]) / bs;
+            for g in 0..ngroups {
+                block_col.push(ci[rp[i0] + g * bs] / bs);
+                for r in 0..bs {
+                    let e0 = rp[i0 + r] + g * bs;
+                    blocks.extend_from_slice(&av[e0..e0 + bs]);
+                }
+            }
+            block_ptr.push(block_col.len());
+        }
+        Ok(MatSeqBAIJ {
+            brows,
+            bcols: a.cols() / bs,
+            bs,
+            block_ptr,
+            block_col,
+            blocks,
+            ctx: a.ctx().clone(),
+        })
+    }
+
+    /// Flat single-accumulator fold over entries `[t0, t0+len)` of scalar
+    /// row `i`, where entry `t` is the row's `t`-th stored entry in
+    /// ascending column order (= CSR position `row_ptr[i] + t` of the
+    /// source matrix for a [`MatSeqBAIJ::from_csr_exact`] conversion).
+    /// Bit-copied values + identical order + one accumulator ⇒ bitwise
+    /// identical to the CSR fold — the hybrid-plan segment contract.
+    #[inline]
+    pub fn fold_row(&self, i: usize, t0: usize, len: usize, x: &[f64]) -> f64 {
+        let bs = self.bs;
+        let bs2 = bs * bs;
+        let (bi, r) = (i / bs, i % bs);
+        let k0 = self.block_ptr[bi];
+        let mut acc = 0.0;
+        for t in t0..t0 + len {
+            let kb = k0 + t / bs;
+            let c = t % bs;
+            acc += self.blocks[kb * bs2 + r * bs + c] * x[self.block_col[kb] * bs + c];
+        }
+        acc
+    }
+
+    /// k-wide fold (`w.len()` columns): per column `col`, the flat fold of
+    /// row `i`'s entries `[t0, t0+len)` against slab `x[col·n ..]`, with
+    /// the same fill-then-entry-major order as the CSR multi kernel.
+    #[inline]
+    pub fn fold_row_multi(
+        &self,
+        i: usize,
+        t0: usize,
+        len: usize,
+        x: &[f64],
+        n: usize,
+        w: &mut [f64],
+    ) {
+        let bs = self.bs;
+        let bs2 = bs * bs;
+        let (bi, r) = (i / bs, i % bs);
+        let k0 = self.block_ptr[bi];
+        w.fill(0.0);
+        for t in t0..t0 + len {
+            let kb = k0 + t / bs;
+            let c = t % bs;
+            let v = self.blocks[kb * bs2 + r * bs + c];
+            let j = self.block_col[kb] * bs + c;
+            for (col, a) in w.iter_mut().enumerate() {
+                *a += v * x[col * n + j];
+            }
+        }
     }
 
     /// Expand to scalar AIJ (for cross-validation and interop).
@@ -308,5 +457,127 @@ mod tests {
         let a = random_baij(4, 2, 1);
         let mut y = vec![0.0; 7];
         assert!(a.mult_slices(&vec![0.0; 8], &mut y).is_err());
+    }
+
+    /// Deterministic BAIJ with strictly nonzero values and non-duplicate
+    /// block positions, so `to_aij()` keeps every entry and the expanded
+    /// CSR row is the exact entry multiset the block kernel folds.
+    fn dense_blocks_baij(brows: usize, bs: usize) -> MatSeqBAIJ {
+        let mut b = BaijBuilder::new(brows, brows, bs);
+        for bi in 0..brows {
+            for (which, bj) in [bi, (bi + 1) % brows, (bi + 3) % brows].into_iter().enumerate() {
+                let blk: Vec<f64> = (0..bs * bs)
+                    .map(|e| 0.25 + ((bi * 31 + bj * 7 + which * 3 + e) % 13) as f64 * 0.125)
+                    .collect();
+                b.add_block(bi, bj, &blk).unwrap();
+            }
+        }
+        b.assemble(ctx())
+    }
+
+    /// Satellite regression: the block kernel must fold each lane exactly
+    /// like a flat single-accumulator sweep of the expanded CSR row — at
+    /// every bs, including the 4 < bs ≤ 16 range the old gate sent to the
+    /// heap and the nested-accumulator grouping silently perturbed.
+    #[test]
+    fn mult_is_bitwise_flat_csr_fold_across_bs() {
+        for bs in [1usize, 2, 3, 4, 5, 8, 16, 17] {
+            let a = dense_blocks_baij(9, bs);
+            let aij = a.to_aij();
+            assert_eq!(aij.nnz(), a.nnz(), "bs={bs}: to_aij dropped entries");
+            let n = a.cols();
+            let x: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.19).sin()).collect();
+            let mut y = vec![0.0; n];
+            a.mult_slices(&x, &mut y).unwrap();
+            let (rp, ci, av) = (aij.row_ptr(), aij.col_idx(), aij.vals());
+            for i in 0..n {
+                let mut acc = 0.0;
+                for e in rp[i]..rp[i + 1] {
+                    acc += av[e] * x[ci[e]];
+                }
+                assert_eq!(y[i].to_bits(), acc.to_bits(), "bs={bs} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_csr_exact_roundtrips_bitwise() {
+        for bs in [1usize, 2, 3, 5] {
+            let src = dense_blocks_baij(7, bs);
+            let aij = src.to_aij();
+            assert!(MatSeqBAIJ::csr_blockable(&aij, bs));
+            let back = MatSeqBAIJ::from_csr_exact(&aij, bs).unwrap();
+            assert_eq!(back.nnz_blocks(), src.nnz_blocks(), "bs={bs}");
+            let n = aij.rows();
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.23).cos() + 1.1).collect();
+            let (rp, ci, av) = (aij.row_ptr(), aij.col_idx(), aij.vals());
+            for i in 0..n {
+                let len = rp[i + 1] - rp[i];
+                for t0 in 0..=len {
+                    let mut acc = 0.0;
+                    for e in rp[i] + t0..rp[i + 1] {
+                        acc += av[e] * x[ci[e]];
+                    }
+                    let got = back.fold_row(i, t0, len - t0, &x);
+                    assert_eq!(got.to_bits(), acc.to_bits(), "bs={bs} row {i} from {t0}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_row_multi_matches_csr_segment_math() {
+        let src = dense_blocks_baij(6, 3);
+        let aij = src.to_aij();
+        let b = MatSeqBAIJ::from_csr_exact(&aij, 3).unwrap();
+        let n = aij.rows();
+        let k = 3;
+        let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.07).sin() + 1.4).collect();
+        let (rp, ci, av) = (aij.row_ptr(), aij.col_idx(), aij.vals());
+        let mut w = vec![0.0; k];
+        let mut wref = vec![0.0; k];
+        for i in 0..n {
+            b.fold_row_multi(i, 0, rp[i + 1] - rp[i], &x, n, &mut w);
+            wref.fill(0.0);
+            for e in rp[i]..rp[i + 1] {
+                let v = av[e];
+                let j = ci[e];
+                for (c, a) in wref.iter_mut().enumerate() {
+                    *a += v * x[c * n + j];
+                }
+            }
+            for (c, (g, r)) in w.iter().zip(&wref).enumerate() {
+                assert_eq!(g.to_bits(), r.to_bits(), "row {i} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_csr_exact_rejects_misfits() {
+        // dimensions not divisible
+        let a5 = {
+            let mut b = MatBuilder::new(5, 5);
+            for i in 0..5 {
+                b.add(i, i, 1.0).unwrap();
+            }
+            b.assemble(ThreadCtx::serial())
+        };
+        assert!(MatSeqBAIJ::from_csr_exact(&a5, 2).is_err());
+        assert!(!MatSeqBAIJ::csr_blockable(&a5, 2));
+        // partially populated block (isolated scalar entry)
+        let sparse = {
+            let mut b = MatBuilder::new(4, 4);
+            for i in 0..4 {
+                b.add(i, i, 2.0).unwrap();
+            }
+            b.add(0, 3, 1.0).unwrap();
+            b.assemble(ThreadCtx::serial())
+        };
+        assert!(MatSeqBAIJ::from_csr_exact(&sparse, 2).is_err());
+        assert!(!MatSeqBAIJ::csr_blockable(&sparse, 2));
+        // bs = 1 always fits
+        assert!(MatSeqBAIJ::csr_blockable(&sparse, 1));
+        let b1 = MatSeqBAIJ::from_csr_exact(&sparse, 1).unwrap();
+        assert_eq!(b1.nnz(), sparse.nnz());
     }
 }

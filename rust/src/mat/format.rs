@@ -1,0 +1,360 @@
+//! Local-operator format zoo: the `-mat_type` surface, the [`LocalOp`]
+//! dispatch the hybrid plan folds through, and the measured per-matrix
+//! autotuner `Ksp::set_up` runs.
+//!
+//! Why a format choice can be *invisible* to the solver: the hybrid plan's
+//! segment contract (PR 2) fixes the per-(row, slot) entry multiset, the
+//! within-segment entry order (ascending column = CSR order), and the
+//! single-accumulator fold. Any backend that yields bit-copied CSR values
+//! in that order — SELL-C-σ's `fold_row`, BAIJ's fill-free block walk —
+//! produces bitwise-identical partials, so residual histories cannot
+//! depend on which format won the trial. That is also why the autotuner
+//! may time candidates with wall-clock (nondeterministic!) timers and
+//! still keep every golden history bitwise reproducible: only *speed*
+//! varies with the pick, never a bit of the numerics.
+//!
+//! The trial policy is deliberately small: one warm-up plus
+//! [`TRIAL_REPS`] timed whole-diagonal-block fold sweeps per candidate
+//! (the actual phase-A hot kernel), min-of-reps per rank, summed across
+//! ranks with an `allgather` so every rank arg-mins the same totals and
+//! the pick is collective without a designated root. Ties break toward
+//! the earlier candidate, i.e. toward plain CSR.
+
+use std::sync::Arc;
+
+use crate::comm::endpoint::Comm;
+use crate::coordinator::logging::EventLog;
+use crate::error::{Error, Result};
+use crate::mat::baij::MatSeqBAIJ;
+use crate::mat::csr::MatSeqAIJ;
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::mat::sell::MatSeqSell;
+use crate::vec::ctx::ThreadCtx;
+
+/// Timed repetitions per autotuner candidate (after one warm-up).
+pub const TRIAL_REPS: usize = 3;
+
+/// The `-mat_type` vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatFormat {
+    /// Scalar CSR (PETSc "aij") — the baseline every format must match
+    /// bitwise on the fold path.
+    Aij,
+    /// Blocked CSR (PETSc "baij"), fill-free: only available when a block
+    /// size tiles the local diagonal block exactly.
+    Baij,
+    /// SELL-C-σ sliced ELLPACK.
+    Sell,
+}
+
+impl MatFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            MatFormat::Aij => "aij",
+            MatFormat::Baij => "baij",
+            MatFormat::Sell => "sell",
+        }
+    }
+
+    /// Parse a `-mat_type` value. `Ok(None)` means "auto" — let the
+    /// autotuner measure and pick.
+    pub fn parse(s: &str) -> Result<Option<MatFormat>> {
+        match s {
+            "auto" => Ok(None),
+            "aij" | "csr" => Ok(Some(MatFormat::Aij)),
+            "baij" => Ok(Some(MatFormat::Baij)),
+            "sell" | "sell-c-sigma" => Ok(Some(MatFormat::Sell)),
+            other => Err(Error::InvalidOption(format!(
+                "-mat_type {other}: expected one of {{aij, baij, sell, auto}}"
+            ))),
+        }
+    }
+}
+
+/// The materialized local-operator backend for a rank's diagonal block.
+/// `Csr` is weightless (the block's own CSR arrays serve); the other two
+/// carry a converted copy whose values are bit-copies of the CSR values.
+#[derive(Debug, Default)]
+pub enum LocalStore {
+    #[default]
+    Csr,
+    Sell(MatSeqSell),
+    Baij(MatSeqBAIJ),
+}
+
+impl LocalStore {
+    pub fn format_name(&self) -> &'static str {
+        match self {
+            LocalStore::Csr => "aij",
+            LocalStore::Sell(_) => "sell",
+            LocalStore::Baij(_) => "baij",
+        }
+    }
+}
+
+/// A borrowed (CSR block, backend store) pair — the value the hybrid
+/// split hands to the plan kernels. `Copy`, so call sites that used to
+/// pass `&MatSeqAIJ` pass a `LocalOp` unchanged. The CSR block is always
+/// present: segment bounds are CSR entry ranges, and the CSR arrays
+/// remain the source of truth for structure (`row_ptr`) regardless of
+/// which backend folds the values.
+#[derive(Clone, Copy)]
+pub struct LocalOp<'m> {
+    csr: &'m MatSeqAIJ,
+    store: &'m LocalStore,
+}
+
+impl<'m> LocalOp<'m> {
+    pub fn new(csr: &'m MatSeqAIJ, store: &'m LocalStore) -> LocalOp<'m> {
+        LocalOp { csr, store }
+    }
+
+    pub fn ctx(&self) -> &'m Arc<ThreadCtx> {
+        self.csr.ctx()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.csr.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.csr.cols()
+    }
+
+    /// The underlying CSR block (structure source of truth).
+    pub fn csr(&self) -> &'m MatSeqAIJ {
+        self.csr
+    }
+
+    pub fn format_name(&self) -> &'static str {
+        self.store.format_name()
+    }
+
+    /// Flat single-accumulator fold of row `i`'s CSR entry range
+    /// `[lo, hi)` against `x` — the hybrid plan's phase-A segment kernel.
+    /// Every arm folds the same bit-copied values in the same (ascending
+    /// column) order with one accumulator, so the result is bitwise
+    /// independent of the backend.
+    #[inline]
+    pub fn fold_segment(&self, i: usize, lo: usize, hi: usize, x: &[f64]) -> f64 {
+        match self.store {
+            LocalStore::Csr => {
+                let vals = self.csr.vals();
+                let cols = self.csr.col_idx();
+                let mut acc = 0.0;
+                for k in lo..hi {
+                    acc += vals[k] * x[cols[k]];
+                }
+                acc
+            }
+            LocalStore::Sell(s) => {
+                let t0 = lo - self.csr.row_ptr()[i];
+                s.fold_row(i, t0, hi - lo, x)
+            }
+            LocalStore::Baij(b) => {
+                let t0 = lo - self.csr.row_ptr()[i];
+                b.fold_row(i, t0, hi - lo, x)
+            }
+        }
+    }
+
+    /// k-wide segment fold (SpMM phase A): per column `c`, the flat fold
+    /// of entries `[lo, hi)` against slab `x[c·cols() ..]`; accumulation
+    /// order per column identical to [`LocalOp::fold_segment`].
+    #[inline]
+    pub fn fold_segment_multi(&self, i: usize, lo: usize, hi: usize, x: &[f64], w: &mut [f64]) {
+        let n = self.csr.cols();
+        match self.store {
+            LocalStore::Csr => {
+                let vals = self.csr.vals();
+                let cols = self.csr.col_idx();
+                w.fill(0.0);
+                for e in lo..hi {
+                    let v = vals[e];
+                    let j = cols[e];
+                    for (c, a) in w.iter_mut().enumerate() {
+                        *a += v * x[c * n + j];
+                    }
+                }
+            }
+            LocalStore::Sell(s) => {
+                let t0 = lo - self.csr.row_ptr()[i];
+                s.fold_row_multi(i, t0, hi - lo, x, n, w);
+            }
+            LocalStore::Baij(b) => {
+                let t0 = lo - self.csr.row_ptr()[i];
+                b.fold_row_multi(i, t0, hi - lo, x, n, w);
+            }
+        }
+    }
+}
+
+/// One timed whole-block sweep through the phase-A fold kernel: exactly
+/// what the hybrid overlap runs per row, so the trial measures the code
+/// path the pick will feed.
+fn trial_sweep(op: LocalOp<'_>, x: &[f64], y: &mut [f64]) {
+    let rp = op.csr().row_ptr();
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = op.fold_segment(i, rp[i], rp[i + 1], x);
+    }
+}
+
+/// Min-of-reps trial time for one candidate backend on this rank. Each
+/// rep runs under the deterministic `MatFormatTrial` event hook (2·nnz
+/// flops), so `-log_summary` style reports account the trial work.
+pub fn trial_seconds(op: LocalOp<'_>, x: &[f64], y: &mut [f64], log: &EventLog) -> f64 {
+    let flops = 2.0 * op.nnz() as f64;
+    trial_sweep(op, x, y); // warm-up: paging, conversion caches
+    let mut best = f64::INFINITY;
+    for _ in 0..TRIAL_REPS {
+        let secs = log.timed("MatFormatTrial", flops, || {
+            let ((), s) = crate::util::timer::timed(|| trial_sweep(op, x, y));
+            s
+        });
+        if secs < best {
+            best = secs;
+        }
+    }
+    best
+}
+
+/// BAIJ block sizes probed when no `-mat_block_size` hint is given.
+const BS_PROBE: [usize; 3] = [2, 3, 4];
+
+/// Collectively agree on a BAIJ block size: probe `{hint}` (or
+/// [`BS_PROBE`]) for *structural* fill-free feasibility on every rank's
+/// diagonal block, AND-fold the feasibility masks via `allgather`, and
+/// return the largest block size feasible everywhere (0 if none). Every
+/// rank computes the identical answer, so downstream decisions —
+/// including error returns — stay collective and hang-free.
+pub fn collective_bs(a: &MatMPIAIJ, bs_hint: usize, comm: &mut Comm) -> Result<usize> {
+    let probe: Vec<usize> = if bs_hint > 0 {
+        vec![bs_hint]
+    } else {
+        BS_PROBE.to_vec()
+    };
+    let mut mask = 0u32;
+    for (p, &bs) in probe.iter().enumerate() {
+        if MatSeqBAIJ::csr_blockable(a.diag_block(), bs) {
+            mask |= 1 << p;
+        }
+    }
+    let masks = comm.allgather(mask)?;
+    let all = masks.iter().fold(u32::MAX, |m, &v| m & v);
+    let mut best = 0usize;
+    for (p, &bs) in probe.iter().enumerate() {
+        if all & (1 << p) != 0 && bs > best {
+            best = bs;
+        }
+    }
+    Ok(best)
+}
+
+/// Measure CSR / BAIJ (when collectively feasible) / SELL-C-σ on the
+/// assembled operator and install the fastest backend. The timings are
+/// wall-clock and nondeterministic; the *pick* is still collective
+/// (summed times are allgathered, every rank arg-mins the same totals)
+/// and the numerics are bitwise independent of it (see module docs).
+/// Returns the winning format name.
+pub fn autotune_local_format(
+    a: &mut MatMPIAIJ,
+    bs_hint: usize,
+    comm: &mut Comm,
+    log: &EventLog,
+) -> Result<&'static str> {
+    let bs = collective_bs(a, bs_hint, comm)?;
+    let mut cands: Vec<(MatFormat, usize)> = vec![(MatFormat::Aij, 0)];
+    if bs > 0 {
+        cands.push((MatFormat::Baij, bs));
+    }
+    cands.push((MatFormat::Sell, 0));
+
+    let n = a.diag_block().cols();
+    let x: Vec<f64> = (0..n).map(|j| 1.0 + ((j % 1000) as f64) * 1e-3).collect();
+    let mut y = vec![0.0f64; a.local_rows()];
+    let mut times = Vec::with_capacity(cands.len());
+    for &(f, b) in &cands {
+        a.set_local_format(f, b)?;
+        times.push(trial_seconds(a.local_op(), &x, &mut y, log));
+    }
+
+    // Same candidate list on every rank (bs is collective), so the
+    // gathered vectors align elementwise.
+    let gathered = comm.allgather(times)?;
+    let mut total = vec![0.0f64; cands.len()];
+    for t in &gathered {
+        for (s, v) in total.iter_mut().zip(t) {
+            *s += *v;
+        }
+    }
+    let mut best = 0usize;
+    for (idx, s) in total.iter().enumerate() {
+        if *s < total[best] {
+            best = idx;
+        }
+    }
+    let (f, b) = cands[best];
+    a.set_local_format(f, b)?;
+    Ok(a.local_format())
+}
+
+/// Apply an explicit `-mat_type` choice. BAIJ resolves its block size
+/// collectively and errors (on every rank, identically) when no probed
+/// size tiles all ranks' blocks. Returns the installed format name.
+pub fn apply_format(
+    a: &mut MatMPIAIJ,
+    f: MatFormat,
+    bs_hint: usize,
+    comm: &mut Comm,
+) -> Result<&'static str> {
+    match f {
+        MatFormat::Baij => {
+            let bs = collective_bs(a, bs_hint, comm)?;
+            if bs == 0 {
+                return Err(Error::InvalidOption(format!(
+                    "-mat_type baij: no block size in {:?} tiles every rank's \
+                     diagonal block fill-free (hint {bs_hint})",
+                    if bs_hint > 0 {
+                        vec![bs_hint]
+                    } else {
+                        BS_PROBE.to_vec()
+                    }
+                )));
+            }
+            a.set_local_format(MatFormat::Baij, bs)?;
+        }
+        other => a.set_local_format(other, 0)?,
+    }
+    Ok(a.local_format())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_vocabulary() {
+        assert_eq!(MatFormat::parse("auto").unwrap(), None);
+        assert_eq!(MatFormat::parse("aij").unwrap(), Some(MatFormat::Aij));
+        assert_eq!(MatFormat::parse("csr").unwrap(), Some(MatFormat::Aij));
+        assert_eq!(MatFormat::parse("baij").unwrap(), Some(MatFormat::Baij));
+        assert_eq!(MatFormat::parse("sell").unwrap(), Some(MatFormat::Sell));
+        assert_eq!(
+            MatFormat::parse("sell-c-sigma").unwrap(),
+            Some(MatFormat::Sell)
+        );
+        assert!(MatFormat::parse("dense").is_err());
+        assert!(MatFormat::parse("").is_err());
+    }
+
+    #[test]
+    fn store_names() {
+        assert_eq!(LocalStore::Csr.format_name(), "aij");
+        assert_eq!(MatFormat::Sell.name(), "sell");
+        assert_eq!(MatFormat::Baij.name(), "baij");
+    }
+}

@@ -4,11 +4,15 @@
 pub mod csr;
 pub mod dense;
 pub mod baij;
+pub mod format;
 pub mod mpiaij;
+pub mod sell;
 pub mod shell;
 
 pub use baij::{BaijBuilder, MatSeqBAIJ};
 pub use csr::{MatBuilder, MatSeqAIJ};
 pub use dense::MatSeqDense;
+pub use format::{LocalOp, LocalStore, MatFormat};
 pub use mpiaij::{HybridPlan, HybridSeg, MatMPIAIJ};
+pub use sell::MatSeqSell;
 pub use shell::MatShell;

@@ -22,7 +22,10 @@ use std::sync::Arc;
 use crate::comm::endpoint::Comm;
 use crate::comm::message::{Tag, RESERVED_TAG_BASE};
 use crate::error::{Error, Result};
+use crate::mat::baij::MatSeqBAIJ;
 use crate::mat::csr::{MatBuilder, MatSeqAIJ};
+use crate::mat::format::{LocalOp, LocalStore, MatFormat};
+use crate::mat::sell::{self, MatSeqSell};
 use crate::thread::schedule::nnz_balanced_chunks;
 use crate::vec::ctx::ThreadCtx;
 use crate::vec::mpi::{Layout, SlotGrid, VecMPI};
@@ -116,10 +119,14 @@ impl HybridPlan {
     /// Phase A: diagonal-block slot partials for rows `[rlo, rhi)`, while
     /// ghost messages are in flight. `partials` is the scratch window for
     /// exactly these rows' segments (`seg_ptr[rhi] − seg_ptr[rlo]` slots);
-    /// off-block segment entries are left untouched.
+    /// off-block segment entries are left untouched. `diag` is the
+    /// format-dispatching local operator: every backend's
+    /// [`LocalOp::fold_segment`] folds the same bit-copied entries in the
+    /// same order with one accumulator, so the partials — and hence every
+    /// downstream slot fold — are bitwise independent of the format.
     pub fn diag_partials(
         &self,
-        diag: &MatSeqAIJ,
+        diag: LocalOp<'_>,
         x: &[f64],
         rlo: usize,
         rhi: usize,
@@ -127,16 +134,12 @@ impl HybridPlan {
     ) {
         let base = self.seg_ptr[rlo];
         debug_assert_eq!(partials.len(), self.seg_ptr[rhi] - base);
-        let vals = diag.vals();
-        let cols = diag.col_idx();
-        for s in base..self.seg_ptr[rhi] {
-            let seg = self.segs[s];
-            if !seg.off {
-                let mut acc = 0.0;
-                for k in seg.lo..seg.hi {
-                    acc += vals[k] * x[cols[k]];
+        for i in rlo..rhi {
+            for s in self.seg_ptr[i]..self.seg_ptr[i + 1] {
+                let seg = self.segs[s];
+                if !seg.off {
+                    partials[s - base] = diag.fold_segment(i, seg.lo, seg.hi, x);
                 }
-                partials[s - base] = acc;
             }
         }
     }
@@ -189,7 +192,7 @@ impl HybridPlan {
     /// plan MatMult.
     pub fn diag_partials_multi(
         &self,
-        diag: &MatSeqAIJ,
+        diag: LocalOp<'_>,
         x: &[f64],
         k: usize,
         rlo: usize,
@@ -199,20 +202,12 @@ impl HybridPlan {
         let base = self.seg_ptr[rlo];
         debug_assert_eq!(partials.len(), (self.seg_ptr[rhi] - base) * k);
         debug_assert_eq!(x.len(), diag.cols() * k);
-        let vals = diag.vals();
-        let cols = diag.col_idx();
-        let n = diag.cols();
-        for s in base..self.seg_ptr[rhi] {
-            let seg = self.segs[s];
-            if !seg.off {
-                let w = &mut partials[(s - base) * k..(s - base) * k + k];
-                w.fill(0.0);
-                for e in seg.lo..seg.hi {
-                    let v = vals[e];
-                    let j = cols[e];
-                    for (c, a) in w.iter_mut().enumerate() {
-                        *a += v * x[c * n + j];
-                    }
+        for i in rlo..rhi {
+            for s in self.seg_ptr[i]..self.seg_ptr[i + 1] {
+                let seg = self.segs[s];
+                if !seg.off {
+                    let w = &mut partials[(s - base) * k..(s - base) * k + k];
+                    diag.fold_segment_multi(i, seg.lo, seg.hi, x, w);
                 }
             }
         }
@@ -310,6 +305,12 @@ pub struct MatMPIAIJ {
     /// re-enables don't count). The `Ksp` repeated-solve contract asserts
     /// this stays at 1 across cached solves.
     hybrid_builds: u64,
+    /// The diagonal block's local-operator backend (`-mat_type`): CSR by
+    /// default, or a SELL-C-σ / BAIJ conversion installed by
+    /// [`MatMPIAIJ::set_local_format`] (typically via the `Ksp::set_up`
+    /// autotuner). Values are always bit-copies of `a_diag`'s, so the
+    /// hybrid fold path is bitwise format-independent.
+    diag_store: LocalStore,
 }
 
 impl MatMPIAIJ {
@@ -406,7 +407,48 @@ impl MatMPIAIJ {
             hybrid_scratch_multi: Vec::new(),
             multi_k: 0,
             hybrid_builds: 0,
+            diag_store: LocalStore::Csr,
         })
+    }
+
+    /// Install a local-operator backend for the diagonal block (the
+    /// `-mat_type` machinery). `Sell` converts at the default C/σ over the
+    /// hybrid plan's row partition when one exists (so slice ownership
+    /// matches the threads that will drive the rows), else the block's own
+    /// partition; `Baij` requires `bs ≥ 1` and a fill-free fit
+    /// ([`MatSeqBAIJ::from_csr_exact`]). Purely local and infallible for
+    /// `Aij`; the collective feasibility negotiation lives in
+    /// [`crate::mat::format`].
+    pub fn set_local_format(&mut self, fmt: MatFormat, bs: usize) -> Result<()> {
+        let store = match fmt {
+            MatFormat::Aij => LocalStore::Csr,
+            MatFormat::Sell => {
+                let part: Vec<(usize, usize)> = match &self.hybrid {
+                    Some(plan) => plan.partition().to_vec(),
+                    None => self.a_diag.partition().to_vec(),
+                };
+                LocalStore::Sell(MatSeqSell::from_csr(
+                    &self.a_diag,
+                    sell::DEFAULT_C,
+                    sell::DEFAULT_SIGMA,
+                    &part,
+                )?)
+            }
+            MatFormat::Baij => LocalStore::Baij(MatSeqBAIJ::from_csr_exact(&self.a_diag, bs)?),
+        };
+        self.diag_store = store;
+        Ok(())
+    }
+
+    /// Name of the installed diagonal-block backend ("aij" / "sell" /
+    /// "baij").
+    pub fn local_format(&self) -> &'static str {
+        self.diag_store.format_name()
+    }
+
+    /// The format-dispatching local operator over the diagonal block.
+    pub fn local_op(&self) -> LocalOp<'_> {
+        LocalOp::new(&self.a_diag, &self.diag_store)
     }
 
     /// Build the slot-segmented [`HybridPlan`] for this matrix, keyed to a
@@ -557,14 +599,14 @@ impl MatMPIAIJ {
     }
 
     /// Split-borrow everything the fused hybrid region needs in one call:
-    /// the two sequential blocks (shared), the plan (shared), the per-
-    /// segment scratch and the scatter (both exclusive). Errors until
-    /// [`MatMPIAIJ::enable_hybrid`] has run.
+    /// the diagonal local operator and off block (shared), the plan
+    /// (shared), the per-segment scratch and the scatter (both exclusive).
+    /// Errors until [`MatMPIAIJ::enable_hybrid`] has run.
     #[allow(clippy::type_complexity)]
     pub fn hybrid_split(
         &mut self,
     ) -> Result<(
-        &MatSeqAIJ,
+        LocalOp<'_>,
         &MatSeqAIJ,
         &HybridPlan,
         &mut Vec<f64>,
@@ -572,7 +614,7 @@ impl MatMPIAIJ {
     )> {
         match self.hybrid.as_ref() {
             Some(plan) => Ok((
-                &self.a_diag,
+                LocalOp::new(&self.a_diag, &self.diag_store),
                 &self.b_off,
                 plan,
                 &mut self.hybrid_scratch,
@@ -584,9 +626,9 @@ impl MatMPIAIJ {
         }
     }
 
-    /// Split-borrow for the **batched** fused region: the two sequential
-    /// blocks and the plan (shared), the k-wide scratch and the scatter
-    /// (exclusive). Errors until [`MatMPIAIJ::enable_hybrid`] and
+    /// Split-borrow for the **batched** fused region: the diagonal local
+    /// operator, off block, and plan (shared), the k-wide scratch and the
+    /// scatter (exclusive). Errors until [`MatMPIAIJ::enable_hybrid`] and
     /// [`MatMPIAIJ::ensure_multi_width`]`(k)` have run with the matching
     /// width.
     #[allow(clippy::type_complexity)]
@@ -594,7 +636,7 @@ impl MatMPIAIJ {
         &mut self,
         k: usize,
     ) -> Result<(
-        &MatSeqAIJ,
+        LocalOp<'_>,
         &MatSeqAIJ,
         &HybridPlan,
         &mut Vec<f64>,
@@ -610,7 +652,7 @@ impl MatMPIAIJ {
         }
         match self.hybrid.as_ref() {
             Some(plan) => Ok((
-                &self.a_diag,
+                LocalOp::new(&self.a_diag, &self.diag_store),
                 &self.b_off,
                 plan,
                 &mut self.hybrid_scratch_multi,
@@ -718,7 +760,7 @@ impl MatMPIAIJ {
         match self.hybrid.as_ref() {
             Some(plan) => {
                 let scratch = RawF64(self.hybrid_scratch.as_mut_ptr());
-                let diag = &self.a_diag;
+                let diag = LocalOp::new(&self.a_diag, &self.diag_store);
                 let xs = x.local().as_slice();
                 let ctx = diag.ctx().clone();
                 let t = plan.part.len();
@@ -736,7 +778,19 @@ impl MatMPIAIJ {
                 });
                 Ok(())
             }
-            None => self.a_diag.mult(x.local(), y.local_mut()),
+            // Plain path: whole-block kernels. Unlike the hybrid fold these
+            // are values-level only across formats (CSR's spmv unrolls
+            // 4-way, SELL/BAIJ use per-lane accumulators), which is why the
+            // autotuner only runs when a hybrid plan is active.
+            None => match &self.diag_store {
+                LocalStore::Csr => self.a_diag.mult(x.local(), y.local_mut()),
+                LocalStore::Sell(s) => {
+                    s.mult_slices(x.local().as_slice(), y.local_mut().as_mut_slice())
+                }
+                LocalStore::Baij(b) => {
+                    b.mult_slices(x.local().as_slice(), y.local_mut().as_mut_slice())
+                }
+            },
         }
     }
 
@@ -841,7 +895,7 @@ impl MatMPIAIJ {
         match self.hybrid.as_ref() {
             Some(plan) => {
                 let scratch = RawF64(self.hybrid_scratch_multi.as_mut_ptr());
-                let diag = &self.a_diag;
+                let diag = LocalOp::new(&self.a_diag, &self.diag_store);
                 let xs = x.local().as_slice();
                 let ctx = diag.ctx().clone();
                 let t = plan.part.len();
@@ -862,6 +916,9 @@ impl MatMPIAIJ {
                 });
                 Ok(())
             }
+            // Plain SpMM deliberately stays on the CSR block regardless of
+            // the installed store (SELL SpMM exists but the plain multi
+            // path has no format contract; the autotuner is hybrid-gated).
             None => self
                 .a_diag
                 .mult_multi_slices(x.local().as_slice(), y.local_mut().as_mut_slice(), k),
@@ -1563,6 +1620,104 @@ mod tests {
             let x = VecMPI::new(bad.clone(), c.rank(), ThreadCtx::serial());
             let mut y = VecMPI::new(layout, c.rank(), ThreadCtx::serial());
             assert!(a.mult(&x, &mut y, &mut c).is_err());
+        });
+    }
+
+    /// Block-tridiagonal scalar triplets with bs = 2: every touched 2×2
+    /// block is fully populated (same pattern on both scalar rows of a
+    /// block row), so diag blocks cut on even boundaries stay
+    /// BAIJ-feasible. Values deterministic and strictly nonzero.
+    fn block_rows(n: usize, lo: usize, hi: usize) -> Vec<(usize, usize, f64)> {
+        let bs = 2;
+        let nb = n / bs;
+        let mut es = Vec::new();
+        for i in lo..hi {
+            let bi = i / bs;
+            for bj in [bi.wrapping_sub(1), bi, bi + 1] {
+                if bj >= nb {
+                    continue;
+                }
+                for c in 0..bs {
+                    let j = bj * bs + c;
+                    let v = if i == j {
+                        8.0
+                    } else {
+                        -1.0 - ((i * 3 + j) % 5) as f64 * 0.125
+                    };
+                    es.push((i, j, v));
+                }
+            }
+        }
+        es
+    }
+
+    #[test]
+    fn hybrid_mult_is_bitwise_format_invariant() {
+        // The PR 7 tentpole invariant: with a hybrid plan active, the
+        // installed diag-store format (aij / sell / baij) changes which
+        // kernel folds the segments but not a single bit of y = A·x.
+        let n = 32;
+        let mut bits: Vec<Vec<u64>> = Vec::new();
+        for fmt in [MatFormat::Aij, MatFormat::Sell, MatFormat::Baij] {
+            let outs = World::run(1, move |mut c| {
+                let layout = Layout::slot_aligned(n, 1, 2);
+                let ctx = ThreadCtx::new(2);
+                let mut a = MatMPIAIJ::assemble(
+                    layout.clone(),
+                    layout.clone(),
+                    block_rows(n, 0, n),
+                    &mut c,
+                    ctx.clone(),
+                )
+                .unwrap();
+                a.enable_hybrid().unwrap();
+                a.set_local_format(fmt, 2).unwrap();
+                let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.21).sin() + 1.2).collect();
+                let x =
+                    VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+                let mut y = VecMPI::new(layout, c.rank(), ctx);
+                a.mult(&x, &mut y, &mut c).unwrap();
+                y.gather_all(&mut c).unwrap()
+            });
+            bits.push(outs[0].iter().map(|v| v.to_bits()).collect());
+        }
+        assert_eq!(bits[0], bits[1], "sell vs aij");
+        assert_eq!(bits[0], bits[2], "baij vs aij");
+    }
+
+    #[test]
+    fn plain_mult_dispatches_installed_store() {
+        // Without a hybrid plan the whole-matrix kernels run: SELL agrees
+        // with CSR to rounding, and a BAIJ misfit surfaces as a typed
+        // error instead of silently converting with fill.
+        let n = 30;
+        World::run(1, move |mut c| {
+            let layout = Layout::split(n, 1);
+            let ctx = ThreadCtx::new(2);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                wide_rows(n, 0, n),
+                &mut c,
+                ctx.clone(),
+            )
+            .unwrap();
+            let xs: Vec<f64> = (0..n).map(|i| 1.0 + (i % 9) as f64 * 0.125).collect();
+            let x = VecMPI::from_local_slice(layout.clone(), c.rank(), &xs, ctx.clone()).unwrap();
+            let mut y1 = VecMPI::new(layout.clone(), c.rank(), ctx.clone());
+            assert_eq!(a.local_format(), "aij");
+            a.mult(&x, &mut y1, &mut c).unwrap();
+            a.set_local_format(MatFormat::Sell, 0).unwrap();
+            assert_eq!(a.local_format(), "sell");
+            let mut y2 = VecMPI::new(layout, c.rank(), ctx);
+            a.mult(&x, &mut y2, &mut c).unwrap();
+            for (g, w) in y1.local().as_slice().iter().zip(y2.local().as_slice()) {
+                assert!(close(*g, *w, 1e-12).is_ok(), "{g} vs {w}");
+            }
+            // 1D Laplacian + stray couplings: no fill-free 2×2 tiling.
+            assert!(a.set_local_format(MatFormat::Baij, 2).is_err());
+            // the failed install must not have clobbered the working store
+            assert_eq!(a.local_format(), "sell");
         });
     }
 }

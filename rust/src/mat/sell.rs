@@ -1,0 +1,554 @@
+//! `MatSeqSell` — SELL-C-σ sliced-ELLPACK storage (Kreutzer et al.'s
+//! format, the wide-SIMD winner of the Lange et al. SpMV benchmarking
+//! study the autotuner is built around; see PAPERS.md arXiv 1307.4567).
+//!
+//! Rows are sorted by descending length inside σ-windows (limiting the
+//! sort's damage to locality), then packed into slices of C consecutive
+//! permuted rows, each slice padded to its longest row. Storage within a
+//! slice is **column-major** (`entry t of lane l` at `slice_ptr[s] + t·C +
+//! l`), so a SIMD unit can walk C rows in lock-step with unit stride.
+//!
+//! Two contracts coexist:
+//!
+//! * the whole-matrix kernels ([`MatSeqSell::mult_slices`] /
+//!   [`MatSeqSell::mult_multi_slices`]) run slice-major with per-lane
+//!   accumulators — fast, values-level agreement with CSR (not bitwise:
+//!   CSR's `spmv_rows` unrolls 4-way);
+//! * the per-row fold path ([`MatSeqSell::fold_row`] /
+//!   [`MatSeqSell::fold_row_multi`]) reads **only the row's real entries,
+//!   in CSR order, with one flat accumulator** — values are bit-copies of
+//!   the CSR arrays, so a fold over the same entry range is bitwise
+//!   identical to the CSR fold. This is what lets a SELL-backed diagonal
+//!   block slot under the [`crate::mat::mpiaij::HybridPlan`] segment
+//!   contract without perturbing the decomposition-invariant histories.
+//!
+//! σ-windows and slices never cross the thread-partition chunk boundaries
+//! (the permutation is chunk-local), so the threaded kernels keep the
+//! pool's disjoint row ownership and the permutation never moves a row to
+//! another thread's page.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mat::csr::MatSeqAIJ;
+use crate::vec::ctx::ThreadCtx;
+
+/// Default slice height (lanes walked in lock-step).
+pub const DEFAULT_C: usize = 8;
+/// Default sort-window size (rows sorted by length per window).
+pub const DEFAULT_SIGMA: usize = 32;
+
+/// Lane marker for padding lanes of a ragged final slice.
+const NO_ROW: usize = usize::MAX;
+
+struct RawMut(*mut f64);
+unsafe impl Send for RawMut {}
+unsafe impl Sync for RawMut {}
+impl RawMut {
+    #[inline]
+    fn ptr(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// SELL-C-σ matrix, built from (and value-bit-identical to) a CSR matrix.
+pub struct MatSeqSell {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    c: usize,
+    sigma: usize,
+    /// Permuted row order: `perm[p]` is the original row at packed
+    /// position `p`. Chunk-local (σ-windows never cross chunk cuts).
+    perm: Vec<usize>,
+    /// Storage offset of slice `s` (`nslices + 1` entries); slice `s`
+    /// holds `(slice_ptr[s+1] − slice_ptr[s]) / C` entries per lane.
+    slice_ptr: Vec<usize>,
+    /// Original row of lane `l` in slice `s` (`lane_row[s·C + l]`), or
+    /// [`NO_ROW`] for a padding lane.
+    lane_row: Vec<usize>,
+    /// Column indices, column-major per slice; padding entries are col 0.
+    cols_s: Vec<usize>,
+    /// Values, column-major per slice; padding entries are 0.0.
+    vals_s: Vec<f64>,
+    /// `row_base[i] + t·C` addresses entry `t` of original row `i`.
+    row_base: Vec<usize>,
+    /// Real (unpadded) entries of each original row.
+    row_len: Vec<usize>,
+    /// Slice sub-range `[lo, hi)` per thread chunk.
+    chunk_slices: Vec<(usize, usize)>,
+    ctx: Arc<ThreadCtx>,
+}
+
+impl MatSeqSell {
+    /// Convert a CSR matrix. `part` is the (disjoint, ascending, covering)
+    /// row partition whose chunks bound the σ-windows and slices — pass
+    /// the matrix's own thread partition, or the hybrid plan's, so slice
+    /// ownership matches the kernel that will drive the rows.
+    pub fn from_csr(
+        a: &MatSeqAIJ,
+        c: usize,
+        sigma: usize,
+        part: &[(usize, usize)],
+    ) -> Result<MatSeqSell> {
+        if c < 1 || sigma < 1 {
+            return Err(Error::InvalidOption(
+                "SELL-C-σ: slice height C and window σ must be ≥ 1".into(),
+            ));
+        }
+        let rows = a.rows();
+        let mut cover = 0usize;
+        for &(lo, hi) in part {
+            if lo != cover || hi < lo || hi > rows {
+                return Err(Error::InvalidOption(format!(
+                    "SELL-C-σ: partition chunk ({lo}, {hi}) does not tile 0..{rows}"
+                )));
+            }
+            cover = hi;
+        }
+        if cover != rows {
+            return Err(Error::InvalidOption(format!(
+                "SELL-C-σ: partition covers 0..{cover}, matrix has {rows} rows"
+            )));
+        }
+
+        let rp = a.row_ptr();
+        let ci = a.col_idx();
+        let av = a.vals();
+        let rlen = |i: usize| rp[i + 1] - rp[i];
+
+        // Pass 1: chunk-local σ-window permutation + slice layout.
+        let mut perm: Vec<usize> = Vec::with_capacity(rows);
+        let mut slice_ptr = vec![0usize];
+        let mut lane_row: Vec<usize> = Vec::new();
+        let mut chunk_slices = Vec::with_capacity(part.len());
+        let mut total = 0usize;
+        for &(lo, hi) in part {
+            let first_slice = slice_ptr.len() - 1;
+            let mut w = lo;
+            while w < hi {
+                let we = (w + sigma).min(hi);
+                let mut win: Vec<usize> = (w..we).collect();
+                // Stable order: descending row length, ties by row index.
+                win.sort_by(|&p, &q| rlen(q).cmp(&rlen(p)).then(p.cmp(&q)));
+                perm.extend_from_slice(&win);
+                w = we;
+            }
+            let mut p = lo;
+            while p < hi {
+                let pe = (p + c).min(hi);
+                let width = (p..pe).map(|q| rlen(perm[q])).max().unwrap_or(0);
+                for l in 0..c {
+                    lane_row.push(if p + l < pe { perm[p + l] } else { NO_ROW });
+                }
+                total += width * c;
+                slice_ptr.push(total);
+                p = pe;
+            }
+            chunk_slices.push((first_slice, slice_ptr.len() - 1));
+        }
+
+        // Pass 2: fill the column-major slice storage; values are
+        // bit-copies of the CSR arrays, padding is (col 0, 0.0).
+        let nslices = slice_ptr.len() - 1;
+        let mut cols_s = vec![0usize; total];
+        let mut vals_s = vec![0.0f64; total];
+        let mut row_base = vec![0usize; rows];
+        let mut row_len = vec![0usize; rows];
+        for s in 0..nslices {
+            let base = slice_ptr[s];
+            for l in 0..c {
+                let i = lane_row[s * c + l];
+                if i == NO_ROW {
+                    continue;
+                }
+                let r0 = rp[i];
+                let n = rlen(i);
+                row_base[i] = base + l;
+                row_len[i] = n;
+                for t in 0..n {
+                    cols_s[base + t * c + l] = ci[r0 + t];
+                    vals_s[base + t * c + l] = av[r0 + t];
+                }
+            }
+        }
+
+        Ok(MatSeqSell {
+            rows,
+            cols: a.cols(),
+            nnz: a.nnz(),
+            c,
+            sigma,
+            perm,
+            slice_ptr,
+            lane_row,
+            cols_s,
+            vals_s,
+            row_base,
+            row_len,
+            chunk_slices,
+            ctx: a.ctx().clone(),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Real (CSR) nonzeros — excludes padding.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Stored entries including slice padding.
+    pub fn padded_len(&self) -> usize {
+        self.vals_s.len()
+    }
+
+    pub fn slice_height(&self) -> usize {
+        self.c
+    }
+
+    pub fn sort_window(&self) -> usize {
+        self.sigma
+    }
+
+    /// The stored chunk-local row permutation (`perm[p]` = original row).
+    pub fn permutation(&self) -> &[usize] {
+        &self.perm
+    }
+
+    pub fn nslices(&self) -> usize {
+        self.slice_ptr.len() - 1
+    }
+
+    pub fn ctx(&self) -> &Arc<ThreadCtx> {
+        &self.ctx
+    }
+
+    /// Threaded `y = A·x`, one pool thread per partition chunk. Slice-major
+    /// with per-lane accumulators; padding entries multiply (as 0·x[0]) but
+    /// padding *lanes* never write back. Values-level agreement with CSR.
+    pub fn mult_slices(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.cols || y.len() != self.rows {
+            return Err(Error::size_mismatch(format!(
+                "SELL MatMult: A is {}x{}, x is {}, y is {}",
+                self.rows,
+                self.cols,
+                x.len(),
+                y.len()
+            )));
+        }
+        let raw = RawMut(y.as_mut_ptr());
+        let nch = self.chunk_slices.len();
+        let c = self.c;
+        self.ctx.for_range(nch.max(1), |tid, _l, _h| {
+            if tid >= nch {
+                return;
+            }
+            let (s0, s1) = self.chunk_slices[tid];
+            let mut acc_a = [0.0f64; 16];
+            let mut acc_v = vec![0.0f64; if c > 16 { c } else { 0 }];
+            for s in s0..s1 {
+                let base = self.slice_ptr[s];
+                let width = (self.slice_ptr[s + 1] - base) / c;
+                let acc: &mut [f64] = if c <= 16 {
+                    &mut acc_a[..c]
+                } else {
+                    &mut acc_v[..]
+                };
+                acc.fill(0.0);
+                for t in 0..width {
+                    let e0 = base + t * c;
+                    for (l, a) in acc.iter_mut().enumerate() {
+                        *a += self.vals_s[e0 + l] * x[self.cols_s[e0 + l]];
+                    }
+                }
+                for (l, &v) in acc.iter().enumerate() {
+                    let i = self.lane_row[s * c + l];
+                    if i != NO_ROW {
+                        // SAFETY: slices never cross chunk cuts and chunks
+                        // own disjoint row ranges, so `i` is exclusive to
+                        // this thread.
+                        unsafe { *raw.ptr().add(i) = v };
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// Threaded SpMM `Y = A·X` over `k` column slabs (`x` is `k` slabs of
+    /// `cols`, `y` of `rows`): one slice traversal feeds all `k` columns.
+    pub fn mult_multi_slices(&self, x: &[f64], y: &mut [f64], k: usize) -> Result<()> {
+        if k < 1 || x.len() != self.cols * k || y.len() != self.rows * k {
+            return Err(Error::size_mismatch(format!(
+                "SELL SpMM: A is {}x{}, x is {} ({k} cols), y is {}",
+                self.rows,
+                self.cols,
+                x.len(),
+                y.len()
+            )));
+        }
+        let raw = RawMut(y.as_mut_ptr());
+        let nch = self.chunk_slices.len();
+        let (rows, cols, c) = (self.rows, self.cols, self.c);
+        self.ctx.for_range(nch.max(1), |tid, _l, _h| {
+            if tid >= nch {
+                return;
+            }
+            let (s0, s1) = self.chunk_slices[tid];
+            let mut acc = vec![0.0f64; c * k];
+            for s in s0..s1 {
+                let base = self.slice_ptr[s];
+                let width = (self.slice_ptr[s + 1] - base) / c;
+                acc.fill(0.0);
+                for t in 0..width {
+                    let e0 = base + t * c;
+                    for l in 0..c {
+                        let v = self.vals_s[e0 + l];
+                        let j = self.cols_s[e0 + l];
+                        for (col, a) in acc[l * k..l * k + k].iter_mut().enumerate() {
+                            *a += v * x[col * cols + j];
+                        }
+                    }
+                }
+                for l in 0..c {
+                    let i = self.lane_row[s * c + l];
+                    if i == NO_ROW {
+                        continue;
+                    }
+                    for (col, &v) in acc[l * k..l * k + k].iter().enumerate() {
+                        // SAFETY: disjoint rows per chunk; slab stride
+                        // keeps columns disjoint.
+                        unsafe { *raw.ptr().add(col * rows + i) = v };
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// Flat single-accumulator fold over entries `[t0, t0+len)` of original
+    /// row `i` (entry `t` = CSR position `row_ptr[i] + t`). Reads only real
+    /// entries — **bitwise identical** to the same fold over the CSR
+    /// arrays, which is the hybrid-plan segment contract.
+    #[inline]
+    pub fn fold_row(&self, i: usize, t0: usize, len: usize, x: &[f64]) -> f64 {
+        debug_assert!(t0 + len <= self.row_len[i], "fold beyond row {i}");
+        let b = self.row_base[i];
+        let c = self.c;
+        let mut acc = 0.0;
+        for t in t0..t0 + len {
+            let e = b + t * c;
+            acc += self.vals_s[e] * x[self.cols_s[e]];
+        }
+        acc
+    }
+
+    /// k-wide fold: per column `col`, the flat fold of row `i`'s entries
+    /// `[t0, t0+len)` against slab `x[col·n ..]`, accumulation order
+    /// identical to the CSR multi segment kernel (fill, then entry-major).
+    #[inline]
+    pub fn fold_row_multi(
+        &self,
+        i: usize,
+        t0: usize,
+        len: usize,
+        x: &[f64],
+        n: usize,
+        w: &mut [f64],
+    ) {
+        debug_assert!(t0 + len <= self.row_len[i], "fold beyond row {i}");
+        let b = self.row_base[i];
+        let c = self.c;
+        w.fill(0.0);
+        for t in t0..t0 + len {
+            let e = b + t * c;
+            let v = self.vals_s[e];
+            let j = self.cols_s[e];
+            for (col, a) in w.iter_mut().enumerate() {
+                *a += v * x[col * n + j];
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MatSeqSell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MatSeqSell({}x{}, C={}, σ={}, {} nnz, {} padded, {} slices)",
+            self.rows,
+            self.cols,
+            self.c,
+            self.sigma,
+            self.nnz,
+            self.padded_len(),
+            self.nslices()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::csr::MatBuilder;
+    use crate::ptest::close;
+    use crate::util::rng::XorShift64;
+
+    /// Random CSR with ragged rows (1..=maxlen entries per row).
+    fn random_csr(n: usize, maxlen: usize, seed: u64, ctx: Arc<ThreadCtx>) -> MatSeqAIJ {
+        let mut rng = XorShift64::new(seed);
+        let mut b = MatBuilder::new(n, n);
+        for i in 0..n {
+            b.add(i, i, 2.0 + rng.range_f64(0.25, 1.0)).unwrap();
+            let extra = rng.below(maxlen);
+            for _ in 0..extra {
+                let j = rng.below(n);
+                if j != i {
+                    b.add(i, j, rng.range_f64(0.25, 1.0) - 0.6).unwrap();
+                }
+            }
+        }
+        b.assemble(ctx)
+    }
+
+    #[test]
+    fn values_match_csr_across_shapes() {
+        for (c, sigma) in [(1usize, 1usize), (2, 4), (8, 32), (4, 7), (32, 5)] {
+            let ctx = ThreadCtx::new(3);
+            let a = random_csr(57, 6, c as u64 * 31 + sigma as u64, ctx);
+            let s = MatSeqSell::from_csr(&a, c, sigma, a.partition()).unwrap();
+            assert_eq!(s.nnz(), a.nnz());
+            let x: Vec<f64> = (0..57).map(|i| (i as f64 * 0.31).cos()).collect();
+            let mut ys = vec![0.0; 57];
+            let mut yc = vec![0.0; 57];
+            s.mult_slices(&x, &mut ys).unwrap();
+            a.mult_slices(&x, &mut yc).unwrap();
+            for (i, (g, w)) in ys.iter().zip(&yc).enumerate() {
+                assert!(close(*g, *w, 1e-12).is_ok(), "C={c} σ={sigma} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_is_bitwise_csr() {
+        let ctx = ThreadCtx::new(2);
+        let a = random_csr(41, 5, 9, ctx);
+        let s = MatSeqSell::from_csr(&a, DEFAULT_C, DEFAULT_SIGMA, a.partition()).unwrap();
+        let x: Vec<f64> = (0..41).map(|i| 1.0 + (i as f64 * 0.17).sin()).collect();
+        let (rp, ci, av) = (a.row_ptr(), a.col_idx(), a.vals());
+        for i in 0..41 {
+            let len = rp[i + 1] - rp[i];
+            // whole row, and every split point within it
+            for t0 in 0..=len {
+                let mut acc = 0.0;
+                for e in rp[i] + t0..rp[i + 1] {
+                    acc += av[e] * x[ci[e]];
+                }
+                let got = s.fold_row(i, t0, len - t0, &x);
+                assert_eq!(got.to_bits(), acc.to_bits(), "row {i} from entry {t0}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_fold_matches_csr_segment_math() {
+        let ctx = ThreadCtx::new(2);
+        let a = random_csr(29, 4, 5, ctx);
+        let s = MatSeqSell::from_csr(&a, 4, 8, a.partition()).unwrap();
+        let n = 29;
+        let k = 3;
+        let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.05).sin() + 1.5).collect();
+        let (rp, ci, av) = (a.row_ptr(), a.col_idx(), a.vals());
+        let mut w = vec![0.0; k];
+        let mut wref = vec![0.0; k];
+        for i in 0..n {
+            s.fold_row_multi(i, 0, rp[i + 1] - rp[i], &x, n, &mut w);
+            wref.fill(0.0);
+            for e in rp[i]..rp[i + 1] {
+                let v = av[e];
+                let j = ci[e];
+                for (c, a2) in wref.iter_mut().enumerate() {
+                    *a2 += v * x[c * n + j];
+                }
+            }
+            for (c, (g, r)) in w.iter().zip(&wref).enumerate() {
+                assert_eq!(g.to_bits(), r.to_bits(), "row {i} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_matches_k_single_mults() {
+        let ctx = ThreadCtx::new(3);
+        let a = random_csr(33, 5, 77, ctx);
+        let s = MatSeqSell::from_csr(&a, 8, 16, a.partition()).unwrap();
+        let n = 33;
+        let k = 2;
+        let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.11).cos()).collect();
+        let mut y = vec![0.0; n * k];
+        s.mult_multi_slices(&x, &mut y, k).unwrap();
+        for c in 0..k {
+            let mut y1 = vec![0.0; n];
+            s.mult_slices(&x[c * n..(c + 1) * n], &mut y1).unwrap();
+            for (i, v) in y1.iter().enumerate() {
+                assert_eq!(v.to_bits(), y[c * n + i].to_bits(), "col {c} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_sorts_within_windows_and_chunks() {
+        let ctx = ThreadCtx::new(2);
+        let a = random_csr(40, 6, 123, ctx);
+        let sigma = 8;
+        let s = MatSeqSell::from_csr(&a, 4, sigma, a.partition()).unwrap();
+        let rp = a.row_ptr();
+        let perm = s.permutation();
+        assert_eq!(perm.len(), 40);
+        let mut seen = vec![false; 40];
+        for &i in perm {
+            assert!(!seen[i], "row {i} packed twice");
+            seen[i] = true;
+        }
+        for &(lo, hi) in a.partition() {
+            // chunk-local: permuted positions [lo, hi) hold rows [lo, hi)
+            for p in lo..hi {
+                assert!(perm[p] >= lo && perm[p] < hi, "row escaped its chunk");
+            }
+            // descending length inside each σ-window
+            let mut w = lo;
+            while w < hi {
+                let we = (w + sigma).min(hi);
+                for p in w + 1..we {
+                    let (a1, b1) = (perm[p - 1], perm[p]);
+                    assert!(
+                        rp[a1 + 1] - rp[a1] >= rp[b1 + 1] - rp[b1],
+                        "window not sorted at position {p}"
+                    );
+                }
+                w = we;
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_config_and_partition() {
+        let ctx = ThreadCtx::serial();
+        let a = random_csr(10, 3, 1, ctx);
+        assert!(MatSeqSell::from_csr(&a, 0, 8, a.partition()).is_err());
+        assert!(MatSeqSell::from_csr(&a, 8, 0, a.partition()).is_err());
+        assert!(MatSeqSell::from_csr(&a, 8, 8, &[(0, 5)]).is_err()); // gap
+        assert!(MatSeqSell::from_csr(&a, 8, 8, &[(0, 5), (6, 10)]).is_err());
+        assert!(MatSeqSell::from_csr(&a, 8, 8, &[(0, 5), (5, 11)]).is_err());
+        let mut y = vec![0.0; 10];
+        let s = MatSeqSell::from_csr(&a, 8, 8, a.partition()).unwrap();
+        assert!(s.mult_slices(&[0.0; 9], &mut y).is_err());
+    }
+}

@@ -142,6 +142,7 @@ impl CgStep {
             final_residual,
             history: Vec::new(),
             attempts: 1,
+            mat_format: "aij",
         })
     }
 }

@@ -1,0 +1,202 @@
+//! Golden format × decomposition matrix: the PR-2 bitwise contract
+//! extended over the local-operator format zoo. A BAIJ- or SELL-backed
+//! diag block run through cg-fused × jacobi must produce a residual
+//! history **bitwise identical** to the CSR reference, at every
+//! rank×thread decomposition of the same slot grid — format choice (and
+//! therefore the autotuner's measured pick) is numerically invisible.
+//!
+//! The operator is a hand-built symmetric block-tridiagonal matrix with
+//! 2×2 blocks, strictly diagonally dominant (so SPD, so CG converges).
+//! With `Layout::slot_aligned(64, r, t)` at G = 4 every boundary is a
+//! multiple of 16, so no 2×2 block ever straddles a rank or slot cut and
+//! every rank's diag block stays bs = 2 blockable.
+
+use mmpetsc::comm::world::World;
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::error::Result;
+use mmpetsc::ksp::context::Ksp;
+use mmpetsc::ksp::{KspConfig, SolveStats};
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::mat::mpiaij::MatMPIAIJ;
+use mmpetsc::vec::ctx::ThreadCtx;
+use mmpetsc::vec::mpi::{Layout, VecMPI};
+
+const N: usize = 64;
+const BS: usize = 2;
+
+/// Off-diagonal 2×2 block between block-rows `bi` and `bi + 1`:
+/// entry (r, c) of the upper block; the lower block is its transpose.
+fn off_block(bi: usize, r: usize, c: usize) -> f64 {
+    -(1.0 + ((bi * 5 + r * 2 + c) % 7) as f64 * 0.0625)
+}
+
+/// Global triplets for rows `lo..hi` of the symmetric block-tridiagonal
+/// test operator (diag block [[8,1],[1,8]], off blocks from `off_block`).
+fn block_entries(lo: usize, hi: usize) -> Vec<(usize, usize, f64)> {
+    let nb = N / BS;
+    let mut es = Vec::new();
+    for i in lo..hi {
+        let (bi, r) = (i / BS, i % BS);
+        for c in 0..BS {
+            es.push((i, bi * BS + c, if r == c { 8.0 } else { 1.0 }));
+        }
+        if bi > 0 {
+            for c in 0..BS {
+                // transpose of the upper block owned by block-row bi - 1
+                es.push((i, (bi - 1) * BS + c, off_block(bi - 1, c, r)));
+            }
+        }
+        if bi + 1 < nb {
+            for c in 0..BS {
+                es.push((i, (bi + 1) * BS + c, off_block(bi, r, c)));
+            }
+        }
+    }
+    es
+}
+
+/// One cg-fused × jacobi solve of the block operator at `ranks`×`threads`
+/// with the given `-mat_type`/`-mat_block_size`; per-rank stats.
+fn run_solve(
+    mat_type: &'static str,
+    bs: usize,
+    ranks: usize,
+    threads: usize,
+) -> Vec<Result<SolveStats>> {
+    World::run(ranks, move |mut comm| -> Result<SolveStats> {
+        let rank = comm.rank();
+        let ctx = ThreadCtx::new(threads);
+        let layout = Layout::slot_aligned(N, comm.size(), threads.max(1));
+        let (lo, hi) = layout.range(rank);
+        let mut a = MatMPIAIJ::assemble(
+            layout.clone(),
+            layout.clone(),
+            block_entries(lo, hi),
+            &mut comm,
+            ctx.clone(),
+        )?;
+        // Enable before building b, as the runner does: the RHS must come
+        // from the slot-segmented MatMult or the problem itself would
+        // differ bitwise across decompositions.
+        a.enable_hybrid()?;
+        let xs: Vec<f64> = (lo..hi).map(|i| 1.0 + (i as f64 * 0.001).sin()).collect();
+        let x_true = VecMPI::from_local_slice(layout.clone(), rank, &xs, ctx.clone())?;
+        let mut b = VecMPI::new(layout.clone(), rank, ctx.clone());
+        a.mult(&x_true, &mut b, &mut comm)?;
+
+        let cfg = KspConfig {
+            rtol: 1e-8,
+            monitor: true,
+            mat_type: mat_type.into(),
+            mat_block_size: bs,
+            ..KspConfig::default()
+        };
+
+        let mut x = VecMPI::new(layout, rank, ctx);
+        let mut ksp = Ksp::create(&comm);
+        ksp.set_type("cg-fused")?;
+        ksp.set_pc("jacobi");
+        ksp.set_config(cfg);
+        ksp.set_operators(&mut a);
+        ksp.set_up(&mut comm)?;
+        ksp.solve(&b, &mut x, &mut comm)
+    })
+}
+
+/// Rank 0's history bits + reported format, with convergence asserted on
+/// every rank.
+fn history_bits(mat_type: &'static str, bs: usize, r: usize, t: usize) -> (Vec<u64>, String) {
+    let outs = run_solve(mat_type, bs, r, t);
+    let mut hist = Vec::new();
+    let mut fmt = String::new();
+    for (rank, o) in outs.into_iter().enumerate() {
+        let s = o.unwrap_or_else(|e| panic!("{mat_type} at {r}x{t} rank {rank} errored: {e}"));
+        assert!(s.converged(), "{mat_type} at {r}x{t} rank {rank} did not converge");
+        if rank == 0 {
+            hist = s.history.iter().map(|v| v.to_bits()).collect();
+            fmt = s.mat_format.to_string();
+        }
+    }
+    (hist, fmt)
+}
+
+#[test]
+fn every_format_matches_csr_bitwise_across_decompositions() {
+    let (reference, ref_fmt) = history_bits("aij", 0, 1, 4);
+    assert!(!reference.is_empty());
+    assert_eq!(ref_fmt, "aij");
+    for (mat_type, bs) in [("aij", 0usize), ("sell", 0), ("baij", BS)] {
+        for (r, t) in [(1usize, 4usize), (2, 2), (4, 1)] {
+            let (hist, fmt) = history_bits(mat_type, bs, r, t);
+            assert_eq!(fmt, mat_type, "reported format at {r}x{t}");
+            assert_eq!(
+                hist, reference,
+                "{mat_type} at {r}x{t} diverges bitwise from the CSR 1x4 reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn autotuned_pick_is_collective_and_bitwise_invisible() {
+    let (reference, _) = history_bits("aij", 0, 2, 2);
+    let outs = run_solve("auto", 0, 2, 2);
+    let mut picks = Vec::new();
+    for (rank, o) in outs.into_iter().enumerate() {
+        let s = o.unwrap_or_else(|e| panic!("auto rank {rank} errored: {e}"));
+        assert!(s.converged());
+        assert!(
+            ["aij", "sell", "baij"].contains(&s.mat_format),
+            "unexpected pick {:?}",
+            s.mat_format
+        );
+        assert_eq!(
+            s.history.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            reference,
+            "autotuned run (rank {rank}) diverges bitwise from the CSR reference"
+        );
+        picks.push(s.mat_format);
+    }
+    picks.dedup();
+    assert_eq!(picks.len(), 1, "autotuner pick must be identical on every rank: {picks:?}");
+}
+
+#[test]
+fn infeasible_block_size_is_a_collective_typed_error() {
+    // bs = 3 cannot tile the 2×2-block operator (or its 16-row diag
+    // blocks): the collective negotiation must reject it as a typed error
+    // on every rank — no hang, no rank divergence.
+    let outs = run_solve("baij", 3, 2, 2);
+    for (rank, o) in outs.into_iter().enumerate() {
+        assert!(o.is_err(), "rank {rank} accepted an infeasible block size");
+    }
+}
+
+#[test]
+fn runner_reports_format_and_sell_matches_aij_end_to_end() {
+    // Full plumbing through the options/runner layer on a real stencil
+    // case: -mat_type sell must be reported in the HybridReport and stay
+    // bitwise identical to the aij run; "auto" must report its pick.
+    let run = |mat_type: &str| {
+        let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, 2, 2);
+        cfg.ksp_type = "cg-fused".into();
+        cfg.ksp.rtol = 1e-8;
+        cfg.ksp.monitor = true;
+        cfg.ksp.mat_type = mat_type.into();
+        let rep = run_case(&cfg).unwrap_or_else(|e| panic!("{mat_type} run errored: {e}"));
+        assert!(rep.converged, "{mat_type} run did not converge");
+        rep
+    };
+    let aij = run("aij");
+    let sell = run("sell");
+    assert_eq!(aij.mat_format, "aij");
+    assert_eq!(sell.mat_format, "sell");
+    let bits = |r: &mmpetsc::coordinator::runner::HybridReport| {
+        r.history.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    };
+    assert!(!aij.history.is_empty());
+    assert_eq!(bits(&aij), bits(&sell), "sell diverges bitwise from aij through the runner");
+    let auto = run("auto");
+    assert!(["aij", "sell", "baij"].contains(&auto.mat_format));
+    assert_eq!(bits(&aij), bits(&auto), "autotuned run diverges bitwise from aij");
+}
