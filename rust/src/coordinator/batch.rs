@@ -56,6 +56,9 @@ pub struct BatchConfig {
     /// Shared solver limits; per-request `rtol` overrides the base.
     pub ksp: KspConfig,
     pub requests: Vec<BatchRequest>,
+    /// Performance instrumentation arming (`-log_view` / `-log_trace`);
+    /// default-disabled — see [`crate::coordinator::runner::HybridConfig`].
+    pub perf: crate::perf::PerfConfig,
 }
 
 impl BatchConfig {
@@ -86,6 +89,7 @@ impl BatchConfig {
                     seed: 1 + i as u64,
                 })
                 .collect(),
+            perf: crate::perf::PerfConfig::default(),
         }
     }
 
@@ -133,6 +137,14 @@ pub struct BatchReport {
     /// denominator: `solo_traversals / spmm_traversals` ≈ effective k.
     pub solo_traversals: usize,
     pub converged_all: bool,
+    /// Per-request serving latency percentiles (a request's latency is the
+    /// wall time of the batch that served it, max across ranks) — the
+    /// many-users service metric next to the aggregate throughput.
+    pub latency_p50: f64,
+    pub latency_p90: f64,
+    pub latency_p99: f64,
+    /// Rank-ordered instrumentation snapshots; empty unless `perf` armed.
+    pub perf: Vec<crate::perf::PerfSnapshot>,
 }
 
 /// The grouping policy, exposed for tests and the bench: indices of
@@ -176,6 +188,8 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
         rows: usize,
         spmm_traversals: usize,
         solo_traversals: usize,
+        batch_walls: Vec<f64>,
+        perf: Option<crate::perf::PerfSnapshot>,
     }
 
     let outs: Vec<Result<RankOut>> = {
@@ -184,6 +198,14 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
         World::run(cfg.ranks.max(1), move |mut comm| -> Result<RankOut> {
             let rank = comm.rank();
             let ctx = ThreadCtx::new(cfg.threads.max(1));
+            if cfg.perf.enabled() {
+                ctx.install_perf(Arc::new(crate::perf::PerfLog::new(
+                    rank,
+                    cfg.threads.max(1),
+                    Instant::now(),
+                    cfg.perf.trace.is_some(),
+                )));
+            }
             let spec = cfg.case.grid(cfg.scale);
             let n = spec.rows();
             // Slot-aligned so the plan (and with it every request's
@@ -218,8 +240,10 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
             let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; cfg.requests.len()];
             let mut spmm_traversals = 0usize;
             let mut solo_traversals = 0usize;
+            let mut batch_walls = Vec::with_capacity(groups.len());
             let t0 = Instant::now();
             for (bi, group) in groups.iter().enumerate() {
+                let t_batch = Instant::now();
                 let k = group.len();
                 let mut b = MultiVecMPI::new_partitioned(
                     layout.clone(),
@@ -254,6 +278,7 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
                         final_residual: s.final_residual,
                     });
                 }
+                batch_walls.push(t_batch.elapsed().as_secs_f64());
             }
             let wall = t0.elapsed().as_secs_f64();
             let mut served = Vec::with_capacity(outcomes.len());
@@ -264,21 +289,32 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
                     ))
                 })?);
             }
+            let perf = ctx.perf().map(|p| p.snapshot());
             Ok(RankOut {
                 outcomes: served,
                 wall,
                 rows: n,
                 spmm_traversals,
                 solo_traversals,
+                batch_walls,
+                perf,
             })
         })
     };
 
     let mut report: Option<BatchReport> = None;
     let mut wall = 0.0f64;
+    let mut batch_walls = vec![0.0f64; groups.len()];
+    let mut perf_snaps = Vec::new();
     for out in outs {
         let o = out?;
         wall = wall.max(o.wall);
+        for (bi, w) in o.batch_walls.iter().enumerate() {
+            batch_walls[bi] = batch_walls[bi].max(*w);
+        }
+        if let Some(s) = o.perf {
+            perf_snaps.push(s);
+        }
         if report.is_none() {
             let converged_all = o.outcomes.iter().all(|r| r.converged);
             report = Some(BatchReport {
@@ -291,6 +327,10 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
                 spmm_traversals: o.spmm_traversals,
                 solo_traversals: o.solo_traversals,
                 converged_all,
+                latency_p50: 0.0,
+                latency_p90: 0.0,
+                latency_p99: 0.0,
+                perf: Vec::new(),
             });
         }
     }
@@ -298,6 +338,17 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
         report.ok_or_else(|| Error::Comm("batch run produced no rank outcomes".into()))?;
     report.wall_seconds = wall;
     report.solves_per_sec = cfg.requests.len() as f64 / wall.max(1e-12);
+    // A request's serving latency is its batch's wall (max across ranks).
+    let latencies: Vec<f64> = report
+        .outcomes
+        .iter()
+        .map(|o| batch_walls[o.batch])
+        .collect();
+    let (p50, p90, p99) = crate::util::stats::p50_p90_p99(&latencies);
+    report.latency_p50 = p50;
+    report.latency_p90 = p90;
+    report.latency_p99 = p99;
+    report.perf = perf_snaps;
     Ok(report)
 }
 

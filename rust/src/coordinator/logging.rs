@@ -6,6 +6,7 @@
 //! is their counterpart. One `EventLog` per rank; interior mutability so it
 //! threads through the solver call tree as `&EventLog`.
 
+use crate::error::{Error, Result};
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -49,7 +50,20 @@ impl EventLog {
         EventLog::default()
     }
 
-    /// Begin a (possibly nested) event.
+    /// Open an RAII event scope: the event ends when the returned
+    /// [`EventGuard`] drops — including on `?` early returns and on the
+    /// panic/poison unwind paths of the fault layer — so a failed region can
+    /// never leave the log's nesting stack malformed.
+    pub fn event<'l>(&'l self, name: &'static str) -> EventGuard<'l> {
+        self.inner
+            .borrow_mut()
+            .stack
+            .push((name, Instant::now(), 0.0));
+        EventGuard { log: self, name }
+    }
+
+    /// Begin a (possibly nested) event. Thin shim kept for callers that
+    /// cannot hold a guard across a scope; prefer [`EventLog::event`].
     pub fn begin(&self, name: &'static str) {
         self.inner
             .borrow_mut()
@@ -64,26 +78,59 @@ impl EventLog {
         }
     }
 
-    /// End the innermost active event (must match `name`).
-    pub fn end(&self, name: &'static str) {
+    /// End the innermost active event, reporting genuinely malformed
+    /// nesting (empty stack, or `name` not matching the innermost `begin`)
+    /// as a typed error instead of panicking.
+    pub fn try_end(&self, name: &'static str) -> Result<()> {
         let mut inner = self.inner.borrow_mut();
-        let (n, t0, flops) = inner
-            .stack
-            .pop()
-            .unwrap_or_else(|| panic!("EventLog::end({name}) with empty stack"));
-        assert_eq!(n, name, "EventLog: end({name}) does not match begin({n})");
+        match inner.stack.last() {
+            None => {
+                return Err(Error::Logging(format!(
+                    "EventLog::end({name}) with empty stack"
+                )))
+            }
+            Some(&(n, _, _)) if n != name => {
+                return Err(Error::Logging(format!(
+                    "EventLog: end({name}) does not match begin({n})"
+                )))
+            }
+            Some(_) => {}
+        }
+        let (n, t0, flops) = inner.stack.pop().expect("checked non-empty");
         let e = inner.events.entry(n).or_default();
         e.count += 1;
         e.seconds += t0.elapsed().as_secs_f64();
         e.flops += flops;
+        Ok(())
+    }
+
+    /// End the innermost active event (must match `name`). Thin shim over
+    /// [`EventLog::try_end`] that swallows malformed-nesting errors — the
+    /// legacy begin/end callers run on unwind paths where a second panic
+    /// would abort the process.
+    pub fn end(&self, name: &'static str) {
+        let _ = self.try_end(name);
+    }
+
+    /// End the innermost event without matching its name — the guard path,
+    /// where the borrow-scoped `EventGuard` makes a mismatch impossible on
+    /// well-formed nesting and unwinds still need the timer closed.
+    fn end_innermost(&self) {
+        let mut inner = self.inner.borrow_mut();
+        if let Some((n, t0, flops)) = inner.stack.pop() {
+            let e = inner.events.entry(n).or_default();
+            e.count += 1;
+            e.seconds += t0.elapsed().as_secs_f64();
+            e.flops += flops;
+        }
     }
 
     /// Time a closure under an event, attributing `flops`.
     pub fn timed<T>(&self, name: &'static str, flops: f64, f: impl FnOnce() -> T) -> T {
-        self.begin(name);
+        let guard = self.event(name);
         let out = f();
         self.add_flops(flops);
-        self.end(name);
+        drop(guard);
         out
     }
 
@@ -139,6 +186,27 @@ impl EventLog {
     }
 }
 
+/// RAII scope for one event: ends the innermost event on drop, even when the
+/// scope is left by `?` or by a panic unwinding through the fault layer's
+/// containment. Obtained from [`EventLog::event`].
+pub struct EventGuard<'l> {
+    log: &'l EventLog,
+    name: &'static str,
+}
+
+impl EventGuard<'_> {
+    /// The event this guard closes.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl Drop for EventGuard<'_> {
+    fn drop(&mut self) {
+        self.log.end_innermost();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,11 +241,46 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "does not match")]
-    fn mismatched_end_panics() {
+    fn mismatched_end_is_a_typed_error() {
         let log = EventLog::new();
         log.begin("A");
-        log.end("B");
+        let err = log.try_end("B").unwrap_err();
+        assert!(matches!(err, Error::Logging(_)));
+        assert!(err.to_string().contains("does not match"));
+        // The malformed end left the stack untouched: the matching end works.
+        log.try_end("A").unwrap();
+        assert_eq!(log.stats("A").count, 1);
+        // Empty-stack end is also typed, and the shim stays silent.
+        assert!(matches!(log.try_end("A"), Err(Error::Logging(_))));
+        log.end("A"); // no panic
+    }
+
+    #[test]
+    fn guard_ends_event_on_unwind() {
+        let log = EventLog::new();
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = log.event("KSPSolve");
+            panic!("solver blew up");
+        }));
+        assert!(out.is_err());
+        // The guard closed the event on the unwind path: count recorded,
+        // stack empty (a fresh event nests cleanly).
+        assert_eq!(log.stats("KSPSolve").count, 1);
+        log.timed("MatMult", 5.0, || {});
+        assert_eq!(log.stats("MatMult").flops, 5.0);
+    }
+
+    #[test]
+    fn guard_scope_times_and_attributes() {
+        let log = EventLog::new();
+        {
+            let g = log.event("VecDot");
+            assert_eq!(g.name(), "VecDot");
+            log.add_flops(64.0);
+        }
+        let s = log.stats("VecDot");
+        assert_eq!(s.count, 1);
+        assert_eq!(s.flops, 64.0);
     }
 
     #[test]

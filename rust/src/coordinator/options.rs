@@ -117,6 +117,17 @@ impl Options {
         })
     }
 
+    /// Extract a [`crate::perf::PerfConfig`] from `-log_view` /
+    /// `-log_trace <path>`. Default (neither given) is the disarmed
+    /// config: no `PerfLog` is installed and every instrumentation site
+    /// stays one untaken branch.
+    pub fn perf_config(&self) -> crate::perf::PerfConfig {
+        crate::perf::PerfConfig {
+            view: self.flag("log_view"),
+            trace: self.get("log_trace").map(|s| s.to_string()),
+        }
+    }
+
     /// Extract a [`crate::comm::fault::FaultPlan`] from `-fault_spec` /
     /// `-fault_seed` (command-line mirrors of `MMPETSC_FAULT_SPEC` /
     /// `MMPETSC_FAULT_SEED`). Returns `None` when neither is given — the
@@ -217,6 +228,22 @@ mod tests {
         assert_eq!(o.pc_name("jacobi"), "ilu0-level");
         let o = Options::parse_str("-pc_sor_colored").unwrap();
         assert_eq!(o.pc_name("jacobi"), "jacobi");
+    }
+
+    #[test]
+    fn perf_config_extraction() {
+        let o = Options::parse_str("-log_view -log_trace trace.jsonl").unwrap();
+        let p = o.perf_config();
+        assert!(p.view);
+        assert_eq!(p.trace.as_deref(), Some("trace.jsonl"));
+        assert!(p.enabled());
+        // -log_trace alone arms collection without the table
+        let o = Options::parse_str("-log_trace t.jsonl").unwrap();
+        let p = o.perf_config();
+        assert!(!p.view && p.enabled());
+        // no flags → disarmed
+        let o = Options::parse_str("-ksp_type cg").unwrap();
+        assert!(!o.perf_config().enabled());
     }
 
     #[test]

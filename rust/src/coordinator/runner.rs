@@ -45,6 +45,10 @@ pub struct HybridConfig {
     /// Bypasses the `MMPETSC_FAULT_*` environment, so concurrent runs in
     /// one process don't race on process-global state.
     pub fault: Option<Arc<FaultPlan>>,
+    /// Performance instrumentation arming (`-log_view` / `-log_trace`).
+    /// Default-disabled: no `PerfLog` is installed, every event site is one
+    /// untaken branch, and all golden histories stay bitwise unchanged.
+    pub perf: crate::perf::PerfConfig,
 }
 
 impl HybridConfig {
@@ -63,6 +67,7 @@ impl HybridConfig {
             policy: AffinityPolicy::UmaPerRank,
             pin: false,
             fault: None,
+            perf: crate::perf::PerfConfig::default(),
         }
     }
 }
@@ -117,6 +122,12 @@ pub struct HybridReport {
     /// the `-mat_type` override or the set_up autotuner's pick. Identical
     /// on every rank (the pick is collective); rank 0's copy reported.
     pub mat_format: &'static str,
+    /// Rank-ordered per-(rank,thread) counter/trace snapshots — one per
+    /// rank when [`HybridConfig::perf`] armed instrumentation, else empty.
+    pub perf: Vec<crate::perf::PerfSnapshot>,
+    /// Coordinator wall time of the whole collective run (spawn → join),
+    /// the %T denominator of the `-log_view` table.
+    pub wall_seconds: f64,
 }
 
 impl HybridReport {
@@ -141,6 +152,7 @@ struct RankOutcome {
     overlap_fraction: f64,
     msgs_hidden: u64,
     forks: u64,
+    perf: Option<crate::perf::PerfSnapshot>,
 }
 
 /// Does this ksp name dispatch through the fused layer (and therefore want
@@ -161,6 +173,10 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
 
     let nranks = cfg.ranks.max(1);
     let fault = cfg.fault.clone();
+    // One epoch for every rank's PerfLog: trace t_start values from
+    // different ranks share a clock and interleave cleanly on replay.
+    let perf_epoch = std::time::Instant::now();
+    let t_wall = std::time::Instant::now();
     let (outcomes, comm_stats): (Vec<Result<RankOutcome>>, Vec<CommStatsSnapshot>) = {
         let cfg = Arc::clone(&cfg);
         let body = move |mut comm: Comm| -> Result<RankOutcome> {
@@ -172,6 +188,16 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
                 // pinned-free context; locality bookkeeping uses placement.
                 ThreadCtx::new(cfg.threads)
             };
+            if cfg.perf.enabled() {
+                // Before any operator work: enable_hybrid checks this to
+                // decide whether to tally logical slot-comm structure.
+                ctx.install_perf(Arc::new(crate::perf::PerfLog::new(
+                    rank,
+                    cfg.threads.max(1),
+                    perf_epoch,
+                    cfg.perf.trace.is_some(),
+                )));
+            }
 
             // Generate this rank's rows and assemble. The fused solvers get
             // the slot-aligned layout so the hybrid plan's slot grid (and
@@ -239,6 +265,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
             drop(kspobj); // release the operator borrow for the stats below
 
             let ov = *a.scatter().overlap_stats();
+            let perf_snap = ctx.perf().map(|p| p.snapshot());
             Ok(RankOutcome {
                 ksp_time,
                 matmult_time,
@@ -251,6 +278,7 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
                 overlap_fraction: ov.overlap_fraction(),
                 msgs_hidden: ov.msgs_hidden,
                 forks,
+                perf: perf_snap,
                 stats,
             })
         };
@@ -280,6 +308,8 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
         msgs_hidden: 0,
         forks: 0,
         mat_format: "aij",
+        perf: Vec::new(),
+        wall_seconds: t_wall.elapsed().as_secs_f64(),
     };
     for (r, o) in outcomes.into_iter().enumerate() {
         let o = o?;
@@ -301,6 +331,9 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
             report.history = o.stats.history.clone();
             report.reason = Some(o.stats.reason);
             report.mat_format = o.stats.mat_format;
+        }
+        if let Some(s) = o.perf {
+            report.perf.push(s);
         }
     }
     for s in comm_stats {

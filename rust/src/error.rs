@@ -43,6 +43,9 @@ pub enum Error {
 
     /// PJRT / XLA runtime errors.
     Runtime(String),
+
+    /// Malformed event-log nesting (mismatched or dangling begin/end).
+    Logging(String),
 }
 
 impl std::fmt::Display for Error {
@@ -65,6 +68,7 @@ impl std::fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Format(m) => write!(f, "format error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Logging(m) => write!(f, "event log error: {m}"),
         }
     }
 }

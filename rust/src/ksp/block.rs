@@ -219,10 +219,8 @@ pub fn solve(
     if !plan_matches(a, b, x, comm) {
         return solve_percol(a, pc, b, x, &cfgs, comm, log);
     }
-    log.begin("KSPSolveBatch");
-    let out = solve_ref_inner(a, pc, b, x, &cfgs, comm, log);
-    log.end("KSPSolveBatch");
-    out
+    let _batch = log.event("KSPSolveBatch");
+    solve_ref_inner(a, pc, b, x, &cfgs, comm, log)
 }
 
 /// Fused block CG: the reference iteration run as **one pool region per
@@ -250,10 +248,8 @@ pub fn solve_fused(
         return solve(a, pc, b, x, cfg, col_rtol, comm, log);
     }
     let cfgs = col_cfgs(cfg, col_rtol, k)?;
-    log.begin("KSPSolveBatch");
-    let out = solve_fused_inner(a, pc, b, x, &cfgs, comm, log);
-    log.end("KSPSolveBatch");
-    out
+    let _batch = log.event("KSPSolveBatch");
+    solve_fused_inner(a, pc, b, x, &cfgs, comm, log)
 }
 
 /// Fallback: solve the columns independently (no amortization, any

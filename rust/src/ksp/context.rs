@@ -342,6 +342,12 @@ impl<'a> Ksp<'a> {
             .a
             .as_deref_mut()
             .ok_or_else(|| Error::not_ready("KSPSetUp: call set_operators first"))?;
+        // Instrumentation span: times the whole setup under the Setup stage
+        // and absorbs child flops (PC build, format trials, bound probes).
+        let perf = a.diag_block().ctx().perf().cloned();
+        let _setup_span = perf
+            .as_ref()
+            .map(|p| p.span(crate::perf::Event::KSPSetUp, Some(crate::perf::Stage::Setup)));
 
         // 1. The slot-segmented hybrid plan, when the method dispatches
         //    through the fused layer. The degenerate 1×1 decomposition is
@@ -425,6 +431,13 @@ impl<'a> Ksp<'a> {
         if !self.set_up_done {
             self.set_up(comm)?;
         }
+        let perf = self
+            .a
+            .as_deref()
+            .and_then(|a| a.diag_block().ctx().perf().cloned());
+        let _solve_span = perf
+            .as_ref()
+            .map(|p| p.span(crate::perf::Event::KSPSolve, Some(crate::perf::Stage::Solve)));
         let max_restarts = self.cfg.max_restarts;
         let mut attempt = 0usize;
         let mut total_its = 0usize;
@@ -521,8 +534,13 @@ impl<'a> Ksp<'a> {
             .pc
             .as_deref()
             .ok_or_else(|| Error::not_ready("KSPMatSolve: PC missing after set_up"))?;
+        let perf = a.diag_block().ctx().perf().cloned();
+        let solve_span = perf
+            .as_ref()
+            .map(|p| p.span(crate::perf::Event::KSPSolve, Some(crate::perf::Stage::Solve)));
         let stats =
             crate::ksp::block::solve_fused(a, pc, b, x, &self.cfg, col_rtol, comm, &self.log)?;
+        drop(solve_span);
         // Represent the batch in the single-solve accessors by its
         // longest-running column (any non-converged column wins), so
         // reason()/stats() never report a stale earlier solve — and

@@ -39,6 +39,7 @@ use crate::ksp::{
 };
 use crate::mat::mpiaij::{HybridPlan, MatMPIAIJ};
 use crate::pc::{FusedPc, PhasedApply, Precond};
+use crate::perf::{Event, PerfLog};
 use crate::thread::pool::{BarrierWaiter, RegionBarrier, ReduceSlots};
 use crate::thread::schedule::static_chunk;
 use crate::vec::blas1;
@@ -355,18 +356,16 @@ pub fn solve(
     log: &EventLog,
 ) -> Result<SolveStats> {
     if hybrid_path_active(a, pc, b, x, comm) {
-        log.begin("KSPSolve");
-        let out = cg_hybrid_inner(a, pc, b, x, cfg, comm, log);
-        log.end("KSPSolve");
-        return out;
+        // RAII guard: the event closes even when the fused region unwinds
+        // through the fault layer's containment.
+        let _kspsolve = log.event("KSPSolve");
+        return cg_hybrid_inner(a, pc, b, x, cfg, comm, log);
     }
     if !can_fuse(a, pc, b, x, comm) {
         return crate::ksp::cg::solve(a, pc, b, x, cfg, comm, log);
     }
-    log.begin("KSPSolve");
-    let out = cg_fused_inner(a, pc, b, x, cfg, comm, log);
-    log.end("KSPSolve");
-    out
+    let _kspsolve = log.event("KSPSolve");
+    cg_fused_inner(a, pc, b, x, cfg, comm, log)
 }
 
 fn cg_fused_inner(
@@ -564,12 +563,27 @@ unsafe impl Send for RawGhost {}
 unsafe impl Sync for RawGhost {}
 
 fn slot_norm2_over(v: &VecMPI, ranges: &[(usize, usize)], comm: &mut Comm) -> Result<f64> {
+    let perf = v.local().ctx().perf().cloned();
+    let t0 = perf.as_ref().map(|_| std::time::Instant::now());
     let xs = v.local().as_slice();
     let parts: Vec<[f64; 1]> = ranges
         .iter()
         .map(|&(lo, hi)| [blas1::sqnorm(&xs[lo..hi])])
         .collect();
-    Ok(comm.allreduce_sum_ordered(parts)?[0].sqrt())
+    let out = comm.allreduce_sum_ordered(parts)?[0].sqrt();
+    if let Some(p) = &perf {
+        // One logical reduction contributed by each of this rank's slots.
+        p.op_comm(
+            0,
+            Event::VecNorm,
+            t0.expect("set when armed"),
+            2.0 * xs.len() as f64,
+            0,
+            0,
+            ranges.len() as u64,
+        );
+    }
+    Ok(out)
 }
 
 fn slot_dot_over(
@@ -578,13 +592,27 @@ fn slot_dot_over(
     ranges: &[(usize, usize)],
     comm: &mut Comm,
 ) -> Result<f64> {
+    let perf = u.local().ctx().perf().cloned();
+    let t0 = perf.as_ref().map(|_| std::time::Instant::now());
     let us = u.local().as_slice();
     let vs = v.local().as_slice();
     let parts: Vec<[f64; 1]> = ranges
         .iter()
         .map(|&(lo, hi)| [blas1::dot(&us[lo..hi], &vs[lo..hi])])
         .collect();
-    Ok(comm.allreduce_sum_ordered(parts)?[0])
+    let out = comm.allreduce_sum_ordered(parts)?[0];
+    if let Some(p) = &perf {
+        p.op_comm(
+            0,
+            Event::VecDot,
+            t0.expect("set when armed"),
+            2.0 * us.len() as f64,
+            0,
+            0,
+            ranges.len() as u64,
+        );
+    }
+    Ok(out)
 }
 
 /// Deterministic (slot-ordered) global 2-norm under a hybrid plan: one
@@ -669,6 +697,16 @@ fn cg_hybrid_inner(
     let shared = ReduceSlots::new(3);
     let iter_flops = 2.0 * (diag.nnz() + off.nnz()) as f64 + 12.0 * n as f64;
 
+    // Instrumentation: one shared-borrow handle the region threads copy.
+    // Disarmed ⇒ `perf_r` is None and every site below is one untaken
+    // branch. Phased-PC apply flops are attributed whole on thread 0 so the
+    // cross-rank flop total stays exactly integer-valued (a per-thread
+    // `flops/t` split would round).
+    let perf = ctx.perf().cloned();
+    let perf_r: Option<&PerfLog> = perf.as_deref();
+    let (msgs_total, bytes_total) = plan.comm_totals();
+    let pc_flops_all = pc.flops();
+
     let mut it = 0usize;
     loop {
         if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
@@ -686,13 +724,26 @@ fn cg_hybrid_inner(
                     let comm = unsafe { &mut *comm_raw.0 };
                     let sc = unsafe { &mut *scatter_raw.0 };
                     let ps = unsafe { ref_slice(&p_raw, 0, n) };
+                    let t_sb = perf_r.map(|_| std::time::Instant::now());
                     region_try(&barrier, "hybrid CG: scatter begin", sc.begin_local(ps, comm));
                     sc.mark_compute_start();
+                    if let Some(pf) = perf_r {
+                        pf.op_comm(
+                            0,
+                            Event::VecScatterBegin,
+                            t_sb.expect("set when armed"),
+                            0.0,
+                            msgs_total,
+                            bytes_total,
+                            0,
+                        );
+                    }
                 },
                 |tid| {
                     let mut ws = barrier.waiter();
                     // -- 1. diagonal slot partials over the nnz-balanced row
                     //    chunk, ghost messages in flight.
+                    let t_mm = perf_r.map(|_| std::time::Instant::now());
                     let (rlo, rhi) = part[tid];
                     if rlo < rhi {
                         let (slo, shi) = (seg_ptr[rlo], seg_ptr[rhi]);
@@ -707,9 +758,13 @@ fn cg_hybrid_inner(
                         // SAFETY: master-only.
                         let comm = unsafe { &mut *comm_raw.0 };
                         let sc = unsafe { &mut *scatter_raw.0 };
+                        let t_se = perf_r.map(|_| std::time::Instant::now());
                         region_try(&barrier, "hybrid CG: scatter end", sc.end(comm));
+                        if let Some(pf) = perf_r {
+                            pf.op(0, Event::VecScatterEnd, t_se.expect("set when armed"), 0.0);
+                        }
                     }
-                    barrier.wait(&mut ws);
+                    barrier.wait_perf(&mut ws, perf_r, tid);
                     // -- 2. ghost partials + ascending-slot fold → w = A p.
                     if rlo < rhi {
                         // SAFETY: ghost writes ordered by the barrier.
@@ -720,16 +775,43 @@ fn cg_hybrid_inner(
                         let wrows = unsafe { mut_slice(&w_raw, rlo, rhi - rlo) };
                         plan.apply_rows(off, ghosts, scr, rlo, rhi, wrows);
                     }
-                    barrier.wait(&mut ws);
+                    if let Some(pf) = perf_r {
+                        // Per-thread MatMult share: exact nnz of this row
+                        // chunk, plus this slot's logical ghost traffic.
+                        let (sm, sb) = plan.slot_comm()[tid];
+                        pf.op_comm(
+                            tid,
+                            Event::MatMult,
+                            t_mm.expect("set when armed"),
+                            2.0 * plan.chunk_nnz(rlo, rhi) as f64,
+                            sm,
+                            sb,
+                            0,
+                        );
+                    }
+                    barrier.wait_perf(&mut ws, perf_r, tid);
                     // -- 3. (p, w) partial over this thread's slot.
                     let (lo, hi) = slot_ranges[tid];
                     {
                         // SAFETY: w fully written (barrier above); reads only.
                         let pch = unsafe { ref_slice(&p_raw, lo, hi - lo) };
                         let wc = unsafe { ref_slice(&w_raw, lo, hi - lo) };
+                        let t_op = perf_r.map(|_| std::time::Instant::now());
                         pw_slots.set(tid, blas1::dot(pch, wc));
+                        if let Some(pf) = perf_r {
+                            // Each slot contributes once to the pw reduction.
+                            pf.op_comm(
+                                tid,
+                                Event::VecDot,
+                                t_op.expect("set when armed"),
+                                2.0 * (hi - lo) as f64,
+                                0,
+                                0,
+                                1,
+                            );
+                        }
                     }
-                    barrier.wait(&mut ws);
+                    barrier.wait_perf(&mut ws, perf_r, tid);
                     // -- 4. master: slot-ordered allreduce of (p, w).
                     if tid == 0 {
                         let comm = unsafe { &mut *comm_raw.0 };
@@ -741,7 +823,7 @@ fn cg_hybrid_inner(
                         )[0];
                         shared.set(S_PW, pw);
                     }
-                    barrier.wait(&mut ws);
+                    barrier.wait_perf(&mut ws, perf_r, tid);
                     let pw = shared.get(S_PW);
                     if !(pw > 0.0) {
                         // Breakdown (or NaN): identical pw on every thread of
@@ -757,41 +839,103 @@ fn cg_hybrid_inner(
                         let xc = unsafe { mut_slice(&x_raw, lo, hi - lo) };
                         let pch = unsafe { ref_slice(&p_raw, lo, hi - lo) };
                         let wc = unsafe { ref_slice(&w_raw, lo, hi - lo) };
+                        let t_ax = perf_r.map(|_| std::time::Instant::now());
                         blas1::axpy(alpha, pch, xc);
                         let rc = unsafe { mut_slice(&r_raw, lo, hi - lo) };
                         blas1::axpy(-alpha, wc, rc);
+                        if let Some(pf) = perf_r {
+                            pf.add(
+                                tid,
+                                Event::VecAXPY,
+                                2,
+                                t_ax.expect("set when armed").elapsed().as_secs_f64(),
+                                4.0 * (hi - lo) as f64,
+                                0,
+                                0,
+                                0,
+                            );
+                        }
+                        let t_nr = perf_r.map(|_| std::time::Instant::now());
                         rr_slots.set(tid, blas1::sqnorm(rc));
+                        if let Some(pf) = perf_r {
+                            pf.op_comm(
+                                tid,
+                                Event::VecNorm,
+                                t_nr.expect("set when armed"),
+                                2.0 * (hi - lo) as f64,
+                                0,
+                                0,
+                                1,
+                            );
+                        }
                     }
                     match &rpc {
                         RegionPc::Ew(inv_diag) => {
                             // z = M⁻¹r, (r,z) partial — same slot chunk.
                             let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
                             let zc = unsafe { mut_slice(&z_raw, lo, hi - lo) };
+                            let t_pc = perf_r.map(|_| std::time::Instant::now());
                             match inv_diag {
                                 Some(d) => blas1::pw_mult(rc, &d[lo..hi], zc),
                                 None => blas1::copy(rc, zc),
                             }
+                            if let Some(pf) = perf_r {
+                                let fl =
+                                    if inv_diag.is_some() { (hi - lo) as f64 } else { 0.0 };
+                                pf.op(tid, Event::PCApply, t_pc.expect("set when armed"), fl);
+                            }
+                            let t_d = perf_r.map(|_| std::time::Instant::now());
                             rz_slots.set(tid, blas1::dot(rc, zc));
+                            if let Some(pf) = perf_r {
+                                pf.op_comm(
+                                    tid,
+                                    Event::VecDot,
+                                    t_d.expect("set when armed"),
+                                    2.0 * (hi - lo) as f64,
+                                    0,
+                                    0,
+                                    1,
+                                );
+                            }
                         }
-                        RegionPc::Phased(p) => {
+                        RegionPc::Phased(ph) => {
                             // z = M⁻¹r as barrier-separated phases (class/
                             // level rows cross slot boundaries: order the r
                             // writes first). The phases touch only this
                             // rank's local block — the colored PCs are slot
                             // -block-diagonal, communication-free.
-                            barrier.wait(&mut ws);
+                            barrier.wait_perf(&mut ws, perf_r, tid);
+                            let t_pc = perf_r.map(|_| std::time::Instant::now());
                             // SAFETY: region discipline per run_region_phases.
                             unsafe {
                                 run_region_phases(
-                                    *p, tid, t, &r_raw, &z_raw, n, &barrier, &mut ws,
+                                    *ph, tid, t, &r_raw, &z_raw, n, &barrier, &mut ws,
                                 )
                             };
+                            if let Some(pf) = perf_r {
+                                // Whole-apply flops on thread 0 only (exact
+                                // integer totals; see comment above).
+                                let fl = if tid == 0 { pc_flops_all } else { 0.0 };
+                                pf.op(tid, Event::PCApply, t_pc.expect("set when armed"), fl);
+                            }
                             let rc = unsafe { ref_slice(&r_raw, lo, hi - lo) };
                             let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
+                            let t_d = perf_r.map(|_| std::time::Instant::now());
                             rz_slots.set(tid, blas1::dot(rc, zc));
+                            if let Some(pf) = perf_r {
+                                pf.op_comm(
+                                    tid,
+                                    Event::VecDot,
+                                    t_d.expect("set when armed"),
+                                    2.0 * (hi - lo) as f64,
+                                    0,
+                                    0,
+                                    1,
+                                );
+                            }
                         }
                     }
-                    barrier.wait(&mut ws);
+                    barrier.wait_perf(&mut ws, perf_r, tid);
                     // -- 6. master: slot-ordered allreduce of (‖r‖², (r,z)).
                     if tid == 0 {
                         let comm = unsafe { &mut *comm_raw.0 };
@@ -806,13 +950,22 @@ fn cg_hybrid_inner(
                         shared.set(S_RR, s[0]);
                         shared.set(S_RZ, s[1]);
                     }
-                    barrier.wait(&mut ws);
+                    barrier.wait_perf(&mut ws, perf_r, tid);
                     // -- 7. p = z + βp.
                     let beta = shared.get(S_RZ) / rz_now;
                     {
                         let zc = unsafe { ref_slice(&z_raw, lo, hi - lo) };
                         let pm = unsafe { mut_slice(&p_raw, lo, hi - lo) };
+                        let t_ay = perf_r.map(|_| std::time::Instant::now());
                         blas1::aypx(beta, zc, pm);
+                        if let Some(pf) = perf_r {
+                            pf.op(
+                                tid,
+                                Event::VecAYPX,
+                                t_ay.expect("set when armed"),
+                                2.0 * (hi - lo) as f64,
+                            );
+                        }
                     }
                 },
             )
@@ -1086,10 +1239,8 @@ pub fn solve_chebyshev(
                 "Chebyshev needs 0 < emin < emax, got [{emin}, {emax}]"
             )));
         }
-        log.begin("KSPSolve");
-        let out = cheby_hybrid_inner(a, pc, b, x, emin, emax, cfg, comm, log);
-        log.end("KSPSolve");
-        return out;
+        let _kspsolve = log.event("KSPSolve");
+        return cheby_hybrid_inner(a, pc, b, x, emin, emax, cfg, comm, log);
     }
     if !can_fuse(a, pc, b, x, comm) {
         return crate::ksp::chebyshev::solve(a, pc, b, x, emin, emax, cfg, comm, log);
@@ -1099,10 +1250,8 @@ pub fn solve_chebyshev(
             "Chebyshev needs 0 < emin < emax, got [{emin}, {emax}]"
         )));
     }
-    log.begin("KSPSolve");
-    let out = cheby_fused_inner(a, pc, b, x, emin, emax, cfg, comm, log);
-    log.end("KSPSolve");
-    out
+    let _kspsolve = log.event("KSPSolve");
+    cheby_fused_inner(a, pc, b, x, emin, emax, cfg, comm, log)
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -242,14 +242,24 @@ pub(crate) fn matmult(
     log.timed("MatMult", a.local_flops(), || a.apply(x, y, comm))
 }
 
-/// Logged preconditioner application.
+/// Logged preconditioner application. Also feeds the `-log_view` registry
+/// (`perf::Event::PCApply`) when instrumentation is armed on the vector's
+/// thread context — the non-fused KSP paths all come through here.
 pub(crate) fn pcapply(
     pc: &dyn crate::pc::Precond,
     r: &VecMPI,
     z: &mut VecMPI,
     log: &EventLog,
 ) -> Result<()> {
-    log.timed("PCApply", pc.flops(), || pc.apply(r, z))
+    match r.local().ctx().perf().cloned() {
+        None => log.timed("PCApply", pc.flops(), || pc.apply(r, z)),
+        Some(p) => {
+            let t0 = std::time::Instant::now();
+            let out = log.timed("PCApply", pc.flops(), || pc.apply(r, z));
+            p.op(0, crate::perf::Event::PCApply, t0, pc.flops());
+            out
+        }
+    }
 }
 
 #[cfg(test)]

@@ -51,6 +51,7 @@ pub mod matgen;
 pub mod io;
 pub mod ksp;
 pub mod pc;
+pub mod perf;
 pub mod sim;
 pub mod coordinator;
 #[cfg(feature = "pjrt")]

@@ -3,10 +3,18 @@
 //!
 //! ```sh
 //! mmpetsc solve --case saltfinger-pressure --scale 0.02 --ranks 4 --threads 2
+//! mmpetsc solve --ranks 2 --threads 2 -log_view -log_trace trace.jsonl
 //! mmpetsc model --case flue-pressure --cores 8192 --threads 4
 //! mmpetsc fault --seeds 8
 //! mmpetsc info
 //! ```
+//!
+//! `solve`, `batch` and `fault` also accept PETSc-style single-dash
+//! options (`-log_view`, `-log_trace <path>`), routed through the
+//! [`Options`] database: `-log_view` prints the staged per-event
+//! performance table after the run; `-log_trace` exports the
+//! per-(rank,thread) kernel-op trace as JSONL. Without either flag the
+//! instrumentation stays disarmed (no `PerfLog` is installed).
 //!
 //! Exit codes: 0 success; 1 configuration or run error (typed
 //! [`Error`](mmpetsc::error::Error), printed to stderr); 3 chaos-harness
@@ -19,9 +27,12 @@ use std::time::Instant;
 use mmpetsc::bench::Table;
 use mmpetsc::comm::fault::FaultPlan;
 use mmpetsc::coordinator::batch::{run_batch_case, BatchConfig};
+use mmpetsc::coordinator::options::Options;
 use mmpetsc::coordinator::runner::{run_case, HybridConfig};
 use mmpetsc::error::{Error, Result};
 use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::perf::view::PerfReport;
+use mmpetsc::perf::{PerfConfig, PerfSnapshot};
 use mmpetsc::sim::exec::{simulate, SimConfig};
 use mmpetsc::thread::overhead::Compiler;
 use mmpetsc::topology::presets::{hector_xe6, hector_xe6_node, HECTOR_PHASES};
@@ -68,6 +79,20 @@ fn lookup_case(name: &str) -> Result<TestCase> {
         .ok_or_else(|| Error::InvalidOption(format!("unknown test case `{name}`")))
 }
 
+/// Emit the armed instrumentation for a finished run: the `-log_view`
+/// staged per-event table and/or the `-log_trace` kernel-op JSONL export.
+/// No-op when neither flag was given (the snapshots are then empty too).
+fn emit_perf(perf: &PerfConfig, snaps: &[PerfSnapshot], wall_seconds: f64) -> Result<()> {
+    if perf.view {
+        print!("{}", PerfReport::from_snapshots(snaps).render(wall_seconds));
+    }
+    if let Some(path) = &perf.trace {
+        let n = mmpetsc::perf::trace::write_jsonl(path, snaps)?;
+        println!("-log_trace: wrote {n} kernel-op record(s) to {path}");
+    }
+    Ok(())
+}
+
 fn batch(argv: &[String]) -> Result<()> {
     let cli = Cli::new("mmpetsc batch", "batched multi-RHS solve queue")
         .opt("case", Some("saltfinger-pressure"), "Table-6 case")
@@ -79,6 +104,8 @@ fn batch(argv: &[String]) -> Result<()> {
         .opt("pc", Some("jacobi"), "none|jacobi|bjacobi|sor|ilu0")
         .opt("rtol", Some("1e-8"), "tolerance of every request");
     let a = cli.parse(argv)?;
+    let opts = Options::parse(a.positional())?;
+    let perf = opts.perf_config();
     let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let rtol = a.get_f64("rtol")?;
     let nreq = a.get_usize("requests")?.max(1);
@@ -92,6 +119,7 @@ fn batch(argv: &[String]) -> Result<()> {
     );
     cfg.pc_type = a.get_or("pc", "jacobi");
     cfg.set_uniform_rtol(rtol);
+    cfg.perf = perf.clone();
     let rep = run_batch_case(&cfg)?;
     let mut t = Table::new(
         &format!(
@@ -125,6 +153,13 @@ fn batch(argv: &[String]) -> Result<()> {
         rep.solo_traversals,
         rep.solo_traversals as f64 / rep.spmm_traversals.max(1) as f64,
     );
+    println!(
+        "latency (per-request batch wall): p50={} p90={} p99={}",
+        human::secs(rep.latency_p50),
+        human::secs(rep.latency_p90),
+        human::secs(rep.latency_p99),
+    );
+    emit_perf(&perf, &rep.perf, rep.wall_seconds)?;
     Ok(())
 }
 
@@ -145,6 +180,8 @@ fn solve(argv: &[String]) -> Result<()> {
         .opt("mat-type", Some("auto"), "aij|baij|sell|auto (measured pick)")
         .opt("mat-block-size", Some("0"), "BAIJ block-size hint (0 probes 2..4)");
     let a = cli.parse(argv)?;
+    let opts = Options::parse(a.positional())?;
+    let perf = opts.perf_config();
     let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let mut cfg = HybridConfig::default_for(
         case,
@@ -158,6 +195,7 @@ fn solve(argv: &[String]) -> Result<()> {
     cfg.ksp.max_restarts = a.get_usize("max-restarts")?;
     cfg.ksp.mat_type = a.get_or("mat-type", "auto");
     cfg.ksp.mat_block_size = a.get_usize("mat-block-size")?;
+    cfg.perf = perf.clone();
     let rep = run_case(&cfg)?;
     println!(
         "{} {}x{}: converged={} its={} mat={} KSPSolve={} MatMult={} msgs={} bytes={}",
@@ -172,6 +210,18 @@ fn solve(argv: &[String]) -> Result<()> {
         rep.messages,
         human::bytes(rep.bytes as f64),
     );
+    emit_perf(&perf, &rep.perf, rep.wall_seconds)?;
+    if perf.view {
+        println!(
+            "physical comm: msgs={} bytes={} hidden={} overlap={:.1}% forks={} mat={}",
+            rep.messages,
+            human::bytes(rep.bytes as f64),
+            rep.msgs_hidden,
+            100.0 * rep.overlap_fraction,
+            rep.forks,
+            rep.mat_format,
+        );
+    }
     Ok(())
 }
 
@@ -226,6 +276,8 @@ fn fault(argv: &[String]) -> Result<()> {
     .opt("rtol", Some("1e-8"), "relative tolerance")
     .opt("max-restarts", Some("1"), "breakdown restarts per solve");
     let a = cli.parse(argv)?;
+    let opts = Options::parse(a.positional())?;
+    let perf = opts.perf_config();
     let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let scale = a.get_f64("scale")?;
     let rtol = a.get_f64("rtol")?;
@@ -259,6 +311,10 @@ fn fault(argv: &[String]) -> Result<()> {
         &["plan", "fault", "ranks×threads", "wall", "outcome"],
     );
     let mut failures = 0usize;
+    // `-log_view`/`-log_trace` under chaos: every run is instrumented,
+    // but only the *last* completed run's snapshots are surfaced — the
+    // table for a sweep of faulted solves would bury the chaos verdicts.
+    let mut last_perf: Option<(Vec<PerfSnapshot>, f64)> = None;
     for (label, plan) in &plans {
         for &(ranks, threads) in &DECOMPS {
             let mut cfg = HybridConfig::default_for(case, scale, ranks, threads);
@@ -267,17 +323,26 @@ fn fault(argv: &[String]) -> Result<()> {
             cfg.ksp.rtol = rtol;
             cfg.ksp.max_restarts = max_restarts;
             cfg.fault = Some(Arc::clone(plan));
+            cfg.perf = perf.clone();
             let t0 = Instant::now();
             let run = catch_unwind(AssertUnwindSafe(|| run_case(&cfg)));
             let wall = t0.elapsed().as_secs_f64();
             let outcome = match run {
-                Ok(Ok(rep)) if rep.converged && rep.final_residual.is_finite() => {
-                    ChaosOutcome::Converged(rep.iterations)
+                Ok(Ok(rep)) => {
+                    let o = if rep.converged && rep.final_residual.is_finite() {
+                        ChaosOutcome::Converged(rep.iterations)
+                    } else if rep.converged {
+                        ChaosOutcome::SilentWrong
+                    } else {
+                        ChaosOutcome::Diverged(
+                            rep.reason.map_or_else(|| "unknown".into(), |r| format!("{r:?}")),
+                        )
+                    };
+                    if perf.enabled() {
+                        last_perf = Some((rep.perf, rep.wall_seconds));
+                    }
+                    o
                 }
-                Ok(Ok(rep)) if rep.converged => ChaosOutcome::SilentWrong,
-                Ok(Ok(rep)) => ChaosOutcome::Diverged(
-                    rep.reason.map_or_else(|| "unknown".into(), |r| format!("{r:?}")),
-                ),
                 Ok(Err(e)) => ChaosOutcome::Errored(e.to_string()),
                 Err(_) => ChaosOutcome::Panicked,
             };
@@ -294,6 +359,9 @@ fn fault(argv: &[String]) -> Result<()> {
         }
     }
     t.print();
+    if let Some((snaps, wall)) = &last_perf {
+        emit_perf(&perf, snaps, *wall)?;
+    }
     let runs = plans.len() * DECOMPS.len();
     if failures > 0 {
         return Err(Error::Runtime(format!(

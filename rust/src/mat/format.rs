@@ -208,13 +208,23 @@ fn trial_sweep(op: LocalOp<'_>, x: &[f64], y: &mut [f64]) {
 /// flops), so `-log_summary` style reports account the trial work.
 pub fn trial_seconds(op: LocalOp<'_>, x: &[f64], y: &mut [f64], log: &EventLog) -> f64 {
     let flops = 2.0 * op.nnz() as f64;
+    let perf = op.ctx().perf().cloned();
     trial_sweep(op, x, y); // warm-up: paging, conversion caches
     let mut best = f64::INFINITY;
     for _ in 0..TRIAL_REPS {
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
         let secs = log.timed("MatFormatTrial", flops, || {
             let ((), s) = crate::util::timer::timed(|| trial_sweep(op, x, y));
             s
         });
+        if let Some(p) = &perf {
+            p.op(
+                0,
+                crate::perf::Event::MatTrialFormat,
+                t0.expect("set when armed"),
+                flops,
+            );
+        }
         if secs < best {
             best = secs;
         }

@@ -77,6 +77,14 @@ pub struct HybridPlan {
     /// Per local slot: the slot's sub-range of the rank-local index space
     /// (for slot-chunked vector kernels and reductions).
     slot_ranges: Vec<(usize, usize)>,
+    /// Per local slot: LOGICAL ghost traffic `(messages, bytes)` computed
+    /// from the global structure — for slot `s`: the number of distinct
+    /// *source slots* whose x-entries `s`'s rows reference, and 8 bytes per
+    /// distinct outside-slot global column. Independent of the physical
+    /// rank count, so `-log_view` message totals are decomposition-invariant
+    /// (the physical `CommStats` are reported separately). Empty (zeros)
+    /// when the plan was built with instrumentation disarmed.
+    slot_comm: Vec<(u64, u64)>,
 }
 
 impl HybridPlan {
@@ -114,6 +122,30 @@ impl HybridPlan {
     /// All local slot ranges (one per thread, rank-local coordinates).
     pub fn slot_ranges(&self) -> &[(usize, usize)] {
         &self.slot_ranges
+    }
+
+    /// Per-local-slot logical ghost traffic `(messages, bytes)` — see the
+    /// field docs. One entry per local slot.
+    pub fn slot_comm(&self) -> &[(u64, u64)] {
+        &self.slot_comm
+    }
+
+    /// Rank-total logical ghost traffic: slot-ordered sum of
+    /// [`HybridPlan::slot_comm`].
+    pub fn comm_totals(&self) -> (u64, u64) {
+        self.slot_comm
+            .iter()
+            .fold((0, 0), |(m, b), &(sm, sb)| (m + sm, b + sb))
+    }
+
+    /// Combined (diag + off) nonzeros in rows `[rlo, rhi)` — the honest flop
+    /// attribution (`2·nnz`) for a region thread's MatMult chunk. Exact for
+    /// every partition, so per-thread flop sums are decomposition-invariant.
+    pub fn chunk_nnz(&self, rlo: usize, rhi: usize) -> usize {
+        self.segs[self.seg_ptr[rlo]..self.seg_ptr[rhi]]
+            .iter()
+            .map(|s| s.hi - s.lo)
+            .sum()
     }
 
     /// Phase A: diagonal-block slot partials for rows `[rlo, rhi)`, while
@@ -478,6 +510,11 @@ impl MatMPIAIJ {
         }
         let (col_lo, _) = self.col_layout.range(self.rank);
         let rows = self.a_diag.rows();
+        let first_slot = self.rank * t;
+        // Logical ghost traffic is only tallied when instrumentation is armed
+        // on this context; the numerical plan below is identical either way.
+        let armed = self.a_diag.ctx().perf().is_some();
+        let mut slot_ghost: Vec<Vec<usize>> = vec![Vec::new(); t];
         let mut seg_ptr = Vec::with_capacity(rows + 1);
         seg_ptr.push(0usize);
         let mut segs: Vec<HybridSeg> = Vec::new();
@@ -488,6 +525,7 @@ impl MatMPIAIJ {
             let (oc, _) = self.b_off.row(i);
             let drow_base = self.a_diag.row_ptr()[i];
             let orow_base = self.b_off.row_ptr()[i];
+            let row_slot = grid.slot_of(col_lo + i);
             // Merge the two sorted runs by global column; a maximal same-slot
             // run is always block-pure (a slot's columns belong to one rank).
             let mut di = 0usize;
@@ -506,16 +544,27 @@ impl MatMPIAIJ {
                     while oi < oc.len() && self.garray[oc[oi]] < s_hi {
                         oi += 1;
                     }
+                    if armed {
+                        // Off-diag columns always live outside this rank
+                        // (hence outside this row's slot).
+                        slot_ghost[row_slot - first_slot]
+                            .extend(oc[start..oi].iter().map(|&k| self.garray[k]));
+                    }
                     segs.push(HybridSeg {
                         off: true,
                         lo: orow_base + start,
                         hi: orow_base + oi,
                     });
                 } else {
-                    let (_, s_hi) = grid.range(grid.slot_of(dg.unwrap()));
+                    let seg_slot = grid.slot_of(dg.unwrap());
+                    let (_, s_hi) = grid.range(seg_slot);
                     let start = di;
                     while di < dc.len() && col_lo + dc[di] < s_hi {
                         di += 1;
+                    }
+                    if armed && seg_slot != row_slot {
+                        slot_ghost[row_slot - first_slot]
+                            .extend(dc[start..di].iter().map(|&c| col_lo + c));
                     }
                     segs.push(HybridSeg {
                         off: false,
@@ -527,8 +576,17 @@ impl MatMPIAIJ {
             seg_ptr.push(segs.len());
             comb.push(comb[i] + dc.len() + oc.len());
         }
+        let slot_comm: Vec<(u64, u64)> = slot_ghost
+            .into_iter()
+            .map(|mut cols| {
+                cols.sort_unstable();
+                cols.dedup();
+                let mut srcs: Vec<usize> = cols.iter().map(|&c| grid.slot_of(c)).collect();
+                srcs.dedup(); // cols sorted ⇒ source slots sorted
+                (srcs.len() as u64, 8 * cols.len() as u64)
+            })
+            .collect();
         let part = nnz_balanced_chunks(&comb, t);
-        let first_slot = self.rank * t;
         let slot_ranges = (0..t)
             .map(|j| {
                 let (glo, ghi) = grid.range(first_slot + j);
@@ -544,6 +602,7 @@ impl MatMPIAIJ {
             segs,
             part,
             slot_ranges,
+            slot_comm,
         });
         self.hybrid_scratch = vec![0.0; nsegs];
         self.hybrid_scratch_multi.clear();
@@ -730,9 +789,33 @@ impl MatMPIAIJ {
     /// (decomposition-invariant) kernels; otherwise the plain diag/off split.
     pub fn mult(&mut self, x: &VecMPI, y: &mut VecMPI, comm: &mut Comm) -> Result<()> {
         self.check_vecs(x, y)?;
+        let perf = self.a_diag.ctx().perf().cloned();
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
         self.mult_begin(x, comm)?;
         self.mult_overlap(x, y)?;
-        self.mult_end(y, comm)
+        let out = self.mult_end(y, comm);
+        if out.is_ok() {
+            if let Some(p) = &perf {
+                // Logical (slot-level) ghost traffic so -log_view totals are
+                // decomposition-invariant; physical wire counts live in the
+                // CommStats footer.
+                let (msgs, bytes) = self
+                    .hybrid
+                    .as_ref()
+                    .map(|pl| pl.comm_totals())
+                    .unwrap_or((0, 0));
+                p.op_comm(
+                    0,
+                    crate::perf::Event::MatMult,
+                    t0.expect("set when armed"),
+                    self.mult_flops(),
+                    msgs,
+                    bytes,
+                    0,
+                );
+            }
+        }
+        out
     }
 
     /// Split-phase MatMult, step 1: post the ghost sends (non-blocking).
@@ -741,7 +824,26 @@ impl MatMPIAIJ {
         if x.layout() != &self.col_layout {
             return Err(Error::size_mismatch("MatMult begin: x layout"));
         }
-        self.scatter.begin(x, comm)
+        let perf = self.a_diag.ctx().perf().cloned();
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
+        self.scatter.begin(x, comm)?;
+        if let Some(p) = &perf {
+            let (msgs, bytes) = self
+                .hybrid
+                .as_ref()
+                .map(|pl| pl.comm_totals())
+                .unwrap_or((0, 0));
+            p.op_comm(
+                0,
+                crate::perf::Event::VecScatterBegin,
+                t0.expect("set when armed"),
+                0.0,
+                msgs,
+                bytes,
+                0,
+            );
+        }
+        Ok(())
     }
 
     /// Split-phase MatMult, step 2: the local (diagonal-block) compute that
@@ -808,9 +910,19 @@ impl MatMPIAIJ {
         if y.layout() != &self.row_layout || y.local().len() != self.a_diag.rows() {
             return Err(Error::size_mismatch("MatMult end: y layout/rank"));
         }
+        let perf = self.a_diag.ctx().perf().cloned();
         match self.hybrid.as_ref() {
             Some(plan) => {
+                let t0 = perf.as_ref().map(|_| std::time::Instant::now());
                 let ghosts = self.scatter.end(comm)?;
+                if let Some(p) = &perf {
+                    p.op(
+                        0,
+                        crate::perf::Event::VecScatterEnd,
+                        t0.expect("set when armed"),
+                        0.0,
+                    );
+                }
                 let scratch: &[f64] = &self.hybrid_scratch;
                 let off = &self.b_off;
                 let yr = RawF64(y.local_mut().as_mut_slice().as_mut_ptr());
@@ -830,7 +942,16 @@ impl MatMPIAIJ {
                 Ok(())
             }
             None => {
+                let t0 = perf.as_ref().map(|_| std::time::Instant::now());
                 let ghosts = self.scatter.end(comm)?;
+                if let Some(p) = &perf {
+                    p.op(
+                        0,
+                        crate::perf::Event::VecScatterEnd,
+                        t0.expect("set when armed"),
+                        0.0,
+                    );
+                }
                 self.b_off
                     .mult_add_slices(ghosts, y.local_mut().as_mut_slice())
             }
@@ -865,9 +986,31 @@ impl MatMPIAIJ {
         comm: &mut Comm,
     ) -> Result<()> {
         self.check_multi_vecs(x, y)?;
+        let perf = self.a_diag.ctx().perf().cloned();
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
+        let k = x.ncols();
         self.mult_multi_begin(x, comm)?;
         self.mult_multi_overlap(x, y)?;
-        self.mult_multi_end(y, comm)
+        let out = self.mult_multi_end(y, comm);
+        if out.is_ok() {
+            if let Some(p) = &perf {
+                let (msgs, bytes) = self
+                    .hybrid
+                    .as_ref()
+                    .map(|pl| pl.comm_totals())
+                    .unwrap_or((0, 0));
+                p.op_comm(
+                    0,
+                    crate::perf::Event::MatMultMulti,
+                    t0.expect("set when armed"),
+                    self.mult_multi_flops(k),
+                    msgs,
+                    bytes * k as u64,
+                    0,
+                );
+            }
+        }
+        out
     }
 
     /// Split-phase SpMM, step 1: post the k-wide ghost sends.

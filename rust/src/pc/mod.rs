@@ -251,6 +251,24 @@ pub fn from_name(
     a: &MatMPIAIJ,
     comm: &mut Comm,
 ) -> Result<Box<dyn Precond + Send>> {
+    let perf = a.local_op().ctx().perf().cloned();
+    let t0 = perf.as_ref().map(|_| std::time::Instant::now());
+    let pc = build_by_name(name, a, comm)?;
+    if let Some(p) = &perf {
+        // Setup cost attributed as one flop per local row — a stand-in
+        // that keeps KSPSetUp totals nonzero and decomposition-invariant
+        // (the real cost is factorization-dependent).
+        p.op(
+            0,
+            crate::perf::Event::PCSetUp,
+            t0.expect("set when armed"),
+            a.local_rows() as f64,
+        );
+    }
+    Ok(pc)
+}
+
+fn build_by_name(name: &str, a: &MatMPIAIJ, comm: &mut Comm) -> Result<Box<dyn Precond + Send>> {
     Ok(match name {
         "none" => Box::new(PcNone),
         "jacobi" => Box::new(jacobi::PcJacobi::setup(a, comm)?),

@@ -1,0 +1,549 @@
+//! Performance instrumentation: a staged event registry with per-(rank,thread)
+//! counters and an optional kernel-op trace, in the spirit of PETSc's
+//! `-log_view` / `PetscLogEvent` machinery.
+//!
+//! Design contract (DESIGN.md §12):
+//!
+//! - **Slot-ordered merge.** Counter totals merge in slot order (rank-major,
+//!   then thread), so any ranks×threads factorization of G produces identical
+//!   totals for flops, logical messages, bytes, and reductions. All flop
+//!   attributions are integer-valued f64s whose sums stay far below 2^53, so
+//!   the totals are exact regardless of addition order; the slot-ordered fold
+//!   is kept anyway to match the repo-wide determinism idiom.
+//! - **Zero-cost disarmed.** When no `-log_*` flag is armed,
+//!   `ThreadCtx::perf()` returns `None` and every event site is one untaken
+//!   branch. Counters never feed back into numerical data, so even armed runs
+//!   are bitwise identical to disarmed runs.
+//! - **Single-writer slots.** Thread `tid` writes only slot `tid` of its
+//!   rank's `PerfLog`. Counter cells use relaxed load-add-store on `AtomicU64`
+//!   (f64 bit-casts for the float fields) — the same idiom as
+//!   `thread::pool::ReduceSlots` — which is fully safe code and exact under
+//!   the single-writer discipline. The trace buffers live in `UnsafeCell`
+//!   vectors behind the same discipline.
+
+pub mod trace;
+pub mod view;
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Static event registry. Discriminants index the per-slot counter arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Event {
+    MatMult = 0,
+    MatMultMulti = 1,
+    MatTrialFormat = 2,
+    VecDot = 3,
+    VecNorm = 4,
+    VecAXPY = 5,
+    VecAYPX = 6,
+    VecScatterBegin = 7,
+    VecScatterEnd = 8,
+    PCSetUp = 9,
+    PCApply = 10,
+    KSPSetUp = 11,
+    KSPSolve = 12,
+    ThreadFork = 13,
+    ThreadBarrier = 14,
+}
+
+pub const N_EVENTS: usize = 15;
+
+impl Event {
+    pub const ALL: [Event; N_EVENTS] = [
+        Event::MatMult,
+        Event::MatMultMulti,
+        Event::MatTrialFormat,
+        Event::VecDot,
+        Event::VecNorm,
+        Event::VecAXPY,
+        Event::VecAYPX,
+        Event::VecScatterBegin,
+        Event::VecScatterEnd,
+        Event::PCSetUp,
+        Event::PCApply,
+        Event::KSPSetUp,
+        Event::KSPSolve,
+        Event::ThreadFork,
+        Event::ThreadBarrier,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Event::MatMult => "MatMult",
+            Event::MatMultMulti => "MatMultMulti",
+            Event::MatTrialFormat => "MatTrialFormat",
+            Event::VecDot => "VecDot",
+            Event::VecNorm => "VecNorm",
+            Event::VecAXPY => "VecAXPY",
+            Event::VecAYPX => "VecAYPX",
+            Event::VecScatterBegin => "VecScatterBegin",
+            Event::VecScatterEnd => "VecScatterEnd",
+            Event::PCSetUp => "PCSetUp",
+            Event::PCApply => "PCApply",
+            Event::KSPSetUp => "KSPSetUp",
+            Event::KSPSolve => "KSPSolve",
+            Event::ThreadFork => "ThreadFork",
+            Event::ThreadBarrier => "ThreadBarrier",
+        }
+    }
+}
+
+/// Nestable log stages à la `PetscLogStage`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    Main = 0,
+    Setup = 1,
+    Solve = 2,
+}
+
+pub const N_STAGES: usize = 3;
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [Stage::Main, Stage::Setup, Stage::Solve];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Main => "main",
+            Stage::Setup => "setup",
+            Stage::Solve => "solve",
+        }
+    }
+
+    fn from_u8(v: u8) -> Stage {
+        match v {
+            1 => Stage::Setup,
+            2 => Stage::Solve,
+            _ => Stage::Main,
+        }
+    }
+}
+
+/// What the user armed on the command line (`-log_view`, `-log_trace <path>`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PerfConfig {
+    /// Render the PETSc-style per-event table at the end of the run.
+    pub view: bool,
+    /// Stream a per-rank JSONL kernel-op trace to this path.
+    pub trace: Option<String>,
+}
+
+impl PerfConfig {
+    pub fn enabled(&self) -> bool {
+        self.view || self.trace.is_some()
+    }
+}
+
+/// Plain-data accumulator for one (stage, event) cell.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Counters {
+    pub count: u64,
+    pub seconds: f64,
+    pub flops: f64,
+    pub msgs: u64,
+    pub bytes: u64,
+    pub reductions: u64,
+}
+
+impl Counters {
+    pub fn absorb(&mut self, o: &Counters) {
+        self.count += o.count;
+        self.seconds += o.seconds;
+        self.flops += o.flops;
+        self.msgs += o.msgs;
+        self.bytes += o.bytes;
+        self.reductions += o.reductions;
+    }
+}
+
+/// One kernel-op trace record as captured in a slot's buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRec {
+    pub event: Event,
+    pub stage: Stage,
+    pub t_start: f64,
+    pub dur: f64,
+    pub flops: f64,
+    pub bytes: u64,
+}
+
+/// A trace record flattened with its (rank, thread) origin — the JSONL row.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEntry {
+    pub rank: usize,
+    pub thread: usize,
+    pub rec: TraceRec,
+}
+
+/// Per-slot trace buffer cap: bounds memory for long runs; overflow is
+/// counted in `dropped` rather than silently discarded.
+const TRACE_CAP: usize = 1 << 18;
+
+struct AtomicCell {
+    count: AtomicU64,
+    secs: AtomicU64,
+    flops: AtomicU64,
+    msgs: AtomicU64,
+    bytes: AtomicU64,
+    reds: AtomicU64,
+}
+
+impl AtomicCell {
+    fn new() -> AtomicCell {
+        AtomicCell {
+            count: AtomicU64::new(0),
+            secs: AtomicU64::new(0),
+            flops: AtomicU64::new(0),
+            msgs: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            reds: AtomicU64::new(0),
+        }
+    }
+
+    /// Single-writer relaxed accumulate (f64 fields go through bit-casts).
+    fn add(&self, count: u64, secs: f64, flops: f64, msgs: u64, bytes: u64, reds: u64) {
+        if count != 0 {
+            self.count.fetch_add(count, Ordering::Relaxed);
+        }
+        if secs != 0.0 {
+            let cur = f64::from_bits(self.secs.load(Ordering::Relaxed));
+            self.secs.store((cur + secs).to_bits(), Ordering::Relaxed);
+        }
+        if flops != 0.0 {
+            let cur = f64::from_bits(self.flops.load(Ordering::Relaxed));
+            self.flops.store((cur + flops).to_bits(), Ordering::Relaxed);
+        }
+        if msgs != 0 {
+            self.msgs.fetch_add(msgs, Ordering::Relaxed);
+        }
+        if bytes != 0 {
+            self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+        if reds != 0 {
+            self.reds.fetch_add(reds, Ordering::Relaxed);
+        }
+    }
+
+    fn load(&self) -> Counters {
+        Counters {
+            count: self.count.load(Ordering::Relaxed),
+            seconds: f64::from_bits(self.secs.load(Ordering::Relaxed)),
+            flops: f64::from_bits(self.flops.load(Ordering::Relaxed)),
+            msgs: self.msgs.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            reductions: self.reds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Trace buffer with a documented single-writer contract: only thread `tid`
+/// pushes into slot `tid`'s buffer, and `PerfLog::snapshot` (which reads it)
+/// runs only after every region has joined.
+struct TraceCell(UnsafeCell<Vec<TraceRec>>);
+
+// SAFETY: see the single-writer contract above — no two threads ever access
+// the same cell concurrently.
+unsafe impl Sync for TraceCell {}
+
+/// Per-thread slot, cache-line padded so neighbouring slots never share a
+/// line (the `ReduceSlots` idiom).
+#[repr(align(128))]
+struct Slot {
+    cells: Vec<AtomicCell>, // stage-major: stage * N_EVENTS + event
+    trace: TraceCell,
+    dropped: AtomicU64,
+}
+
+impl Slot {
+    fn new(tracing: bool) -> Slot {
+        Slot {
+            cells: (0..N_STAGES * N_EVENTS).map(|_| AtomicCell::new()).collect(),
+            trace: TraceCell(UnsafeCell::new(if tracing {
+                Vec::with_capacity(1024)
+            } else {
+                Vec::new()
+            })),
+            dropped: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One rank's staged event log: per-thread counter slots plus the stage
+/// machinery. Installed once per run on the rank's `thread::Pool` and reached
+/// everywhere through `ThreadCtx::perf()`.
+pub struct PerfLog {
+    rank: usize,
+    nthreads: usize,
+    epoch: Instant,
+    tracing: bool,
+    stage: AtomicU8,
+    stage_stack: Mutex<Vec<u8>>,
+    slots: Vec<Slot>,
+}
+
+impl PerfLog {
+    pub fn new(rank: usize, nthreads: usize, epoch: Instant, tracing: bool) -> PerfLog {
+        let n = nthreads.max(1);
+        PerfLog {
+            rank,
+            nthreads: n,
+            epoch,
+            tracing,
+            stage: AtomicU8::new(Stage::Main as u8),
+            stage_stack: Mutex::new(Vec::new()),
+            slots: (0..n).map(|_| Slot::new(tracing)).collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.tracing
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    fn current_stage(&self) -> Stage {
+        Stage::from_u8(self.stage.load(Ordering::Relaxed))
+    }
+
+    /// Enter a stage (master-side; threads observe it via a relaxed load).
+    pub fn push_stage(&self, s: Stage) {
+        let mut st = self.stage_stack.lock().unwrap_or_else(|p| p.into_inner());
+        st.push(self.stage.load(Ordering::Relaxed));
+        self.stage.store(s as u8, Ordering::Relaxed);
+    }
+
+    /// Leave the current stage, restoring the previous one.
+    pub fn pop_stage(&self) {
+        let mut st = self.stage_stack.lock().unwrap_or_else(|p| p.into_inner());
+        let prev = st.pop().unwrap_or(Stage::Main as u8);
+        self.stage.store(prev, Ordering::Relaxed);
+    }
+
+    /// Core accumulate: counters only, no trace record.
+    #[allow(clippy::too_many_arguments)]
+    pub fn add(
+        &self,
+        tid: usize,
+        ev: Event,
+        count: u64,
+        secs: f64,
+        flops: f64,
+        msgs: u64,
+        bytes: u64,
+        reds: u64,
+    ) {
+        let stage = self.stage.load(Ordering::Relaxed) as usize;
+        let slot = &self.slots[tid.min(self.nthreads - 1)];
+        slot.cells[stage * N_EVENTS + ev as usize].add(count, secs, flops, msgs, bytes, reds);
+    }
+
+    /// Record a timed op that started at `t0`: count 1, measured duration,
+    /// plus a trace record when tracing is armed.
+    pub fn op(&self, tid: usize, ev: Event, t0: Instant, flops: f64) {
+        self.op_comm(tid, ev, t0, flops, 0, 0, 0);
+    }
+
+    /// `op` with logical message / byte / reduction attribution.
+    #[allow(clippy::too_many_arguments)]
+    pub fn op_comm(
+        &self,
+        tid: usize,
+        ev: Event,
+        t0: Instant,
+        flops: f64,
+        msgs: u64,
+        bytes: u64,
+        reds: u64,
+    ) {
+        let dur = t0.elapsed().as_secs_f64();
+        self.add(tid, ev, 1, dur, flops, msgs, bytes, reds);
+        if self.tracing {
+            let tid = tid.min(self.nthreads - 1);
+            let slot = &self.slots[tid];
+            // SAFETY: single-writer contract — only thread `tid` touches this
+            // buffer, and snapshot() runs after all regions have joined.
+            let buf = unsafe { &mut *slot.trace.0.get() };
+            if buf.len() < TRACE_CAP {
+                buf.push(TraceRec {
+                    event: ev,
+                    stage: self.current_stage(),
+                    t_start: t0.duration_since(self.epoch).as_secs_f64(),
+                    dur,
+                    flops,
+                    bytes,
+                });
+            } else {
+                slot.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Sum of flop counters over every slot and stage. Used by `PerfSpan` to
+    /// attribute inclusive (children-included) flops to nested events, PETSc
+    /// style.
+    pub fn total_flops(&self) -> f64 {
+        let mut t = 0.0;
+        for slot in &self.slots {
+            for cell in &slot.cells {
+                t += f64::from_bits(cell.flops.load(Ordering::Relaxed));
+            }
+        }
+        t
+    }
+
+    /// Open a master-side RAII span for a nested event (KSPSetUp, KSPSolve).
+    /// The span ends on drop — including `?` early returns and unwinds — and
+    /// records the elapsed time plus the flops accumulated underneath it.
+    pub fn span(self: &Arc<Self>, ev: Event, stage: Option<Stage>) -> PerfSpan {
+        if let Some(s) = stage {
+            self.push_stage(s);
+        }
+        PerfSpan {
+            log: Arc::clone(self),
+            ev,
+            t0: Instant::now(),
+            flops0: self.total_flops(),
+            staged: stage.is_some(),
+        }
+    }
+
+    /// Drain counters and trace into plain data. Call only from the master
+    /// thread after every region has joined (the single-writer contract).
+    pub fn snapshot(&self) -> PerfSnapshot {
+        let mut counters = Vec::with_capacity(self.nthreads);
+        let mut trace = Vec::new();
+        let mut dropped = 0u64;
+        for (tid, slot) in self.slots.iter().enumerate() {
+            counters.push(slot.cells.iter().map(|c| c.load()).collect());
+            dropped += slot.dropped.load(Ordering::Relaxed);
+            // SAFETY: no region is active, so no writer holds this buffer.
+            let buf = unsafe { &mut *slot.trace.0.get() };
+            for rec in buf.drain(..) {
+                trace.push(TraceEntry {
+                    rank: self.rank,
+                    thread: tid,
+                    rec,
+                });
+            }
+        }
+        PerfSnapshot {
+            rank: self.rank,
+            threads: self.nthreads,
+            counters,
+            trace,
+            dropped,
+        }
+    }
+}
+
+/// RAII guard returned by [`PerfLog::span`].
+pub struct PerfSpan {
+    log: Arc<PerfLog>,
+    ev: Event,
+    t0: Instant,
+    flops0: f64,
+    staged: bool,
+}
+
+impl Drop for PerfSpan {
+    fn drop(&mut self) {
+        let flops = (self.log.total_flops() - self.flops0).max(0.0);
+        self.log.op(0, self.ev, self.t0, flops);
+        if self.staged {
+            self.log.pop_stage();
+        }
+    }
+}
+
+/// Plain-data image of one rank's `PerfLog`, sent through the rank-outcome
+/// channel and merged rank-ordered on the coordinator.
+#[derive(Debug, Clone)]
+pub struct PerfSnapshot {
+    pub rank: usize,
+    pub threads: usize,
+    /// `counters[tid][stage * N_EVENTS + event]`.
+    pub counters: Vec<Vec<Counters>>,
+    pub trace: Vec<TraceEntry>,
+    pub dropped: u64,
+}
+
+impl PerfSnapshot {
+    /// Cell for (thread, stage, event).
+    pub fn cell(&self, tid: usize, stage: Stage, ev: Event) -> &Counters {
+        &self.counters[tid][stage as usize * N_EVENTS + ev as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_slot_and_stage() {
+        let log = PerfLog::new(0, 2, Instant::now(), false);
+        log.add(0, Event::MatMult, 1, 0.5, 100.0, 2, 16, 0);
+        log.add(1, Event::MatMult, 1, 0.25, 50.0, 1, 8, 0);
+        log.push_stage(Stage::Solve);
+        log.add(0, Event::VecDot, 1, 0.0, 10.0, 0, 0, 1);
+        log.pop_stage();
+        let snap = log.snapshot();
+        assert_eq!(snap.cell(0, Stage::Main, Event::MatMult).count, 1);
+        assert_eq!(snap.cell(0, Stage::Main, Event::MatMult).flops, 100.0);
+        assert_eq!(snap.cell(1, Stage::Main, Event::MatMult).msgs, 1);
+        assert_eq!(snap.cell(0, Stage::Solve, Event::VecDot).reductions, 1);
+        assert_eq!(snap.cell(0, Stage::Main, Event::VecDot).count, 0);
+    }
+
+    #[test]
+    fn span_records_inclusive_flops_on_drop() {
+        let log = Arc::new(PerfLog::new(0, 1, Instant::now(), false));
+        {
+            let _sp = log.span(Event::KSPSolve, Some(Stage::Solve));
+            log.add(0, Event::MatMult, 1, 0.0, 1234.0, 0, 0, 0);
+        }
+        let snap = log.snapshot();
+        let ks = snap.cell(0, Stage::Solve, Event::KSPSolve);
+        assert_eq!(ks.count, 1);
+        assert_eq!(ks.flops, 1234.0);
+        // Stage restored after the span.
+        assert_eq!(log.current_stage(), Stage::Main);
+    }
+
+    #[test]
+    fn trace_records_are_captured_in_order() {
+        let log = PerfLog::new(3, 1, Instant::now(), true);
+        let t0 = Instant::now();
+        log.op(0, Event::MatMult, t0, 42.0);
+        log.op(0, Event::VecDot, Instant::now(), 2.0);
+        let snap = log.snapshot();
+        assert_eq!(snap.trace.len(), 2);
+        assert_eq!(snap.trace[0].rec.event, Event::MatMult);
+        assert_eq!(snap.trace[0].rank, 3);
+        assert_eq!(snap.trace[1].rec.event, Event::VecDot);
+        assert!(snap.trace[1].rec.t_start >= snap.trace[0].rec.t_start);
+        assert_eq!(snap.dropped, 0);
+    }
+
+    #[test]
+    fn disarmed_tracing_pushes_nothing() {
+        let log = PerfLog::new(0, 1, Instant::now(), false);
+        log.op(0, Event::MatMult, Instant::now(), 1.0);
+        let snap = log.snapshot();
+        assert!(snap.trace.is_empty());
+        assert_eq!(snap.cell(0, Stage::Main, Event::MatMult).count, 1);
+    }
+}

@@ -1,0 +1,74 @@
+//! `-log_trace` JSONL export: one kernel-op record per line, rank-ordered,
+//! in the schema `sim/exec.rs` can replay for the trace-driven decomposition
+//! advisor (ROADMAP item 4):
+//!
+//! ```json
+//! {"event":"MatMult","stage":"solve","rank":0,"thread":1,
+//!  "t_start":1.234e-4,"dur":5.6e-5,"flops":12340.0,"bytes":0}
+//! ```
+
+use super::PerfSnapshot;
+use crate::error::{Error, Result};
+use std::io::Write;
+
+/// Serialize one trace entry as a JSON object (hand-rolled: the crate is
+/// dependency-free by design).
+fn jsonl_line(e: &super::TraceEntry) -> String {
+    format!(
+        "{{\"event\":\"{}\",\"stage\":\"{}\",\"rank\":{},\"thread\":{},\"t_start\":{:e},\"dur\":{:e},\"flops\":{:e},\"bytes\":{}}}",
+        e.rec.event.name(),
+        e.rec.stage.name(),
+        e.rank,
+        e.thread,
+        e.rec.t_start,
+        e.rec.dur,
+        e.rec.flops,
+        e.rec.bytes
+    )
+}
+
+/// Write every rank's trace (snapshots must already be rank-ordered) as
+/// JSONL. Returns the number of records written.
+pub fn write_jsonl(path: &str, snaps: &[PerfSnapshot]) -> Result<usize> {
+    let f = std::fs::File::create(path).map_err(Error::Io)?;
+    let mut w = std::io::BufWriter::new(f);
+    let mut n = 0usize;
+    for snap in snaps {
+        for entry in &snap.trace {
+            writeln!(w, "{}", jsonl_line(entry)).map_err(Error::Io)?;
+            n += 1;
+        }
+    }
+    w.flush().map_err(Error::Io)?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::{Event, PerfLog};
+    use std::time::Instant;
+
+    #[test]
+    fn jsonl_roundtrips_through_a_file() {
+        let log = PerfLog::new(1, 1, Instant::now(), true);
+        log.op(0, Event::MatMult, Instant::now(), 128.0);
+        log.op(0, Event::VecDot, Instant::now(), 16.0);
+        let snap = log.snapshot();
+        let dir = std::env::temp_dir().join("mmpetsc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let n = write_jsonl(path.to_str().unwrap(), &[snap]).unwrap();
+        assert_eq!(n, 2);
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            assert!(line.starts_with('{') && line.ends_with('}'));
+            assert!(line.contains("\"rank\":1"));
+            assert!(line.contains("\"stage\":\"main\""));
+        }
+        assert!(body.contains("\"event\":\"MatMult\""));
+        assert!(body.contains("\"event\":\"VecDot\""));
+    }
+}

@@ -1,0 +1,274 @@
+//! `-log_view` rendering: merge rank-ordered [`PerfSnapshot`]s into per-event
+//! rows (count, time, %T, flops, MFlop/s, messages, reductions, max/min/ratio
+//! across ranks) grouped by stage, PETSc `-log_view` style.
+
+use super::{Counters, Event, PerfSnapshot, Stage, N_EVENTS};
+
+/// Per-rank aggregate for one (stage, event) cell: count and time take the
+/// max over the rank's threads (the critical path); flops, messages, bytes
+/// and reductions sum over threads in slot order.
+#[derive(Debug, Clone, Copy, Default)]
+struct RankAgg {
+    count: u64,
+    seconds: f64,
+    flops: f64,
+    msgs: u64,
+    bytes: u64,
+    reductions: u64,
+}
+
+/// One rendered table row.
+#[derive(Debug, Clone)]
+pub struct EventRow {
+    pub stage: Stage,
+    pub event: Event,
+    pub count_max: u64,
+    pub count_min: u64,
+    pub time_max: f64,
+    pub time_min: f64,
+    pub flops: f64,
+    pub msgs: u64,
+    pub bytes: u64,
+    pub reductions: u64,
+}
+
+impl EventRow {
+    pub fn time_ratio(&self) -> f64 {
+        if self.time_min > 0.0 {
+            self.time_max / self.time_min
+        } else {
+            1.0
+        }
+    }
+
+    pub fn count_ratio(&self) -> f64 {
+        if self.count_min > 0 {
+            self.count_max as f64 / self.count_min as f64
+        } else {
+            1.0
+        }
+    }
+
+    pub fn mflops(&self) -> f64 {
+        if self.time_max > 0.0 {
+            self.flops / self.time_max / 1.0e6
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The merged cross-rank report. Built from snapshots already ordered by
+/// rank (the coordinator's ordered gather), with each rank's threads folded
+/// in slot order, so every derived total is decomposition-invariant.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    pub ranks: usize,
+    pub threads: usize,
+    pub rows: Vec<EventRow>,
+    pub dropped_trace: u64,
+}
+
+impl PerfReport {
+    pub fn from_snapshots(snaps: &[PerfSnapshot]) -> PerfReport {
+        let ranks = snaps.len();
+        let threads = snaps.iter().map(|s| s.threads).max().unwrap_or(1);
+        let mut rows = Vec::new();
+        for stage in Stage::ALL {
+            for ev in Event::ALL {
+                let idx = stage as usize * N_EVENTS + ev as usize;
+                let mut aggs: Vec<RankAgg> = Vec::with_capacity(ranks);
+                for snap in snaps {
+                    let mut a = RankAgg::default();
+                    for tid in 0..snap.threads {
+                        let c = &snap.counters[tid][idx];
+                        a.count = a.count.max(c.count);
+                        a.seconds = a.seconds.max(c.seconds);
+                        a.flops += c.flops;
+                        a.msgs += c.msgs;
+                        a.bytes += c.bytes;
+                        a.reductions += c.reductions;
+                    }
+                    aggs.push(a);
+                }
+                let active = aggs.iter().any(|a| a.count > 0 || a.seconds > 0.0);
+                if !active {
+                    continue;
+                }
+                let mut row = EventRow {
+                    stage,
+                    event: ev,
+                    count_max: 0,
+                    count_min: u64::MAX,
+                    time_max: 0.0,
+                    time_min: f64::INFINITY,
+                    flops: 0.0,
+                    msgs: 0,
+                    bytes: 0,
+                    reductions: 0,
+                };
+                for a in &aggs {
+                    row.count_max = row.count_max.max(a.count);
+                    row.count_min = row.count_min.min(a.count);
+                    row.time_max = row.time_max.max(a.seconds);
+                    row.time_min = row.time_min.min(a.seconds);
+                    row.flops += a.flops;
+                    row.msgs += a.msgs;
+                    row.bytes += a.bytes;
+                    row.reductions += a.reductions;
+                }
+                rows.push(row);
+            }
+        }
+        let dropped_trace = snaps.iter().map(|s| s.dropped).sum();
+        PerfReport {
+            ranks,
+            threads,
+            rows,
+            dropped_trace,
+        }
+    }
+
+    /// Slot-ordered total over every (rank, thread, stage) for one event —
+    /// the quantity the decomposition-invariance suite asserts on.
+    pub fn total(&self, ev: Event) -> Counters {
+        let mut t = Counters::default();
+        for row in &self.rows {
+            if row.event == ev {
+                t.count += row.count_max;
+                t.seconds += row.time_max;
+                t.flops += row.flops;
+                t.msgs += row.msgs;
+                t.bytes += row.bytes;
+                t.reductions += row.reductions;
+            }
+        }
+        t
+    }
+
+    /// Slot-ordered totals straight off the snapshots (every thread's cell,
+    /// rank-major): the exact fold the invariance argument is stated for.
+    pub fn slot_total(snaps: &[PerfSnapshot], ev: Event) -> Counters {
+        let mut t = Counters::default();
+        for snap in snaps {
+            for tid in 0..snap.threads {
+                for stage in Stage::ALL {
+                    t.absorb(snap.cell(tid, stage, ev));
+                }
+            }
+        }
+        t
+    }
+
+    /// Render the PETSc-style per-event table.
+    pub fn render(&self, wall_seconds: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "---------------------------------------------- -log_view ----------------------------------------------\n\
+             Decomposition: {} rank(s) x {} thread(s) = {} slot(s); wall time {:.6e} s\n",
+            self.ranks,
+            self.threads,
+            self.ranks * self.threads,
+            wall_seconds
+        ));
+        for stage in Stage::ALL {
+            let stage_rows: Vec<&EventRow> =
+                self.rows.iter().filter(|r| r.stage == stage).collect();
+            if stage_rows.is_empty() {
+                continue;
+            }
+            out.push_str(&format!(
+                "\n--- Event Stage {}: {}\n",
+                stage as u8,
+                stage.name()
+            ));
+            out.push_str(&format!(
+                "{:<16} {:>7} {:>5} {:>11} {:>6} {:>5} {:>11} {:>9} {:>7} {:>10} {:>6}\n",
+                "Event", "Count", "Ratio", "Time (s)", "Ratio", "%T", "Flops", "MFlop/s", "Msgs", "Bytes", "Reds"
+            ));
+            for r in stage_rows {
+                let pct = if wall_seconds > 0.0 {
+                    100.0 * r.time_max / wall_seconds
+                } else {
+                    0.0
+                };
+                out.push_str(&format!(
+                    "{:<16} {:>7} {:>5.1} {:>11.4e} {:>6.1} {:>5.1} {:>11.4e} {:>9.1} {:>7} {:>10} {:>6}\n",
+                    r.event.name(),
+                    r.count_max,
+                    r.count_ratio(),
+                    r.time_max,
+                    r.time_ratio(),
+                    pct,
+                    r.flops,
+                    r.mflops(),
+                    r.msgs,
+                    r.bytes,
+                    r.reductions
+                ));
+            }
+        }
+        if self.dropped_trace > 0 {
+            out.push_str(&format!(
+                "\n({} trace records dropped at the per-slot cap)\n",
+                self.dropped_trace
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::PerfLog;
+    use std::time::Instant;
+
+    fn snap_with(rank: usize, nthreads: usize, flops_per_thread: f64) -> PerfSnapshot {
+        let log = PerfLog::new(rank, nthreads, Instant::now(), false);
+        for tid in 0..nthreads {
+            log.add(tid, Event::MatMult, 2, 0.5, flops_per_thread, 1, 8, 0);
+        }
+        log.snapshot()
+    }
+
+    #[test]
+    fn report_merges_threads_then_ranks() {
+        let snaps = vec![snap_with(0, 2, 100.0), snap_with(1, 2, 100.0)];
+        let rep = PerfReport::from_snapshots(&snaps);
+        let t = rep.total(Event::MatMult);
+        assert_eq!(t.flops, 400.0); // 4 slots x 100
+        assert_eq!(t.msgs, 4);
+        assert_eq!(t.count, 2); // per-rank max over threads, max over ranks
+        let st = PerfReport::slot_total(&snaps, Event::MatMult);
+        assert_eq!(st.flops, 400.0);
+        assert_eq!(st.count, 8); // every slot's count in the slot fold
+    }
+
+    #[test]
+    fn slot_totals_are_factorization_invariant() {
+        // 1 rank x 4 threads vs 4 ranks x 1 thread, same per-slot work.
+        let a = vec![snap_with(0, 4, 25.0)];
+        let b: Vec<PerfSnapshot> = (0..4).map(|r| snap_with(r, 1, 25.0)).collect();
+        let ta = PerfReport::slot_total(&a, Event::MatMult);
+        let tb = PerfReport::slot_total(&b, Event::MatMult);
+        assert_eq!(ta.flops.to_bits(), tb.flops.to_bits());
+        assert_eq!(ta.msgs, tb.msgs);
+        assert_eq!(ta.count, tb.count);
+    }
+
+    #[test]
+    fn render_contains_required_events() {
+        let log = PerfLog::new(0, 1, Instant::now(), false);
+        log.add(0, Event::MatMult, 10, 0.1, 1000.0, 0, 0, 0);
+        log.push_stage(Stage::Solve);
+        log.add(0, Event::KSPSolve, 1, 0.2, 2000.0, 0, 0, 0);
+        log.pop_stage();
+        let rep = PerfReport::from_snapshots(&[log.snapshot()]);
+        let s = rep.render(0.25);
+        assert!(s.contains("MatMult"));
+        assert!(s.contains("KSPSolve"));
+        assert!(s.contains("Stage 2: solve"));
+        assert!(s.contains("-log_view"));
+    }
+}

@@ -84,6 +84,10 @@ pub struct Pool {
     /// UMA region of each thread under the *modelled* topology (all zero
     /// when the pool is unpinned / topology-free).
     umas: Vec<UmaRegionId>,
+    /// Armed performance instrumentation (`-log_view` / `-log_trace`).
+    /// Unset by default: every event site in the pool and its clients is one
+    /// untaken branch when disarmed.
+    perf: std::sync::OnceLock<Arc<crate::perf::PerfLog>>,
 }
 
 impl Pool {
@@ -155,7 +159,19 @@ impl Pool {
             forks: AtomicU64::new(0),
             cores: cores.unwrap_or_default(),
             umas: vec![0; nthreads],
+            perf: std::sync::OnceLock::new(),
         }
+    }
+
+    /// Arm performance instrumentation. One-shot: the first install wins and
+    /// later calls are ignored (the log lives for the pool's lifetime).
+    pub fn install_perf(&self, perf: Arc<crate::perf::PerfLog>) {
+        let _ = self.perf.set(perf);
+    }
+
+    /// The armed perf log, if any.
+    pub fn perf(&self) -> Option<&Arc<crate::perf::PerfLog>> {
+        self.perf.get()
     }
 
     /// Number of threads (including the master).
@@ -222,6 +238,9 @@ impl Pool {
         f: F,
     ) -> std::result::Result<(), Error> {
         self.forks.fetch_add(1, Ordering::Relaxed);
+        if let Some(p) = self.perf.get() {
+            p.add(0, crate::perf::Event::ThreadFork, 1, 0.0, 0.0, 0, 0, 0);
+        }
         // Discard any stale poison from a region whose master panicked
         // before observing it (that panic already reached the caller).
         self.poisoned.store(false, Ordering::Release);
@@ -487,6 +506,34 @@ impl RegionBarrier {
                         std::thread::yield_now();
                     }
                 }
+            }
+        }
+    }
+
+    /// [`RegionBarrier::wait`] that attributes the wait time to the
+    /// `ThreadBarrier` perf event for thread `tid` when instrumentation is
+    /// armed. Identical to `wait` when `perf` is `None` (one untaken branch).
+    pub fn wait_perf(
+        &self,
+        w: &mut BarrierWaiter,
+        perf: Option<&crate::perf::PerfLog>,
+        tid: usize,
+    ) {
+        match perf {
+            None => self.wait(w),
+            Some(p) => {
+                let t0 = std::time::Instant::now();
+                self.wait(w);
+                p.add(
+                    tid,
+                    crate::perf::Event::ThreadBarrier,
+                    1,
+                    t0.elapsed().as_secs_f64(),
+                    0.0,
+                    0,
+                    0,
+                    0,
+                );
             }
         }
     }

@@ -61,6 +61,32 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Linear-interpolated percentile of an unsorted sample, `p` in [0,100].
+/// Returns 0.0 for an empty sample (service-latency reports prefer a zero
+/// row over a panic when a queue served nothing).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// The service-latency trio (p50, p90, p99) in one sort.
+pub fn p50_p90_p99(samples: &[f64]) -> (f64, f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile_sorted(&sorted, 50.0),
+        percentile_sorted(&sorted, 90.0),
+        percentile_sorted(&sorted, 99.0),
+    )
+}
+
 /// Geometric mean (for speedup ratios).
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -107,6 +133,23 @@ mod tests {
         assert_eq!(percentile_sorted(&sorted, 50.0), 5.0);
         assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
         assert_eq!(percentile_sorted(&sorted, 100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_trio_matches_singles_and_handles_empty() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let (p50, p90, p99) = p50_p90_p99(&xs);
+        assert_eq!(p50, percentile(&xs, 50.0));
+        assert_eq!(p90, percentile(&xs, 90.0));
+        assert_eq!(p99, percentile(&xs, 99.0));
+        assert!(p50 < p90 && p90 < p99);
+        assert!((p50 - 50.5).abs() < 1e-12);
+        // unsorted input gives the same answer
+        let mut rev = xs.clone();
+        rev.reverse();
+        assert_eq!(p50_p90_p99(&rev), (p50, p90, p99));
+        assert_eq!(p50_p90_p99(&[]), (0.0, 0.0, 0.0));
+        assert_eq!(percentile(&[], 50.0), 0.0);
     }
 
     #[test]

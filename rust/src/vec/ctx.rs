@@ -61,6 +61,18 @@ impl ThreadCtx {
         &self.pool
     }
 
+    /// Arm performance instrumentation for every object sharing this context.
+    /// One-shot: later installs are ignored (first writer wins).
+    pub fn install_perf(&self, perf: Arc<crate::perf::PerfLog>) {
+        self.pool.install_perf(perf);
+    }
+
+    /// The armed perf log, if any. Every event site branches on this; `None`
+    /// (the disarmed default) costs one untaken branch.
+    pub fn perf(&self) -> Option<&Arc<crate::perf::PerfLog>> {
+        self.pool.perf()
+    }
+
     /// Whether every parallel region forks regardless of size (the
     /// [`AdaptivePolicy::always`] policy). The fused-iteration layer's
     /// bitwise-identity contract only holds under this policy: a real

@@ -283,11 +283,29 @@ impl VecMPI {
 
     // -- global reductions: local part + allreduce --------------------------
 
-    /// Global VecDot.
+    /// Global VecDot. When `-log_*` instrumentation is armed this records a
+    /// `VecDot` event on the master slot: 2n local flops, and one logical
+    /// reduction *per local slot* so the cross-rank reduction total is G for
+    /// every ranks×threads factorization of G (decomposition-invariant).
     pub fn dot(&self, other: &VecMPI, comm: &mut Comm) -> Result<f64> {
         self.check_compatible(other, "VecDot")?;
+        let perf = self.local.ctx().perf().cloned();
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
         let local = self.local.dot(&other.local)?;
-        comm.allreduce(local, |a, b| a + b)
+        let out = comm.allreduce(local, |a, b| a + b);
+        if let Some(p) = &perf {
+            let reds = self.local.ctx().nthreads() as u64;
+            p.op_comm(
+                0,
+                crate::perf::Event::VecDot,
+                t0.expect("set when armed"),
+                2.0 * self.local.len() as f64,
+                0,
+                0,
+                reds,
+            );
+        }
+        out
     }
 
     /// Global VecMDot.
@@ -305,8 +323,11 @@ impl VecMPI {
         })
     }
 
-    /// Global VecNorm.
+    /// Global VecNorm. Instrumented like [`VecMPI::dot`]: 2n flops (for the
+    /// two-norm), one logical reduction per local slot.
     pub fn norm(&self, t: NormType, comm: &mut Comm) -> Result<f64> {
+        let perf = self.local.ctx().perf().cloned();
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
         let v = match t {
             NormType::One => {
                 let l = self.local.norm(NormType::One);
@@ -321,6 +342,18 @@ impl VecMPI {
                 comm.allreduce(l, f64::max)?
             }
         };
+        if let Some(p) = &perf {
+            let reds = self.local.ctx().nthreads() as u64;
+            p.op_comm(
+                0,
+                crate::perf::Event::VecNorm,
+                t0.expect("set when armed"),
+                2.0 * self.local.len() as f64,
+                0,
+                0,
+                reds,
+            );
+        }
         Ok(v)
     }
 

@@ -233,6 +233,8 @@ impl VecSeq {
     /// VecAXPY: `self += a·x`.
     pub fn axpy(&mut self, a: f64, x: &VecSeq) -> Result<()> {
         self.check_same_len(x, "VecAXPY")?;
+        let perf = self.ctx.perf().cloned();
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
         let src = x.data.as_ptr() as usize;
         self.par_mut(|chunk, lo| {
             let xs = unsafe {
@@ -240,12 +242,22 @@ impl VecSeq {
             };
             blas1::axpy(a, xs, chunk);
         });
+        if let Some(p) = &perf {
+            p.op(
+                0,
+                crate::perf::Event::VecAXPY,
+                t0.expect("set when armed"),
+                2.0 * self.data.len() as f64,
+            );
+        }
         Ok(())
     }
 
     /// VecAYPX: `self = x + b·self`.
     pub fn aypx(&mut self, b: f64, x: &VecSeq) -> Result<()> {
         self.check_same_len(x, "VecAYPX")?;
+        let perf = self.ctx.perf().cloned();
+        let t0 = perf.as_ref().map(|_| std::time::Instant::now());
         let src = x.data.as_ptr() as usize;
         self.par_mut(|chunk, lo| {
             let xs = unsafe {
@@ -253,6 +265,14 @@ impl VecSeq {
             };
             blas1::aypx(b, xs, chunk);
         });
+        if let Some(p) = &perf {
+            p.op(
+                0,
+                crate::perf::Event::VecAYPX,
+                t0.expect("set when armed"),
+                2.0 * self.data.len() as f64,
+            );
+        }
         Ok(())
     }
 

@@ -1,0 +1,167 @@
+//! `-log_view` instrumentation contract tests:
+//!
+//! 1. **Counter invariance** — flop / logical-message / byte / reduction
+//!    totals for cg-fused × jacobi are identical across every ranks×threads
+//!    factorization of the same slot grid (G = 4: 1×4, 2×2, 4×1). Counts
+//!    are *not* asserted (a per-rank call is one count per rank), only the
+//!    slot-merged work totals the paper's tables are built from.
+//! 2. **Zero-cost disarmed** — an armed run is bitwise identical to a
+//!    disarmed run: instrumentation never feeds back into numerics.
+//! 3. **Table coverage** — the rendered table lists the core events
+//!    (MatMult, VecDot, PCApply, KSPSetUp, KSPSolve) with nonzero counts
+//!    and flops.
+//! 4. **Trace export** — `-log_trace` produces non-empty, parseable JSONL.
+
+use mmpetsc::coordinator::runner::{run_case, HybridConfig, HybridReport};
+use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::perf::view::PerfReport;
+use mmpetsc::perf::{Event, PerfConfig};
+
+fn run(ranks: usize, threads: usize, perf: PerfConfig) -> HybridReport {
+    let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, ranks, threads);
+    cfg.ksp_type = "cg-fused".into();
+    cfg.pc_type = "jacobi".into();
+    cfg.ksp.rtol = 1e-8;
+    cfg.ksp.monitor = true;
+    // Pin the format: the set_up autotuner's trial count is legitimately
+    // decomposition-dependent and is not part of the invariance contract.
+    cfg.ksp.mat_type = "aij".into();
+    cfg.perf = perf;
+    let rep = run_case(&cfg).unwrap_or_else(|e| panic!("cg-fused at {ranks}x{threads}: {e}"));
+    assert!(rep.converged, "cg-fused at {ranks}x{threads} did not converge");
+    rep
+}
+
+#[test]
+fn counter_totals_are_decomposition_invariant() {
+    let armed = PerfConfig { view: true, trace: None };
+    let decomps = [(1usize, 4usize), (2, 2), (4, 1)];
+    let reports: Vec<HybridReport> =
+        decomps.iter().map(|&(r, t)| run(r, t, armed.clone())).collect();
+
+    // Every decomposition of G = 4 must agree on the work totals.
+    let events = [
+        Event::MatMult,
+        Event::VecDot,
+        Event::VecNorm,
+        Event::VecAXPY,
+        Event::VecAYPX,
+        Event::VecScatterBegin,
+        Event::PCApply,
+    ];
+    for ev in events {
+        let base = PerfReport::slot_total(&reports[0].perf, ev);
+        for (i, rep) in reports.iter().enumerate().skip(1) {
+            let t = PerfReport::slot_total(&rep.perf, ev);
+            let (r, th) = decomps[i];
+            assert_eq!(
+                t.flops.to_bits(),
+                base.flops.to_bits(),
+                "{}: flops differ at {r}x{th} vs 1x4 ({} vs {})",
+                ev.name(),
+                t.flops,
+                base.flops
+            );
+            assert_eq!(t.msgs, base.msgs, "{}: msgs differ at {r}x{th}", ev.name());
+            assert_eq!(t.bytes, base.bytes, "{}: bytes differ at {r}x{th}", ev.name());
+            assert_eq!(
+                t.reductions,
+                base.reductions,
+                "{}: reductions differ at {r}x{th}",
+                ev.name()
+            );
+        }
+    }
+
+    // Sanity: the invariants above are not vacuous zeros.
+    let mm = PerfReport::slot_total(&reports[0].perf, Event::MatMult);
+    assert!(mm.flops > 0.0, "MatMult recorded no flops");
+    assert!(mm.msgs > 0 && mm.bytes > 0, "MatMult recorded no logical comm");
+    let dot = PerfReport::slot_total(&reports[0].perf, Event::VecDot);
+    assert!(dot.reductions > 0, "VecDot recorded no reductions");
+    // Each logical reduction is attributed once per contributing slot, so
+    // the total is a multiple of G — the property that makes it invariant.
+    assert_eq!(dot.reductions % 4, 0, "VecDot reductions not slot-attributed");
+}
+
+#[test]
+fn armed_logging_leaves_histories_bitwise_unchanged() {
+    let disarmed = run(2, 2, PerfConfig::default());
+    assert!(disarmed.perf.is_empty(), "disarmed run produced snapshots");
+    let armed = run(2, 2, PerfConfig { view: true, trace: None });
+    assert_eq!(armed.perf.len(), 2, "armed run missing per-rank snapshots");
+
+    let d: Vec<u64> = disarmed.history.iter().map(|v| v.to_bits()).collect();
+    let a: Vec<u64> = armed.history.iter().map(|v| v.to_bits()).collect();
+    assert!(!d.is_empty());
+    assert_eq!(a, d, "arming -log_view changed the residual history");
+    assert_eq!(armed.iterations, disarmed.iterations);
+    assert_eq!(
+        armed.final_residual.to_bits(),
+        disarmed.final_residual.to_bits(),
+        "arming -log_view changed the final residual"
+    );
+}
+
+#[test]
+fn log_view_table_covers_core_events_with_nonzero_counts() {
+    let rep = run(2, 2, PerfConfig { view: true, trace: None });
+    let report = PerfReport::from_snapshots(&rep.perf);
+    for ev in [
+        Event::MatMult,
+        Event::VecDot,
+        Event::PCApply,
+        Event::KSPSetUp,
+        Event::KSPSolve,
+    ] {
+        let t = report.total(ev);
+        assert!(t.count > 0, "{}: zero count", ev.name());
+        assert!(t.flops > 0.0, "{}: zero flops", ev.name());
+    }
+    let table = report.render(rep.wall_seconds);
+    for needle in [
+        "-log_view",
+        "Event Stage",
+        "MatMult",
+        "VecDot",
+        "PCApply",
+        "KSPSetUp",
+        "KSPSolve",
+        "MFlop/s",
+    ] {
+        assert!(table.contains(needle), "table missing `{needle}`:\n{table}");
+    }
+}
+
+#[test]
+fn kernel_op_trace_exports_parseable_jsonl() {
+    let dir = std::env::temp_dir().join("mmpetsc_perf_log_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl").to_str().unwrap().to_string();
+
+    let rep = run(2, 2, PerfConfig { view: false, trace: Some(path.clone()) });
+    assert!(
+        rep.perf.iter().any(|s| !s.trace.is_empty()),
+        "trace-armed run captured no kernel-op records"
+    );
+
+    let n = mmpetsc::perf::trace::write_jsonl(&path, &rep.perf).unwrap();
+    assert!(n > 0);
+    let body = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = body.lines().collect();
+    assert_eq!(lines.len(), n);
+    for line in &lines {
+        assert!(
+            line.starts_with('{') && line.ends_with('}'),
+            "not a JSON object line: {line}"
+        );
+        for key in [
+            "\"event\":", "\"stage\":", "\"rank\":", "\"thread\":", "\"t_start\":",
+            "\"dur\":", "\"flops\":", "\"bytes\":",
+        ] {
+            assert!(line.contains(key), "line missing {key}: {line}");
+        }
+    }
+    assert!(body.contains("\"event\":\"MatMult\""), "trace has no MatMult record");
+    let _ = std::fs::remove_file(&path);
+}
