@@ -1,0 +1,165 @@
+//! Serve-daemon throughput/latency sweep: drive `coordinator::serve` over
+//! a scripted framed request stream and report solves/s and admission→
+//! response latency percentiles per (width, deadline) point — the serving
+//! half of the amortization claim (`bench_batch` measures the raw SpMM
+//! side; this measures it end-to-end through admission, coalescing, and
+//! the warm-`Ksp` cache). Writes `BENCH_serve.json` for the
+//! perf-trajectory artifact upload (the committed file is the schema
+//! baseline; CI regenerates measured numbers).
+//!
+//! `cargo bench --bench bench_serve -- --requests 16 --scale 0.003`
+
+use std::io::Cursor;
+
+use mmpetsc::bench::{JsonVal, Table};
+use mmpetsc::comm::frame::write_frame;
+use mmpetsc::coordinator::serve::{serve_stream, ServeConfig};
+use mmpetsc::util::cli::Cli;
+use mmpetsc::util::stats::p50_p90_p99;
+
+struct PointResult {
+    served: u64,
+    rejected: u64,
+    batches: u64,
+    solves_per_sec: f64,
+    p50: f64,
+    p90: f64,
+    p99: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+/// One sweep point: `requests` framed solves (4 distinct seeds against one
+/// warm operator) through a daemon at the given width/deadline.
+fn run_point(
+    requests: usize,
+    scale: f64,
+    ranks: usize,
+    threads: usize,
+    width: usize,
+    deadline_ms: u64,
+    rtol: f64,
+) -> PointResult {
+    let mut input = Vec::new();
+    for i in 0..requests {
+        let line = format!(
+            "-tenant bench -id {i} -case saltfinger-pressure -scale {scale} \
+             -ksp_type cg-fused -rtol {rtol:e} -seed {}",
+            i % 4
+        );
+        write_frame(&mut input, line.as_bytes()).expect("frame bench request");
+    }
+    let cfg = ServeConfig {
+        ranks,
+        threads,
+        width,
+        deadline_ms,
+        // queue sized to the workload: this sweep measures service rate,
+        // not backpressure (the e2e tests cover rejection)
+        queue_cap: requests.max(1),
+        cache_cap: 4,
+        max_conns: 0,
+        perf: mmpetsc::perf::PerfConfig::default(),
+    };
+    let rep = serve_stream(Cursor::new(input), std::io::sink(), &cfg).expect("serve sweep point");
+    let lat = rep
+        .per_tenant
+        .get("bench")
+        .map(|t| t.latencies.clone())
+        .unwrap_or_default();
+    let (p50, p90, p99) = p50_p90_p99(&lat);
+    PointResult {
+        served: rep.served,
+        rejected: rep.rejected,
+        batches: rep.batches,
+        solves_per_sec: rep.served as f64 / rep.wall_seconds.max(1e-12),
+        p50,
+        p90,
+        p99,
+        cache_hits: rep.cache_hits,
+        cache_misses: rep.cache_misses,
+    }
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_serve",
+        "serve-daemon throughput/latency vs batch width and deadline",
+    )
+    .opt("requests", Some("16"), "framed solve requests per sweep point")
+    .opt("scale", Some("0.003"), "matrix scale for saltfinger-pressure")
+    .opt("ranks", Some("2"), "engine ranks")
+    .opt("threads", Some("2"), "threads per rank")
+    .opt("rtol", Some("1e-8"), "tolerance of every request")
+    .opt("out", Some("BENCH_serve.json"), "output JSON path")
+    .parse_env();
+    let requests = args.get_usize("requests").expect("--requests").max(1);
+    let scale = args.get_f64("scale").expect("--scale");
+    let ranks = args.get_usize("ranks").expect("--ranks").max(1);
+    let threads = args.get_usize("threads").expect("--threads").max(1);
+    let rtol = args.get_f64("rtol").expect("--rtol");
+    let out_path = args.get_or("out", "BENCH_serve.json");
+
+    const WIDTHS: [usize; 4] = [1, 2, 4, 8];
+    const DEADLINES_MS: [u64; 2] = [1, 10];
+
+    let mut table = Table::new(
+        &format!(
+            "serve sweep: saltfinger-pressure scale {scale}, {requests} requests, \
+             {ranks}×{threads} engine"
+        ),
+        &["width", "deadline", "solves/s", "batches", "p50", "p90", "p99", "hits/misses"],
+    );
+    let mut configs: Vec<(String, JsonVal)> = Vec::new();
+    for &w in &WIDTHS {
+        for &d in &DEADLINES_MS {
+            let p = run_point(requests, scale, ranks, threads, w, d, rtol);
+            assert_eq!(
+                p.served + p.rejected,
+                requests as u64,
+                "every request must be answered (served or typed-rejected)"
+            );
+            assert_eq!(p.rejected, 0, "queue sized to the workload: no rejections");
+            table.row(&[
+                w.to_string(),
+                format!("{d}ms"),
+                format!("{:.2}", p.solves_per_sec),
+                p.batches.to_string(),
+                format!("{:.4}s", p.p50),
+                format!("{:.4}s", p.p90),
+                format!("{:.4}s", p.p99),
+                format!("{}/{}", p.cache_hits, p.cache_misses),
+            ]);
+            configs.push((
+                format!("w{w}d{d}"),
+                JsonVal::obj(vec![
+                    ("width", JsonVal::Int(w as u64)),
+                    ("deadline_ms", JsonVal::Int(d)),
+                    ("served", JsonVal::Int(p.served)),
+                    ("batches", JsonVal::Int(p.batches)),
+                    ("solves_per_sec", JsonVal::Num(p.solves_per_sec)),
+                    ("latency_p50_s", JsonVal::Num(p.p50)),
+                    ("latency_p90_s", JsonVal::Num(p.p90)),
+                    ("latency_p99_s", JsonVal::Num(p.p99)),
+                    ("cache_hits", JsonVal::Int(p.cache_hits)),
+                    ("cache_misses", JsonVal::Int(p.cache_misses)),
+                ]),
+            ));
+        }
+    }
+    table.print();
+
+    let json = JsonVal::Obj(vec![
+        ("bench".to_string(), JsonVal::Str("serve".into())),
+        (
+            "case".to_string(),
+            JsonVal::Str("saltfinger-pressure".into()),
+        ),
+        ("requests".to_string(), JsonVal::Int(requests as u64)),
+        ("ranks".to_string(), JsonVal::Int(ranks as u64)),
+        ("threads".to_string(), JsonVal::Int(threads as u64)),
+        ("configs".to_string(), JsonVal::Obj(configs)),
+    ]);
+    std::fs::write(&out_path, json.render() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -1,0 +1,176 @@
+//! Length-prefixed request framing for the solver daemon (`mmpetsc serve`).
+//!
+//! One frame is a 4-byte big-endian `u32` payload length followed by the
+//! payload bytes. The codec follows the `io::petsc_binary` discipline for
+//! hostile input: size fields are validated against a hard cap *before*
+//! any allocation, so an adversarial length prefix fails with a typed
+//! [`Error::Format`] instead of an OOM, and a truncated stream fails in
+//! `read_exact` (typed, again) instead of looping. A clean EOF exactly at
+//! a frame boundary is not an error — it is how a client says goodbye —
+//! and is reported as `Ok(None)`.
+//!
+//! Zero-length payloads are legal frames (useful as client-side pings);
+//! the daemon's request decoder rejects them at its own layer with a
+//! message, not a hang.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Hard cap on one frame's payload (same order as `io::petsc_binary`'s
+/// allocation hint): a solve request or response is text in the low
+/// hundreds of bytes plus a residual history, so 1 MiB is generous while
+/// keeping a hostile 4 GiB length prefix un-allocatable.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Write one frame (length prefix + payload) and flush, so a waiting peer
+/// sees it immediately even through a buffered writer.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(Error::Format(format!(
+            "frame payload {} bytes exceeds the {MAX_FRAME}-byte cap",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary; EOF
+/// inside a header or payload, and any length prefix over [`MAX_FRAME`],
+/// are typed [`Error::Format`] protocol violations.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut header[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(Error::Format(format!(
+                "frame header truncated: got {got}/4 length bytes before EOF"
+            )));
+        }
+        got += n;
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Format(format!(
+            "frame length {len} exceeds the {MAX_FRAME}-byte cap"
+        )));
+    }
+    // The allocation is bounded by the cap check above; a lying (too
+    // large) length on a truncated stream fails in read_exact below.
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Format(format!("frame payload truncated: wanted {len} bytes"))
+        } else {
+            Error::Io(e)
+        }
+    })?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(payloads: &[&[u8]]) -> Vec<Vec<u8>> {
+        let mut buf = Vec::new();
+        for p in payloads {
+            write_frame(&mut buf, p).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        let mut out = Vec::new();
+        while let Some(p) = read_frame(&mut r).unwrap() {
+            out.push(p);
+        }
+        out
+    }
+
+    #[test]
+    fn frames_roundtrip_including_zero_length() {
+        let got = roundtrip(&[b"hello", b"", b"-id 7 -rtol 1e-8"]);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], b"hello");
+        assert!(got[1].is_empty(), "zero-length payloads are legal frames");
+        assert_eq!(got[2], b"-id 7 -rtol 1e-8");
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_error() {
+        let mut r = Cursor::new(Vec::new());
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_header_is_a_typed_format_error() {
+        for cut in 1..4 {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, b"payload").unwrap();
+            buf.truncate(cut);
+            let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+            assert!(
+                matches!(err, Error::Format(_)),
+                "cut at {cut}: want Format, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_a_typed_format_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"twelve bytes").unwrap();
+        for cut in 4..buf.len() {
+            let mut short = buf.clone();
+            short.truncate(cut);
+            let err = read_frame(&mut Cursor::new(short)).unwrap_err();
+            assert!(
+                matches!(err, Error::Format(_)),
+                "cut at {cut}: want Format, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocating() {
+        // A hostile 4 GiB-ish length prefix with no payload behind it: the
+        // cap check must fire on the header alone (petsc_binary idiom —
+        // fail typed, never trust a size field with an allocation).
+        let mut buf = (u32::MAX).to_be_bytes().to_vec();
+        let err = read_frame(&mut Cursor::new(buf.clone())).unwrap_err();
+        assert!(matches!(err, Error::Format(_)), "got {err}");
+        // one past the cap, even with bytes available, is still rejected
+        buf = ((MAX_FRAME as u32) + 1).to_be_bytes().to_vec();
+        buf.extend(std::iter::repeat(0u8).take(16));
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(matches!(err, Error::Format(_)), "got {err}");
+        // exactly at the cap is fine
+        let mut ok = Vec::new();
+        write_frame(&mut ok, &vec![7u8; MAX_FRAME]).unwrap();
+        assert_eq!(read_frame(&mut Cursor::new(ok)).unwrap().unwrap().len(), MAX_FRAME);
+    }
+
+    #[test]
+    fn writer_refuses_oversized_payloads() {
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, &vec![0u8; MAX_FRAME + 1]).unwrap_err();
+        assert!(matches!(err, Error::Format(_)));
+        assert!(sink.is_empty(), "nothing may hit the wire on a refused frame");
+    }
+
+    #[test]
+    fn garbage_after_a_valid_frame_is_caught() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"good").unwrap();
+        buf.extend_from_slice(&[0x00, 0x01]); // half a header
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"good");
+        assert!(matches!(read_frame(&mut r).unwrap_err(), Error::Format(_)));
+    }
+}

@@ -20,6 +20,7 @@ pub mod message;
 pub mod endpoint;
 pub mod collective;
 pub mod fault;
+pub mod frame;
 pub mod world;
 pub mod timing;
 pub mod stats;

@@ -153,13 +153,31 @@ pub struct BatchReport {
 pub fn plan_batches(requests: &[BatchRequest], width: usize) -> Vec<Vec<usize>> {
     assert!(width >= 1, "batch width must be ≥ 1");
     let mut order: Vec<usize> = (0..requests.len()).collect();
-    order.sort_by(|&a, &b| {
-        requests[a]
-            .rtol
-            .partial_cmp(&requests[b].rtol)
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
+    // `total_cmp`, not `partial_cmp(..).unwrap_or(Equal)`: the old fallback
+    // made a NaN tolerance compare Equal to everything, so where such a
+    // request landed depended on the sort's internal visit order — silent
+    // arbitrary grouping. total_cmp gives NaN a fixed place (after +inf),
+    // so even un-validated input groups deterministically. Validated
+    // callers never get here with NaN: see [`validate_requests`].
+    order.sort_by(|&a, &b| requests[a].rtol.total_cmp(&requests[b].rtol));
     order.chunks(width).map(|c| c.to_vec()).collect()
+}
+
+/// Admission-time tolerance validation: every queued request must carry a
+/// finite, strictly positive `rtol`. A NaN/non-finite tolerance would sort
+/// arbitrarily into a batch and then never satisfy its convergence test —
+/// the silent-misgrouping bug this rejects up front, with a typed error
+/// naming the offending request.
+pub fn validate_requests(requests: &[BatchRequest]) -> Result<()> {
+    for (i, r) in requests.iter().enumerate() {
+        if !r.rtol.is_finite() || r.rtol <= 0.0 {
+            return Err(Error::InvalidOption(format!(
+                "batch request {i} (seed {}): rtol {} is not a finite positive tolerance",
+                r.seed, r.rtol
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Deterministic RHS entry for `(seed, global index)` — smooth plus a
@@ -179,6 +197,7 @@ pub fn run_batch_case(cfg: &BatchConfig) -> Result<BatchReport> {
             "batch run: empty request queue".into(),
         ));
     }
+    validate_requests(&cfg.requests)?;
     let cfg = Arc::new(cfg.clone());
     let groups = plan_batches(&cfg.requests, cfg.width.max(1));
 
@@ -418,6 +437,40 @@ mod tests {
         // grouping put equal tolerances together
         assert_eq!(report.outcomes[1].batch, report.outcomes[3].batch);
         assert_eq!(report.outcomes[0].batch, report.outcomes[2].batch);
+    }
+
+    #[test]
+    fn nan_rtol_rejected_up_front_with_the_request_named() {
+        let mut cfg = BatchConfig::default_for(TestCase::SaltPressure, 0.002, 1, 1, 2, 3);
+        cfg.requests[1].rtol = f64::NAN;
+        let err = run_batch_case(&cfg).unwrap_err().to_string();
+        assert!(err.contains("request 1"), "error must name the request: {err}");
+        assert!(err.contains("rtol"), "error must name the field: {err}");
+        // non-finite and non-positive tolerances are rejected the same way
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, 0.0, -1e-8] {
+            let mut cfg = BatchConfig::default_for(TestCase::SaltPressure, 0.002, 1, 1, 2, 2);
+            cfg.requests[0].rtol = bad;
+            assert!(
+                run_batch_case(&cfg).is_err(),
+                "rtol {bad} must be rejected at admission"
+            );
+        }
+        assert!(validate_requests(&[BatchRequest { rtol: 1e-8, seed: 0 }]).is_ok());
+    }
+
+    #[test]
+    fn nan_rtol_groups_deterministically_in_plan_batches() {
+        // plan_batches itself (pub, reachable without validation) must not
+        // scatter a NaN tolerance arbitrarily: total_cmp pins it after
+        // every finite tolerance, so the plan is a pure function of input.
+        let reqs: Vec<BatchRequest> = [1e-8, f64::NAN, 1e-4, f64::NAN, 1e-10]
+            .iter()
+            .enumerate()
+            .map(|(i, &rtol)| BatchRequest { rtol, seed: i as u64 })
+            .collect();
+        let groups = plan_batches(&reqs, 2);
+        assert_eq!(groups, vec![vec![4, 0], vec![2, 1], vec![3]]);
+        assert_eq!(groups, plan_batches(&reqs, 2), "plan must be deterministic");
     }
 
     #[test]

@@ -2,15 +2,24 @@
 //! -ksp_rtol 1e-8 -mat_size 10000 ...` — how `ex6`-style drivers configure
 //! a run (paper §VIII.A: "The problem definition is highly customizable").
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::error::{Error, Result};
 use crate::ksp::KspConfig;
 
 /// A parsed options database.
+///
+/// Every lookup marks the option as *consumed*; after config extraction a
+/// driver calls [`Options::check_options_left`] so a misspelled option
+/// (`-ksp_rtoll`) is reported instead of silently running with defaults —
+/// the PETSc `-options_left` discipline. The consumed set lives in a
+/// `RefCell` because reads are logically `&self` (the database is only
+/// ever queried from the driver thread, before ranks spawn).
 #[derive(Debug, Clone, Default)]
 pub struct Options {
     entries: BTreeMap<String, String>,
+    consumed: RefCell<BTreeSet<String>>,
 }
 
 impl Options {
@@ -41,7 +50,7 @@ impl Options {
                 i += 1;
             }
         }
-        Ok(Options { entries })
+        Ok(Options { entries, consumed: RefCell::new(BTreeSet::new()) })
     }
 
     /// Parse from a whitespace-separated string.
@@ -54,7 +63,52 @@ impl Options {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.entries.get(name).map(|s| s.as_str())
+        let v = self.entries.get(name).map(|s| s.as_str());
+        if v.is_some() {
+            // Querying an option consumes it, whether or not the caller
+            // acts on the value (PETSc marks "used" the same way).
+            self.consumed.borrow_mut().insert(name.to_string());
+        }
+        v
+    }
+
+    /// Options that were set but never queried, in name order.
+    pub fn unconsumed(&self) -> Vec<(String, String)> {
+        let consumed = self.consumed.borrow();
+        self.entries
+            .iter()
+            .filter(|(k, _)| !consumed.contains(*k))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// PETSc-style `-options_left`: call after config extraction. Any
+    /// option still unconsumed is almost certainly a typo (`-ksp_rtoll`)
+    /// that would otherwise silently run the solve with defaults. Default
+    /// mode warns on stderr; `-options_left error` turns the leftovers
+    /// into a typed [`Error::InvalidOption`] listing them.
+    pub fn check_options_left(&self) -> Result<()> {
+        let mode = self.get_or("options_left", "warn");
+        let left = self.unconsumed();
+        if left.is_empty() {
+            return Ok(());
+        }
+        let listing = left
+            .iter()
+            .map(|(k, v)| if v == "true" { format!("-{k}") } else { format!("-{k} {v}") })
+            .collect::<Vec<_>>()
+            .join(" ");
+        if mode == "error" {
+            return Err(Error::InvalidOption(format!(
+                "{} unused option(s) (misspelled?): {listing}",
+                left.len()
+            )));
+        }
+        eprintln!(
+            "WARNING: {} option(s) were set but never used (misspelled?): {listing}",
+            left.len()
+        );
+        Ok(())
     }
 
     pub fn get_or(&self, name: &str, default: &str) -> String {
@@ -90,9 +144,13 @@ impl Options {
     /// flags mirror how PETSc toggles sub-variants of one PC type.
     pub fn pc_name(&self, default: &str) -> String {
         let base = self.get_or("pc_type", default);
+        // Query both variant flags eagerly so they count as consumed for
+        // `-options_left` even when the base type ignores them.
+        let sor_colored = self.flag("pc_sor_colored");
+        let gamg_fused = self.flag("pc_gamg_fused");
         match base.as_str() {
-            "sor" if self.flag("pc_sor_colored") => "sor-colored".into(),
-            "gamg" if self.flag("pc_gamg_fused") => "gamg-fused".into(),
+            "sor" if sor_colored => "sor-colored".into(),
+            "gamg" if gamg_fused => "gamg-fused".into(),
             _ => base,
         }
     }
@@ -102,18 +160,24 @@ impl Options {
     /// operator-format controls `-mat_type`/`-mat_block_size` (validated
     /// against the format vocabulary at `KSPSetUp`).
     pub fn ksp_config(&self) -> Result<KspConfig> {
-        let d = KspConfig::default();
+        self.ksp_config_from(KspConfig::default())
+    }
+
+    /// Like [`Options::ksp_config`], but options layer over `base` instead
+    /// of `KspConfig::default()` — how the serve daemon lets a request
+    /// override its per-key baseline without losing e.g. a forced monitor.
+    pub fn ksp_config_from(&self, base: KspConfig) -> Result<KspConfig> {
         Ok(KspConfig {
-            rtol: self.f64_or("ksp_rtol", d.rtol)?,
-            atol: self.f64_or("ksp_atol", d.atol)?,
-            dtol: self.f64_or("ksp_dtol", d.dtol)?,
-            max_it: self.usize_or("ksp_max_it", d.max_it)?,
-            restart: self.usize_or("ksp_gmres_restart", d.restart)?,
-            richardson_scale: self.f64_or("ksp_richardson_scale", d.richardson_scale)?,
-            monitor: self.flag("ksp_monitor"),
-            max_restarts: self.usize_or("ksp_max_restarts", d.max_restarts)?,
-            mat_type: self.get_or("mat_type", &d.mat_type),
-            mat_block_size: self.usize_or("mat_block_size", d.mat_block_size)?,
+            rtol: self.f64_or("ksp_rtol", base.rtol)?,
+            atol: self.f64_or("ksp_atol", base.atol)?,
+            dtol: self.f64_or("ksp_dtol", base.dtol)?,
+            max_it: self.usize_or("ksp_max_it", base.max_it)?,
+            restart: self.usize_or("ksp_gmres_restart", base.restart)?,
+            richardson_scale: self.f64_or("ksp_richardson_scale", base.richardson_scale)?,
+            monitor: base.monitor || self.flag("ksp_monitor"),
+            max_restarts: self.usize_or("ksp_max_restarts", base.max_restarts)?,
+            mat_type: self.get_or("mat_type", &base.mat_type),
+            mat_block_size: self.usize_or("mat_block_size", base.mat_block_size)?,
         })
     }
 
@@ -244,6 +308,62 @@ mod tests {
         // no flags → disarmed
         let o = Options::parse_str("-ksp_type cg").unwrap();
         assert!(!o.perf_config().enabled());
+    }
+
+    #[test]
+    fn options_left_catches_the_misspelled_option() {
+        // Regression for the silent-typo bug: `-ksp_rtoll` used to vanish
+        // and the solve ran with the default tolerance.
+        let o = Options::parse_str("-ksp_rtoll 1e-9 -pc_type jacobi").unwrap();
+        let _ = o.ksp_config().unwrap();
+        let _ = o.pc_name("jacobi");
+        let left = o.unconsumed();
+        assert_eq!(left.len(), 1);
+        assert_eq!(left[0].0, "ksp_rtoll");
+        // default mode is a warning, not a failure
+        assert!(o.check_options_left().is_ok());
+    }
+
+    #[test]
+    fn options_left_error_mode_is_typed() {
+        let o = Options::parse_str("-options_left error -ksp_rtoll 1e-9").unwrap();
+        let _ = o.ksp_config().unwrap();
+        match o.check_options_left().unwrap_err() {
+            Error::InvalidOption(msg) => {
+                assert!(msg.contains("-ksp_rtoll 1e-9"), "lists the leftover: {msg}");
+                assert!(msg.contains("unused"), "{msg}");
+            }
+            other => panic!("want InvalidOption, got {other}"),
+        }
+        // fully-consumed database is clean even in error mode; the
+        // -options_left option itself never counts as left over
+        let o = Options::parse_str("-options_left error -ksp_rtol 1e-9").unwrap();
+        let _ = o.ksp_config().unwrap();
+        assert!(o.check_options_left().is_ok());
+        // value-less flags are listed bare
+        let o = Options::parse_str("-options_left error -ksp_monitorr").unwrap();
+        let _ = o.ksp_config().unwrap();
+        match o.check_options_left().unwrap_err() {
+            Error::InvalidOption(msg) => assert!(msg.contains("-ksp_monitorr"), "{msg}"),
+            other => panic!("want InvalidOption, got {other}"),
+        }
+    }
+
+    #[test]
+    fn variant_flags_count_as_consumed_regardless_of_base() {
+        let o = Options::parse_str("-pc_type jacobi -pc_sor_colored").unwrap();
+        assert_eq!(o.pc_name("jacobi"), "jacobi");
+        assert!(o.unconsumed().is_empty(), "queried flags are consumed");
+    }
+
+    #[test]
+    fn ksp_config_from_layers_over_a_base() {
+        let base = KspConfig { monitor: true, rtol: 1e-4, ..KspConfig::default() };
+        let o = Options::parse_str("-ksp_max_it 7").unwrap();
+        let c = o.ksp_config_from(base).unwrap();
+        assert!(c.monitor, "base monitor survives without -ksp_monitor");
+        assert_eq!(c.rtol, 1e-4, "base rtol survives without -ksp_rtol");
+        assert_eq!(c.max_it, 7, "given options still override");
     }
 
     #[test]

@@ -49,6 +49,13 @@ pub struct HybridConfig {
     /// Default-disabled: no `PerfLog` is installed, every event site is one
     /// untaken branch, and all golden histories stay bitwise unchanged.
     pub perf: crate::perf::PerfConfig,
+    /// `Some(seed)`: build the RHS directly from the batch engine's
+    /// [`crate::coordinator::batch::rhs_entry`] values (no manufactured
+    /// solution, no operator apply) — the exact problem a serve-daemon
+    /// request with `-seed <seed>` solves, so `mmpetsc solve --rhs-seed`
+    /// is the solo baseline the daemon's bitwise contract is checked
+    /// against. `None` (default) keeps the manufactured `b = A·x_true`.
+    pub rhs_seed: Option<u64>,
 }
 
 impl HybridConfig {
@@ -68,6 +75,7 @@ impl HybridConfig {
             pin: false,
             fault: None,
             perf: crate::perf::PerfConfig::default(),
+            rhs_seed: None,
         }
     }
 }
@@ -232,11 +240,27 @@ pub fn run_case(cfg: &HybridConfig) -> Result<HybridReport> {
                 let _ = a.enable_hybrid();
             }
 
-            // b = A·x_true for a smooth manufactured solution.
-            let xs: Vec<f64> = (lo..hi).map(|i| 1.0 + (i as f64 * 0.001).sin()).collect();
-            let x_true = VecMPI::from_local_slice(layout.clone(), rank, &xs, ctx.clone())?;
-            let mut b = VecMPI::new(layout.clone(), rank, ctx.clone());
-            a.mult(&x_true, &mut b, &mut comm)?;
+            let b = match cfg.rhs_seed {
+                // Seeded RHS: the serve daemon's problem — b filled
+                // directly from `rhs_entry` values, no operator apply — so
+                // this solo run reproduces a served request bit-for-bit.
+                Some(seed) => {
+                    let xs: Vec<f64> = (lo..hi)
+                        .map(|g| crate::coordinator::batch::rhs_entry(seed, g))
+                        .collect();
+                    VecMPI::from_local_slice(layout.clone(), rank, &xs, ctx.clone())?
+                }
+                None => {
+                    // b = A·x_true for a smooth manufactured solution.
+                    let xs: Vec<f64> =
+                        (lo..hi).map(|i| 1.0 + (i as f64 * 0.001).sin()).collect();
+                    let x_true =
+                        VecMPI::from_local_slice(layout.clone(), rank, &xs, ctx.clone())?;
+                    let mut b = VecMPI::new(layout.clone(), rank, ctx.clone());
+                    a.mult(&x_true, &mut b, &mut comm)?;
+                    b
+                }
+            };
 
             // The PETSc lifecycle: one solver object per run. `set_up`
             // builds the PC (and, for the Chebyshev family, the spectral

@@ -1,0 +1,1103 @@
+//! `mmpetsc serve`: a persistent warm-`Ksp` solver daemon.
+//!
+//! The paper's library is the solver *engine* behind an application that
+//! calls it over and over (Fluidity pushes thousands of repeated solves
+//! through PETSc per timestep); the follow-up benchmarking work (arXiv
+//! 1307.4567) stresses that per-solve setup and admission overhead — not
+//! the kernels — dominate at scale. This module is that serving story:
+//!
+//! - **Transport**: length-prefixed frames ([`crate::comm::frame`]) over a
+//!   unix socket ([`serve_unix`]) or over any `Read`/`Write` pair
+//!   ([`serve_stream`]) — the latter is how `mmpetsc serve` runs on
+//!   stdin/stdout so tests and CI stay offline-friendly.
+//! - **Warm solvers**: requests multiplex onto [`crate::ksp::cache::KspCache`]
+//!   entries keyed by (operator fingerprint, ksp_type, pc_type) with LRU
+//!   eviction; a cache entry's `setup_count()` stays 1 however many
+//!   requests it serves.
+//! - **Deadline batching**: compatible requests (same cache key) coalesce
+//!   into one `solve_multi` group up to a configurable width; when the
+//!   oldest pending request has waited past the latency deadline, the
+//!   group ships as-is — even at width 1.
+//! - **Admission control**: the pending queue is bounded; a request that
+//!   arrives at a full queue gets a typed `backpressure` rejection frame
+//!   immediately — never a hang.
+//! - **Drain-on-shutdown**: when every client stream has closed (and the
+//!   acceptor stopped), pending work ships, responses flush, the engine
+//!   collective shuts down, and the report renders.
+//!
+//! **Determinism contract** (proven end-to-end in `tests/serve_daemon.rs`):
+//! a request served through the daemon produces a residual history bitwise
+//! identical to the same case run solo via `mmpetsc solve --rhs-seed`,
+//! regardless of what it was co-batched with and across rank×thread
+//! decompositions — the per-column contract of [`crate::ksp::block`]
+//! carried through the serving layer. Histories travel the text protocol
+//! as hex-encoded `f64` bits, so the transport cannot round them.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::comm::endpoint::Comm;
+use crate::comm::frame::{read_frame, write_frame};
+use crate::comm::world::World;
+use crate::coordinator::batch::rhs_entry;
+use crate::coordinator::options::Options;
+use crate::error::{Error, Result};
+use crate::ksp::cache::{CacheKey, KspCache};
+use crate::ksp::KspConfig;
+use crate::matgen::cases::{generate_rows, TestCase};
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::mpi::Layout;
+use crate::vec::multi::MultiVecMPI;
+
+/// Daemon configuration (CLI flags of `mmpetsc serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Engine collective: ranks × threads (one warm cache per rank).
+    pub ranks: usize,
+    pub threads: usize,
+    /// Max requests coalesced into one `solve_multi` group.
+    pub width: usize,
+    /// Latency deadline: the oldest pending request ships (with whatever
+    /// compatible batchmates are queued) after waiting this long.
+    pub deadline_ms: u64,
+    /// Bounded admission queue; arrivals beyond this get a typed
+    /// `backpressure` rejection.
+    pub queue_cap: usize,
+    /// Warm operators held per rank (LRU beyond this).
+    pub cache_cap: usize,
+    /// Unix-socket mode: stop accepting after this many connections
+    /// (0 = accept forever; the daemon then only exits with the process).
+    pub max_conns: usize,
+    /// `-log_view` / `-log_trace` arming for the engine ranks.
+    pub perf: crate::perf::PerfConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            ranks: 2,
+            threads: 2,
+            width: 4,
+            deadline_ms: 10,
+            queue_cap: 64,
+            cache_cap: 4,
+            max_conns: 0,
+            perf: crate::perf::PerfConfig::default(),
+        }
+    }
+}
+
+/// One decoded solve request.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub tenant: String,
+    pub id: u64,
+    pub case: TestCase,
+    pub scale: f64,
+    pub ksp_type: String,
+    pub pc_type: String,
+    pub rtol: f64,
+    pub seed: u64,
+}
+
+impl SolveRequest {
+    fn key(&self) -> CacheKey {
+        CacheKey {
+            fingerprint: fingerprint(self.case, self.scale),
+            ksp_type: self.ksp_type.clone(),
+            pc_type: self.pc_type.clone(),
+        }
+    }
+}
+
+/// Operator fingerprint: FNV-1a over the case name and the exact scale
+/// bits. Hand-rolled (not `DefaultHasher`) because the hash must be stable
+/// across processes and runs — it keys the warm-solver cache.
+pub fn fingerprint(case: TestCase, scale: f64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in case.name().bytes().chain(scale.to_bits().to_be_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Decode one request frame. The payload is PETSc-options-style UTF-8 text
+/// (`-tenant alice -id 7 -case saltfinger-pressure -scale 0.003 -rtol 1e-8
+/// -seed 42`). On failure, returns (id, tenant, message) so the typed
+/// rejection can still name the request — the NaN-tolerance bugfix
+/// contract: reject up front, by id, instead of silently misgrouping.
+fn decode_request(payload: &[u8]) -> std::result::Result<SolveRequest, (u64, String, String)> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| (0, "anon".to_string(), "request is not UTF-8".to_string()))?;
+    if text.trim().is_empty() {
+        return Err((0, "anon".into(), "empty request".into()));
+    }
+    let opts = Options::parse_str(text).map_err(|e| (0, "anon".to_string(), e.to_string()))?;
+    let tenant = opts.get_or("tenant", "anon");
+    let id: u64 = opts
+        .get_or("id", "0")
+        .parse()
+        .map_err(|_| (0, tenant.clone(), "-id is not an integer".to_string()))?;
+    let fail = |msg: String| (id, tenant.clone(), msg);
+
+    let case_name = opts.get_or("case", "saltfinger-pressure");
+    let case = TestCase::from_name(&case_name)
+        .ok_or_else(|| fail(format!("request id={id}: unknown case `{case_name}`")))?;
+    let scale = opts
+        .f64_or("scale", 0.003)
+        .map_err(|e| fail(format!("request id={id}: {e}")))?;
+    if !scale.is_finite() || scale <= 0.0 {
+        return Err(fail(format!("request id={id}: scale {scale} is not finite positive")));
+    }
+    let ksp_type = opts.get_or("ksp_type", "cg-fused");
+    if ksp_type != "cg" && ksp_type != "cg-fused" {
+        // solve_multi's restriction, surfaced at admission instead of at
+        // dispatch so the whole batch never pays for one bad request.
+        return Err(fail(format!(
+            "request id={id}: ksp_type `{ksp_type}` has no batched engine (use cg or cg-fused)"
+        )));
+    }
+    let pc_type = opts.pc_name("jacobi");
+    let rtol = opts
+        .f64_or("rtol", 1e-8)
+        .map_err(|e| fail(format!("request id={id}: {e}")))?;
+    if !rtol.is_finite() || rtol <= 0.0 {
+        return Err(fail(format!(
+            "request id={id}: rtol {rtol} is not a finite positive tolerance"
+        )));
+    }
+    let seed: u64 = opts
+        .get_or("seed", "0")
+        .parse()
+        .map_err(|_| fail(format!("request id={id}: -seed is not an integer")))?;
+    // The serve-side `-options_left` discipline: a misspelled request
+    // option is a typed rejection, not a silent default.
+    let left = opts.unconsumed();
+    if !left.is_empty() {
+        let names: Vec<String> = left.iter().map(|(k, _)| format!("-{k}")).collect();
+        return Err(fail(format!(
+            "request id={id}: unknown option(s) {}",
+            names.join(" ")
+        )));
+    }
+    Ok(SolveRequest {
+        tenant,
+        id,
+        case,
+        scale,
+        ksp_type,
+        pc_type,
+        rtol,
+        seed,
+    })
+}
+
+/// Residual history as hex f64 bits — the transport cannot round it.
+fn encode_history(h: &[f64]) -> String {
+    h.iter()
+        .map(|v| format!("{:016x}", v.to_bits()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn decode_history(s: &str) -> Result<Vec<f64>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|t| {
+            u64::from_str_radix(t, 16)
+                .map(f64::from_bits)
+                .map_err(|_| Error::Format(format!("bad history token `{t}`")))
+        })
+        .collect()
+}
+
+/// A decoded response frame (what clients and tests consume).
+#[derive(Debug, Clone, Default)]
+pub struct Response {
+    pub ok: bool,
+    pub id: u64,
+    pub tenant: String,
+    pub iterations: usize,
+    pub converged: bool,
+    pub residual: f64,
+    /// The serving entry's `Ksp::setup_count()` — the zero-re-setup proof.
+    pub setup_count: u64,
+    pub cache_hit: bool,
+    /// Width of the batch this request shipped in.
+    pub width: usize,
+    /// Bitwise-exact residual history (empty on errors).
+    pub history: Vec<f64>,
+    /// Error class for `!ok`: `backpressure`, `invalid`, `protocol`,
+    /// `solver`.
+    pub code: String,
+    pub msg: String,
+}
+
+fn encode_ok(
+    id: u64,
+    tenant: &str,
+    col: &ColOutcome,
+    setup_count: u64,
+    cache_hit: bool,
+    width: usize,
+) -> String {
+    format!(
+        "ok id={id} tenant={tenant} its={} converged={} residual={:.17e} setup_count={setup_count} cache={} width={width} history={}",
+        col.iterations,
+        col.converged,
+        col.final_residual,
+        if cache_hit { "hit" } else { "miss" },
+        encode_history(&col.history),
+    )
+}
+
+fn encode_err(id: u64, tenant: &str, code: &str, msg: &str) -> String {
+    format!("err id={id} tenant={tenant} code={code} msg={msg}")
+}
+
+/// Parse one response frame (the inverse of the daemon's encoders).
+pub fn parse_response(s: &str) -> Result<Response> {
+    let (head, msg) = match s.find(" msg=") {
+        Some(i) => (&s[..i], &s[i + 5..]),
+        None => (s, ""),
+    };
+    let mut toks = head.split_whitespace();
+    let kind = toks
+        .next()
+        .ok_or_else(|| Error::Format("empty response".into()))?;
+    if kind != "ok" && kind != "err" {
+        return Err(Error::Format(format!("response kind `{kind}`")));
+    }
+    let mut r = Response {
+        ok: kind == "ok",
+        msg: msg.to_string(),
+        ..Response::default()
+    };
+    for tok in toks {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| Error::Format(format!("response token `{tok}`")))?;
+        let bad = || Error::Format(format!("response field {k}=`{v}`"));
+        match k {
+            "id" => r.id = v.parse().map_err(|_| bad())?,
+            "tenant" => r.tenant = v.to_string(),
+            "its" => r.iterations = v.parse().map_err(|_| bad())?,
+            "converged" => r.converged = v == "true",
+            "residual" => r.residual = v.parse().map_err(|_| bad())?,
+            "setup_count" => r.setup_count = v.parse().map_err(|_| bad())?,
+            "cache" => r.cache_hit = v == "hit",
+            "width" => r.width = v.parse().map_err(|_| bad())?,
+            "history" => r.history = decode_history(v)?,
+            "code" => r.code = v.to_string(),
+            _ => return Err(Error::Format(format!("unknown response field `{k}`"))),
+        }
+    }
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------------
+// Shared daemon state: admission queue, command log, response outboxes.
+// ---------------------------------------------------------------------------
+
+/// Per-connection response queue, drained by that connection's writer
+/// thread. Closed (by the scheduler at drain, or by the writer on a dead
+/// peer) it accepts no more pushes and `pop_blocking` returns `None` once
+/// empty.
+struct Outbox {
+    q: Mutex<(VecDeque<String>, bool)>,
+    cv: Condvar,
+}
+
+impl Outbox {
+    fn new() -> Arc<Outbox> {
+        Arc::new(Outbox {
+            q: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn push(&self, line: String) {
+        let mut g = lock(&self.q);
+        if !g.1 {
+            g.0.push_back(line);
+            self.cv.notify_all();
+        }
+    }
+
+    fn close(&self) {
+        lock(&self.q).1 = true;
+        self.cv.notify_all();
+    }
+
+    fn pop_blocking(&self) -> Option<String> {
+        let mut g = lock(&self.q);
+        loop {
+            if let Some(line) = g.0.pop_front() {
+                return Some(line);
+            }
+            if g.1 {
+                return None;
+            }
+            g = wait(&self.cv, g);
+        }
+    }
+}
+
+/// One admitted request awaiting a batch slot.
+struct Pending {
+    req: SolveRequest,
+    outbox: Arc<Outbox>,
+    t_arrival: Instant,
+}
+
+struct QueueState {
+    pending: Vec<Pending>,
+    open_streams: usize,
+    accepting: bool,
+}
+
+/// What the engine ranks execute, in lockstep: an append-only command log
+/// every rank walks with its own cursor, so cache hits / misses / evictions
+/// are identical (collective-deterministic) on every rank.
+enum Command {
+    Batch(BatchCmd),
+    Shutdown,
+}
+
+struct ReqCore {
+    id: u64,
+    rtol: f64,
+    seed: u64,
+}
+
+struct BatchCmd {
+    key: CacheKey,
+    case: TestCase,
+    scale: f64,
+    reqs: Vec<ReqCore>,
+    result: ResultCell,
+}
+
+#[derive(Clone)]
+struct ColOutcome {
+    iterations: usize,
+    converged: bool,
+    final_residual: f64,
+    history: Vec<f64>,
+}
+
+struct BatchOutcome {
+    cols: Vec<ColOutcome>,
+    setup_count: u64,
+    cache_hit: bool,
+}
+
+/// Rank 0 → scheduler result handoff for one batch. Errors travel as
+/// strings (the engine's typed error renders once, here) so the cell never
+/// needs a `Clone` bound on [`Error`].
+struct ResultCell {
+    slot: Mutex<Option<std::result::Result<BatchOutcome, String>>>,
+    cv: Condvar,
+}
+
+impl ResultCell {
+    fn new() -> ResultCell {
+        ResultCell {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn set(&self, v: std::result::Result<BatchOutcome, String>) {
+        *lock(&self.slot) = Some(v);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> std::result::Result<BatchOutcome, String> {
+        let mut g = lock(&self.slot);
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = wait(&self.cv, g);
+        }
+    }
+}
+
+/// Per-tenant service accounting.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    pub served: u64,
+    pub rejected: u64,
+    /// Admission→response latency of each served request, seconds.
+    pub latencies: Vec<f64>,
+}
+
+#[derive(Default)]
+struct ReportAccum {
+    served: u64,
+    rejected: u64,
+    batches: u64,
+    widths: Vec<usize>,
+    per_tenant: BTreeMap<String, TenantStats>,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    log: Mutex<Vec<Arc<Command>>>,
+    log_cv: Condvar,
+    outboxes: Mutex<Vec<Arc<Outbox>>>,
+    report: Mutex<ReportAccum>,
+}
+
+/// Poison-proof lock: a panicked holder must degrade to a typed error
+/// path, never to a daemon-wide hang (the fault-injection discipline).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|p| p.into_inner())
+}
+
+impl Shared {
+    fn new(accepting: bool) -> Arc<Shared> {
+        Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                pending: Vec::new(),
+                open_streams: 0,
+                accepting,
+            }),
+            queue_cv: Condvar::new(),
+            log: Mutex::new(Vec::new()),
+            log_cv: Condvar::new(),
+            outboxes: Mutex::new(Vec::new()),
+            report: Mutex::new(ReportAccum::default()),
+        })
+    }
+
+    /// Register a connection **before** the scheduler can observe an empty
+    /// idle daemon, or a fast scheduler could drain before the first frame.
+    fn register_stream(&self) -> Arc<Outbox> {
+        let outbox = Outbox::new();
+        lock(&self.queue).open_streams += 1;
+        lock(&self.outboxes).push(outbox.clone());
+        outbox
+    }
+
+    fn stream_closed(&self) {
+        let mut q = lock(&self.queue);
+        q.open_streams = q.open_streams.saturating_sub(1);
+        self.queue_cv.notify_all();
+    }
+
+    fn stop_accepting(&self) {
+        lock(&self.queue).accepting = false;
+        self.queue_cv.notify_all();
+    }
+
+    fn push_command(&self, cmd: Arc<Command>) {
+        lock(&self.log).push(cmd);
+        self.log_cv.notify_all();
+    }
+
+    fn next_command(&self, cursor: usize) -> Arc<Command> {
+        let mut log = lock(&self.log);
+        loop {
+            if cursor < log.len() {
+                return log[cursor].clone();
+            }
+            log = wait(&self.log_cv, log);
+        }
+    }
+
+    fn note_served(&self, tenant: &str, latency: f64) {
+        let mut r = lock(&self.report);
+        r.served += 1;
+        let t = r.per_tenant.entry(tenant.to_string()).or_default();
+        t.served += 1;
+        t.latencies.push(latency);
+    }
+
+    fn note_rejected(&self, tenant: &str) {
+        let mut r = lock(&self.report);
+        r.rejected += 1;
+        r.per_tenant.entry(tenant.to_string()).or_default().rejected += 1;
+    }
+
+    fn note_batch(&self, width: usize) {
+        let mut r = lock(&self.report);
+        r.batches += 1;
+        r.widths.push(width);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection threads.
+// ---------------------------------------------------------------------------
+
+fn reader_loop(shared: &Shared, mut r: impl Read, outbox: &Arc<Outbox>, queue_cap: usize) {
+    loop {
+        match read_frame(&mut r) {
+            Ok(None) => break, // clean EOF: client is done
+            Err(e) => {
+                // Framing violation: the stream is unsynchronized — answer
+                // typed and stop reading this connection.
+                outbox.push(encode_err(0, "anon", "protocol", &e.to_string()));
+                shared.note_rejected("anon");
+                break;
+            }
+            Ok(Some(payload)) => {
+                let req = match decode_request(&payload) {
+                    Err((id, tenant, msg)) => {
+                        outbox.push(encode_err(id, &tenant, "invalid", &msg));
+                        shared.note_rejected(&tenant);
+                        continue; // framing intact: keep serving the stream
+                    }
+                    Ok(req) => req,
+                };
+                let mut q = lock(&shared.queue);
+                if q.pending.len() >= queue_cap {
+                    drop(q);
+                    outbox.push(encode_err(
+                        req.id,
+                        &req.tenant,
+                        "backpressure",
+                        &format!("admission queue full (cap {queue_cap})"),
+                    ));
+                    shared.note_rejected(&req.tenant);
+                    continue;
+                }
+                q.pending.push(Pending {
+                    req,
+                    outbox: outbox.clone(),
+                    t_arrival: Instant::now(),
+                });
+                shared.queue_cv.notify_all();
+            }
+        }
+    }
+    shared.stream_closed();
+}
+
+fn writer_loop(outbox: &Outbox, mut w: impl Write) {
+    while let Some(line) = outbox.pop_blocking() {
+        if write_frame(&mut w, line.as_bytes()).is_err() {
+            // Peer gone: close so pushes stop queueing, keep draining the
+            // backlog into the void to unblock the daemon.
+            outbox.close();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: head-of-line deadline batching.
+// ---------------------------------------------------------------------------
+
+fn scheduler_loop(shared: &Shared, cfg: &ServeConfig) {
+    let width = cfg.width.max(1);
+    let deadline = Duration::from_millis(cfg.deadline_ms);
+    loop {
+        // Take the next group to ship: the oldest pending request plus up
+        // to width-1 compatible (same cache key) batchmates, as soon as
+        // the group is full, input is exhausted, or the head has waited
+        // out the deadline.
+        let group: Vec<Pending> = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if q.pending.is_empty() {
+                    if q.open_streams == 0 && !q.accepting {
+                        break Vec::new(); // drained
+                    }
+                    q = wait(&shared.queue_cv, q);
+                    continue;
+                }
+                let key = q.pending[0].req.key();
+                let idxs: Vec<usize> = q
+                    .pending
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.req.key() == key)
+                    .map(|(i, _)| i)
+                    .take(width)
+                    .collect();
+                let input_done = q.open_streams == 0 && !q.accepting;
+                let age = q.pending[0].t_arrival.elapsed();
+                if idxs.len() >= width || input_done || age >= deadline {
+                    let mut taken = Vec::with_capacity(idxs.len());
+                    for &i in idxs.iter().rev() {
+                        taken.push(q.pending.remove(i));
+                    }
+                    taken.reverse(); // arrival order
+                    break taken;
+                }
+                let (qq, _) = shared
+                    .queue_cv
+                    .wait_timeout(q, deadline - age)
+                    .unwrap_or_else(|p| p.into_inner());
+                q = qq;
+            }
+        };
+        if group.is_empty() {
+            break;
+        }
+        ship(shared, group);
+    }
+    // Graceful drain: stop the engine collective, then flush-close every
+    // outbox so writer threads exit once their backlog is on the wire.
+    shared.push_command(Arc::new(Command::Shutdown));
+    for ob in lock(&shared.outboxes).iter() {
+        ob.close();
+    }
+}
+
+fn ship(shared: &Shared, group: Vec<Pending>) {
+    let k = group.len();
+    let head = &group[0].req;
+    let cmd = Arc::new(Command::Batch(BatchCmd {
+        key: head.key(),
+        case: head.case,
+        scale: head.scale,
+        reqs: group
+            .iter()
+            .map(|p| ReqCore {
+                id: p.req.id,
+                rtol: p.req.rtol,
+                seed: p.req.seed,
+            })
+            .collect(),
+        result: ResultCell::new(),
+    }));
+    shared.push_command(cmd.clone());
+    let outcome = match &*cmd {
+        Command::Batch(b) => b.result.wait(),
+        Command::Shutdown => unreachable!(),
+    };
+    shared.note_batch(k);
+    match outcome {
+        Ok(out) => {
+            for (col, p) in group.iter().enumerate() {
+                let line = encode_ok(
+                    p.req.id,
+                    &p.req.tenant,
+                    &out.cols[col],
+                    out.setup_count,
+                    out.cache_hit,
+                    k,
+                );
+                p.outbox.push(line);
+                shared.note_served(&p.req.tenant, p.t_arrival.elapsed().as_secs_f64());
+            }
+        }
+        Err(msg) => {
+            for p in &group {
+                p.outbox.push(encode_err(p.req.id, &p.req.tenant, "solver", &msg));
+                shared.note_rejected(&p.req.tenant);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine: the rank collective executing the command log.
+// ---------------------------------------------------------------------------
+
+struct RankServeOut {
+    perf: Option<crate::perf::PerfSnapshot>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    setup_counts: Vec<u64>,
+}
+
+fn engine_body(shared: &Shared, cfg: &ServeConfig, epoch: Instant, mut comm: Comm) -> RankServeOut {
+    let rank = comm.rank();
+    let threads = cfg.threads.max(1);
+    let ctx = ThreadCtx::new(threads);
+    if cfg.perf.enabled() {
+        ctx.install_perf(Arc::new(crate::perf::PerfLog::new(
+            rank,
+            threads,
+            epoch,
+            cfg.perf.trace.is_some(),
+        )));
+    }
+    let mut cache = KspCache::new(cfg.cache_cap.max(1));
+    // Monitor forced on: residual histories are the payload of the
+    // determinism contract. Everything else stays at the PETSc defaults a
+    // solo `mmpetsc solve` uses, so histories can match bitwise.
+    let base = KspConfig {
+        monitor: true,
+        ..KspConfig::default()
+    };
+    let mut cursor = 0usize;
+    loop {
+        let cmd = shared.next_command(cursor);
+        cursor += 1;
+        match &*cmd {
+            Command::Shutdown => break,
+            Command::Batch(bc) => {
+                // Contain panics per batch: the world is deterministic, so
+                // every rank panics (or errors) identically and stays in
+                // lockstep for the next command — degradation, not a hang.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_batch(bc, &mut cache, &base, &mut comm, &ctx)
+                }));
+                let out = match out {
+                    Ok(Ok(o)) => Ok(o),
+                    Ok(Err(e)) => Err(e.to_string()),
+                    Err(_) => Err("serve engine: batch panicked".to_string()),
+                };
+                if rank == 0 {
+                    bc.result.set(out);
+                }
+            }
+        }
+    }
+    RankServeOut {
+        perf: ctx.perf().map(|p| p.snapshot()),
+        hits: cache.hits,
+        misses: cache.misses,
+        evictions: cache.evictions,
+        setup_counts: cache.setup_counts(),
+    }
+}
+
+fn run_batch(
+    bc: &BatchCmd,
+    cache: &mut KspCache,
+    base: &KspConfig,
+    comm: &mut Comm,
+    ctx: &Arc<ThreadCtx>,
+) -> Result<BatchOutcome> {
+    let perf = ctx.perf().cloned();
+    let _span = perf
+        .as_ref()
+        .map(|p| p.span(crate::perf::Event::KSPServe, Some(crate::perf::Stage::Serve)));
+
+    let threads = ctx.nthreads();
+    let (case, scale) = (bc.case, bc.scale);
+    let build_ctx = ctx.clone();
+    let (entry, hit) = cache.get_or_build(&bc.key, base, comm, move |comm| {
+        // Identical to the solo runner's fused-path assembly: slot-aligned
+        // layout + hybrid plan, so the slot grid (and with it every
+        // residual history) is decomposition-invariant.
+        let spec = case.grid(scale);
+        let n = spec.rows();
+        let layout = Layout::slot_aligned(n, comm.size(), threads);
+        let (lo, hi) = layout.range(comm.rank());
+        let entries = generate_rows(case, scale, lo, hi);
+        let mut a = MatMPIAIJ::assemble(layout.clone(), layout, entries, comm, build_ctx)?;
+        a.enable_hybrid()?;
+        Ok(Box::new(a))
+    })?;
+
+    let rank = comm.rank();
+    let (lo, hi) = entry.layout.range(rank);
+    let k = bc.reqs.len();
+    let mut b = MultiVecMPI::new_partitioned(entry.layout.clone(), rank, k, ctx.clone(), &entry.part);
+    for (col, r) in bc.reqs.iter().enumerate() {
+        let xs: Vec<f64> = (lo..hi).map(|g| rhs_entry(r.seed, g)).collect();
+        b.local_mut().set_col(col, &xs)?;
+    }
+    let mut x = MultiVecMPI::new_partitioned(entry.layout.clone(), rank, k, ctx.clone(), &entry.part);
+    let rtols: Vec<f64> = bc.reqs.iter().map(|r| r.rtol).collect();
+    let stats = entry.ksp_mut().solve_multi(&b, &mut x, &rtols, comm)?;
+    Ok(BatchOutcome {
+        cols: stats
+            .cols
+            .iter()
+            .map(|s| ColOutcome {
+                iterations: s.iterations,
+                converged: s.converged(),
+                final_residual: s.final_residual,
+                history: s.history.clone(),
+            })
+            .collect(),
+        setup_count: entry.setup_count(),
+        cache_hit: hit,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Entry points and the report.
+// ---------------------------------------------------------------------------
+
+/// End-of-run service report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub served: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    /// Width of each shipped batch, in ship order.
+    pub widths: Vec<usize>,
+    pub per_tenant: BTreeMap<String, TenantStats>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// `setup_count` of each live cache entry at shutdown (all 1s — the
+    /// zero-re-setup contract).
+    pub setup_counts: Vec<u64>,
+    pub wall_seconds: f64,
+    /// Rank-ordered perf snapshots when `-log_view`/`-log_trace` armed.
+    pub perf: Vec<crate::perf::PerfSnapshot>,
+}
+
+impl ServeReport {
+    /// Human-readable per-tenant table (stderr in stdio mode — stdout
+    /// carries response frames).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (tenant, t) in &self.per_tenant {
+            let (p50, p90, p99) = crate::util::stats::p50_p90_p99(&t.latencies);
+            let thr = t.served as f64 / self.wall_seconds.max(1e-12);
+            out.push_str(&format!(
+                "serve: tenant {tenant} served={} rejected={} throughput={thr:.1}/s p50={p50:.6}s p90={p90:.6}s p99={p99:.6}s\n",
+                t.served, t.rejected
+            ));
+        }
+        out.push_str(&format!(
+            "serve: cache hits={} misses={} evictions={} setup_counts={:?}\n",
+            self.cache_hits, self.cache_misses, self.cache_evictions, self.setup_counts
+        ));
+        out.push_str(&format!(
+            "serve: batches={} widths={:?} served={} rejected={} wall={:.3}s\n",
+            self.batches, self.widths, self.served, self.rejected, self.wall_seconds
+        ));
+        out.push_str("serve: drained clean\n");
+        out
+    }
+}
+
+/// Run the daemon to drain over already-registered connections.
+fn run_daemon(
+    cfg: &ServeConfig,
+    shared: Arc<Shared>,
+    conn_threads: Vec<std::thread::JoinHandle<()>>,
+) -> Result<ServeReport> {
+    let t0 = Instant::now();
+    let epoch = Instant::now();
+    let sched = {
+        let shared = shared.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || scheduler_loop(&shared, &cfg))
+    };
+    let outs: Vec<RankServeOut> = {
+        let shared = shared.clone();
+        let cfg = cfg.clone();
+        World::run(cfg.ranks.max(1), move |comm| {
+            engine_body(&shared, &cfg, epoch, comm)
+        })
+    };
+    sched
+        .join()
+        .map_err(|_| Error::Runtime("serve scheduler panicked".into()))?;
+    for h in conn_threads {
+        let _ = h.join();
+    }
+
+    let accum = std::mem::take(&mut *lock(&shared.report));
+    let mut report = ServeReport {
+        served: accum.served,
+        rejected: accum.rejected,
+        batches: accum.batches,
+        widths: accum.widths,
+        per_tenant: accum.per_tenant,
+        cache_hits: 0,
+        cache_misses: 0,
+        cache_evictions: 0,
+        setup_counts: Vec::new(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        perf: Vec::new(),
+    };
+    for (r, o) in outs.into_iter().enumerate() {
+        if r == 0 {
+            // Cache decisions are collective-deterministic: rank 0's
+            // counters represent the job.
+            report.cache_hits = o.hits;
+            report.cache_misses = o.misses;
+            report.cache_evictions = o.evictions;
+            report.setup_counts = o.setup_counts;
+        }
+        if let Some(s) = o.perf {
+            report.perf.push(s);
+        }
+    }
+    Ok(report)
+}
+
+/// Serve one framed request stream (the `mmpetsc serve` stdin/stdout mode,
+/// and the in-memory harness of the e2e tests). Returns after the stream
+/// hits EOF and every admitted request has been answered.
+pub fn serve_stream<R, W>(reader: R, writer: W, cfg: &ServeConfig) -> Result<ServeReport>
+where
+    R: Read + Send + 'static,
+    W: Write + Send + 'static,
+{
+    let shared = Shared::new(false);
+    let outbox = shared.register_stream();
+    let queue_cap = cfg.queue_cap.max(1);
+    let rh = {
+        let shared = shared.clone();
+        let outbox = outbox.clone();
+        std::thread::spawn(move || reader_loop(&shared, reader, &outbox, queue_cap))
+    };
+    let wh = std::thread::spawn(move || writer_loop(&outbox, writer));
+    run_daemon(cfg, shared, vec![rh, wh])
+}
+
+/// Serve over a unix socket at `path`. Accepts `cfg.max_conns` connections
+/// (0 = forever), spawning a reader and writer per connection, and drains
+/// once the last accepted connection closes.
+pub fn serve_unix(path: &str, cfg: &ServeConfig) -> Result<ServeReport> {
+    use std::os::unix::net::UnixListener;
+
+    let _ = std::fs::remove_file(path); // stale socket from a dead daemon
+    let listener = UnixListener::bind(path)?;
+    let shared = Shared::new(true);
+    let queue_cap = cfg.queue_cap.max(1);
+    let max_conns = cfg.max_conns;
+    let acceptor = {
+        let shared = shared.clone();
+        std::thread::spawn(move || -> Vec<std::thread::JoinHandle<()>> {
+            let mut handles = Vec::new();
+            let mut accepted = 0usize;
+            loop {
+                if max_conns != 0 && accepted >= max_conns {
+                    break;
+                }
+                let stream = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(_) => break,
+                };
+                accepted += 1;
+                let outbox = shared.register_stream();
+                let r = match stream.try_clone() {
+                    Ok(r) => r,
+                    Err(_) => {
+                        shared.stream_closed();
+                        continue;
+                    }
+                };
+                let rh = {
+                    let shared = shared.clone();
+                    let outbox = outbox.clone();
+                    std::thread::spawn(move || reader_loop(&shared, r, &outbox, queue_cap))
+                };
+                let wh = std::thread::spawn(move || writer_loop(&outbox, stream));
+                handles.push(rh);
+                handles.push(wh);
+            }
+            shared.stop_accepting();
+            handles
+        })
+    };
+    // The scheduler won't drain while `accepting` is true, so the daemon
+    // stays up for the whole accept window.
+    let conn_threads = Vec::new();
+    let report = run_daemon(cfg, shared, conn_threads)?;
+    let handles = acceptor
+        .join()
+        .map_err(|_| Error::Runtime("serve acceptor panicked".into()))?;
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_discriminating() {
+        let a = fingerprint(TestCase::SaltPressure, 0.003);
+        assert_eq!(a, fingerprint(TestCase::SaltPressure, 0.003));
+        assert_ne!(a, fingerprint(TestCase::SaltPressure, 0.004));
+        assert_ne!(a, fingerprint(TestCase::SaltGeostrophic, 0.003));
+    }
+
+    #[test]
+    fn request_decodes_with_defaults_and_overrides() {
+        let r = decode_request(b"-tenant alice -id 7 -rtol 1e-9 -seed 42").unwrap();
+        assert_eq!(r.tenant, "alice");
+        assert_eq!(r.id, 7);
+        assert_eq!(r.case, TestCase::SaltPressure);
+        assert_eq!(r.ksp_type, "cg-fused");
+        assert_eq!(r.pc_type, "jacobi");
+        assert_eq!(r.rtol, 1e-9);
+        assert_eq!(r.seed, 42);
+        let r = decode_request(b"-case saltfinger-geostrophic -scale 0.002 -pc_type none").unwrap();
+        assert_eq!(r.case, TestCase::SaltGeostrophic);
+        assert_eq!(r.pc_type, "none");
+        assert_eq!(r.tenant, "anon");
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_naming_the_id() {
+        // NaN tolerance: the up-front validation contract.
+        let (id, tenant, msg) = decode_request(b"-id 9 -tenant bob -rtol nan").unwrap_err();
+        assert_eq!(id, 9);
+        assert_eq!(tenant, "bob");
+        assert!(msg.contains("request id=9"), "{msg}");
+        assert!(msg.contains("rtol"), "{msg}");
+        for bad in ["-id 3 -rtol inf", "-id 3 -rtol 0", "-id 3 -rtol -1e-8"] {
+            let (id, _, msg) = decode_request(bad.as_bytes()).unwrap_err();
+            assert_eq!(id, 3);
+            assert!(msg.contains("rtol"), "{bad}: {msg}");
+        }
+        // Unsupported solver for the batched engine.
+        let (_, _, msg) = decode_request(b"-id 1 -ksp_type gmres").unwrap_err();
+        assert!(msg.contains("gmres"), "{msg}");
+        // Misspelled option: serve-side -options_left discipline.
+        let (_, _, msg) = decode_request(b"-id 2 -rtoll 1e-8").unwrap_err();
+        assert!(msg.contains("-rtoll"), "{msg}");
+        // Unknown case, empty payload, non-UTF-8.
+        assert!(decode_request(b"-case bogus").is_err());
+        assert!(decode_request(b"").is_err());
+        assert!(decode_request(&[0xff, 0xfe]).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_is_bitwise() {
+        let col = ColOutcome {
+            iterations: 12,
+            converged: true,
+            final_residual: 1.2345678901234567e-9,
+            // Messy mantissas, to make the bitwise claim mean something.
+            history: vec![1.0, 0.5, std::f64::consts::PI / 3.0, 1e-300],
+        };
+        let line = encode_ok(7, "alice", &col, 1, true, 2);
+        let r = parse_response(&line).unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.tenant, "alice");
+        assert_eq!(r.iterations, 12);
+        assert!(r.converged);
+        assert_eq!(r.setup_count, 1);
+        assert!(r.cache_hit);
+        assert_eq!(r.width, 2);
+        assert_eq!(r.history.len(), 4);
+        for (a, b) in r.history.iter().zip(&col.history) {
+            assert_eq!(a.to_bits(), b.to_bits(), "history must survive bitwise");
+        }
+        assert_eq!(r.residual.to_bits(), col.final_residual.to_bits());
+
+        let line = encode_err(9, "bob", "backpressure", "admission queue full (cap 4)");
+        let r = parse_response(&line).unwrap();
+        assert!(!r.ok);
+        assert_eq!(r.id, 9);
+        assert_eq!(r.code, "backpressure");
+        assert_eq!(r.msg, "admission queue full (cap 4)");
+
+        assert!(parse_response("").is_err());
+        assert!(parse_response("nope id=1").is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Warm-`Ksp` cache for the solver daemon (`coordinator::serve`).
+//!
+//! The serving story of the paper (and of arXiv 1307.4567's benchmarking
+//! follow-up) is amortization: an application pushes thousands of solves
+//! through a handful of operators, so per-solve `KSPSetUp` cost — PC
+//! build, format autotuning, spectral bounds — must be paid **once per
+//! operator**, not once per request. This cache keys fully-built
+//! [`Ksp`] objects by `(operator fingerprint, ksp_type, pc_type)` and
+//! evicts least-recently-used entries when the configured capacity is
+//! exceeded, so a long-running daemon holds the hot working set of
+//! assembled operators and nothing else.
+//!
+//! The contract proven by the unit test here and by `tests/serve_daemon.rs`
+//! end-to-end: a cache entry's [`Ksp::setup_count`] stays at exactly 1 for
+//! its whole lifetime, however many requests it serves.
+//!
+//! Each rank of the serving collective owns one `KspCache` inside its rank
+//! closure. Cache decisions (hit / miss / evict) depend only on the
+//! command sequence, which every rank observes identically — so the
+//! collective `set_up` on a miss is entered by all ranks together and the
+//! cache never desynchronizes the world.
+
+use crate::comm::endpoint::Comm;
+use crate::error::Result;
+use crate::ksp::context::Ksp;
+use crate::ksp::KspConfig;
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::vec::mpi::Layout;
+
+/// What makes two requests share a warm solver: the same assembled
+/// operator (fingerprint covers case + scale) driven by the same KSP and
+/// PC. Tolerances are *not* part of the key — they are per-solve inputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheKey {
+    pub fingerprint: u64,
+    pub ksp_type: String,
+    pub pc_type: String,
+}
+
+/// One warm solver: the assembled operator (heap-boxed so its address is
+/// stable) plus the `Ksp` that borrowed it at build time.
+pub struct CacheEntry {
+    pub key: CacheKey,
+    // Field order is load-bearing: `ksp` is declared before `mat` so it
+    // drops first — the solver holds a borrow into the box below.
+    ksp: Ksp<'static>,
+    // Owns the operator `ksp` borrows. Never read again after build (the
+    // layout/partition copies below exist so nothing needs to reach back
+    // in past the solver's exclusive borrow).
+    #[allow(dead_code)]
+    mat: Box<MatMPIAIJ>,
+    /// Row layout of the operator (copied out at build time).
+    pub layout: Layout,
+    /// Diag-block thread partition (copied out at build time) — what
+    /// `MultiVecMPI::new_partitioned` pages batch vectors by.
+    pub part: Vec<(usize, usize)>,
+    last_used: u64,
+}
+
+impl CacheEntry {
+    pub fn ksp_mut(&mut self) -> &mut Ksp<'static> {
+        &mut self.ksp
+    }
+
+    /// How many times this entry's solver ran `KSPSetUp`. The cache
+    /// contract is that this is 1, forever.
+    pub fn setup_count(&self) -> u64 {
+        self.ksp.setup_count()
+    }
+}
+
+/// LRU cache of warm solvers, one per rank of the serving collective.
+pub struct KspCache {
+    cap: usize,
+    tick: u64,
+    entries: Vec<CacheEntry>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl KspCache {
+    /// `cap` = max warm operators held at once (min 1).
+    pub fn new(cap: usize) -> KspCache {
+        KspCache {
+            cap: cap.max(1),
+            tick: 0,
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `setup_count` of every live entry (for the serve report's
+    /// zero-re-setup evidence).
+    pub fn setup_counts(&self) -> Vec<u64> {
+        self.entries.iter().map(|e| e.setup_count()).collect()
+    }
+
+    /// Return the warm entry for `key`, building it (assemble → set_up)
+    /// on a miss. The bool is `true` on a hit. `assemble` must return the
+    /// operator fully prepared for this key's solver (hybrid enabled when
+    /// the fused engine will run) — the cache adds only the `Ksp`
+    /// lifecycle on top.
+    pub fn get_or_build<F>(
+        &mut self,
+        key: &CacheKey,
+        cfg: &KspConfig,
+        comm: &mut Comm,
+        assemble: F,
+    ) -> Result<(&mut CacheEntry, bool)>
+    where
+        F: FnOnce(&mut Comm) -> Result<Box<MatMPIAIJ>>,
+    {
+        self.tick += 1;
+        if let Some(i) = self.entries.iter().position(|e| &e.key == key) {
+            self.hits += 1;
+            self.entries[i].last_used = self.tick;
+            return Ok((&mut self.entries[i], true));
+        }
+        self.misses += 1;
+        if self.entries.len() >= self.cap {
+            // Evict the least-recently-used entry. `remove` (not
+            // swap_remove) keeps insertion order stable, so the scan order
+            // — and with it every rank's cache state — stays identical
+            // across the collective.
+            let (lru, _) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .expect("cap >= 1 and entries non-empty");
+            self.entries.remove(lru);
+            self.evictions += 1;
+        }
+        let mut mat = assemble(comm)?;
+        let layout = mat.row_layout().clone();
+        let part: Vec<(usize, usize)> = mat.diag_block().partition().to_vec();
+        // SAFETY: `mat` is a Box, so the MatMPIAIJ's heap address is stable
+        // for the life of the box — moving the Box (into the entry, or when
+        // `entries` reallocates) moves only the pointer. The entry drops
+        // `ksp` before `mat` (field order above), and after this point the
+        // box is never dereferenced directly again, so the solver's
+        // exclusive borrow is never aliased.
+        let mat_ref: &'static mut MatMPIAIJ = unsafe { &mut *(mat.as_mut() as *mut MatMPIAIJ) };
+        let mut ksp: Ksp<'static> = Ksp::create(comm);
+        ksp.set_type(&key.ksp_type)?;
+        ksp.set_pc(&key.pc_type);
+        ksp.set_config(cfg.clone());
+        ksp.set_operators(mat_ref);
+        ksp.set_up(comm)?;
+        self.entries.push(CacheEntry {
+            key: key.clone(),
+            ksp,
+            mat,
+            layout,
+            part,
+            last_used: self.tick,
+        });
+        let last = self.entries.len() - 1;
+        Ok((&mut self.entries[last], false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world::World;
+    use crate::vec::ctx::ThreadCtx;
+    use std::sync::Arc;
+
+    fn key(fp: u64) -> CacheKey {
+        CacheKey {
+            fingerprint: fp,
+            ksp_type: "cg".into(),
+            pc_type: "jacobi".into(),
+        }
+    }
+
+    fn assemble(n: usize, comm: &mut Comm, ctx: Arc<ThreadCtx>) -> Result<Box<MatMPIAIJ>> {
+        let layout = Layout::split(n, comm.size());
+        let (lo, hi) = layout.range(comm.rank());
+        let entries = crate::ksp::testutil::tridiag_rows(n, lo, hi);
+        Ok(Box::new(MatMPIAIJ::assemble(
+            layout.clone(),
+            layout,
+            entries,
+            comm,
+            ctx,
+        )?))
+    }
+
+    #[test]
+    fn repeat_key_reuses_setup_and_lru_evicts() {
+        World::run(1, |mut comm| {
+            let ctx = ThreadCtx::new(1);
+            let cfg = KspConfig::default();
+            let mut cache = KspCache::new(2);
+            // fingerprint doubles as the system size here
+            let seq = [64u64, 64, 96, 64, 128, 96];
+            for &fp in &seq {
+                let (entry, _) = cache
+                    .get_or_build(&key(fp), &cfg, &mut comm, |c| {
+                        assemble(fp as usize, c, ctx.clone())
+                    })
+                    .unwrap();
+                assert_eq!(
+                    entry.setup_count(),
+                    1,
+                    "a cache entry never re-runs KSPSetUp"
+                );
+                assert_eq!(entry.key.fingerprint, fp);
+                assert_eq!(entry.layout.global_len(), fp as usize);
+            }
+            // 64 miss · 64 hit · 96 miss · 64 hit · 128 miss (evicts 96) ·
+            // 96 miss (evicts 64)
+            assert_eq!(cache.hits, 2);
+            assert_eq!(cache.misses, 4);
+            assert_eq!(cache.evictions, 2);
+            assert_eq!(cache.len(), 2);
+            assert_eq!(cache.setup_counts(), vec![1, 1]);
+        });
+    }
+
+    #[test]
+    fn distinct_solver_types_are_distinct_entries() {
+        World::run(1, |mut comm| {
+            let ctx = ThreadCtx::new(1);
+            let cfg = KspConfig::default();
+            let mut cache = KspCache::new(4);
+            for pc in ["jacobi", "none", "jacobi"] {
+                let k = CacheKey {
+                    fingerprint: 64,
+                    ksp_type: "cg".into(),
+                    pc_type: pc.into(),
+                };
+                cache
+                    .get_or_build(&k, &cfg, &mut comm, |c| assemble(64, c, ctx.clone()))
+                    .unwrap();
+            }
+            assert_eq!(cache.misses, 2, "same fingerprint, different PC → new entry");
+            assert_eq!(cache.hits, 1);
+            assert_eq!(cache.len(), 2);
+        });
+    }
+}

@@ -25,6 +25,7 @@ pub mod richardson;
 pub mod chebyshev;
 pub mod fused;
 pub mod block;
+pub mod cache;
 pub mod context;
 
 pub use context::{from_name, Ksp, KspImpl, SolveArgs, KSP_NAMES, KSP_REGISTRY};

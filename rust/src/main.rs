@@ -4,17 +4,23 @@
 //! ```sh
 //! mmpetsc solve --case saltfinger-pressure --scale 0.02 --ranks 4 --threads 2
 //! mmpetsc solve --ranks 2 --threads 2 -log_view -log_trace trace.jsonl
+//! mmpetsc serve --width 4 --deadline-ms 10 < requests.bin > responses.bin
+//! mmpetsc serve --socket /tmp/mmpetsc.sock --max-conns 0
 //! mmpetsc model --case flue-pressure --cores 8192 --threads 4
 //! mmpetsc fault --seeds 8
 //! mmpetsc info
 //! ```
 //!
-//! `solve`, `batch` and `fault` also accept PETSc-style single-dash
-//! options (`-log_view`, `-log_trace <path>`), routed through the
-//! [`Options`] database: `-log_view` prints the staged per-event
+//! `solve`, `batch`, `fault` and `serve` also accept PETSc-style
+//! single-dash options (`-log_view`, `-log_trace <path>`), routed through
+//! the [`Options`] database: `-log_view` prints the staged per-event
 //! performance table after the run; `-log_trace` exports the
 //! per-(rank,thread) kernel-op trace as JSONL. Without either flag the
-//! instrumentation stays disarmed (no `PerfLog` is installed).
+//! instrumentation stays disarmed (no `PerfLog` is installed). Like
+//! PETSc's `-options_left`, every unconsumed single-dash option is
+//! reported after option extraction — a misspelled `-log_vieww` warns
+//! instead of silently doing nothing, and `-options_left error` turns the
+//! warning into a typed failure before the run starts.
 //!
 //! Exit codes: 0 success; 1 configuration or run error (typed
 //! [`Error`](mmpetsc::error::Error), printed to stderr); 3 chaos-harness
@@ -29,6 +35,7 @@ use mmpetsc::comm::fault::FaultPlan;
 use mmpetsc::coordinator::batch::{run_batch_case, BatchConfig};
 use mmpetsc::coordinator::options::Options;
 use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::coordinator::serve::{serve_stream, serve_unix, ServeConfig};
 use mmpetsc::error::{Error, Result};
 use mmpetsc::matgen::cases::TestCase;
 use mmpetsc::perf::view::PerfReport;
@@ -45,6 +52,7 @@ fn main() {
     let result = match cmd.as_str() {
         "solve" => solve(&argv),
         "batch" => batch(&argv),
+        "serve" => serve(&argv),
         "model" => model(&argv),
         "fault" => fault(&argv),
         "info" => {
@@ -56,6 +64,7 @@ fn main() {
                 "mmpetsc — mixed-mode PETSc reproduction\n\n\
                  commands:\n  solve   run a real mixed-mode solve (ranks × threads in-process)\n  \
                  batch   serve a queue of RHS requests against one operator (solves/s)\n  \
+                 serve   warm-Ksp solver daemon: framed requests on stdin/stdout or a unix socket\n  \
                  model   price a configuration at paper scale (mode=model)\n  \
                  fault   chaos harness: inject deterministic faults, assert typed degradation\n  \
                  info    modelled machine and test-case inventory\n\n\
@@ -106,6 +115,7 @@ fn batch(argv: &[String]) -> Result<()> {
     let a = cli.parse(argv)?;
     let opts = Options::parse(a.positional())?;
     let perf = opts.perf_config();
+    opts.check_options_left()?;
     let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let rtol = a.get_f64("rtol")?;
     let nreq = a.get_usize("requests")?.max(1);
@@ -163,6 +173,52 @@ fn batch(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The warm-`Ksp` solver daemon. Stdin/stdout mode by default: stdout
+/// carries binary response frames, so the service report and any
+/// `-log_view` table go to **stderr**. `--socket <path>` serves a unix
+/// socket instead.
+fn serve(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("mmpetsc serve", "warm-Ksp solver daemon with batched admission")
+        .opt("ranks", Some("2"), "engine ranks")
+        .opt("threads", Some("2"), "threads per rank")
+        .opt("width", Some("4"), "max requests coalesced into one solve_multi")
+        .opt("deadline-ms", Some("10"), "latency deadline before a partial batch ships")
+        .opt("queue-cap", Some("64"), "admission bound (beyond: typed backpressure)")
+        .opt("cache-cap", Some("4"), "warm operators per rank (LRU beyond)")
+        .opt("socket", None, "serve a unix socket at this path (default: stdin/stdout)")
+        .opt("max-conns", Some("1"), "unix mode: connections accepted before drain (0 = forever)");
+    let a = cli.parse(argv)?;
+    let opts = Options::parse(a.positional())?;
+    let perf = opts.perf_config();
+    opts.check_options_left()?;
+    let cfg = ServeConfig {
+        ranks: a.get_usize("ranks")?.max(1),
+        threads: a.get_usize("threads")?.max(1),
+        width: a.get_usize("width")?.max(1),
+        deadline_ms: a.get_usize("deadline-ms")? as u64,
+        queue_cap: a.get_usize("queue-cap")?.max(1),
+        cache_cap: a.get_usize("cache-cap")?.max(1),
+        max_conns: a.get_usize("max-conns")?,
+        perf: perf.clone(),
+    };
+    let rep = match a.get("socket") {
+        Some(path) => {
+            eprintln!("serve: listening on {path} (max-conns {})", cfg.max_conns);
+            serve_unix(path, &cfg)?
+        }
+        None => serve_stream(std::io::stdin(), std::io::stdout(), &cfg)?,
+    };
+    eprint!("{}", rep.render());
+    if perf.view {
+        eprint!("{}", PerfReport::from_snapshots(&rep.perf).render(rep.wall_seconds));
+    }
+    if let Some(path) = &perf.trace {
+        let n = mmpetsc::perf::trace::write_jsonl(path, &rep.perf)?;
+        eprintln!("-log_trace: wrote {n} kernel-op record(s) to {path}");
+    }
+    Ok(())
+}
+
 fn solve(argv: &[String]) -> Result<()> {
     let cli = Cli::new("mmpetsc solve", "real mixed-mode solve")
         .opt("case", Some("saltfinger-pressure"), "Table-6 case")
@@ -178,10 +234,17 @@ fn solve(argv: &[String]) -> Result<()> {
         .opt("rtol", Some("1e-8"), "relative tolerance")
         .opt("max-restarts", Some("0"), "breakdown restarts before giving up")
         .opt("mat-type", Some("auto"), "aij|baij|sell|auto (measured pick)")
-        .opt("mat-block-size", Some("0"), "BAIJ block-size hint (0 probes 2..4)");
+        .opt("mat-block-size", Some("0"), "BAIJ block-size hint (0 probes 2..4)")
+        .opt(
+            "rhs-seed",
+            None,
+            "build the RHS from this batch-engine seed (serve-parity baseline)",
+        );
     let a = cli.parse(argv)?;
     let opts = Options::parse(a.positional())?;
     let perf = opts.perf_config();
+    let monitor = opts.flag("ksp_monitor");
+    opts.check_options_left()?;
     let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let mut cfg = HybridConfig::default_for(
         case,
@@ -195,7 +258,14 @@ fn solve(argv: &[String]) -> Result<()> {
     cfg.ksp.max_restarts = a.get_usize("max-restarts")?;
     cfg.ksp.mat_type = a.get_or("mat-type", "auto");
     cfg.ksp.mat_block_size = a.get_usize("mat-block-size")?;
+    cfg.ksp.monitor = monitor;
     cfg.perf = perf.clone();
+    cfg.rhs_seed = match a.get("rhs-seed") {
+        None => None,
+        Some(s) => Some(s.parse().map_err(|_| {
+            Error::InvalidOption(format!("--rhs-seed: `{s}` is not a u64"))
+        })?),
+    };
     let rep = run_case(&cfg)?;
     println!(
         "{} {}x{}: converged={} its={} mat={} KSPSolve={} MatMult={} msgs={} bytes={}",
@@ -210,6 +280,13 @@ fn solve(argv: &[String]) -> Result<()> {
         rep.messages,
         human::bytes(rep.bytes as f64),
     );
+    if monitor {
+        // Hex f64 bits, the serve daemon's history encoding — so a shell
+        // script can diff a served request against this solo baseline
+        // bitwise (the CI smoke job does exactly that).
+        let hex: Vec<String> = rep.history.iter().map(|v| format!("{:016x}", v.to_bits())).collect();
+        println!("history: {}", hex.join(","));
+    }
     emit_perf(&perf, &rep.perf, rep.wall_seconds)?;
     if perf.view {
         println!(
@@ -278,6 +355,7 @@ fn fault(argv: &[String]) -> Result<()> {
     let a = cli.parse(argv)?;
     let opts = Options::parse(a.positional())?;
     let perf = opts.perf_config();
+    opts.check_options_left()?;
     let case = lookup_case(&a.get_or("case", "saltfinger-pressure"))?;
     let scale = a.get_f64("scale")?;
     let rtol = a.get_f64("rtol")?;

@@ -48,9 +48,10 @@ pub enum Event {
     KSPSolve = 12,
     ThreadFork = 13,
     ThreadBarrier = 14,
+    KSPServe = 15,
 }
 
-pub const N_EVENTS: usize = 15;
+pub const N_EVENTS: usize = 16;
 
 impl Event {
     pub const ALL: [Event; N_EVENTS] = [
@@ -69,6 +70,7 @@ impl Event {
         Event::KSPSolve,
         Event::ThreadFork,
         Event::ThreadBarrier,
+        Event::KSPServe,
     ];
 
     pub fn name(self) -> &'static str {
@@ -88,6 +90,7 @@ impl Event {
             Event::KSPSolve => "KSPSolve",
             Event::ThreadFork => "ThreadFork",
             Event::ThreadBarrier => "ThreadBarrier",
+            Event::KSPServe => "KSPServe",
         }
     }
 }
@@ -99,18 +102,20 @@ pub enum Stage {
     Main = 0,
     Setup = 1,
     Solve = 2,
+    Serve = 3,
 }
 
-pub const N_STAGES: usize = 3;
+pub const N_STAGES: usize = 4;
 
 impl Stage {
-    pub const ALL: [Stage; N_STAGES] = [Stage::Main, Stage::Setup, Stage::Solve];
+    pub const ALL: [Stage; N_STAGES] = [Stage::Main, Stage::Setup, Stage::Solve, Stage::Serve];
 
     pub fn name(self) -> &'static str {
         match self {
             Stage::Main => "main",
             Stage::Setup => "setup",
             Stage::Solve => "solve",
+            Stage::Serve => "serve",
         }
     }
 
@@ -118,6 +123,7 @@ impl Stage {
         match v {
             1 => Stage::Setup,
             2 => Stage::Solve,
+            3 => Stage::Serve,
             _ => Stage::Main,
         }
     }

@@ -15,10 +15,15 @@ pub struct Summary {
 
 impl Summary {
     /// Compute summary statistics. Panics on an empty sample.
+    ///
+    /// NaN-poisoned samples (exactly what `comm::fault` NaN corruption
+    /// feeds into latency reports) must yield a report, not a panic: the
+    /// sort is `f64::total_cmp`, which orders NaN after every finite value
+    /// instead of unwrapping a failed `partial_cmp`.
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample");
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -69,7 +74,7 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&sorted, p)
 }
 
@@ -79,7 +84,7 @@ pub fn p50_p90_p99(samples: &[f64]) -> (f64, f64, f64) {
         return (0.0, 0.0, 0.0);
     }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     (
         percentile_sorted(&sorted, 50.0),
         percentile_sorted(&sorted, 90.0),
@@ -150,6 +155,31 @@ mod tests {
         assert_eq!(p50_p90_p99(&rev), (p50, p90, p99));
         assert_eq!(p50_p90_p99(&[]), (0.0, 0.0, 0.0));
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_yield_a_report_not_a_panic() {
+        // Regression: these sorts used `partial_cmp(..).unwrap()`, so one
+        // NaN-poisoned latency panicked the whole batch/serve report path.
+        let poisoned = [3.0, f64::NAN, 1.0, 2.0];
+        let s = Summary::of(&poisoned);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0, "total_cmp sorts NaN after finite values");
+        assert!(s.max.is_nan(), "NaN lands at the top of the order");
+        let (p50, p90, p99) = p50_p90_p99(&poisoned);
+        assert!(p50.is_finite(), "p50 of a 4-sample set never touches the NaN slot");
+        assert!(p50 >= 1.0 && p50 <= 3.0);
+        // higher percentiles may interpolate against the NaN — fine, as
+        // long as nothing panics
+        let _ = (p90, p99);
+        assert!(percentile(&poisoned, 25.0).is_finite());
+        // all-NaN degenerates but still reports
+        let all_nan = [f64::NAN, f64::NAN];
+        let s = Summary::of(&all_nan);
+        assert_eq!(s.n, 2);
+        assert!(s.min.is_nan() && s.max.is_nan());
+        let (p50, _, _) = p50_p90_p99(&all_nan);
+        assert!(p50.is_nan());
     }
 
     #[test]

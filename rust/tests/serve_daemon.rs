@@ -1,0 +1,300 @@
+//! End-to-end goldens for the `mmpetsc serve` daemon: framed requests in,
+//! framed responses out, through the real warm-`Ksp` engine collective.
+//!
+//! The load-bearing contract: a request served by the daemon produces a
+//! residual history **bitwise identical** to the same problem run solo via
+//! the runner (`HybridConfig { rhs_seed: Some(..), .. }`), regardless of
+//! what it was co-batched with and across rank×thread decompositions.
+//! Plus the operational guarantees: warm cache entries never re-run
+//! `KSPSetUp`, a full admission queue rejects with a typed `backpressure`
+//! frame (never a hang), invalid requests are rejected by id without
+//! poisoning their batchmates, and a protocol violation degrades to a
+//! typed `protocol` frame and a clean drain.
+
+use std::io::Cursor;
+use std::sync::{Arc, Mutex};
+
+use mmpetsc::comm::frame::{read_frame, write_frame};
+use mmpetsc::coordinator::runner::{run_case, HybridConfig};
+use mmpetsc::coordinator::serve::{parse_response, serve_stream, Response, ServeConfig, ServeReport};
+use mmpetsc::matgen::cases::TestCase;
+
+/// A `Write` the daemon's writer thread can own while the test keeps a
+/// handle to the bytes.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl std::io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Frame `payloads` into one input stream, run the daemon over it, decode
+/// every response frame.
+fn run_serve(payloads: &[Vec<u8>], cfg: &ServeConfig) -> (ServeReport, Vec<Response>) {
+    let mut input = Vec::new();
+    for p in payloads {
+        write_frame(&mut input, p).expect("framing test input");
+    }
+    let out = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+    let report = serve_stream(Cursor::new(input), out.clone(), cfg).expect("serve_stream");
+    let bytes = out.0.lock().unwrap().clone();
+    let mut cur = Cursor::new(bytes);
+    let mut responses = Vec::new();
+    while let Some(frame) = read_frame(&mut cur).expect("well-framed responses") {
+        let text = String::from_utf8(frame).expect("utf-8 responses");
+        responses.push(parse_response(&text).expect("parseable responses"));
+    }
+    (report, responses)
+}
+
+fn req(id: u64, tenant: &str, seed: u64, rtol: f64) -> Vec<u8> {
+    format!(
+        "-tenant {tenant} -id {id} -case saltfinger-pressure -scale 0.003 \
+         -ksp_type cg-fused -rtol {rtol:e} -seed {seed}"
+    )
+    .into_bytes()
+}
+
+fn by_id(rs: &[Response], id: u64) -> &Response {
+    rs.iter()
+        .find(|r| r.id == id)
+        .unwrap_or_else(|| panic!("no response for id {id} in {rs:?}"))
+}
+
+/// The solo baseline the daemon must match bitwise: same case, scale,
+/// solver, tolerance and seeded RHS through the plain runner.
+fn solo_history(seed: u64, rtol: f64, ranks: usize, threads: usize) -> Vec<u64> {
+    let mut cfg = HybridConfig::default_for(TestCase::SaltPressure, 0.003, ranks, threads);
+    cfg.ksp_type = "cg-fused".into();
+    cfg.pc_type = "jacobi".into();
+    cfg.ksp.rtol = rtol;
+    cfg.ksp.monitor = true;
+    cfg.rhs_seed = Some(seed);
+    let rep = run_case(&cfg).expect("solo baseline");
+    assert!(rep.converged, "solo baseline must converge");
+    assert!(!rep.history.is_empty(), "monitor must record the history");
+    rep.history.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn served_history_is_bitwise_identical_to_solo_across_decompositions() {
+    // Two tenants with different seeds AND different tolerances coalesce
+    // into one width-2 solve_multi. Each column must reproduce, bit for
+    // bit, the history of its own solo run — co-batching is invisible —
+    // and the daemon must produce the same bits on every rank×thread
+    // decomposition of 4 cores.
+    let base1 = solo_history(1, 1e-8, 2, 2);
+    let base2 = solo_history(2, 1e-6, 2, 2);
+    for (ranks, threads) in [(1usize, 4usize), (2, 2), (4, 1)] {
+        let cfg = ServeConfig {
+            ranks,
+            threads,
+            width: 2,
+            deadline_ms: 5_000, // EOF ships the group; never waited out
+            ..ServeConfig::default()
+        };
+        let (report, responses) =
+            run_serve(&[req(1, "alice", 1, 1e-8), req(2, "bob", 2, 1e-6)], &cfg);
+        assert_eq!(report.served, 2, "{ranks}x{threads}");
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.widths, vec![2], "both requests in one batch");
+        for (id, base) in [(1u64, &base1), (2, &base2)] {
+            let r = by_id(&responses, id);
+            assert!(r.ok && r.converged, "{ranks}x{threads} id {id}: {r:?}");
+            assert_eq!(r.width, 2);
+            assert_eq!(
+                r.setup_count, 1,
+                "warm entry must have set up exactly once"
+            );
+            let got: Vec<u64> = r.history.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                &got, base,
+                "{ranks}x{threads} id {id}: served history must be bitwise \
+                 identical to the solo run"
+            );
+        }
+        assert_eq!(by_id(&responses, 1).tenant, "alice");
+        assert_eq!(by_id(&responses, 2).tenant, "bob");
+    }
+}
+
+#[test]
+fn repeat_requests_reuse_the_warm_solver_with_zero_resetup() {
+    // width 1: every request is its own batch against the same operator.
+    // The first misses and builds; the rest hit the warm entry; nobody
+    // ever re-runs KSPSetUp.
+    let cfg = ServeConfig {
+        ranks: 2,
+        threads: 2,
+        width: 1,
+        deadline_ms: 1,
+        ..ServeConfig::default()
+    };
+    let reqs: Vec<Vec<u8>> = (1..=3).map(|i| req(i, "alice", i, 1e-8)).collect();
+    let (report, responses) = run_serve(&reqs, &cfg);
+    assert_eq!(report.served, 3);
+    assert_eq!(report.batches, 3);
+    assert_eq!(report.widths, vec![1, 1, 1]);
+    assert!(!by_id(&responses, 1).cache_hit, "first request builds");
+    assert!(by_id(&responses, 2).cache_hit, "second request is warm");
+    assert!(by_id(&responses, 3).cache_hit, "third request is warm");
+    for id in 1..=3 {
+        assert_eq!(
+            by_id(&responses, id).setup_count,
+            1,
+            "id {id}: a cache entry never re-runs KSPSetUp"
+        );
+    }
+    assert_eq!(report.cache_misses, 1);
+    assert_eq!(report.cache_hits, 2);
+    assert_eq!(report.cache_evictions, 0);
+    assert_eq!(report.setup_counts, vec![1], "one warm entry, set up once");
+}
+
+#[test]
+fn full_queue_yields_typed_backpressure_never_a_hang() {
+    // width 4 with a far-off deadline: the scheduler cannot ship while the
+    // stream is open, so admissions pile up. cap 2 → the third request is
+    // rejected at admission with a typed frame; the first two ship at EOF.
+    let cfg = ServeConfig {
+        ranks: 1,
+        threads: 2,
+        width: 4,
+        deadline_ms: 60_000,
+        queue_cap: 2,
+        ..ServeConfig::default()
+    };
+    let reqs: Vec<Vec<u8>> = (1..=3).map(|i| req(i, "alice", i, 1e-8)).collect();
+    let (report, responses) = run_serve(&reqs, &cfg);
+    let r3 = by_id(&responses, 3);
+    assert!(!r3.ok, "third request must be rejected: {r3:?}");
+    assert_eq!(r3.code, "backpressure");
+    assert!(r3.msg.contains("cap 2"), "{}", r3.msg);
+    assert!(by_id(&responses, 1).ok);
+    assert!(by_id(&responses, 2).ok);
+    assert_eq!(by_id(&responses, 1).width, 2, "survivors ship together at EOF");
+    assert_eq!(report.served, 2);
+    assert_eq!(report.rejected, 1);
+    let alice = &report.per_tenant["alice"];
+    assert_eq!((alice.served, alice.rejected), (2, 1));
+}
+
+#[test]
+fn invalid_requests_are_rejected_by_id_without_poisoning_batchmates() {
+    // id 2 carries a NaN tolerance — the up-front validation bugfix: it is
+    // rejected by id at decode, while ids 1 and 3 coalesce and solve. And
+    // id 1's bits must not care that its batchmate became id 3 instead of
+    // id 2: co-batching is invisible.
+    let base1 = solo_history(1, 1e-8, 2, 2);
+    let cfg = ServeConfig {
+        ranks: 2,
+        threads: 2,
+        width: 2,
+        deadline_ms: 5_000,
+        ..ServeConfig::default()
+    };
+    let bad = b"-tenant mallory -id 2 -rtol nan".to_vec();
+    let (report, responses) =
+        run_serve(&[req(1, "alice", 1, 1e-8), bad, req(3, "carol", 3, 1e-8)], &cfg);
+    let r2 = by_id(&responses, 2);
+    assert!(!r2.ok);
+    assert_eq!(r2.code, "invalid");
+    assert!(
+        r2.msg.contains("request id=2") && r2.msg.contains("rtol"),
+        "the rejection names the request and the field: {}",
+        r2.msg
+    );
+    for id in [1u64, 3] {
+        let r = by_id(&responses, id);
+        assert!(r.ok && r.converged, "id {id}: {r:?}");
+        assert_eq!(r.width, 2, "ids 1 and 3 coalesce");
+    }
+    let got: Vec<u64> = by_id(&responses, 1).history.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, base1, "id 1's bits are independent of its batchmate");
+    // A misspelled request option is likewise a typed by-id rejection
+    // (the serve-side `-options_left` discipline).
+    let bad_opt = b"-id 9 -rtoll 1e-8".to_vec();
+    let (report2, responses2) = run_serve(&[bad_opt], &cfg);
+    let r9 = by_id(&responses2, 9);
+    assert!(!r9.ok);
+    assert_eq!(r9.code, "invalid");
+    assert!(r9.msg.contains("-rtoll"), "{}", r9.msg);
+    assert_eq!((report2.served, report2.rejected), (0, 1));
+    assert_eq!((report.served, report.rejected), (2, 1));
+}
+
+#[test]
+fn lru_eviction_over_distinct_operators() {
+    // cache_cap 1 with two distinct operators (different scales → distinct
+    // fingerprints): [A, A, B, A] → miss, hit, miss+evict, miss+evict.
+    let cfg = ServeConfig {
+        ranks: 1,
+        threads: 2,
+        width: 1,
+        deadline_ms: 1,
+        cache_cap: 1,
+        ..ServeConfig::default()
+    };
+    let with_scale = |id: u64, scale: f64| -> Vec<u8> {
+        format!(
+            "-id {id} -case saltfinger-pressure -scale {scale} -ksp_type cg-fused \
+             -rtol 1e-8 -seed {id}"
+        )
+        .into_bytes()
+    };
+    let reqs = vec![
+        with_scale(1, 0.003),
+        with_scale(2, 0.003),
+        with_scale(3, 0.002),
+        with_scale(4, 0.003),
+    ];
+    let (report, responses) = run_serve(&reqs, &cfg);
+    assert_eq!(report.served, 4);
+    assert!(!by_id(&responses, 1).cache_hit);
+    assert!(by_id(&responses, 2).cache_hit);
+    assert!(!by_id(&responses, 3).cache_hit);
+    assert!(!by_id(&responses, 4).cache_hit, "operator A was evicted by B");
+    assert_eq!(report.cache_hits, 1);
+    assert_eq!(report.cache_misses, 3);
+    assert_eq!(report.cache_evictions, 2);
+    assert_eq!(report.setup_counts, vec![1]);
+    for id in 1..=4 {
+        assert!(by_id(&responses, id).converged, "id {id}");
+    }
+}
+
+#[test]
+fn protocol_violation_degrades_to_a_typed_frame_and_a_clean_drain() {
+    // Raw garbage instead of a frame: the length prefix claims 4 GiB. The
+    // daemon answers with a typed `protocol` error frame, stops reading
+    // that stream, and still drains cleanly (serve_stream returns).
+    let cfg = ServeConfig {
+        ranks: 1,
+        threads: 1,
+        width: 1,
+        deadline_ms: 1,
+        ..ServeConfig::default()
+    };
+    let out = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+    let report = serve_stream(
+        Cursor::new(vec![0xffu8, 0xff, 0xff, 0xff, 0x00]),
+        out.clone(),
+        &cfg,
+    )
+    .expect("a protocol violation must not kill the daemon");
+    let bytes = out.0.lock().unwrap().clone();
+    let mut cur = Cursor::new(bytes);
+    let frame = read_frame(&mut cur)
+        .expect("response is well-framed")
+        .expect("one response frame");
+    let r = parse_response(&String::from_utf8(frame).unwrap()).unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.code, "protocol");
+    assert_eq!((report.served, report.rejected, report.batches), (0, 1, 0));
+}
