@@ -1,0 +1,155 @@
+//! Newton solver bench: the SNES Bratu solve per rank×thread decomposition,
+//! analytic Jacobian vs JFNK (`-snes_mf`) vs lagged preconditioning
+//! (`-snes_lag_pc 3`). The metric is the SNESSolve wall time (assembly and
+//! setup excluded) and its reciprocal, Newton solves per second. Results go
+//! to stdout and `BENCH_newton.json` alongside the other CI bench artifacts.
+//!
+//! `cargo bench --bench bench_newton -- --cores 4 --scale 0.05 --repeats 3`
+
+use mmpetsc::bench::{JsonVal, Table};
+use mmpetsc::coordinator::newton::{run_newton_case, NewtonConfig};
+use mmpetsc::matgen::nonlinear::NonlinearCase;
+use mmpetsc::util::cli::Cli;
+
+/// The three Jacobian/PC modes the bench compares.
+const MODES: [&str; 3] = ["analytic", "mf", "lag3"];
+
+struct NewtonResult {
+    ranks: usize,
+    threads: usize,
+    mode: &'static str,
+    solve_seconds: f64,
+    newton_its: usize,
+    inner_its: usize,
+    pc_builds: u64,
+    rows: usize,
+}
+
+impl NewtonResult {
+    fn newton_solves_per_sec(&self) -> f64 {
+        1.0 / self.solve_seconds.max(1e-12)
+    }
+}
+
+fn run_point(
+    scale: f64,
+    lambda: f64,
+    ranks: usize,
+    threads: usize,
+    mode: &'static str,
+    repeats: usize,
+) -> NewtonResult {
+    let mut best: Option<NewtonResult> = None;
+    for _ in 0..repeats.max(1) {
+        let mut cfg = NewtonConfig::default_for(NonlinearCase::Bratu2D, scale, ranks, threads);
+        cfg.lambda = lambda;
+        cfg.snes.rtol = 1e-10;
+        match mode {
+            "mf" => cfg.snes.mf = true,
+            "lag3" => cfg.snes.lag_pc = 3,
+            _ => {}
+        }
+        let rep = run_newton_case(&cfg).expect("newton run");
+        assert!(rep.converged, "{mode} {ranks}×{threads} did not converge");
+        let r = NewtonResult {
+            ranks,
+            threads,
+            mode,
+            solve_seconds: rep.snes_time,
+            newton_its: rep.iterations,
+            inner_its: rep.inner_iterations,
+            pc_builds: rep.pc_builds,
+            rows: rep.rows,
+        };
+        let better = match &best {
+            None => true,
+            Some(b) => r.solve_seconds < b.solve_seconds,
+        };
+        if better {
+            best = Some(r);
+        }
+    }
+    best.expect("at least one repeat")
+}
+
+fn main() {
+    let args = Cli::new(
+        "bench_newton",
+        "SNES Bratu solve: analytic vs JFNK vs lagged-PC per decomposition",
+    )
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .opt("cores", Some("4"), "total cores to factor into rank×thread grids")
+    .opt("scale", Some("0.05"), "grid scale for the 2D Bratu case")
+    .opt("lambda", Some("5.0"), "Bratu λ (coupling λ·0.03)")
+    .opt("repeats", Some("3"), "runs per point (best wall time kept)")
+    .opt("out", Some("BENCH_newton.json"), "output JSON path")
+    .parse_env();
+    let cores = args.get_usize("cores").unwrap().max(1);
+    let scale = args.get_f64("scale").unwrap();
+    let lambda = args.get_f64("lambda").unwrap();
+    let repeats = args.get_usize("repeats").unwrap().max(1);
+    let out_path = args.get_or("out", "BENCH_newton.json");
+
+    let decomps: Vec<(usize, usize)> = (1..=cores)
+        .filter(|r| cores % r == 0)
+        .map(|r| (r, cores / r))
+        .collect();
+
+    let mut results = Vec::new();
+    for &(r, t) in &decomps {
+        for mode in MODES {
+            results.push(run_point(scale, lambda, r, t, mode, repeats));
+        }
+    }
+
+    let rows = results.first().map(|c| c.rows).unwrap_or(0);
+    let title = format!(
+        "SNES Bratu λ={lambda} — scale {scale}, {rows} rows, {cores} cores, best of {repeats}"
+    );
+    let mut t = Table::new(
+        &title,
+        &["ranks×threads", "mode", "its", "inner", "pc_builds", "SNESSolve (s)", "solves/s"],
+    );
+    for c in &results {
+        t.row(&[
+            format!("{}×{}", c.ranks, c.threads),
+            c.mode.to_string(),
+            c.newton_its.to_string(),
+            c.inner_its.to_string(),
+            c.pc_builds.to_string(),
+            format!("{:.6}", c.solve_seconds),
+            format!("{:.2}", c.newton_solves_per_sec()),
+        ]);
+    }
+    t.print();
+
+    let configs: Vec<(String, JsonVal)> = results
+        .iter()
+        .map(|c| {
+            (
+                format!("r{}t{}_{}", c.ranks, c.threads, c.mode),
+                JsonVal::obj(vec![
+                    ("ranks", JsonVal::Int(c.ranks as u64)),
+                    ("threads", JsonVal::Int(c.threads as u64)),
+                    ("mode", JsonVal::Str(c.mode.into())),
+                    ("newton_its", JsonVal::Int(c.newton_its as u64)),
+                    ("inner_its", JsonVal::Int(c.inner_its as u64)),
+                    ("pc_builds", JsonVal::Int(c.pc_builds)),
+                    ("solve_seconds", JsonVal::Num(c.solve_seconds)),
+                    ("newton_solves_per_sec", JsonVal::Num(c.newton_solves_per_sec())),
+                ]),
+            )
+        })
+        .collect();
+    let json = JsonVal::Obj(vec![
+        ("bench".to_string(), JsonVal::Str("newton".into())),
+        ("case".to_string(), JsonVal::Str("bratu2d".into())),
+        ("lambda".to_string(), JsonVal::Num(lambda)),
+        ("cores".to_string(), JsonVal::Int(cores as u64)),
+        ("rows".to_string(), JsonVal::Int(rows as u64)),
+        ("repeats".to_string(), JsonVal::Int(repeats as u64)),
+        ("configs".to_string(), JsonVal::Obj(configs)),
+    ]);
+    std::fs::write(&out_path, json.render() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -4,12 +4,14 @@
 
 pub mod batch;
 pub mod logging;
+pub mod newton;
 pub mod options;
 pub mod runner;
 pub mod serve;
 
 pub use batch::{run_batch_case, BatchConfig, BatchReport, BatchRequest};
 pub use logging::EventLog;
+pub use newton::{run_newton_case, NewtonConfig, NewtonReport};
 pub use options::Options;
 pub use runner::{HybridConfig, HybridReport, run_case};
 pub use serve::{serve_stream, serve_unix, ServeConfig, ServeReport};

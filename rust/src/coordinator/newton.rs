@@ -1,0 +1,385 @@
+//! The Newton run harness (`mmpetsc newton`): configure ranks × threads,
+//! assemble a nonlinear test problem from [`crate::matgen::nonlinear`],
+//! solve it through the [`crate::snes`] layer, and report the Newton ‖F‖
+//! history plus the lagged-PC and JFNK counters.
+//!
+//! The structural twin of [`super::runner::run_case`], with one deliberate
+//! difference: the layout is **always** slot-aligned and the operator is
+//! **always** hybrid-enabled (except the degenerate 1×1 decomposition) —
+//! the residual's own `A·u` actions feed the Newton history, so they must
+//! come from the slot-segmented MatMult for the history to be bitwise
+//! identical across rank×thread factorizations of the same core count,
+//! regardless of which inner Krylov method is selected.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::endpoint::Comm;
+use crate::comm::fault::FaultPlan;
+use crate::comm::stats::CommStatsSnapshot;
+use crate::comm::world::World;
+use crate::error::Result;
+use crate::ksp::KspConfig;
+use crate::matgen::nonlinear::{
+    bratu_term, initial_field, source_field, NonlinearCase, BRATU_C,
+};
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::snes::ts::{run_theta, TsConfig};
+use crate::snes::{Snes, SnesConfig, SnesConvergedReason};
+use crate::topology::affinity::{AffinityPolicy, Placement};
+use crate::topology::machine::MachineTopology;
+use crate::vec::ctx::ThreadCtx;
+use crate::vec::mpi::{Layout, VecMPI};
+
+/// Configuration of one Newton (or θ-stepped Newton) run.
+#[derive(Clone)]
+pub struct NewtonConfig {
+    pub case: NonlinearCase,
+    /// Bratu parameter λ (the coupling is `λ·BRATU_C`; Bratu cases only).
+    pub lambda: f64,
+    /// Reaction strength σ (reaction–diffusion case only).
+    pub sigma: f64,
+    /// θ-method controls (reaction–diffusion case only).
+    pub ts: TsConfig,
+    pub scale: f64,
+    pub ranks: usize,
+    pub threads: usize,
+    /// Inner Krylov method. `cg-fused` (the default) is the one family
+    /// whose own reductions are slot-ordered — any other choice converges
+    /// but forfeits the cross-decomposition bitwise contract.
+    pub ksp_type: String,
+    pub pc_type: String,
+    pub snes: SnesConfig,
+    /// Inner-KSP tolerances; the Bratu path applies this verbatim (the
+    /// TS driver keeps the SNES layer's tight baseline).
+    pub ksp: KspConfig,
+    pub node: MachineTopology,
+    pub policy: AffinityPolicy,
+    pub pin: bool,
+    /// Armed fault plan (chaos harness). `None` keeps the fault layer on
+    /// its zero-cost disarmed path.
+    pub fault: Option<Arc<FaultPlan>>,
+    pub perf: crate::perf::PerfConfig,
+}
+
+impl NewtonConfig {
+    pub fn default_for(
+        case: NonlinearCase,
+        scale: f64,
+        ranks: usize,
+        threads: usize,
+    ) -> NewtonConfig {
+        NewtonConfig {
+            case,
+            lambda: 5.0,
+            sigma: 1.0,
+            ts: TsConfig::default(),
+            scale,
+            ranks,
+            threads,
+            ksp_type: "cg-fused".into(),
+            pc_type: "jacobi".into(),
+            snes: SnesConfig::default(),
+            ksp: KspConfig { rtol: 1e-10, mat_type: "aij".into(), ..KspConfig::default() },
+            node: crate::topology::presets::hector_xe6_node(),
+            policy: AffinityPolicy::UmaPerRank,
+            pin: false,
+            fault: None,
+            perf: crate::perf::PerfConfig::default(),
+        }
+    }
+}
+
+/// Aggregated result of one Newton run.
+#[derive(Debug, Clone)]
+pub struct NewtonReport {
+    pub converged: bool,
+    /// Rank 0's typed reason (`None` for the TS driver, which reports
+    /// per-step outcomes through `ts_newton_its` and errors on divergence).
+    pub reason: Option<SnesConvergedReason>,
+    /// Newton steps: the single solve's count, or the total across TS steps.
+    pub iterations: usize,
+    pub final_fnorm: f64,
+    /// Rank 0's ‖F‖ history (first TS step's history for the TS driver) —
+    /// every rank computes the identical slot-ordered values, so one copy
+    /// represents the job; the decomposition-invariance goldens compare it
+    /// bitwise across rank×thread sweeps.
+    pub fnorm_history: Vec<f64>,
+    /// Total inner Krylov iterations.
+    pub inner_iterations: usize,
+    /// Inner-PC builds — the lagged-PC contract pins this to
+    /// `⌈iterations / lag_pc⌉` for a single Newton solve.
+    pub pc_builds: u64,
+    pub fn_evals: u64,
+    pub jac_evals: u64,
+    /// Matrix-free FD actions (0 unless `-snes_mf`).
+    pub mf_mults: u64,
+    pub rows: usize,
+    pub nnz: usize,
+    /// Newton iterations per time step (TS driver only; else empty).
+    pub ts_newton_its: Vec<usize>,
+    /// Sum of point-to-point messages across ranks.
+    pub messages: u64,
+    pub bytes: u64,
+    /// Max across ranks of the SNESSolve (or whole TS run) wall time.
+    pub snes_time: f64,
+    pub perf: Vec<crate::perf::PerfSnapshot>,
+    pub wall_seconds: f64,
+}
+
+/// Per-rank result carried out of the SPMD region.
+struct RankOutcome {
+    reason: Option<SnesConvergedReason>,
+    converged: bool,
+    iterations: usize,
+    final_fnorm: f64,
+    history: Vec<f64>,
+    inner_iterations: usize,
+    pc_builds: u64,
+    fn_evals: u64,
+    jac_evals: u64,
+    mf_mults: u64,
+    rows: usize,
+    nnz: usize,
+    ts_its: Vec<usize>,
+    snes_time: f64,
+    perf: Option<crate::perf::PerfSnapshot>,
+}
+
+/// Run one Newton case (collective: spawns `ranks` rank-threads, each with
+/// a `threads`-wide pool).
+pub fn run_newton_case(cfg: &NewtonConfig) -> Result<NewtonReport> {
+    let placement = Placement::compute(&cfg.node, cfg.ranks, cfg.threads, &cfg.policy)?;
+    let cfg = Arc::new(cfg.clone());
+    let placement = Arc::new(placement);
+
+    let nranks = cfg.ranks.max(1);
+    let fault = cfg.fault.clone();
+    let perf_epoch = std::time::Instant::now();
+    let t_wall = std::time::Instant::now();
+    let (outcomes, comm_stats): (Vec<Result<RankOutcome>>, Vec<CommStatsSnapshot>) = {
+        let cfg = Arc::clone(&cfg);
+        let body = move |mut comm: Comm| -> Result<RankOutcome> {
+            let rank = comm.rank();
+            let ctx = if cfg.pin {
+                ThreadCtx::pinned(&cfg.node, &placement.cores[rank])
+            } else {
+                ThreadCtx::new(cfg.threads)
+            };
+            if cfg.perf.enabled() {
+                ctx.install_perf(Arc::new(crate::perf::PerfLog::new(
+                    rank,
+                    cfg.threads.max(1),
+                    perf_epoch,
+                    cfg.perf.trace.is_some(),
+                )));
+            }
+
+            // Slot-aligned always: the Newton residual itself multiplies by
+            // A, so the slot grid (not just the inner Krylov's) decides
+            // whether the ‖F‖ history is decomposition-invariant.
+            let spec = cfg.case.grid(cfg.scale);
+            let n = spec.rows();
+            let layout = Layout::slot_aligned(n, comm.size(), cfg.threads.max(1));
+            let (lo, hi) = layout.range(rank);
+            let entries = cfg.case.linear_rows(cfg.scale, lo, hi);
+            let mut a = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                entries.clone(),
+                &mut comm,
+                ctx.clone(),
+            )?;
+            if !(comm.size() == 1 && cfg.threads <= 1) {
+                // Before any residual evaluation — see the module docs. The
+                // degenerate 1×1 decomposition stays on the plain kernels
+                // (its slot-grid group has no other member).
+                let _ = a.enable_hybrid();
+            }
+            let rows = a.global_rows();
+            let nnz = a.diag_block().nnz() + a.offdiag_block().nnz();
+
+            // A's diagonal: both nonlinear Jacobians are A plus a moving
+            // diagonal, refreshed through update_diagonal.
+            let adiag: Vec<f64> = {
+                let mut d = VecMPI::new(layout.clone(), rank, ctx.clone());
+                a.get_diagonal(&mut d)?;
+                d.local().as_slice().to_vec()
+            };
+
+            if cfg.case == NonlinearCase::ReactionDiffusion2D {
+                // θ-stepped Newton through the TS driver.
+                let source = VecMPI::from_local_slice(
+                    layout.clone(),
+                    rank,
+                    &source_field(lo, hi),
+                    ctx.clone(),
+                )?;
+                let mut u = VecMPI::from_local_slice(
+                    layout.clone(),
+                    rank,
+                    &initial_field(lo, hi),
+                    ctx.clone(),
+                )?;
+                let t0 = Instant::now();
+                let rep = run_theta(
+                    &mut a,
+                    &entries,
+                    cfg.sigma,
+                    &source,
+                    &mut u,
+                    &cfg.ts,
+                    &cfg.snes,
+                    &cfg.ksp_type,
+                    &cfg.pc_type,
+                    &mut comm,
+                )?;
+                let snes_time = t0.elapsed().as_secs_f64();
+                let history = rep.fnorm_histories.first().cloned().unwrap_or_default();
+                let final_fnorm = rep
+                    .fnorm_histories
+                    .last()
+                    .and_then(|h| h.last())
+                    .copied()
+                    .unwrap_or(0.0);
+                return Ok(RankOutcome {
+                    reason: None,
+                    converged: true, // run_theta errors on any divergent step
+                    iterations: rep.newton_its.iter().sum(),
+                    final_fnorm,
+                    history,
+                    inner_iterations: rep.inner_iterations,
+                    pc_builds: rep.pc_builds,
+                    fn_evals: rep.fn_evals,
+                    jac_evals: rep.jac_evals,
+                    mf_mults: 0,
+                    rows,
+                    nnz,
+                    ts_its: rep.newton_its,
+                    snes_time,
+                    perf: ctx.perf().map(|p| p.snapshot()),
+                });
+            }
+
+            // Bratu: F(u) = A·u − λc·eᵘ, J(u) = A − λc·diag(eᵘ). The
+            // Jacobian is a second assembly of A's triplets whose diagonal
+            // the refresh callback rewrites in place each Newton step.
+            let lam_c = cfg.lambda * BRATU_C;
+            let jmat = MatMPIAIJ::assemble(
+                layout.clone(),
+                layout.clone(),
+                entries,
+                &mut comm,
+                ctx.clone(),
+            )?;
+
+            let mut u = VecMPI::new(layout.clone(), rank, ctx.clone());
+            let mut snes = Snes::create(&comm);
+            snes.set_config(cfg.snes.clone());
+            snes.set_ksp_type(&cfg.ksp_type)?;
+            snes.set_pc(&cfg.pc_type);
+            *snes.ksp_config_mut() = cfg.ksp.clone();
+
+            let ar = &mut a;
+            snes.set_function(move |v, g, cm| {
+                ar.mult(v, g, cm)?;
+                let vs = v.local().as_slice();
+                let gs = g.local_mut().as_mut_slice();
+                for i in 0..gs.len() {
+                    gs[i] += bratu_term(lam_c, vs[i]).0;
+                }
+                Ok(())
+            });
+            let ad = adiag;
+            snes.set_jacobian(jmat, move |v, m, _cm| {
+                let mut d =
+                    VecMPI::new(m.row_layout().clone(), m.rank(), m.diag_block().ctx().clone());
+                {
+                    let vs = v.local().as_slice();
+                    let ds = d.local_mut().as_mut_slice();
+                    for i in 0..ds.len() {
+                        ds[i] = ad[i] + bratu_term(lam_c, vs[i]).1;
+                    }
+                }
+                m.update_diagonal(&d)
+            });
+
+            let t0 = Instant::now();
+            let stats = snes.solve(&mut u, &mut comm)?;
+            let snes_time = t0.elapsed().as_secs_f64();
+            drop(snes);
+
+            Ok(RankOutcome {
+                reason: Some(stats.reason),
+                converged: stats.converged(),
+                iterations: stats.iterations,
+                final_fnorm: stats.final_fnorm,
+                history: stats.fnorm_history,
+                inner_iterations: stats.inner_iterations,
+                pc_builds: stats.pc_builds,
+                fn_evals: stats.fn_evals,
+                jac_evals: stats.jac_evals,
+                mf_mults: stats.mf_mults,
+                rows,
+                nnz,
+                ts_its: Vec::new(),
+                snes_time,
+                perf: ctx.perf().map(|p| p.snapshot()),
+            })
+        };
+        match fault {
+            Some(plan) => World::run_with_fault_stats(nranks, plan, body),
+            None => World::run_with_stats(nranks, body),
+        }
+    };
+
+    let mut report = NewtonReport {
+        converged: true,
+        reason: None,
+        iterations: 0,
+        final_fnorm: 0.0,
+        fnorm_history: Vec::new(),
+        inner_iterations: 0,
+        pc_builds: 0,
+        fn_evals: 0,
+        jac_evals: 0,
+        mf_mults: 0,
+        rows: 0,
+        nnz: 0,
+        ts_newton_its: Vec::new(),
+        messages: 0,
+        bytes: 0,
+        snes_time: 0.0,
+        perf: Vec::new(),
+        wall_seconds: t_wall.elapsed().as_secs_f64(),
+    };
+    for (r, o) in outcomes.into_iter().enumerate() {
+        let o = o?;
+        report.converged &= o.converged;
+        report.iterations = report.iterations.max(o.iterations);
+        report.snes_time = report.snes_time.max(o.snes_time);
+        report.rows = o.rows;
+        report.nnz += o.nnz;
+        if r == 0 {
+            report.reason = o.reason;
+            report.final_fnorm = o.final_fnorm;
+            report.fnorm_history = o.history;
+            // Counters are identical on every rank (the schedule is
+            // collective); rank 0's copy represents the job.
+            report.inner_iterations = o.inner_iterations;
+            report.pc_builds = o.pc_builds;
+            report.fn_evals = o.fn_evals;
+            report.jac_evals = o.jac_evals;
+            report.mf_mults = o.mf_mults;
+            report.ts_newton_its = o.ts_its;
+        }
+        if let Some(s) = o.perf {
+            report.perf.push(s);
+        }
+    }
+    for s in comm_stats {
+        report.messages += s.sends;
+        report.bytes += s.bytes_sent;
+    }
+    Ok(report)
+}

@@ -181,6 +181,34 @@ impl Options {
         })
     }
 
+    /// Extract a [`crate::snes::SnesConfig`] from `-snes_rtol/-snes_atol/
+    /// -snes_stol/-snes_max_it/-snes_lag_pc/-snes_linesearch_type/-snes_mf/
+    /// -snes_monitor`, with typed [`Error::InvalidOption`] on malformed
+    /// values. A misspelled option (`-snes_rtoll`) stays unconsumed and is
+    /// caught by [`Options::check_options_left`].
+    pub fn snes_config(&self) -> Result<crate::snes::SnesConfig> {
+        let base = crate::snes::SnesConfig::default();
+        let lag_pc = self.usize_or("snes_lag_pc", base.lag_pc)?;
+        if lag_pc == 0 {
+            return Err(Error::InvalidOption(
+                "-snes_lag_pc: must be ≥ 1 (1 = rebuild every step)".into(),
+            ));
+        }
+        Ok(crate::snes::SnesConfig {
+            rtol: self.f64_or("snes_rtol", base.rtol)?,
+            atol: self.f64_or("snes_atol", base.atol)?,
+            stol: self.f64_or("snes_stol", base.stol)?,
+            max_it: self.usize_or("snes_max_it", base.max_it)?,
+            lag_pc,
+            linesearch: match self.get("snes_linesearch_type") {
+                None => base.linesearch,
+                Some(v) => crate::snes::LineSearchType::from_name(v)?,
+            },
+            mf: self.flag("snes_mf"),
+            monitor: self.flag("snes_monitor"),
+        })
+    }
+
     /// Extract a [`crate::perf::PerfConfig`] from `-log_view` /
     /// `-log_trace <path>`. Default (neither given) is the disarmed
     /// config: no `PerfLog` is installed and every instrumentation site
@@ -364,6 +392,54 @@ mod tests {
         assert!(c.monitor, "base monitor survives without -ksp_monitor");
         assert_eq!(c.rtol, 1e-4, "base rtol survives without -ksp_rtol");
         assert_eq!(c.max_it, 7, "given options still override");
+    }
+
+    #[test]
+    fn snes_config_extraction() {
+        let o = Options::parse_str(
+            "-snes_rtol 1e-12 -snes_max_it 7 -snes_lag_pc 3 -snes_linesearch_type basic -snes_mf",
+        )
+        .unwrap();
+        let c = o.snes_config().unwrap();
+        assert_eq!(c.rtol, 1e-12);
+        assert_eq!(c.max_it, 7);
+        assert_eq!(c.lag_pc, 3);
+        assert_eq!(c.linesearch, crate::snes::LineSearchType::Basic);
+        assert!(c.mf);
+        assert!(!c.monitor);
+        // defaults
+        let d = Options::parse_str("").unwrap().snes_config().unwrap();
+        assert_eq!(d.rtol, 1e-8);
+        assert_eq!(d.lag_pc, 1);
+        assert_eq!(d.linesearch, crate::snes::LineSearchType::Bt);
+    }
+
+    #[test]
+    fn snes_config_rejects_malformed_with_typed_errors() {
+        for bad in [
+            "-snes_rtol tight",
+            "-snes_max_it many",
+            "-snes_lag_pc 0",
+            "-snes_linesearch_type newton",
+        ] {
+            let o = Options::parse_str(bad).unwrap();
+            match o.snes_config() {
+                Err(Error::InvalidOption(_)) => {}
+                other => panic!("{bad}: expected InvalidOption, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn snes_misspelling_is_caught_by_options_left() {
+        // `-snes_rtoll` must not silently vanish: snes_config leaves it
+        // unconsumed and error-mode options_left turns it into a typed error.
+        let o = Options::parse_str("-options_left error -snes_rtoll 1e-9").unwrap();
+        let _ = o.snes_config().unwrap();
+        match o.check_options_left().unwrap_err() {
+            Error::InvalidOption(msg) => assert!(msg.contains("-snes_rtoll"), "{msg}"),
+            other => panic!("want InvalidOption, got {other}"),
+        }
     }
 
     #[test]

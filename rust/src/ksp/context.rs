@@ -239,6 +239,48 @@ impl<'a> Ksp<'a> {
         self.a.take()
     }
 
+    /// Mutate the attached operator's *values* in place while keeping every
+    /// piece of cached setup — hybrid plan, built PC, fused classification,
+    /// spectral bounds, format pick — exactly as it is. This is the SNES
+    /// lagged-preconditioning path (`-snes_lag_pc N`): the Jacobian values
+    /// move every Newton step, but the PC built against an earlier iterate
+    /// stays attached until [`Ksp::rebuild_pc`] expires it.
+    ///
+    /// The closure must change stored values only (e.g.
+    /// [`MatMPIAIJ::update_diagonal`]), never structure. Restricted to the
+    /// plain `aij` local store: SELL/BAIJ stores hold converted value copies
+    /// that a CSR-side write would silently desync, so those come back as a
+    /// typed `Unsupported` error (`-mat_type aij` is the supported mode).
+    pub fn update_operator_values(
+        &mut self,
+        f: impl FnOnce(&mut MatMPIAIJ) -> Result<()>,
+    ) -> Result<()> {
+        let a = self.a.as_deref_mut().ok_or_else(|| {
+            Error::not_ready("KSPUpdateOperatorValues: call set_operators first")
+        })?;
+        if a.local_format() != "aij" {
+            return Err(Error::Unsupported(format!(
+                "KSPUpdateOperatorValues: local format '{}' holds converted value copies; \
+                 use -mat_type aij",
+                a.local_format()
+            )));
+        }
+        f(a)
+    }
+
+    /// Expire the preconditioner-derived caches — PC, fused classification,
+    /// spectral bounds — while keeping the operator borrow (and its Mat-side
+    /// hybrid plan). The next `set_up`/`solve` rebuilds the PC against the
+    /// operator's *current* values and bumps [`Ksp::setup_count`]; until
+    /// then, solves keep applying the stale (lagged) PC. This is the
+    /// lag-expiry step of `-snes_lag_pc`.
+    pub fn rebuild_pc(&mut self) {
+        self.pc = None;
+        self.pc_fusable = None;
+        self.bounds = None;
+        self.set_up_done = false;
+    }
+
     /// `KSPSetType`: select the method by registry name. Errors list the
     /// full [`KSP_NAMES`] table. Re-setting the current name is a no-op
     /// (so re-applying the same options on a live object keeps the cache);
@@ -777,6 +819,57 @@ mod tests {
             ksp.set_pc("none");
             assert_eq!(ksp.bounds(), Some(b3));
             assert!(ksp.is_set_up());
+        });
+    }
+
+    #[test]
+    fn update_values_keeps_setup_and_rebuild_pc_expires_it() {
+        World::run(1, |mut c| {
+            let (mut a, b) = tridiag_system(32, 1.0, 2, &mut c);
+            let mut ksp = Ksp::create(&c);
+            ksp.set_type("cg").unwrap();
+            ksp.set_pc("jacobi");
+            ksp.set_operators(&mut a);
+            ksp.set_up(&mut c).unwrap();
+            assert_eq!(ksp.setup_count(), 1);
+            // In-place value mutation: cached setup (and count) survive.
+            ksp.update_operator_values(|m| {
+                let mut d = VecMPI::new(m.row_layout().clone(), 0, m.diag_block().ctx().clone());
+                m.get_diagonal(&mut d)?;
+                d.scale(1.5);
+                m.update_diagonal(&d)
+            })
+            .unwrap();
+            assert!(ksp.is_set_up(), "value update must not invalidate setup");
+            assert_eq!(ksp.setup_count(), 1);
+            let mut x = b.duplicate();
+            x.zero();
+            assert!(ksp.solve(&b, &mut x, &mut c).unwrap().converged());
+            assert_eq!(ksp.setup_count(), 1, "lagged solve must not re-set-up");
+            // rebuild_pc expires the PC: exactly one new setup on next solve.
+            ksp.rebuild_pc();
+            assert!(!ksp.is_set_up());
+            x.zero();
+            assert!(ksp.solve(&b, &mut x, &mut c).unwrap().converged());
+            assert_eq!(ksp.setup_count(), 2);
+        });
+    }
+
+    #[test]
+    fn update_values_rejects_converted_local_formats() {
+        World::run(1, |mut c| {
+            let (mut a, _b) = tridiag_system(32, 1.0, 2, &mut c);
+            let mut ksp = Ksp::create(&c);
+            ksp.set_type("cg").unwrap();
+            ksp.set_pc("none");
+            ksp.config_mut().mat_type = "sell".into();
+            ksp.set_operators(&mut a);
+            ksp.set_up(&mut c).unwrap();
+            let err = ksp.update_operator_values(|_m| Ok(())).unwrap_err();
+            assert!(
+                matches!(err, Error::Unsupported(_)),
+                "expected Unsupported, got {err:?}"
+            );
         });
     }
 

@@ -23,6 +23,8 @@
 //! - [`vec`], [`mat`] — the threaded PETSc Vec/Mat classes (Seq + MPI),
 //!   VecScatter, assembly.
 //! - [`ksp`], [`pc`] — Krylov methods and preconditioners.
+//! - [`snes`] — Newton nonlinear solvers (line searches, JFNK, lagged
+//!   preconditioning) and the θ-method time stepper.
 //! - [`reorder`] — Reverse Cuthill-McKee and sparsity diagnostics.
 //! - [`matgen`] — Fluidity-like benchmark matrix generators (Table 6).
 //! - [`io`] — PETSc binary and MatrixMarket formats.
@@ -51,6 +53,7 @@ pub mod matgen;
 pub mod io;
 pub mod ksp;
 pub mod pc;
+pub mod snes;
 pub mod perf;
 pub mod sim;
 pub mod coordinator;

@@ -33,11 +33,13 @@ use std::time::Instant;
 use mmpetsc::bench::Table;
 use mmpetsc::comm::fault::FaultPlan;
 use mmpetsc::coordinator::batch::{run_batch_case, BatchConfig};
+use mmpetsc::coordinator::newton::{run_newton_case, NewtonConfig};
 use mmpetsc::coordinator::options::Options;
 use mmpetsc::coordinator::runner::{run_case, HybridConfig};
 use mmpetsc::coordinator::serve::{serve_stream, serve_unix, ServeConfig};
 use mmpetsc::error::{Error, Result};
 use mmpetsc::matgen::cases::TestCase;
+use mmpetsc::matgen::nonlinear::NonlinearCase;
 use mmpetsc::perf::view::PerfReport;
 use mmpetsc::perf::{PerfConfig, PerfSnapshot};
 use mmpetsc::sim::exec::{simulate, SimConfig};
@@ -46,11 +48,24 @@ use mmpetsc::topology::presets::{hector_xe6, hector_xe6_node, HECTOR_PHASES};
 use mmpetsc::util::cli::Cli;
 use mmpetsc::util::human;
 
+/// The command inventory — one line per subcommand, shown by `help` (exit
+/// 0) and echoed to stderr for an unknown subcommand (exit 1).
+const COMMANDS: &str = "mmpetsc — mixed-mode PETSc reproduction\n\n\
+     commands:\n  solve   run a real mixed-mode solve (ranks × threads in-process)\n  \
+     newton  Newton nonlinear solve through the SNES layer (Bratu, reaction-diffusion TS)\n  \
+     batch   serve a queue of RHS requests against one operator (solves/s)\n  \
+     serve   warm-Ksp solver daemon: framed requests on stdin/stdout or a unix socket\n  \
+     model   price a configuration at paper scale (mode=model)\n  \
+     fault   chaos harness: inject deterministic faults, assert typed degradation\n  \
+     info    modelled machine and test-case inventory\n\n\
+     `mmpetsc <command> --help` for options; see also examples/ and benches/.";
+
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     let result = match cmd.as_str() {
         "solve" => solve(&argv),
+        "newton" => newton(&argv),
         "batch" => batch(&argv),
         "serve" => serve(&argv),
         "model" => model(&argv),
@@ -59,18 +74,13 @@ fn main() {
             info();
             Ok(())
         }
-        _ => {
-            println!(
-                "mmpetsc — mixed-mode PETSc reproduction\n\n\
-                 commands:\n  solve   run a real mixed-mode solve (ranks × threads in-process)\n  \
-                 batch   serve a queue of RHS requests against one operator (solves/s)\n  \
-                 serve   warm-Ksp solver daemon: framed requests on stdin/stdout or a unix socket\n  \
-                 model   price a configuration at paper scale (mode=model)\n  \
-                 fault   chaos harness: inject deterministic faults, assert typed degradation\n  \
-                 info    modelled machine and test-case inventory\n\n\
-                 `mmpetsc <command> --help` for options; see also examples/ and benches/."
-            );
+        "help" | "--help" | "-h" => {
+            println!("{COMMANDS}");
             Ok(())
+        }
+        other => {
+            eprintln!("{COMMANDS}");
+            Err(Error::InvalidOption(format!("unknown command `{other}`")))
         }
     };
     if let Err(e) = result {
@@ -298,6 +308,99 @@ fn solve(argv: &[String]) -> Result<()> {
             rep.forks,
             rep.mat_format,
         );
+    }
+    Ok(())
+}
+
+/// `mmpetsc newton`: a Newton nonlinear solve (or θ-stepped Newton for the
+/// reaction–diffusion case) through the SNES layer. The `-snes_*` options
+/// ride the PETSc-style database: `-snes_rtol`, `-snes_max_it`,
+/// `-snes_lag_pc N`, `-snes_linesearch_type bt|basic`, `-snes_mf`,
+/// `-snes_monitor` — plus the inner solver's `-ksp_*` / `-pc_type` layered
+/// over the SNES baseline. The ‖F‖ history is printed as hex f64 bits so
+/// the CI smoke job can diff decompositions bitwise.
+fn newton(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("mmpetsc newton", "Newton nonlinear solve (SNES layer)")
+        .opt("case", Some("bratu2d"), "bratu2d|bratu3d|reaction-diffusion")
+        .opt("scale", Some("0.05"), "grid scale (1.0 ≈ 4096 unknowns)")
+        .opt("ranks", Some("2"), "simulated MPI ranks")
+        .opt("threads", Some("2"), "threads per rank")
+        .opt("lambda", Some("5.0"), "Bratu λ (coupling λ·0.03)")
+        .opt("sigma", Some("1.0"), "reaction strength σ (reaction-diffusion)")
+        .opt("dt", Some("0.1"), "time step Δt (reaction-diffusion)")
+        .opt("steps", Some("5"), "time steps (reaction-diffusion)")
+        .opt("theta", Some("1.0"), "θ-method: 1 backward Euler, 0.5 Crank-Nicolson");
+    let a = cli.parse(argv)?;
+    let opts = Options::parse(a.positional())?;
+    let perf = opts.perf_config();
+    let case_name = a.get_or("case", "bratu2d");
+    let case = NonlinearCase::from_name(&case_name)
+        .ok_or_else(|| Error::InvalidOption(format!("unknown nonlinear case `{case_name}`")))?;
+    let mut cfg = NewtonConfig::default_for(
+        case,
+        a.get_f64("scale")?,
+        a.get_usize("ranks")?,
+        a.get_usize("threads")?,
+    );
+    cfg.lambda = a.get_f64("lambda")?;
+    cfg.sigma = a.get_f64("sigma")?;
+    cfg.ts.dt = a.get_f64("dt")?;
+    cfg.ts.steps = a.get_usize("steps")?;
+    cfg.ts.theta = a.get_f64("theta")?;
+    cfg.snes = opts.snes_config()?;
+    if let Some(t) = opts.get("ksp_type") {
+        cfg.ksp_type = t.to_string();
+    }
+    cfg.pc_type = opts.pc_name(&cfg.pc_type);
+    cfg.ksp = opts.ksp_config_from(cfg.ksp.clone())?;
+    match cfg.ksp.mat_type.as_str() {
+        "aij" => {}
+        "auto" => cfg.ksp.mat_type = "aij".into(),
+        other => {
+            return Err(Error::Unsupported(format!(
+                "newton: -mat_type {other} holds converted value copies; \
+                 the Jacobian refresh requires aij"
+            )))
+        }
+    }
+    cfg.perf = perf.clone();
+    opts.check_options_left()?;
+
+    let rep = run_newton_case(&cfg)?;
+    println!(
+        "{} {}x{}: reason={} its={} inner={} pc_builds={} fn_evals={} |F|={:.3e} \
+         SNESSolve={} msgs={} bytes={}",
+        case.name(),
+        cfg.ranks,
+        cfg.threads,
+        rep.reason.map_or("TS_CONVERGED", |r| r.name()),
+        rep.iterations,
+        rep.inner_iterations,
+        rep.pc_builds,
+        rep.fn_evals,
+        rep.final_fnorm,
+        human::secs(rep.snes_time),
+        rep.messages,
+        human::bytes(rep.bytes as f64),
+    );
+    if !rep.ts_newton_its.is_empty() {
+        let its: Vec<String> = rep.ts_newton_its.iter().map(|i| i.to_string()).collect();
+        println!("ts: {} steps, newton its per step: {}", its.len(), its.join(","));
+    }
+    if cfg.snes.mf {
+        println!("mf: {} FD actions", rep.mf_mults);
+    }
+    // Hex f64 bits — the same encoding `solve -ksp_monitor` uses — so the
+    // CI newton-smoke job diffs decompositions bitwise from the shell.
+    let hex: Vec<String> =
+        rep.fnorm_history.iter().map(|v| format!("{:016x}", v.to_bits())).collect();
+    println!("fnorm history: {}", hex.join(","));
+    emit_perf(&perf, &rep.perf, rep.wall_seconds)?;
+    if !rep.converged {
+        return Err(Error::Diverged {
+            reason: rep.reason.map_or_else(|| "unknown".into(), |r| r.name().to_string()),
+            iterations: rep.iterations,
+        });
     }
     Ok(())
 }

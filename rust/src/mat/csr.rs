@@ -558,6 +558,33 @@ impl MatSeqAIJ {
         Ok(())
     }
 
+    /// Overwrite the stored diagonal entries with `d` (the SNES Jacobian
+    /// refresh path: structure is frozen at assembly, only values move).
+    /// Every diagonal position must already exist in the sparsity pattern —
+    /// a structurally missing diagonal is a typed error, not a silent skip.
+    pub fn set_diagonal(&mut self, d: &[f64]) -> Result<()> {
+        let n = self.rows.min(self.cols);
+        if d.len() != n {
+            return Err(Error::size_mismatch(format!(
+                "MatSetDiagonal: diag len {} vs n {}",
+                d.len(),
+                n
+            )));
+        }
+        for (i, &di) in d.iter().enumerate() {
+            let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            match self.col_idx[lo..hi].binary_search(&i) {
+                Ok(k) => self.vals[lo + k] = di,
+                Err(_) => {
+                    return Err(Error::NotReady(format!(
+                        "MatSetDiagonal: row {i} has no stored diagonal entry"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// MatScale: `A *= a` (threaded over the value array by row chunk).
     pub fn scale(&mut self, a: f64) {
         let part = self.partition.clone();

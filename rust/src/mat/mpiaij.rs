@@ -1156,6 +1156,36 @@ impl MatMPIAIJ {
         Ok(())
     }
 
+    /// Write-side counterpart of [`MatMPIAIJ::get_diagonal`]: overwrite the
+    /// stored diagonal values with `d`, leaving structure (and therefore any
+    /// cached scatter/plan) untouched. This is the SNES Jacobian-refresh hot
+    /// path for diagonal-only updates (reaction–diffusion time stepping).
+    ///
+    /// Requires a square layout (every diagonal entry inside the local
+    /// diagonal block) and the plain `aij` local store — SELL/BAIJ stores
+    /// hold converted value copies that a CSR-side write would desync, so
+    /// those come back as a typed `Unsupported` error.
+    pub fn update_diagonal(&mut self, d: &VecMPI) -> Result<()> {
+        if d.layout() != &self.row_layout {
+            return Err(Error::size_mismatch("MatUpdateDiagonal layout"));
+        }
+        if self.local_format() != "aij" {
+            return Err(Error::Unsupported(format!(
+                "MatUpdateDiagonal: local format '{}' holds converted value copies; use aij",
+                self.local_format()
+            )));
+        }
+        let (row_lo, row_hi) = self.row_layout.range(self.rank);
+        let (col_lo, col_hi) = self.col_layout.range(self.rank);
+        if row_lo != col_lo || row_hi != col_hi {
+            return Err(Error::Unsupported(
+                "MatUpdateDiagonal: requires a square layout (diagonal inside the local block)"
+                    .into(),
+            ));
+        }
+        self.a_diag.set_diagonal(d.local().as_slice())
+    }
+
     /// Global Frobenius norm (collective).
     pub fn norm_frobenius(&self, comm: &mut Comm) -> Result<f64> {
         let a = self.a_diag.norm_frobenius();

@@ -1,13 +1,31 @@
 //! `MatShell` — a matrix-free operator defined by a closure (PETSc's
-//! MATSHELL). Lets the KSP layer be tested against exact operators and lets
-//! the PJRT runtime expose an AOT-compiled SpMV as an operator.
+//! MATSHELL). Lets the KSP layer be tested against exact operators, lets the
+//! PJRT runtime expose an AOT-compiled SpMV as an operator, and carries the
+//! SNES finite-difference Jacobian action (JFNK).
+//!
+//! Contract (DESIGN.md §14):
+//!
+//! - **Typed errors, never panics.** Shape mismatches come back as
+//!   `Error::SizeMismatch`; the shell itself never asserts on data values.
+//! - **NaN propagation.** Non-finite entries in `x` flow through the closure
+//!   into `y` untouched — the shell neither scrubs nor rejects them. Callers
+//!   that must fail on non-finite data (the KSP convergence loop, the SNES
+//!   `DivergedFnormNaN` path) detect them in their own norms.
+//! - **Mult counting.** Every successful `mult` bumps an internal counter
+//!   (relaxed `AtomicU64`), so tests and the SNES JFNK path can assert how
+//!   many operator actions a solve consumed.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::comm::Comm;
 use crate::error::{Error, Result};
+use crate::vec::mpi::VecMPI;
 
 /// A matrix-free square operator `y = A·x` over plain slices.
 pub struct MatShell {
     n: usize,
     apply: Box<dyn Fn(&[f64], &mut [f64]) + Send + Sync>,
+    mults: AtomicU64,
 }
 
 impl MatShell {
@@ -15,11 +33,17 @@ impl MatShell {
         MatShell {
             n,
             apply: Box::new(apply),
+            mults: AtomicU64::new(0),
         }
     }
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Number of successful `mult` applications so far.
+    pub fn mult_count(&self) -> u64 {
+        self.mults.load(Ordering::Relaxed)
     }
 
     pub fn mult(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
@@ -32,13 +56,71 @@ impl MatShell {
             )));
         }
         (self.apply)(x, y);
+        self.mults.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 }
 
 impl std::fmt::Debug for MatShell {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "MatShell(n={})", self.n)
+        write!(f, "MatShell(n={}, mults={})", self.n, self.mult_count())
+    }
+}
+
+/// A distributed matrix-free operator `y = A·x` over `VecMPI`, with access to
+/// the rank's `Comm` so the action can perform collective work (ghost
+/// exchange, slot-ordered reductions). This is the SNES JFNK operator: the
+/// closure computes `J(u)·v ≈ (F(u+hv) − F(u))/h` and needs the communicator
+/// for the distributed residual evaluation and the deterministic `h` norms.
+///
+/// The closure is `FnMut` because the FD action mutates captured scratch
+/// vectors; consequently `mult` takes `&mut self`.
+pub struct MatShellMPI<'a> {
+    n_local: usize,
+    #[allow(clippy::type_complexity)]
+    apply: Box<dyn FnMut(&VecMPI, &mut VecMPI, &mut Comm) -> Result<()> + 'a>,
+    mults: u64,
+}
+
+impl<'a> MatShellMPI<'a> {
+    pub fn new(
+        n_local: usize,
+        apply: impl FnMut(&VecMPI, &mut VecMPI, &mut Comm) -> Result<()> + 'a,
+    ) -> MatShellMPI<'a> {
+        MatShellMPI {
+            n_local,
+            apply: Box::new(apply),
+            mults: 0,
+        }
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.n_local
+    }
+
+    /// Number of successful `mult` applications so far.
+    pub fn mult_count(&self) -> u64 {
+        self.mults
+    }
+
+    pub fn mult(&mut self, x: &VecMPI, y: &mut VecMPI, comm: &mut Comm) -> Result<()> {
+        if x.local().len() != self.n_local || y.local().len() != self.n_local {
+            return Err(Error::size_mismatch(format!(
+                "MatShellMPI: n_local={}, x={}, y={}",
+                self.n_local,
+                x.local().len(),
+                y.local().len()
+            )));
+        }
+        (self.apply)(x, y, comm)?;
+        self.mults += 1;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for MatShellMPI<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MatShellMPI(n_local={}, mults={})", self.n_local, self.mults)
     }
 }
 
@@ -55,9 +137,96 @@ mod tests {
     }
 
     #[test]
-    fn shape_checked() {
+    fn shape_checked_typed_error() {
         let id = MatShell::new(3, |x, y| y.copy_from_slice(x));
         let mut y = [0.0; 2];
-        assert!(id.mult(&[1.0; 3], &mut y).is_err());
+        match id.mult(&[1.0; 3], &mut y) {
+            Err(Error::SizeMismatch(_)) => {}
+            other => panic!("expected SizeMismatch, got {other:?}"),
+        }
+        // A failed mult must not count.
+        assert_eq!(id.mult_count(), 0);
+    }
+
+    #[test]
+    fn mult_count_hook() {
+        let id = MatShell::new(2, |x, y| y.copy_from_slice(x));
+        let mut y = [0.0; 2];
+        for _ in 0..5 {
+            id.mult(&[1.0, -1.0], &mut y).unwrap();
+        }
+        assert_eq!(id.mult_count(), 5);
+    }
+
+    #[test]
+    fn nan_propagates_without_panic() {
+        let scale = MatShell::new(3, |x, y| {
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi = 2.0 * xi;
+            }
+        });
+        let mut y = [0.0; 3];
+        scale
+            .mult(&[1.0, f64::NAN, f64::INFINITY], &mut y)
+            .unwrap();
+        assert_eq!(y[0], 2.0);
+        assert!(y[1].is_nan());
+        assert!(y[2].is_infinite());
+    }
+
+    /// FD Jacobian action vs the analytic Jacobian of a polynomial residual.
+    ///
+    /// Residual: F_i(u) = u_i^3 − u_{i−1} (cyclic), so J(u) is
+    /// diag(3u_i^2) minus a cyclic subdiagonal of ones. The forward-difference
+    /// action (F(u+hv) − F(u))/h then differs from J(u)·v by
+    /// (3 u_i v_i^2) h + v_i^3 h^2 — exactly O(h) — so halving h must roughly
+    /// halve the error.
+    #[test]
+    fn fd_action_matches_analytic_to_order_h() {
+        let n = 8usize;
+        let residual = |u: &[f64], f: &mut [f64]| {
+            for i in 0..u.len() {
+                let prev = u[(i + u.len() - 1) % u.len()];
+                f[i] = u[i] * u[i] * u[i] - prev;
+            }
+        };
+        let u: Vec<f64> = (0..n).map(|i| 0.3 + 0.1 * i as f64).collect();
+        let v: Vec<f64> = (0..n).map(|i| 1.0 - 0.2 * i as f64).collect();
+
+        // Analytic J(u)·v.
+        let mut jv = vec![0.0; n];
+        for i in 0..n {
+            jv[i] = 3.0 * u[i] * u[i] * v[i] - v[(i + n - 1) % n];
+        }
+
+        let fd_err = |h: f64| -> f64 {
+            let uc = u.clone();
+            let shell = MatShell::new(n, move |x, y| {
+                let mut fu = vec![0.0; uc.len()];
+                let mut fp = vec![0.0; uc.len()];
+                residual(&uc, &mut fu);
+                let up: Vec<f64> = uc.iter().zip(x).map(|(ui, xi)| ui + h * xi).collect();
+                residual(&up, &mut fp);
+                for i in 0..uc.len() {
+                    y[i] = (fp[i] - fu[i]) / h;
+                }
+            });
+            let mut y = vec![0.0; n];
+            shell.mult(&v, &mut y).unwrap();
+            y.iter()
+                .zip(&jv)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max)
+        };
+
+        let e1 = fd_err(1e-3);
+        let e2 = fd_err(5e-4);
+        assert!(e1 < 1e-2, "FD error too large: {e1}");
+        // First-order convergence: halving h halves the error (±40% slack).
+        let ratio = e1 / e2;
+        assert!(
+            (1.2..=2.8).contains(&ratio),
+            "expected O(h) ratio ≈ 2, got {ratio} (e1={e1}, e2={e2})"
+        );
     }
 }

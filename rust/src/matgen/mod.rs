@@ -12,6 +12,8 @@
 
 pub mod stencil;
 pub mod cases;
+pub mod nonlinear;
 
 pub use cases::{generate, generate_rows, TestCase};
+pub use nonlinear::NonlinearCase;
 pub use stencil::{stencil_offsets, StencilSpec};

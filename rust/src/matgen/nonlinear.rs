@@ -1,0 +1,193 @@
+//! Nonlinear test problems for the SNES subsystem (ROADMAP item 5).
+//!
+//! Two families over the existing structured stencils:
+//!
+//! - **Bratu** `−Δu = λ eᵘ`: residual `F(u) = A·u − λc·eᵘ` with `A` the
+//!   stencil operator of [`crate::matgen::stencil`] and `λc = λ·bratu_c`.
+//!   The Jacobian `J(u) = A − λc·diag(eᵘ)` shares `A`'s sparsity exactly:
+//!   only the diagonal moves between Newton steps, which is what the
+//!   [`crate::mat::mpiaij::MatMPIAIJ::update_diagonal`] /
+//!   [`crate::ksp::Ksp::update_operator_values`] lagged-PC path exercises.
+//!   The coupling constant keeps `λc·eᵘ*` safely inside the stencil's
+//!   strict-dominance margin (0.5), so `J` stays SPD on the solution path
+//!   and the CG family applies.
+//! - **Reaction–diffusion** `∂u/∂t = −(A·u + σ(u³ − u) − s)`: the θ-method
+//!   step residual is `G(v) = v − uₙ + θΔt·R(v) + (1−θ)Δt·R(uₙ)` with
+//!   `J = I + θΔt·(A + σ·diag(3v² − 1))` — again diagonal-only updates on
+//!   a frozen structure (see [`crate::snes::ts`]).
+//!
+//! Everything here is a pure function of global indices, so distributed
+//! generation is rank-partitionable and decomposition-invariant, same as
+//! [`crate::matgen::cases`].
+
+use crate::matgen::stencil::{stencil_offsets, stencil_rows, StencilSpec};
+
+/// Coupling scale applied to the Bratu λ: `λc = λ · BRATU_C`. Chosen so the
+/// paper-λ range {1, 5} lands at `λc ∈ {0.03, 0.15}` — strong enough that
+/// Newton needs a handful of steps with a visible quadratic tail, weak
+/// enough that `λc·eᵘ*` stays well below the stencil diagonal's 0.5
+/// strict-dominance margin (J remains SPD).
+pub const BRATU_C: f64 = 0.03;
+
+/// The nonlinear matgen cases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NonlinearCase {
+    /// 2D Bratu on the 5-point stencil.
+    Bratu2D,
+    /// 3D Bratu on the 7-point stencil.
+    Bratu3D,
+    /// 2D cubic reaction–diffusion (time-dependent; see [`crate::snes::ts`]).
+    ReactionDiffusion2D,
+}
+
+impl NonlinearCase {
+    pub const ALL: [NonlinearCase; 3] = [
+        NonlinearCase::Bratu2D,
+        NonlinearCase::Bratu3D,
+        NonlinearCase::ReactionDiffusion2D,
+    ];
+
+    /// Parse a CLI name like `bratu2d`.
+    pub fn from_name(s: &str) -> Option<NonlinearCase> {
+        Some(match s {
+            "bratu2d" | "bratu" => NonlinearCase::Bratu2D,
+            "bratu3d" => NonlinearCase::Bratu3D,
+            "reaction-diffusion" | "rd" => NonlinearCase::ReactionDiffusion2D,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NonlinearCase::Bratu2D => "bratu2d",
+            NonlinearCase::Bratu3D => "bratu3d",
+            NonlinearCase::ReactionDiffusion2D => "reaction-diffusion",
+        }
+    }
+
+    pub fn three_d(&self) -> bool {
+        matches!(self, NonlinearCase::Bratu3D)
+    }
+
+    /// The grid for a given scale (`scale = 1.0` ≈ 4096 unknowns).
+    pub fn grid(&self, scale: f64) -> StencilSpec {
+        let target = (4096.0 * scale).max(16.0);
+        if self.three_d() {
+            let n = (target.cbrt().round() as usize).max(3);
+            StencilSpec { nx: n, ny: n, nz: n, nnz_per_row: 7 }
+        } else {
+            let n = (target.sqrt().round() as usize).max(4);
+            StencilSpec { nx: n, ny: n, nz: 1, nnz_per_row: 5 }
+        }
+    }
+
+    /// Triplets of rows `[lo, hi)` of the linear stencil part `A` —
+    /// rank-partitionable, exactly like [`crate::matgen::generate_rows`].
+    pub fn linear_rows(&self, scale: f64, lo: usize, hi: usize) -> Vec<(usize, usize, f64)> {
+        let spec = self.grid(scale);
+        let offsets = stencil_offsets(spec.nnz_per_row, self.three_d());
+        stencil_rows(&spec, &offsets, None, lo, hi)
+    }
+}
+
+/// Bratu pointwise term `g(u) = −λc·eᵘ` and its derivative `g'(u) = −λc·eᵘ`
+/// (they coincide). `lam_c` is the scaled coupling `λ·BRATU_C`.
+#[inline]
+pub fn bratu_term(lam_c: f64, u: f64) -> (f64, f64) {
+    let e = lam_c * u.exp();
+    (-e, -e)
+}
+
+/// Cubic reaction term `σ(u³ − u)` and its derivative `σ(3u² − 1)`.
+#[inline]
+pub fn reaction_term(sigma: f64, u: f64) -> (f64, f64) {
+    (sigma * (u * u * u - u), sigma * (3.0 * u * u - 1.0))
+}
+
+/// Deterministic smooth source field for the reaction–diffusion case —
+/// a function of the *global* index only, so any rank/thread decomposition
+/// generates bitwise-identical local slices.
+pub fn source_field(lo: usize, hi: usize) -> Vec<f64> {
+    (lo..hi).map(|g| 0.1 * (g as f64 * 0.07).sin()).collect()
+}
+
+/// Deterministic initial state `u(t=0)` for the reaction–diffusion case —
+/// same global-index-only contract as [`source_field`].
+pub fn initial_field(lo: usize, hi: usize) -> Vec<f64> {
+    (lo..hi).map(|g| 0.2 * (g as f64 * 0.05).cos()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for case in NonlinearCase::ALL {
+            assert_eq!(NonlinearCase::from_name(case.name()), Some(case));
+        }
+        assert_eq!(NonlinearCase::from_name("nope"), None);
+    }
+
+    #[test]
+    fn grids_match_dimensionality() {
+        let g2 = NonlinearCase::Bratu2D.grid(1.0);
+        assert_eq!(g2.nz, 1);
+        assert_eq!(g2.nnz_per_row, 5);
+        assert_eq!(g2.nx, 64);
+        let g3 = NonlinearCase::Bratu3D.grid(1.0);
+        assert!(g3.nz > 1);
+        assert_eq!(g3.nnz_per_row, 7);
+    }
+
+    #[test]
+    fn linear_rows_are_rank_partitionable() {
+        let case = NonlinearCase::Bratu2D;
+        let n = case.grid(0.05).rows();
+        let whole = case.linear_rows(0.05, 0, n);
+        let mut parts = case.linear_rows(0.05, 0, n / 3);
+        parts.extend(case.linear_rows(0.05, n / 3, n));
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
+    fn pointwise_terms_and_derivatives() {
+        let (g, dg) = bratu_term(0.15, 0.0);
+        assert_eq!(g, -0.15);
+        assert_eq!(dg, -0.15);
+        let (r, dr) = reaction_term(2.0, 1.0);
+        assert_eq!(r, 0.0); // u³ − u = 0 at u = 1
+        assert_eq!(dr, 4.0); // σ(3 − 1)
+    }
+
+    #[test]
+    fn source_field_is_partitionable() {
+        let whole = source_field(0, 100);
+        let mut parts = source_field(0, 37);
+        parts.extend(source_field(37, 100));
+        assert_eq!(whole.len(), 100);
+        for (a, b) in whole.iter().zip(&parts) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let whole = initial_field(0, 100);
+        let mut parts = initial_field(0, 37);
+        parts.extend(initial_field(37, 100));
+        for (a, b) in whole.iter().zip(&parts) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bratu_coupling_stays_inside_dominance_margin() {
+        // λ = 5 (the golden suite's strongest case): at the rough solution
+        // amplitude u* of 0.5·u = λc·eᵘ, the Jacobian's diagonal shift
+        // λc·eᵘ* must stay below the stencil margin 0.5 with room to spare.
+        let lam_c = 5.0 * BRATU_C;
+        let mut u = 0.0f64;
+        for _ in 0..50 {
+            u = 2.0 * lam_c * u.exp(); // fixed point of 0.5·u = λc·eᵘ
+        }
+        assert!(u.is_finite());
+        assert!(lam_c * u.exp() < 0.35, "λc·eᵘ* = {}", lam_c * u.exp());
+    }
+}

@@ -49,9 +49,13 @@ pub enum Event {
     ThreadFork = 13,
     ThreadBarrier = 14,
     KSPServe = 15,
+    SNESSolve = 16,
+    SNESFunctionEval = 17,
+    SNESJacobianEval = 18,
+    SNESLineSearch = 19,
 }
 
-pub const N_EVENTS: usize = 16;
+pub const N_EVENTS: usize = 20;
 
 impl Event {
     pub const ALL: [Event; N_EVENTS] = [
@@ -71,6 +75,10 @@ impl Event {
         Event::ThreadFork,
         Event::ThreadBarrier,
         Event::KSPServe,
+        Event::SNESSolve,
+        Event::SNESFunctionEval,
+        Event::SNESJacobianEval,
+        Event::SNESLineSearch,
     ];
 
     pub fn name(self) -> &'static str {
@@ -91,6 +99,10 @@ impl Event {
             Event::ThreadFork => "ThreadFork",
             Event::ThreadBarrier => "ThreadBarrier",
             Event::KSPServe => "KSPServe",
+            Event::SNESSolve => "SNESSolve",
+            Event::SNESFunctionEval => "SNESFunctionEval",
+            Event::SNESJacobianEval => "SNESJacobianEval",
+            Event::SNESLineSearch => "SNESLineSearch",
         }
     }
 }

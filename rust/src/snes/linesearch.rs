@@ -1,0 +1,133 @@
+//! SNES line searches (`-snes_linesearch_type`): `bt` — backtracking with
+//! the Armijo sufficient-decrease test on ‖F‖ — and `basic` — the full
+//! (undamped) Newton step.
+//!
+//! Determinism (DESIGN.md §14): the only reductions a search performs are
+//! the candidate norms ‖F(u + λδ)‖, taken through the slot-ordered
+//! [`super::slot_norm2`]; the λ schedule itself is the exactly-representable
+//! sequence 1, ½, ¼, … — so the accepted λ and the resulting iterate are
+//! bitwise identical across decompositions.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+use crate::perf::{Event, PerfLog};
+use crate::vec::mpi::VecMPI;
+
+use super::{eval_residual, slot_norm2, ResidualFn};
+
+/// Armijo sufficient-decrease slope: accept λ when
+/// `‖F(u+λδ)‖ ≤ (1 − σλ)·‖F(u)‖`.
+pub const ARMIJO_SIGMA: f64 = 1e-4;
+
+/// Halvings before `bt` gives up (λ reaches 2⁻⁴⁰ ≈ 9·10⁻¹³).
+pub const MAX_HALVINGS: usize = 40;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineSearchType {
+    /// Backtracking Armijo search (the default).
+    Bt,
+    /// Full step, accepted unconditionally.
+    Basic,
+}
+
+impl LineSearchType {
+    pub fn from_name(s: &str) -> Result<LineSearchType> {
+        match s {
+            "bt" => Ok(LineSearchType::Bt),
+            "basic" => Ok(LineSearchType::Basic),
+            other => Err(Error::InvalidOption(format!(
+                "-snes_linesearch_type: unknown type `{other}` (expected bt|basic)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LineSearchType::Bt => "bt",
+            LineSearchType::Basic => "basic",
+        }
+    }
+}
+
+/// Result of one search along the Newton direction.
+#[derive(Debug, Clone, Copy)]
+pub struct LineSearchOutcome {
+    /// Accepted step length (meaningless when `!accepted`).
+    pub lambda: f64,
+    /// ‖F(u + λδ)‖ at the accepted step.
+    pub fnorm: f64,
+    /// Residual evaluations consumed.
+    pub evals: u64,
+    /// `false` ⇒ the caller should declare `DivergedLineSearch`.
+    pub accepted: bool,
+}
+
+/// Search along `delta` from `u`. On acceptance, `u_trial` / `f_trial` hold
+/// the new iterate and its residual (the caller commits them — no residual
+/// re-evaluation needed). Runs under the `SNESLineSearch` perf event.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn search(
+    ty: LineSearchType,
+    residual: &mut ResidualFn<'_>,
+    u: &VecMPI,
+    delta: &VecMPI,
+    fnorm: f64,
+    u_trial: &mut VecMPI,
+    f_trial: &mut VecMPI,
+    slots: &[(usize, usize)],
+    comm: &mut Comm,
+    perf: Option<&Arc<PerfLog>>,
+) -> Result<LineSearchOutcome> {
+    let t0 = perf.map(|_| Instant::now());
+    let out = search_inner(ty, residual, u, delta, fnorm, u_trial, f_trial, slots, comm, perf)?;
+    if let Some(p) = perf {
+        p.op(0, Event::SNESLineSearch, t0.expect("set when armed"), 0.0);
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn search_inner(
+    ty: LineSearchType,
+    residual: &mut ResidualFn<'_>,
+    u: &VecMPI,
+    delta: &VecMPI,
+    fnorm: f64,
+    u_trial: &mut VecMPI,
+    f_trial: &mut VecMPI,
+    slots: &[(usize, usize)],
+    comm: &mut Comm,
+    perf: Option<&Arc<PerfLog>>,
+) -> Result<LineSearchOutcome> {
+    match ty {
+        LineSearchType::Basic => {
+            u_trial.waxpy(1.0, delta, u)?;
+            eval_residual(residual, u_trial, f_trial, comm, perf)?;
+            let fnew = slot_norm2(f_trial, slots, comm)?;
+            // Unconditional acceptance, PETSc `basic`: a non-finite fnew
+            // surfaces as the outer loop's DivergedFnormNaN.
+            Ok(LineSearchOutcome { lambda: 1.0, fnorm: fnew, evals: 1, accepted: true })
+        }
+        LineSearchType::Bt => {
+            let mut lambda = 1.0f64;
+            let mut evals = 0u64;
+            for _ in 0..=MAX_HALVINGS {
+                u_trial.waxpy(lambda, delta, u)?;
+                eval_residual(residual, u_trial, f_trial, comm, perf)?;
+                evals += 1;
+                let fnew = slot_norm2(f_trial, slots, comm)?;
+                // Non-finite trials fail the test and keep halving — a
+                // too-long step that overflowed eᵘ recovers instead of
+                // aborting the whole solve.
+                if fnew.is_finite() && fnew <= (1.0 - ARMIJO_SIGMA * lambda) * fnorm {
+                    return Ok(LineSearchOutcome { lambda, fnorm: fnew, evals, accepted: true });
+                }
+                lambda *= 0.5;
+            }
+            Ok(LineSearchOutcome { lambda, fnorm, evals, accepted: false })
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Matrix-free preconditioned CG for the JFNK path: structurally the exact
+//! recurrence of [`crate::ksp::cg`]'s `solve_inner`, with two substitutions
+//! (DESIGN.md §14):
+//!
+//! - the operator action is a [`MatShellMPI`] — the finite-difference
+//!   directional derivative the SNES layer wraps around its residual;
+//! - every reduction (`‖b‖`, `‖r‖`, `p·w`, `r·z`) goes through the
+//!   slot-ordered folds of [`super::slot_norm2`] / [`super::slot_dot`]
+//!   instead of the rank-folded defaults.
+//!
+//! Together with the FD step length `h` being computed from slot-ordered
+//! norms, every float this loop produces is bitwise identical across
+//! `ranks × threads` factorizations of the same slot grid.
+
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::ksp::{check_convergence, ConvergedReason, KspConfig, SolveStats};
+use crate::mat::shell::MatShellMPI;
+use crate::pc::Precond;
+use crate::vec::mpi::VecMPI;
+
+use super::{slot_dot, slot_norm2};
+
+/// Solve `J x = b` with `J` given only through `shell`. `x` carries the
+/// initial guess (the SNES caller passes 0).
+pub fn solve(
+    shell: &mut MatShellMPI<'_>,
+    pc: &dyn Precond,
+    b: &VecMPI,
+    x: &mut VecMPI,
+    slots: &[(usize, usize)],
+    cfg: &KspConfig,
+    comm: &mut Comm,
+) -> Result<SolveStats> {
+    let bnorm = slot_norm2(b, slots, comm)?;
+    let mut history = Vec::new();
+    if bnorm == 0.0 {
+        x.zero();
+        return Ok(SolveStats::new(ConvergedReason::ConvergedAtol, 0, bnorm, 0.0, history));
+    }
+
+    let mut r = b.duplicate();
+    shell.mult(x, &mut r, comm)?;
+    r.aypx(-1.0, b)?;
+    let mut z = r.duplicate();
+    pc.apply(&r, &mut z)?;
+    let mut p = z.duplicate();
+    p.copy_from(&z)?;
+    let mut w = r.duplicate();
+    let mut rz = slot_dot(&r, &z, slots, comm)?;
+    let mut rnorm = slot_norm2(&r, slots, comm)?;
+    if cfg.monitor {
+        history.push(rnorm);
+    }
+
+    let mut it = 0usize;
+    loop {
+        if let Some(reason) = check_convergence(cfg, rnorm, bnorm, it) {
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
+        }
+        shell.mult(&p, &mut w, comm)?;
+        let pw = slot_dot(&p, &w, slots, comm)?;
+        if !(pw > 0.0) {
+            // Same classification as the assembled-operator CG: a finite
+            // non-positive curvature means the (preconditioned) operator is
+            // not positive definite; otherwise a fold went NaN/Inf.
+            let reason = if pw.is_finite() {
+                ConvergedReason::DivergedIndefiniteMat
+            } else {
+                ConvergedReason::DivergedNanOrInf
+            };
+            return Ok(SolveStats::new(reason, it, bnorm, rnorm, history));
+        }
+        let alpha = rz / pw;
+        x.axpy(alpha, &p)?;
+        r.axpy(-alpha, &w)?;
+        rnorm = slot_norm2(&r, slots, comm)?;
+        it += 1;
+        if cfg.monitor {
+            history.push(rnorm);
+        }
+        pc.apply(&r, &mut z)?;
+        let rz_new = slot_dot(&r, &z, slots, comm)?;
+        let beta = rz_new / rz;
+        rz = rz_new;
+        p.aypx(beta, &z)?;
+    }
+}

@@ -1,0 +1,581 @@
+//! SNES — the nonlinear solver layer (PETSc's `SNES`), ROADMAP item 5.
+//!
+//! Newton's method over the existing distributed objects: the user supplies
+//! a residual callback `F(u)` and a Jacobian refresh callback over an
+//! assembled [`MatMPIAIJ`]; each outer step solves `J(uₖ)·δ = −F(uₖ)`
+//! through the existing [`Ksp`] registry and updates `uₖ₊₁ = uₖ + λδ`
+//! under a line search ([`linesearch`]). Lifecycle mirrors PETSc:
+//! `create → set_function → set_jacobian → set_from_options → solve`.
+//!
+//! Two Jacobian modes (DESIGN.md §14):
+//!
+//! - **Analytic**: the refresh callback rewrites the values of the frozen
+//!   sparsity via [`Ksp::update_operator_values`] — the Krylov operator is
+//!   exact at every step.
+//! - **JFNK** (`-snes_mf`, PETSc's `-snes_mf_operator`): the Krylov
+//!   *action* is the finite-difference directional derivative
+//!   `J(u)·v ≈ (F(u+hv) − F(u))/h` through a [`MatShellMPI`]
+//!   ([`mfcg`]), while the assembled Jacobian still feeds the
+//!   preconditioner on the lag schedule.
+//!
+//! **Lagged preconditioning** (`-snes_lag_pc N`): the operator values are
+//! refreshed every Newton step, but [`Ksp::rebuild_pc`] only fires on steps
+//! `k ≡ 0 (mod N)` — so `Ksp::setup_count` lands at `⌈its/N⌉` and the PC
+//! is reused (stale but serviceable) in between. See the invalidation
+//! table in DESIGN.md §14.
+//!
+//! **Determinism**: every reduction the outer loop takes — residual norms,
+//! line-search Armijo tests, the FD step length `h`, and every inner
+//! product of the matrix-free CG — goes through slot-ordered folds
+//! ([`Comm::allreduce_sum_ordered`] over [`crate::pc`]'s local slot
+//! ranges). With the residual's own matrix actions on hybrid-enabled
+//! operators and the inner solve on `cg-fused`, the whole Newton ‖F‖
+//! history is bitwise identical across every `ranks × threads`
+//! factorization of the same slot grid G.
+
+pub mod linesearch;
+pub mod mfcg;
+pub mod ts;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::Comm;
+use crate::coordinator::options::Options;
+use crate::error::{Error, Result};
+use crate::ksp::{ConvergedReason, Ksp, KspConfig};
+use crate::mat::mpiaij::MatMPIAIJ;
+use crate::mat::shell::MatShellMPI;
+use crate::perf::{Event, PerfLog, Stage};
+use crate::vec::blas1;
+use crate::vec::mpi::VecMPI;
+
+pub use linesearch::LineSearchType;
+
+/// Distributed residual callback: `f ← F(u)`. `FnMut` so it can own scratch
+/// state (matrices for `A·u`, precomputed per-step constants).
+pub type ResidualFn<'a> = Box<dyn FnMut(&VecMPI, &mut VecMPI, &mut Comm) -> Result<()> + 'a>;
+
+/// Jacobian refresh callback: rewrite the values of the frozen-sparsity
+/// Jacobian at the current iterate (typically via
+/// [`MatMPIAIJ::update_diagonal`]).
+pub type JacobianFn<'a> = Box<dyn FnMut(&VecMPI, &mut MatMPIAIJ, &mut Comm) -> Result<()> + 'a>;
+
+/// Why a Newton solve stopped (PETSc `SNESConvergedReason`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnesConvergedReason {
+    /// ‖F‖ ≤ atol.
+    ConvergedFnormAbs,
+    /// ‖F‖ ≤ rtol·‖F(u₀)‖.
+    ConvergedFnormRelative,
+    /// ‖λδ‖ ≤ stol·‖u‖ — the update stalled below the step tolerance.
+    ConvergedSnorm,
+    /// Hit `max_it` Newton steps.
+    DivergedMaxIt,
+    /// The line search could not find an acceptable step.
+    DivergedLineSearch,
+    /// A residual norm came back NaN/±Inf.
+    DivergedFnormNaN,
+    /// The inner Krylov solve diverged (breakdown, indefinite PC'd
+    /// operator, NaN) — distinct from merely hitting its iteration cap,
+    /// which inexact Newton tolerates.
+    DivergedLinearSolve,
+}
+
+impl SnesConvergedReason {
+    pub fn converged(&self) -> bool {
+        matches!(
+            self,
+            SnesConvergedReason::ConvergedFnormAbs
+                | SnesConvergedReason::ConvergedFnormRelative
+                | SnesConvergedReason::ConvergedSnorm
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SnesConvergedReason::ConvergedFnormAbs => "CONVERGED_FNORM_ABS",
+            SnesConvergedReason::ConvergedFnormRelative => "CONVERGED_FNORM_RELATIVE",
+            SnesConvergedReason::ConvergedSnorm => "CONVERGED_SNORM_RELATIVE",
+            SnesConvergedReason::DivergedMaxIt => "DIVERGED_MAX_IT",
+            SnesConvergedReason::DivergedLineSearch => "DIVERGED_LINE_SEARCH",
+            SnesConvergedReason::DivergedFnormNaN => "DIVERGED_FNORM_NAN",
+            SnesConvergedReason::DivergedLinearSolve => "DIVERGED_LINEAR_SOLVE",
+        }
+    }
+}
+
+/// Newton tolerances and controls (`-snes_*`; PETSc-flavoured defaults).
+#[derive(Debug, Clone)]
+pub struct SnesConfig {
+    /// Relative decrease of ‖F‖ (`-snes_rtol`).
+    pub rtol: f64,
+    /// Absolute ‖F‖ floor (`-snes_atol`).
+    pub atol: f64,
+    /// Step-stall tolerance ‖λδ‖ ≤ stol·‖u‖ (`-snes_stol`).
+    pub stol: f64,
+    /// Newton iteration cap (`-snes_max_it`).
+    pub max_it: usize,
+    /// Rebuild the inner PC every N Newton steps (`-snes_lag_pc`; 1 =
+    /// every step, the unlagged baseline).
+    pub lag_pc: usize,
+    /// Line search flavour (`-snes_linesearch_type`).
+    pub linesearch: LineSearchType,
+    /// Matrix-free (JFNK) Krylov action (`-snes_mf`).
+    pub mf: bool,
+    /// Print per-step `k SNES Function norm ...` lines on rank 0
+    /// (`-snes_monitor`). The ‖F‖ history is recorded regardless.
+    pub monitor: bool,
+}
+
+impl Default for SnesConfig {
+    fn default() -> SnesConfig {
+        SnesConfig {
+            rtol: 1e-8,
+            atol: 1e-50,
+            stol: 1e-8,
+            max_it: 50,
+            lag_pc: 1,
+            linesearch: LineSearchType::Bt,
+            mf: false,
+            monitor: false,
+        }
+    }
+}
+
+/// Outcome of one Newton solve.
+#[derive(Debug, Clone)]
+pub struct SnesStats {
+    pub reason: SnesConvergedReason,
+    /// Newton steps taken.
+    pub iterations: usize,
+    /// ‖F(uₖ)‖ at every iterate, starting with ‖F(u₀)‖ — the golden
+    /// history the decomposition-invariance suite compares bitwise.
+    pub fnorm_history: Vec<f64>,
+    pub final_fnorm: f64,
+    /// Total inner Krylov iterations across all Newton steps.
+    pub inner_iterations: usize,
+    /// PC builds the inner KSP performed (= `Ksp::setup_count`); the
+    /// lagged-PC contract pins this to `⌈iterations / lag_pc⌉`.
+    pub pc_builds: u64,
+    /// Residual callback invocations (line search and FD probes included).
+    pub fn_evals: u64,
+    /// Jacobian refresh invocations.
+    pub jac_evals: u64,
+    /// Matrix-free FD actions (0 unless `mf`).
+    pub mf_mults: u64,
+}
+
+impl SnesStats {
+    pub fn converged(&self) -> bool {
+        self.reason.converged()
+    }
+}
+
+/// Deterministic (slot-ordered) global 2-norm: one [`blas1::sqnorm`]
+/// partial per local slot range, folded rank-then-slot ordered. Bitwise
+/// identical across every decomposition sharing the slot grid.
+pub(crate) fn slot_norm2(v: &VecMPI, ranges: &[(usize, usize)], comm: &mut Comm) -> Result<f64> {
+    let perf = v.local().ctx().perf().cloned();
+    let t0 = perf.as_ref().map(|_| Instant::now());
+    let xs = v.local().as_slice();
+    let parts: Vec<[f64; 1]> = ranges
+        .iter()
+        .map(|&(lo, hi)| [blas1::sqnorm(&xs[lo..hi])])
+        .collect();
+    let out = comm.allreduce_sum_ordered(parts)?[0].sqrt();
+    if let Some(p) = &perf {
+        p.op_comm(
+            0,
+            Event::VecNorm,
+            t0.expect("set when armed"),
+            2.0 * xs.len() as f64,
+            0,
+            0,
+            ranges.len() as u64,
+        );
+    }
+    Ok(out)
+}
+
+/// Slot-ordered global dot; see [`slot_norm2`].
+pub(crate) fn slot_dot(
+    u: &VecMPI,
+    v: &VecMPI,
+    ranges: &[(usize, usize)],
+    comm: &mut Comm,
+) -> Result<f64> {
+    let perf = u.local().ctx().perf().cloned();
+    let t0 = perf.as_ref().map(|_| Instant::now());
+    let us = u.local().as_slice();
+    let vs = v.local().as_slice();
+    let parts: Vec<[f64; 1]> = ranges
+        .iter()
+        .map(|&(lo, hi)| [blas1::dot(&us[lo..hi], &vs[lo..hi])])
+        .collect();
+    let out = comm.allreduce_sum_ordered(parts)?[0];
+    if let Some(p) = &perf {
+        p.op_comm(
+            0,
+            Event::VecDot,
+            t0.expect("set when armed"),
+            2.0 * us.len() as f64,
+            0,
+            0,
+            ranges.len() as u64,
+        );
+    }
+    Ok(out)
+}
+
+/// Evaluate `f ← F(u)` under the `SNESFunctionEval` perf event.
+pub(crate) fn eval_residual(
+    residual: &mut ResidualFn<'_>,
+    u: &VecMPI,
+    f: &mut VecMPI,
+    comm: &mut Comm,
+    perf: Option<&Arc<PerfLog>>,
+) -> Result<()> {
+    let t0 = perf.map(|_| Instant::now());
+    residual(u, f, comm)?;
+    if let Some(p) = perf {
+        p.op(0, Event::SNESFunctionEval, t0.expect("set when armed"), 0.0);
+    }
+    Ok(())
+}
+
+/// The nonlinear solver object (PETSc `SNES`).
+pub struct Snes<'a> {
+    rank: usize,
+    size: usize,
+    residual: Option<ResidualFn<'a>>,
+    jacobian: Option<JacobianFn<'a>>,
+    /// The assembled Jacobian: owned here so the inner [`Ksp`] can borrow
+    /// it for the duration of a solve. Sparsity is frozen at assembly;
+    /// the refresh callback rewrites values only.
+    jmat: Option<MatMPIAIJ>,
+    cfg: SnesConfig,
+    /// Inner-KSP baseline: tight tolerances (true-Newton inner accuracy)
+    /// and a pinned `aij` local format (the [`Ksp::update_operator_values`]
+    /// contract).
+    ksp_cfg: KspConfig,
+    ksp_type: String,
+    pc_type: String,
+    last: Option<SnesStats>,
+}
+
+impl<'a> Snes<'a> {
+    pub fn create(comm: &Comm) -> Snes<'a> {
+        Snes {
+            rank: comm.rank(),
+            size: comm.size(),
+            residual: None,
+            jacobian: None,
+            jmat: None,
+            cfg: SnesConfig::default(),
+            ksp_cfg: KspConfig {
+                rtol: 1e-10,
+                mat_type: "aij".into(),
+                ..KspConfig::default()
+            },
+            // The one decomposition-invariant Krylov family: its reductions
+            // are slot-ordered, so inner inexactness is bitwise identical
+            // across factorizations and the outer history stays golden.
+            ksp_type: "cg-fused".into(),
+            pc_type: "jacobi".into(),
+            last: None,
+        }
+    }
+
+    /// Attach the residual callback `F(u)`.
+    pub fn set_function(
+        &mut self,
+        f: impl FnMut(&VecMPI, &mut VecMPI, &mut Comm) -> Result<()> + 'a,
+    ) {
+        self.residual = Some(Box::new(f));
+    }
+
+    /// Attach the assembled Jacobian and its value-refresh callback. Always
+    /// required — in `-snes_mf` mode the matrix still drives the (lagged)
+    /// preconditioner, exactly PETSc's `-snes_mf_operator` semantics.
+    pub fn set_jacobian(
+        &mut self,
+        jmat: MatMPIAIJ,
+        refresh: impl FnMut(&VecMPI, &mut MatMPIAIJ, &mut Comm) -> Result<()> + 'a,
+    ) {
+        self.jmat = Some(jmat);
+        self.jacobian = Some(Box::new(refresh));
+    }
+
+    /// Reclaim the Jacobian matrix (the [`ts`] driver re-uses it across
+    /// time steps).
+    pub fn take_jmat(&mut self) -> Option<MatMPIAIJ> {
+        self.jacobian = None;
+        self.jmat.take()
+    }
+
+    pub fn set_config(&mut self, cfg: SnesConfig) {
+        self.cfg = cfg;
+    }
+
+    pub fn config(&self) -> &SnesConfig {
+        &self.cfg
+    }
+
+    pub fn config_mut(&mut self) -> &mut SnesConfig {
+        &mut self.cfg
+    }
+
+    /// Select the inner Krylov method (must exist in the KSP registry).
+    pub fn set_ksp_type(&mut self, name: &str) -> Result<()> {
+        crate::ksp::from_name(name)?;
+        self.ksp_type = name.to_string();
+        Ok(())
+    }
+
+    pub fn set_pc(&mut self, name: &str) {
+        self.pc_type = name.to_string();
+    }
+
+    pub fn ksp_config_mut(&mut self) -> &mut KspConfig {
+        &mut self.ksp_cfg
+    }
+
+    /// Configure from the options database: `-snes_*` via
+    /// [`Options::snes_config`], plus the inner solver's `-ksp_*` /
+    /// `-pc_type` layered over the SNES baseline (tight tolerances, `aij`
+    /// operator format). `-mat_type` other than `aij` is a typed error:
+    /// converted local formats hold value copies the per-step Jacobian
+    /// refresh cannot reach.
+    pub fn set_from_options(&mut self, opts: &Options) -> Result<()> {
+        self.cfg = opts.snes_config()?;
+        if let Some(t) = opts.get("ksp_type") {
+            let name = t.to_string();
+            self.set_ksp_type(&name)?;
+        }
+        self.pc_type = opts.pc_name(&self.pc_type);
+        let mut k = opts.ksp_config_from(self.ksp_cfg.clone())?;
+        match k.mat_type.as_str() {
+            "aij" => {}
+            "auto" => k.mat_type = "aij".into(),
+            other => {
+                return Err(Error::Unsupported(format!(
+                    "SNES: -mat_type {other} holds converted value copies; \
+                     the Newton Jacobian refresh requires aij"
+                )))
+            }
+        }
+        self.ksp_cfg = k;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> Option<&SnesStats> {
+        self.last.as_ref()
+    }
+
+    pub fn reason(&self) -> Option<SnesConvergedReason> {
+        self.last.as_ref().map(|s| s.reason)
+    }
+
+    /// Run Newton from the initial guess in `u`; on return `u` holds the
+    /// final iterate. See the module docs for the step structure.
+    pub fn solve(&mut self, u: &mut VecMPI, comm: &mut Comm) -> Result<SnesStats> {
+        if comm.rank() != self.rank || comm.size() != self.size {
+            return Err(Error::size_mismatch("SNESSolve: communicator mismatch"));
+        }
+        let cfg = self.cfg.clone();
+        let residual = self
+            .residual
+            .as_mut()
+            .ok_or_else(|| Error::not_ready("SNESSolve: call set_function first"))?;
+        let jacobian = self
+            .jacobian
+            .as_mut()
+            .ok_or_else(|| Error::not_ready("SNESSolve: call set_jacobian first"))?;
+        let jmat = self
+            .jmat
+            .as_mut()
+            .ok_or_else(|| Error::not_ready("SNESSolve: set_jacobian attaches the matrix"))?;
+        if u.layout() != jmat.row_layout() {
+            return Err(Error::size_mismatch(
+                "SNESSolve: solution layout differs from the Jacobian's rows",
+            ));
+        }
+
+        let perf = jmat.diag_block().ctx().perf().cloned();
+        let _snes_span = perf.as_ref().map(|p| p.span(Event::SNESSolve, Some(Stage::Solve)));
+        let slots = crate::pc::local_slot_ranges(jmat, comm);
+        let lag = cfg.lag_pc.max(1);
+
+        let mut f = u.duplicate();
+        let mut rhs = u.duplicate();
+        let mut delta = u.duplicate();
+        let mut u_trial = u.duplicate();
+        let mut f_trial = u.duplicate();
+
+        let mut ksp = Ksp::create(comm);
+        ksp.set_type(&self.ksp_type)?;
+        ksp.set_pc(&self.pc_type);
+        ksp.set_config(self.ksp_cfg.clone());
+        ksp.set_operators(jmat);
+
+        let mut fn_evals = 0u64;
+        let mut jac_evals = 0u64;
+        let mut mf_mults = 0u64;
+        let mut inner_its = 0usize;
+        let mut its = 0usize;
+
+        eval_residual(residual, u, &mut f, comm, perf.as_ref())?;
+        fn_evals += 1;
+        let mut fnorm = slot_norm2(&f, &slots, comm)?;
+        let f0 = fnorm;
+        let mut history = vec![fnorm];
+        if cfg.monitor && comm.rank() == 0 {
+            println!("  0 SNES Function norm {fnorm:.12e}");
+        }
+
+        let reason = 'newton: loop {
+            if !fnorm.is_finite() {
+                break SnesConvergedReason::DivergedFnormNaN;
+            }
+            if fnorm <= cfg.atol {
+                break SnesConvergedReason::ConvergedFnormAbs;
+            }
+            if its > 0 && fnorm <= cfg.rtol * f0 {
+                break SnesConvergedReason::ConvergedFnormRelative;
+            }
+            if its >= cfg.max_it {
+                break SnesConvergedReason::DivergedMaxIt;
+            }
+
+            // Refresh the Jacobian values at the current iterate — every
+            // step, so the Krylov operator is always current. Only the PC
+            // lags (below).
+            {
+                let t0 = perf.as_ref().map(|_| Instant::now());
+                ksp.update_operator_values(|m| jacobian(u, m, comm))?;
+                jac_evals += 1;
+                if let Some(p) = &perf {
+                    p.op(0, Event::SNESJacobianEval, t0.expect("set when armed"), 0.0);
+                }
+            }
+            // Lag schedule: rebuild the PC on steps 0, lag, 2·lag, … —
+            // `setup_count` then lands at ⌈its/lag⌉.
+            if its % lag == 0 {
+                ksp.rebuild_pc();
+            }
+
+            rhs.copy_from(&f)?;
+            rhs.scale(-1.0);
+            delta.zero();
+
+            let inner = if cfg.mf {
+                // JFNK: assembled J builds the (lagged) PC; the Krylov
+                // action is the FD directional derivative around u.
+                ksp.set_up(comm)?;
+                let unorm = slot_norm2(u, &slots, comm)?;
+                let inner_cfg = ksp.config().clone();
+                let mut fd_evals = 0u64;
+                let st = {
+                    let pc = ksp
+                        .pc()
+                        .ok_or_else(|| Error::not_ready("SNES mf: PC not built by set_up"))?;
+                    let n_local = u.local().len();
+                    let perf_c = perf.clone();
+                    let mut u_pert = u.duplicate();
+                    let mut f_pert = u.duplicate();
+                    let u_ref: &VecMPI = u;
+                    let f_ref: &VecMPI = &f;
+                    let mut shell = MatShellMPI::new(n_local, |v, y, c| {
+                        // Walker–Pernice step: h = √ε·√(1+‖u‖)/‖v‖, both
+                        // norms slot-ordered, so h (and hence the action)
+                        // is decomposition-invariant.
+                        let vnorm = slot_norm2(v, &slots, c)?;
+                        if vnorm == 0.0 {
+                            y.zero();
+                            return Ok(());
+                        }
+                        let h = f64::EPSILON.sqrt() * (1.0 + unorm).sqrt() / vnorm;
+                        u_pert.waxpy(h, v, u_ref)?;
+                        let t0 = perf_c.as_ref().map(|_| Instant::now());
+                        residual(&u_pert, &mut f_pert, c)?;
+                        fd_evals += 1;
+                        if let Some(p) = &perf_c {
+                            p.op(0, Event::SNESFunctionEval, t0.expect("set when armed"), 0.0);
+                        }
+                        // y = (F(u+hv) − F(u)) / h, reusing the step's F(u).
+                        y.waxpy(-1.0, f_ref, &f_pert)?;
+                        y.scale(1.0 / h);
+                        Ok(())
+                    });
+                    let st =
+                        mfcg::solve(&mut shell, pc, &rhs, &mut delta, &slots, &inner_cfg, comm)?;
+                    mf_mults += shell.mult_count();
+                    st
+                };
+                fn_evals += fd_evals;
+                st
+            } else {
+                ksp.solve(&rhs, &mut delta, comm)?
+            };
+            inner_its += inner.iterations;
+            if !inner.converged() && inner.reason != ConvergedReason::DivergedIts {
+                // Genuine breakdown. Hitting the cap is tolerated: inexact
+                // Newton proceeds with the best available direction.
+                break 'newton SnesConvergedReason::DivergedLinearSolve;
+            }
+
+            let ls = linesearch::search(
+                cfg.linesearch,
+                residual,
+                u,
+                &delta,
+                fnorm,
+                &mut u_trial,
+                &mut f_trial,
+                &slots,
+                comm,
+                perf.as_ref(),
+            )?;
+            fn_evals += ls.evals;
+            if !ls.accepted {
+                break SnesConvergedReason::DivergedLineSearch;
+            }
+
+            u.copy_from(&u_trial)?;
+            f.copy_from(&f_trial)?;
+            fnorm = ls.fnorm;
+            its += 1;
+            history.push(fnorm);
+            if cfg.monitor && comm.rank() == 0 {
+                println!("  {its} SNES Function norm {fnorm:.12e}");
+            }
+
+            // Step-stall test: ‖λδ‖ ≤ stol·‖u‖.
+            if fnorm.is_finite() && cfg.stol > 0.0 {
+                let dnorm = slot_norm2(&delta, &slots, comm)?;
+                let unorm = slot_norm2(u, &slots, comm)?;
+                if ls.lambda * dnorm <= cfg.stol * unorm {
+                    break SnesConvergedReason::ConvergedSnorm;
+                }
+            }
+        };
+
+        let pc_builds = ksp.setup_count();
+        drop(ksp);
+
+        let stats = SnesStats {
+            reason,
+            iterations: its,
+            final_fnorm: fnorm,
+            fnorm_history: history,
+            inner_iterations: inner_its,
+            pc_builds,
+            fn_evals,
+            jac_evals,
+            mf_mults,
+        };
+        self.last = Some(stats.clone());
+        Ok(stats)
+    }
+}

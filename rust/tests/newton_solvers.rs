@@ -1,0 +1,189 @@
+//! Golden Newton suite for the SNES subsystem: Bratu convergence with a
+//! quadratic tail, bitwise decomposition-invariant ‖F‖ histories (analytic
+//! and JFNK), JFNK ≡ analytic iteration parity, the lagged-PC build-count
+//! contract, and the θ-method TS driver.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use mmpetsc::comm::fault::FaultPlan;
+use mmpetsc::coordinator::newton::{run_newton_case, NewtonConfig, NewtonReport};
+use mmpetsc::matgen::nonlinear::NonlinearCase;
+
+/// The decomposition grid of G = 4 cores the invariance goldens sweep —
+/// the same grid the linear-solver suite uses.
+const DECOMPS: [(usize, usize); 3] = [(1, 4), (2, 2), (4, 1)];
+
+fn bratu_cfg(lambda: f64, ranks: usize, threads: usize) -> NewtonConfig {
+    let mut cfg = NewtonConfig::default_for(NonlinearCase::Bratu2D, 0.05, ranks, threads);
+    cfg.lambda = lambda;
+    cfg.snes.rtol = 1e-12;
+    cfg
+}
+
+fn hex(h: &[f64]) -> Vec<u64> {
+    h.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn bratu_newton_converges_with_quadratic_tail() {
+    for lambda in [1.0, 5.0] {
+        let rep = run_newton_case(&bratu_cfg(lambda, 2, 2)).unwrap();
+        assert!(rep.converged, "λ={lambda} did not converge: {:?}", rep.reason);
+        let h = &rep.fnorm_history;
+        assert!(h.len() >= 3, "λ={lambda}: too few Newton steps ({})", h.len());
+        for w in h.windows(2) {
+            assert!(w[1] < w[0], "λ={lambda}: ‖F‖ not strictly decreasing: {h:?}");
+        }
+        // Quadratic tail: once a reduction factor r_k = ‖F_{k+1}‖/‖F_k‖
+        // enters the contraction regime (r ≤ 0.2), Newton's r_{k+1} ≈ r_k²
+        // means the next factor must shrink at least 5× (r² ≤ r/5 there).
+        // Ratios whose numerator sits at the inner-solve accuracy floor
+        // (≤ 1e-11·‖F₀‖) are excluded — they measure cg-fused's rtol, not
+        // the outer contraction.
+        let f0 = h[0];
+        let ratios: Vec<f64> = h.windows(2).map(|w| w[1] / w[0]).collect();
+        let mut tail_pairs = 0;
+        for k in 0..ratios.len().saturating_sub(1) {
+            if ratios[k] <= 0.2 && h[k + 2] >= 1e-11 * f0 {
+                assert!(
+                    ratios[k + 1] <= ratios[k] / 5.0,
+                    "λ={lambda}: tail not quadratic: r{k}={} then r{}={} ({h:?})",
+                    ratios[k],
+                    k + 1,
+                    ratios[k + 1],
+                );
+                tail_pairs += 1;
+            }
+        }
+        if lambda == 5.0 {
+            assert!(tail_pairs >= 1, "λ=5: no tail ratios qualified for the quadratic test {h:?}");
+        }
+    }
+}
+
+#[test]
+fn fnorm_history_bitwise_invariant_across_decompositions() {
+    for mf in [false, true] {
+        let reports: Vec<NewtonReport> = DECOMPS
+            .iter()
+            .map(|&(r, t)| {
+                let mut cfg = bratu_cfg(5.0, r, t);
+                cfg.snes.mf = mf;
+                let rep = run_newton_case(&cfg).unwrap();
+                assert!(rep.converged, "mf={mf} {r}×{t} did not converge");
+                rep
+            })
+            .collect();
+        let h0 = hex(&reports[0].fnorm_history);
+        assert!(h0.len() >= 3);
+        for (rep, &(r, t)) in reports.iter().zip(&DECOMPS).skip(1) {
+            assert_eq!(
+                h0,
+                hex(&rep.fnorm_history),
+                "mf={mf}: ‖F‖ history differs between 1×4 and {r}×{t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn jfnk_matches_analytic_iteration_counts() {
+    let analytic = run_newton_case(&bratu_cfg(5.0, 2, 2)).unwrap();
+    let mut cfg = bratu_cfg(5.0, 2, 2);
+    cfg.snes.mf = true;
+    let jfnk = run_newton_case(&cfg).unwrap();
+    assert!(analytic.converged && jfnk.converged);
+    assert_eq!(analytic.mf_mults, 0);
+    assert!(jfnk.mf_mults > 0, "JFNK must route through the FD shell");
+    assert!(
+        jfnk.iterations.abs_diff(analytic.iterations) <= 1,
+        "JFNK ({}) and analytic ({}) Newton counts must agree to ±1",
+        jfnk.iterations,
+        analytic.iterations
+    );
+}
+
+#[test]
+fn lagged_pc_reproduces_solution_with_fewer_builds() {
+    let run = |lag: usize| -> NewtonReport {
+        let mut cfg = bratu_cfg(5.0, 2, 2);
+        cfg.snes.lag_pc = lag;
+        let rep = run_newton_case(&cfg).unwrap();
+        assert!(rep.converged, "lag={lag} did not converge");
+        // The contract: the operator refreshes every step, the PC only on
+        // steps ≡ 0 (mod lag) — so builds land at exactly ⌈its/lag⌉.
+        assert_eq!(
+            rep.pc_builds,
+            rep.iterations.div_ceil(lag) as u64,
+            "lag={lag}: PC builds must be ⌈its/lag⌉"
+        );
+        rep
+    };
+    let eager = run(1);
+    let lagged = run(3);
+    assert!(eager.iterations >= 2, "need ≥ 2 Newton steps for the lag contract to bite");
+    assert!(
+        lagged.pc_builds < eager.pc_builds,
+        "lag=3 must build strictly fewer PCs ({} vs {})",
+        lagged.pc_builds,
+        eager.pc_builds
+    );
+    // Same answer to the Newton tolerance: both runs drive ‖F‖ below
+    // rtol·‖F₀‖ of the identical problem.
+    let f0 = eager.fnorm_history[0];
+    assert_eq!(f0.to_bits(), lagged.fnorm_history[0].to_bits());
+    assert!(eager.final_fnorm <= 1e-12 * f0);
+    assert!(lagged.final_fnorm <= 1e-12 * f0);
+}
+
+#[test]
+fn ts_theta_driver_advances_reaction_diffusion() {
+    let mut cfg = NewtonConfig::default_for(NonlinearCase::ReactionDiffusion2D, 0.05, 2, 2);
+    cfg.ts.steps = 3;
+    let rep = run_newton_case(&cfg).unwrap();
+    assert!(rep.converged);
+    assert_eq!(rep.ts_newton_its.len(), 3);
+    assert!(rep.ts_newton_its.iter().all(|&its| its >= 1));
+    assert!(!rep.fnorm_history.is_empty());
+    assert_eq!(rep.iterations, rep.ts_newton_its.iter().sum::<usize>());
+
+    // The TS first-step history inherits the SNES decomposition invariance.
+    let h0 = hex(&rep.fnorm_history);
+    let mut cfg14 = NewtonConfig::default_for(NonlinearCase::ReactionDiffusion2D, 0.05, 1, 4);
+    cfg14.ts.steps = 3;
+    let rep14 = run_newton_case(&cfg14).unwrap();
+    assert_eq!(h0, hex(&rep14.fnorm_history), "TS history differs between 2×2 and 1×4");
+}
+
+#[test]
+fn bratu_3d_case_converges() {
+    let mut cfg = NewtonConfig::default_for(NonlinearCase::Bratu3D, 0.05, 2, 2);
+    cfg.lambda = 5.0;
+    let rep = run_newton_case(&cfg).unwrap();
+    assert!(rep.converged, "3D Bratu did not converge: {:?}", rep.reason);
+    assert!(rep.iterations >= 2);
+}
+
+#[test]
+fn faulted_newton_degrades_typed_not_hung() {
+    // Fault-plan compatibility: a counter-matched fault under the Newton
+    // runner must end in a typed error or a typed non-converged reason —
+    // this test hanging or panicking is the failure mode.
+    for seed in 0..4u64 {
+        let mut cfg = bratu_cfg(5.0, 2, 2);
+        cfg.snes.max_it = 20;
+        cfg.fault = Some(Arc::new(FaultPlan::from_seed(seed, 4)));
+        match catch_unwind(AssertUnwindSafe(|| run_newton_case(&cfg))) {
+            Ok(Ok(rep)) => {
+                if rep.converged {
+                    assert!(rep.final_fnorm.is_finite(), "seed {seed}: silent wrong answer");
+                }
+            }
+            Ok(Err(e)) => {
+                let _ = e.to_string(); // typed degradation is acceptable
+            }
+            Err(_) => panic!("seed {seed}: a panic escaped the containment layers"),
+        }
+    }
+}
